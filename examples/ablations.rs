@@ -1,0 +1,68 @@
+//! Table-1 ablations: (a) top-k vs random selection of the exploration
+//! set B\A; (b) stopping exploration (freezing B=A) at different points
+//! in training — the two-phase learning-dynamics probe of §4.1.
+//!
+//!   cargo run --release --example ablations [steps]
+
+use anyhow::Result;
+
+use topkast::bench::reports::pct;
+use topkast::bench::{run_training, RunSpec, Table};
+use topkast::runtime::Manifest;
+use topkast::sparsity::{TopKast, TopKastRandom};
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+    let manifest = Manifest::load("artifacts")?;
+    topkast::util::log::set_level(topkast::util::log::Level::Warn);
+
+    // (a) B\A selection: next-largest magnitudes vs uniform random.
+    let mut t = Table::new(
+        "Ablation: selection of B\\A (cnn_tiny)",
+        &["method", "fwd_sp", "bwd_sp", "top1"],
+    );
+    for (sf, sb) in [(0.9, 0.8), (0.95, 0.9)] {
+        let a = run_training(
+            &manifest,
+            RunSpec::new(
+                "cnn_tiny",
+                Box::new(TopKast::from_sparsities(sf, sb)),
+                steps,
+            ),
+        )?;
+        let b = run_training(
+            &manifest,
+            RunSpec::new(
+                "cnn_tiny",
+                Box::new(TopKastRandom::new(1.0 - sf, 1.0 - sb)),
+                steps,
+            ),
+        )?;
+        t.row(vec!["top-k B".into(), pct(sf), pct(sb), pct(a.accuracy)]);
+        t.row(vec!["random B".into(), pct(sf), pct(sb), pct(b.accuracy)]);
+    }
+    println!("{}", t.render());
+
+    // (b) exploration stop: freeze B=A at step t. The paper's reading:
+    // early exploration matters (t=0 is bad), late exploration is
+    // redundant (t=half-way recovers nearly everything).
+    let mut t2 = Table::new(
+        "Ablation: stop exploration at t (cnn_tiny, fwd 90% / bwd dense)",
+        &["stop_at_step", "top1"],
+    );
+    for frac in [0.0, 0.15, 0.5, 1.0] {
+        let stop = (steps as f64 * frac) as usize;
+        let mut tk = TopKast::from_sparsities(0.9, 0.0);
+        tk.stop_exploration_at = Some(stop);
+        let r = run_training(
+            &manifest,
+            RunSpec::new("cnn_tiny", Box::new(tk), steps),
+        )?;
+        t2.row(vec![format!("{stop}"), pct(r.accuracy)]);
+    }
+    println!("{}", t2.render());
+    Ok(())
+}

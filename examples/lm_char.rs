@@ -1,0 +1,108 @@
+//! End-to-end driver (deliverable (e2e) in EXPERIMENTS.md): train the
+//! lm_small character transformer with Top-KAST on the synthetic-enwik8
+//! corpus for several hundred steps, logging the loss curve, eval BPC,
+//! mask-churn and step-latency — then compare against the dense run.
+//!
+//!   cargo run --release --example lm_char [steps] [fwd_sparsity] [bwd_sparsity]
+
+use anyhow::Result;
+
+use topkast::coordinator::{source_for, LrSchedule, Trainer, TrainerConfig};
+use topkast::runtime::{Manifest, Runtime};
+use topkast::sparsity::{Dense, MaskStrategy, TopKast};
+
+fn train_one(
+    manifest: &Manifest,
+    strategy: Box<dyn MaskStrategy>,
+    steps: usize,
+) -> Result<Trainer> {
+    let model = manifest.model("lm_small")?.clone();
+    let cfg = TrainerConfig {
+        steps,
+        lr: LrSchedule::WarmupCosine {
+            base: 3e-3,
+            warmup: (steps / 10).max(10),
+            floor: 1e-5,
+        },
+        reg_scale: 1e-4,
+        refresh_every: 10, // Appendix C: infrequent host top-k suffices
+        churn_every: (steps / 10).max(1),
+        eval_every: Some((steps / 5).max(1)),
+        eval_batches: 8,
+        seed: 7,
+        log_every: (steps / 20).max(1),
+    };
+    let runtime = Runtime::new()?;
+    let data = source_for(&model, 7 ^ 0xDA7A)?;
+    let mut trainer = Trainer::new(runtime, model, strategy, data, cfg)?;
+    trainer.train()?;
+    Ok(trainer)
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(400);
+    let s_fwd: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(0.8);
+    let s_bwd: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(0.5);
+
+    let manifest = Manifest::load("artifacts")?;
+
+    println!("=== Top-KAST ({:.0}% fwd / {:.0}% bwd sparse) ===", s_fwd * 100.0, s_bwd * 100.0);
+    let mut sparse = train_one(
+        &manifest,
+        Box::new(TopKast::from_sparsities(s_fwd, s_bwd)),
+        steps,
+    )?;
+    let ev_sparse = sparse.evaluate()?;
+
+    println!("\n=== dense baseline ===");
+    let mut dense = train_one(&manifest, Box::new(Dense), steps)?;
+    let ev_dense = dense.evaluate()?;
+
+    println!("\n=== loss curve (Top-KAST) ===");
+    let n = sparse.metrics.losses.len();
+    for (step, loss) in sparse
+        .metrics
+        .losses
+        .iter()
+        .step_by((n / 20).max(1))
+    {
+        println!("  step {step:5}  loss {loss:.4}");
+    }
+
+    println!("\n=== mask churn (Fig 3a view) ===");
+    for (step, min, mean, max) in sparse.metrics.churn.summary() {
+        println!(
+            "  step {step:5}  churn min {:.2}% mean {:.2}% max {:.2}%",
+            min * 100.0,
+            mean * 100.0,
+            max * 100.0
+        );
+    }
+    if let Some(frac) = sparse.metrics.reservoir.final_fraction() {
+        println!("  reservoir ever-woken fraction: {:.2}%", frac * 100.0);
+    }
+
+    println!("\n=== summary ===");
+    println!(
+        "  Top-KAST: eval BPC {:.3} ppl {:.1} eff-params {} step {:.1} ms",
+        ev_sparse.bpc,
+        ev_sparse.perplexity,
+        sparse.store.effective_params(),
+        sparse.metrics.step_time.mean()
+    );
+    println!(
+        "  dense:    eval BPC {:.3} ppl {:.1} eff-params {} step {:.1} ms",
+        ev_dense.bpc,
+        ev_dense.perplexity,
+        dense.store.effective_params(),
+        dense.metrics.step_time.mean()
+    );
+    println!(
+        "  sparse model keeps {:.0}% of params at {:+.3} BPC vs dense",
+        100.0 * sparse.store.effective_params() as f64
+            / dense.store.effective_params() as f64,
+        ev_sparse.bpc - ev_dense.bpc
+    );
+    Ok(())
+}

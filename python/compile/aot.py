@@ -1,0 +1,266 @@
+# AOT compile path: lower every (model config × step kind) to HLO *text*
+# and write artifacts/manifest.json describing parameters, input/output
+# order and FLOPs coefficients for the rust runtime.
+#
+# HLO text — NOT HloModuleProto.serialize() — is the interchange format:
+# jax >= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+# xla_extension 0.5.1 rejects (proto.id() <= INT_MAX); the text parser
+# reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+#
+# Runs once from `make artifacts`; Python never touches the request path.
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .specs import IoSpec, ModelConfig, model_registry
+
+DTYPE = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Input/output order conventions (mirrored by rust/src/runtime/manifest.rs)
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg: ModelConfig) -> tuple[IoSpec, IoSpec]:
+    b = cfg.batch_size
+    if cfg.kind == "mlp":
+        return (IoSpec("x", (b, cfg.features), "f32"), IoSpec("y", (b,), "i32"))
+    if cfg.kind == "cnn":
+        hw = cfg.image_hw
+        return (IoSpec("x", (b, hw, hw, 3), "f32"), IoSpec("y", (b,), "i32"))
+    s = cfg.seq_len
+    return (IoSpec("x", (b, s), "i32"), IoSpec("y", (b, s), "i32"))
+
+
+def opt_slot_names(cfg: ModelConfig, pname: str) -> list[str]:
+    if cfg.optimizer == "sgd":
+        return [pname + "/m"]
+    return [pname + "/m1", pname + "/m2"]
+
+
+def train_io(cfg: ModelConfig) -> tuple[list[IoSpec], list[IoSpec]]:
+    specs = M.param_specs(cfg)
+    sparse = [s for s in specs if s.sparse]
+    xb, yb = batch_specs(cfg)
+    inputs: list[IoSpec] = []
+    inputs += [IoSpec("p:" + s.name, s.shape, "f32") for s in specs]
+    inputs += [IoSpec("mf:" + s.name, s.shape, "f32") for s in sparse]
+    inputs += [IoSpec("mb:" + s.name, s.shape, "f32") for s in sparse]
+    for s in specs:
+        inputs += [
+            IoSpec("o:" + n, s.shape, "f32") for n in opt_slot_names(cfg, s.name)
+        ]
+    inputs += [xb, yb]
+    inputs += [IoSpec(n, (1,), "f32") for n in ("lr", "step", "reg_scale", "inv_d")]
+
+    outputs: list[IoSpec] = []
+    outputs += [IoSpec("p:" + s.name, s.shape, "f32") for s in specs]
+    for s in specs:
+        outputs += [
+            IoSpec("o:" + n, s.shape, "f32") for n in opt_slot_names(cfg, s.name)
+        ]
+    outputs += [IoSpec("loss", (1,), "f32")]
+    return inputs, outputs
+
+
+def eval_io(cfg: ModelConfig) -> tuple[list[IoSpec], list[IoSpec]]:
+    specs = M.param_specs(cfg)
+    sparse = [s for s in specs if s.sparse]
+    xb, yb = batch_specs(cfg)
+    inputs = (
+        [IoSpec("p:" + s.name, s.shape, "f32") for s in specs]
+        + [IoSpec("mf:" + s.name, s.shape, "f32") for s in sparse]
+        + [xb, yb]
+    )
+    outputs = [IoSpec("loss_sum", (1,), "f32"), IoSpec("metric", (1,), "f32")]
+    return inputs, outputs
+
+
+def grad_norms_io(cfg: ModelConfig) -> tuple[list[IoSpec], list[IoSpec]]:
+    specs = M.param_specs(cfg)
+    sparse = [s for s in specs if s.sparse]
+    xb, yb = batch_specs(cfg)
+    inputs = (
+        [IoSpec("p:" + s.name, s.shape, "f32") for s in specs]
+        + [IoSpec("mf:" + s.name, s.shape, "f32") for s in sparse]
+        + [xb, yb]
+    )
+    outputs = [IoSpec("g:" + s.name, s.shape, "f32") for s in sparse]
+    return inputs, outputs
+
+
+# ---------------------------------------------------------------------------
+# Flat-argument wrappers around the dict-based step functions
+# ---------------------------------------------------------------------------
+
+
+def _flat_train(cfg: ModelConfig):
+    specs = M.param_specs(cfg)
+    sparse = [s for s in specs if s.sparse]
+    step_fn = M.make_train_step(cfg)
+    np_, ns = len(specs), len(sparse)
+
+    def fn(*flat):
+        i = 0
+        params = {s.name: flat[i + j] for j, s in enumerate(specs)}
+        i += np_
+        mf = {s.name: flat[i + j] for j, s in enumerate(sparse)}
+        i += ns
+        mb = {s.name: flat[i + j] for j, s in enumerate(sparse)}
+        i += ns
+        opt = {}
+        for s in specs:
+            for n in opt_slot_names(cfg, s.name):
+                opt[n] = flat[i]
+                i += 1
+        x, y = flat[i], flat[i + 1]
+        lr, stp, reg, invd = flat[i + 2 : i + 6]
+        new_params, new_opt, loss = step_fn(
+            params, mf, mb, opt, x, y, lr, stp, reg, invd
+        )
+        outs = [new_params[s.name] for s in specs]
+        for s in specs:
+            outs += [new_opt[n] for n in opt_slot_names(cfg, s.name)]
+        outs.append(loss)
+        return tuple(outs)
+
+    return fn
+
+
+def _flat_eval(cfg: ModelConfig):
+    specs = M.param_specs(cfg)
+    sparse = [s for s in specs if s.sparse]
+    step_fn = M.make_eval_step(cfg)
+
+    def fn(*flat):
+        i = 0
+        params = {s.name: flat[i + j] for j, s in enumerate(specs)}
+        i += len(specs)
+        mf = {s.name: flat[i + j] for j, s in enumerate(sparse)}
+        i += len(sparse)
+        x, y = flat[i], flat[i + 1]
+        return step_fn(params, mf, x, y)
+
+    return fn
+
+
+def _flat_grad_norms(cfg: ModelConfig):
+    specs = M.param_specs(cfg)
+    sparse = [s for s in specs if s.sparse]
+    step_fn = M.make_grad_norms(cfg)
+
+    def fn(*flat):
+        i = 0
+        params = {s.name: flat[i + j] for j, s in enumerate(specs)}
+        i += len(specs)
+        mf = {s.name: flat[i + j] for j, s in enumerate(sparse)}
+        i += len(sparse)
+        x, y = flat[i], flat[i + 1]
+        out = step_fn(params, mf, x, y)
+        return tuple(out[s.name] for s in sparse)
+
+    return fn
+
+
+STEPS = {
+    "train": (_flat_train, train_io),
+    "eval": (_flat_eval, eval_io),
+    "grad_norms": (_flat_grad_norms, grad_norms_io),
+}
+
+
+# ---------------------------------------------------------------------------
+# Lower + write
+# ---------------------------------------------------------------------------
+
+
+def lower_artifact(cfg: ModelConfig, kind: str, out_dir: str) -> dict:
+    builder, io_fn = STEPS[kind]
+    inputs, outputs = io_fn(cfg)
+    avals = [
+        jax.ShapeDtypeStruct(tuple(i.shape), DTYPE[i.dtype]) for i in inputs
+    ]
+    t0 = time.time()
+    # keep_unused: the IO convention is positional; an artifact that
+    # drops an unused scalar (e.g. `step` under SGD) would desync the
+    # rust marshalling.
+    lowered = jax.jit(builder(cfg), keep_unused=True).lower(*avals)
+    text = to_hlo_text(lowered)
+    fname = f"{cfg.name}.{kind}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    print(
+        f"  {fname:42s} {len(text)/1024:8.0f} KiB  "
+        f"lower {time.time()-t0:5.1f}s",
+        file=sys.stderr,
+    )
+    return {
+        "file": fname,
+        "inputs": [i.to_json() for i in inputs],
+        "outputs": [o.to_json() for o in outputs],
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+
+
+def build_all(out_dir: str, only: list[str] | None = None) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    registry = model_registry()
+    manifest: dict = {"format": 1, "models": {}}
+    for name, cfg in registry.items():
+        if only and name not in only:
+            continue
+        print(f"[aot] {name}", file=sys.stderr)
+        specs = M.param_specs(cfg)
+        entry = {
+            "kind": cfg.kind,
+            "optimizer": cfg.optimizer,
+            "config": cfg.to_json(),
+            "params": [s.to_json() for s in specs],
+            "scalars": ["lr", "step", "reg_scale", "inv_d"],
+            "artifacts": {},
+        }
+        for kind in ("train", "eval", "grad_norms"):
+            entry["artifacts"][kind] = lower_artifact(cfg, kind, out_dir)
+        manifest["models"][name] = entry
+    path = os.path.join(out_dir, "manifest.json")
+    # Merge with an existing manifest when building a subset.
+    if only and os.path.exists(path):
+        with open(path) as f:
+            old = json.load(f)
+        old["models"].update(manifest["models"])
+        manifest = old
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] wrote {path}", file=sys.stderr)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact dir")
+    ap.add_argument("--only", nargs="*", help="subset of model names")
+    args = ap.parse_args()
+    build_all(args.out, args.only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+# Layer-1 Pallas kernels (topkast) and their pure-jnp oracles (ref).
+from . import ref, topkast  # noqa: F401

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel in ``topkast.py``.
+
+These are the correctness ground truth: ``python/tests/test_kernel.py``
+sweeps shapes/dtypes and asserts allclose between kernel and oracle.
+Nothing here is ever lowered into an artifact.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def masked_matmul(x, w, m):
+    return x @ (w * m)
+
+
+def matmul(x, w):
+    return x @ w
+
+
+def matmul_at(x, g):
+    return x.T @ g
+
+
+def matmul_bt(g, w, m=None):
+    wm = w * m if m is not None else w
+    return g @ wm.T
+
+
+def mask_apply(w, m):
+    return w * m
+
+
+def _reg_scale(m_fwd, m_bwd, inv_d):
+    # 1 on A, inv_d on B \ A, 0 on C.
+    return m_fwd + (m_bwd - m_fwd) * inv_d
+
+
+def topkast_reg_loss(w, m_fwd, m_bwd, inv_d):
+    return jnp.sum(0.5 * w * w * _reg_scale(m_fwd, m_bwd, inv_d))
+
+
+def topkast_reg_loss_l1(w, m_fwd, m_bwd, inv_d):
+    return jnp.sum(jnp.abs(w) * _reg_scale(m_fwd, m_bwd, inv_d))
+
+
+def topkast_reg_grad(w, m_fwd, m_bwd, inv_d):
+    return w * _reg_scale(m_fwd, m_bwd, inv_d)
+
+
+def sgd_momentum_update(w, mom, g, m_bwd, lr, mu):
+    gm = g * m_bwd
+    v_new = jnp.where(m_bwd > 0, mu * mom + gm, mom)
+    return w - lr * v_new * m_bwd, v_new
+
+
+def adam_update(w, m1, m2, g, m_bwd, lr, step, b1=0.9, b2=0.999, eps=1e-8):
+    gm = g * m_bwd
+    m1n = jnp.where(m_bwd > 0, b1 * m1 + (1 - b1) * gm, m1)
+    m2n = jnp.where(m_bwd > 0, b2 * m2 + (1 - b2) * gm * gm, m2)
+    upd = (m1n / (1 - b1**step)) / (jnp.sqrt(m2n / (1 - b2**step)) + eps)
+    return w - lr * upd * m_bwd, m1n, m2n
+
+
+def topk_mask(w, density: float):
+    """Per-tensor magnitude top-k mask (the oracle for the rust-side
+    quickselect in ``rust/src/sparsity/topk.rs`` — compared via golden
+    files emitted by aot.py, and for mask-construction tests)."""
+    k = max(1, int(round(density * w.size)))
+    flat = jnp.abs(w).reshape(-1)
+    thresh = jnp.sort(flat)[-k]
+    return (jnp.abs(w) >= thresh).astype(w.dtype)
+
+
+def masked_linear_grads(x, w, m, g):
+    """Oracle for masked_linear's VJP: (dx, dw)."""
+    dx = g @ (w * m).T
+    dw = x.T @ g
+    return dx, dw

@@ -1,0 +1,405 @@
+"""Layer-1 Pallas kernels for Top-KAST.
+
+These are the compute hot-spots of the sparse train step:
+
+  * ``masked_matmul``      — y = x @ (w * m): the sparse forward matmul.
+  * ``matmul`` / ``matmul_at`` / ``matmul_bt`` — the backward-pass matmuls
+    (dx = g @ (w*m)^T, dw = x^T @ g) expressed with the same tiling.
+  * ``mask_apply``         — elementwise w * m (used for conv filters,
+    where the contraction itself goes through lax.conv).
+  * ``topkast_reg_loss`` / ``topkast_reg_grad`` — the exploration
+    regulariser of §2.3: penalise A at 1x, B\\A at 1/D, C not at all.
+  * ``sgd_momentum_update`` / ``adam_update`` — elementwise optimiser
+    updates restricted to the backward set B.
+
+All kernels run under ``interpret=True``: the CPU PJRT client cannot
+execute Mosaic custom-calls, so interpret mode is the lowering that ends
+up in the AOT artifacts.  Block shapes are nevertheless chosen for a real
+TPU's VMEM (see DESIGN.md §8): for ``masked_matmul`` we tile
+(bm, bk) x (bk, bn) with the mask multiply fused ahead of the MXU dot so
+``w * m`` is never materialised in HBM.
+
+Every kernel has a pure-jnp oracle in ``ref.py`` and a pytest sweep in
+``python/tests/test_kernel.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Interpret mode is mandatory on CPU PJRT; keep a single switch so the
+# tests can assert we never accidentally lower Mosaic.
+INTERPRET = True
+
+# Tile sizes. On a real TPU core 128^3 tiles keep the working set
+# (bm*bk + bk*bn + bm*bn floats = 196 KiB) well under VMEM (~16 MiB) with
+# room for double buffering — set TOPKAST_PALLAS_BLOCK=128 to lower with
+# that schedule (it is what DESIGN.md §8's VMEM/MXU analysis assumes).
+#
+# Under CPU interpret mode — the lowering that actually lands in the AOT
+# artifacts — each grid step becomes an XLA while-loop iteration of
+# dynamic-slice + small dot, and the loop overhead dominates: 128^3
+# tiling ran 35.3 ms vs 2.4 ms single-block for the lm_small qkv matmul
+# (EXPERIMENTS.md §Perf L1 iteration 1, ~15x). Default therefore is
+# single-block (grid=1): the whole contraction goes to Eigen as one dot.
+import os as _os
+
+_BLOCK = int(_os.environ.get("TOPKAST_PALLAS_BLOCK", "0")) or (1 << 20)
+BM, BN, BK = _BLOCK, _BLOCK, _BLOCK
+
+
+def _tile(dim: int, block: int) -> int:
+    """Largest tile <= block that exactly divides dim (fallback: dim)."""
+    if dim <= block:
+        return dim
+    for cand in range(block, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+# ---------------------------------------------------------------------------
+# Matmul family
+# ---------------------------------------------------------------------------
+
+
+def _mm_call(x, w, mask=None, *, bm=BM, bn=BN, bk=BK):
+    """Tiled matmul: grid (M/bm, N/bn, K/bk), K innermost.
+
+    The output block index map ignores the K axis, so each (bm, bn) tile
+    is revisited across K steps and accumulated in place — on a real TPU
+    this keeps the accumulator tile resident in VMEM for the whole K walk
+    (the Pallas revisiting idiom). The mask multiply (when present) is
+    fused on the weight tile right before the dot, i.e. ahead of the MXU;
+    ``w * m`` is never materialised at array scope.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {x.shape} @ {w.shape}"
+    bm, bn, bk = _tile(m, bm), _tile(n, bn), _tile(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+    ]
+    operands = [x, w]
+    if mask is not None:
+        assert mask.shape == w.shape
+        in_specs.append(pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)))
+        operands.append(mask)
+
+    if mask is None:
+
+        def body(x_ref, w_ref, o_ref):
+            @pl.when(pl.program_id(2) == 0)
+            def _init():
+                o_ref[...] = jnp.zeros_like(o_ref)
+
+            o_ref[...] += jnp.dot(
+                x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+            ).astype(o_ref.dtype)
+
+    else:
+
+        def body(x_ref, w_ref, m_ref, o_ref):
+            @pl.when(pl.program_id(2) == 0)
+            def _init():
+                o_ref[...] = jnp.zeros_like(o_ref)
+
+            o_ref[...] += jnp.dot(
+                x_ref[...], w_ref[...] * m_ref[...],
+                preferred_element_type=jnp.float32,
+            ).astype(o_ref.dtype)
+
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=INTERPRET,
+    )(*operands)
+
+
+def masked_matmul(x: jax.Array, w: jax.Array, m: jax.Array) -> jax.Array:
+    """y = x @ (w * m), the Top-KAST sparse forward contraction."""
+    return _mm_call(x, w, m)
+
+
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Plain tiled matmul with the same schedule as masked_matmul."""
+    return _mm_call(x, w)
+
+
+def matmul_at(x: jax.Array, g: jax.Array) -> jax.Array:
+    """dw = x^T @ g  (backward wrt weights)."""
+    return _mm_call(x.T, g)
+
+
+def matmul_bt(g: jax.Array, w: jax.Array, m: jax.Array | None = None) -> jax.Array:
+    """dx = g @ (w*m)^T (backward wrt activations)."""
+    wt = (w * m).T if m is not None else w.T
+    return _mm_call(g, wt)
+
+
+# ---------------------------------------------------------------------------
+# Elementwise family
+# ---------------------------------------------------------------------------
+
+
+def _scal(v, dtype):
+    """Lift a python/traced scalar to a (1,)-array kernel operand.
+
+    Pallas kernel bodies may not close over traced values; scalars
+    (inv_d, lr, momentum, step) therefore ride in as rank-1 inputs and
+    are read back with ``ref[0]`` inside the body.
+    """
+    return jnp.asarray(v, dtype=dtype).reshape(1)
+
+
+def _ew_call(body, out_like, *operands):
+    """Run an elementwise kernel over flattened operands.
+
+    Elementwise kernels see the whole flattened array as a single block:
+    for parameter tensors of the AOT'd models this is at most a few MiB,
+    within VMEM budget; the interesting tiling lives in the matmul
+    family.
+    """
+    flat = [op.reshape(-1) if op.ndim != 1 else op for op in operands]
+    n = flat[0].shape[0]
+    out = pl.pallas_call(
+        body,
+        out_shape=jax.ShapeDtypeStruct((n,), out_like.dtype),
+        interpret=INTERPRET,
+    )(*flat)
+    return out.reshape(out_like.shape)
+
+
+def _mask_apply_kernel(w: jax.Array, m: jax.Array) -> jax.Array:
+    def body(w_ref, m_ref, o_ref):
+        o_ref[...] = w_ref[...] * m_ref[...]
+
+    return _ew_call(body, w, w, m)
+
+
+@jax.custom_vjp
+def mask_apply(w: jax.Array, m: jax.Array) -> jax.Array:
+    """alpha = w * m as a Pallas kernel (conv filters, embeddings).
+
+    The VJP deliberately returns the *dense* cotangent dL/dalpha (same
+    convention as masked_linear's dw): Top-KAST restricts the update to
+    the backward set B inside the train step (§2.2), and the RigL
+    baseline's grow criterion needs exactly this dense gradient.
+    """
+    return _mask_apply_kernel(w, m)
+
+
+def _mask_apply_fwd(w, m):
+    return _mask_apply_kernel(w, m), m
+
+
+def _mask_apply_bwd(m, g):
+    return g, jnp.zeros_like(m)
+
+
+mask_apply.defvjp(_mask_apply_fwd, _mask_apply_bwd)
+
+
+def topkast_reg_loss(
+    w: jax.Array, m_fwd: jax.Array, m_bwd: jax.Array, inv_d: jax.Array | float
+) -> jax.Array:
+    """Exploration penalty of §2.3, summed over one tensor.
+
+    Loss_R(i) = l2(w_i)          if i in A        (m_fwd = 1)
+              = l2(w_i) / D      if i in B \\ A   (m_bwd = 1, m_fwd = 0)
+              = 0                 otherwise        (reservoir C)
+
+    with l2(w) = 0.5 * w^2 (the paper calls the penalty an L2
+    regulariser; its Eq. displays |theta| — see DESIGN.md §5 E-notes. The
+    magnitude variant is `topkast_reg_loss_l1`).
+    """
+
+    def body(w_ref, f_ref, b_ref, d_ref, o_ref):
+        wv = w_ref[...]
+        f = f_ref[...]
+        b = b_ref[...]
+        pen = 0.5 * wv * wv
+        scale = f + (b - f) * d_ref[0]
+        o_ref[...] = pen * scale
+
+    per = _ew_call(body, w, w, m_fwd, m_bwd, _scal(inv_d, w.dtype))
+    return jnp.sum(per)
+
+
+def topkast_reg_loss_l1(
+    w: jax.Array, m_fwd: jax.Array, m_bwd: jax.Array, inv_d: jax.Array | float
+) -> jax.Array:
+    """|theta|-flavoured exploration penalty (the paper's displayed Eq.)."""
+
+    def body(w_ref, f_ref, b_ref, d_ref, o_ref):
+        wv = w_ref[...]
+        f = f_ref[...]
+        b = b_ref[...]
+        scale = f + (b - f) * d_ref[0]
+        o_ref[...] = jnp.abs(wv) * scale
+
+    per = _ew_call(body, w, w, m_fwd, m_bwd, _scal(inv_d, w.dtype))
+    return jnp.sum(per)
+
+
+def topkast_reg_grad(
+    w: jax.Array, m_fwd: jax.Array, m_bwd: jax.Array, inv_d: jax.Array | float
+) -> jax.Array:
+    """d/dw of topkast_reg_loss — elementwise, sparse on B by construction."""
+
+    def body(w_ref, f_ref, b_ref, d_ref, o_ref):
+        wv = w_ref[...]
+        f = f_ref[...]
+        b = b_ref[...]
+        scale = f + (b - f) * d_ref[0]
+        o_ref[...] = wv * scale
+
+    return _ew_call(body, w, w, m_fwd, m_bwd, _scal(inv_d, w.dtype))
+
+
+def sgd_momentum_update(
+    w: jax.Array,
+    mom: jax.Array,
+    g: jax.Array,
+    m_bwd: jax.Array,
+    lr: jax.Array | float,
+    mu: jax.Array | float,
+) -> tuple[jax.Array, jax.Array]:
+    """SGD+momentum restricted to the backward set B.
+
+    Gradients outside B are zeroed (Top-KAST's sparse backward, §2.2);
+    momentum outside B is left untouched so a unit re-entering B resumes
+    from its stored state.
+    """
+
+    def body(w_ref, v_ref, g_ref, b_ref, lr_ref, mu_ref, ow_ref, ov_ref):
+        b = b_ref[...]
+        gm = g_ref[...] * b
+        v = v_ref[...]
+        v_new = jnp.where(b > 0, mu_ref[0] * v + gm, v)
+        ov_ref[...] = v_new
+        ow_ref[...] = w_ref[...] - lr_ref[0] * v_new * b
+
+    flat = [a.reshape(-1) for a in (w, mom, g, m_bwd)]
+    flat += [_scal(lr, w.dtype), _scal(mu, w.dtype)]
+    n = flat[0].shape[0]
+    ow, ov = pl.pallas_call(
+        body,
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), w.dtype),
+            jax.ShapeDtypeStruct((n,), w.dtype),
+        ),
+        interpret=INTERPRET,
+    )(*flat)
+    return ow.reshape(w.shape), ov.reshape(w.shape)
+
+
+def adam_update(
+    w: jax.Array,
+    m1: jax.Array,
+    m2: jax.Array,
+    g: jax.Array,
+    m_bwd: jax.Array,
+    lr: jax.Array | float,
+    step: jax.Array | float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Adam restricted to the backward set B (LM experiments).
+
+    b1/b2/eps are compile-time constants (baked into the artifact); lr
+    and step are runtime scalars supplied by the coordinator.
+    """
+
+    def body(w_ref, m1_ref, m2_ref, g_ref, b_ref, lr_ref, t_ref,
+             ow_ref, om1_ref, om2_ref):
+        b = b_ref[...]
+        gm = g_ref[...] * b
+        m1v = m1_ref[...]
+        m2v = m2_ref[...]
+        m1n = jnp.where(b > 0, b1 * m1v + (1 - b1) * gm, m1v)
+        m2n = jnp.where(b > 0, b2 * m2v + (1 - b2) * gm * gm, m2v)
+        step_v = t_ref[0]
+        bc1 = 1.0 - b1**step_v
+        bc2 = 1.0 - b2**step_v
+        upd = (m1n / bc1) / (jnp.sqrt(m2n / bc2) + eps)
+        om1_ref[...] = m1n
+        om2_ref[...] = m2n
+        ow_ref[...] = w_ref[...] - lr_ref[0] * upd * b
+
+    flat = [a.reshape(-1) for a in (w, m1, m2, g, m_bwd)]
+    flat += [_scal(lr, w.dtype), _scal(step, w.dtype)]
+    n = flat[0].shape[0]
+    ow, om1, om2 = pl.pallas_call(
+        body,
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), w.dtype),
+            jax.ShapeDtypeStruct((n,), w.dtype),
+            jax.ShapeDtypeStruct((n,), w.dtype),
+        ),
+        interpret=INTERPRET,
+    )(*flat)
+    return ow.reshape(w.shape), om1.reshape(w.shape), om2.reshape(w.shape)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrappers (custom VJPs wiring the kernels together —
+# pallas_call itself does not support reverse-mode autodiff)
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def topkast_reg(w, m_fwd, m_bwd, inv_d):
+    """Differentiable exploration penalty: forward through
+    ``topkast_reg_loss``, gradient through ``topkast_reg_grad`` — both
+    Pallas kernels, so the regulariser never leaves Layer 1."""
+    return topkast_reg_loss(w, m_fwd, m_bwd, inv_d)
+
+
+def _topkast_reg_fwd(w, m_fwd, m_bwd, inv_d):
+    return topkast_reg_loss(w, m_fwd, m_bwd, inv_d), (w, m_fwd, m_bwd, inv_d)
+
+
+def _topkast_reg_bwd(res, g):
+    w, m_fwd, m_bwd, inv_d = res
+    dw = topkast_reg_grad(w, m_fwd, m_bwd, inv_d) * g
+    zero = jnp.zeros_like(jnp.asarray(inv_d))
+    return dw, jnp.zeros_like(m_fwd), jnp.zeros_like(m_bwd), zero
+
+
+topkast_reg.defvjp(_topkast_reg_fwd, _topkast_reg_bwd)
+
+
+@jax.custom_vjp
+def masked_linear(x: jax.Array, w: jax.Array, m: jax.Array) -> jax.Array:
+    """y = x @ (w*m) with a VJP that stays on the Pallas kernels.
+
+    The VJP never produces a gradient for entries outside the forward
+    mask's support *pattern* at the matmul level; restriction to the
+    backward set B happens in the train step (multiply by m_bwd there),
+    matching §2.2: grad wrt alpha, then keep coordinates in B.
+    """
+    return masked_matmul(x, w, m)
+
+
+def _masked_linear_fwd(x, w, m):
+    return masked_matmul(x, w, m), (x, w, m)
+
+
+def _masked_linear_bwd(res, g):
+    x, w, m = res
+    dx = matmul_bt(g, w, m)       # g @ (w*m)^T
+    dw = matmul_at(x, g)          # x^T @ g   (dense wrt w; step masks by B)
+    return dx, dw, jnp.zeros_like(m)
+
+
+masked_linear.defvjp(_masked_linear_fwd, _masked_linear_bwd)

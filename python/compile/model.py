@@ -1,0 +1,354 @@
+# Layer-2: the paper's compute graphs in JAX, calling the Layer-1 Pallas
+# kernels. Three model families (mlp / lm / cnn) share one Top-KAST train
+# step: forward through alpha = theta (*) m_fwd, loss + exploration
+# regulariser (§2.3), grad masked to the backward set B (§2.2), optimiser
+# update restricted to B. Masks are *inputs*: the rust coordinator owns
+# them (paper §2.4 places Top-K on the host CPU).
+#
+# Every function here is lowered AOT by aot.py; nothing in this file runs
+# at training time.
+
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import topkast as K
+from .specs import ModelConfig, ParamSpec
+
+Params = dict[str, jax.Array]
+Masks = dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs per model family
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig) -> list[ParamSpec]:
+    if cfg.kind == "mlp":
+        return _mlp_specs(cfg)
+    if cfg.kind == "lm":
+        return _lm_specs(cfg)
+    if cfg.kind == "cnn":
+        return _cnn_specs(cfg)
+    raise ValueError(cfg.kind)
+
+
+def _mlp_specs(cfg: ModelConfig) -> list[ParamSpec]:
+    dims = [cfg.features] + [cfg.hidden] * (cfg.mlp_layers - 1) + [cfg.classes]
+    specs: list[ParamSpec] = []
+    for i, (din, dout) in enumerate(zip(dims[:-1], dims[1:])):
+        first_or_last = i == 0 or i == cfg.mlp_layers - 1
+        sparse = not (cfg.first_last_dense and first_or_last)
+        specs.append(
+            ParamSpec(
+                f"fc{i}/w", (din, dout), "normal",
+                1.0 / math.sqrt(din), sparse=sparse, mac=din * dout,
+            )
+        )
+        specs.append(ParamSpec(f"fc{i}/b", (dout,), "zeros", 0.0))
+    return specs
+
+
+def _lm_specs(cfg: ModelConfig) -> list[ParamSpec]:
+    d, ff, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    s = cfg.seq_len
+    specs: list[ParamSpec] = [
+        # Embedding + positional table. The embedding is sparsifiable
+        # (the paper sparsifies Transformer-XL throughout; Tables 2/3
+        # param counts match all-matrix sparsification).
+        ParamSpec("embed", (v, d), "normal", 0.02,
+                  sparse=not cfg.first_last_dense, mac=0),
+        ParamSpec("pos", (s, d), "normal", 0.02),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}/"
+        specs += [
+            ParamSpec(p + "ln1/g", (d,), "ones", 0.0),
+            ParamSpec(p + "ln1/b", (d,), "zeros", 0.0),
+            ParamSpec(p + "attn/wqkv", (d, 3 * d), "normal",
+                      1.0 / math.sqrt(d), sparse=True, mac=s * d * 3 * d),
+            ParamSpec(p + "attn/bqkv", (3 * d,), "zeros", 0.0),
+            ParamSpec(p + "attn/wo", (d, d), "normal",
+                      1.0 / math.sqrt(d), sparse=True, mac=s * d * d),
+            ParamSpec(p + "attn/bo", (d,), "zeros", 0.0),
+            ParamSpec(p + "ln2/g", (d,), "ones", 0.0),
+            ParamSpec(p + "ln2/b", (d,), "zeros", 0.0),
+            ParamSpec(p + "mlp/w1", (d, ff), "normal",
+                      1.0 / math.sqrt(d), sparse=True, mac=s * d * ff),
+            ParamSpec(p + "mlp/b1", (ff,), "zeros", 0.0),
+            ParamSpec(p + "mlp/w2", (ff, d), "normal",
+                      1.0 / math.sqrt(ff), sparse=True, mac=s * ff * d),
+            ParamSpec(p + "mlp/b2", (d,), "zeros", 0.0),
+        ]
+    specs += [
+        ParamSpec("lnf/g", (d,), "ones", 0.0),
+        ParamSpec("lnf/b", (d,), "zeros", 0.0),
+    ]
+    if not cfg.tie_embeddings:
+        specs.append(
+            ParamSpec("head", (d, v), "normal", 1.0 / math.sqrt(d),
+                      sparse=not cfg.first_last_dense, mac=s * d * v)
+        )
+    specs.append(ParamSpec("head/b", (v,), "zeros", 0.0))
+    return specs
+
+
+def _cnn_specs(cfg: ModelConfig) -> list[ParamSpec]:
+    hw = cfg.image_hw
+    chans = [3] + list(cfg.channels)
+    specs: list[ParamSpec] = []
+    for i, (cin, cout) in enumerate(zip(chans[:-1], chans[1:])):
+        # 3x3 conv, stride 2 — spatial halves each stage.
+        out_hw = hw // (2 ** (i + 1))
+        sparse = not (cfg.first_last_dense and i == 0)
+        specs.append(
+            ParamSpec(
+                f"conv{i}/w", (3, 3, cin, cout), "normal",
+                math.sqrt(2.0 / (9 * cin)), sparse=sparse,
+                mac=out_hw * out_hw * 9 * cin * cout,
+            )
+        )
+        specs.append(ParamSpec(f"conv{i}/b", (cout,), "zeros", 0.0))
+    feat = cfg.channels[-1]
+    specs.append(
+        ParamSpec(
+            "head/w", (feat, cfg.classes), "normal",
+            1.0 / math.sqrt(feat), sparse=not cfg.first_last_dense,
+            mac=feat * cfg.classes,
+        )
+    )
+    specs.append(ParamSpec("head/b", (cfg.classes,), "zeros", 0.0))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Forward passes (alpha = params ⊙ m_fwd, through the Pallas kernels)
+# ---------------------------------------------------------------------------
+
+
+def _linear(h2d, params, masks, wname, bname):
+    y = K.masked_linear(h2d, params[wname], masks[wname])
+    return y + params[bname]
+
+
+def _layer_norm(h, g, b, eps=1e-5):
+    mu = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(h - mu), axis=-1, keepdims=True)
+    return (h - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def mlp_apply(cfg: ModelConfig, params: Params, masks: Masks, x) -> jax.Array:
+    h = x
+    for i in range(cfg.mlp_layers):
+        h = _linear(h, params, masks, f"fc{i}/w", f"fc{i}/b")
+        if i < cfg.mlp_layers - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def lm_apply(cfg: ModelConfig, params: Params, masks: Masks, x) -> jax.Array:
+    """x: i32[b, s] token ids -> logits f32[b, s, vocab]."""
+    b, s = x.shape
+    d = cfg.d_model
+    emb = K.mask_apply(params["embed"], masks["embed"])
+    h = jnp.take(emb, x, axis=0) + params["pos"][None, :s, :]
+
+    causal = jnp.tril(jnp.ones((s, s), dtype=jnp.float32))
+    neg = jnp.asarray(-1e9, jnp.float32)
+
+    for i in range(cfg.n_layers):
+        p = f"layer{i}/"
+        hn = _layer_norm(h, params[p + "ln1/g"], params[p + "ln1/b"])
+        qkv = _linear(hn.reshape(b * s, d), params, masks,
+                      p + "attn/wqkv", p + "attn/bqkv")
+        qkv = qkv.reshape(b, s, 3, cfg.n_heads, d // cfg.n_heads)
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(d // cfg.n_heads)
+        att = jnp.where(causal[None, None] > 0, att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b * s, d)
+        out = _linear(out, params, masks, p + "attn/wo", p + "attn/bo")
+        h = h + out.reshape(b, s, d)
+
+        hn = _layer_norm(h, params[p + "ln2/g"], params[p + "ln2/b"])
+        f = _linear(hn.reshape(b * s, d), params, masks,
+                    p + "mlp/w1", p + "mlp/b1")
+        f = jax.nn.gelu(f)
+        f = _linear(f, params, masks, p + "mlp/w2", p + "mlp/b2")
+        h = h + f.reshape(b, s, d)
+
+    h = _layer_norm(h, params["lnf/g"], params["lnf/b"])
+    if cfg.tie_embeddings:
+        logits = h.reshape(b * s, d) @ K.mask_apply(
+            params["embed"], masks["embed"]).T
+    else:
+        logits = K.masked_linear(h.reshape(b * s, d), params["head"],
+                                 masks["head"])
+    logits = logits + params["head/b"]
+    return logits.reshape(b, s, cfg.vocab)
+
+
+def cnn_apply(cfg: ModelConfig, params: Params, masks: Masks, x) -> jax.Array:
+    """x: f32[b, hw, hw, 3] -> logits f32[b, classes]."""
+    h = x
+    for i in range(len(cfg.channels)):
+        w = K.mask_apply(params[f"conv{i}/w"], masks[f"conv{i}/w"])
+        h = jax.lax.conv_general_dilated(
+            h, w, window_strides=(2, 2), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        h = jax.nn.relu(h + params[f"conv{i}/b"])
+    h = jnp.mean(h, axis=(1, 2))  # global average pool
+    return _linear(h, params, masks, "head/w", "head/b")
+
+
+def apply_fn(cfg: ModelConfig) -> Callable:
+    return {"mlp": mlp_apply, "lm": lm_apply, "cnn": cnn_apply}[cfg.kind]
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def _xent(logits, y):
+    """Mean cross-entropy. logits [n, c], y i32[n]."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+    return -jnp.mean(picked)
+
+
+def primary_loss(cfg: ModelConfig, params: Params, masks: Masks, x, y):
+    if cfg.kind == "lm":
+        logits = lm_apply(cfg, params, masks, x)
+        b, s, v = logits.shape
+        return _xent(logits.reshape(b * s, v), y.reshape(b * s))
+    logits = apply_fn(cfg)(cfg, params, masks, x)
+    return _xent(logits, y)
+
+
+def exploration_reg(params: Params, m_fwd: Masks, m_bwd: Masks, inv_d):
+    """Σ_tensors Loss_R (§2.3). Dense tensors see m_fwd=m_bwd=1 so the
+    penalty degrades to plain L2 weight decay on them."""
+    total = jnp.asarray(0.0, jnp.float32)
+    for name in sorted(m_fwd):
+        total = total + K.topkast_reg(
+            params[name], m_fwd[name], m_bwd[name], inv_d
+        )
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Train / eval / grad-norm steps (the functions aot.py lowers)
+# ---------------------------------------------------------------------------
+
+
+def full_masks(cfg: ModelConfig, sparse_masks: Masks) -> Masks:
+    """Extend the coordinator-provided masks (sparse tensors only) with
+    all-ones masks for dense tensors."""
+    out = {}
+    for spec in param_specs(cfg):
+        if spec.sparse:
+            out[spec.name] = sparse_masks[spec.name]
+        else:
+            out[spec.name] = jnp.ones(spec.shape, jnp.float32)
+    return out
+
+
+def make_train_step(cfg: ModelConfig) -> Callable:
+    """Returns train_step(params, m_fwd_s, m_bwd_s, opt, x, y, scalars)
+    -> (new_params, new_opt, loss). All dict-valued; aot.py flattens.
+
+    scalars = (lr, step, reg_scale, inv_d) as f32[1] each.
+    """
+    specs = param_specs(cfg)
+
+    def train_step(params, m_fwd_s, m_bwd_s, opt, x, y, lr, step, reg_scale,
+                   inv_d):
+        m_fwd = full_masks(cfg, m_fwd_s)
+        m_bwd = full_masks(cfg, m_bwd_s)
+
+        def loss_fn(p):
+            lp = primary_loss(cfg, p, m_fwd, x, y)
+            lr_ = exploration_reg(p, m_fwd, m_bwd, inv_d[0])
+            return lp + reg_scale[0] * lr_, lp
+
+        grads, lp = jax.grad(loss_fn, has_aux=True)(params)
+
+        new_params: Params = {}
+        new_opt: Params = {}
+        for spec in specs:
+            name = spec.name
+            w, g, mb = params[name], grads[name], m_bwd[name]
+            if cfg.optimizer == "sgd":
+                nw, nv = K.sgd_momentum_update(
+                    w, opt[name + "/m"], g, mb, lr, cfg.momentum
+                )
+                new_params[name] = nw
+                new_opt[name + "/m"] = nv
+            else:
+                nw, nm1, nm2 = K.adam_update(
+                    w, opt[name + "/m1"], opt[name + "/m2"], g, mb, lr, step,
+                    cfg.adam_b1, cfg.adam_b2, cfg.adam_eps,
+                )
+                new_params[name] = nw
+                new_opt[name + "/m1"] = nm1
+                new_opt[name + "/m2"] = nm2
+        return new_params, new_opt, lp.reshape(1)
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig) -> Callable:
+    """eval_step(params, m_fwd_s, x, y) -> (loss_sum f32[1], metric f32[1]).
+
+    metric: correct-prediction count for classifiers, total tokens for LM
+    (so the coordinator can turn loss sums into accuracy / BPC).
+    """
+
+    def eval_step(params, m_fwd_s, x, y):
+        m_fwd = full_masks(cfg, m_fwd_s)
+        if cfg.kind == "lm":
+            logits = lm_apply(cfg, params, m_fwd, x)
+            b, s, v = logits.shape
+            flat, yf = logits.reshape(b * s, v), y.reshape(b * s)
+            logp = jax.nn.log_softmax(flat, axis=-1)
+            ls = -jnp.sum(jnp.take_along_axis(logp, yf[:, None], -1))
+            return ls.reshape(1), jnp.asarray([b * s], jnp.float32)
+        logits = apply_fn(cfg)(cfg, params, m_fwd, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ls = -jnp.sum(jnp.take_along_axis(logp, y[:, None], -1))
+        correct = jnp.sum(
+            (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32)
+        )
+        return ls.reshape(1), correct.reshape(1)
+
+    return eval_step
+
+
+def make_grad_norms(cfg: ModelConfig) -> Callable:
+    """grad_norms(params, m_fwd_s, x, y) -> |grad| per *sparse* tensor.
+
+    The RigL baseline's grow criterion: dense gradient magnitudes of the
+    primary loss wrt theta, with the forward still running through alpha.
+    (This is the dense-gradient materialisation the paper §C argues is
+    awkward in-framework — here it is its own artifact the coordinator
+    invokes only at mask-update steps.)
+    """
+    specs = [s for s in param_specs(cfg) if s.sparse]
+
+    def grad_norms(params, m_fwd_s, x, y):
+        m_fwd = full_masks(cfg, m_fwd_s)
+
+        def loss_fn(p):
+            return primary_loss(cfg, p, m_fwd, x, y)
+
+        grads = jax.grad(loss_fn)(params)
+        return {s.name: jnp.abs(grads[s.name]) for s in specs}
+
+    return grad_norms

@@ -1,0 +1,155 @@
+"""Model/parameter/artifact specifications shared by model.py and aot.py.
+
+The spec layer is the contract between the Python compile path and the
+rust runtime: ``aot.py`` serialises these into ``artifacts/manifest.json``
+and the rust side (``runtime/manifest.rs``) re-materialises parameter
+stores, masks and input marshalling from them without ever importing
+Python.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal
+
+InitKind = Literal["normal", "uniform", "zeros", "ones"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """One parameter tensor of a model.
+
+    sparse=True means the tensor participates in Top-KAST masking (gets a
+    forward and a backward mask and counts towards sparsity/FLOPs
+    accounting). Dense tensors (biases, layernorms, optionally first/last
+    layers) always see all-ones masks.
+
+    mac is the number of multiply-accumulates *per example* the tensor
+    contributes to a forward pass — the basis of the Fig-2 FLOPs model.
+    """
+
+    name: str
+    shape: tuple[int, ...]
+    init: InitKind = "normal"
+    init_scale: float = 0.02
+    sparse: bool = False
+    mac: int = 0
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.shape)
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "shape": list(self.shape),
+            "init": self.init,
+            "init_scale": self.init_scale,
+            "sparse": self.sparse,
+            "mac": self.mac,
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class IoSpec:
+    """One runtime input/output of an artifact."""
+
+    name: str
+    shape: tuple[int, ...]
+    dtype: str  # "f32" | "i32"
+
+    def to_json(self) -> dict:
+        return {"name": self.name, "shape": list(self.shape), "dtype": self.dtype}
+
+
+@dataclasses.dataclass
+class ModelConfig:
+    """A fully-specialised model + batch configuration.
+
+    One ModelConfig produces one artifact family (train/eval/grad_norms),
+    shape-specialised for (model dims, batch). kind selects the builder
+    in model.py.
+    """
+
+    name: str
+    kind: Literal["mlp", "lm", "cnn"]
+    optimizer: Literal["sgd", "adam"] = "sgd"
+    batch_size: int = 32
+    # mlp
+    features: int = 64
+    hidden: int = 128
+    classes: int = 10
+    mlp_layers: int = 3
+    # lm
+    vocab: int = 96
+    d_model: int = 64
+    d_ff: int = 256
+    n_layers: int = 2
+    n_heads: int = 2
+    seq_len: int = 32
+    tie_embeddings: bool = False
+    # cnn
+    image_hw: int = 16
+    channels: tuple[int, ...] = (32, 64, 128)
+    # sparsity conventions
+    first_last_dense: bool = True
+    # optimiser constants baked into the artifact
+    momentum: float = 0.9
+    adam_b1: float = 0.9
+    adam_b2: float = 0.999
+    adam_eps: float = 1e-8
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["channels"] = list(self.channels)
+        return d
+
+
+# The runtime scalar tail every train artifact takes, in order.
+TRAIN_SCALARS = ("lr", "step", "reg_scale", "inv_d")
+
+
+def model_registry() -> dict[str, ModelConfig]:
+    """Every artifact configuration the repo builds.
+
+    Sizes are scaled for CPU-PJRT wall-clock (see DESIGN.md §4): the
+    experiment *structure* (sparsity levels, fwd/bwd pairs, baselines)
+    matches the paper; absolute model sizes do not.
+    """
+    return {
+        c.name: c
+        for c in [
+            # Quickstart / unit-test scale.
+            ModelConfig(
+                name="mlp_tiny", kind="mlp", optimizer="sgd",
+                batch_size=32, features=64, hidden=128, classes=10,
+                mlp_layers=3,
+            ),
+            # ImageNet substitute (Fig 2, Table 1, Table 6, App B).
+            ModelConfig(
+                name="cnn_tiny", kind="cnn", optimizer="sgd",
+                batch_size=32, image_hw=16, channels=(32, 64, 128),
+                classes=20,
+            ),
+            # App-B variant: every layer sparse (first/last not exempt).
+            ModelConfig(
+                name="cnn_tiny_allsparse", kind="cnn", optimizer="sgd",
+                batch_size=32, image_hw=16, channels=(32, 64, 128),
+                classes=20, first_last_dense=False,
+            ),
+            # enwik8 substitute, small (Tables 2/5 and LM unit tests).
+            ModelConfig(
+                name="lm_tiny", kind="lm", optimizer="adam",
+                batch_size=8, vocab=96, d_model=64, d_ff=256,
+                n_layers=2, n_heads=2, seq_len=32,
+            ),
+            # Headline end-to-end LM (EXPERIMENTS.md e2e loss curve,
+            # Tables 2/3 shape reproduction).
+            ModelConfig(
+                name="lm_small", kind="lm", optimizer="adam",
+                batch_size=8, vocab=96, d_model=192, d_ff=768,
+                n_layers=4, n_heads=4, seq_len=128,
+            ),
+        ]
+    }

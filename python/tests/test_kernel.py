@@ -1,0 +1,238 @@
+# pytest: Pallas kernels vs the pure-jnp oracles — the core L1
+# correctness signal. Shapes/densities/seeds are swept hypothesis-style
+# (the environment is offline, so the sweep is an explicit parameter
+# grid + seeded random draws rather than the hypothesis package).
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref as R
+from compile.kernels import topkast as K
+
+SHAPES_MM = [
+    (1, 1, 1),
+    (2, 3, 5),
+    (8, 12, 10),
+    (16, 64, 32),
+    (32, 96, 96),     # non-power-of-two (vocab-like)
+    (64, 128, 256),   # tile-aligned
+    (128, 129, 64),   # prime-ish N forces fallback tiling
+    (256, 192, 576),  # lm_small qkv shape
+]
+
+DENSITIES = [0.0, 0.05, 0.3, 0.5, 1.0]
+SEEDS = [0, 1, 2]
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+def rand_mask(rng, shape, density):
+    return jnp.asarray((rng.random(shape) < density).astype(np.float32))
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES_MM)
+@pytest.mark.parametrize("seed", SEEDS)
+def test_matmul(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = rand(rng, m, k), rand(rng, k, n)
+    np.testing.assert_allclose(
+        K.matmul(x, w), R.matmul(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES_MM)
+@pytest.mark.parametrize("density", DENSITIES)
+def test_masked_matmul(m, k, n, density):
+    rng = np.random.default_rng(7)
+    x, w = rand(rng, m, k), rand(rng, k, n)
+    msk = rand_mask(rng, (k, n), density)
+    np.testing.assert_allclose(
+        K.masked_matmul(x, w, msk), R.masked_matmul(x, w, msk),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES_MM[:6])
+def test_matmul_transposes(m, k, n):
+    rng = np.random.default_rng(3)
+    x, g = rand(rng, m, k), rand(rng, m, n)
+    w, msk = rand(rng, k, n), rand_mask(rng, (k, n), 0.4)
+    np.testing.assert_allclose(
+        K.matmul_at(x, g), R.matmul_at(x, g), rtol=1e-4, atol=1e-4
+    )
+    np.testing.assert_allclose(
+        K.matmul_bt(g, w, msk), R.matmul_bt(g, w, msk), rtol=1e-4, atol=1e-4
+    )
+    np.testing.assert_allclose(
+        K.matmul_bt(g, w), R.matmul_bt(g, w), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("shape", [(4,), (3, 5), (8, 16), (2, 3, 4), (96, 64)])
+@pytest.mark.parametrize("seed", SEEDS)
+def test_mask_apply(shape, seed):
+    rng = np.random.default_rng(seed)
+    w = rand(rng, *shape)
+    m = rand_mask(rng, shape, 0.5)
+    np.testing.assert_allclose(K.mask_apply(w, m), R.mask_apply(w, m))
+
+
+@pytest.mark.parametrize("shape", [(16,), (12, 10), (96, 64)])
+@pytest.mark.parametrize("df,db", [(0.1, 0.3), (0.5, 0.5), (0.2, 1.0)])
+def test_reg_loss_and_grad(shape, df, db):
+    rng = np.random.default_rng(11)
+    w = rand(rng, *shape)
+    mf = rand_mask(rng, shape, df)
+    # B must be a superset of A.
+    mb = jnp.maximum(mf, rand_mask(rng, shape, db))
+    inv_d = 1.0 / max(df, 1e-2)
+    np.testing.assert_allclose(
+        K.topkast_reg_loss(w, mf, mb, inv_d),
+        R.topkast_reg_loss(w, mf, mb, inv_d), rtol=1e-4,
+    )
+    np.testing.assert_allclose(
+        K.topkast_reg_loss_l1(w, mf, mb, inv_d),
+        R.topkast_reg_loss_l1(w, mf, mb, inv_d), rtol=1e-4,
+    )
+    np.testing.assert_allclose(
+        K.topkast_reg_grad(w, mf, mb, inv_d),
+        R.topkast_reg_grad(w, mf, mb, inv_d), rtol=1e-4,
+    )
+
+
+def test_reg_zero_outside_b():
+    """Reservoir units (set C) must receive exactly zero penalty."""
+    rng = np.random.default_rng(0)
+    w = rand(rng, 32, 32)
+    mf = jnp.zeros((32, 32), jnp.float32)
+    mb = jnp.zeros((32, 32), jnp.float32)
+    assert float(K.topkast_reg_loss(w, mf, mb, 5.0)) == 0.0
+    assert float(jnp.max(jnp.abs(K.topkast_reg_grad(w, mf, mb, 5.0)))) == 0.0
+
+
+def test_reg_ba_scaling():
+    """B\\A entries are penalised exactly 1/D times harder (§2.3)."""
+    w = jnp.ones((4, 4), jnp.float32)
+    mf = jnp.zeros((4, 4), jnp.float32).at[0, 0].set(1.0)
+    mb = mf.at[1, 1].set(1.0)
+    inv_d = 10.0
+    loss = float(K.topkast_reg_loss(w, mf, mb, inv_d))
+    # 0.5*1 (A) + 0.5*10 (B\A)
+    assert abs(loss - (0.5 + 5.0)) < 1e-6
+
+
+@pytest.mark.parametrize("shape", [(8,), (12, 10), (64, 96)])
+@pytest.mark.parametrize("seed", SEEDS)
+def test_sgd_momentum(shape, seed):
+    rng = np.random.default_rng(seed)
+    w, v, g = rand(rng, *shape), rand(rng, *shape), rand(rng, *shape)
+    mb = rand_mask(rng, shape, 0.5)
+    got = K.sgd_momentum_update(w, v, g, mb, 0.1, 0.9)
+    want = R.sgd_momentum_update(w, v, g, mb, 0.1, 0.9)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(8,), (12, 10), (64, 96)])
+@pytest.mark.parametrize("step", [1.0, 10.0, 1000.0])
+def test_adam(shape, step):
+    rng = np.random.default_rng(5)
+    w, m1 = rand(rng, *shape), rand(rng, *shape)
+    m2 = jnp.abs(rand(rng, *shape))
+    g = rand(rng, *shape)
+    mb = rand_mask(rng, shape, 0.5)
+    got = K.adam_update(w, m1, m2, g, mb, 1e-3, step)
+    want = R.adam_update(w, m1, m2, g, mb, 1e-3, step)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6)
+
+
+def test_optimizer_state_frozen_outside_b():
+    """Units outside B keep w, momentum, and adam moments bit-identical
+    (a unit re-entering B must resume from stored state, §2.2)."""
+    rng = np.random.default_rng(9)
+    w, v, g = rand(rng, 32, 32), rand(rng, 32, 32), rand(rng, 32, 32)
+    mb = rand_mask(rng, (32, 32), 0.3)
+    nw, nv = K.sgd_momentum_update(w, v, g, mb, 0.1, 0.9)
+    outside = np.asarray(mb) == 0
+    np.testing.assert_array_equal(np.asarray(nw)[outside], np.asarray(w)[outside])
+    np.testing.assert_array_equal(np.asarray(nv)[outside], np.asarray(v)[outside])
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 12, 10), (32, 64, 96)])
+def test_masked_linear_vjp(m, k, n):
+    rng = np.random.default_rng(2)
+    x, w = rand(rng, m, k), rand(rng, k, n)
+    msk = rand_mask(rng, (k, n), 0.5)
+
+    def f(x, w):
+        return jnp.sum(jnp.tanh(K.masked_linear(x, w, msk)))
+
+    def fr(x, w):
+        return jnp.sum(jnp.tanh(R.masked_matmul(x, w, msk)))
+
+    gx, gw = jax.grad(f, argnums=(0, 1))(x, w)
+    rx, rw = jax.grad(fr, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx, rx, rtol=1e-4, atol=1e-5)
+    # kernel returns the dense dL/dalpha; oracle differentiates w*m, so
+    # they agree exactly on the mask support.
+    np.testing.assert_allclose(
+        np.asarray(gw) * np.asarray(msk), np.asarray(rw), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_topkast_reg_vjp():
+    rng = np.random.default_rng(4)
+    w = rand(rng, 16, 16)
+    mf = rand_mask(rng, (16, 16), 0.2)
+    mb = jnp.maximum(mf, rand_mask(rng, (16, 16), 0.5))
+
+    g = jax.grad(lambda w: K.topkast_reg(w, mf, mb, 5.0))(w)
+    np.testing.assert_allclose(
+        g, R.topkast_reg_grad(w, mf, mb, 5.0), rtol=1e-5
+    )
+
+
+def test_interpret_flag_is_on():
+    """The CPU PJRT client cannot run Mosaic custom-calls; the whole AOT
+    path relies on interpret mode staying enabled."""
+    assert K.INTERPRET is True
+
+
+@pytest.mark.parametrize(
+    "n,block", [(7, 128), (128, 128), (96, 128), (129, 128), (200, 64)]
+)
+def test_tile_divides(n, block):
+    t = K._tile(n, block)
+    assert 1 <= t <= max(n, 1)
+    assert n % t == 0
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(16, 16, 16), (32, 64, 16), (128, 128, 128)])
+@pytest.mark.parametrize("m,k,n", [(64, 48, 96), (128, 192, 64)])
+def test_masked_matmul_tiled_schedule(bm, bn, bk, m, k, n):
+    """The TPU tiling schedule (grid > 1, K-innermost accumulation) must
+    agree with the oracle regardless of block shape — this is the code
+    path a real-TPU lowering would take (TOPKAST_PALLAS_BLOCK=128)."""
+    rng = np.random.default_rng(13)
+    x, w = rand(rng, m, k), rand(rng, k, n)
+    msk = rand_mask(rng, (k, n), 0.4)
+    got = K._mm_call(x, w, msk, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(
+        got, R.masked_matmul(x, w, msk), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_masked_matmul_jit_roundtrip():
+    """Kernels must survive jit — that is the lowering the artifacts use."""
+    rng = np.random.default_rng(1)
+    x, w = rand(rng, 16, 32), rand(rng, 32, 24)
+    msk = rand_mask(rng, (32, 24), 0.5)
+    jf = jax.jit(K.masked_matmul)
+    np.testing.assert_allclose(
+        jf(x, w, msk), R.masked_matmul(x, w, msk), rtol=1e-4, atol=1e-4
+    )

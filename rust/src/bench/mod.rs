@@ -1,0 +1,13 @@
+//! Bench harness: experiment runners + table reporting for regenerating
+//! every table and figure in the paper's evaluation (DESIGN.md §5).
+//!
+//! criterion is unavailable offline; this in-tree harness provides what
+//! the reproduction actually needs — named experiments, parameterised
+//! training runs, aligned text tables, and JSON result dumps under
+//! `bench_results/` for EXPERIMENTS.md.
+
+pub mod reports;
+pub mod runner;
+
+pub use reports::{Report, Table};
+pub use runner::{run_training, ExperimentResult, RunSpec};

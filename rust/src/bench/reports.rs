@@ -1,0 +1,156 @@
+//! Aligned text tables + JSON result dumps for the bench experiments.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// A simple aligned text table.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("\n== {} ==\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("title", Json::str(self.title.clone())),
+            (
+                "headers",
+                Json::arr(self.headers.iter().map(|h| Json::str(h.clone()))),
+            ),
+            (
+                "rows",
+                Json::arr(self.rows.iter().map(|r| {
+                    Json::arr(r.iter().map(|c| Json::str(c.clone())))
+                })),
+            ),
+        ])
+    }
+}
+
+/// Collects tables for one bench invocation and persists them.
+#[derive(Default)]
+pub struct Report {
+    pub tables: Vec<Table>,
+}
+
+impl Report {
+    pub fn new() -> Self {
+        Report { tables: vec![] }
+    }
+
+    pub fn add(&mut self, t: Table) {
+        println!("{}", t.render());
+        self.tables.push(t);
+    }
+
+    /// Write all tables as JSON under bench_results/<name>.json.
+    pub fn save(&self, name: &str) -> Result<()> {
+        let dir = Path::new("bench_results");
+        std::fs::create_dir_all(dir)?;
+        let j = Json::arr(self.tables.iter().map(|t| t.to_json()));
+        std::fs::write(dir.join(format!("{name}.json")), j.to_string_pretty())?;
+        Ok(())
+    }
+}
+
+/// Format helpers used across benches.
+pub fn pct(x: f64) -> String {
+    if x.is_nan() {
+        "-".into()
+    } else {
+        format!("{:.1}%", 100.0 * x)
+    }
+}
+
+pub fn f3(x: f64) -> String {
+    if x.is_nan() {
+        "-".into()
+    } else {
+        format!("{x:.3}")
+    }
+}
+
+pub fn f2(x: f64) -> String {
+    if x.is_nan() {
+        "-".into()
+    } else {
+        format!("{x:.2}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["method", "acc"]);
+        t.row(vec!["topkast".into(), "73.0".into()]);
+        t.row(vec!["x".into(), "1".into()]);
+        let r = t.render();
+        assert!(r.contains("demo"));
+        assert!(r.contains("topkast"));
+        let lines: Vec<&str> = r.lines().filter(|l| !l.is_empty()).collect();
+        // header + rule + 2 rows + title
+        assert_eq!(lines.len(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(pct(0.731), "73.1%");
+        assert_eq!(pct(f64::NAN), "-");
+        assert_eq!(f3(1.23456), "1.235");
+        assert_eq!(f2(f64::NAN), "-");
+    }
+}

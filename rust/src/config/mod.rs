@@ -1,0 +1,147 @@
+//! Experiment configuration: named presets mirroring the paper's
+//! hyper-parameter tables (Supplementary A/B), plus JSON config-file
+//! loading so runs are declarative and archivable.
+
+mod presets;
+
+pub use presets::{preset, preset_names, Preset};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{LrSchedule, TrainerConfig};
+use crate::util::json::Json;
+
+/// Load a TrainerConfig (+ model/strategy names) from a JSON file:
+///
+/// ```json
+/// {
+///   "model": "lm_tiny",
+///   "strategy": "topkast:0.8,0.5",
+///   "steps": 500,
+///   "refresh_every": 10,
+///   "seed": 1,
+///   "reg_scale": 1e-4,
+///   "lr": {"kind": "warmup_cosine", "base": 3e-3, "warmup": 50, "floor": 1e-5}
+/// }
+/// ```
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub model: String,
+    pub strategy: String,
+    pub trainer: TrainerConfig,
+}
+
+pub fn load_run_config(path: &str) -> Result<RunConfig> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading config {path:?}"))?;
+    parse_run_config(&text)
+}
+
+pub fn parse_run_config(text: &str) -> Result<RunConfig> {
+    let j = Json::parse(text)?;
+    let mut cfg = TrainerConfig::default();
+    if let Some(v) = j.opt("steps") {
+        cfg.steps = v.as_usize()?;
+    }
+    if let Some(v) = j.opt("refresh_every") {
+        cfg.refresh_every = v.as_usize()?.max(1);
+    }
+    if let Some(v) = j.opt("seed") {
+        cfg.seed = v.as_f64()? as u64;
+    }
+    if let Some(v) = j.opt("reg_scale") {
+        cfg.reg_scale = v.as_f64()?;
+    }
+    if let Some(v) = j.opt("eval_every") {
+        cfg.eval_every = match v.as_usize()? {
+            0 => None,
+            n => Some(n),
+        };
+    }
+    if let Some(v) = j.opt("eval_batches") {
+        cfg.eval_batches = v.as_usize()?;
+    }
+    if let Some(lr) = j.opt("lr") {
+        cfg.lr = parse_lr(lr)?;
+    }
+    Ok(RunConfig {
+        model: j.get("model")?.as_str()?.to_string(),
+        strategy: j.get("strategy")?.as_str()?.to_string(),
+        trainer: cfg,
+    })
+}
+
+fn parse_lr(j: &Json) -> Result<LrSchedule> {
+    Ok(match j.get("kind")?.as_str()? {
+        "constant" => LrSchedule::Constant { base: j.get("base")?.as_f64()? },
+        "warmup_cosine" => LrSchedule::WarmupCosine {
+            base: j.get("base")?.as_f64()?,
+            warmup: j.get("warmup")?.as_usize()?,
+            floor: j.opt("floor").map(|f| f.as_f64()).transpose()?.unwrap_or(0.0),
+        },
+        "step_drops" => LrSchedule::StepDrops {
+            base: j.get("base")?.as_f64()?,
+            factor: j.get("factor")?.as_f64()?,
+            at: j
+                .get("at")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_f64())
+                .collect::<Result<_>>()?,
+            warmup: j.opt("warmup").map(|v| v.as_usize()).transpose()?.unwrap_or(0),
+        },
+        k => anyhow::bail!("unknown lr kind {k:?}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = parse_run_config(
+            r#"{
+              "model": "lm_tiny",
+              "strategy": "topkast:0.8,0.5",
+              "steps": 500,
+              "refresh_every": 10,
+              "seed": 7,
+              "reg_scale": 0.0001,
+              "eval_every": 100,
+              "lr": {"kind": "warmup_cosine", "base": 0.003, "warmup": 50, "floor": 1e-5}
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.model, "lm_tiny");
+        assert_eq!(cfg.strategy, "topkast:0.8,0.5");
+        assert_eq!(cfg.trainer.steps, 500);
+        assert_eq!(cfg.trainer.refresh_every, 10);
+        assert_eq!(cfg.trainer.seed, 7);
+        assert_eq!(cfg.trainer.eval_every, Some(100));
+        match cfg.trainer.lr {
+            LrSchedule::WarmupCosine { base, warmup, floor } => {
+                assert!((base - 0.003).abs() < 1e-12);
+                assert_eq!(warmup, 50);
+                assert!((floor - 1e-5).abs() < 1e-12);
+            }
+            _ => panic!("wrong schedule"),
+        }
+    }
+
+    #[test]
+    fn defaults_fill_gaps() {
+        let cfg = parse_run_config(r#"{"model": "mlp_tiny", "strategy": "dense"}"#)
+            .unwrap();
+        assert_eq!(cfg.trainer.steps, TrainerConfig::default().steps);
+    }
+
+    #[test]
+    fn rejects_missing_model() {
+        assert!(parse_run_config(r#"{"strategy": "dense"}"#).is_err());
+        assert!(
+            parse_run_config(r#"{"model": "m", "strategy": "s", "lr": {"kind": "nope"}}"#)
+                .is_err()
+        );
+    }
+}

@@ -1,0 +1,281 @@
+//! Asynchronous mask refresh — the paper's §2.4 deployment story made
+//! concrete: "simply compute the Top-K entries in parallel on CPU, thus
+//! avoiding the need to fit the model on the actual training hardware
+//! … we do not even need to perform this operation every step."
+//!
+//! A background worker owns its own copy of the mask strategy; the
+//! trainer ships it weight snapshots at refresh points and keeps
+//! training on the *stale* masks until the worker answers. Appendix C
+//! (Table 6) is the paper's evidence that staleness of ~100 steps does
+//! not hurt — the async path turns that tolerance into overlap between
+//! selection and training.
+//!
+//! Only mask-pure strategies are eligible (Top-KAST, Top-KAST-Random,
+//! static, pruning): SET and RigL rewrite weights during their updates,
+//! which cannot be applied from a stale snapshot.
+
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Result};
+
+use crate::sparsity::{MaskPair, MaskStrategy, ParamStore, TensorCtx};
+use crate::util::rng::Pcg64;
+use crate::util::timer::Stopwatch;
+
+/// Snapshot of the sparse tensors' dense values at a refresh point.
+pub struct RefreshRequest {
+    pub step: usize,
+    pub total_steps: usize,
+    pub weights: Vec<(String, Vec<f32>)>,
+}
+
+/// New masks computed by the worker.
+pub struct RefreshResult {
+    pub step: usize,
+    pub masks: Vec<(String, MaskPair)>,
+    pub compute_ms: f64,
+}
+
+pub struct AsyncMaskRefresher {
+    req_tx: Option<Sender<RefreshRequest>>,
+    res_rx: Receiver<RefreshResult>,
+    worker: Option<JoinHandle<()>>,
+    in_flight: bool,
+    /// Refreshes applied / requested (observability).
+    pub applied: usize,
+    pub requested: usize,
+}
+
+impl AsyncMaskRefresher {
+    /// Spawn the worker with its own strategy instance and RNG stream.
+    pub fn spawn(mut strategy: Box<dyn MaskStrategy>, seed: u64) -> Result<Self> {
+        if strategy_mutates_weights(strategy.name()) {
+            bail!(
+                "strategy {:?} rewrites weights during mask updates and \
+                 cannot run asynchronously from a snapshot",
+                strategy.name()
+            );
+        }
+        let (req_tx, req_rx) = channel::<RefreshRequest>();
+        let (res_tx, res_rx) = channel::<RefreshResult>();
+        let worker = std::thread::Builder::new()
+            .name("topkast-mask-refresh".into())
+            .spawn(move || {
+                let mut rng = Pcg64::new(seed, 0xA57);
+                while let Ok(req) = req_rx.recv() {
+                    let sw = Stopwatch::start();
+                    let mut masks = Vec::with_capacity(req.weights.len());
+                    for (name, mut w) in req.weights {
+                        let n = w.len();
+                        let mut pair = MaskPair::dense(n);
+                        pair.fwd.fill(0.0);
+                        pair.bwd.fill(0.0);
+                        let ctx = TensorCtx {
+                            name: &name,
+                            weights: &mut w,
+                            mask_fwd: &mut pair.fwd,
+                            mask_bwd: &mut pair.bwd,
+                            grad_norms: None,
+                            rng: &mut rng,
+                            step: req.step,
+                            total_steps: req.total_steps,
+                        };
+                        if strategy.update_tensor(ctx).is_err() {
+                            return; // trainer side will notice the hangup
+                        }
+                        masks.push((name, pair));
+                    }
+                    let _ = res_tx.send(RefreshResult {
+                        step: req.step,
+                        masks,
+                        compute_ms: sw.elapsed_ms(),
+                    });
+                }
+            })?;
+        Ok(AsyncMaskRefresher {
+            req_tx: Some(req_tx),
+            res_rx,
+            worker: Some(worker),
+            in_flight: false,
+            applied: 0,
+            requested: 0,
+        })
+    }
+
+    /// Ship a snapshot to the worker (no-op if one is still in flight —
+    /// the next refresh point will pick up the newer weights anyway).
+    pub fn request(&mut self, store: &ParamStore, step: usize, total: usize) {
+        if self.in_flight {
+            return;
+        }
+        let weights = store
+            .entries
+            .iter()
+            .filter(|e| e.spec.sparse)
+            .map(|e| (e.spec.name.clone(), e.values.clone()))
+            .collect();
+        if let Some(tx) = &self.req_tx {
+            if tx
+                .send(RefreshRequest { step, total_steps: total, weights })
+                .is_ok()
+            {
+                self.in_flight = true;
+                self.requested += 1;
+            }
+        }
+    }
+
+    /// Install a finished result if one is ready. Returns the step the
+    /// installed masks were computed from (staleness = now - that).
+    pub fn try_install(&mut self, store: &mut ParamStore) -> Result<Option<usize>> {
+        match self.res_rx.try_recv() {
+            Ok(res) => {
+                for (name, pair) in res.masks {
+                    let e = store.get_mut(&name)?;
+                    if let Some(m) = e.masks.as_mut() {
+                        *m = pair;
+                    }
+                }
+                self.in_flight = false;
+                self.applied += 1;
+                Ok(Some(res.step))
+            }
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => bail!("mask worker died"),
+        }
+    }
+
+    /// Block for the next result (used at step 0 so training never runs
+    /// on uninitialised masks, and in tests).
+    pub fn wait_install(&mut self, store: &mut ParamStore) -> Result<usize> {
+        let res = self
+            .res_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("mask worker died"))?;
+        let step = res.step;
+        for (name, pair) in res.masks {
+            let e = store.get_mut(&name)?;
+            if let Some(m) = e.masks.as_mut() {
+                *m = pair;
+            }
+        }
+        self.in_flight = false;
+        self.applied += 1;
+        Ok(step)
+    }
+}
+
+impl Drop for AsyncMaskRefresher {
+    fn drop(&mut self) {
+        // closing the channel stops the worker loop
+        self.req_tx.take();
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Strategies whose update_tensor mutates weights (SET re-inits grown
+/// connections, RigL zeroes dropped/grown ones).
+pub fn strategy_mutates_weights(name: &str) -> bool {
+    matches!(name, "set" | "rigl")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{InitKind, ParamSpec};
+    use crate::sparsity::{topk, SetEvolve, TopKast};
+    use crate::tensor::Shape;
+
+    fn store() -> ParamStore {
+        ParamStore::init(
+            &[
+                ParamSpec {
+                    name: "w1".into(),
+                    shape: Shape::new(&[40]),
+                    init: InitKind::Normal,
+                    init_scale: 0.1,
+                    sparse: true,
+                    mac: 40,
+                },
+                ParamSpec {
+                    name: "b".into(),
+                    shape: Shape::new(&[4]),
+                    init: InitKind::Zeros,
+                    init_scale: 0.0,
+                    sparse: false,
+                    mac: 0,
+                },
+            ],
+            5,
+        )
+    }
+
+    #[test]
+    fn async_refresh_matches_synchronous_topk() {
+        let mut st = store();
+        let mut r = AsyncMaskRefresher::spawn(
+            Box::new(TopKast::new(0.2, 0.5)),
+            9,
+        )
+        .unwrap();
+        r.request(&st, 0, 100);
+        let from_step = {
+            let mut tmp = st.clone();
+            let s = r.wait_install(&mut tmp).unwrap();
+            st = tmp;
+            s
+        };
+        assert_eq!(from_step, 0);
+        let e = st.get("w1").unwrap();
+        let m = e.masks.as_ref().unwrap();
+        let want_fwd = topk::topk_mask(&e.values, topk::k_for_density(40, 0.2));
+        let want_bwd = topk::topk_mask(&e.values, topk::k_for_density(40, 0.5));
+        assert_eq!(m.fwd, want_fwd);
+        assert_eq!(m.bwd, want_bwd);
+        assert_eq!(r.applied, 1);
+    }
+
+    #[test]
+    fn only_one_request_in_flight() {
+        let st = store();
+        let mut r =
+            AsyncMaskRefresher::spawn(Box::new(TopKast::new(0.2, 0.5)), 1).unwrap();
+        r.request(&st, 0, 100);
+        r.request(&st, 1, 100); // dropped — one in flight
+        assert_eq!(r.requested, 1);
+    }
+
+    #[test]
+    fn rejects_weight_mutating_strategies() {
+        let err = AsyncMaskRefresher::spawn(
+            Box::new(SetEvolve::new(0.2, 0.3, 0.05)),
+            0,
+        );
+        assert!(err.is_err());
+        assert!(strategy_mutates_weights("rigl"));
+        assert!(!strategy_mutates_weights("topkast"));
+    }
+
+    #[test]
+    fn try_install_nonblocking() {
+        let mut st = store();
+        let mut r =
+            AsyncMaskRefresher::spawn(Box::new(TopKast::new(0.2, 0.5)), 2).unwrap();
+        // nothing requested yet
+        assert!(r.try_install(&mut st).unwrap().is_none());
+        r.request(&st, 3, 100);
+        // eventually arrives
+        let mut got = None;
+        for _ in 0..200 {
+            if let Some(s) = r.try_install(&mut st).unwrap() {
+                got = Some(s);
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(got, Some(3));
+    }
+}

@@ -1,0 +1,249 @@
+//! Checkpointing: dense θ + masks + optimiser state + step counter.
+//!
+//! Container format (offline — no serde/flatbuffers): a JSON header
+//! describing tensor names/shapes/offsets, then raw little-endian f32
+//! blobs. Deterministic layout so checkpoints diff/rehash cleanly.
+//!
+//!   magic "TKC1" | u64 header_len | header JSON | blob bytes
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::sparsity::ParamStore;
+use crate::util::json::Json;
+
+const MAGIC: &[u8; 4] = b"TKC1";
+
+pub struct Checkpoint {
+    pub step: usize,
+    pub params: Vec<(String, Vec<f32>)>,
+    pub masks_fwd: Vec<(String, Vec<f32>)>,
+    pub masks_bwd: Vec<(String, Vec<f32>)>,
+    pub opt: Vec<Vec<f32>>,
+}
+
+impl Checkpoint {
+    pub fn capture(store: &ParamStore, opt: &[Vec<f32>], step: usize) -> Self {
+        let mut params = vec![];
+        let mut masks_fwd = vec![];
+        let mut masks_bwd = vec![];
+        for e in &store.entries {
+            params.push((e.spec.name.clone(), e.values.clone()));
+            if let Some(m) = &e.masks {
+                masks_fwd.push((e.spec.name.clone(), m.fwd.clone()));
+                masks_bwd.push((e.spec.name.clone(), m.bwd.clone()));
+            }
+        }
+        Checkpoint {
+            step,
+            params,
+            masks_fwd,
+            masks_bwd,
+            opt: opt.to_vec(),
+        }
+    }
+
+    /// Restore into a store (+ opt slots). Shapes must match.
+    pub fn restore(&self, store: &mut ParamStore, opt: &mut [Vec<f32>]) -> Result<()> {
+        for (name, vals) in &self.params {
+            store.set_values(name, vals.clone())?;
+        }
+        for (name, m) in &self.masks_fwd {
+            let e = store.get_mut(name)?;
+            let masks = e.masks.as_mut().context("mask on dense tensor")?;
+            if masks.fwd.len() != m.len() {
+                bail!("mask size mismatch for {name}");
+            }
+            masks.fwd = m.clone();
+        }
+        for (name, m) in &self.masks_bwd {
+            let e = store.get_mut(name)?;
+            e.masks.as_mut().context("mask on dense tensor")?.bwd = m.clone();
+        }
+        if opt.len() != self.opt.len() {
+            bail!("opt slot count mismatch: {} vs {}", opt.len(), self.opt.len());
+        }
+        for (dst, src) in opt.iter_mut().zip(&self.opt) {
+            if dst.len() != src.len() {
+                bail!("opt slot size mismatch");
+            }
+            dst.copy_from_slice(src);
+        }
+        Ok(())
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut blob: Vec<u8> = Vec::new();
+        let mut sections = Vec::new();
+        let mut push = |kind: &str, name: &str, data: &[f32], blob: &mut Vec<u8>| {
+            let off = blob.len();
+            for v in data {
+                blob.extend_from_slice(&v.to_le_bytes());
+            }
+            sections.push(Json::obj(vec![
+                ("kind", Json::str(kind)),
+                ("name", Json::str(name)),
+                ("offset", Json::num(off as f64)),
+                ("len", Json::num(data.len() as f64)),
+            ]));
+        };
+        for (n, v) in &self.params {
+            push("param", n, v, &mut blob);
+        }
+        for (n, v) in &self.masks_fwd {
+            push("mask_fwd", n, v, &mut blob);
+        }
+        for (n, v) in &self.masks_bwd {
+            push("mask_bwd", n, v, &mut blob);
+        }
+        for (i, v) in self.opt.iter().enumerate() {
+            push("opt", &format!("slot{i}"), v, &mut blob);
+        }
+        let header = Json::obj(vec![
+            ("step", Json::num(self.step as f64)),
+            ("sections", Json::Arr(sections)),
+        ])
+        .to_string_compact();
+
+        let tmp = path.as_ref().with_extension("tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {tmp:?}"))?;
+            f.write_all(MAGIC)?;
+            f.write_all(&(header.len() as u64).to_le_bytes())?;
+            f.write_all(header.as_bytes())?;
+            f.write_all(&blob)?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path.as_ref())?; // atomic replace
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let mut f = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {:?}", path.as_ref()))?;
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not a Top-KAST checkpoint (bad magic)");
+        }
+        let mut lenb = [0u8; 8];
+        f.read_exact(&mut lenb)?;
+        let hlen = u64::from_le_bytes(lenb) as usize;
+        let mut hbuf = vec![0u8; hlen];
+        f.read_exact(&mut hbuf)?;
+        let header = Json::parse(std::str::from_utf8(&hbuf)?)?;
+        let mut blob = Vec::new();
+        f.read_to_end(&mut blob)?;
+
+        let step = header.get("step")?.as_usize()?;
+        let mut params = vec![];
+        let mut masks_fwd = vec![];
+        let mut masks_bwd = vec![];
+        let mut opt = vec![];
+        for s in header.get("sections")?.as_arr()? {
+            let kind = s.get("kind")?.as_str()?;
+            let name = s.get("name")?.as_str()?.to_string();
+            let off = s.get("offset")?.as_usize()?;
+            let len = s.get("len")?.as_usize()?;
+            let end = off + len * 4;
+            if end > blob.len() {
+                bail!("section {name} out of bounds");
+            }
+            let data: Vec<f32> = blob[off..end]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            match kind {
+                "param" => params.push((name, data)),
+                "mask_fwd" => masks_fwd.push((name, data)),
+                "mask_bwd" => masks_bwd.push((name, data)),
+                "opt" => opt.push(data),
+                k => bail!("unknown section kind {k:?}"),
+            }
+        }
+        Ok(Checkpoint { step, params, masks_fwd, masks_bwd, opt })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{InitKind, ParamSpec};
+    use crate::tensor::Shape;
+
+    fn specs() -> Vec<ParamSpec> {
+        vec![
+            ParamSpec {
+                name: "w".into(),
+                shape: Shape::new(&[8]),
+                init: InitKind::Normal,
+                init_scale: 0.1,
+                sparse: true,
+                mac: 8,
+            },
+            ParamSpec {
+                name: "b".into(),
+                shape: Shape::new(&[4]),
+                init: InitKind::Zeros,
+                init_scale: 0.0,
+                sparse: false,
+                mac: 0,
+            },
+        ]
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut store = ParamStore::init(&specs(), 3);
+        {
+            let m = store.get_mut("w").unwrap().masks.as_mut().unwrap();
+            m.fwd = vec![1.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 1.0];
+            m.bwd = vec![1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 1.0];
+        }
+        let opt = vec![vec![0.5f32; 8], vec![0.25f32; 4]];
+        let ck = Checkpoint::capture(&store, &opt, 1234);
+
+        let dir = std::env::temp_dir().join("topkast_ck_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("test.ckpt");
+        ck.save(&path).unwrap();
+
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.step, 1234);
+
+        let mut store2 = ParamStore::init(&specs(), 999); // different init
+        let mut opt2 = vec![vec![0.0f32; 8], vec![0.0f32; 4]];
+        loaded.restore(&mut store2, &mut opt2).unwrap();
+        assert_eq!(
+            store2.get("w").unwrap().values,
+            store.get("w").unwrap().values
+        );
+        assert_eq!(
+            store2.get("w").unwrap().masks.as_ref().unwrap().fwd,
+            store.get("w").unwrap().masks.as_ref().unwrap().fwd
+        );
+        assert_eq!(opt2, opt);
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        let dir = std::env::temp_dir().join("topkast_ck_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn restore_validates_shapes() {
+        let store = ParamStore::init(&specs(), 0);
+        let opt = vec![vec![0.0f32; 8], vec![0.0f32; 4]];
+        let ck = Checkpoint::capture(&store, &opt, 1);
+        let mut store2 = ParamStore::init(&specs(), 0);
+        let mut opt_bad = vec![vec![0.0f32; 8]]; // wrong slot count
+        assert!(ck.restore(&mut store2, &mut opt_bad).is_err());
+    }
+}

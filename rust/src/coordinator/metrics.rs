@@ -1,0 +1,288 @@
+//! Training metrics: mask-churn (Fig 3a), reservoir tracking (Fig 3b),
+//! loss history and step-latency breakdowns (EXPERIMENTS.md §Perf).
+
+use std::collections::BTreeMap;
+
+use crate::sparsity::ParamStore;
+use crate::util::timer::Stats;
+
+/// Fig 3(a): fraction of mask entries that changed between snapshots,
+/// per layer — the paper plots min/mean/max across layers at 5k-step
+/// spacing.
+#[derive(Default)]
+pub struct MaskChurn {
+    /// last snapshot per tensor (forward masks)
+    last: BTreeMap<String, Vec<f32>>,
+    /// (step, per-layer churn fractions)
+    pub history: Vec<(usize, Vec<f64>)>,
+}
+
+impl MaskChurn {
+    pub fn snapshot(&mut self, store: &ParamStore, step: usize) {
+        let mut churns = Vec::new();
+        for e in &store.entries {
+            let Some(masks) = &e.masks else { continue };
+            let name = &e.spec.name;
+            if let Some(prev) = self.last.get(name) {
+                let changed = prev
+                    .iter()
+                    .zip(&masks.fwd)
+                    .filter(|(a, b)| a != b)
+                    .count();
+                churns.push(changed as f64 / prev.len().max(1) as f64);
+            }
+            self.last.insert(name.clone(), masks.fwd.clone());
+        }
+        if !churns.is_empty() {
+            self.history.push((step, churns));
+        }
+    }
+
+    /// (step, min, mean, max) rows — Fig 3(a)'s three series.
+    pub fn summary(&self) -> Vec<(usize, f64, f64, f64)> {
+        self.history
+            .iter()
+            .map(|(step, cs)| {
+                let min = cs.iter().cloned().fold(f64::INFINITY, f64::min);
+                let max = cs.iter().cloned().fold(0.0, f64::max);
+                let mean = cs.iter().sum::<f64>() / cs.len() as f64;
+                (*step, min, mean, max)
+            })
+            .collect()
+    }
+}
+
+/// Fig 3(b): of the units in set C at initialisation (neither forward
+/// nor backward active), what fraction has *ever* entered the active
+/// set A?
+pub struct ReservoirTracker {
+    /// per tensor: indices that were in C at init
+    reservoir: BTreeMap<String, Vec<u32>>,
+    /// per tensor: flags parallel to `reservoir` — ever seen in A
+    woken: BTreeMap<String, Vec<bool>>,
+    pub history: Vec<(usize, f64)>,
+    initialised: bool,
+}
+
+impl ReservoirTracker {
+    pub fn new() -> Self {
+        ReservoirTracker {
+            reservoir: BTreeMap::new(),
+            woken: BTreeMap::new(),
+            history: vec![],
+            initialised: false,
+        }
+    }
+
+    /// Call right after the first mask assignment.
+    pub fn init(&mut self, store: &ParamStore) {
+        for e in &store.entries {
+            let Some(m) = &e.masks else { continue };
+            let res: Vec<u32> = (0..m.bwd.len() as u32)
+                .filter(|&i| m.bwd[i as usize] == 0.0)
+                .collect();
+            self.woken
+                .insert(e.spec.name.clone(), vec![false; res.len()]);
+            self.reservoir.insert(e.spec.name.clone(), res);
+        }
+        self.initialised = true;
+    }
+
+    pub fn observe(&mut self, store: &ParamStore, step: usize) {
+        if !self.initialised {
+            return;
+        }
+        let mut woken_total = 0usize;
+        let mut res_total = 0usize;
+        for e in &store.entries {
+            let Some(m) = &e.masks else { continue };
+            let name = &e.spec.name;
+            let (Some(res), Some(wok)) =
+                (self.reservoir.get(name), self.woken.get_mut(name))
+            else {
+                continue;
+            };
+            for (slot, &i) in res.iter().enumerate() {
+                if m.fwd[i as usize] == 1.0 {
+                    wok[slot] = true;
+                }
+            }
+            woken_total += wok.iter().filter(|&&w| w).count();
+            res_total += res.len();
+        }
+        if res_total > 0 {
+            self.history
+                .push((step, woken_total as f64 / res_total as f64));
+        }
+    }
+
+    pub fn final_fraction(&self) -> Option<f64> {
+        self.history.last().map(|&(_, f)| f)
+    }
+}
+
+impl Default for ReservoirTracker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Everything a training run records.
+#[derive(Default)]
+pub struct RunMetrics {
+    pub losses: Vec<(usize, f64)>,
+    pub churn: MaskChurn,
+    pub reservoir: ReservoirTracker,
+    pub step_time: Stats,
+    pub refresh_time: Stats,
+    pub upload_bytes: u64,
+    pub evals: Vec<(usize, EvalResult)>,
+}
+
+impl RunMetrics {
+    pub fn new() -> Self {
+        RunMetrics {
+            step_time: Stats::new(),
+            refresh_time: Stats::new(),
+            ..Default::default()
+        }
+    }
+
+    pub fn final_loss(&self) -> Option<f64> {
+        self.losses.last().map(|&(_, l)| l)
+    }
+
+    /// Mean loss over the last `n` recorded steps (smoother than the
+    /// single last batch).
+    pub fn tail_loss(&self, n: usize) -> Option<f64> {
+        if self.losses.is_empty() {
+            return None;
+        }
+        let tail = &self.losses[self.losses.len().saturating_sub(n)..];
+        Some(tail.iter().map(|&(_, l)| l).sum::<f64>() / tail.len() as f64)
+    }
+}
+
+/// Evaluation output (the coordinator converts loss sums into the
+/// paper's metrics).
+#[derive(Clone, Copy, Debug)]
+pub struct EvalResult {
+    pub loss_mean: f64,
+    /// classification accuracy in [0,1], or f64::NAN for LMs
+    pub accuracy: f64,
+    /// bits-per-character (LMs), or NAN for classifiers
+    pub bpc: f64,
+    /// perplexity e^loss (LMs)
+    pub perplexity: f64,
+    pub n_examples: usize,
+}
+
+impl EvalResult {
+    pub fn classifier(loss_sum: f64, correct: f64, n: usize) -> Self {
+        EvalResult {
+            loss_mean: loss_sum / n.max(1) as f64,
+            accuracy: correct / n.max(1) as f64,
+            bpc: f64::NAN,
+            perplexity: f64::NAN,
+            n_examples: n,
+        }
+    }
+
+    pub fn lm(loss_sum: f64, tokens: f64) -> Self {
+        let mean = loss_sum / tokens.max(1.0);
+        EvalResult {
+            loss_mean: mean,
+            accuracy: f64::NAN,
+            bpc: mean / std::f64::consts::LN_2,
+            perplexity: mean.exp(),
+            n_examples: tokens as usize,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{InitKind, ParamSpec};
+    use crate::tensor::Shape;
+
+    fn store() -> ParamStore {
+        ParamStore::init(
+            &[ParamSpec {
+                name: "w".into(),
+                shape: Shape::new(&[10]),
+                init: InitKind::Normal,
+                init_scale: 0.1,
+                sparse: true,
+                mac: 10,
+            }],
+            0,
+        )
+    }
+
+    #[test]
+    fn churn_detects_changes() {
+        let mut st = store();
+        let mut churn = MaskChurn::default();
+        {
+            let m = st.get_mut("w").unwrap().masks.as_mut().unwrap();
+            m.fwd = vec![1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        }
+        churn.snapshot(&st, 0);
+        assert!(churn.history.is_empty(), "first snapshot has no baseline");
+        {
+            let m = st.get_mut("w").unwrap().masks.as_mut().unwrap();
+            m.fwd = vec![0.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        }
+        churn.snapshot(&st, 100);
+        let s = churn.summary();
+        assert_eq!(s.len(), 1);
+        assert!((s[0].2 - 0.2).abs() < 1e-12, "2 of 10 flipped");
+    }
+
+    #[test]
+    fn reservoir_tracks_wakeups() {
+        let mut st = store();
+        {
+            let m = st.get_mut("w").unwrap().masks.as_mut().unwrap();
+            m.fwd = vec![1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+            m.bwd = vec![1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        }
+        let mut r = ReservoirTracker::new();
+        r.init(&st); // C = indices 2..9 (8 units)
+        r.observe(&st, 0);
+        assert_eq!(r.history[0].1, 0.0);
+        {
+            let m = st.get_mut("w").unwrap().masks.as_mut().unwrap();
+            m.fwd[5] = 1.0; // a reservoir unit becomes active
+        }
+        r.observe(&st, 10);
+        assert!((r.final_fraction().unwrap() - 1.0 / 8.0).abs() < 1e-12);
+        // wake-ups are sticky
+        {
+            let m = st.get_mut("w").unwrap().masks.as_mut().unwrap();
+            m.fwd[5] = 0.0;
+        }
+        r.observe(&st, 20);
+        assert!((r.final_fraction().unwrap() - 1.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eval_result_conversions() {
+        let c = EvalResult::classifier(64.0, 48.0, 64);
+        assert!((c.accuracy - 0.75).abs() < 1e-12);
+        let l = EvalResult::lm(256.0 * std::f64::consts::LN_2, 256.0);
+        assert!((l.bpc - 1.0).abs() < 1e-12);
+        assert!((l.loss_mean - std::f64::consts::LN_2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tail_loss_smooths() {
+        let mut m = RunMetrics::new();
+        for i in 0..10 {
+            m.losses.push((i, i as f64));
+        }
+        assert_eq!(m.final_loss().unwrap(), 9.0);
+        assert_eq!(m.tail_loss(4).unwrap(), (6.0 + 7.0 + 8.0 + 9.0) / 4.0);
+    }
+}

@@ -1,0 +1,18 @@
+//! Coordinator — Layer 3. The training leader implementing the paper's
+//! host/accelerator split: dense θ and Top-K mask selection on the host
+//! (refreshed every N steps), sparse train steps on the device via the
+//! AOT artifacts.
+
+pub mod async_masks;
+pub mod checkpoint;
+pub mod metrics;
+pub mod schedule;
+pub mod sources;
+pub mod train;
+
+pub use async_masks::AsyncMaskRefresher;
+pub use checkpoint::Checkpoint;
+pub use metrics::{EvalResult, MaskChurn, ReservoirTracker, RunMetrics};
+pub use schedule::LrSchedule;
+pub use sources::{source_for, ImageData, LmData, MlpData};
+pub use train::{DataSource, Trainer, TrainerConfig};

@@ -1,0 +1,97 @@
+//! Learning-rate schedules (paper: linear warmup + cosine decay for the
+//! LMs, step drops for the ResNet runs).
+
+#[derive(Clone, Debug)]
+pub enum LrSchedule {
+    Constant {
+        base: f64,
+    },
+    /// Linear warmup to `base` over `warmup` steps, then cosine decay to
+    /// `floor` at `total` (Transformer-XL setup, Supplementary A).
+    WarmupCosine {
+        base: f64,
+        warmup: usize,
+        floor: f64,
+    },
+    /// `base` with multiplicative `factor` drops at step fractions
+    /// `at` (ResNet-50 setup, Supplementary B).
+    StepDrops {
+        base: f64,
+        factor: f64,
+        at: Vec<f64>,
+        warmup: usize,
+    },
+}
+
+impl LrSchedule {
+    pub fn at(&self, step: usize, total: usize) -> f64 {
+        match self {
+            LrSchedule::Constant { base } => *base,
+            LrSchedule::WarmupCosine { base, warmup, floor } => {
+                if step < *warmup {
+                    // start from ~0 (paper: 1e-7) up to base
+                    let frac = (step as f64 + 1.0) / (*warmup as f64);
+                    base * frac
+                } else {
+                    let t = (step - warmup) as f64
+                        / (total.saturating_sub(*warmup)).max(1) as f64;
+                    let t = t.min(1.0);
+                    floor
+                        + (base - floor)
+                            * 0.5
+                            * (1.0 + (std::f64::consts::PI * t).cos())
+                }
+            }
+            LrSchedule::StepDrops { base, factor, at, warmup } => {
+                if step < *warmup {
+                    return base * (step as f64 + 1.0) / (*warmup as f64);
+                }
+                let frac = step as f64 / total.max(1) as f64;
+                let drops = at.iter().filter(|&&a| frac >= a).count() as i32;
+                base * factor.powi(drops)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant() {
+        let s = LrSchedule::Constant { base: 0.1 };
+        assert_eq!(s.at(0, 100), 0.1);
+        assert_eq!(s.at(99, 100), 0.1);
+    }
+
+    #[test]
+    fn warmup_cosine_shape() {
+        let s = LrSchedule::WarmupCosine { base: 1.0, warmup: 10, floor: 0.0 };
+        assert!(s.at(0, 100) < 0.2);
+        assert!((s.at(9, 100) - 1.0).abs() < 1e-9);
+        assert!(s.at(50, 100) < 1.0);
+        assert!(s.at(99, 100) < 0.01);
+        // monotone decay after warmup
+        let mut last = s.at(10, 100);
+        for step in 11..100 {
+            let v = s.at(step, 100);
+            assert!(v <= last + 1e-12);
+            last = v;
+        }
+    }
+
+    #[test]
+    fn step_drops() {
+        let s = LrSchedule::StepDrops {
+            base: 1.6,
+            factor: 0.1,
+            at: vec![0.3, 0.7, 0.9],
+            warmup: 0,
+        };
+        assert!((s.at(0, 1000) - 1.6).abs() < 1e-9);
+        assert!((s.at(300, 1000) - 0.16).abs() < 1e-9);
+        assert!((s.at(700, 1000) - 0.016).abs() < 1e-9);
+        assert!((s.at(950, 1000) - 0.0016).abs() < 1e-9);
+    }
+}

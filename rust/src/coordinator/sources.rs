@@ -1,0 +1,117 @@
+//! DataSource adapters binding the synthetic tasks to the trainer.
+
+use anyhow::Result;
+
+use super::train::DataSource;
+use crate::data::{
+    generate_corpus, split_corpus, CorpusConfig, ImageTask, ImageTaskConfig,
+    LmBatcher, MlpTask,
+};
+use crate::runtime::ModelEntry;
+use crate::tensor::HostTensor;
+
+/// LM: train batches from the train split, eval batches from the
+/// validation split (deterministic, non-overlapping).
+pub struct LmData {
+    train: LmBatcher,
+    valid: LmBatcher,
+}
+
+impl LmData {
+    pub fn new(model: &ModelEntry, corpus: CorpusConfig, seed: u64) -> Result<Self> {
+        let b = model.cfg_usize("batch_size")?;
+        let s = model.cfg_usize("seq_len")?;
+        let data = generate_corpus(&corpus);
+        let splits = split_corpus(data, 0.05, 0.05);
+        Ok(LmData {
+            train: LmBatcher::new(splits.train, b, s, seed),
+            valid: LmBatcher::new(splits.valid, b, s, seed ^ 1),
+        })
+    }
+}
+
+impl DataSource for LmData {
+    fn next_train(&mut self) -> (HostTensor, HostTensor) {
+        self.train.next_train()
+    }
+
+    fn eval_batch(&mut self, idx: usize) -> Option<(HostTensor, HostTensor)> {
+        self.valid.eval_batch(idx)
+    }
+}
+
+/// Vision: streaming train batches; eval re-seeds a deterministic
+/// stream so every evaluation sees identical samples.
+pub struct ImageData {
+    task: ImageTask,
+    eval_cache: Vec<(HostTensor, HostTensor)>,
+    batch: usize,
+}
+
+impl ImageData {
+    pub fn new(model: &ModelEntry, seed: u64) -> Result<Self> {
+        let classes = model.cfg_usize("classes")?;
+        let hw = model.cfg_usize("image_hw")?;
+        let batch = model.cfg_usize("batch_size")?;
+        let task = ImageTask::new(ImageTaskConfig {
+            classes,
+            hw,
+            seed,
+            ..Default::default()
+        });
+        // Pre-generate a fixed eval set (16 batches).
+        let mut eval_stream = task.eval_stream(seed ^ 0xEAEA);
+        let eval_cache = (0..16).map(|_| eval_stream.next_batch(batch)).collect();
+        Ok(ImageData { task, eval_cache, batch })
+    }
+}
+
+impl DataSource for ImageData {
+    fn next_train(&mut self) -> (HostTensor, HostTensor) {
+        self.task.next_batch(self.batch)
+    }
+
+    fn eval_batch(&mut self, idx: usize) -> Option<(HostTensor, HostTensor)> {
+        self.eval_cache.get(idx).cloned()
+    }
+}
+
+/// MLP quickstart task.
+pub struct MlpData {
+    task: MlpTask,
+    eval_cache: Vec<(HostTensor, HostTensor)>,
+    batch: usize,
+}
+
+impl MlpData {
+    pub fn new(model: &ModelEntry, seed: u64) -> Result<Self> {
+        let features = model.cfg_usize("features")?;
+        let classes = model.cfg_usize("classes")?;
+        let batch = model.cfg_usize("batch_size")?;
+        let task = MlpTask::new(features, classes, seed);
+        // same labelling map, held-out sample stream
+        let mut eval_task = task.eval_stream(seed ^ 0xBEEF);
+        let eval_cache = (0..8).map(|_| eval_task.next_batch(batch)).collect();
+        Ok(MlpData { task, eval_cache, batch })
+    }
+}
+
+impl DataSource for MlpData {
+    fn next_train(&mut self) -> (HostTensor, HostTensor) {
+        self.task.next_batch(self.batch)
+    }
+
+    fn eval_batch(&mut self, idx: usize) -> Option<(HostTensor, HostTensor)> {
+        self.eval_cache.get(idx).cloned()
+    }
+}
+
+/// Build the right source for a model's kind.
+pub fn source_for(model: &ModelEntry, seed: u64) -> Result<Box<dyn DataSource>> {
+    Ok(match model.kind.as_str() {
+        "lm" => Box::new(LmData::new(model, CorpusConfig::default(), seed)?),
+        "cnn" => Box::new(ImageData::new(model, seed)?),
+        "mlp" => Box::new(MlpData::new(model, seed)?),
+        k => anyhow::bail!("unknown model kind {k:?}"),
+    })
+}

@@ -1,0 +1,393 @@
+//! The training leader: owns the dense host parameters, the mask
+//! strategy, the optimiser state and the PJRT executables, and drives
+//! the Top-KAST protocol:
+//!
+//!   1. every `refresh_every` steps (paper Appendix C: N=100 works as
+//!      well as N=1) recompute per-layer Top-K masks on the host;
+//!   2. dispatch the AOT train step with (θ, m_fwd, m_bwd, opt, batch);
+//!   3. write back θ/opt and record metrics.
+//!
+//! Baselines (SET/RigL/static/pruning/dense) plug in through the same
+//! `MaskStrategy` interface; RigL additionally triggers the
+//! `grad_norms` artifact at its update steps.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::async_masks::AsyncMaskRefresher;
+use super::metrics::{EvalResult, RunMetrics};
+use super::schedule::LrSchedule;
+use crate::runtime::{client::TensorRef, ModelEntry, Runtime};
+use crate::sparsity::{update_store_masks, MaskStrategy, ParamStore};
+use crate::tensor::{HostTensor, Shape, TensorData};
+use crate::util::rng::Pcg64;
+use crate::util::timer::Stopwatch;
+
+/// A training/eval batch source (one per task family).
+pub trait DataSource: Send {
+    fn next_train(&mut self) -> (HostTensor, HostTensor);
+    /// Deterministic eval stream; None past the last batch.
+    fn eval_batch(&mut self, idx: usize) -> Option<(HostTensor, HostTensor)>;
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainerConfig {
+    pub steps: usize,
+    pub lr: LrSchedule,
+    /// Exploration-regulariser coefficient (paper: weight decay, 1e-4
+    /// for the vision runs).
+    pub reg_scale: f64,
+    /// Mask refresh interval N (Appendix C / Table 6).
+    pub refresh_every: usize,
+    /// Record mask churn every this many steps (Fig 3a).
+    pub churn_every: usize,
+    pub eval_every: Option<usize>,
+    pub eval_batches: usize,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        TrainerConfig {
+            steps: 200,
+            lr: LrSchedule::Constant { base: 0.1 },
+            reg_scale: 1e-4,
+            refresh_every: 1,
+            churn_every: 50,
+            eval_every: None,
+            eval_batches: 8,
+            seed: 0,
+            log_every: 50,
+        }
+    }
+}
+
+pub struct Trainer {
+    pub runtime: Runtime,
+    pub model: ModelEntry,
+    pub store: ParamStore,
+    pub strategy: Box<dyn MaskStrategy>,
+    pub cfg: TrainerConfig,
+    pub metrics: RunMetrics,
+    /// Optimiser slots, ordered (param-major, slot-minor) as the train
+    /// artifact expects.
+    opt: Vec<Vec<f32>>,
+    data: Box<dyn DataSource>,
+    rng: Pcg64,
+    pub step: usize,
+    masks_initialised: bool,
+    /// §2.4 overlap mode: Top-K computed by a background host thread
+    /// from weight snapshots; training proceeds on stale masks.
+    async_refresher: Option<AsyncMaskRefresher>,
+}
+
+impl Trainer {
+    pub fn new(
+        mut runtime: Runtime,
+        model: ModelEntry,
+        strategy: Box<dyn MaskStrategy>,
+        data: Box<dyn DataSource>,
+        cfg: TrainerConfig,
+    ) -> Result<Self> {
+        // compile all three artifacts up front (cached)
+        runtime.load(&model.train)?;
+        runtime.load(&model.eval)?;
+        runtime.load(&model.grad_norms)?;
+
+        let store = ParamStore::init(&model.params, cfg.seed);
+        let slots = model.optimizer.slots();
+        let mut opt = Vec::with_capacity(model.params.len() * slots);
+        for p in &model.params {
+            for _ in 0..slots {
+                opt.push(vec![0.0f32; p.shape.numel()]);
+            }
+        }
+        let rng = Pcg64::new(cfg.seed ^ 0x7A5C, 0xEE);
+        Ok(Trainer {
+            runtime,
+            model,
+            store,
+            strategy,
+            cfg,
+            metrics: RunMetrics::new(),
+            opt,
+            data,
+            rng,
+            step: 0,
+            masks_initialised: false,
+            async_refresher: None,
+        })
+    }
+
+    /// Enable asynchronous mask refresh (paper §2.4). Takes a second
+    /// instance of the (mask-pure, stateless) strategy for the worker
+    /// thread; the trainer's own instance keeps serving density
+    /// queries. Must be called before training starts.
+    pub fn enable_async_refresh(
+        &mut self,
+        worker_strategy: Box<dyn MaskStrategy>,
+    ) -> Result<()> {
+        if self.step != 0 {
+            bail!("enable_async_refresh before training starts");
+        }
+        if worker_strategy.name() != self.strategy.name() {
+            bail!(
+                "worker strategy {:?} != trainer strategy {:?}",
+                worker_strategy.name(),
+                self.strategy.name()
+            );
+        }
+        self.async_refresher = Some(AsyncMaskRefresher::spawn(
+            worker_strategy,
+            self.cfg.seed ^ 0xA57C,
+        )?);
+        Ok(())
+    }
+
+    /// Number of async refreshes applied so far (observability/tests).
+    pub fn async_refreshes_applied(&self) -> Option<usize> {
+        self.async_refresher.as_ref().map(|r| r.applied)
+    }
+
+    /// Forward density of the strategy right now (for inv_d).
+    fn inv_d(&self) -> f32 {
+        let d = self.strategy.densities(self.step, self.cfg.steps).fwd;
+        (1.0 / d.max(1e-6)) as f32
+    }
+
+    /// Recompute masks on the host (the paper's CPU-side Top-K).
+    pub fn refresh_masks(&mut self) -> Result<()> {
+        let sw = Stopwatch::start();
+        let needs_grads = self.strategy.needs_grad_norms(self.step)
+            && self.strategy.wants_update(self.step, self.cfg.steps);
+        let grad_norms = if needs_grads {
+            Some(self.run_grad_norms()?)
+        } else {
+            None
+        };
+        update_store_masks(
+            self.strategy.as_mut(),
+            &mut self.store,
+            grad_norms.as_ref(),
+            &mut self.rng,
+            self.step,
+            self.cfg.steps,
+        )?;
+        if !self.masks_initialised {
+            self.metrics.reservoir.init(&self.store);
+            self.masks_initialised = true;
+        }
+        self.metrics.reservoir.observe(&self.store, self.step);
+        self.metrics.refresh_time.push(sw.elapsed_ms());
+        Ok(())
+    }
+
+    /// Dense |grad| for the RigL baseline, via the dedicated artifact.
+    fn run_grad_norms(&mut self) -> Result<BTreeMap<String, Vec<f32>>> {
+        let (x, y) = self.data.next_train();
+        let mut inputs = self.param_inputs();
+        inputs.extend(self.mask_inputs(true));
+        inputs.push(x);
+        inputs.push(y);
+        let exe = self.runtime.load(&self.model.grad_norms)?;
+        let outs = exe.run(&inputs)?;
+        let mut map = BTreeMap::new();
+        for (t, io) in outs.into_iter().zip(&exe.spec.outputs) {
+            let name = io
+                .name
+                .strip_prefix("g:")
+                .context("grad_norms output name")?;
+            map.insert(name.to_string(), match t.data {
+                TensorData::F32(v) => v,
+                _ => bail!("grad_norms output not f32"),
+            });
+        }
+        Ok(map)
+    }
+
+    fn param_inputs(&self) -> Vec<HostTensor> {
+        self.store.param_tensors()
+    }
+
+    fn mask_inputs(&self, fwd: bool) -> Vec<HostTensor> {
+        if fwd {
+            self.store.fwd_mask_tensors()
+        } else {
+            self.store.bwd_mask_tensors()
+        }
+    }
+
+    /// One training step; returns the batch loss.
+    pub fn train_step(&mut self) -> Result<f64> {
+        // Mask refresh on the paper's N-step cadence (always at step 0).
+        let due = self.step == 0
+            || (self.step % self.cfg.refresh_every == 0
+                && self.strategy.wants_update(self.step, self.cfg.steps));
+        if let Some(refresher) = self.async_refresher.as_mut() {
+            // Overlapped path: install any finished masks, then ship a
+            // fresh snapshot if a refresh is due. Step 0 blocks so the
+            // run never starts on all-ones masks.
+            if self.step == 0 {
+                let sw = Stopwatch::start();
+                refresher.request(&self.store, 0, self.cfg.steps);
+                refresher.wait_install(&mut self.store)?;
+                self.metrics.refresh_time.push(sw.elapsed_ms());
+                self.metrics.reservoir.init(&self.store);
+                self.masks_initialised = true;
+                self.metrics.reservoir.observe(&self.store, 0);
+            } else {
+                if refresher.try_install(&mut self.store)?.is_some() {
+                    self.metrics.reservoir.observe(&self.store, self.step);
+                }
+                if due {
+                    refresher.request(&self.store, self.step, self.cfg.steps);
+                }
+            }
+        } else if due {
+            self.refresh_masks()?;
+        }
+        if self.step % self.cfg.churn_every == 0 {
+            self.metrics.churn.snapshot(&self.store, self.step);
+        }
+
+        let sw = Stopwatch::start();
+        let (x, y) = self.data.next_train();
+        let lr = self.cfg.lr.at(self.step, self.cfg.steps) as f32;
+        let scalars: Vec<[f32; 1]> = vec![
+            [lr],
+            [(self.step + 1) as f32],
+            [self.cfg.reg_scale as f32],
+            [self.inv_d()],
+        ];
+
+        // Zero-clone marshalling (§Perf L3 iteration 2): borrow the
+        // store/opt slices directly; shapes come from the artifact
+        // signature inside run_borrowed.
+        let mut inputs: Vec<TensorRef<'_>> = Vec::with_capacity(
+            self.model.params.len() * (1 + self.model.optimizer.slots())
+                + 2 * self.model.sparse_params().len()
+                + 6,
+        );
+        for e in &self.store.entries {
+            inputs.push(TensorRef::F32(&e.values));
+        }
+        for fwd in [true, false] {
+            for e in &self.store.entries {
+                if let Some(m) = &e.masks {
+                    inputs.push(TensorRef::F32(if fwd { &m.fwd } else { &m.bwd }));
+                }
+            }
+        }
+        for slot in &self.opt {
+            inputs.push(TensorRef::F32(slot));
+        }
+        inputs.push(TensorRef::from(&x));
+        inputs.push(TensorRef::from(&y));
+        for s in &scalars {
+            inputs.push(TensorRef::F32(&s[..]));
+        }
+
+        let exe = self.runtime.load(&self.model.train)?;
+        let outs = exe.run_borrowed(&inputs)?;
+        drop(inputs);
+
+        // outputs: new params (np), new opt (np*slots), loss
+        let np = self.model.params.len();
+        let slots = self.model.optimizer.slots();
+        for (i, out) in outs.iter().take(np).enumerate() {
+            let name = self.model.params[i].name.clone();
+            self.store
+                .set_values(&name, out.as_f32()?.to_vec())
+                .with_context(|| format!("writing back {name}"))?;
+        }
+        for (j, out) in outs[np..np + np * slots].iter().enumerate() {
+            self.opt[j] = out.as_f32()?.to_vec();
+        }
+        let loss = outs.last().context("no loss output")?.as_f32()?[0] as f64;
+
+        self.metrics.losses.push((self.step, loss));
+        self.metrics.step_time.push(sw.elapsed_ms());
+        self.step += 1;
+        Ok(loss)
+    }
+
+
+    /// Run the full configured training loop.
+    pub fn train(&mut self) -> Result<()> {
+        while self.step < self.cfg.steps {
+            let loss = self.train_step()?;
+            if self.step % self.cfg.log_every == 0 || self.step == self.cfg.steps {
+                crate::info!(
+                    "[{}] step {:5}/{} loss {:.4} lr {:.2e} eff-params {}",
+                    self.strategy.name(),
+                    self.step,
+                    self.cfg.steps,
+                    loss,
+                    self.cfg.lr.at(self.step, self.cfg.steps),
+                    self.store.effective_params(),
+                );
+            }
+            if let Some(every) = self.cfg.eval_every {
+                if self.step % every == 0 {
+                    let ev = self.evaluate()?;
+                    self.metrics.evals.push((self.step, ev));
+                    crate::info!(
+                        "[{}] eval @ {}: loss {:.4} acc {:.3} bpc {:.3}",
+                        self.strategy.name(),
+                        self.step,
+                        ev.loss_mean,
+                        ev.accuracy,
+                        ev.bpc
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Evaluate on the data source's deterministic eval stream.
+    pub fn evaluate(&mut self) -> Result<EvalResult> {
+        let mut loss_sum = 0.0f64;
+        let mut metric_sum = 0.0f64;
+        let mut batches = 0usize;
+        for idx in 0..self.cfg.eval_batches {
+            let Some((x, y)) = self.data.eval_batch(idx) else { break };
+            let mut inputs = self.param_inputs();
+            inputs.extend(self.mask_inputs(true));
+            inputs.push(x);
+            inputs.push(y);
+            let exe = self.runtime.load(&self.model.eval)?;
+            let outs = exe.run(&inputs)?;
+            loss_sum += outs[0].as_f32()?[0] as f64;
+            metric_sum += outs[1].as_f32()?[0] as f64;
+            batches += 1;
+        }
+        if batches == 0 {
+            bail!("no eval batches");
+        }
+        Ok(match self.model.kind.as_str() {
+            // metric = token count for LMs, correct count for classifiers
+            "lm" => EvalResult::lm(loss_sum, metric_sum),
+            _ => {
+                let n = batches * self.model.batch_size();
+                EvalResult::classifier(loss_sum, metric_sum, n)
+            }
+        })
+    }
+
+    /// Bytes uploaded per train step (params + masks + opt + batch) —
+    /// the communication-cost model behind the Table-6 discussion.
+    pub fn step_upload_bytes(&self) -> u64 {
+        let p: usize = self.model.params.iter().map(|s| s.shape.numel()).sum();
+        let m: usize = self
+            .model
+            .sparse_params()
+            .iter()
+            .map(|s| s.shape.numel())
+            .sum();
+        let slots = self.model.optimizer.slots();
+        ((p + 2 * m + p * slots) * 4) as u64
+    }
+}

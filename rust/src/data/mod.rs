@@ -1,0 +1,15 @@
+//! Data pipeline: synthetic corpus + image tasks (the offline
+//! substitutes for enwik8/WikiText-103/ImageNet — DESIGN.md §4) and the
+//! batchers shaping them for the AOT artifacts.
+
+pub mod corpus;
+pub mod images;
+pub mod lm_batch;
+pub mod mlp_task;
+pub mod tokenizer;
+
+pub use corpus::{generate as generate_corpus, split as split_corpus, CorpusConfig};
+pub use images::{ImageTask, ImageTaskConfig};
+pub use lm_batch::LmBatcher;
+pub use mlp_task::MlpTask;
+pub use tokenizer::{ByteTokenizer, WordPieceTokenizer};

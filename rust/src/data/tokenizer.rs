@@ -1,0 +1,193 @@
+//! Tokenizers: the text front-end for the LM experiments.
+//!
+//! * `ByteTokenizer` — enwik8-style character-level modelling: printable
+//!   ASCII folded into the 96-symbol vocab the lm configs use.
+//! * `WordPieceTokenizer` — a WikiText-style "word-level-ish" tokenizer:
+//!   a greedy longest-match vocabulary learned from corpus frequency
+//!   (BPE-lite), with byte fallback so coverage is total.
+//!
+//! Both are deterministic and fully invertible over their domains —
+//! `decode(encode(s)) == fold(s)` — which the tests assert.
+
+use std::collections::BTreeMap;
+
+/// Character-level: id = printable byte - 32, everything else folds to
+/// the '~'-slot (95). Matches `data::corpus::VOCAB == 96`.
+#[derive(Clone, Debug, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub const VOCAB: usize = 96;
+
+    pub fn encode(&self, text: &str) -> Vec<u8> {
+        text.bytes()
+            .map(|b| {
+                if (32..127).contains(&b) {
+                    b - 32
+                } else {
+                    94 // fold non-printable / non-ascii to the '~' slot
+                }
+            })
+            .collect()
+    }
+
+    pub fn decode(&self, ids: &[u8]) -> String {
+        ids.iter().map(|&t| ((t.min(95)) + 32) as char).collect()
+    }
+
+    /// Fold: the canonical form encode/decode round-trips to.
+    pub fn fold(&self, text: &str) -> String {
+        self.decode(&self.encode(text))
+    }
+}
+
+/// Greedy longest-match subword tokenizer with byte fallback.
+#[derive(Clone, Debug)]
+pub struct WordPieceTokenizer {
+    /// piece string → id; ids 0..96 are the byte-fold fallback.
+    pieces: BTreeMap<String, u32>,
+    /// id → piece (for decode)
+    by_id: Vec<String>,
+    max_piece_len: usize,
+}
+
+impl WordPieceTokenizer {
+    pub const BYTE_BASE: usize = ByteTokenizer::VOCAB;
+
+    /// Learn a vocabulary of up to `vocab_extra` multi-char pieces from
+    /// the most frequent substrings of the training text (length 2..=8,
+    /// counted on word-ish boundaries).
+    pub fn train(text: &str, vocab_extra: usize) -> Self {
+        let bt = ByteTokenizer;
+        let folded = bt.fold(text);
+        let mut counts: BTreeMap<&str, u64> = BTreeMap::new();
+        let bytes = folded.as_bytes();
+        // count frequent n-grams (cheap surrogate for merge-based BPE;
+        // same effect at this corpus scale: frequent words/phrases get
+        // single ids)
+        for len in 2..=8usize {
+            let mut i = 0;
+            while i + len <= bytes.len() {
+                if let Ok(s) = std::str::from_utf8(&bytes[i..i + len]) {
+                    *counts.entry(s).or_insert(0) += 1;
+                }
+                i += 1;
+            }
+        }
+        let mut ranked: Vec<(&str, u64)> = counts
+            .into_iter()
+            // weight by covered chars so longer pieces win when close
+            .map(|(s, c)| (s, c * s.len() as u64))
+            .collect();
+        ranked.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+
+        let mut pieces = BTreeMap::new();
+        let mut by_id: Vec<String> = (0..Self::BYTE_BASE)
+            .map(|i| ByteTokenizer.decode(&[i as u8]))
+            .collect();
+        let mut max_len = 1;
+        for (s, _) in ranked.into_iter().take(vocab_extra) {
+            let id = by_id.len() as u32;
+            pieces.insert(s.to_string(), id);
+            by_id.push(s.to_string());
+            max_len = max_len.max(s.len());
+        }
+        WordPieceTokenizer { pieces, by_id, max_piece_len: max_len }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.by_id.len()
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let folded = ByteTokenizer.fold(text);
+        let bytes = folded.as_bytes();
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < bytes.len() {
+            let mut matched = false;
+            let max = self.max_piece_len.min(bytes.len() - i);
+            for len in (2..=max).rev() {
+                if let Ok(s) = std::str::from_utf8(&bytes[i..i + len]) {
+                    if let Some(&id) = self.pieces.get(s) {
+                        out.push(id);
+                        i += len;
+                        matched = true;
+                        break;
+                    }
+                }
+            }
+            if !matched {
+                out.push((bytes[i] - 32) as u32); // byte fallback
+                i += 1;
+            }
+        }
+        out
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter()
+            .map(|&id| {
+                self.by_id
+                    .get(id as usize)
+                    .cloned()
+                    .unwrap_or_else(|| "?".into())
+            })
+            .collect()
+    }
+
+    /// Compression ratio on a text: chars per token (>= 1.0; the whole
+    /// point of word-level modelling).
+    pub fn chars_per_token(&self, text: &str) -> f64 {
+        let folded = ByteTokenizer.fold(text);
+        let toks = self.encode(text);
+        if toks.is_empty() {
+            return 1.0;
+        }
+        folded.len() as f64 / toks.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_roundtrip() {
+        let t = ByteTokenizer;
+        let s = "Hello, World! 123 ~";
+        assert_eq!(t.decode(&t.encode(s)), s);
+        // non-printables fold deterministically
+        let folded = t.fold("a\nb\tc");
+        assert_eq!(folded, "a~b~c");
+        assert!(t.encode(s).iter().all(|&id| (id as usize) < ByteTokenizer::VOCAB));
+    }
+
+    #[test]
+    fn wordpiece_roundtrip_and_compression() {
+        let text = "the cat sat on the mat. the cat sat on the mat again. \
+                    the dog sat on the log. the dog sat on the log again."
+            .repeat(20);
+        let tok = WordPieceTokenizer::train(&text, 64);
+        assert!(tok.vocab_size() > WordPieceTokenizer::BYTE_BASE);
+        let ids = tok.encode(&text);
+        assert_eq!(tok.decode(&ids), ByteTokenizer.fold(&text));
+        let cpt = tok.chars_per_token(&text);
+        assert!(cpt > 1.5, "no compression learned: {cpt:.2} chars/token");
+    }
+
+    #[test]
+    fn wordpiece_handles_unseen_text() {
+        let tok = WordPieceTokenizer::train("aaa bbb ccc", 8);
+        let ids = tok.encode("zzz qqq 0xff");
+        assert_eq!(tok.decode(&ids), "zzz qqq 0xff");
+    }
+
+    #[test]
+    fn wordpiece_deterministic() {
+        let text = "deterministic vocabularies are good ".repeat(10);
+        let a = WordPieceTokenizer::train(&text, 32);
+        let b = WordPieceTokenizer::train(&text, 32);
+        assert_eq!(a.encode(&text), b.encode(&text));
+    }
+}

@@ -1,0 +1,28 @@
+//! # Top-KAST: Top-K Always Sparse Training
+//!
+//! A three-layer reproduction of Jayakumar et al., NeurIPS 2020:
+//!
+//! * **Layer 3 (this crate)** — the training coordinator: host-resident
+//!   dense parameters, per-layer magnitude Top-K mask selection
+//!   (refreshed every N steps, §2.4/Appendix C), every baseline
+//!   mask-update strategy (SET, RigL, static, pruning, dense), metrics
+//!   (mask churn, reservoir tracking — Fig 3), the data pipeline, and
+//!   the FLOPs accounting model behind Fig 2.
+//! * **Layer 2 (python/compile/model.py)** — the model compute graphs
+//!   (MLP / char-transformer / CNN) with the Top-KAST train step
+//!   (sparse forward through α = θ⊙m_fwd, gradients restricted to the
+//!   backward set B, exploration regulariser), AOT-lowered to HLO text.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the
+//!   masked matmuls, regulariser and masked optimiser updates.
+//!
+//! Python never runs at training time: the rust binary loads the HLO
+//! artifacts through PJRT and owns the entire training loop.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod runtime;
+pub mod sparsity;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,269 @@
+//! PJRT wrapper: load HLO-text artifacts, compile once, execute many.
+//!
+//! Pattern from /opt/xla-example/load_hlo: text → HloModuleProto →
+//! XlaComputation → PjRtLoadedExecutable. Artifacts are lowered with
+//! return_tuple=True, so every execution yields one tuple literal that
+//! we decompose into the manifest's declared outputs.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, Dtype};
+use crate::tensor::{HostTensor, Shape, TensorData};
+use crate::util::timer::Stopwatch;
+
+/// Shared PJRT client (CPU).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    /// Compiled executables keyed by artifact path.
+    cache: BTreeMap<String, Executable>,
+}
+
+/// One compiled artifact plus its IO signature.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: ArtifactSpec,
+    pub compile_ms: f64,
+}
+
+/// A borrowed input view — lets the coordinator marshal directly from
+/// the parameter store / mask buffers without cloning into HostTensors
+/// (the clone was ~30 MB/step for lm_small). Shapes come from the
+/// artifact signature; only element counts are validated here.
+#[derive(Clone, Copy)]
+pub enum TensorRef<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl<'a> TensorRef<'a> {
+    fn len(&self) -> usize {
+        match self {
+            TensorRef::F32(v) => v.len(),
+            TensorRef::I32(v) => v.len(),
+        }
+    }
+}
+
+impl<'a> From<&'a HostTensor> for TensorRef<'a> {
+    fn from(t: &'a HostTensor) -> Self {
+        match &t.data {
+            TensorData::F32(v) => TensorRef::F32(v),
+            TensorData::I32(v) => TensorRef::I32(v),
+        }
+    }
+}
+
+impl Runtime {
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, cache: BTreeMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached by path).
+    pub fn load(&mut self, spec: &ArtifactSpec) -> Result<&Executable> {
+        let key = spec.file.to_string_lossy().to_string();
+        if !self.cache.contains_key(&key) {
+            let exe = self.compile(spec)?;
+            self.cache.insert(key.clone(), exe);
+        }
+        Ok(&self.cache[&key])
+    }
+
+    fn compile(&self, spec: &ArtifactSpec) -> Result<Executable> {
+        let path: &Path = &spec.file;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.compile_computation(&comp, spec)
+    }
+
+    /// Compile an already-built XlaComputation against an IO signature
+    /// (used by tests and by synthetic probe programs).
+    pub fn compile_computation(
+        &self,
+        comp: &xla::XlaComputation,
+        spec: &ArtifactSpec,
+    ) -> Result<Executable> {
+        let sw = Stopwatch::start();
+        let exe = self
+            .client
+            .compile(comp)
+            .with_context(|| format!("compiling {:?}", spec.file))?;
+        crate::debug!(
+            "compiled {} in {:.0} ms",
+            spec.file.file_name().unwrap_or_default().to_string_lossy(),
+            sw.elapsed_ms()
+        );
+        Ok(Executable { exe, spec: spec.clone(), compile_ms: sw.elapsed_ms() })
+    }
+}
+
+impl Executable {
+    /// Execute with host tensors; returns outputs in manifest order.
+    ///
+    /// Inputs are validated against the artifact signature — a mismatch
+    /// here is a coordinator bug, and XLA's own error would be opaque.
+    ///
+    /// Uploads go through `buffer_from_host_buffer` + `execute_b` rather
+    /// than `execute(literals)`: the vendored xla_rs shim's `execute`
+    /// leaks every input buffer it creates (`buffer.release()` with no
+    /// owner — ~2 MB/step for lm_tiny, OOM-killing long sweeps), and the
+    /// literal path also costs an extra host copy. Rust-owned
+    /// `PjRtBuffer`s drop (and free) deterministically.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        for (t, io) in inputs.iter().zip(&self.spec.inputs) {
+            if t.shape != io.shape {
+                bail!(
+                    "input {:?}: shape {} != expected {}",
+                    io.name,
+                    t.shape,
+                    io.shape
+                );
+            }
+        }
+        let refs: Vec<TensorRef<'_>> = inputs.iter().map(TensorRef::from).collect();
+        self.run_borrowed(&refs)
+    }
+
+    /// Zero-clone execution path: upload straight from borrowed slices.
+    pub fn run_borrowed(&self, inputs: &[TensorRef<'_>]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{:?}: expected {} inputs, got {}",
+                self.spec.file.file_name().unwrap_or_default(),
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let client = self.exe.client();
+        let mut buffers = Vec::with_capacity(inputs.len());
+        for (t, io) in inputs.iter().zip(&self.spec.inputs) {
+            if t.len() != io.shape.numel() {
+                bail!(
+                    "input {:?}: {} elements != expected shape {}",
+                    io.name,
+                    t.len(),
+                    io.shape
+                );
+            }
+            let buf = match (t, io.dtype) {
+                (TensorRef::F32(v), Dtype::F32) => {
+                    client.buffer_from_host_buffer::<f32>(v, io.shape.dims(), None)?
+                }
+                (TensorRef::I32(v), Dtype::I32) => {
+                    client.buffer_from_host_buffer::<i32>(v, io.shape.dims(), None)?
+                }
+                (d, want) => bail!(
+                    "input {:?}: dtype mismatch: host tensor is {}, artifact wants {want:?}",
+                    io.name,
+                    match d {
+                        TensorRef::F32(_) => "f32",
+                        TensorRef::I32(_) => "i32",
+                    }
+                ),
+            };
+            buffers.push(buf);
+        }
+        let result = self.exe.execute_b(&buffers)?;
+        drop(buffers); // free device-side inputs eagerly
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = tuple.to_tuple().context("decomposing result tuple")?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "expected {} outputs, got {}",
+                self.spec.outputs.len(),
+                parts.len()
+            );
+        }
+        let mut outs = Vec::with_capacity(parts.len());
+        for (lit, io) in parts.into_iter().zip(&self.spec.outputs) {
+            outs.push(from_literal(&lit, &io.shape, io.dtype)?);
+        }
+        Ok(outs)
+    }
+}
+
+fn from_literal(lit: &xla::Literal, shape: &Shape, dtype: Dtype) -> Result<HostTensor> {
+    let data = match dtype {
+        Dtype::F32 => TensorData::F32(lit.to_vec::<f32>()?),
+        Dtype::I32 => TensorData::I32(lit.to_vec::<i32>()?),
+    };
+    let n = match &data {
+        TensorData::F32(v) => v.len(),
+        TensorData::I32(v) => v.len(),
+    };
+    if n != shape.numel() {
+        bail!("output size {n} != declared shape {shape}");
+    }
+    Ok(HostTensor { shape: shape.clone(), data })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::IoSpec;
+
+    /// A trivial in-memory computation (tuple(x + y) over f32[2,2]) so
+    /// the runtime plumbing can be tested without python-built artifacts.
+    fn tiny_executable(rt: &Runtime) -> Executable {
+        let b = xla::XlaBuilder::new("add");
+        let shape = xla::Shape::array::<f32>(vec![2, 2]);
+        let x = b.parameter_s(0, &shape, "x").unwrap();
+        let y = b.parameter_s(1, &shape, "y").unwrap();
+        let sum = (x + y).unwrap();
+        let tup = b.tuple(&[sum]).unwrap();
+        let comp = tup.build().unwrap();
+        let spec = ArtifactSpec {
+            file: std::path::PathBuf::from("<in-memory add>"),
+            inputs: vec![
+                IoSpec { name: "x".into(), shape: Shape::new(&[2, 2]), dtype: Dtype::F32 },
+                IoSpec { name: "y".into(), shape: Shape::new(&[2, 2]), dtype: Dtype::F32 },
+            ],
+            outputs: vec![IoSpec {
+                name: "sum".into(),
+                shape: Shape::new(&[2, 2]),
+                dtype: Dtype::F32,
+            }],
+        };
+        rt.compile_computation(&comp, &spec).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_tiny_computation() {
+        let rt = Runtime::new().unwrap();
+        let exe = tiny_executable(&rt);
+        let x = HostTensor::from_f32(Shape::new(&[2, 2]), vec![1.0, 2.0, 3.0, 4.0])
+            .unwrap();
+        let y = HostTensor::from_f32(Shape::new(&[2, 2]), vec![10.0, 20.0, 30.0, 40.0])
+            .unwrap();
+        let out = exe.run(&[x, y]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].as_f32().unwrap(), &[11.0, 22.0, 33.0, 44.0]);
+    }
+
+    #[test]
+    fn input_validation() {
+        let rt = Runtime::new().unwrap();
+        let exe = tiny_executable(&rt);
+        // wrong arity
+        assert!(exe.run(&[]).is_err());
+        // wrong shape
+        let bad = HostTensor::from_f32(Shape::new(&[4]), vec![0.0; 4]).unwrap();
+        let ok = HostTensor::zeros(Shape::new(&[2, 2]));
+        assert!(exe.run(&[bad, ok.clone()]).is_err());
+        // wrong dtype
+        let badt = HostTensor::from_i32(Shape::new(&[2, 2]), vec![0; 4]).unwrap();
+        assert!(exe.run(&[badt, ok]).is_err());
+    }
+}

@@ -1,0 +1,272 @@
+//! artifacts/manifest.json — the contract between the python compile
+//! path and this runtime. Mirrors python/compile/specs.py + aot.py.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Shape;
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InitKind {
+    Normal,
+    Uniform,
+    Zeros,
+    Ones,
+}
+
+impl InitKind {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "normal" => InitKind::Normal,
+            "uniform" => InitKind::Uniform,
+            "zeros" => InitKind::Zeros,
+            "ones" => InitKind::Ones,
+            _ => bail!("unknown init kind {s:?}"),
+        })
+    }
+}
+
+/// One parameter tensor (python ParamSpec).
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Shape,
+    pub init: InitKind,
+    pub init_scale: f32,
+    pub sparse: bool,
+    /// multiply-accumulates per example in the forward pass (FLOPs model)
+    pub mac: u64,
+}
+
+/// One runtime input/output of an artifact (python IoSpec).
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Shape,
+    pub dtype: Dtype,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+/// One lowered HLO artifact (train / eval / grad_norms).
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: PathBuf,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Optimizer {
+    Sgd,
+    Adam,
+}
+
+impl Optimizer {
+    pub fn slots(&self) -> usize {
+        match self {
+            Optimizer::Sgd => 1,
+            Optimizer::Adam => 2,
+        }
+    }
+}
+
+/// Everything the coordinator needs to drive one model configuration.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub kind: String, // "mlp" | "lm" | "cnn"
+    pub optimizer: Optimizer,
+    pub params: Vec<ParamSpec>,
+    pub train: ArtifactSpec,
+    pub eval: ArtifactSpec,
+    pub grad_norms: ArtifactSpec,
+    /// Raw config map (batch_size, seq_len, vocab, classes...).
+    pub config: BTreeMap<String, Json>,
+}
+
+impl ModelEntry {
+    pub fn cfg_usize(&self, key: &str) -> Result<usize> {
+        self.config
+            .get(key)
+            .with_context(|| format!("model {}: missing config {key:?}", self.name))?
+            .as_usize()
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.cfg_usize("batch_size").unwrap_or(0)
+    }
+
+    pub fn sparse_params(&self) -> Vec<&ParamSpec> {
+        self.params.iter().filter(|p| p.sparse).collect()
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.params.iter().map(|p| p.shape.numel()).sum()
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+        if root.get("format")?.as_usize()? != 1 {
+            bail!("unsupported manifest format");
+        }
+        let mut models = BTreeMap::new();
+        for (name, entry) in root.get("models")?.as_obj()? {
+            models.insert(
+                name.clone(),
+                parse_model(name, entry, &dir)
+                    .with_context(|| format!("model {name:?}"))?,
+            );
+        }
+        Ok(Manifest { dir, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models.get(name).with_context(|| {
+            format!(
+                "unknown model {name:?}; available: {:?}",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+fn parse_model(name: &str, v: &Json, dir: &Path) -> Result<ModelEntry> {
+    let params = v
+        .get("params")?
+        .as_arr()?
+        .iter()
+        .map(parse_param)
+        .collect::<Result<Vec<_>>>()?;
+    let optimizer = match v.get("optimizer")?.as_str()? {
+        "sgd" => Optimizer::Sgd,
+        "adam" => Optimizer::Adam,
+        o => bail!("unknown optimizer {o:?}"),
+    };
+    let arts = v.get("artifacts")?;
+    Ok(ModelEntry {
+        name: name.to_string(),
+        kind: v.get("kind")?.as_str()?.to_string(),
+        optimizer,
+        params,
+        train: parse_artifact(arts.get("train")?, dir)?,
+        eval: parse_artifact(arts.get("eval")?, dir)?,
+        grad_norms: parse_artifact(arts.get("grad_norms")?, dir)?,
+        config: v.get("config")?.as_obj()?.clone(),
+    })
+}
+
+fn parse_param(v: &Json) -> Result<ParamSpec> {
+    let dims: Vec<usize> = v
+        .get("shape")?
+        .as_arr()?
+        .iter()
+        .map(|d| d.as_usize())
+        .collect::<Result<_>>()?;
+    Ok(ParamSpec {
+        name: v.get("name")?.as_str()?.to_string(),
+        shape: Shape(dims),
+        init: InitKind::parse(v.get("init")?.as_str()?)?,
+        init_scale: v.get("init_scale")?.as_f64()? as f32,
+        sparse: v.get("sparse")?.as_bool()?,
+        mac: v.get("mac")?.as_f64()? as u64,
+    })
+}
+
+fn parse_io(v: &Json) -> Result<IoSpec> {
+    let dims: Vec<usize> = v
+        .get("shape")?
+        .as_arr()?
+        .iter()
+        .map(|d| d.as_usize())
+        .collect::<Result<_>>()?;
+    Ok(IoSpec {
+        name: v.get("name")?.as_str()?.to_string(),
+        shape: Shape(dims),
+        dtype: match v.get("dtype")?.as_str()? {
+            "f32" => Dtype::F32,
+            "i32" => Dtype::I32,
+            d => bail!("unknown dtype {d:?}"),
+        },
+    })
+}
+
+fn parse_artifact(v: &Json, dir: &Path) -> Result<ArtifactSpec> {
+    Ok(ArtifactSpec {
+        file: dir.join(v.get("file")?.as_str()?),
+        inputs: v
+            .get("inputs")?
+            .as_arr()?
+            .iter()
+            .map(parse_io)
+            .collect::<Result<_>>()?,
+        outputs: v
+            .get("outputs")?
+            .as_arr()?
+            .iter()
+            .map(parse_io)
+            .collect::<Result<_>>()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art_dir() -> PathBuf {
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Ok(man) = Manifest::load(art_dir()) else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert!(man.models.len() >= 5);
+        let lm = man.model("lm_tiny").unwrap();
+        assert_eq!(lm.kind, "lm");
+        assert_eq!(lm.optimizer, Optimizer::Adam);
+        assert!(lm.total_params() > 50_000);
+        assert!(!lm.sparse_params().is_empty());
+        // train IO convention: params + 2*masks + slots*params + x,y + 4 scalars
+        let np = lm.params.len();
+        let ns = lm.sparse_params().len();
+        assert_eq!(
+            lm.train.inputs.len(),
+            np + 2 * ns + lm.optimizer.slots() * np + 2 + 4
+        );
+        assert_eq!(lm.train.outputs.last().unwrap().name, "loss");
+        // artifacts exist on disk
+        assert!(lm.train.file.exists());
+        assert!(lm.eval.file.exists());
+        assert!(lm.grad_norms.file.exists());
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        if let Ok(man) = Manifest::load(art_dir()) {
+            assert!(man.model("nope").is_err());
+        }
+    }
+}

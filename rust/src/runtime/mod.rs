@@ -1,0 +1,17 @@
+//! Runtime: the xla crate (PJRT C API) wrapper that loads the AOT HLO
+//! artifacts and executes them from the coordinator's hot path.
+//!
+//! Flow (see /opt/xla-example/load_hlo): HLO *text* →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. Text is the interchange format
+//! because jax ≥ 0.5 emits 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects in proto form.
+
+pub mod client;
+pub mod manifest;
+
+pub use client::{Executable, Runtime};
+pub use manifest::{
+    ArtifactSpec, Dtype, InitKind, IoSpec, Manifest, ModelEntry, Optimizer,
+    ParamSpec,
+};

@@ -1,0 +1,152 @@
+//! The FLOPs accounting model behind Fig 2's x-axis.
+//!
+//! The paper compares methods at matched *training FLOPs*, computed
+//! analytically from layer shapes and densities (its own evaluation ran
+//! on dense hardware with masks, like ours — the x-axis is a model, not
+//! a measurement). Convention (matching RigL's appendix):
+//!
+//!   forward          ≈ 2 · mac · d_fwd
+//!   backward (dx)    ≈ 2 · mac · d_fwd
+//!   backward (dw)    ≈ 2 · mac · d_bwd
+//!
+//! so a dense step costs 6·mac and a Top-KAST step costs
+//! 2·mac·(2·d_fwd + d_bwd). Dense tensors (first/last layers, biases)
+//! contribute at density 1.
+
+use crate::runtime::manifest::ParamSpec;
+use crate::sparsity::strategy::MaskStrategy;
+
+/// FLOPs per example for one training step at the given densities.
+pub fn step_flops(specs: &[ParamSpec], d_fwd: f64, d_bwd: f64) -> f64 {
+    let mut total = 0.0;
+    for s in specs {
+        let mac = s.mac as f64;
+        if mac == 0.0 {
+            continue;
+        }
+        let (df, db) = if s.sparse { (d_fwd, d_bwd) } else { (1.0, 1.0) };
+        total += 2.0 * mac * (2.0 * df + db);
+    }
+    total
+}
+
+/// Inference FLOPs per example at a forward density.
+pub fn inference_flops(specs: &[ParamSpec], d_fwd: f64) -> f64 {
+    specs
+        .iter()
+        .map(|s| {
+            let df = if s.sparse { d_fwd } else { 1.0 };
+            2.0 * s.mac as f64 * df
+        })
+        .sum()
+}
+
+/// Whole-run training FLOPs for a strategy, integrating its schedule
+/// (pruning's density ramp, RigL's amortised dense gradients). Returned
+/// as a fraction of the dense run's FLOPs — exactly Fig 2(a)'s x-axis.
+pub fn run_flops_fraction(
+    strategy: &dyn MaskStrategy,
+    specs: &[ParamSpec],
+    total_steps: usize,
+    train_multiplier: f64,
+) -> f64 {
+    let dense = step_flops(specs, 1.0, 1.0) * total_steps as f64;
+    if dense == 0.0 {
+        return 0.0;
+    }
+    // integrate in 100 buckets (schedules are smooth)
+    let buckets = 100usize;
+    let mut total = 0.0;
+    for b in 0..buckets {
+        let step = b * total_steps / buckets;
+        let d = strategy.densities(step, total_steps);
+        total += step_flops(specs, d.fwd, d.bwd) * (total_steps as f64 / buckets as f64);
+    }
+    // RigL-style amortised dense gradients enter via avg_backward_density
+    let avg_bwd = strategy.avg_backward_density(total_steps);
+    let nominal_bwd = strategy.densities(total_steps / 2, total_steps).bwd;
+    if avg_bwd > nominal_bwd {
+        for s in specs.iter().filter(|s| s.sparse) {
+            total +=
+                2.0 * s.mac as f64 * (avg_bwd - nominal_bwd) * total_steps as f64;
+        }
+    }
+    train_multiplier * total / dense
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::InitKind;
+    use crate::sparsity::pruning::Dense;
+    use crate::sparsity::topkast::TopKast;
+    use crate::tensor::Shape;
+
+    fn specs() -> Vec<ParamSpec> {
+        vec![
+            ParamSpec {
+                name: "w1".into(),
+                shape: Shape::new(&[10, 10]),
+                init: InitKind::Normal,
+                init_scale: 0.1,
+                sparse: true,
+                mac: 100,
+            },
+            ParamSpec {
+                name: "w_dense".into(),
+                shape: Shape::new(&[10, 10]),
+                init: InitKind::Normal,
+                init_scale: 0.1,
+                sparse: false,
+                mac: 50,
+            },
+            ParamSpec {
+                name: "b".into(),
+                shape: Shape::new(&[10]),
+                init: InitKind::Zeros,
+                init_scale: 0.0,
+                sparse: false,
+                mac: 0,
+            },
+        ]
+    }
+
+    #[test]
+    fn dense_step_is_6mac() {
+        let f = step_flops(&specs(), 1.0, 1.0);
+        assert_eq!(f, 6.0 * 150.0);
+    }
+
+    #[test]
+    fn sparse_scales_with_densities() {
+        // sparse tensor at d_f=0.1, d_b=0.5: 2*100*(0.2+0.5)=140
+        // dense tensor: 6*50 = 300
+        let f = step_flops(&specs(), 0.1, 0.5);
+        assert!((f - 440.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn inference_only_counts_forward() {
+        assert_eq!(inference_flops(&specs(), 0.5), 2.0 * (100.0 * 0.5 + 50.0));
+    }
+
+    #[test]
+    fn dense_fraction_is_one() {
+        let d = Dense;
+        let frac = run_flops_fraction(&d, &specs(), 1000, 1.0);
+        assert!((frac - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn topkast_fraction_below_one_and_ordered() {
+        let lo = TopKast::from_sparsities(0.8, 0.8); // sparsest valid bwd (B = A)
+        let hi = TopKast::from_sparsities(0.8, 0.0); // dense bwd
+        let f_lo = run_flops_fraction(&lo, &specs(), 1000, 1.0);
+        let f_hi = run_flops_fraction(&hi, &specs(), 1000, 1.0);
+        assert!(f_lo < f_hi, "sparser backward must cost less");
+        assert!(f_hi < 1.0, "sparse fwd still cheaper than dense");
+        // doubling training time doubles cost
+        let f2 = run_flops_fraction(&lo, &specs(), 1000, 2.0);
+        assert!((f2 - 2.0 * f_lo).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,115 @@
+//! Sparsity: host-side Top-K, the dense parameter store, and every
+//! mask-update strategy the paper evaluates (Top-KAST + all baselines).
+
+pub mod flops;
+pub mod pruning;
+pub mod rigl;
+pub mod set_evolve;
+pub mod static_random;
+pub mod store;
+pub mod strategy;
+pub mod topk;
+pub mod topkast;
+
+pub use pruning::{Dense, MagnitudePruning};
+pub use rigl::RigL;
+pub use set_evolve::SetEvolve;
+pub use static_random::StaticRandom;
+pub use store::{MaskPair, ParamEntry, ParamStore};
+pub use strategy::{update_store_masks, Densities, MaskStrategy, TensorCtx};
+pub use topkast::{TopKast, TopKastRandom};
+
+use anyhow::{bail, Result};
+
+/// Build a strategy from a config string, e.g.
+///   "topkast:0.8,0.5"           (fwd sparsity 80%, bwd sparsity 50%)
+///   "topkast_random:0.9,0.8"
+///   "static:0.8"                (sparsity 80%)
+///   "set:0.8,0.3"               (sparsity, drop fraction)
+///   "rigl:0.8,0.3,100"          (sparsity, drop fraction, update every)
+///   "pruning:0.8"               (final sparsity)
+///   "dense"
+/// Sparsities follow the paper's notation (fraction of *zero* weights).
+pub fn strategy_from_str(s: &str) -> Result<Box<dyn MaskStrategy>> {
+    let (name, args) = match s.split_once(':') {
+        Some((n, a)) => (n, a),
+        None => (s, ""),
+    };
+    let nums: Vec<f64> = if args.is_empty() {
+        vec![]
+    } else {
+        args.split(',')
+            .map(|x| x.trim().parse::<f64>())
+            .collect::<std::result::Result<_, _>>()?
+    };
+    let need = |n: usize| -> Result<()> {
+        if nums.len() != n {
+            bail!("strategy {name:?} needs {n} args, got {}", nums.len());
+        }
+        Ok(())
+    };
+    Ok(match name {
+        "dense" => Box::new(Dense),
+        "topkast" => {
+            need(2)?;
+            Box::new(TopKast::from_sparsities(nums[0], nums[1]))
+        }
+        "topkast_random" => {
+            need(2)?;
+            Box::new(TopKastRandom::new(1.0 - nums[0], 1.0 - nums[1]))
+        }
+        "static" => {
+            need(1)?;
+            Box::new(StaticRandom::new(1.0 - nums[0]))
+        }
+        "set" => {
+            need(2)?;
+            Box::new(SetEvolve::new(1.0 - nums[0], nums[1], 0.05))
+        }
+        "rigl" => {
+            need(3)?;
+            Box::new(RigL::new(1.0 - nums[0], nums[1], nums[2] as usize))
+        }
+        "pruning" => {
+            need(1)?;
+            Box::new(MagnitudePruning::new(1.0 - nums[0]))
+        }
+        _ => bail!("unknown strategy {name:?}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_strategies() {
+        for (s, want) in [
+            ("dense", "dense"),
+            ("topkast:0.8,0.5", "topkast"),
+            ("topkast_random:0.9,0.8", "topkast_random"),
+            ("static:0.8", "static"),
+            ("set:0.8,0.3", "set"),
+            ("rigl:0.8,0.3,100", "rigl"),
+            ("pruning:0.8", "pruning"),
+        ] {
+            assert_eq!(strategy_from_str(s).unwrap().name(), want);
+        }
+    }
+
+    #[test]
+    fn sparsity_notation_converts_to_density() {
+        let s = strategy_from_str("topkast:0.8,0.5").unwrap();
+        let d = s.densities(0, 100);
+        assert!((d.fwd - 0.2).abs() < 1e-12);
+        assert!((d.bwd - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(strategy_from_str("topkast:0.8").is_err());
+        assert!(strategy_from_str("nope").is_err());
+        assert!(strategy_from_str("rigl:0.8").is_err());
+        assert!(strategy_from_str("set:a,b").is_err());
+    }
+}

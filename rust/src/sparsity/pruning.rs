@@ -1,0 +1,160 @@
+//! Gradual magnitude pruning (Zhu & Gupta, 2018) — the dense-to-sparse
+//! baseline the paper uses throughout ("Magnitude Pruning is simple and
+//! effective and we use it as a baseline representative of this class").
+//!
+//! Forward density follows the cubic schedule from 1.0 down to the
+//! target; the backward pass stays dense (that is the class's defining
+//! cost — it cannot train a model bigger than the densest step).
+
+use anyhow::Result;
+
+use super::strategy::{Densities, MaskStrategy, TensorCtx};
+use super::topk::{k_for_density, topk_mask_into};
+
+#[derive(Clone, Debug)]
+pub struct MagnitudePruning {
+    /// Final density (1 - final sparsity).
+    pub d_final: f64,
+    /// Pruning begins/ends at these fractions of total steps.
+    pub t_start_frac: f64,
+    pub t_end_frac: f64,
+}
+
+impl MagnitudePruning {
+    pub fn new(d_final: f64) -> Self {
+        MagnitudePruning { d_final, t_start_frac: 0.1, t_end_frac: 0.8 }
+    }
+
+    /// Zhu–Gupta cubic sparsity ramp.
+    pub fn density_at(&self, step: usize, total: usize) -> f64 {
+        let t0 = self.t_start_frac * total as f64;
+        let t1 = self.t_end_frac * total as f64;
+        let s_final = 1.0 - self.d_final;
+        let s = if (step as f64) < t0 {
+            0.0
+        } else if (step as f64) >= t1 {
+            s_final
+        } else {
+            let frac = (step as f64 - t0) / (t1 - t0).max(1.0);
+            s_final * (1.0 - (1.0 - frac).powi(3))
+        };
+        1.0 - s
+    }
+}
+
+impl MaskStrategy for MagnitudePruning {
+    fn name(&self) -> &'static str {
+        "pruning"
+    }
+
+    fn densities(&self, step: usize, total: usize) -> Densities {
+        Densities { fwd: self.density_at(step, total), bwd: 1.0 }
+    }
+
+    fn update_tensor(&mut self, ctx: TensorCtx<'_>) -> Result<()> {
+        let n = ctx.weights.len();
+        let d = self.density_at(ctx.step, ctx.total_steps);
+        let k = k_for_density(n, d);
+        topk_mask_into(ctx.weights, k, ctx.mask_fwd);
+        // dense backward: every unit keeps learning (set B = everything)
+        ctx.mask_bwd.fill(1.0);
+        Ok(())
+    }
+}
+
+/// Fully dense training (the reference model in every table).
+#[derive(Clone, Debug, Default)]
+pub struct Dense;
+
+impl MaskStrategy for Dense {
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+
+    fn densities(&self, _step: usize, _total: usize) -> Densities {
+        Densities { fwd: 1.0, bwd: 1.0 }
+    }
+
+    fn wants_update(&self, step: usize, _total: usize) -> bool {
+        step == 0
+    }
+
+    fn update_tensor(&mut self, ctx: TensorCtx<'_>) -> Result<()> {
+        ctx.mask_fwd.fill(1.0);
+        ctx.mask_bwd.fill(1.0);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn cubic_schedule_shape() {
+        let p = MagnitudePruning::new(0.1);
+        let total = 1000;
+        assert_eq!(p.density_at(0, total), 1.0);
+        assert_eq!(p.density_at(99, total), 1.0); // before t_start
+        let mid = p.density_at(450, total);
+        assert!(mid < 1.0 && mid > 0.1);
+        assert!((p.density_at(800, total) - 0.1).abs() < 1e-9);
+        assert!((p.density_at(999, total) - 0.1).abs() < 1e-9);
+        // monotone non-increasing
+        let mut last = 1.0;
+        for s in (0..1000).step_by(50) {
+            let d = p.density_at(s, total);
+            assert!(d <= last + 1e-12);
+            last = d;
+        }
+    }
+
+    #[test]
+    fn prunes_smallest_magnitudes_with_dense_backward() {
+        let mut p = MagnitudePruning::new(0.2);
+        let n = 50;
+        let mut w: Vec<f32> = (0..n).map(|i| i as f32 - 25.0).collect();
+        let (mut mf, mut mb) = (vec![0.0; n], vec![0.0; n]);
+        let mut rng = Pcg64::seeded(0);
+        p.update_tensor(TensorCtx {
+            name: "t",
+            weights: &mut w,
+            mask_fwd: &mut mf,
+            mask_bwd: &mut mb,
+            grad_norms: None,
+            rng: &mut rng,
+            step: 900,
+            total_steps: 1000,
+        })
+        .unwrap();
+        assert_eq!(mf.iter().filter(|&&x| x == 1.0).count(), 10);
+        assert!(mb.iter().all(|&x| x == 1.0), "pruning backward is dense");
+        // weight 0 (magnitude 25) must be kept; weight near 25 (mag ~0) dropped
+        assert_eq!(mf[0], 1.0);
+        assert_eq!(mf[25], 0.0);
+    }
+
+    #[test]
+    fn dense_is_all_ones() {
+        let mut d = Dense;
+        let n = 10;
+        let mut w = vec![0.0f32; n];
+        let (mut mf, mut mb) = (vec![0.0; n], vec![0.0; n]);
+        let mut rng = Pcg64::seeded(0);
+        d.update_tensor(TensorCtx {
+            name: "t",
+            weights: &mut w,
+            mask_fwd: &mut mf,
+            mask_bwd: &mut mb,
+            grad_norms: None,
+            rng: &mut rng,
+            step: 0,
+            total_steps: 1,
+        })
+        .unwrap();
+        assert!(mf.iter().all(|&x| x == 1.0));
+        assert!(mb.iter().all(|&x| x == 1.0));
+        assert_eq!(d.densities(0, 1), Densities { fwd: 1.0, bwd: 1.0 });
+    }
+}

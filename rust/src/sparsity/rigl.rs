@@ -1,0 +1,241 @@
+//! RigL — Rigging the Lottery (Evci et al., 2020), the strongest
+//! sparse-to-sparse baseline in Fig 2: drop lowest-|w| active
+//! connections, grow the inactive connections with the largest |grad|.
+//!
+//! The dense gradient RigL occasionally needs is exactly the part the
+//! paper's Appendix C argues is awkward inside DL frameworks; here it is
+//! explicit: the coordinator runs the dedicated `grad_norms` artifact at
+//! RigL update steps and hands the magnitudes to this strategy.
+
+use anyhow::Result;
+
+use super::strategy::{Densities, MaskStrategy, TensorCtx};
+use super::topk::k_for_density;
+
+#[derive(Clone, Debug)]
+pub struct RigL {
+    pub density: f64,
+    /// Initial drop/grow fraction (cosine-annealed to 0 at t_end).
+    pub drop_fraction: f64,
+    /// Mask updates happen every `update_every` steps until `t_end_frac`
+    /// of training, after which the mask freezes (RigL's schedule).
+    pub update_every: usize,
+    pub t_end_frac: f64,
+    initialised: bool,
+}
+
+impl RigL {
+    pub fn new(density: f64, drop_fraction: f64, update_every: usize) -> Self {
+        RigL {
+            density,
+            drop_fraction,
+            update_every,
+            t_end_frac: 0.75,
+            initialised: false,
+        }
+    }
+
+    fn updating(&self, step: usize, total: usize) -> bool {
+        step < (self.t_end_frac * total as f64) as usize
+    }
+
+    fn drop_frac_at(&self, step: usize, total: usize) -> f64 {
+        let t_end = (self.t_end_frac * total as f64).max(1.0);
+        let t = (step as f64 / t_end).min(1.0);
+        self.drop_fraction * 0.5 * (1.0 + (std::f64::consts::PI * t).cos())
+    }
+}
+
+impl MaskStrategy for RigL {
+    fn name(&self) -> &'static str {
+        "rigl"
+    }
+
+    fn densities(&self, _step: usize, _total: usize) -> Densities {
+        Densities { fwd: self.density, bwd: self.density }
+    }
+
+    fn needs_grad_norms(&self, step: usize) -> bool {
+        // Needed at every genuine update step (not at init).
+        step > 0
+    }
+
+    fn wants_update(&self, step: usize, total: usize) -> bool {
+        if !self.initialised || step == 0 {
+            return true;
+        }
+        self.updating(step, total) && step % self.update_every == 0
+    }
+
+    fn avg_backward_density(&self, total_steps: usize) -> f64 {
+        // Between updates the backward touches only active units (d);
+        // at update steps a dense gradient is materialised (density 1).
+        // Average over the updating phase, then the frozen tail.
+        let updates = ((self.t_end_frac * total_steps as f64)
+            / self.update_every as f64)
+            .floor();
+        let dense_frac = (updates / total_steps.max(1) as f64).min(1.0);
+        self.density * (1.0 - dense_frac) + 1.0 * dense_frac
+    }
+
+    fn update_tensor(&mut self, ctx: TensorCtx<'_>) -> Result<()> {
+        let n = ctx.weights.len();
+        let k = k_for_density(n, self.density);
+
+        if !self.initialised || ctx.step == 0 {
+            ctx.mask_fwd.fill(0.0);
+            for i in ctx.rng.sample_indices(n, k) {
+                ctx.mask_fwd[i] = 1.0;
+            }
+            ctx.mask_bwd.copy_from_slice(ctx.mask_fwd);
+            self.initialised = true;
+            return Ok(());
+        }
+        if !self.updating(ctx.step, ctx.total_steps) {
+            return Ok(());
+        }
+        let grads = match ctx.grad_norms {
+            Some(g) => g,
+            None => anyhow::bail!(
+                "RigL update at step {} without grad_norms for {}",
+                ctx.step,
+                ctx.name
+            ),
+        };
+        debug_assert_eq!(grads.len(), n);
+
+        let mut active: Vec<usize> =
+            (0..n).filter(|&i| ctx.mask_fwd[i] == 1.0).collect();
+        let n_drop = ((active.len() as f64)
+            * self.drop_frac_at(ctx.step, ctx.total_steps))
+        .round() as usize;
+        let n_drop = n_drop.min(active.len());
+        if n_drop == 0 {
+            return Ok(());
+        }
+
+        // Drop lowest |w| among active.
+        active.sort_by(|&a, &b| {
+            ctx.weights[a]
+                .abs()
+                .partial_cmp(&ctx.weights[b].abs())
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        for &i in active.iter().take(n_drop) {
+            ctx.mask_fwd[i] = 0.0;
+            ctx.weights[i] = 0.0;
+        }
+
+        // Grow highest |grad| among (now-)inactive; new weights start at
+        // zero (RigL's convention — they receive momentum immediately).
+        let mut inactive: Vec<usize> =
+            (0..n).filter(|&i| ctx.mask_fwd[i] == 0.0).collect();
+        inactive.sort_by(|&a, &b| {
+            grads[b]
+                .partial_cmp(&grads[a])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        for &i in inactive.iter().take(n_drop.min(inactive.len())) {
+            ctx.mask_fwd[i] = 1.0;
+            ctx.weights[i] = 0.0;
+        }
+        ctx.mask_bwd.copy_from_slice(ctx.mask_fwd);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn ctx_run(
+        s: &mut RigL,
+        w: &mut Vec<f32>,
+        mf: &mut Vec<f32>,
+        mb: &mut Vec<f32>,
+        g: Option<&[f32]>,
+        rng: &mut Pcg64,
+        step: usize,
+        total: usize,
+    ) {
+        s.update_tensor(TensorCtx {
+            name: "t",
+            weights: w,
+            mask_fwd: mf,
+            mask_bwd: mb,
+            grad_norms: g,
+            rng,
+            step,
+            total_steps: total,
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn grows_where_gradient_is_large() {
+        let n = 100;
+        let mut rng = Pcg64::seeded(0);
+        let mut w: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.1)).collect();
+        let mut s = RigL::new(0.2, 0.5, 100);
+        let (mut mf, mut mb) = (vec![0.0; n], vec![0.0; n]);
+        ctx_run(&mut s, &mut w, &mut mf, &mut mb, None, &mut rng, 0, 1000);
+        assert_eq!(mf.iter().filter(|&&x| x == 1.0).count(), 20);
+
+        // Gradient spike on position 7 (if inactive) must wake it up.
+        let target = (0..n).find(|&i| mf[i] == 0.0).unwrap();
+        let mut g = vec![0.001f32; n];
+        g[target] = 100.0;
+        ctx_run(&mut s, &mut w, &mut mf, &mut mb, Some(&g), &mut rng, 100, 1000);
+        assert_eq!(mf[target], 1.0, "largest-gradient unit not grown");
+        assert_eq!(w[target], 0.0, "grown weight must be zero-init");
+        assert_eq!(mf.iter().filter(|&&x| x == 1.0).count(), 20, "density kept");
+    }
+
+    #[test]
+    fn freezes_after_t_end() {
+        let n = 60;
+        let mut rng = Pcg64::seeded(1);
+        let mut w: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.1)).collect();
+        let mut s = RigL::new(0.3, 0.5, 10);
+        let (mut mf, mut mb) = (vec![0.0; n], vec![0.0; n]);
+        ctx_run(&mut s, &mut w, &mut mf, &mut mb, None, &mut rng, 0, 100);
+        let g = vec![1.0f32; n];
+        let snapshot = mf.clone();
+        // step 80 > 0.75*100 — frozen
+        assert!(!s.wants_update(80, 100));
+        ctx_run(&mut s, &mut w, &mut mf, &mut mb, Some(&g), &mut rng, 80, 100);
+        assert_eq!(mf, snapshot);
+    }
+
+    #[test]
+    fn requires_grads_at_update_steps() {
+        let n = 40;
+        let mut rng = Pcg64::seeded(2);
+        let mut w: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.1)).collect();
+        let mut s = RigL::new(0.3, 0.5, 10);
+        let (mut mf, mut mb) = (vec![0.0; n], vec![0.0; n]);
+        ctx_run(&mut s, &mut w, &mut mf, &mut mb, None, &mut rng, 0, 1000);
+        let r = s.update_tensor(TensorCtx {
+            name: "t",
+            weights: &mut w,
+            mask_fwd: &mut mf,
+            mask_bwd: &mut mb,
+            grad_norms: None,
+            rng: &mut rng,
+            step: 10,
+            total_steps: 1000,
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn avg_backward_density_above_nominal() {
+        let s = RigL::new(0.1, 0.5, 100);
+        let avg = s.avg_backward_density(32_000);
+        assert!(avg > 0.1, "dense grad steps must raise the average");
+        assert!(avg < 0.2, "but only by the amortised amount, got {avg}");
+    }
+}

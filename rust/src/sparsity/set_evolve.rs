@@ -1,0 +1,183 @@
+//! SET — Sparse Evolutionary Training (Mocanu et al., 2018), the
+//! random-growth baseline of Fig 2: periodically drop the
+//! smallest-magnitude active connections and grow the same number at
+//! random, re-initialising grown weights from the init distribution.
+
+use anyhow::Result;
+
+use super::strategy::{Densities, MaskStrategy, TensorCtx};
+use super::topk::k_for_density;
+
+#[derive(Clone, Debug)]
+pub struct SetEvolve {
+    pub density: f64,
+    /// Fraction of active connections dropped/regrown per update.
+    pub drop_fraction: f64,
+    /// Re-init scale for grown connections.
+    pub init_scale: f32,
+    /// Update cadence in steps (the coordinator also gates refreshes).
+    pub update_every: usize,
+    initialised: bool,
+}
+
+impl SetEvolve {
+    pub fn new(density: f64, drop_fraction: f64, init_scale: f32) -> Self {
+        SetEvolve {
+            density,
+            drop_fraction,
+            init_scale,
+            update_every: 100,
+            initialised: false,
+        }
+    }
+
+    /// Cosine-annealed drop fraction (as in RigL's SET reimplementation).
+    fn drop_frac_at(&self, step: usize, total: usize) -> f64 {
+        let t = (step as f64 / total.max(1) as f64).min(1.0);
+        self.drop_fraction * 0.5 * (1.0 + (std::f64::consts::PI * t).cos())
+    }
+}
+
+impl MaskStrategy for SetEvolve {
+    fn name(&self) -> &'static str {
+        "set"
+    }
+
+    fn densities(&self, _step: usize, _total: usize) -> Densities {
+        Densities { fwd: self.density, bwd: self.density }
+    }
+
+    fn wants_update(&self, step: usize, _total: usize) -> bool {
+        step == 0 || !self.initialised || step % self.update_every == 0
+    }
+
+    fn update_tensor(&mut self, ctx: TensorCtx<'_>) -> Result<()> {
+        let n = ctx.weights.len();
+        let k = k_for_density(n, self.density);
+
+        if !self.initialised || ctx.step == 0 {
+            // ER-style random init mask at the target density.
+            ctx.mask_fwd.fill(0.0);
+            for i in ctx.rng.sample_indices(n, k) {
+                ctx.mask_fwd[i] = 1.0;
+            }
+            ctx.mask_bwd.copy_from_slice(ctx.mask_fwd);
+            self.initialised = true;
+            return Ok(());
+        }
+
+        // Drop: lowest-|w| active connections.
+        let mut active: Vec<usize> =
+            (0..n).filter(|&i| ctx.mask_fwd[i] == 1.0).collect();
+        let n_drop = ((active.len() as f64)
+            * self.drop_frac_at(ctx.step, ctx.total_steps))
+        .round() as usize;
+        let n_drop = n_drop.min(active.len());
+        if n_drop == 0 {
+            return Ok(());
+        }
+        active.sort_by(|&a, &b| {
+            ctx.weights[a]
+                .abs()
+                .partial_cmp(&ctx.weights[b].abs())
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        for &i in active.iter().take(n_drop) {
+            ctx.mask_fwd[i] = 0.0;
+            ctx.weights[i] = 0.0;
+        }
+
+        // Grow: uniform over inactive positions; re-init from the
+        // original init distribution (SET's convention).
+        let inactive: Vec<usize> =
+            (0..n).filter(|&i| ctx.mask_fwd[i] == 0.0).collect();
+        let n_grow = n_drop.min(inactive.len());
+        for j in ctx.rng.sample_indices(inactive.len(), n_grow) {
+            let i = inactive[j];
+            ctx.mask_fwd[i] = 1.0;
+            ctx.weights[i] = ctx.rng.normal_f32(self.init_scale);
+        }
+        ctx.mask_bwd.copy_from_slice(ctx.mask_fwd);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{ensure, property_cases};
+    use crate::util::rng::Pcg64;
+
+    fn step_once(
+        s: &mut SetEvolve,
+        w: &mut Vec<f32>,
+        mf: &mut Vec<f32>,
+        mb: &mut Vec<f32>,
+        rng: &mut Pcg64,
+        step: usize,
+    ) {
+        s.update_tensor(TensorCtx {
+            name: "t",
+            weights: w,
+            mask_fwd: mf,
+            mask_bwd: mb,
+            grad_norms: None,
+            rng,
+            step,
+            total_steps: 1000,
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn density_preserved_across_evolution() {
+        property_cases("SET preserves density", 64, |rng| {
+            let n = 50 + rng.next_below(200) as usize;
+            let mut w: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.1)).collect();
+            let mut s = SetEvolve::new(0.3, 0.3, 0.1);
+            let (mut mf, mut mb) = (vec![0.0; n], vec![0.0; n]);
+            let mut r2 = rng.fork(1);
+            let k = k_for_density(n, 0.3);
+            for step in [0usize, 100, 200, 300] {
+                step_once(&mut s, &mut w, &mut mf, &mut mb, &mut r2, step);
+                let nnz = mf.iter().filter(|&&x| x == 1.0).count();
+                ensure(nnz == k, format!("step {step}: nnz {nnz} != {k}"))?;
+                ensure(mf == mb, "SET fwd == bwd")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dropped_weights_zeroed_grown_reinitialised() {
+        let n = 100;
+        let mut rng = Pcg64::seeded(3);
+        let mut w: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.1)).collect();
+        let mut s = SetEvolve::new(0.4, 0.5, 0.1);
+        let (mut mf, mut mb) = (vec![0.0; n], vec![0.0; n]);
+        step_once(&mut s, &mut w, &mut mf, &mut mb, &mut rng, 0);
+        let before = mf.clone();
+        step_once(&mut s, &mut w, &mut mf, &mut mb, &mut rng, 100);
+        let changed = before
+            .iter()
+            .zip(&mf)
+            .filter(|(a, b)| a != b)
+            .count();
+        assert!(changed > 0, "mask should evolve");
+        // every inactive position must carry weight 0 after evolution
+        for i in 0..n {
+            if mf[i] == 0.0 && before[i] == 1.0 {
+                assert_eq!(w[i], 0.0, "dropped weight not zeroed at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn drop_fraction_anneals_to_zero() {
+        let s = SetEvolve::new(0.3, 0.3, 0.1);
+        assert!((s.drop_frac_at(0, 1000) - 0.3).abs() < 1e-9);
+        assert!(s.drop_frac_at(1000, 1000) < 1e-9);
+        assert!(s.drop_frac_at(500, 1000) < 0.3);
+    }
+}

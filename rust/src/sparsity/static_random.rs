@@ -1,0 +1,93 @@
+//! Static random sparsity — the simplest sparse-to-sparse baseline in
+//! Fig 2: pick a random mask at initialisation and never change it.
+//! Backward = forward (no exploration set).
+
+use anyhow::Result;
+
+use super::strategy::{Densities, MaskStrategy, TensorCtx};
+use super::topk::k_for_density;
+
+#[derive(Clone, Debug)]
+pub struct StaticRandom {
+    pub density: f64,
+    initialised: bool,
+}
+
+impl StaticRandom {
+    pub fn new(density: f64) -> Self {
+        StaticRandom { density, initialised: false }
+    }
+}
+
+impl MaskStrategy for StaticRandom {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn densities(&self, _step: usize, _total: usize) -> Densities {
+        Densities { fwd: self.density, bwd: self.density }
+    }
+
+    fn wants_update(&self, step: usize, _total: usize) -> bool {
+        // only the very first refresh sets the mask
+        step == 0 || !self.initialised
+    }
+
+    fn update_tensor(&mut self, ctx: TensorCtx<'_>) -> Result<()> {
+        if ctx.step > 0 && self.initialised {
+            return Ok(());
+        }
+        let n = ctx.weights.len();
+        let k = k_for_density(n, self.density);
+        ctx.mask_fwd.fill(0.0);
+        for i in ctx.rng.sample_indices(n, k) {
+            ctx.mask_fwd[i] = 1.0;
+        }
+        ctx.mask_bwd.copy_from_slice(ctx.mask_fwd);
+        self.initialised = true;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn mask_fixed_after_init() {
+        let mut s = StaticRandom::new(0.3);
+        let mut w = vec![0.5f32; 100];
+        let mut mf = vec![0.0; 100];
+        let mut mb = vec![0.0; 100];
+        let mut rng = Pcg64::seeded(5);
+        s.update_tensor(TensorCtx {
+            name: "t",
+            weights: &mut w,
+            mask_fwd: &mut mf,
+            mask_bwd: &mut mb,
+            grad_norms: None,
+            rng: &mut rng,
+            step: 0,
+            total_steps: 10,
+        })
+        .unwrap();
+        assert_eq!(mf.iter().filter(|&&x| x == 1.0).count(), 30);
+        assert_eq!(mf, mb);
+        let snapshot = mf.clone();
+        // later refreshes must not move the mask
+        s.update_tensor(TensorCtx {
+            name: "t",
+            weights: &mut w,
+            mask_fwd: &mut mf,
+            mask_bwd: &mut mb,
+            grad_norms: None,
+            rng: &mut rng,
+            step: 50,
+            total_steps: 100,
+        })
+        .unwrap();
+        assert_eq!(mf, snapshot);
+        assert!(!s.wants_update(50, 100));
+    }
+}

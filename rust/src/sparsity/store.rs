@@ -1,0 +1,253 @@
+//! The dense parameter store — the host-resident θ of the paper (§2.4:
+//! "The CPU could maintain the parameters in an appropriate data
+//! structure"). Owns initialisation (from manifest ParamSpecs), the
+//! current dense values, and the per-tensor masks.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::manifest::{InitKind, ParamSpec};
+use crate::tensor::{HostTensor, Shape};
+use crate::util::rng::Pcg64;
+
+/// Forward + backward masks for one sparse tensor (0/1 as f32 — the
+/// exact representation uploaded to the device).
+#[derive(Clone, Debug)]
+pub struct MaskPair {
+    pub fwd: Vec<f32>,
+    pub bwd: Vec<f32>,
+}
+
+impl MaskPair {
+    pub fn dense(n: usize) -> Self {
+        MaskPair { fwd: vec![1.0; n], bwd: vec![1.0; n] }
+    }
+
+    pub fn fwd_nnz(&self) -> usize {
+        self.fwd.iter().filter(|&&x| x != 0.0).count()
+    }
+
+    pub fn bwd_nnz(&self) -> usize {
+        self.bwd.iter().filter(|&&x| x != 0.0).count()
+    }
+
+    /// Check A ⊆ B (every forward-active unit is backward-active).
+    pub fn is_nested(&self) -> bool {
+        self.fwd.iter().zip(&self.bwd).all(|(&f, &b)| f <= b)
+    }
+}
+
+/// One tensor's dense state.
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub spec: ParamSpec,
+    pub values: Vec<f32>,
+    /// Masks exist only for sparse tensors.
+    pub masks: Option<MaskPair>,
+}
+
+/// The host-side dense model: every parameter tensor plus optimiser
+/// slots are device-resident at train time; the store holds the *mask
+/// authority* and (at refresh points) a synced copy of the weights.
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    pub entries: Vec<ParamEntry>,
+    index: BTreeMap<String, usize>,
+}
+
+impl ParamStore {
+    /// Initialise from manifest specs with the given seed. Mirrors the
+    /// init kinds the python side declares (normal/uniform/zeros/ones).
+    pub fn init(specs: &[ParamSpec], seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed, 0x1217);
+        let mut entries = Vec::with_capacity(specs.len());
+        let mut index = BTreeMap::new();
+        for (i, spec) in specs.iter().enumerate() {
+            let mut child = rng.fork(i as u64);
+            let n = spec.shape.numel();
+            let values: Vec<f32> = match spec.init {
+                InitKind::Normal => {
+                    (0..n).map(|_| child.normal_f32(spec.init_scale)).collect()
+                }
+                InitKind::Uniform => (0..n)
+                    .map(|_| (child.next_f32() * 2.0 - 1.0) * spec.init_scale)
+                    .collect(),
+                InitKind::Zeros => vec![0.0; n],
+                InitKind::Ones => vec![1.0; n],
+            };
+            let masks = spec.sparse.then(|| MaskPair::dense(n));
+            index.insert(spec.name.clone(), i);
+            entries.push(ParamEntry { spec: spec.clone(), values, masks });
+        }
+        ParamStore { entries, index }
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ParamEntry> {
+        self.index
+            .get(name)
+            .map(|&i| &self.entries[i])
+            .ok_or_else(|| anyhow!("unknown param {name:?}"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut ParamEntry> {
+        let i = *self
+            .index
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown param {name:?}"))?;
+        Ok(&mut self.entries[i])
+    }
+
+    /// Sparse tensors in spec order (the manifest's mask ordering).
+    pub fn sparse_names(&self) -> Vec<String> {
+        self.entries
+            .iter()
+            .filter(|e| e.spec.sparse)
+            .map(|e| e.spec.name.clone())
+            .collect()
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.entries.iter().map(|e| e.values.len()).sum()
+    }
+
+    /// Parameters that are *representable* under the current forward
+    /// masks: dense tensors count fully, sparse tensors count nnz(fwd).
+    /// This is the paper's "Params" column in Tables 2/3/5.
+    pub fn effective_params(&self) -> usize {
+        self.entries
+            .iter()
+            .map(|e| match &e.masks {
+                Some(m) => m.fwd_nnz(),
+                None => e.values.len(),
+            })
+            .sum()
+    }
+
+    /// Tensors as HostTensor views for upload (params in spec order).
+    pub fn param_tensors(&self) -> Vec<HostTensor> {
+        self.entries
+            .iter()
+            .map(|e| HostTensor {
+                shape: Shape(e.spec.shape.dims().to_vec()),
+                data: crate::tensor::TensorData::F32(e.values.clone()),
+            })
+            .collect()
+    }
+
+    /// Forward masks (sparse tensors only, spec order).
+    pub fn fwd_mask_tensors(&self) -> Vec<HostTensor> {
+        self.mask_tensors(true)
+    }
+
+    /// Backward masks (sparse tensors only, spec order).
+    pub fn bwd_mask_tensors(&self) -> Vec<HostTensor> {
+        self.mask_tensors(false)
+    }
+
+    fn mask_tensors(&self, fwd: bool) -> Vec<HostTensor> {
+        self.entries
+            .iter()
+            .filter_map(|e| {
+                e.masks.as_ref().map(|m| HostTensor {
+                    shape: Shape(e.spec.shape.dims().to_vec()),
+                    data: crate::tensor::TensorData::F32(if fwd {
+                        m.fwd.clone()
+                    } else {
+                        m.bwd.clone()
+                    }),
+                })
+            })
+            .collect()
+    }
+
+    /// Write back refreshed dense values (after a device→host sync).
+    pub fn set_values(&mut self, name: &str, values: Vec<f32>) -> Result<()> {
+        let e = self.get_mut(name)?;
+        if values.len() != e.values.len() {
+            anyhow::bail!(
+                "set_values({name}): size {} != {}",
+                values.len(),
+                e.values.len()
+            );
+        }
+        e.values = values;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Shape;
+
+    fn spec(name: &str, dims: &[usize], init: InitKind, sparse: bool) -> ParamSpec {
+        ParamSpec {
+            name: name.into(),
+            shape: Shape::new(dims),
+            init,
+            init_scale: 0.1,
+            sparse,
+            mac: 0,
+        }
+    }
+
+    fn specs() -> Vec<ParamSpec> {
+        vec![
+            spec("w1", &[4, 8], InitKind::Normal, true),
+            spec("b1", &[8], InitKind::Zeros, false),
+            spec("g1", &[8], InitKind::Ones, false),
+            spec("w2", &[8, 2], InitKind::Uniform, true),
+        ]
+    }
+
+    #[test]
+    fn init_kinds() {
+        let st = ParamStore::init(&specs(), 7);
+        assert_eq!(st.get("b1").unwrap().values, vec![0.0; 8]);
+        assert_eq!(st.get("g1").unwrap().values, vec![1.0; 8]);
+        let w1 = &st.get("w1").unwrap().values;
+        assert!(w1.iter().any(|&x| x != 0.0));
+        let w2 = &st.get("w2").unwrap().values;
+        assert!(w2.iter().all(|&x| x.abs() <= 0.1));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a = ParamStore::init(&specs(), 42);
+        let b = ParamStore::init(&specs(), 42);
+        assert_eq!(a.get("w1").unwrap().values, b.get("w1").unwrap().values);
+        let c = ParamStore::init(&specs(), 43);
+        assert_ne!(a.get("w1").unwrap().values, c.get("w1").unwrap().values);
+    }
+
+    #[test]
+    fn masks_only_on_sparse() {
+        let st = ParamStore::init(&specs(), 0);
+        assert!(st.get("w1").unwrap().masks.is_some());
+        assert!(st.get("b1").unwrap().masks.is_none());
+        assert_eq!(st.sparse_names(), vec!["w1", "w2"]);
+    }
+
+    #[test]
+    fn effective_params_counts_fwd_mask() {
+        let mut st = ParamStore::init(&specs(), 0);
+        assert_eq!(st.total_params(), 32 + 8 + 8 + 16);
+        let e = st.get_mut("w1").unwrap();
+        let m = e.masks.as_mut().unwrap();
+        m.fwd.fill(0.0);
+        m.fwd[0] = 1.0;
+        assert_eq!(st.effective_params(), 1 + 8 + 8 + 16);
+    }
+
+    #[test]
+    fn mask_nesting_check() {
+        let mut m = MaskPair::dense(4);
+        assert!(m.is_nested());
+        m.fwd = vec![1.0, 0.0, 0.0, 0.0];
+        m.bwd = vec![1.0, 1.0, 0.0, 0.0];
+        assert!(m.is_nested());
+        m.bwd[0] = 0.0;
+        assert!(!m.is_nested());
+    }
+}

@@ -1,0 +1,121 @@
+//! The mask-update strategy interface: every sparse-training method the
+//! paper compares (Top-KAST and all baselines) is one implementation.
+//!
+//! The coordinator calls `update_masks` at refresh points (every
+//! `refresh_every` steps, paper Appendix C); a strategy rewrites the
+//! per-tensor forward/backward masks (and, for SET/RigL, may re-init
+//! grown weights) on the host. The device only ever receives the masks.
+
+use anyhow::Result;
+
+use super::store::ParamStore;
+use crate::util::rng::Pcg64;
+
+/// Per-refresh context handed to a strategy for one tensor.
+pub struct TensorCtx<'a> {
+    pub name: &'a str,
+    /// Dense host weights (strategies may rewrite grown entries).
+    pub weights: &'a mut [f32],
+    pub mask_fwd: &'a mut [f32],
+    pub mask_bwd: &'a mut [f32],
+    /// |grad| from the grad_norms artifact — present only when the
+    /// strategy declared `needs_grad_norms(step)`.
+    pub grad_norms: Option<&'a [f32]>,
+    pub rng: &'a mut Pcg64,
+    /// Current training step and the planned total (for schedules).
+    pub step: usize,
+    pub total_steps: usize,
+}
+
+/// Densities a strategy exposes for FLOPs accounting (Fig 2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Densities {
+    /// D: fraction of weights active in the forward pass.
+    pub fwd: f64,
+    /// D+M: fraction receiving gradient updates.
+    pub bwd: f64,
+}
+
+pub trait MaskStrategy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Nominal densities at `step` (pruning schedules vary over time).
+    fn densities(&self, step: usize, total_steps: usize) -> Densities;
+
+    /// Whether `update_masks` wants |grad| tensors at this step (RigL).
+    fn needs_grad_norms(&self, _step: usize) -> bool {
+        false
+    }
+
+    /// Whether masks should be recomputed at this step at all. The
+    /// coordinator combines this with its own refresh interval.
+    fn wants_update(&self, step: usize, total_steps: usize) -> bool {
+        let _ = (step, total_steps);
+        true
+    }
+
+    /// Rewrite one tensor's masks in place.
+    fn update_tensor(&mut self, ctx: TensorCtx<'_>) -> Result<()>;
+
+    /// Average backward density over a whole run — the x-axis of
+    /// Fig 2(b). Defaults to the nominal bwd density; RigL overrides to
+    /// account for its amortised dense-gradient steps.
+    fn avg_backward_density(&self, total_steps: usize) -> f64 {
+        self.densities(0, total_steps).bwd
+    }
+}
+
+/// Drive a strategy over every sparse tensor of a store.
+pub fn update_store_masks(
+    strategy: &mut dyn MaskStrategy,
+    store: &mut ParamStore,
+    grad_norms: Option<&std::collections::BTreeMap<String, Vec<f32>>>,
+    rng: &mut Pcg64,
+    step: usize,
+    total_steps: usize,
+) -> Result<()> {
+    for entry in store.entries.iter_mut() {
+        if !entry.spec.sparse {
+            continue;
+        }
+        let masks = entry.masks.as_mut().expect("sparse tensor has masks");
+        let gn = grad_norms.and_then(|m| m.get(&entry.spec.name)).map(|v| &v[..]);
+        strategy.update_tensor(TensorCtx {
+            name: &entry.spec.name,
+            weights: &mut entry.values,
+            mask_fwd: &mut masks.fwd,
+            mask_bwd: &mut masks.bwd,
+            grad_norms: gn,
+            rng,
+            step,
+            total_steps,
+        })?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Nop;
+    impl MaskStrategy for Nop {
+        fn name(&self) -> &'static str {
+            "nop"
+        }
+        fn densities(&self, _s: usize, _t: usize) -> Densities {
+            Densities { fwd: 1.0, bwd: 1.0 }
+        }
+        fn update_tensor(&mut self, _ctx: TensorCtx<'_>) -> Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn default_avg_bwd_density_is_nominal() {
+        let s = Nop;
+        assert_eq!(s.avg_backward_density(100), 1.0);
+        assert!(!s.needs_grad_norms(0));
+        assert!(s.wants_update(5, 10));
+    }
+}

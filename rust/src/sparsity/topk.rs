@@ -1,0 +1,222 @@
+//! Host-side magnitude Top-K — the selection primitive of Top-KAST.
+//!
+//! The paper (§2.4) places this on the host CPU so the dense parameter
+//! vector never has to fit on the accelerator. Selection is per layer
+//! (per tensor), per the paper's footnote 1: global top-k skews FLOPs
+//! toward early layers and can drop whole layers at high sparsity.
+//!
+//! Implementation: quickselect (Floyd–Rivest-style ternary partition)
+//! over (|w|, index) pairs — O(n) expected, no full sort. Ties are
+//! broken by index so selection is deterministic and stable across
+//! refreshes (important for mask-churn metrics: ties flapping between
+//! equal-magnitude weights would read as churn).
+
+/// Number of elements kept for a density in [0,1] over n weights.
+/// Matches python's `round` convention in ref.topk_mask, with a floor of
+/// one element for any positive density (a layer is never fully off).
+pub fn k_for_density(n: usize, density: f64) -> usize {
+    if n == 0 || density <= 0.0 {
+        return 0;
+    }
+    ((density * n as f64).round() as usize).clamp(1, n)
+}
+
+#[inline]
+fn key(w: &[f32], i: u32) -> (f32, u32) {
+    // Total order: larger magnitude first; among equal magnitudes,
+    // *smaller index* wins, so we order by (mag desc, idx asc).
+    (w[i as usize].abs(), i)
+}
+
+#[inline]
+fn greater(w: &[f32], a: u32, b: u32) -> bool {
+    let (ma, ia) = key(w, a);
+    let (mb, ib) = key(w, b);
+    ma > mb || (ma == mb && ia < ib)
+}
+
+/// Indices of the k largest-magnitude entries of `w` (deterministic
+/// tie-break by index). Returned indices are NOT sorted by magnitude.
+pub fn topk_indices(w: &[f32], k: usize) -> Vec<u32> {
+    let n = w.len();
+    let k = k.min(n);
+    if k == 0 {
+        return vec![];
+    }
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    if k < n {
+        // select_nth_unstable_by puts the k-th "greatest" pivot in place
+        // with everything greater before it.
+        idx.select_nth_unstable_by(k - 1, |&a, &b| {
+            if greater(w, a, b) {
+                std::cmp::Ordering::Less
+            } else if greater(w, b, a) {
+                std::cmp::Ordering::Greater
+            } else {
+                std::cmp::Ordering::Equal
+            }
+        });
+        idx.truncate(k);
+    }
+    idx
+}
+
+/// 0/1 f32 mask with ones at the top-k magnitude positions.
+pub fn topk_mask(w: &[f32], k: usize) -> Vec<f32> {
+    let mut mask = vec![0.0f32; w.len()];
+    for i in topk_indices(w, k) {
+        mask[i as usize] = 1.0;
+    }
+    mask
+}
+
+/// In-place variant writing into an existing buffer (hot path: mask
+/// refresh reuses allocations).
+pub fn topk_mask_into(w: &[f32], k: usize, out: &mut [f32]) {
+    debug_assert_eq!(w.len(), out.len());
+    out.fill(0.0);
+    for i in topk_indices(w, k) {
+        out[i as usize] = 1.0;
+    }
+}
+
+/// The k-th largest magnitude (threshold view, used by tests/analysis).
+pub fn kth_magnitude(w: &[f32], k: usize) -> Option<f32> {
+    if k == 0 || k > w.len() {
+        return None;
+    }
+    let idx = topk_indices(w, k);
+    idx.iter()
+        .map(|&i| w[i as usize].abs())
+        .fold(None, |acc: Option<f32>, m| {
+            Some(match acc {
+                None => m,
+                Some(a) => a.min(m),
+            })
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{ensure, gen_vec_f32, gen_vec_ties, property};
+
+    fn brute_force(w: &[f32], k: usize) -> Vec<u32> {
+        let mut idx: Vec<u32> = (0..w.len() as u32).collect();
+        idx.sort_by(|&a, &b| {
+            w[b as usize]
+                .abs()
+                .partial_cmp(&w[a as usize].abs())
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        idx.truncate(k);
+        idx
+    }
+
+    #[test]
+    fn matches_brute_force() {
+        let w = [0.5f32, -3.0, 2.0, -2.0, 0.0, 1.0];
+        for k in 0..=w.len() {
+            let mut got = topk_indices(&w, k);
+            let mut want = brute_force(&w, k);
+            got.sort_unstable();
+            want.sort_unstable();
+            assert_eq!(got, want, "k={k}");
+        }
+    }
+
+    #[test]
+    fn k_for_density_convention() {
+        assert_eq!(k_for_density(100, 0.2), 20);
+        assert_eq!(k_for_density(100, 0.0), 0);
+        assert_eq!(k_for_density(100, 1.0), 100);
+        assert_eq!(k_for_density(100, 0.001), 1); // floor of 1
+        assert_eq!(k_for_density(0, 0.5), 0);
+        assert_eq!(k_for_density(3, 0.5), 2); // round(1.5) = 2
+    }
+
+    #[test]
+    fn mask_has_exactly_k_ones() {
+        let w: Vec<f32> = (0..97).map(|i| (i as f32 * 0.37).sin()).collect();
+        for k in [0, 1, 7, 50, 97] {
+            let m = topk_mask(&w, k);
+            assert_eq!(m.iter().filter(|&&x| x == 1.0).count(), k);
+        }
+    }
+
+    #[test]
+    fn property_topk_vs_bruteforce() {
+        property("topk == brute force", |rng| {
+            let w = gen_vec_f32(rng, 1, 200);
+            let k = rng.next_below(w.len() as u64 + 1) as usize;
+            let mut got = topk_indices(&w, k);
+            let mut want = brute_force(&w, k);
+            got.sort_unstable();
+            want.sort_unstable();
+            ensure(got == want, format!("k={k} got {got:?} want {want:?}"))
+        });
+    }
+
+    #[test]
+    fn property_ties_deterministic() {
+        property("ties break by index", |rng| {
+            let w = gen_vec_ties(rng, 1, 128);
+            let k = rng.next_below(w.len() as u64 + 1) as usize;
+            let a = topk_mask(&w, k);
+            let b = topk_mask(&w, k);
+            ensure(a == b, "same input must give same mask")?;
+            let mut got = topk_indices(&w, k);
+            let mut want = brute_force(&w, k);
+            got.sort_unstable();
+            want.sort_unstable();
+            ensure(got == want, "tie-break mismatch vs stable sort")
+        });
+    }
+
+    #[test]
+    fn property_threshold_semantics() {
+        property("selected >= kth magnitude >= unselected", |rng| {
+            let w = gen_vec_f32(rng, 2, 128);
+            let k = 1 + rng.next_below(w.len() as u64 - 1) as usize;
+            let m = topk_mask(&w, k);
+            let thresh = kth_magnitude(&w, k).unwrap();
+            for (i, &mi) in m.iter().enumerate() {
+                if mi == 1.0 {
+                    ensure(w[i].abs() >= thresh, format!("in-set below thresh at {i}"))?;
+                } else {
+                    ensure(w[i].abs() <= thresh, format!("out-set above thresh at {i}"))?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_superset_nesting() {
+        // The Top-KAST invariant A ⊆ B falls straight out of top-k
+        // nesting: topk(w, k1) ⊆ topk(w, k2) for k1 <= k2.
+        property("topk nesting", |rng| {
+            let w = gen_vec_ties(rng, 1, 150);
+            let k1 = rng.next_below(w.len() as u64 + 1) as usize;
+            let k2 = k1 + rng.next_below((w.len() - k1) as u64 + 1) as usize;
+            let m1 = topk_mask(&w, k1);
+            let m2 = topk_mask(&w, k2);
+            for i in 0..w.len() {
+                ensure(
+                    m1[i] <= m2[i],
+                    format!("A not subset of B at {i} (k1={k1}, k2={k2})"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn into_variant_matches() {
+        let w: Vec<f32> = (0..64).map(|i| ((i * 7) % 13) as f32 - 6.0).collect();
+        let mut buf = vec![9.0f32; w.len()];
+        topk_mask_into(&w, 10, &mut buf);
+        assert_eq!(buf, topk_mask(&w, 10));
+    }
+}

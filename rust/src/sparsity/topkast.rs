@@ -1,0 +1,248 @@
+//! Top-KAST (the paper's method) and its Random-B ablation (Table 1).
+
+use anyhow::Result;
+
+use super::strategy::{Densities, MaskStrategy, TensorCtx};
+use super::topk::{k_for_density, topk_mask_into};
+
+/// Top-KAST: A = top-(D·n) by |w|, B = top-((D+M)·n) by |w|.
+/// A ⊆ B holds by top-k nesting. Masks are recomputed from the dense
+/// host weights at every refresh; between refreshes they are frozen
+/// (paper Appendix C shows N=100 matches N=1).
+#[derive(Clone, Debug)]
+pub struct TopKast {
+    /// Forward density D (= 1 - forward sparsity).
+    pub d_fwd: f64,
+    /// Backward density D+M (= 1 - backward sparsity). Must be >= d_fwd.
+    pub d_bwd: f64,
+    /// Optional Table-1 ablation: after this step, stop exploration —
+    /// B collapses to A (gradients only to active units).
+    pub stop_exploration_at: Option<usize>,
+}
+
+impl TopKast {
+    pub fn new(d_fwd: f64, d_bwd: f64) -> Self {
+        assert!(
+            d_bwd >= d_fwd,
+            "backward density {d_bwd} must be >= forward density {d_fwd} (B ⊇ A)"
+        );
+        TopKast { d_fwd, d_bwd, stop_exploration_at: None }
+    }
+
+    /// From the paper's (forward sparsity, backward sparsity) notation,
+    /// e.g. (0.8, 0.5) = fwd 80% sparse, bwd 50% sparse.
+    pub fn from_sparsities(s_fwd: f64, s_bwd: f64) -> Self {
+        Self::new(1.0 - s_fwd, 1.0 - s_bwd)
+    }
+
+    fn exploring(&self, step: usize) -> bool {
+        match self.stop_exploration_at {
+            Some(t) => step < t,
+            None => true,
+        }
+    }
+}
+
+impl MaskStrategy for TopKast {
+    fn name(&self) -> &'static str {
+        "topkast"
+    }
+
+    fn densities(&self, step: usize, _total: usize) -> Densities {
+        Densities {
+            fwd: self.d_fwd,
+            bwd: if self.exploring(step) { self.d_bwd } else { self.d_fwd },
+        }
+    }
+
+    fn update_tensor(&mut self, ctx: TensorCtx<'_>) -> Result<()> {
+        let n = ctx.weights.len();
+        let ka = k_for_density(n, self.d_fwd);
+        topk_mask_into(ctx.weights, ka, ctx.mask_fwd);
+        if self.exploring(ctx.step) {
+            let kb = k_for_density(n, self.d_bwd).max(ka);
+            topk_mask_into(ctx.weights, kb, ctx.mask_bwd);
+        } else {
+            ctx.mask_bwd.copy_from_slice(ctx.mask_fwd);
+        }
+        Ok(())
+    }
+}
+
+/// Table-1 ablation: B\A chosen uniformly at random from the complement
+/// of A instead of the next-largest magnitudes.
+#[derive(Clone, Debug)]
+pub struct TopKastRandom {
+    pub d_fwd: f64,
+    pub d_bwd: f64,
+}
+
+impl TopKastRandom {
+    pub fn new(d_fwd: f64, d_bwd: f64) -> Self {
+        assert!(d_bwd >= d_fwd);
+        TopKastRandom { d_fwd, d_bwd }
+    }
+}
+
+impl MaskStrategy for TopKastRandom {
+    fn name(&self) -> &'static str {
+        "topkast_random"
+    }
+
+    fn densities(&self, _step: usize, _total: usize) -> Densities {
+        Densities { fwd: self.d_fwd, bwd: self.d_bwd }
+    }
+
+    fn update_tensor(&mut self, ctx: TensorCtx<'_>) -> Result<()> {
+        let n = ctx.weights.len();
+        let ka = k_for_density(n, self.d_fwd);
+        topk_mask_into(ctx.weights, ka, ctx.mask_fwd);
+        ctx.mask_bwd.copy_from_slice(ctx.mask_fwd);
+        let kb = k_for_density(n, self.d_bwd).max(ka);
+        let extra = kb - ka;
+        if extra > 0 {
+            // uniform sample from the complement of A
+            let complement: Vec<usize> = (0..n)
+                .filter(|&i| ctx.mask_fwd[i] == 0.0)
+                .collect();
+            let take = extra.min(complement.len());
+            for j in ctx.rng.sample_indices(complement.len(), take) {
+                ctx.mask_bwd[complement[j]] = 1.0;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{ensure, gen_vec_f32, property};
+    use crate::util::rng::Pcg64;
+
+    fn run(strat: &mut dyn MaskStrategy, w: &mut [f32], step: usize) -> (Vec<f32>, Vec<f32>) {
+        let n = w.len();
+        let mut mf = vec![0.0; n];
+        let mut mb = vec![0.0; n];
+        let mut rng = Pcg64::seeded(1);
+        strat
+            .update_tensor(TensorCtx {
+                name: "t",
+                weights: w,
+                mask_fwd: &mut mf,
+                mask_bwd: &mut mb,
+                grad_norms: None,
+                rng: &mut rng,
+                step,
+                total_steps: 100,
+            })
+            .unwrap();
+        (mf, mb)
+    }
+
+    #[test]
+    fn nesting_and_counts() {
+        let mut w: Vec<f32> = (0..100).map(|i| ((i * 31) % 17) as f32 - 8.0).collect();
+        let mut s = TopKast::from_sparsities(0.8, 0.5);
+        let (mf, mb) = run(&mut s, &mut w, 0);
+        assert_eq!(mf.iter().filter(|&&x| x == 1.0).count(), 20);
+        assert_eq!(mb.iter().filter(|&&x| x == 1.0).count(), 50);
+        assert!(mf.iter().zip(&mb).all(|(&f, &b)| f <= b));
+    }
+
+    #[test]
+    fn stop_exploration_collapses_b_to_a() {
+        let mut w: Vec<f32> = (0..50).map(|i| i as f32).collect();
+        let mut s = TopKast::new(0.2, 0.6);
+        s.stop_exploration_at = Some(10);
+        let (_mf, mb_before) = run(&mut s, &mut w.clone(), 5);
+        assert_eq!(mb_before.iter().filter(|&&x| x == 1.0).count(), 30);
+        let (mf_after, mb_after) = run(&mut s, &mut w, 10);
+        assert_eq!(mb_after, mf_after);
+        assert_eq!(s.densities(10, 100).bwd, 0.2);
+        assert_eq!(s.densities(5, 100).bwd, 0.6);
+    }
+
+    #[test]
+    fn property_topkast_invariants() {
+        property("topkast masks: counts + nesting + top-magnitudes", |rng| {
+            let mut w = gen_vec_f32(rng, 4, 256);
+            let d_fwd = 0.05 + rng.next_f64() * 0.5;
+            let d_bwd = d_fwd + rng.next_f64() * (1.0 - d_fwd);
+            let mut s = TopKast::new(d_fwd, d_bwd);
+            let n = w.len();
+            let mut mf = vec![0.0; n];
+            let mut mb = vec![0.0; n];
+            let mut r2 = rng.fork(9);
+            s.update_tensor(TensorCtx {
+                name: "t",
+                weights: &mut w,
+                mask_fwd: &mut mf,
+                mask_bwd: &mut mb,
+                grad_norms: None,
+                rng: &mut r2,
+                step: 0,
+                total_steps: 10,
+            })
+            .map_err(|e| e.to_string())?;
+            let ka = k_for_density(n, d_fwd);
+            let kb = k_for_density(n, d_bwd).max(ka);
+            ensure(mf.iter().filter(|&&x| x == 1.0).count() == ka, "fwd count")?;
+            ensure(mb.iter().filter(|&&x| x == 1.0).count() == kb, "bwd count")?;
+            ensure(mf.iter().zip(&mb).all(|(&f, &b)| f <= b), "A ⊆ B")?;
+            // every active weight magnitude >= every inactive magnitude
+            let min_active = mf
+                .iter()
+                .enumerate()
+                .filter(|(_, &m)| m == 1.0)
+                .map(|(i, _)| w[i].abs())
+                .fold(f32::INFINITY, f32::min);
+            let max_inactive = mf
+                .iter()
+                .enumerate()
+                .filter(|(_, &m)| m == 0.0)
+                .map(|(i, _)| w[i].abs())
+                .fold(0.0f32, f32::max);
+            ensure(
+                min_active >= max_inactive || (min_active - max_inactive).abs() < 1e-7,
+                "A must hold the largest magnitudes",
+            )
+        });
+    }
+
+    #[test]
+    fn random_b_is_superset_with_right_count() {
+        property("random-B superset", |rng| {
+            let mut w = gen_vec_f32(rng, 10, 128);
+            let n = w.len();
+            let mut s = TopKastRandom::new(0.2, 0.5);
+            let mut mf = vec![0.0; n];
+            let mut mb = vec![0.0; n];
+            let mut r2 = rng.fork(3);
+            s.update_tensor(TensorCtx {
+                name: "t",
+                weights: &mut w,
+                mask_fwd: &mut mf,
+                mask_bwd: &mut mb,
+                grad_norms: None,
+                rng: &mut r2,
+                step: 0,
+                total_steps: 10,
+            })
+            .map_err(|e| e.to_string())?;
+            ensure(mf.iter().zip(&mb).all(|(&f, &b)| f <= b), "A ⊆ B")?;
+            let ka = k_for_density(n, 0.2);
+            let kb = k_for_density(n, 0.5).max(ka);
+            ensure(
+                mb.iter().filter(|&&x| x == 1.0).count() == kb,
+                "B count mismatch",
+            )
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bwd_below_fwd() {
+        TopKast::new(0.5, 0.2);
+    }
+}

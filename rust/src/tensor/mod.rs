@@ -1,0 +1,11 @@
+//! Host-side tensors: the coordinator's view of parameters, masks and
+//! batches. Deliberately minimal — data that needs math lives on the
+//! device inside AOT'd XLA programs; the host only initialises, selects
+//! top-k, masks, and marshals.
+
+mod shape;
+#[allow(clippy::module_inception)]
+mod tensor;
+
+pub use shape::Shape;
+pub use tensor::{HostTensor, TensorData};

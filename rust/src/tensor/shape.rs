@@ -1,0 +1,66 @@
+//! Tensor shapes (dims + element counts) shared across runtime and
+//! sparsity modules.
+
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Shape(pub Vec<usize>);
+
+impl Shape {
+    pub fn new(dims: &[usize]) -> Self {
+        Shape(dims.to_vec())
+    }
+
+    pub fn scalar() -> Self {
+        Shape(vec![1])
+    }
+
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.0
+    }
+
+    /// Total element count (empty shape = scalar = 1 element).
+    pub fn numel(&self) -> usize {
+        self.0.iter().product::<usize>().max(if self.0.is_empty() { 1 } else { 0 })
+    }
+
+    /// As i64 dims for the xla crate's reshape/literal APIs.
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.0.iter().map(|&d| d as i64).collect()
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[")?;
+        for (i, d) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numel() {
+        assert_eq!(Shape::new(&[2, 3, 4]).numel(), 24);
+        assert_eq!(Shape::new(&[7]).numel(), 7);
+        assert_eq!(Shape::new(&[]).numel(), 1);
+        assert_eq!(Shape::new(&[5, 0]).numel(), 0);
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(Shape::new(&[2, 3]).to_string(), "[2,3]");
+    }
+}

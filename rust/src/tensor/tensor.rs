@@ -1,0 +1,134 @@
+//! A host tensor: shape + flat row-major data (f32 or i32).
+
+use anyhow::{bail, Result};
+
+use super::Shape;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Shape,
+    pub data: TensorData,
+}
+
+impl HostTensor {
+    pub fn zeros(shape: Shape) -> Self {
+        let n = shape.numel();
+        HostTensor { shape, data: TensorData::F32(vec![0.0; n]) }
+    }
+
+    pub fn ones(shape: Shape) -> Self {
+        let n = shape.numel();
+        HostTensor { shape, data: TensorData::F32(vec![1.0; n]) }
+    }
+
+    pub fn from_f32(shape: Shape, data: Vec<f32>) -> Result<Self> {
+        if shape.numel() != data.len() {
+            bail!(
+                "shape {shape} needs {} elements, got {}",
+                shape.numel(),
+                data.len()
+            );
+        }
+        Ok(HostTensor { shape, data: TensorData::F32(data) })
+    }
+
+    pub fn from_i32(shape: Shape, data: Vec<i32>) -> Result<Self> {
+        if shape.numel() != data.len() {
+            bail!(
+                "shape {shape} needs {} elements, got {}",
+                shape.numel(),
+                data.len()
+            );
+        }
+        Ok(HostTensor { shape, data: TensorData::I32(data) })
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor { shape: Shape::scalar(), data: TensorData::F32(vec![v]) }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.numel()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn dtype_str(&self) -> &'static str {
+        match self.data {
+            TensorData::F32(_) => "f32",
+            TensorData::I32(_) => "i32",
+        }
+    }
+
+    /// L2 norm (f32 tensors).
+    pub fn l2(&self) -> Result<f64> {
+        Ok(self
+            .as_f32()?
+            .iter()
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt())
+    }
+
+    /// Count of non-zero entries (density numerator for masks).
+    pub fn nnz(&self) -> usize {
+        match &self.data {
+            TensorData::F32(v) => v.iter().filter(|&&x| x != 0.0).count(),
+            TensorData::I32(v) => v.iter().filter(|&&x| x != 0).count(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_checks_size() {
+        assert!(HostTensor::from_f32(Shape::new(&[2, 2]), vec![0.0; 4]).is_ok());
+        assert!(HostTensor::from_f32(Shape::new(&[2, 2]), vec![0.0; 3]).is_err());
+        assert!(HostTensor::from_i32(Shape::new(&[3]), vec![1, 2, 3]).is_ok());
+    }
+
+    #[test]
+    fn dtype_accessors() {
+        let t = HostTensor::ones(Shape::new(&[4]));
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
+        assert_eq!(t.dtype_str(), "f32");
+        assert_eq!(t.nnz(), 4);
+        assert!((t.l2().unwrap() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scalar() {
+        let s = HostTensor::scalar_f32(3.5);
+        assert_eq!(s.numel(), 1);
+        assert_eq!(s.as_f32().unwrap()[0], 3.5);
+    }
+}

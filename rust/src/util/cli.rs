@@ -1,0 +1,222 @@
+//! Tiny CLI argument parser (offline environment — no clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! generates usage text from registered options.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug)]
+struct OptSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative CLI: register options, then parse.
+pub struct Cli {
+    program: String,
+    about: String,
+    opts: Vec<OptSpec>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &str) -> Self {
+        Cli { program: program.into(), about: about.into(), opts: vec![] }
+    }
+
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            default: Some(default.into()),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for o in &self.opts {
+            let kind = if o.is_flag {
+                String::new()
+            } else if let Some(d) = &o.default {
+                format!(" <value, default {d}>")
+            } else {
+                " <value, required>".to_string()
+            };
+            out.push_str(&format!("  --{}{}\n      {}\n", o.name, kind, o.help));
+        }
+        out
+    }
+
+    /// Parse an argv slice (without the program name).
+    pub fn parse(&self, args: &[String]) -> Result<Parsed> {
+        let mut parsed = Parsed::default();
+        // defaults
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                parsed.values.insert(o.name.clone(), d.clone());
+            }
+            if o.is_flag {
+                parsed.flags.insert(o.name.clone(), false);
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                bail!("{}", self.usage());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("unknown option --{name}\n{}", self.usage())
+                    })?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        bail!("--{name} is a flag and takes no value");
+                    }
+                    parsed.flags.insert(name, true);
+                } else {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| {
+                                    anyhow::anyhow!("--{name} needs a value")
+                                })?
+                        }
+                    };
+                    parsed.values.insert(name, value);
+                }
+            } else {
+                parsed.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        // required options present?
+        for o in &self.opts {
+            if !o.is_flag && o.default.is_none() && !parsed.values.contains_key(&o.name)
+            {
+                bail!("missing required --{}\n{}", o.name, self.usage());
+            }
+        }
+        Ok(parsed)
+    }
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option {name} not registered"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        Ok(self.get(name).parse()?)
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        Ok(self.get(name).parse()?)
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        Ok(self.get(name).parse()?)
+    }
+
+    pub fn get_f32(&self, name: &str) -> Result<f32> {
+        Ok(self.get(name).parse()?)
+    }
+
+    pub fn is_set(&self, name: &str) -> bool {
+        *self.flags.get(name).unwrap_or(&false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("steps", "100", "number of steps")
+            .req("model", "model name")
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn parses_forms() {
+        let p = cli()
+            .parse(&argv(&["--model", "lm_tiny", "--steps=250", "--verbose", "pos"]))
+            .unwrap();
+        assert_eq!(p.get("model"), "lm_tiny");
+        assert_eq!(p.get_usize("steps").unwrap(), 250);
+        assert!(p.is_set("verbose"));
+        assert_eq!(p.positional, vec!["pos"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = cli().parse(&argv(&["--model", "x"])).unwrap();
+        assert_eq!(p.get_usize("steps").unwrap(), 100);
+        assert!(!p.is_set("verbose"));
+    }
+
+    #[test]
+    fn missing_required_fails() {
+        assert!(cli().parse(&argv(&["--steps", "5"])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_fails() {
+        assert!(cli().parse(&argv(&["--model", "x", "--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_fails() {
+        assert!(cli().parse(&argv(&["--model", "x", "--verbose=1"])).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Offline substrates: PRNG, JSON, CLI, logging, timing, property tests.
+//!
+//! Everything here replaces a crates.io dependency that is unavailable
+//! in this offline build (rand, serde/serde_json, clap, log, criterion's
+//! stats, proptest). See DESIGN.md §7.
+
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod proptest;
+pub mod rng;
+pub mod timer;

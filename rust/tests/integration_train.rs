@@ -1,0 +1,267 @@
+//! Integration: the full coordinator (Trainer) over real artifacts —
+//! learning progress, the Top-KAST invariants across a whole run, the
+//! RigL grad-norms path, refresh-period robustness and checkpointing.
+
+use topkast::coordinator::{
+    source_for, Checkpoint, LrSchedule, Trainer, TrainerConfig,
+};
+use topkast::runtime::{Manifest, Runtime};
+use topkast::sparsity::{MaskStrategy, RigL, TopKast};
+
+fn manifest() -> Manifest {
+    Manifest::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("run `make artifacts` before cargo test")
+}
+
+fn trainer(
+    model: &str,
+    strategy: Box<dyn MaskStrategy>,
+    steps: usize,
+    refresh_every: usize,
+    seed: u64,
+) -> Trainer {
+    let man = manifest();
+    let m = man.model(model).unwrap().clone();
+    let cfg = TrainerConfig {
+        steps,
+        lr: match m.kind.as_str() {
+            "lm" => LrSchedule::WarmupCosine { base: 3e-3, warmup: 10, floor: 1e-5 },
+            _ => LrSchedule::Constant { base: 0.1 },
+        },
+        refresh_every,
+        churn_every: 20,
+        seed,
+        log_every: usize::MAX,
+        ..Default::default()
+    };
+    let runtime = Runtime::new().unwrap();
+    let data = source_for(&m, seed ^ 0xDA7A).unwrap();
+    Trainer::new(runtime, m, strategy, data, cfg).unwrap()
+}
+
+#[test]
+fn topkast_learns_on_mlp() {
+    let mut t = trainer(
+        "mlp_tiny",
+        Box::new(TopKast::from_sparsities(0.8, 0.5)),
+        150,
+        10,
+        1,
+    );
+    t.train().unwrap();
+    let first = t.metrics.losses[0].1;
+    let last = t.metrics.tail_loss(10).unwrap();
+    assert!(
+        last < first * 0.8,
+        "no learning: first {first} last {last}"
+    );
+    let ev = t.evaluate().unwrap();
+    assert!(ev.accuracy > 0.3, "eval accuracy {}", ev.accuracy);
+}
+
+#[test]
+fn mask_invariants_hold_across_whole_run() {
+    let mut t = trainer(
+        "mlp_tiny",
+        Box::new(TopKast::from_sparsities(0.8, 0.5)),
+        60,
+        5,
+        2,
+    );
+    for _ in 0..60 {
+        t.train_step().unwrap();
+        for e in &t.store.entries {
+            if let Some(m) = &e.masks {
+                assert!(m.is_nested(), "A ⊄ B at step {}", t.step);
+                let n = e.values.len();
+                let ka = topkast::sparsity::topk::k_for_density(n, 0.2);
+                let kb = topkast::sparsity::topk::k_for_density(n, 0.5);
+                assert_eq!(m.fwd_nnz(), ka, "fwd count drifted");
+                assert_eq!(m.bwd_nnz(), kb, "bwd count drifted");
+            }
+        }
+    }
+}
+
+#[test]
+fn rigl_runs_grad_norms_and_learns() {
+    let mut t = trainer(
+        "mlp_tiny",
+        Box::new(RigL::new(0.2, 0.3, 10)),
+        100,
+        1, // refresh gate every step; RigL's own wants_update throttles
+        3,
+    );
+    t.train().unwrap();
+    let first = t.metrics.losses[0].1;
+    let last = t.metrics.tail_loss(10).unwrap();
+    assert!(last < first, "RigL failed to learn: {first} -> {last}");
+    // density must be preserved through drop/grow cycles
+    for e in &t.store.entries {
+        if let Some(m) = &e.masks {
+            let n = e.values.len();
+            let k = topkast::sparsity::topk::k_for_density(n, 0.2);
+            assert_eq!(m.fwd_nnz(), k);
+        }
+    }
+}
+
+#[test]
+fn refresh_period_does_not_break_training() {
+    // Appendix C / Table 6: infrequent top-k refresh must still train.
+    let mut fin = vec![];
+    for n in [1usize, 25] {
+        let mut t = trainer(
+            "mlp_tiny",
+            Box::new(TopKast::from_sparsities(0.8, 0.5)),
+            150,
+            n,
+            4,
+        );
+        t.train().unwrap();
+        fin.push(t.metrics.tail_loss(10).unwrap());
+    }
+    let (n1, n25) = (fin[0], fin[1]);
+    assert!(
+        (n1 - n25).abs() < n1 * 0.5,
+        "N=25 collapsed training: N=1 {n1} vs N=25 {n25}"
+    );
+}
+
+#[test]
+fn lm_trainer_reports_bpc() {
+    let mut t = trainer(
+        "lm_tiny",
+        Box::new(TopKast::from_sparsities(0.8, 0.5)),
+        80,
+        10,
+        5,
+    );
+    t.train().unwrap();
+    let ev = t.evaluate().unwrap();
+    assert!(ev.bpc.is_finite() && ev.bpc > 0.0);
+    // after 80 steps the model must beat the uniform bound log2(96)=6.58
+    assert!(ev.bpc < 6.58, "bpc {} not below uniform", ev.bpc);
+    assert!(ev.accuracy.is_nan(), "LM eval reports bpc, not accuracy");
+}
+
+#[test]
+fn churn_decreases_and_reservoir_small() {
+    // Fig 3 qualitative claims on a real (short) run.
+    let mut t = trainer(
+        "cnn_tiny",
+        Box::new(TopKast::from_sparsities(0.8, 0.5)),
+        200,
+        1,
+        6,
+    );
+    t.train().unwrap();
+    let churn = t.metrics.churn.summary();
+    assert!(churn.len() >= 3);
+    let early = churn[1].2; // mean churn, first measured interval
+    let late = churn.last().unwrap().2;
+    assert!(
+        late <= early,
+        "mask churn should not grow over training: early {early} late {late}"
+    );
+    let woken = t.metrics.reservoir.final_fraction().unwrap();
+    assert!(
+        woken < 0.5,
+        "most of the reservoir should stay asleep, got {woken}"
+    );
+}
+
+#[test]
+fn checkpoint_roundtrip_through_trainer() {
+    let mut t = trainer(
+        "mlp_tiny",
+        Box::new(TopKast::from_sparsities(0.8, 0.5)),
+        40,
+        10,
+        7,
+    );
+    t.train().unwrap();
+    let ev1 = t.evaluate().unwrap();
+
+    let dir = std::env::temp_dir().join("topkast_it_ck");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("t.ckpt");
+    Checkpoint::capture(&t.store, &[], t.step).save(&path).unwrap();
+
+    // fresh trainer, different seed → different init; restoring the
+    // checkpoint must reproduce the evaluation exactly
+    let mut t2 = trainer(
+        "mlp_tiny",
+        Box::new(TopKast::from_sparsities(0.8, 0.5)),
+        40,
+        10,
+        7, // same data seed → same eval stream
+    );
+    let ck = Checkpoint::load(&path).unwrap();
+    ck.restore(&mut t2.store, &mut []).unwrap();
+    let ev2 = t2.evaluate().unwrap();
+    assert!(
+        (ev1.loss_mean - ev2.loss_mean).abs() < 1e-6,
+        "restored eval diverged: {} vs {}",
+        ev1.loss_mean,
+        ev2.loss_mean
+    );
+}
+
+#[test]
+fn async_refresh_trains_equivalently() {
+    // §2.4 overlap mode: stale masks from the background worker must
+    // not break training (the Table-6 staleness-tolerance claim).
+    let mut sync_t = trainer(
+        "mlp_tiny",
+        Box::new(TopKast::from_sparsities(0.8, 0.5)),
+        120,
+        10,
+        11,
+    );
+    sync_t.train().unwrap();
+    let sync_loss = sync_t.metrics.tail_loss(10).unwrap();
+
+    let mut async_t = trainer(
+        "mlp_tiny",
+        Box::new(TopKast::from_sparsities(0.8, 0.5)),
+        120,
+        10,
+        11,
+    );
+    async_t
+        .enable_async_refresh(Box::new(TopKast::from_sparsities(0.8, 0.5)))
+        .unwrap();
+    async_t.train().unwrap();
+    let async_loss = async_t.metrics.tail_loss(10).unwrap();
+    let applied = async_t.async_refreshes_applied().unwrap();
+
+    assert!(applied >= 2, "worker never delivered masks ({applied})");
+    assert!(
+        (async_loss - sync_loss).abs() < sync_loss * 0.5,
+        "async refresh diverged: sync {sync_loss} vs async {async_loss}"
+    );
+    // invariants still hold under stale masks
+    for e in &async_t.store.entries {
+        if let Some(m) = &e.masks {
+            assert!(m.is_nested());
+        }
+    }
+}
+
+#[test]
+fn seeds_reproduce_runs_exactly() {
+    let run = |seed| {
+        let mut t = trainer(
+            "mlp_tiny",
+            Box::new(TopKast::from_sparsities(0.8, 0.5)),
+            30,
+            5,
+            seed,
+        );
+        t.train().unwrap();
+        t.metrics.losses.clone()
+    };
+    assert_eq!(run(9), run(9), "same seed must give identical loss traces");
+    assert_ne!(run(9), run(10), "different seeds must differ");
+}

@@ -1,0 +1,211 @@
+//! Property tests over the coordinator's host-side invariants: routing
+//! of mask updates through strategies, density bookkeeping, FLOPs-model
+//! monotonicity, store state management. No PJRT involved — these are
+//! fast and run hundreds of random cases each.
+
+use std::collections::BTreeMap;
+
+use topkast::runtime::manifest::{InitKind, ParamSpec};
+use topkast::sparsity::{
+    strategy_from_str, update_store_masks, Dense, MagnitudePruning, ParamStore,
+    RigL, SetEvolve, StaticRandom, TopKast, TopKastRandom,
+};
+use topkast::sparsity::flops;
+use topkast::tensor::Shape;
+use topkast::util::proptest::{ensure, property, property_cases};
+use topkast::util::rng::Pcg64;
+
+fn rand_specs(rng: &mut Pcg64) -> Vec<ParamSpec> {
+    let n_tensors = 1 + rng.next_below(5) as usize;
+    (0..n_tensors)
+        .map(|i| {
+            let rows = 2 + rng.next_below(20) as usize;
+            let cols = 2 + rng.next_below(20) as usize;
+            ParamSpec {
+                name: format!("t{i}"),
+                shape: Shape::new(&[rows, cols]),
+                init: InitKind::Normal,
+                init_scale: 0.1,
+                sparse: rng.next_f64() < 0.8,
+                mac: (rows * cols) as u64,
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_store_mask_update_preserves_invariants_for_all_strategies() {
+    property_cases("all strategies keep store invariants", 64, |rng| {
+        let specs = rand_specs(rng);
+        let mut store = ParamStore::init(&specs, rng.next_u64());
+        let d = 0.05 + rng.next_f64() * 0.6;
+        let m = rng.next_f64() * (1.0 - d);
+        let strategies: Vec<Box<dyn topkast::sparsity::MaskStrategy>> = vec![
+            Box::new(TopKast::new(d, d + m)),
+            Box::new(TopKastRandom::new(d, d + m)),
+            Box::new(StaticRandom::new(d)),
+            Box::new(SetEvolve::new(d, 0.3, 0.05)),
+            Box::new(MagnitudePruning::new(d)),
+            Box::new(Dense),
+        ];
+        for mut s in strategies {
+            let mut r2 = rng.fork(7);
+            // two refreshes at different steps
+            for step in [0usize, 50] {
+                update_store_masks(s.as_mut(), &mut store, None, &mut r2, step, 100)
+                    .map_err(|e| e.to_string())?;
+                for e in &store.entries {
+                    match (&e.masks, e.spec.sparse) {
+                        (Some(masks), true) => {
+                            ensure(
+                                masks.is_nested(),
+                                format!("{}: A ⊄ B under {}", e.spec.name, s.name()),
+                            )?;
+                            ensure(
+                                masks.fwd.iter().all(|&x| x == 0.0 || x == 1.0),
+                                "mask values must be exactly 0/1",
+                            )?;
+                        }
+                        (None, false) => {}
+                        _ => return Err("mask presence mismatch".into()),
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rigl_density_preserved_with_random_grads() {
+    property_cases("rigl drop/grow keeps density", 64, |rng| {
+        let specs = rand_specs(rng);
+        let mut store = ParamStore::init(&specs, rng.next_u64());
+        let d = 0.1 + rng.next_f64() * 0.5;
+        let mut rigl = RigL::new(d, 0.3, 10);
+        let mut r2 = rng.fork(3);
+        update_store_masks(&mut rigl, &mut store, None, &mut r2, 0, 1000)
+            .map_err(|e| e.to_string())?;
+        // fake dense grads
+        let mut grads = BTreeMap::new();
+        for e in &store.entries {
+            if e.spec.sparse {
+                grads.insert(
+                    e.spec.name.clone(),
+                    (0..e.values.len())
+                        .map(|_| r2.next_f32().abs())
+                        .collect::<Vec<f32>>(),
+                );
+            }
+        }
+        update_store_masks(&mut rigl, &mut store, Some(&grads), &mut r2, 10, 1000)
+            .map_err(|e| e.to_string())?;
+        for e in &store.entries {
+            if let Some(m) = &e.masks {
+                let k = topkast::sparsity::topk::k_for_density(e.values.len(), d);
+                ensure(
+                    m.fwd_nnz() == k,
+                    format!("{}: density drifted {} != {k}", e.spec.name, m.fwd_nnz()),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_flops_model_monotone_in_densities() {
+    property_cases("flops monotone", 128, |rng| {
+        let specs = rand_specs(rng);
+        let d1 = rng.next_f64() * 0.5;
+        let d2 = d1 + rng.next_f64() * (1.0 - d1);
+        let b = rng.next_f64();
+        ensure(
+            flops::step_flops(&specs, d1, b) <= flops::step_flops(&specs, d2, b) + 1e-9,
+            "fwd density monotonicity",
+        )?;
+        ensure(
+            flops::step_flops(&specs, b.min(d1), d1)
+                <= flops::step_flops(&specs, b.min(d1), d2) + 1e-9,
+            "bwd density monotonicity",
+        )?;
+        ensure(
+            flops::inference_flops(&specs, d1) <= flops::inference_flops(&specs, d2) + 1e-9,
+            "inference monotonicity",
+        )
+    });
+}
+
+#[test]
+fn prop_flops_fraction_bounded_by_one_for_sparse_methods() {
+    property_cases("sparse never costs more than dense", 64, |rng| {
+        let specs = rand_specs(rng);
+        let d = 0.05 + rng.next_f64() * 0.9;
+        let m = rng.next_f64() * (1.0 - d);
+        let tk = TopKast::new(d, d + m);
+        let f = flops::run_flops_fraction(&tk, &specs, 1000, 1.0);
+        ensure(
+            f <= 1.0 + 1e-9,
+            format!("topkast flops fraction {f} > dense at d={d} m={m}"),
+        )?;
+        let st = StaticRandom::new(d);
+        let f = flops::run_flops_fraction(&st, &specs, 1000, 1.0);
+        ensure(f <= 1.0 + 1e-9, "static flops above dense")
+    });
+}
+
+#[test]
+fn prop_strategy_parser_roundtrips_densities() {
+    property("parser: sparsity args map to densities", |rng| {
+        let sf = (rng.next_below(90) as f64) / 100.0;
+        let extra = rng.next_below((90 - (sf * 100.0) as u64).max(1)) as f64 / 100.0;
+        let sb = (sf - extra).max(0.0);
+        let s = strategy_from_str(&format!("topkast:{sf},{sb}"))
+            .map_err(|e| e.to_string())?;
+        let d = s.densities(0, 100);
+        ensure(
+            (d.fwd - (1.0 - sf)).abs() < 1e-9,
+            format!("fwd density {} for sparsity {sf}", d.fwd),
+        )?;
+        ensure((d.bwd - (1.0 - sb)).abs() < 1e-9, "bwd density")
+    });
+}
+
+#[test]
+fn prop_store_init_respects_spec_shapes_and_determinism() {
+    property_cases("store init", 64, |rng| {
+        let specs = rand_specs(rng);
+        let seed = rng.next_u64();
+        let a = ParamStore::init(&specs, seed);
+        let b = ParamStore::init(&specs, seed);
+        for (x, y) in a.entries.iter().zip(&b.entries) {
+            ensure(x.values == y.values, "same-seed init differs")?;
+            ensure(
+                x.values.len() == x.spec.shape.numel(),
+                "value count != shape numel",
+            )?;
+        }
+        ensure(a.total_params() == specs.iter().map(|s| s.shape.numel()).sum(), "total")
+    });
+}
+
+#[test]
+fn prop_pruning_schedule_monotone_and_bounded() {
+    property("pruning density monotone non-increasing", |rng| {
+        let d_final = 0.02 + rng.next_f64() * 0.5;
+        let p = MagnitudePruning::new(d_final);
+        let total = 100 + rng.next_below(10_000) as usize;
+        let mut last = f64::INFINITY;
+        for i in 0..=20 {
+            let step = i * total / 20;
+            let d = p.density_at(step, total);
+            ensure(d <= last + 1e-12, "density increased")?;
+            ensure(
+                (d_final - 1e-9..=1.0 + 1e-9).contains(&d),
+                format!("density {d} out of [{d_final}, 1]"),
+            )?;
+            last = d;
+        }
+        Ok(())
+    });
+}
