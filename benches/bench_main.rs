@@ -3,6 +3,12 @@
 //! `cargo bench -- fig2a` (substring filter). Scale run length with
 //! TOPKAST_BENCH_STEPS (default 300 for vision, 400 for LM).
 //!
+//! Every experiment point is a declarative `api::RunSpec` executed
+//! through `Session::builder()` (via `bench::run_training`). After each
+//! scenario a final single-line JSON summary is printed to stdout (the
+//! harness-friendly contract) in addition to the report files under
+//! `bench_results/`.
+//!
 //! Absolute numbers differ from the paper (synthetic tasks, scaled
 //! models — DESIGN.md §4); the reproduced claims are the *orderings and
 //! shapes*: who wins at a FLOPs budget, how accuracy decays with
@@ -14,10 +20,7 @@ use anyhow::Result;
 use topkast::bench::reports::{f2, f3, pct};
 use topkast::bench::{run_training, Report, RunSpec, Table};
 use topkast::runtime::Manifest;
-use topkast::sparsity::{
-    flops, strategy_from_str, Dense, MagnitudePruning, RigL, SetEvolve,
-    StaticRandom, TopKast, TopKastRandom,
-};
+use topkast::sparsity::flops;
 use topkast::util::timer::{Stats, Stopwatch};
 
 fn steps_vision() -> usize {
@@ -29,6 +32,10 @@ fn steps_vision() -> usize {
 
 fn steps_lm() -> usize {
     (steps_vision() * 4) / 3
+}
+
+fn topkast_spec(model: &str, s_fwd: f64, s_bwd: f64, steps: usize) -> RunSpec {
+    RunSpec::run(model, &format!("topkast:{s_fwd},{s_bwd}"), steps)
 }
 
 fn main() -> Result<()> {
@@ -66,7 +73,8 @@ fn main() -> Result<()> {
         println!("\n######## {name} ########");
         let report = f(&manifest)?;
         report.save(name)?;
-        println!("[{name}] done in {:.1}s", sw.elapsed_ms() / 1e3);
+        // harness contract: one machine-readable JSON line per scenario
+        println!("{}", report.summary_line(name, sw.elapsed_ms() / 1e3));
     }
     println!("\nall benches done in {:.1}s", total.elapsed_ms() / 1e3);
     Ok(())
@@ -83,51 +91,28 @@ fn fig2a(man: &Manifest) -> Result<Report> {
         &["method", "flops_frac", "top1", "eff_params"],
     );
 
+    let rigl_every = (steps / 10).max(1);
     let mut points: Vec<(String, RunSpec)> = vec![
-        ("dense".into(), RunSpec::new("cnn_tiny", Box::new(Dense), steps)),
-        (
-            "pruning 80%".into(),
-            RunSpec::new("cnn_tiny", Box::new(MagnitudePruning::new(0.2)), steps),
-        ),
-        (
-            "static 80%".into(),
-            RunSpec::new("cnn_tiny", Box::new(StaticRandom::new(0.2)), steps),
-        ),
-        (
-            "SET 80%".into(),
-            RunSpec::new(
-                "cnn_tiny",
-                Box::new(SetEvolve::new(0.2, 0.3, 0.05)),
-                steps,
-            ),
-        ),
+        ("dense".into(), RunSpec::run("cnn_tiny", "dense", steps)),
+        ("pruning 80%".into(), RunSpec::run("cnn_tiny", "pruning:0.8", steps)),
+        ("static 80%".into(), RunSpec::run("cnn_tiny", "static:0.8", steps)),
+        ("SET 80%".into(), RunSpec::run("cnn_tiny", "set:0.8,0.3", steps)),
         (
             "RigL 80%".into(),
-            RunSpec::new(
-                "cnn_tiny",
-                Box::new(RigL::new(0.2, 0.3, (steps / 10).max(1))),
-                steps,
-            ),
+            RunSpec::run("cnn_tiny", &format!("rigl:0.8,0.3,{rigl_every}"), steps),
         ),
     ];
     // Top-KAST at several backward sparsities (fwd fixed at 80%), and 2x.
     for (label, s_bwd) in [("bwd 0%", 0.0), ("bwd 50%", 0.5), ("bwd 80%", 0.8)] {
         points.push((
             format!("Top-KAST 80% {label}"),
-            RunSpec::new(
-                "cnn_tiny",
-                Box::new(TopKast::from_sparsities(0.8, s_bwd)),
-                steps,
-            ),
+            topkast_spec("cnn_tiny", 0.8, s_bwd, steps),
         ));
     }
-    let mut two_x = RunSpec::new(
-        "cnn_tiny",
-        Box::new(TopKast::from_sparsities(0.8, 0.5)),
-        steps * 2,
-    );
-    two_x.train_multiplier = 2.0;
-    points.push(("Top-KAST 80% bwd 50% (2x)".into(), two_x));
+    points.push((
+        "Top-KAST 80% bwd 50% (2x)".into(),
+        topkast_spec("cnn_tiny", 0.8, 0.5, steps * 2).train_multiplier(2.0),
+    ));
 
     for (label, spec) in points {
         let r = run_training(man, spec)?;
@@ -160,14 +145,7 @@ fn fig2b(man: &Manifest) -> Result<Report> {
         (0.95, 0.9),
         (0.95, 0.95),
     ] {
-        let r = run_training(
-            man,
-            RunSpec::new(
-                "cnn_tiny",
-                Box::new(TopKast::from_sparsities(s_fwd, s_bwd)),
-                steps,
-            ),
-        )?;
+        let r = run_training(man, topkast_spec("cnn_tiny", s_fwd, s_bwd, steps))?;
         t.row(vec![
             "Top-KAST".into(),
             pct(s_fwd),
@@ -178,9 +156,9 @@ fn fig2b(man: &Manifest) -> Result<Report> {
     for s in [0.8, 0.9, 0.95] {
         let r = run_training(
             man,
-            RunSpec::new(
+            RunSpec::run(
                 "cnn_tiny",
-                Box::new(RigL::new(1.0 - s, 0.3, (steps / 10).max(1))),
+                &format!("rigl:{s},0.3,{}", (steps / 10).max(1)),
                 steps,
             ),
         )?;
@@ -206,21 +184,17 @@ fn fig2c(man: &Manifest) -> Result<Report> {
         &["method", "sparsity", "top1"],
     );
     for s in [0.98, 0.99] {
+        // paper gives Top-KAST a slightly denser backward at extreme
+        // sparsity (its stated advantage)
         let tk = run_training(
             man,
-            RunSpec::new(
-                "cnn_tiny",
-                // paper gives Top-KAST a slightly denser backward at
-                // extreme sparsity (its stated advantage)
-                Box::new(TopKast::from_sparsities(s, (s - 0.08).max(0.0))),
-                steps,
-            ),
+            topkast_spec("cnn_tiny", s, (s - 0.08).max(0.0), steps),
         )?;
         let rl = run_training(
             man,
-            RunSpec::new(
+            RunSpec::run(
                 "cnn_tiny",
-                Box::new(RigL::new(1.0 - s, 0.3, (steps / 10).max(1))),
+                &format!("rigl:{s},0.3,{}", (steps / 10).max(1)),
                 steps,
             ),
         )?;
@@ -242,21 +216,10 @@ fn table1(man: &Manifest) -> Result<Report> {
         &["method", "fwd_sp", "bwd_sp", "top1"],
     );
     for (sf, sb) in [(0.9, 0.8), (0.95, 0.9)] {
-        let a = run_training(
-            man,
-            RunSpec::new(
-                "cnn_tiny",
-                Box::new(TopKast::from_sparsities(sf, sb)),
-                steps,
-            ),
-        )?;
+        let a = run_training(man, topkast_spec("cnn_tiny", sf, sb, steps))?;
         let b = run_training(
             man,
-            RunSpec::new(
-                "cnn_tiny",
-                Box::new(TopKastRandom::new(1.0 - sf, 1.0 - sb)),
-                steps,
-            ),
+            RunSpec::run("cnn_tiny", &format!("topkast_random:{sf},{sb}"), steps),
         )?;
         t.row(vec!["Top-KAST".into(), pct(sf), pct(sb), pct(a.accuracy)]);
         t.row(vec![
@@ -274,10 +237,11 @@ fn table1(man: &Manifest) -> Result<Report> {
     );
     // paper: t in {0, 5000, 16000, 32000} of 32000 — scaled to our run
     for frac in [0.0, 0.15, 0.5, 1.0] {
-        let mut tk = TopKast::from_sparsities(0.9, 0.0);
         let stop = (steps as f64 * frac) as usize;
-        tk.stop_exploration_at = Some(stop);
-        let r = run_training(man, RunSpec::new("cnn_tiny", Box::new(tk), steps))?;
+        let r = run_training(
+            man,
+            topkast_spec("cnn_tiny", 0.9, 0.0, steps).stop_exploration(stop),
+        )?;
         t2.row(vec![format!("t={stop}"), pct(r.accuracy)]);
     }
     rep.add(t2);
@@ -290,14 +254,7 @@ fn table1(man: &Manifest) -> Result<Report> {
 fn fig3(man: &Manifest) -> Result<Report> {
     let steps = steps_vision() * 2;
     let mut rep = Report::new();
-    let r = run_training(
-        man,
-        RunSpec::new(
-            "cnn_tiny",
-            Box::new(TopKast::from_sparsities(0.8, 0.5)),
-            steps,
-        ),
-    )?;
+    let r = run_training(man, topkast_spec("cnn_tiny", 0.8, 0.5, steps))?;
     let mut t = Table::new(
         "Fig 3(a): mask change between snapshots (fwd 80%, bwd 50%)",
         &["step", "min", "mean", "max"],
@@ -335,7 +292,7 @@ fn table2(man: &Manifest) -> Result<Report> {
         "Table 2: char-LM BPC (lm_tiny, corpus = synthetic enwik8 substitute)",
         &["method", "fwd_sp", "bwd_sp", "params", "bpc"],
     );
-    let dense = run_training(man, RunSpec::new("lm_tiny", Box::new(Dense), steps))?;
+    let dense = run_training(man, RunSpec::run("lm_tiny", "dense", steps))?;
     t.row(vec![
         "dense".into(),
         "0%".into(),
@@ -344,14 +301,7 @@ fn table2(man: &Manifest) -> Result<Report> {
         f3(dense.bpc),
     ]);
     for (sf, sb) in [(0.8, 0.0), (0.8, 0.8), (0.9, 0.6)] {
-        let r = run_training(
-            man,
-            RunSpec::new(
-                "lm_tiny",
-                Box::new(TopKast::from_sparsities(sf, sb)),
-                steps,
-            ),
-        )?;
+        let r = run_training(man, topkast_spec("lm_tiny", sf, sb, steps))?;
         t.row(vec![
             "Top-KAST".into(),
             pct(sf),
@@ -374,8 +324,7 @@ fn table3(man: &Manifest) -> Result<Report> {
         "Table 3: word-LM perplexity (lm_small; lm_tiny = the smaller dense)",
         &["model", "fwd_sp", "bwd_sp", "eff_params", "ppl"],
     );
-    let dense =
-        run_training(man, RunSpec::new("lm_small", Box::new(Dense), steps))?;
+    let dense = run_training(man, RunSpec::run("lm_small", "dense", steps))?;
     t.row(vec![
         "lm_small dense".into(),
         "0%".into(),
@@ -385,7 +334,7 @@ fn table3(man: &Manifest) -> Result<Report> {
     ]);
     // the paper's "smaller dense model with 3x fewer params than the 80%
     // sparse big model" comparison → lm_tiny dense
-    let small = run_training(man, RunSpec::new("lm_tiny", Box::new(Dense), steps))?;
+    let small = run_training(man, RunSpec::run("lm_tiny", "dense", steps))?;
     t.row(vec![
         "lm_tiny dense".into(),
         "0%".into(),
@@ -394,14 +343,7 @@ fn table3(man: &Manifest) -> Result<Report> {
         f2(small.perplexity),
     ]);
     for (sf, sb) in [(0.8, 0.0), (0.8, 0.6), (0.9, 0.8), (0.95, 0.9)] {
-        let r = run_training(
-            man,
-            RunSpec::new(
-                "lm_small",
-                Box::new(TopKast::from_sparsities(sf, sb)),
-                steps,
-            ),
-        )?;
+        let r = run_training(man, topkast_spec("lm_small", sf, sb, steps))?;
         t.row(vec![
             "lm_small Top-KAST".into(),
             pct(sf),
@@ -424,30 +366,19 @@ fn table5(man: &Manifest) -> Result<Report> {
         "Table 5: pruning vs Top-KAST BPC (lm_tiny)",
         &["fwd_sp", "bwd_sp", "pruning_bpc", "topkast_bpc"],
     );
-    let d = run_training(man, RunSpec::new("lm_tiny", Box::new(Dense), steps))?;
+    let d = run_training(man, RunSpec::run("lm_tiny", "dense", steps))?;
     t.row(vec!["0%".into(), "0%".into(), f3(d.bpc), f3(d.bpc)]);
     for (sf, sb) in [(0.8, 0.0), (0.8, 0.6), (0.9, 0.0), (0.9, 0.8), (0.95, 0.9)] {
         let p = if sb == 0.0 {
             let r = run_training(
                 man,
-                RunSpec::new(
-                    "lm_tiny",
-                    Box::new(MagnitudePruning::new(1.0 - sf)),
-                    steps,
-                ),
+                RunSpec::run("lm_tiny", &format!("pruning:{sf}"), steps),
             )?;
             f3(r.bpc)
         } else {
             "-".into() // pruning has no sparse-backward variant
         };
-        let k = run_training(
-            man,
-            RunSpec::new(
-                "lm_tiny",
-                Box::new(TopKast::from_sparsities(sf, sb)),
-                steps,
-            ),
-        )?;
+        let k = run_training(man, topkast_spec("lm_tiny", sf, sb, steps))?;
         t.row(vec![pct(sf), pct(sb), p, f3(k.bpc)]);
     }
     rep.add(t);
@@ -467,12 +398,7 @@ fn table6(man: &Manifest) -> Result<Report> {
     for (sf, sb) in [(0.8, 0.5), (0.9, 0.8), (0.95, 0.9)] {
         let mut cells = vec![pct(sf), pct(sb)];
         for n in [1usize, 25, 100] {
-            let mut spec = RunSpec::new(
-                "cnn_tiny",
-                Box::new(TopKast::from_sparsities(sf, sb)),
-                steps,
-            );
-            spec.refresh_every = n;
+            let spec = topkast_spec("cnn_tiny", sf, sb, steps).refresh_every(n);
             let r = run_training(man, spec)?;
             cells.push(pct(r.accuracy));
         }
@@ -494,14 +420,7 @@ fn appb(man: &Manifest) -> Result<Report> {
     );
     for s in [0.8, 0.9] {
         for model in ["cnn_tiny", "cnn_tiny_allsparse"] {
-            let r = run_training(
-                man,
-                RunSpec::new(
-                    model,
-                    Box::new(TopKast::from_sparsities(s, s - 0.3)),
-                    steps,
-                ),
-            )?;
+            let r = run_training(man, topkast_spec(model, s, s - 0.3, steps))?;
             t.row(vec![model.into(), pct(s), pct(r.accuracy)]);
         }
     }
@@ -562,8 +481,7 @@ fn perf(man: &Manifest) -> Result<Report> {
         ("lm_tiny", "topkast:0.8,0.5"),
         ("lm_small", "topkast:0.8,0.5"),
     ] {
-        let mut spec = RunSpec::new(model, strategy_from_str(strat)?, 60);
-        spec.refresh_every = 10;
+        let spec = RunSpec::run(model, strat, 60).refresh_every(10);
         let r = run_training(man, spec)?;
         t2.row(vec![
             model.into(),
@@ -580,12 +498,7 @@ fn perf(man: &Manifest) -> Result<Report> {
         &["refresh_N", "step_ms", "refresh_ms_mean"],
     );
     for n in [1usize, 10, 100] {
-        let mut spec = RunSpec::new(
-            "lm_small",
-            Box::new(TopKast::from_sparsities(0.8, 0.5)),
-            60,
-        );
-        spec.refresh_every = n;
+        let spec = topkast_spec("lm_small", 0.8, 0.5, 60).refresh_every(n);
         let r = run_training(man, spec)?;
         t3.row(vec![n.to_string(), f3(r.step_time_ms), f3(r.refresh_time_ms)]);
     }

@@ -2,6 +2,10 @@
 //! set B\A; (b) stopping exploration (freezing B=A) at different points
 //! in training — the two-phase learning-dynamics probe of §4.1.
 //!
+//! Each point is a declarative `RunSpec`; the exploration stop is the
+//! spec's `stop_exploration` knob (validated by the strategy registry —
+//! no concrete-type plumbing).
+//!
 //!   cargo run --release --example ablations [steps]
 
 use anyhow::Result;
@@ -9,7 +13,6 @@ use anyhow::Result;
 use topkast::bench::reports::pct;
 use topkast::bench::{run_training, RunSpec, Table};
 use topkast::runtime::Manifest;
-use topkast::sparsity::{TopKast, TopKastRandom};
 
 fn main() -> Result<()> {
     let steps: usize = std::env::args()
@@ -27,19 +30,11 @@ fn main() -> Result<()> {
     for (sf, sb) in [(0.9, 0.8), (0.95, 0.9)] {
         let a = run_training(
             &manifest,
-            RunSpec::new(
-                "cnn_tiny",
-                Box::new(TopKast::from_sparsities(sf, sb)),
-                steps,
-            ),
+            RunSpec::run("cnn_tiny", &format!("topkast:{sf},{sb}"), steps),
         )?;
         let b = run_training(
             &manifest,
-            RunSpec::new(
-                "cnn_tiny",
-                Box::new(TopKastRandom::new(1.0 - sf, 1.0 - sb)),
-                steps,
-            ),
+            RunSpec::run("cnn_tiny", &format!("topkast_random:{sf},{sb}"), steps),
         )?;
         t.row(vec!["top-k B".into(), pct(sf), pct(sb), pct(a.accuracy)]);
         t.row(vec!["random B".into(), pct(sf), pct(sb), pct(b.accuracy)]);
@@ -55,11 +50,9 @@ fn main() -> Result<()> {
     );
     for frac in [0.0, 0.15, 0.5, 1.0] {
         let stop = (steps as f64 * frac) as usize;
-        let mut tk = TopKast::from_sparsities(0.9, 0.0);
-        tk.stop_exploration_at = Some(stop);
         let r = run_training(
             &manifest,
-            RunSpec::new("cnn_tiny", Box::new(tk), steps),
+            RunSpec::run("cnn_tiny", "topkast:0.9,0.0", steps).stop_exploration(stop),
         )?;
         t2.row(vec![format!("{stop}"), pct(r.accuracy)]);
     }

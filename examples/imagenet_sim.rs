@@ -2,63 +2,45 @@
 //! training methods at the same sparsity and print the Fig-2-style
 //! comparison (accuracy at matched FLOPs budgets).
 //!
+//! Each method is one strategy string in a `RunSpec` — adding a new
+//! baseline to this comparison is one more line.
+//!
 //!   cargo run --release --example imagenet_sim [steps] [sparsity]
 
 use anyhow::Result;
 
-use topkast::bench::{run_training, RunSpec, Table};
 use topkast::bench::reports::{f3, pct};
+use topkast::bench::{run_training, RunSpec, Table};
 use topkast::runtime::Manifest;
-use topkast::sparsity::{
-    Dense, MagnitudePruning, RigL, SetEvolve, StaticRandom, TopKast,
-};
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let steps: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(300);
     let sparsity: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(0.8);
-    let d = 1.0 - sparsity;
 
     let manifest = Manifest::load("artifacts")?;
     topkast::util::log::set_level(topkast::util::log::Level::Warn);
 
     let mut t = Table::new(
-        &format!("ImageNet-sim: methods at {:.0}% sparsity, {steps} steps", sparsity * 100.0),
+        &format!(
+            "ImageNet-sim: methods at {:.0}% sparsity, {steps} steps",
+            sparsity * 100.0
+        ),
         &["method", "top1", "flops_frac", "step_ms"],
     );
-    let runs: Vec<(&str, RunSpec)> = vec![
-        ("dense", RunSpec::new("cnn_tiny", Box::new(Dense), steps)),
-        (
-            "static",
-            RunSpec::new("cnn_tiny", Box::new(StaticRandom::new(d)), steps),
-        ),
-        (
-            "SET",
-            RunSpec::new("cnn_tiny", Box::new(SetEvolve::new(d, 0.3, 0.05)), steps),
-        ),
-        (
-            "RigL",
-            RunSpec::new(
-                "cnn_tiny",
-                Box::new(RigL::new(d, 0.3, (steps / 10).max(1))),
-                steps,
-            ),
-        ),
-        (
-            "pruning",
-            RunSpec::new("cnn_tiny", Box::new(MagnitudePruning::new(d)), steps),
-        ),
-        (
-            "Top-KAST",
-            RunSpec::new(
-                "cnn_tiny",
-                Box::new(TopKast::new(d, (d + 0.3).min(1.0))),
-                steps,
-            ),
-        ),
+    // Top-KAST's backward set is 30 points denser than its forward set
+    // (sparsity 0.8 → backward sparsity 0.5), clamped at fully dense.
+    let tk_bwd = (sparsity - 0.3).max(0.0);
+    let runs: Vec<(&str, String)> = vec![
+        ("dense", "dense".to_string()),
+        ("static", format!("static:{sparsity}")),
+        ("SET", format!("set:{sparsity},0.3")),
+        ("RigL", format!("rigl:{sparsity},0.3,{}", (steps / 10).max(1))),
+        ("pruning", format!("pruning:{sparsity}")),
+        ("Top-KAST", format!("topkast:{sparsity},{tk_bwd}")),
     ];
-    for (name, spec) in runs {
-        let r = run_training(&manifest, spec)?;
+    for (name, strategy) in runs {
+        let r = run_training(&manifest, RunSpec::run("cnn_tiny", &strategy, steps))?;
         t.row(vec![
             name.into(),
             pct(r.accuracy),

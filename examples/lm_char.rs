@@ -3,40 +3,34 @@
 //! corpus for several hundred steps, logging the loss curve, eval BPC,
 //! mask-churn and step-latency — then compare against the dense run.
 //!
+//! Both runs are built from the same `RunSpec` through
+//! `Session::builder()`; only the strategy string differs.
+//!
 //!   cargo run --release --example lm_char [steps] [fwd_sparsity] [bwd_sparsity]
 
 use anyhow::Result;
 
-use topkast::coordinator::{source_for, LrSchedule, Trainer, TrainerConfig};
-use topkast::runtime::{Manifest, Runtime};
-use topkast::sparsity::{Dense, MaskStrategy, TopKast};
+use topkast::api::{RunSpec, Session};
+use topkast::coordinator::LrSchedule;
+use topkast::runtime::Manifest;
 
-fn train_one(
-    manifest: &Manifest,
-    strategy: Box<dyn MaskStrategy>,
-    steps: usize,
-) -> Result<Trainer> {
-    let model = manifest.model("lm_small")?.clone();
-    let cfg = TrainerConfig {
-        steps,
-        lr: LrSchedule::WarmupCosine {
+fn train_one(manifest: &Manifest, strategy: &str, steps: usize) -> Result<Session> {
+    let spec = RunSpec::run("lm_small", strategy, steps)
+        .lr(LrSchedule::WarmupCosine {
             base: 3e-3,
             warmup: (steps / 10).max(10),
             floor: 1e-5,
-        },
-        reg_scale: 1e-4,
-        refresh_every: 10, // Appendix C: infrequent host top-k suffices
-        churn_every: (steps / 10).max(1),
-        eval_every: Some((steps / 5).max(1)),
-        eval_batches: 8,
-        seed: 7,
-        log_every: (steps / 20).max(1),
-    };
-    let runtime = Runtime::new()?;
-    let data = source_for(&model, 7 ^ 0xDA7A)?;
-    let mut trainer = Trainer::new(runtime, model, strategy, data, cfg)?;
-    trainer.train()?;
-    Ok(trainer)
+        })
+        .reg_scale(1e-4)
+        .refresh_every(10) // Appendix C: infrequent host top-k suffices
+        .churn_every((steps / 10).max(1))
+        .eval_every((steps / 5).max(1))
+        .eval_batches(8)
+        .seed(7)
+        .log_every((steps / 20).max(1));
+    let mut session = Session::builder().manifest(manifest).spec(spec).build()?;
+    session.train()?;
+    Ok(session)
 }
 
 fn main() -> Result<()> {
@@ -47,31 +41,27 @@ fn main() -> Result<()> {
 
     let manifest = Manifest::load("artifacts")?;
 
-    println!("=== Top-KAST ({:.0}% fwd / {:.0}% bwd sparse) ===", s_fwd * 100.0, s_bwd * 100.0);
-    let mut sparse = train_one(
-        &manifest,
-        Box::new(TopKast::from_sparsities(s_fwd, s_bwd)),
-        steps,
-    )?;
+    println!(
+        "=== Top-KAST ({:.0}% fwd / {:.0}% bwd sparse) ===",
+        s_fwd * 100.0,
+        s_bwd * 100.0
+    );
+    let mut sparse =
+        train_one(&manifest, &format!("topkast:{s_fwd},{s_bwd}"), steps)?;
     let ev_sparse = sparse.evaluate()?;
 
     println!("\n=== dense baseline ===");
-    let mut dense = train_one(&manifest, Box::new(Dense), steps)?;
+    let mut dense = train_one(&manifest, "dense", steps)?;
     let ev_dense = dense.evaluate()?;
 
     println!("\n=== loss curve (Top-KAST) ===");
-    let n = sparse.metrics.losses.len();
-    for (step, loss) in sparse
-        .metrics
-        .losses
-        .iter()
-        .step_by((n / 20).max(1))
-    {
+    let losses = &sparse.trainer.metrics.losses;
+    for (step, loss) in losses.iter().step_by((losses.len() / 20).max(1)) {
         println!("  step {step:5}  loss {loss:.4}");
     }
 
     println!("\n=== mask churn (Fig 3a view) ===");
-    for (step, min, mean, max) in sparse.metrics.churn.summary() {
+    for (step, min, mean, max) in sparse.trainer.metrics.churn.summary() {
         println!(
             "  step {step:5}  churn min {:.2}% mean {:.2}% max {:.2}%",
             min * 100.0,
@@ -79,7 +69,7 @@ fn main() -> Result<()> {
             max * 100.0
         );
     }
-    if let Some(frac) = sparse.metrics.reservoir.final_fraction() {
+    if let Some(frac) = sparse.trainer.metrics.reservoir.final_fraction() {
         println!("  reservoir ever-woken fraction: {:.2}%", frac * 100.0);
     }
 
@@ -88,20 +78,20 @@ fn main() -> Result<()> {
         "  Top-KAST: eval BPC {:.3} ppl {:.1} eff-params {} step {:.1} ms",
         ev_sparse.bpc,
         ev_sparse.perplexity,
-        sparse.store.effective_params(),
-        sparse.metrics.step_time.mean()
+        sparse.trainer.store.effective_params(),
+        sparse.trainer.metrics.step_time.mean()
     );
     println!(
         "  dense:    eval BPC {:.3} ppl {:.1} eff-params {} step {:.1} ms",
         ev_dense.bpc,
         ev_dense.perplexity,
-        dense.store.effective_params(),
-        dense.metrics.step_time.mean()
+        dense.trainer.store.effective_params(),
+        dense.trainer.metrics.step_time.mean()
     );
     println!(
         "  sparse model keeps {:.0}% of params at {:+.3} BPC vs dense",
-        100.0 * sparse.store.effective_params() as f64
-            / dense.store.effective_params() as f64,
+        100.0 * sparse.trainer.store.effective_params() as f64
+            / dense.trainer.store.effective_params() as f64,
         ev_sparse.bpc - ev_dense.bpc
     );
     Ok(())

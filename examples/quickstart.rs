@@ -1,55 +1,49 @@
 //! Quickstart: train a small MLP with Top-KAST (80% forward sparsity,
 //! 50% backward sparsity) through the full three-layer stack, evaluate,
-//! checkpoint, and restore.
+//! checkpoint, and restore — all through the unified `Session` API:
+//! describe the run as a `RunSpec`, let `Session::builder()` wire the
+//! manifest, runtime, data source and strategy.
 //!
 //!   make artifacts && cargo run --release --example quickstart
 
 use anyhow::Result;
 
-use topkast::coordinator::{
-    source_for, Checkpoint, LrSchedule, Trainer, TrainerConfig,
-};
-use topkast::runtime::{Manifest, Runtime};
-use topkast::sparsity::TopKast;
+use topkast::api::{RunSpec, Session};
+use topkast::coordinator::{Checkpoint, LrSchedule};
 
 fn main() -> Result<()> {
-    // 1. Load the AOT artifacts built by `make artifacts`.
-    let manifest = Manifest::load("artifacts")?;
-    let model = manifest.model("mlp_tiny")?.clone();
+    // 1. Describe the run declaratively: the paper's method — forward
+    //    top-20% by magnitude, gradients to the top-50% superset (paper
+    //    notation: sparsity 0.8 / 0.5) — with masks refreshed every 10
+    //    steps (Appendix C).
+    let spec = RunSpec::run("mlp_tiny", "topkast:0.8,0.5", 300)
+        .lr(LrSchedule::Constant { base: 0.1 })
+        .refresh_every(10)
+        .seed(42);
+
+    // 2. Build the session: loads the AOT artifacts from `make
+    //    artifacts`, resolves the strategy through the registry, and
+    //    wires the data pipeline.
+    let mut session = Session::builder().artifacts("artifacts").spec(spec).build()?;
     println!(
         "model: {} ({} parameters, {} sparse tensors)",
-        model.name,
-        model.total_params(),
-        model.sparse_params().len()
+        session.trainer.model.name,
+        session.trainer.model.total_params(),
+        session.trainer.model.sparse_params().len()
     );
 
-    // 2. Pick the paper's method: forward top-20% by magnitude, gradients
-    //    to the top-50% superset (paper notation: sparsity 0.8 / 0.5).
-    let strategy = Box::new(TopKast::from_sparsities(0.8, 0.5));
-
-    // 3. Train. The coordinator holds dense θ on the host, refreshes the
-    //    masks every 10 steps (Appendix C), and dispatches the AOT'd
-    //    sparse train step through PJRT.
-    let cfg = TrainerConfig {
-        steps: 300,
-        lr: LrSchedule::Constant { base: 0.1 },
-        refresh_every: 10,
-        seed: 42,
-        ..Default::default()
-    };
-    let runtime = Runtime::new()?;
-    let data = source_for(&model, 42)?;
-    let mut trainer = Trainer::new(runtime, model, strategy, data, cfg)?;
-    trainer.train()?;
+    // 3. Train. The coordinator holds dense θ on the host and
+    //    dispatches the AOT'd sparse train step through PJRT.
+    session.train()?;
 
     // 4. Evaluate on held-out data.
-    let ev = trainer.evaluate()?;
+    let ev = session.evaluate()?;
     println!(
         "eval: loss {:.4}, accuracy {:.1}%, effective params {} of {}",
         ev.loss_mean,
         100.0 * ev.accuracy,
-        trainer.store.effective_params(),
-        trainer.store.total_params(),
+        session.trainer.store.effective_params(),
+        session.trainer.store.total_params(),
     );
     assert!(ev.accuracy > 0.4, "quickstart should beat 10-way chance easily");
 
@@ -57,7 +51,7 @@ fn main() -> Result<()> {
     let dir = std::env::temp_dir().join("topkast_quickstart");
     std::fs::create_dir_all(&dir)?;
     let path = dir.join("mlp.ckpt");
-    Checkpoint::capture(&trainer.store, &[], trainer.step).save(&path)?;
+    session.save_checkpoint(&path)?;
     let restored = Checkpoint::load(&path)?;
     println!("checkpoint: step {} restored from {:?}", restored.step, path);
     Ok(())

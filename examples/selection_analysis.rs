@@ -7,37 +7,37 @@
 //! sparse views under three selection rules (top-k, random, bottom-k)
 //! across densities, and report the loss gap |L(α) − L(θ)|.
 //!
+//! The dense model is trained through `Session::builder()`; the
+//! analysis then rewrites the session's masks in place (the trainer and
+//! its store stay public exactly for this kind of probing).
+//!
 //!   cargo run --release --example selection_analysis
 
 use anyhow::Result;
 
+use topkast::api::{RunSpec, Session};
 use topkast::bench::reports::f3;
 use topkast::bench::Table;
-use topkast::coordinator::{source_for, LrSchedule, Trainer, TrainerConfig};
-use topkast::runtime::{Manifest, Runtime};
-use topkast::sparsity::{topk, Dense};
+use topkast::coordinator::LrSchedule;
+use topkast::sparsity::topk;
 use topkast::util::rng::Pcg64;
 
 fn main() -> Result<()> {
     topkast::util::log::set_level(topkast::util::log::Level::Warn);
-    let manifest = Manifest::load("artifacts")?;
-    let model = manifest.model("mlp_tiny")?.clone();
 
     // Train a dense model first so the weight distribution is the
     // post-training one the paper's argument applies to.
-    let cfg = TrainerConfig {
-        steps: 200,
-        lr: LrSchedule::Constant { base: 0.1 },
-        reg_scale: 1e-4,
-        seed: 3,
-        log_every: usize::MAX,
-        ..Default::default()
-    };
-    let runtime = Runtime::new()?;
-    let data = source_for(&model, 3 ^ 0xDA7A)?;
-    let mut trainer = Trainer::new(runtime, model, Box::new(Dense), data, cfg)?;
-    trainer.train()?;
-    let dense_loss = trainer.evaluate()?.loss_mean;
+    let spec = RunSpec::run("mlp_tiny", "dense", 200)
+        .lr(LrSchedule::Constant { base: 0.1 })
+        .reg_scale(1e-4)
+        .seed(3);
+    let mut session = Session::builder()
+        .artifacts("artifacts")
+        .spec(spec)
+        .quiet()
+        .build()?;
+    session.train()?;
+    let dense_loss = session.evaluate()?.loss_mean;
     println!("dense eval loss: {dense_loss:.4}");
 
     let mut table = Table::new(
@@ -49,7 +49,7 @@ fn main() -> Result<()> {
         let mut cells = vec![format!("{density:.2}")];
         for rule in ["topk", "random", "bottomk"] {
             // overwrite the sparse tensors' fwd masks with the rule
-            for e in trainer.store.entries.iter_mut() {
+            for e in session.trainer.store.entries.iter_mut() {
                 let Some(m) = e.masks.as_mut() else { continue };
                 let n = e.values.len();
                 let k = topk::k_for_density(n, density);
@@ -70,7 +70,7 @@ fn main() -> Result<()> {
                     }
                 };
             }
-            let loss = trainer.evaluate()?.loss_mean;
+            let loss = session.evaluate()?.loss_mean;
             cells.push(f3((loss - dense_loss).abs()));
         }
         table.row(cells);

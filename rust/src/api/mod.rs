@@ -1,0 +1,42 @@
+//! The unified run-construction API.
+//!
+//! One surface builds every training run — the CLI, the bench harness
+//! and the examples all go through it, so "a few additional lines of
+//! code" (the paper's pitch) is literally what a new scenario costs:
+//!
+//! ```no_run
+//! use topkast::api::{RunSpec, Session};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let mut session = Session::builder()
+//!     .artifacts("artifacts")
+//!     .spec(RunSpec::run("mlp_tiny", "topkast:0.8,0.5", 300).seed(42))
+//!     .build()?;
+//! session.train()?;
+//! let ev = session.evaluate()?;
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! The pieces:
+//!
+//! * [`RunSpec`] (`config::spec`) — a serializable, partial run
+//!   description; layers merge with `defaults ← preset ← JSON config ←
+//!   explicit CLI flags` precedence.
+//! * [`StrategyRegistry`] (`sparsity::registry`) — string-keyed
+//!   strategy factories; one parse path for every entry surface, and
+//!   re-instantiation for the §2.4 async-refresh worker.
+//! * [`TrainObserver`] (`coordinator::observer`) — hooks the training
+//!   loop drives for logging, JSONL metric streaming and periodic
+//!   checkpointing.
+//! * [`Session`] — owns manifest/runtime/data/strategy wiring and is
+//!   the only place a `Trainer` gets constructed.
+
+mod session;
+
+pub use crate::config::{default_lr, ResolvedRun, RunSpec};
+pub use crate::coordinator::{
+    ConsoleLogger, JsonlMetrics, PeriodicCheckpoint, TrainObserver,
+};
+pub use crate::sparsity::{StrategyRegistry, StrategySpec, StrategyTuning};
+pub use session::{Session, SessionBuilder};

@@ -9,5 +9,6 @@
 pub mod reports;
 pub mod runner;
 
+pub use crate::api::RunSpec;
 pub use reports::{Report, Table};
-pub use runner::{run_training, ExperimentResult, RunSpec};
+pub use runner::{run_training, ExperimentResult};

@@ -71,6 +71,10 @@ impl Table {
     }
 }
 
+/// Directory every bench report (and the stdout summary contract)
+/// points at.
+pub const RESULTS_DIR: &str = "bench_results";
+
 /// Collects tables for one bench invocation and persists them.
 #[derive(Default)]
 pub struct Report {
@@ -87,13 +91,33 @@ impl Report {
         self.tables.push(t);
     }
 
-    /// Write all tables as JSON under bench_results/<name>.json.
+    /// Write all tables as JSON under `RESULTS_DIR/<name>.json`.
     pub fn save(&self, name: &str) -> Result<()> {
-        let dir = Path::new("bench_results");
+        let dir = Path::new(RESULTS_DIR);
         std::fs::create_dir_all(dir)?;
         let j = Json::arr(self.tables.iter().map(|t| t.to_json()));
         std::fs::write(dir.join(format!("{name}.json")), j.to_string_pretty())?;
         Ok(())
+    }
+
+    /// Final single-line JSON summary for one scenario — the
+    /// harness-friendly stdout contract (an orchestrator greps the last
+    /// JSON line per scenario instead of parsing tables).
+    pub fn summary_line(&self, scenario: &str, elapsed_s: f64) -> String {
+        Json::obj(vec![
+            ("scenario", Json::str(scenario)),
+            ("status", Json::str("ok")),
+            ("tables", Json::num(self.tables.len() as f64)),
+            (
+                "rows",
+                Json::num(
+                    self.tables.iter().map(|t| t.rows.len()).sum::<usize>() as f64
+                ),
+            ),
+            ("elapsed_s", Json::num(elapsed_s)),
+            ("results_file", Json::str(format!("{RESULTS_DIR}/{scenario}.json"))),
+        ])
+        .to_string_compact()
     }
 }
 
@@ -152,5 +176,24 @@ mod tests {
         assert_eq!(pct(f64::NAN), "-");
         assert_eq!(f3(1.23456), "1.235");
         assert_eq!(f2(f64::NAN), "-");
+    }
+
+    #[test]
+    fn summary_line_is_single_line_json() {
+        let mut rep = Report::new();
+        let mut t = Table::new("demo", &["a"]);
+        t.row(vec!["1".into()]);
+        t.row(vec!["2".into()]);
+        rep.tables.push(t);
+        let line = rep.summary_line("fig2a_flops_vs_accuracy", 1.5);
+        assert!(!line.contains('\n'));
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(
+            j.get("scenario").unwrap().as_str().unwrap(),
+            "fig2a_flops_vs_accuracy"
+        );
+        assert_eq!(j.get("rows").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("tables").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(j.get("status").unwrap().as_str().unwrap(), "ok");
     }
 }

@@ -1,42 +1,12 @@
-//! Parameterised training runs for the bench experiments.
+//! Parameterised training runs for the bench experiments — thin
+//! wrapper over `api::Session` that adds the FLOPs accounting the
+//! figures need.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use crate::coordinator::{source_for, LrSchedule, Trainer, TrainerConfig};
-use crate::runtime::{Manifest, Runtime};
-use crate::sparsity::{flops, MaskStrategy};
-
-/// One experiment point: a (model, strategy, schedule) training run.
-pub struct RunSpec {
-    pub model: String,
-    pub strategy: Box<dyn MaskStrategy>,
-    pub steps: usize,
-    pub refresh_every: usize,
-    pub seed: u64,
-    pub reg_scale: f64,
-    pub eval_batches: usize,
-    /// Multiplier applied in the FLOPs model (paper trains Top-KAST at
-    /// 1x/2x the default run length in Fig 2a).
-    pub train_multiplier: f64,
-    /// Override the per-kind default LR schedule.
-    pub lr: Option<LrSchedule>,
-}
-
-impl RunSpec {
-    pub fn new(model: &str, strategy: Box<dyn MaskStrategy>, steps: usize) -> Self {
-        RunSpec {
-            model: model.to_string(),
-            strategy,
-            steps,
-            refresh_every: 1,
-            seed: 0,
-            reg_scale: 1e-4,
-            eval_batches: 8,
-            train_multiplier: 1.0,
-            lr: None,
-        }
-    }
-}
+use crate::api::{RunSpec, Session};
+use crate::runtime::Manifest;
+use crate::sparsity::flops;
 
 #[derive(Clone, Debug)]
 pub struct ExperimentResult {
@@ -60,56 +30,33 @@ pub struct ExperimentResult {
     pub losses: Vec<(usize, f64)>,
 }
 
-fn default_lr(kind: &str, steps: usize) -> LrSchedule {
-    match kind {
-        "lm" => LrSchedule::WarmupCosine {
-            base: 3e-3,
-            warmup: (steps / 10).max(10),
-            floor: 1e-5,
-        },
-        "cnn" => LrSchedule::StepDrops {
-            base: 0.05,
-            factor: 0.1,
-            at: vec![0.5, 0.8],
-            warmup: steps / 20,
-        },
-        _ => LrSchedule::Constant { base: 0.1 },
-    }
-}
+/// Execute one experiment point end-to-end on the real runtime. The
+/// spec must name a model, a strategy and a step count; unset knobs
+/// fall to bench-friendly defaults (quiet, churn snapshots at steps/8).
+pub fn run_training(manifest: &Manifest, mut spec: RunSpec) -> Result<ExperimentResult> {
+    let steps = spec.steps.context("bench spec needs steps")?;
+    spec.churn_every.get_or_insert((steps / 8).max(1));
 
-/// Execute one experiment point end-to-end on the real runtime.
-pub fn run_training(manifest: &Manifest, spec: RunSpec) -> Result<ExperimentResult> {
-    let model = manifest.model(&spec.model)?.clone();
-    let lr = spec
-        .lr
-        .clone()
-        .unwrap_or_else(|| default_lr(&model.kind, spec.steps));
-    let cfg = TrainerConfig {
-        steps: spec.steps,
-        lr,
-        reg_scale: spec.reg_scale,
-        refresh_every: spec.refresh_every,
-        churn_every: (spec.steps / 8).max(1),
-        eval_every: None,
-        eval_batches: spec.eval_batches,
-        seed: spec.seed,
-        log_every: usize::MAX, // quiet inside benches
-    };
-    let runtime = Runtime::new()?;
-    let data = source_for(&model, spec.seed ^ 0xDA7A)?;
-    let strategy_name = spec.strategy.name().to_string();
+    let mut session = Session::builder()
+        .manifest(manifest)
+        .spec(spec)
+        .quiet()
+        .build()?;
+    let train_multiplier = session.resolved.train_multiplier;
+    // FLOPs accounting reads the session's own strategy instance before
+    // training starts (densities are a function of step, not state).
     let flops_fraction = flops::run_flops_fraction(
-        spec.strategy.as_ref(),
-        &model.params,
-        spec.steps,
-        spec.train_multiplier,
+        session.trainer.strategy.as_ref(),
+        &session.trainer.model.params,
+        steps,
+        train_multiplier,
     );
-    let avg_bwd = spec.strategy.avg_backward_density(spec.steps);
-    let mut trainer = Trainer::new(runtime, model, spec.strategy, data, cfg)?;
-    trainer.train()?;
-    let ev = trainer.evaluate()?;
+    let avg_bwd = session.trainer.strategy.avg_backward_density(steps);
+    session.train()?;
+    let ev = session.evaluate()?;
+    let trainer = &session.trainer;
     Ok(ExperimentResult {
-        strategy: strategy_name,
+        strategy: trainer.strategy.name().to_string(),
         final_loss: trainer.metrics.tail_loss(10).unwrap_or(f64::NAN),
         eval_loss: ev.loss_mean,
         accuracy: ev.accuracy,

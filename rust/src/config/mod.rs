@@ -1,102 +1,66 @@
-//! Experiment configuration: named presets mirroring the paper's
-//! hyper-parameter tables (Supplementary A/B), plus JSON config-file
-//! loading so runs are declarative and archivable.
+//! Experiment configuration: the declarative [`RunSpec`], named presets
+//! mirroring the paper's hyper-parameter tables (Supplementary A/B),
+//! and JSON config-file loading so runs are archivable.
+//!
+//! All entry surfaces build the same [`RunSpec`] and merge layers with
+//! "later wins" precedence (defaults ← preset ← config file ← explicit
+//! CLI flags); `api::Session::builder()` consumes the result.
+//!
+//! # RunSpec JSON schema
+//!
+//! Every key is optional — unset keys fall through to the layer below.
+//! Unknown keys are rejected so typo'd configs fail loudly.
+//!
+//! ```json
+//! {
+//!   "model": "lm_tiny",
+//!   "strategy": "topkast:0.8,0.5",
+//!   "steps": 500,
+//!   "refresh_every": 10,
+//!   "churn_every": 50,
+//!   "eval_every": 100,
+//!   "eval_batches": 8,
+//!   "seed": 1,
+//!   "log_every": 50,
+//!   "reg_scale": 1e-4,
+//!   "stop_exploration_at": 250,
+//!   "async_refresh": false,
+//!   "checkpoint": "runs/lm.ckpt",
+//!   "train_multiplier": 1.0,
+//!   "lr": {"kind": "warmup_cosine", "base": 3e-3, "warmup": 50, "floor": 1e-5}
+//! }
+//! ```
+//!
+//! `lr` also accepts a bare number (a base-LR override fed into the
+//! model kind's default schedule), or `{"kind": "constant", "base": …}`
+//! / `{"kind": "step_drops", "base": …, "factor": …, "at": [...],
+//! "warmup": …}`.
 
 mod presets;
+mod spec;
 
 pub use presets::{preset, preset_names, Preset};
+pub use spec::{default_lr, ResolvedRun, RunSpec};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{LrSchedule, TrainerConfig};
-use crate::util::json::Json;
-
-/// Load a TrainerConfig (+ model/strategy names) from a JSON file:
-///
-/// ```json
-/// {
-///   "model": "lm_tiny",
-///   "strategy": "topkast:0.8,0.5",
-///   "steps": 500,
-///   "refresh_every": 10,
-///   "seed": 1,
-///   "reg_scale": 1e-4,
-///   "lr": {"kind": "warmup_cosine", "base": 3e-3, "warmup": 50, "floor": 1e-5}
-/// }
-/// ```
-#[derive(Clone, Debug)]
-pub struct RunConfig {
-    pub model: String,
-    pub strategy: String,
-    pub trainer: TrainerConfig,
-}
-
-pub fn load_run_config(path: &str) -> Result<RunConfig> {
+/// Load a [`RunSpec`] layer from a JSON file.
+pub fn load_run_config(path: &str) -> Result<RunSpec> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading config {path:?}"))?;
-    parse_run_config(&text)
+    parse_run_config(&text).with_context(|| format!("parsing config {path:?}"))
 }
 
-pub fn parse_run_config(text: &str) -> Result<RunConfig> {
-    let j = Json::parse(text)?;
-    let mut cfg = TrainerConfig::default();
-    if let Some(v) = j.opt("steps") {
-        cfg.steps = v.as_usize()?;
-    }
-    if let Some(v) = j.opt("refresh_every") {
-        cfg.refresh_every = v.as_usize()?.max(1);
-    }
-    if let Some(v) = j.opt("seed") {
-        cfg.seed = v.as_f64()? as u64;
-    }
-    if let Some(v) = j.opt("reg_scale") {
-        cfg.reg_scale = v.as_f64()?;
-    }
-    if let Some(v) = j.opt("eval_every") {
-        cfg.eval_every = match v.as_usize()? {
-            0 => None,
-            n => Some(n),
-        };
-    }
-    if let Some(v) = j.opt("eval_batches") {
-        cfg.eval_batches = v.as_usize()?;
-    }
-    if let Some(lr) = j.opt("lr") {
-        cfg.lr = parse_lr(lr)?;
-    }
-    Ok(RunConfig {
-        model: j.get("model")?.as_str()?.to_string(),
-        strategy: j.get("strategy")?.as_str()?.to_string(),
-        trainer: cfg,
-    })
-}
-
-fn parse_lr(j: &Json) -> Result<LrSchedule> {
-    Ok(match j.get("kind")?.as_str()? {
-        "constant" => LrSchedule::Constant { base: j.get("base")?.as_f64()? },
-        "warmup_cosine" => LrSchedule::WarmupCosine {
-            base: j.get("base")?.as_f64()?,
-            warmup: j.get("warmup")?.as_usize()?,
-            floor: j.opt("floor").map(|f| f.as_f64()).transpose()?.unwrap_or(0.0),
-        },
-        "step_drops" => LrSchedule::StepDrops {
-            base: j.get("base")?.as_f64()?,
-            factor: j.get("factor")?.as_f64()?,
-            at: j
-                .get("at")?
-                .as_arr()?
-                .iter()
-                .map(|v| v.as_f64())
-                .collect::<Result<_>>()?,
-            warmup: j.opt("warmup").map(|v| v.as_usize()).transpose()?.unwrap_or(0),
-        },
-        k => anyhow::bail!("unknown lr kind {k:?}"),
-    })
+/// Parse a [`RunSpec`] layer from JSON text (see the module docs for
+/// the schema).
+pub fn parse_run_config(text: &str) -> Result<RunSpec> {
+    RunSpec::from_json(text)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::{LrSchedule, TrainerConfig};
 
     #[test]
     fn parses_full_config() {
@@ -106,20 +70,25 @@ mod tests {
               "strategy": "topkast:0.8,0.5",
               "steps": 500,
               "refresh_every": 10,
+              "churn_every": 40,
               "seed": 7,
               "reg_scale": 0.0001,
               "eval_every": 100,
+              "log_every": 25,
               "lr": {"kind": "warmup_cosine", "base": 0.003, "warmup": 50, "floor": 1e-5}
             }"#,
         )
         .unwrap();
-        assert_eq!(cfg.model, "lm_tiny");
-        assert_eq!(cfg.strategy, "topkast:0.8,0.5");
-        assert_eq!(cfg.trainer.steps, 500);
-        assert_eq!(cfg.trainer.refresh_every, 10);
-        assert_eq!(cfg.trainer.seed, 7);
-        assert_eq!(cfg.trainer.eval_every, Some(100));
-        match cfg.trainer.lr {
+        assert_eq!(cfg.model.as_deref(), Some("lm_tiny"));
+        assert_eq!(cfg.strategy.as_deref(), Some("topkast:0.8,0.5"));
+        assert_eq!(cfg.steps, Some(500));
+        assert_eq!(cfg.refresh_every, Some(10));
+        assert_eq!(cfg.churn_every, Some(40), "churn_every no longer dropped");
+        assert_eq!(cfg.log_every, Some(25), "log_every no longer dropped");
+        assert_eq!(cfg.seed, Some(7));
+        let resolved = cfg.resolve("lm").unwrap();
+        assert_eq!(resolved.trainer.eval_every, Some(100));
+        match resolved.trainer.lr {
             LrSchedule::WarmupCosine { base, warmup, floor } => {
                 assert!((base - 0.003).abs() < 1e-12);
                 assert_eq!(warmup, 50);
@@ -133,15 +102,28 @@ mod tests {
     fn defaults_fill_gaps() {
         let cfg = parse_run_config(r#"{"model": "mlp_tiny", "strategy": "dense"}"#)
             .unwrap();
-        assert_eq!(cfg.trainer.steps, TrainerConfig::default().steps);
+        let r = cfg.resolve("mlp").unwrap();
+        assert_eq!(r.trainer.steps, TrainerConfig::default().steps);
     }
 
     #[test]
-    fn rejects_missing_model() {
-        assert!(parse_run_config(r#"{"strategy": "dense"}"#).is_err());
+    fn config_without_model_is_a_valid_layer() {
+        // a config file may rely on a preset for model/strategy; the
+        // requirement moves to resolve()
+        let cfg = parse_run_config(r#"{"steps": 10}"#).unwrap();
+        assert!(cfg.model.is_none());
+        assert!(cfg.resolve("mlp").is_err(), "unresolvable without a model");
+    }
+
+    #[test]
+    fn rejects_bad_lr_and_unknown_keys() {
         assert!(
             parse_run_config(r#"{"model": "m", "strategy": "s", "lr": {"kind": "nope"}}"#)
                 .is_err()
         );
+        let err = parse_run_config(r#"{"model": "m", "stepz": 50}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("stepz"), "error names the bad key: {err}");
     }
 }

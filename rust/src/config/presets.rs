@@ -1,16 +1,30 @@
 //! Named experiment presets: the paper's hyper-parameter tables
 //! (Supplementary A for the Transformer-XL runs, B for ResNet-50)
 //! translated to this repo's scaled configurations.
+//!
+//! A preset is just a named [`RunSpec`] layer — CLI flags and config
+//! files merge over it field by field.
 
-use crate::coordinator::{LrSchedule, TrainerConfig};
+use super::spec::RunSpec;
+use crate::coordinator::LrSchedule;
 
 #[derive(Clone, Debug)]
 pub struct Preset {
     pub name: &'static str,
     pub description: &'static str,
-    pub model: &'static str,
-    pub strategy: &'static str,
-    pub trainer: TrainerConfig,
+    pub spec: RunSpec,
+}
+
+impl Preset {
+    /// Model name for listings ("-" if the preset leaves it unset).
+    pub fn model(&self) -> &str {
+        self.spec.model.as_deref().unwrap_or("-")
+    }
+
+    /// Strategy spec for listings.
+    pub fn strategy(&self) -> &str {
+        self.spec.strategy.as_deref().unwrap_or("-")
+    }
 }
 
 pub fn preset_names() -> Vec<&'static str> {
@@ -33,29 +47,19 @@ fn build() -> Vec<Preset> {
         Preset {
             name: "enwik8-topkast-80",
             description: "Table 2 headline: fwd 80% sparse, dense backward",
-            model: "lm_small",
-            strategy: "topkast:0.8,0.0",
-            trainer: TrainerConfig {
-                steps: 600,
-                lr: LrSchedule::WarmupCosine { base: 3e-3, warmup: 60, floor: 1e-5 },
-                reg_scale: 1e-4,
-                refresh_every: 10,
-                eval_batches: 8,
-                ..Default::default()
-            },
+            spec: RunSpec::run("lm_small", "topkast:0.8,0.0", 600)
+                .lr(LrSchedule::WarmupCosine { base: 3e-3, warmup: 60, floor: 1e-5 })
+                .reg_scale(1e-4)
+                .refresh_every(10)
+                .eval_batches(8),
         },
         Preset {
             name: "enwik8-topkast-80-80",
             description: "Table 2: fully sparse fwd+bwd at 80%",
-            model: "lm_small",
-            strategy: "topkast:0.8,0.8",
-            trainer: TrainerConfig {
-                steps: 600,
-                lr: LrSchedule::WarmupCosine { base: 3e-3, warmup: 60, floor: 1e-5 },
-                reg_scale: 1e-4,
-                refresh_every: 10,
-                ..Default::default()
-            },
+            spec: RunSpec::run("lm_small", "topkast:0.8,0.8", 600)
+                .lr(LrSchedule::WarmupCosine { base: 3e-3, warmup: 60, floor: 1e-5 })
+                .reg_scale(1e-4)
+                .refresh_every(10),
         },
         // Supplementary B (ImageNet ResNet-50): lr 1.6, 5-epoch linear
         // ramp, drops at 30/70/90 of 100 epochs, wd 1e-4. Scaled:
@@ -63,50 +67,35 @@ fn build() -> Vec<Preset> {
         Preset {
             name: "imagenet-topkast-80-50",
             description: "Fig 2 headline point: fwd 80%, bwd 50% sparsity",
-            model: "cnn_tiny",
-            strategy: "topkast:0.8,0.5",
-            trainer: TrainerConfig {
-                steps: 600,
-                lr: LrSchedule::StepDrops {
+            spec: RunSpec::run("cnn_tiny", "topkast:0.8,0.5", 600)
+                .lr(LrSchedule::StepDrops {
                     base: 0.05,
                     factor: 0.1,
                     at: vec![0.3, 0.7, 0.9],
                     warmup: 30,
-                },
-                reg_scale: 1e-4,
-                refresh_every: 1,
-                ..Default::default()
-            },
+                })
+                .reg_scale(1e-4)
+                .refresh_every(1),
         },
         Preset {
             name: "imagenet-rigl-90",
             description: "Fig 2 RigL baseline at 90% sparsity",
-            model: "cnn_tiny",
-            strategy: "rigl:0.9,0.3,30",
-            trainer: TrainerConfig {
-                steps: 600,
-                lr: LrSchedule::StepDrops {
+            spec: RunSpec::run("cnn_tiny", "rigl:0.9,0.3,30", 600)
+                .lr(LrSchedule::StepDrops {
                     base: 0.05,
                     factor: 0.1,
                     at: vec![0.3, 0.7, 0.9],
                     warmup: 30,
-                },
-                reg_scale: 1e-4,
-                refresh_every: 1,
-                ..Default::default()
-            },
+                })
+                .reg_scale(1e-4)
+                .refresh_every(1),
         },
         Preset {
             name: "quickstart",
             description: "mlp smoke preset used by docs",
-            model: "mlp_tiny",
-            strategy: "topkast:0.8,0.5",
-            trainer: TrainerConfig {
-                steps: 300,
-                lr: LrSchedule::Constant { base: 0.1 },
-                refresh_every: 10,
-                ..Default::default()
-            },
+            spec: RunSpec::run("mlp_tiny", "topkast:0.8,0.5", 300)
+                .lr(LrSchedule::Constant { base: 0.1 })
+                .refresh_every(10),
         },
     ]
 }
@@ -119,7 +108,7 @@ mod tests {
     fn presets_resolve() {
         assert!(preset_names().len() >= 5);
         let p = preset("imagenet-topkast-80-50").unwrap();
-        assert_eq!(p.model, "cnn_tiny");
+        assert_eq!(p.model(), "cnn_tiny");
         assert!(preset("nope").is_none());
     }
 
@@ -127,8 +116,20 @@ mod tests {
     fn preset_strategies_parse() {
         for name in preset_names() {
             let p = preset(name).unwrap();
-            crate::sparsity::strategy_from_str(p.strategy)
+            crate::sparsity::strategy_from_str(p.strategy())
                 .unwrap_or_else(|e| panic!("{name}: bad strategy: {e}"));
+        }
+    }
+
+    #[test]
+    fn preset_specs_resolve_to_trainer_configs() {
+        for name in preset_names() {
+            let p = preset(name).unwrap();
+            // every preset must resolve standalone (model+strategy set)
+            let r = p.spec.resolve("mlp").unwrap_or_else(|e| {
+                panic!("{name}: spec does not resolve: {e}")
+            });
+            assert!(r.trainer.steps > 0, "{name}: zero steps");
         }
     }
 }

@@ -1,0 +1,665 @@
+//! The declarative run spec — one serializable description of a
+//! training run, and one precedence-resolving merge.
+//!
+//! Every entry surface (CLI flags, named presets, JSON config files,
+//! the bench harness, examples) produces a partial [`RunSpec`]; layers
+//! combine with [`RunSpec::merged_with`] under the precedence
+//!
+//!   defaults  ←  preset  ←  JSON config file  ←  explicit CLI flags
+//!
+//! and [`RunSpec::resolve`] turns the merged spec into the concrete
+//! `TrainerConfig` + strategy tuning the `Session` builder consumes.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::{LrSchedule, TrainerConfig};
+use crate::sparsity::StrategyTuning;
+use crate::util::json::Json;
+
+/// A partial, mergeable description of one training run. Unset fields
+/// fall through to the layer below (ultimately `TrainerConfig`
+/// defaults). See the `config` module docs for the JSON schema.
+#[derive(Clone, Debug, Default)]
+pub struct RunSpec {
+    /// Model config name from the artifact manifest.
+    pub model: Option<String>,
+    /// Strategy spec string, e.g. `"topkast:0.8,0.5"` (see
+    /// `sparsity::StrategyRegistry`).
+    pub strategy: Option<String>,
+    pub steps: Option<usize>,
+    /// Full LR schedule (shape + base).
+    pub lr: Option<LrSchedule>,
+    /// Scalar base-LR override: replaces the base of whatever schedule
+    /// is in effect (a lower layer's full schedule keeps its shape, or
+    /// the per-model-kind default schedule when none is set) — so an
+    /// explicit `--lr` still wins over a preset's schedule.
+    pub lr_base: Option<f64>,
+    /// Exploration-regulariser coefficient.
+    pub reg_scale: Option<f64>,
+    /// Mask refresh interval N (paper Appendix C).
+    pub refresh_every: Option<usize>,
+    /// Mask-churn snapshot interval (Fig 3a).
+    pub churn_every: Option<usize>,
+    /// Evaluate every N steps; 0 = only at the end.
+    pub eval_every: Option<usize>,
+    pub eval_batches: Option<usize>,
+    pub seed: Option<u64>,
+    pub log_every: Option<usize>,
+    /// Table-1 ablation: freeze B = A after this step (topkast only).
+    pub stop_exploration_at: Option<usize>,
+    /// §2.4 overlap mode: compute Top-K on a background host thread.
+    pub async_refresh: Option<bool>,
+    /// Write the final checkpoint here.
+    pub checkpoint: Option<String>,
+    /// FLOPs-model multiplier for longer-trained runs (Fig 2a "2x").
+    pub train_multiplier: Option<f64>,
+}
+
+const KNOWN_KEYS: &[&str] = &[
+    "model",
+    "strategy",
+    "steps",
+    "lr",
+    "reg_scale",
+    "refresh_every",
+    "churn_every",
+    "eval_every",
+    "eval_batches",
+    "seed",
+    "log_every",
+    "stop_exploration_at",
+    "async_refresh",
+    "checkpoint",
+    "train_multiplier",
+];
+
+impl RunSpec {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Shorthand for the common (model, strategy, steps) triple.
+    pub fn run(model: &str, strategy: &str, steps: usize) -> Self {
+        RunSpec {
+            model: Some(model.to_string()),
+            strategy: Some(strategy.to_string()),
+            steps: Some(steps),
+            ..Default::default()
+        }
+    }
+
+    // -- chainable setters (builder style) ---------------------------------
+
+    pub fn model(mut self, name: &str) -> Self {
+        self.model = Some(name.to_string());
+        self
+    }
+
+    pub fn strategy(mut self, spec: &str) -> Self {
+        self.strategy = Some(spec.to_string());
+        self
+    }
+
+    pub fn steps(mut self, n: usize) -> Self {
+        self.steps = Some(n);
+        self
+    }
+
+    pub fn lr(mut self, schedule: LrSchedule) -> Self {
+        self.lr = Some(schedule);
+        self
+    }
+
+    pub fn lr_base(mut self, base: f64) -> Self {
+        self.lr_base = Some(base);
+        self
+    }
+
+    pub fn reg_scale(mut self, v: f64) -> Self {
+        self.reg_scale = Some(v);
+        self
+    }
+
+    pub fn refresh_every(mut self, n: usize) -> Self {
+        self.refresh_every = Some(n);
+        self
+    }
+
+    pub fn churn_every(mut self, n: usize) -> Self {
+        self.churn_every = Some(n);
+        self
+    }
+
+    pub fn eval_every(mut self, n: usize) -> Self {
+        self.eval_every = Some(n);
+        self
+    }
+
+    pub fn eval_batches(mut self, n: usize) -> Self {
+        self.eval_batches = Some(n);
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = Some(s);
+        self
+    }
+
+    pub fn log_every(mut self, n: usize) -> Self {
+        self.log_every = Some(n);
+        self
+    }
+
+    pub fn stop_exploration(mut self, step: usize) -> Self {
+        self.stop_exploration_at = Some(step);
+        self
+    }
+
+    pub fn async_refresh(mut self, on: bool) -> Self {
+        self.async_refresh = Some(on);
+        self
+    }
+
+    pub fn checkpoint(mut self, path: &str) -> Self {
+        self.checkpoint = Some(path.to_string());
+        self
+    }
+
+    pub fn train_multiplier(mut self, m: f64) -> Self {
+        self.train_multiplier = Some(m);
+        self
+    }
+
+    // -- layering ----------------------------------------------------------
+
+    /// Layer `over` on top of `self`: every field set in `over` wins.
+    /// The exhaustive literal makes the compiler enforce that new
+    /// fields get merge semantics.
+    pub fn merged_with(self, over: RunSpec) -> RunSpec {
+        RunSpec {
+            model: over.model.or(self.model),
+            strategy: over.strategy.or(self.strategy),
+            steps: over.steps.or(self.steps),
+            lr: over.lr.or(self.lr),
+            lr_base: over.lr_base.or(self.lr_base),
+            reg_scale: over.reg_scale.or(self.reg_scale),
+            refresh_every: over.refresh_every.or(self.refresh_every),
+            churn_every: over.churn_every.or(self.churn_every),
+            eval_every: over.eval_every.or(self.eval_every),
+            eval_batches: over.eval_batches.or(self.eval_batches),
+            seed: over.seed.or(self.seed),
+            log_every: over.log_every.or(self.log_every),
+            stop_exploration_at: over
+                .stop_exploration_at
+                .or(self.stop_exploration_at),
+            async_refresh: over.async_refresh.or(self.async_refresh),
+            checkpoint: over.checkpoint.or(self.checkpoint),
+            train_multiplier: over.train_multiplier.or(self.train_multiplier),
+        }
+    }
+
+    /// The spec of a named preset (see `topkast presets`).
+    pub fn from_preset(name: &str) -> Result<RunSpec> {
+        let p = super::preset(name)
+            .ok_or_else(|| anyhow!("unknown preset {name:?}"))?;
+        Ok(p.spec)
+    }
+
+    // -- JSON --------------------------------------------------------------
+
+    /// Parse a JSON run config. Unknown top-level keys are an error so
+    /// typo'd configs fail loudly instead of silently using defaults.
+    pub fn from_json(text: &str) -> Result<RunSpec> {
+        let j = Json::parse(text)?;
+        let obj = j.as_obj().context("run config must be a JSON object")?;
+        for key in obj.keys() {
+            if !KNOWN_KEYS.contains(&key.as_str()) {
+                bail!(
+                    "unknown run-config key {key:?} (known keys: {})",
+                    KNOWN_KEYS.join(", ")
+                );
+            }
+        }
+        let mut s = RunSpec::new();
+        if let Some(v) = j.opt("model") {
+            s.model = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = j.opt("strategy") {
+            s.strategy = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = j.opt("steps") {
+            s.steps = Some(v.as_usize()?);
+        }
+        if let Some(v) = j.opt("lr") {
+            // either a full schedule object or a scalar base LR
+            match v {
+                Json::Num(base) => s.lr_base = Some(*base),
+                _ => s.lr = Some(parse_lr(v)?),
+            }
+        }
+        if let Some(v) = j.opt("reg_scale") {
+            s.reg_scale = Some(v.as_f64()?);
+        }
+        if let Some(v) = j.opt("refresh_every") {
+            s.refresh_every = Some(v.as_usize()?);
+        }
+        if let Some(v) = j.opt("churn_every") {
+            s.churn_every = Some(v.as_usize()?);
+        }
+        if let Some(v) = j.opt("eval_every") {
+            s.eval_every = Some(v.as_usize()?);
+        }
+        if let Some(v) = j.opt("eval_batches") {
+            s.eval_batches = Some(v.as_usize()?);
+        }
+        if let Some(v) = j.opt("seed") {
+            s.seed = Some(v.as_usize()? as u64);
+        }
+        if let Some(v) = j.opt("log_every") {
+            s.log_every = Some(v.as_usize()?);
+        }
+        if let Some(v) = j.opt("stop_exploration_at") {
+            s.stop_exploration_at = Some(v.as_usize()?);
+        }
+        if let Some(v) = j.opt("async_refresh") {
+            s.async_refresh = Some(v.as_bool()?);
+        }
+        if let Some(v) = j.opt("checkpoint") {
+            s.checkpoint = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = j.opt("train_multiplier") {
+            s.train_multiplier = Some(v.as_f64()?);
+        }
+        Ok(s)
+    }
+
+    /// Serialize the set fields (archivable; round-trips through
+    /// [`RunSpec::from_json`]).
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![];
+        if let Some(v) = &self.model {
+            pairs.push(("model", Json::str(v.clone())));
+        }
+        if let Some(v) = &self.strategy {
+            pairs.push(("strategy", Json::str(v.clone())));
+        }
+        if let Some(v) = self.steps {
+            pairs.push(("steps", Json::num(v as f64)));
+        }
+        match (&self.lr, self.lr_base) {
+            // serialize the *effective* schedule so the archived spec
+            // round-trips: lr_base rebases the schedule at resolve time
+            (Some(lr), Some(base)) if base > 0.0 => {
+                pairs.push(("lr", lr_to_json(&rebase_lr(lr.clone(), base))));
+            }
+            (Some(lr), _) => pairs.push(("lr", lr_to_json(lr))),
+            (None, Some(base)) => pairs.push(("lr", Json::num(base))),
+            (None, None) => {}
+        }
+        if let Some(v) = self.reg_scale {
+            pairs.push(("reg_scale", Json::num(v)));
+        }
+        if let Some(v) = self.refresh_every {
+            pairs.push(("refresh_every", Json::num(v as f64)));
+        }
+        if let Some(v) = self.churn_every {
+            pairs.push(("churn_every", Json::num(v as f64)));
+        }
+        if let Some(v) = self.eval_every {
+            pairs.push(("eval_every", Json::num(v as f64)));
+        }
+        if let Some(v) = self.eval_batches {
+            pairs.push(("eval_batches", Json::num(v as f64)));
+        }
+        if let Some(v) = self.seed {
+            pairs.push(("seed", Json::num(v as f64)));
+        }
+        if let Some(v) = self.log_every {
+            pairs.push(("log_every", Json::num(v as f64)));
+        }
+        if let Some(v) = self.stop_exploration_at {
+            pairs.push(("stop_exploration_at", Json::num(v as f64)));
+        }
+        if let Some(v) = self.async_refresh {
+            pairs.push(("async_refresh", Json::Bool(v)));
+        }
+        if let Some(v) = &self.checkpoint {
+            pairs.push(("checkpoint", Json::str(v.clone())));
+        }
+        if let Some(v) = self.train_multiplier {
+            pairs.push(("train_multiplier", Json::num(v)));
+        }
+        Json::obj(pairs)
+    }
+
+    // -- resolution --------------------------------------------------------
+
+    /// The strategy tuning this spec implies.
+    pub fn tuning(&self) -> StrategyTuning {
+        StrategyTuning { stop_exploration_at: self.stop_exploration_at }
+    }
+
+    /// Fill unset fields from defaults and produce the concrete run
+    /// description. `model_kind` ("mlp" | "lm" | "cnn") selects the
+    /// default LR schedule when none was specified.
+    pub fn resolve(&self, model_kind: &str) -> Result<ResolvedRun> {
+        let model = self
+            .model
+            .clone()
+            .context("run spec: no model set (use --model, a preset or a config)")?;
+        let strategy = self
+            .strategy
+            .clone()
+            .context("run spec: no strategy set")?;
+        let d = TrainerConfig::default();
+        let steps = self.steps.unwrap_or(d.steps);
+        let lr = match (&self.lr, self.lr_base) {
+            (Some(schedule), Some(base)) if base > 0.0 => {
+                rebase_lr(schedule.clone(), base)
+            }
+            (Some(schedule), _) => schedule.clone(),
+            (None, base) => default_lr(model_kind, base.unwrap_or(0.0), steps),
+        };
+        let trainer = TrainerConfig {
+            steps,
+            lr,
+            reg_scale: self.reg_scale.unwrap_or(d.reg_scale),
+            refresh_every: self.refresh_every.unwrap_or(d.refresh_every).max(1),
+            churn_every: self.churn_every.unwrap_or(d.churn_every).max(1),
+            eval_every: match self.eval_every {
+                None | Some(0) => None,
+                Some(n) => Some(n),
+            },
+            eval_batches: self.eval_batches.unwrap_or(d.eval_batches),
+            seed: self.seed.unwrap_or(d.seed),
+            log_every: self.log_every.unwrap_or(d.log_every).max(1),
+        };
+        Ok(ResolvedRun {
+            model,
+            strategy,
+            trainer,
+            tuning: self.tuning(),
+            async_refresh: self.async_refresh.unwrap_or(false),
+            checkpoint: self.checkpoint.clone(),
+            train_multiplier: self.train_multiplier.unwrap_or(1.0),
+        })
+    }
+}
+
+/// A fully-resolved run: every knob concrete, ready for the Session
+/// builder.
+#[derive(Clone, Debug)]
+pub struct ResolvedRun {
+    pub model: String,
+    pub strategy: String,
+    pub trainer: TrainerConfig,
+    pub tuning: StrategyTuning,
+    pub async_refresh: bool,
+    pub checkpoint: Option<String>,
+    pub train_multiplier: f64,
+}
+
+/// The per-model-kind default LR schedule (paper Supplementary A/B,
+/// scaled). `base <= 0` means "use the kind's default base".
+pub fn default_lr(kind: &str, base: f64, steps: usize) -> LrSchedule {
+    match kind {
+        "lm" => LrSchedule::WarmupCosine {
+            base: if base > 0.0 { base } else { 3e-3 },
+            warmup: (steps / 10).max(10),
+            floor: 1e-5,
+        },
+        "cnn" => LrSchedule::StepDrops {
+            base: if base > 0.0 { base } else { 0.05 },
+            factor: 0.1,
+            at: vec![0.5, 0.8],
+            warmup: steps / 20,
+        },
+        _ => LrSchedule::Constant { base: if base > 0.0 { base } else { 0.1 } },
+    }
+}
+
+/// Swap the base LR of a schedule, keeping its shape (warmup, drops…).
+fn rebase_lr(schedule: LrSchedule, base: f64) -> LrSchedule {
+    match schedule {
+        LrSchedule::Constant { .. } => LrSchedule::Constant { base },
+        LrSchedule::WarmupCosine { warmup, floor, .. } => {
+            LrSchedule::WarmupCosine { base, warmup, floor }
+        }
+        LrSchedule::StepDrops { factor, at, warmup, .. } => {
+            LrSchedule::StepDrops { base, factor, at, warmup }
+        }
+    }
+}
+
+fn parse_lr(j: &Json) -> Result<LrSchedule> {
+    Ok(match j.get("kind")?.as_str()? {
+        "constant" => LrSchedule::Constant { base: j.get("base")?.as_f64()? },
+        "warmup_cosine" => LrSchedule::WarmupCosine {
+            base: j.get("base")?.as_f64()?,
+            warmup: j.get("warmup")?.as_usize()?,
+            floor: j.opt("floor").map(|f| f.as_f64()).transpose()?.unwrap_or(0.0),
+        },
+        "step_drops" => LrSchedule::StepDrops {
+            base: j.get("base")?.as_f64()?,
+            factor: j.get("factor")?.as_f64()?,
+            at: j
+                .get("at")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_f64())
+                .collect::<Result<_>>()?,
+            warmup: j.opt("warmup").map(|v| v.as_usize()).transpose()?.unwrap_or(0),
+        },
+        k => anyhow::bail!("unknown lr kind {k:?}"),
+    })
+}
+
+fn lr_to_json(lr: &LrSchedule) -> Json {
+    match lr {
+        LrSchedule::Constant { base } => Json::obj(vec![
+            ("kind", Json::str("constant")),
+            ("base", Json::num(*base)),
+        ]),
+        LrSchedule::WarmupCosine { base, warmup, floor } => Json::obj(vec![
+            ("kind", Json::str("warmup_cosine")),
+            ("base", Json::num(*base)),
+            ("warmup", Json::num(*warmup as f64)),
+            ("floor", Json::num(*floor)),
+        ]),
+        LrSchedule::StepDrops { base, factor, at, warmup } => Json::obj(vec![
+            ("kind", Json::str("step_drops")),
+            ("base", Json::num(*base)),
+            ("factor", Json::num(*factor)),
+            ("at", Json::arr(at.iter().map(|a| Json::num(*a)))),
+            ("warmup", Json::num(*warmup as f64)),
+        ]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_respects_precedence_defaults_preset_config_flags() {
+        // defaults ← preset ← config ← flags, each layer partial
+        let preset = RunSpec::run("lm_small", "topkast:0.8,0.0", 600)
+            .refresh_every(10)
+            .reg_scale(1e-4);
+        let config =
+            RunSpec::from_json(r#"{"steps": 50, "seed": 9}"#).unwrap();
+        let flags = RunSpec::new().steps(25);
+
+        let spec = RunSpec::new()
+            .merged_with(preset)
+            .merged_with(config)
+            .merged_with(flags);
+        let r = spec.resolve("lm").unwrap();
+        assert_eq!(r.model, "lm_small", "preset model survives");
+        assert_eq!(r.strategy, "topkast:0.8,0.0");
+        assert_eq!(r.trainer.steps, 25, "explicit flag beats config beats preset");
+        assert_eq!(r.trainer.seed, 9, "config seed survives the flag layer");
+        assert_eq!(r.trainer.refresh_every, 10, "preset knob survives");
+        // untouched knob falls to TrainerConfig defaults
+        assert_eq!(r.trainer.eval_batches, TrainerConfig::default().eval_batches);
+    }
+
+    #[test]
+    fn preset_plus_config_file_both_given() {
+        // the previously-untested combination: a config file layered on
+        // top of a preset overrides only what it sets
+        let preset = RunSpec::from_preset("quickstart").unwrap();
+        let config = RunSpec::from_json(
+            r#"{"strategy": "rigl:0.9,0.3,30", "steps": 42}"#,
+        )
+        .unwrap();
+        let r = preset.merged_with(config).resolve("mlp").unwrap();
+        assert_eq!(r.model, "mlp_tiny", "model comes from the preset");
+        assert_eq!(r.strategy, "rigl:0.9,0.3,30", "config overrides strategy");
+        assert_eq!(r.trainer.steps, 42);
+        match r.trainer.lr {
+            LrSchedule::Constant { base } => assert!((base - 0.1).abs() < 1e-12),
+            ref other => panic!("preset lr lost: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn flag_overrides_preset() {
+        let spec = RunSpec::from_preset("enwik8-topkast-80")
+            .unwrap()
+            .merged_with(RunSpec::new().strategy("dense").seed(3));
+        let r = spec.resolve("lm").unwrap();
+        assert_eq!(r.strategy, "dense");
+        assert_eq!(r.trainer.seed, 3);
+        assert_eq!(r.trainer.steps, 600, "preset steps kept");
+    }
+
+    #[test]
+    fn resolve_fills_defaults_and_validates() {
+        let r = RunSpec::run("mlp_tiny", "dense", 100).resolve("mlp").unwrap();
+        assert_eq!(r.trainer.eval_every, None);
+        assert_eq!(r.trainer.refresh_every, 1);
+        assert!(!r.async_refresh);
+        assert_eq!(r.train_multiplier, 1.0);
+        assert!(RunSpec::new().resolve("mlp").is_err(), "model required");
+        assert!(
+            RunSpec::new().model("m").resolve("mlp").is_err(),
+            "strategy required"
+        );
+    }
+
+    #[test]
+    fn eval_every_zero_means_end_only() {
+        let r = RunSpec::run("m", "dense", 10)
+            .eval_every(0)
+            .resolve("mlp")
+            .unwrap();
+        assert_eq!(r.trainer.eval_every, None);
+        let r2 = RunSpec::run("m", "dense", 10)
+            .eval_every(5)
+            .resolve("mlp")
+            .unwrap();
+        assert_eq!(r2.trainer.eval_every, Some(5));
+    }
+
+    #[test]
+    fn lr_base_feeds_kind_default_schedule() {
+        let r = RunSpec::run("lm_tiny", "dense", 200)
+            .lr_base(1e-2)
+            .resolve("lm")
+            .unwrap();
+        match r.trainer.lr {
+            LrSchedule::WarmupCosine { base, warmup, .. } => {
+                assert!((base - 1e-2).abs() < 1e-12);
+                assert_eq!(warmup, 20);
+            }
+            ref other => panic!("wrong schedule {other:?}"),
+        }
+        // lr_base rebases a full schedule, keeping its shape — this is
+        // what makes `--lr` win over a preset's schedule
+        let r2 = RunSpec::run("lm_tiny", "dense", 200)
+            .lr(LrSchedule::WarmupCosine { base: 3e-3, warmup: 60, floor: 1e-5 })
+            .lr_base(1e-2)
+            .resolve("lm")
+            .unwrap();
+        match r2.trainer.lr {
+            LrSchedule::WarmupCosine { base, warmup, floor } => {
+                assert!((base - 1e-2).abs() < 1e-12, "base rebased");
+                assert_eq!(warmup, 60, "schedule shape kept");
+                assert!((floor - 1e-5).abs() < 1e-12);
+            }
+            ref other => panic!("wrong schedule {other:?}"),
+        }
+    }
+
+    #[test]
+    fn explicit_lr_flag_beats_preset_schedule() {
+        // regression: `--preset quickstart --lr 0.5` must train at 0.5
+        let spec = RunSpec::from_preset("quickstart")
+            .unwrap()
+            .merged_with(RunSpec::new().lr_base(0.5));
+        let r = spec.resolve("mlp").unwrap();
+        match r.trainer.lr {
+            LrSchedule::Constant { base } => assert!((base - 0.5).abs() < 1e-12),
+            ref other => panic!("wrong schedule {other:?}"),
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let spec = RunSpec::run("lm_tiny", "topkast:0.8,0.5", 500)
+            .lr(LrSchedule::WarmupCosine { base: 3e-3, warmup: 50, floor: 1e-5 })
+            .refresh_every(10)
+            .churn_every(25)
+            .log_every(100)
+            .seed(7)
+            .stop_exploration(120)
+            .async_refresh(true)
+            .checkpoint("out.ckpt")
+            .train_multiplier(2.0);
+        let text = spec.to_json().to_string_pretty();
+        let back = RunSpec::from_json(&text).unwrap();
+        assert_eq!(back.model.as_deref(), Some("lm_tiny"));
+        assert_eq!(back.strategy.as_deref(), Some("topkast:0.8,0.5"));
+        assert_eq!(back.steps, Some(500));
+        assert_eq!(back.churn_every, Some(25));
+        assert_eq!(back.log_every, Some(100));
+        assert_eq!(back.stop_exploration_at, Some(120));
+        assert_eq!(back.async_refresh, Some(true));
+        assert_eq!(back.checkpoint.as_deref(), Some("out.ckpt"));
+        assert_eq!(back.train_multiplier, Some(2.0));
+        match back.lr {
+            Some(LrSchedule::WarmupCosine { warmup: 50, .. }) => {}
+            ref other => panic!("lr lost: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn to_json_serializes_the_effective_rebased_schedule() {
+        // archive a "preset schedule + explicit --lr" merge: the JSON
+        // must reproduce the run the user actually got
+        let spec = RunSpec::run("lm_tiny", "dense", 100)
+            .lr(LrSchedule::WarmupCosine { base: 3e-3, warmup: 60, floor: 1e-5 })
+            .lr_base(0.5);
+        let want = spec.resolve("lm").unwrap();
+        let back = RunSpec::from_json(&spec.to_json().to_string_compact()).unwrap();
+        let got = back.resolve("lm").unwrap();
+        match (want.trainer.lr, got.trainer.lr) {
+            (
+                LrSchedule::WarmupCosine { base: a, warmup: wa, .. },
+                LrSchedule::WarmupCosine { base: b, warmup: wb, .. },
+            ) => {
+                assert!((a - 0.5).abs() < 1e-12 && (b - 0.5).abs() < 1e-12);
+                assert_eq!(wa, wb);
+            }
+            other => panic!("schedule lost through json: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn scalar_lr_in_json_is_a_base_override() {
+        let s = RunSpec::from_json(r#"{"lr": 0.02}"#).unwrap();
+        assert_eq!(s.lr_base, Some(0.02));
+        assert!(s.lr.is_none());
+    }
+}

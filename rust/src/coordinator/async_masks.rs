@@ -45,6 +45,8 @@ pub struct AsyncMaskRefresher {
     /// Refreshes applied / requested (observability).
     pub applied: usize,
     pub requested: usize,
+    /// Worker compute time of the most recently installed result.
+    pub last_compute_ms: f64,
 }
 
 impl AsyncMaskRefresher {
@@ -100,6 +102,7 @@ impl AsyncMaskRefresher {
             in_flight: false,
             applied: 0,
             requested: 0,
+            last_compute_ms: 0.0,
         })
     }
 
@@ -139,6 +142,7 @@ impl AsyncMaskRefresher {
                 }
                 self.in_flight = false;
                 self.applied += 1;
+                self.last_compute_ms = res.compute_ms;
                 Ok(Some(res.step))
             }
             Err(TryRecvError::Empty) => Ok(None),
@@ -162,6 +166,7 @@ impl AsyncMaskRefresher {
         }
         self.in_flight = false;
         self.applied += 1;
+        self.last_compute_ms = res.compute_ms;
         Ok(step)
     }
 }

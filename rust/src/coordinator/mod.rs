@@ -6,6 +6,7 @@
 pub mod async_masks;
 pub mod checkpoint;
 pub mod metrics;
+pub mod observer;
 pub mod schedule;
 pub mod sources;
 pub mod train;
@@ -13,6 +14,10 @@ pub mod train;
 pub use async_masks::AsyncMaskRefresher;
 pub use checkpoint::Checkpoint;
 pub use metrics::{EvalResult, MaskChurn, ReservoirTracker, RunMetrics};
+pub use observer::{
+    ConsoleLogger, EndEvent, EvalEvent, JsonlMetrics, PeriodicCheckpoint,
+    RefreshEvent, StepEvent, TrainObserver,
+};
 pub use schedule::LrSchedule;
 pub use sources::{source_for, ImageData, LmData, MlpData};
 pub use train::{DataSource, Trainer, TrainerConfig};

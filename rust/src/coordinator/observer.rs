@@ -1,0 +1,390 @@
+//! Training observers — the hook surface `Trainer::train()` drives
+//! instead of inlining logging, metric streaming and checkpointing.
+//!
+//! An observer receives borrowed views of the run at well-defined
+//! points: every step, every mask refresh, every evaluation, and at the
+//! end. Stock observers cover the common cases: [`ConsoleLogger`]
+//! (progress lines through the crate logger), [`JsonlMetrics`]
+//! (machine-readable one-JSON-object-per-line streaming) and
+//! [`PeriodicCheckpoint`] (periodic + final checkpoints).
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::checkpoint::Checkpoint;
+use super::metrics::{EvalResult, RunMetrics};
+use crate::sparsity::ParamStore;
+use crate::util::json::Json;
+
+/// Emitted after every completed training step.
+pub struct StepEvent<'a> {
+    /// Steps completed so far (1-based: first step reports 1).
+    pub step: usize,
+    pub total_steps: usize,
+    pub loss: f64,
+    pub lr: f64,
+    pub strategy: &'a str,
+    pub store: &'a ParamStore,
+    pub opt: &'a [Vec<f32>],
+    pub metrics: &'a RunMetrics,
+}
+
+/// Emitted whenever new masks are installed (sync or async path).
+pub struct RefreshEvent<'a> {
+    pub step: usize,
+    /// Host Top-K cost (for the async path: worker compute time).
+    pub elapsed_ms: f64,
+    /// True when the masks came from the §2.4 background worker.
+    pub asynchronous: bool,
+    pub store: &'a ParamStore,
+}
+
+/// Emitted after every mid-training evaluation.
+pub struct EvalEvent<'a> {
+    pub step: usize,
+    pub strategy: &'a str,
+    pub result: &'a EvalResult,
+}
+
+/// Emitted once when the training loop finishes.
+pub struct EndEvent<'a> {
+    pub step: usize,
+    pub strategy: &'a str,
+    pub store: &'a ParamStore,
+    pub opt: &'a [Vec<f32>],
+    pub metrics: &'a RunMetrics,
+}
+
+/// Hook interface driven by `Trainer::train()`. All methods default to
+/// no-ops, so observers implement only what they need. Errors abort the
+/// run (observers that should never kill training must swallow their
+/// own errors).
+pub trait TrainObserver: Send {
+    fn on_step(&mut self, ev: &StepEvent<'_>) -> Result<()> {
+        let _ = ev;
+        Ok(())
+    }
+
+    fn on_refresh(&mut self, ev: &RefreshEvent<'_>) -> Result<()> {
+        let _ = ev;
+        Ok(())
+    }
+
+    fn on_eval(&mut self, ev: &EvalEvent<'_>) -> Result<()> {
+        let _ = ev;
+        Ok(())
+    }
+
+    fn on_end(&mut self, ev: &EndEvent<'_>) -> Result<()> {
+        let _ = ev;
+        Ok(())
+    }
+}
+
+/// Progress lines through the crate logger, every `log_every` steps and
+/// at every evaluation — the logging `Trainer::train()` used to inline.
+pub struct ConsoleLogger {
+    log_every: usize,
+}
+
+impl ConsoleLogger {
+    pub fn new(log_every: usize) -> Self {
+        ConsoleLogger { log_every: log_every.max(1) }
+    }
+}
+
+impl TrainObserver for ConsoleLogger {
+    fn on_step(&mut self, ev: &StepEvent<'_>) -> Result<()> {
+        if ev.step % self.log_every == 0 || ev.step == ev.total_steps {
+            crate::info!(
+                "[{}] step {:5}/{} loss {:.4} lr {:.2e} eff-params {}",
+                ev.strategy,
+                ev.step,
+                ev.total_steps,
+                ev.loss,
+                ev.lr,
+                ev.store.effective_params(),
+            );
+        }
+        Ok(())
+    }
+
+    fn on_eval(&mut self, ev: &EvalEvent<'_>) -> Result<()> {
+        crate::info!(
+            "[{}] eval @ {}: loss {:.4} acc {:.3} bpc {:.3}",
+            ev.strategy,
+            ev.step,
+            ev.result.loss_mean,
+            ev.result.accuracy,
+            ev.result.bpc
+        );
+        Ok(())
+    }
+}
+
+/// Streams run events as one compact JSON object per line — the
+/// machine-readable counterpart of [`ConsoleLogger`], consumable by any
+/// external harness (`{"event": "step", ...}`). The file is opened
+/// lazily on the first event so a run that fails to build never
+/// truncates metrics from a previous run.
+pub struct JsonlMetrics {
+    path: PathBuf,
+    out: Option<std::io::BufWriter<std::fs::File>>,
+}
+
+impl JsonlMetrics {
+    pub fn create(path: impl AsRef<Path>) -> Result<Self> {
+        Ok(JsonlMetrics { path: path.as_ref().to_path_buf(), out: None })
+    }
+
+    fn line(&mut self, j: Json) -> Result<()> {
+        if self.out.is_none() {
+            if let Some(dir) = self.path.parent() {
+                if !dir.as_os_str().is_empty() {
+                    std::fs::create_dir_all(dir)?;
+                }
+            }
+            let f = std::fs::File::create(&self.path)
+                .with_context(|| format!("creating metrics stream {:?}", self.path))?;
+            self.out = Some(std::io::BufWriter::new(f));
+        }
+        let out = self.out.as_mut().expect("stream just opened");
+        writeln!(out, "{}", j.to_string_compact())?;
+        Ok(())
+    }
+}
+
+/// NaN/inf are not valid JSON — encode them as null.
+fn num_or_null(x: f64) -> Json {
+    if x.is_finite() {
+        Json::num(x)
+    } else {
+        Json::Null
+    }
+}
+
+impl TrainObserver for JsonlMetrics {
+    fn on_step(&mut self, ev: &StepEvent<'_>) -> Result<()> {
+        self.line(Json::obj(vec![
+            ("event", Json::str("step")),
+            ("step", Json::num(ev.step as f64)),
+            ("loss", num_or_null(ev.loss)),
+            ("lr", num_or_null(ev.lr)),
+        ]))
+    }
+
+    fn on_refresh(&mut self, ev: &RefreshEvent<'_>) -> Result<()> {
+        self.line(Json::obj(vec![
+            ("event", Json::str("refresh")),
+            ("step", Json::num(ev.step as f64)),
+            ("ms", num_or_null(ev.elapsed_ms)),
+            ("async", Json::Bool(ev.asynchronous)),
+        ]))
+    }
+
+    fn on_eval(&mut self, ev: &EvalEvent<'_>) -> Result<()> {
+        self.line(Json::obj(vec![
+            ("event", Json::str("eval")),
+            ("step", Json::num(ev.step as f64)),
+            ("loss", num_or_null(ev.result.loss_mean)),
+            ("accuracy", num_or_null(ev.result.accuracy)),
+            ("bpc", num_or_null(ev.result.bpc)),
+            ("perplexity", num_or_null(ev.result.perplexity)),
+        ]))
+    }
+
+    fn on_end(&mut self, ev: &EndEvent<'_>) -> Result<()> {
+        self.line(Json::obj(vec![
+            ("event", Json::str("end")),
+            ("step", Json::num(ev.step as f64)),
+            ("strategy", Json::str(ev.strategy)),
+            ("eff_params", Json::num(ev.store.effective_params() as f64)),
+            ("total_params", Json::num(ev.store.total_params() as f64)),
+            ("mean_step_ms", num_or_null(ev.metrics.step_time.mean())),
+            ("mean_refresh_ms", num_or_null(ev.metrics.refresh_time.mean())),
+        ]))?;
+        if let Some(out) = self.out.as_mut() {
+            out.flush()?;
+        }
+        Ok(())
+    }
+}
+
+/// Writes a checkpoint every `every` steps (0 = final only) and always
+/// at the end of training. Saves atomically via `Checkpoint::save`.
+pub struct PeriodicCheckpoint {
+    every: usize,
+    path: PathBuf,
+}
+
+impl PeriodicCheckpoint {
+    pub fn every(every: usize, path: impl Into<PathBuf>) -> Self {
+        PeriodicCheckpoint { every, path: path.into() }
+    }
+
+    /// Final checkpoint only.
+    pub fn at_end(path: impl Into<PathBuf>) -> Self {
+        Self::every(0, path)
+    }
+}
+
+impl TrainObserver for PeriodicCheckpoint {
+    fn on_step(&mut self, ev: &StepEvent<'_>) -> Result<()> {
+        if self.every > 0 && ev.step % self.every == 0 && ev.step < ev.total_steps {
+            Checkpoint::capture(ev.store, ev.opt, ev.step).save(&self.path)?;
+        }
+        Ok(())
+    }
+
+    fn on_end(&mut self, ev: &EndEvent<'_>) -> Result<()> {
+        Checkpoint::capture(ev.store, ev.opt, ev.step).save(&self.path)?;
+        crate::info!("checkpoint written to {}", self.path.display());
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{InitKind, ParamSpec};
+    use crate::tensor::Shape;
+
+    fn store() -> ParamStore {
+        ParamStore::init(
+            &[ParamSpec {
+                name: "w".into(),
+                shape: Shape::new(&[8]),
+                init: InitKind::Normal,
+                init_scale: 0.1,
+                sparse: true,
+                mac: 8,
+            }],
+            0,
+        )
+    }
+
+    fn step_event<'a>(
+        store: &'a ParamStore,
+        metrics: &'a RunMetrics,
+        step: usize,
+    ) -> StepEvent<'a> {
+        StepEvent {
+            step,
+            total_steps: 10,
+            loss: 0.5,
+            lr: 0.1,
+            strategy: "topkast",
+            store,
+            opt: &[],
+            metrics,
+        }
+    }
+
+    #[test]
+    fn jsonl_stream_is_parseable() {
+        let st = store();
+        let m = RunMetrics::new();
+        let dir = std::env::temp_dir().join("topkast_obs_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("metrics.jsonl");
+
+        let mut obs = JsonlMetrics::create(&path).unwrap();
+        obs.on_step(&step_event(&st, &m, 1)).unwrap();
+        obs.on_refresh(&RefreshEvent {
+            step: 1,
+            elapsed_ms: 0.2,
+            asynchronous: false,
+            store: &st,
+        })
+        .unwrap();
+        let ev = EvalResult::lm(10.0, 20.0);
+        obs.on_eval(&EvalEvent { step: 5, strategy: "topkast", result: &ev })
+            .unwrap();
+        obs.on_end(&EndEvent {
+            step: 10,
+            strategy: "topkast",
+            store: &st,
+            opt: &[],
+            metrics: &m,
+        })
+        .unwrap();
+        drop(obs);
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4);
+        for line in &lines {
+            Json::parse(line).unwrap_or_else(|e| panic!("bad line {line:?}: {e}"));
+        }
+        assert_eq!(
+            Json::parse(lines[0]).unwrap().get("event").unwrap().as_str().unwrap(),
+            "step"
+        );
+        assert_eq!(
+            Json::parse(lines[3]).unwrap().get("event").unwrap().as_str().unwrap(),
+            "end"
+        );
+    }
+
+    #[test]
+    fn nan_metrics_encode_as_null() {
+        let ev = EvalResult::classifier(6.4, 4.8, 64); // bpc/ppl are NaN
+        let st = store();
+        let dir = std::env::temp_dir().join("topkast_obs_nan");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.jsonl");
+        let mut obs = JsonlMetrics::create(&path).unwrap();
+        obs.on_eval(&EvalEvent { step: 1, strategy: "dense", result: &ev })
+            .unwrap();
+        obs.on_end(&EndEvent {
+            step: 1,
+            strategy: "dense",
+            store: &st,
+            opt: &[],
+            metrics: &RunMetrics::new(),
+        })
+        .unwrap();
+        drop(obs);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let first = Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(first.get("bpc").unwrap(), &Json::Null);
+    }
+
+    #[test]
+    fn periodic_checkpoint_writes_on_cadence_and_at_end() {
+        let st = store();
+        let m = RunMetrics::new();
+        let dir = std::env::temp_dir().join("topkast_obs_ckpt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.ckpt");
+        let _ = std::fs::remove_file(&path);
+
+        let mut obs = PeriodicCheckpoint::every(4, &path);
+        obs.on_step(&step_event(&st, &m, 1)).unwrap();
+        assert!(!path.exists(), "no checkpoint before the cadence");
+        obs.on_step(&step_event(&st, &m, 4)).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap().step, 4);
+        obs.on_end(&EndEvent {
+            step: 10,
+            strategy: "topkast",
+            store: &st,
+            opt: &[],
+            metrics: &m,
+        })
+        .unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap().step, 10);
+    }
+
+    #[test]
+    fn console_logger_never_errors() {
+        let st = store();
+        let m = RunMetrics::new();
+        let mut c = ConsoleLogger::new(0); // clamps to 1
+        c.on_step(&step_event(&st, &m, 1)).unwrap();
+        let ev = EvalResult::classifier(6.4, 4.8, 64);
+        c.on_eval(&EvalEvent { step: 1, strategy: "dense", result: &ev })
+            .unwrap();
+    }
+}

@@ -16,7 +16,9 @@ use std::collections::BTreeMap;
 use anyhow::{bail, Context, Result};
 
 use super::async_masks::AsyncMaskRefresher;
+use super::checkpoint::Checkpoint;
 use super::metrics::{EvalResult, RunMetrics};
+use super::observer::{EndEvent, EvalEvent, RefreshEvent, StepEvent, TrainObserver};
 use super::schedule::LrSchedule;
 use crate::runtime::{client::TensorRef, ModelEntry, Runtime};
 use crate::sparsity::{update_store_masks, MaskStrategy, ParamStore};
@@ -81,6 +83,9 @@ pub struct Trainer {
     /// §2.4 overlap mode: Top-K computed by a background host thread
     /// from weight snapshots; training proceeds on stale masks.
     async_refresher: Option<AsyncMaskRefresher>,
+    /// Hooks driven by `train()`/`refresh_masks` (logging, metric
+    /// streaming, checkpointing — see `coordinator::observer`).
+    observers: Vec<Box<dyn TrainObserver>>,
 }
 
 impl Trainer {
@@ -118,7 +123,36 @@ impl Trainer {
             step: 0,
             masks_initialised: false,
             async_refresher: None,
+            observers: vec![],
         })
+    }
+
+    /// Attach a training observer (fires in attachment order).
+    pub fn add_observer(&mut self, observer: Box<dyn TrainObserver>) {
+        self.observers.push(observer);
+    }
+
+    /// Snapshot the full run state (params, masks, optimiser, step).
+    pub fn capture_checkpoint(&self) -> Checkpoint {
+        Checkpoint::capture(&self.store, &self.opt, self.step)
+    }
+
+    /// Restore a checkpoint into this trainer (params, masks, the
+    /// optimiser state when the checkpoint carries one, and the step
+    /// counter — so training resumes where the checkpoint left off).
+    pub fn restore_checkpoint(&mut self, ck: &Checkpoint) -> Result<()> {
+        if ck.opt.is_empty() {
+            ck.restore(&mut self.store, &mut [])?;
+            // no optimiser state in the checkpoint: clear ours rather
+            // than resuming with moments from an unrelated run
+            for slot in self.opt.iter_mut() {
+                slot.fill(0.0);
+            }
+        } else {
+            ck.restore(&mut self.store, &mut self.opt)?;
+        }
+        self.step = ck.step;
+        Ok(())
     }
 
     /// Enable asynchronous mask refresh (paper §2.4). Takes a second
@@ -180,7 +214,17 @@ impl Trainer {
             self.masks_initialised = true;
         }
         self.metrics.reservoir.observe(&self.store, self.step);
-        self.metrics.refresh_time.push(sw.elapsed_ms());
+        let elapsed_ms = sw.elapsed_ms();
+        self.metrics.refresh_time.push(elapsed_ms);
+        let ev = RefreshEvent {
+            step: self.step,
+            elapsed_ms,
+            asynchronous: false,
+            store: &self.store,
+        };
+        for o in self.observers.iter_mut() {
+            o.on_refresh(&ev)?;
+        }
         Ok(())
     }
 
@@ -229,6 +273,7 @@ impl Trainer {
             // Overlapped path: install any finished masks, then ship a
             // fresh snapshot if a refresh is due. Step 0 blocks so the
             // run never starts on all-ones masks.
+            let mut installed = false;
             if self.step == 0 {
                 let sw = Stopwatch::start();
                 refresher.request(&self.store, 0, self.cfg.steps);
@@ -237,12 +282,25 @@ impl Trainer {
                 self.metrics.reservoir.init(&self.store);
                 self.masks_initialised = true;
                 self.metrics.reservoir.observe(&self.store, 0);
+                installed = true;
             } else {
                 if refresher.try_install(&mut self.store)?.is_some() {
                     self.metrics.reservoir.observe(&self.store, self.step);
+                    installed = true;
                 }
                 if due {
                     refresher.request(&self.store, self.step, self.cfg.steps);
+                }
+            }
+            if installed {
+                let ev = RefreshEvent {
+                    step: self.step,
+                    elapsed_ms: refresher.last_compute_ms,
+                    asynchronous: true,
+                    store: &self.store,
+                };
+                for o in self.observers.iter_mut() {
+                    o.on_refresh(&ev)?;
                 }
             }
         } else if due {
@@ -314,35 +372,53 @@ impl Trainer {
     }
 
 
-    /// Run the full configured training loop.
+    /// Run the full configured training loop, driving the attached
+    /// observers (`on_step` / `on_eval` / `on_end`); mask-refresh hooks
+    /// fire from `train_step`. Logging lives in `ConsoleLogger` now —
+    /// a bare `Trainer` with no observers trains silently.
     pub fn train(&mut self) -> Result<()> {
         while self.step < self.cfg.steps {
+            // capture the LR the upcoming step actually uses (train_step
+            // increments self.step, so reading it after would be off by one)
+            let lr = self.cfg.lr.at(self.step, self.cfg.steps);
             let loss = self.train_step()?;
-            if self.step % self.cfg.log_every == 0 || self.step == self.cfg.steps {
-                crate::info!(
-                    "[{}] step {:5}/{} loss {:.4} lr {:.2e} eff-params {}",
-                    self.strategy.name(),
-                    self.step,
-                    self.cfg.steps,
-                    loss,
-                    self.cfg.lr.at(self.step, self.cfg.steps),
-                    self.store.effective_params(),
-                );
+            let ev = StepEvent {
+                step: self.step,
+                total_steps: self.cfg.steps,
+                loss,
+                lr,
+                strategy: self.strategy.name(),
+                store: &self.store,
+                opt: &self.opt,
+                metrics: &self.metrics,
+            };
+            for o in self.observers.iter_mut() {
+                o.on_step(&ev)?;
             }
             if let Some(every) = self.cfg.eval_every {
                 if self.step % every == 0 {
-                    let ev = self.evaluate()?;
-                    self.metrics.evals.push((self.step, ev));
-                    crate::info!(
-                        "[{}] eval @ {}: loss {:.4} acc {:.3} bpc {:.3}",
-                        self.strategy.name(),
-                        self.step,
-                        ev.loss_mean,
-                        ev.accuracy,
-                        ev.bpc
-                    );
+                    let result = self.evaluate()?;
+                    self.metrics.evals.push((self.step, result));
+                    let ev = EvalEvent {
+                        step: self.step,
+                        strategy: self.strategy.name(),
+                        result: &result,
+                    };
+                    for o in self.observers.iter_mut() {
+                        o.on_eval(&ev)?;
+                    }
                 }
             }
+        }
+        let ev = EndEvent {
+            step: self.step,
+            strategy: self.strategy.name(),
+            store: &self.store,
+            opt: &self.opt,
+            metrics: &self.metrics,
+        };
+        for o in self.observers.iter_mut() {
+            o.on_end(&ev)?;
         }
         Ok(())
     }

@@ -17,7 +17,35 @@
 //!
 //! Python never runs at training time: the rust binary loads the HLO
 //! artifacts through PJRT and owns the entire training loop.
+//!
+//! ## Building a run: the `api` module
+//!
+//! All runs — CLI, benches, examples — are constructed through one
+//! surface: a declarative [`api::RunSpec`] resolved by
+//! [`api::Session::builder`]:
+//!
+//! ```no_run
+//! use topkast::api::{RunSpec, Session};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let mut session = Session::builder()
+//!     .artifacts("artifacts")
+//!     .spec(RunSpec::run("mlp_tiny", "topkast:0.8,0.5", 300).seed(42))
+//!     .build()?;
+//! session.train()?;
+//! println!("eval loss {:.4}", session.evaluate()?.loss_mean);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Specs are partial and layer with "later wins" precedence (defaults ←
+//! preset ← JSON config file ← explicit CLI flags; see [`config`]).
+//! Strategy strings like `"rigl:0.9,0.3,100"` resolve through the
+//! extensible [`sparsity::StrategyRegistry`], and the training loop
+//! reports to [`coordinator::observer::TrainObserver`] hooks (console
+//! logging, JSONL metric streaming, periodic checkpointing).
 
+pub mod api;
 pub mod bench;
 pub mod config;
 pub mod coordinator;

@@ -1,22 +1,28 @@
 //! topkast — CLI entrypoint for the Top-KAST training coordinator.
 //!
 //! Subcommands:
-//!   train  — run a full training job (model × strategy × schedule)
-//!   eval   — evaluate a checkpoint
-//!   info   — list models/artifacts in the manifest
+//!   train    — run a full training job (model × strategy × schedule)
+//!   eval     — evaluate a checkpoint
+//!   info     — list models/artifacts in the manifest
+//!   presets  — list named experiment presets
+//!
+//! Every run is described by a `RunSpec` and constructed through
+//! `Session::builder()`. Layers merge with "later wins" precedence:
+//! defaults ← `--preset` ← `--config` file ← explicitly-passed flags.
 //!
 //! Examples:
 //!   topkast train --model lm_tiny --strategy topkast:0.8,0.5 --steps 500
-//!   topkast train --model cnn_tiny --strategy rigl:0.9,0.3,100
+//!   topkast train --preset enwik8-topkast-80 --seed 3
+//!   topkast train --config run.json --steps 100
 //!   topkast info
 
 use anyhow::{bail, Result};
 
-use topkast::coordinator::{source_for, Checkpoint, LrSchedule, Trainer, TrainerConfig};
+use topkast::api::{JsonlMetrics, RunSpec, Session};
 use topkast::info;
-use topkast::runtime::{Manifest, Runtime};
-use topkast::sparsity::{strategy_from_str, TopKast};
-use topkast::util::cli::Cli;
+use topkast::runtime::Manifest;
+use topkast::sparsity::with_default_registry;
+use topkast::util::cli::{Cli, Parsed};
 
 fn main() {
     if let Err(e) = run() {
@@ -28,7 +34,7 @@ fn main() {
 fn run() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first() else {
-        bail!("usage: topkast <train|eval|info> [options]  (--help per command)")
+        bail!("usage: topkast <train|eval|info|presets> [options]  (--help per command)")
     };
     match cmd.as_str() {
         "train" => cmd_train(&args[1..]),
@@ -45,7 +51,10 @@ fn cmd_presets() -> Result<()> {
         let p = topkast::config::preset(name).unwrap();
         println!(
             "{:<26} {:<10} {:<20} {}",
-            p.name, p.model, p.strategy, p.description
+            p.name,
+            p.model(),
+            p.strategy(),
+            p.description
         );
     }
     Ok(())
@@ -58,13 +67,12 @@ fn common_cli(name: &str, about: &str) -> Cli {
 }
 
 fn cmd_train(args: &[String]) -> Result<()> {
+    let strategy_help = format!(
+        "mask strategy: {}",
+        with_default_registry(|r| r.usage())
+    );
     let cli = common_cli("topkast train", "run a sparse-training job")
-        .opt(
-            "strategy",
-            "topkast:0.8,0.5",
-            "mask strategy: topkast:0.8,0.5 | topkast_random:S,S | \
-             rigl:0.9,0.3,100 | set:0.9,0.3 | static:0.9 | pruning:0.9 | dense",
-        )
+        .opt("strategy", "topkast:0.8,0.5", &strategy_help)
         .opt("steps", "300", "training steps")
         .opt("lr", "0.0", "base learning rate (0 = per-kind default)")
         .opt("reg-scale", "1e-4", "exploration regulariser coefficient")
@@ -73,13 +81,14 @@ fn cmd_train(args: &[String]) -> Result<()> {
         .opt("eval-batches", "8", "eval batches per evaluation")
         .opt("seed", "0", "seed for init/data/masks")
         .opt("checkpoint", "", "path to write the final checkpoint")
+        .opt("metrics-jsonl", "", "stream step/eval metrics to this JSONL file")
         .opt(
             "stop-exploration-at",
             "-1",
             "Table-1 ablation (topkast only): freeze B=A after this step",
         )
         .opt("preset", "", "named preset (see `topkast presets`)")
-        .opt("config", "", "JSON run-config file (see config::load_run_config)")
+        .opt("config", "", "JSON run-config file (see config module docs)")
         .flag("async-refresh", "overlap host Top-K with training (§2.4)")
         .flag("quiet", "suppress progress logging");
     let p = cli.parse(args)?;
@@ -87,101 +96,94 @@ fn cmd_train(args: &[String]) -> Result<()> {
         topkast::util::log::set_level(topkast::util::log::Level::Warn);
     }
 
-    // preset / config file resolution (explicit flags still win below)
-    let mut preset_model: Option<String> = None;
-    let mut preset_strategy: Option<String> = None;
-    let mut preset_trainer: Option<TrainerConfig> = None;
+    // Precedence: CLI defaults ← preset ← config file ← explicit flags.
+    let mut spec = train_spec(&p, false)?;
     if !p.get("preset").is_empty() {
-        let pr = topkast::config::preset(p.get("preset"))
-            .ok_or_else(|| anyhow::anyhow!("unknown preset {:?}", p.get("preset")))?;
-        preset_model = Some(pr.model.to_string());
-        preset_strategy = Some(pr.strategy.to_string());
-        preset_trainer = Some(pr.trainer);
+        spec = spec.merged_with(RunSpec::from_preset(p.get("preset"))?);
     }
     if !p.get("config").is_empty() {
-        let rc = topkast::config::load_run_config(p.get("config"))?;
-        preset_model = Some(rc.model);
-        preset_strategy = Some(rc.strategy);
-        preset_trainer = Some(rc.trainer);
+        spec = spec.merged_with(topkast::config::load_run_config(p.get("config"))?);
     }
+    spec = spec.merged_with(train_spec(&p, true)?);
 
-    let manifest = Manifest::load(p.get("artifacts"))?;
-    let model_name = preset_model.unwrap_or_else(|| p.get("model").to_string());
-    let model = manifest.model(&model_name)?.clone();
-    let strategy_spec =
-        preset_strategy.unwrap_or_else(|| p.get("strategy").to_string());
-    let stop_at = p.get("stop-exploration-at").parse::<i64>()?;
-    let strategy = if stop_at >= 0 {
-        // Table-1 ablation path needs the concrete TopKast type.
-        let parts: Vec<&str> = strategy_spec
-            .strip_prefix("topkast:")
-            .ok_or_else(|| {
-                anyhow::anyhow!("--stop-exploration-at requires a topkast strategy")
-            })?
-            .split(',')
-            .collect();
-        let mut tk =
-            TopKast::from_sparsities(parts[0].parse()?, parts[1].parse()?);
-        tk.stop_exploration_at = Some(stop_at as usize);
-        Box::new(tk) as Box<dyn topkast::sparsity::MaskStrategy>
-    } else {
-        strategy_from_str(&strategy_spec)?
-    };
-
-    let cfg = match preset_trainer {
-        Some(t) => t,
-        None => {
-            let steps = p.get_usize("steps")?;
-            let base_lr = p.get_f64("lr")?;
-            TrainerConfig {
-                steps,
-                lr: default_lr(&model.kind, base_lr, steps),
-                reg_scale: p.get_f64("reg-scale")?,
-                refresh_every: p.get_usize("refresh-every")?.max(1),
-                eval_every: match p.get_usize("eval-every")? {
-                    0 => None,
-                    n => Some(n),
-                },
-                eval_batches: p.get_usize("eval-batches")?,
-                seed: p.get_u64("seed")?,
-                ..Default::default()
-            }
-        }
-    };
-    let seed = cfg.seed;
-
-    let runtime = Runtime::new()?;
-    info!("PJRT platform: {}", runtime.platform());
-    let data = source_for(&model, seed ^ 0xDA7A)?;
-    let mut trainer = Trainer::new(runtime, model, strategy, data, cfg)?;
-    if p.is_set("async-refresh") {
-        trainer.enable_async_refresh(strategy_from_str(&strategy_spec)?)?;
-        info!("asynchronous mask refresh enabled (§2.4 overlap mode)");
+    let mut builder = Session::builder().artifacts(p.get("artifacts")).spec(spec);
+    if !p.get("metrics-jsonl").is_empty() {
+        builder = builder.observer(Box::new(JsonlMetrics::create(
+            p.get("metrics-jsonl"),
+        )?));
     }
+    let mut session = builder.build()?;
+    info!("PJRT platform: {}", session.trainer.runtime.platform());
     info!(
         "model {} — {} params ({} sparse tensors), strategy {}",
-        trainer.model.name,
-        trainer.model.total_params(),
-        trainer.model.sparse_params().len(),
-        trainer.strategy.name()
+        session.trainer.model.name,
+        session.trainer.model.total_params(),
+        session.trainer.model.sparse_params().len(),
+        session.trainer.strategy.name()
     );
-    trainer.train()?;
-    let ev = trainer.evaluate()?;
+    session.train()?;
+    let ev = session.evaluate()?;
     println!(
         "final: loss {:.4} acc {:.4} bpc {:.4} ppl {:.2} eff-params {} step-time {}",
         ev.loss_mean,
         ev.accuracy,
         ev.bpc,
         ev.perplexity,
-        trainer.store.effective_params(),
-        trainer.metrics.step_time.summary_ms(),
+        session.trainer.store.effective_params(),
+        session.trainer.metrics.step_time.summary_ms(),
     );
-    let ckpt_path = p.get("checkpoint");
-    if !ckpt_path.is_empty() {
-        Checkpoint::capture(&trainer.store, &[], trainer.step).save(ckpt_path)?;
-        info!("checkpoint written to {ckpt_path}");
-    }
     Ok(())
+}
+
+/// The CLI's `RunSpec` layer. With `explicit_only`, only flags the user
+/// actually passed are set (the top precedence layer); otherwise every
+/// registered default is set (the bottom layer).
+fn train_spec(p: &Parsed, explicit_only: bool) -> Result<RunSpec> {
+    let give = |name: &str| !explicit_only || p.is_given(name);
+    let mut s = RunSpec::new();
+    if give("model") {
+        s.model = Some(p.get("model").to_string());
+    }
+    if give("strategy") {
+        s.strategy = Some(p.get("strategy").to_string());
+    }
+    if give("steps") {
+        s.steps = Some(p.get_usize("steps")?);
+    }
+    if give("lr") {
+        let base = p.get_f64("lr")?;
+        if base > 0.0 {
+            s.lr_base = Some(base);
+        }
+    }
+    if give("reg-scale") {
+        s.reg_scale = Some(p.get_f64("reg-scale")?);
+    }
+    if give("refresh-every") {
+        s.refresh_every = Some(p.get_usize("refresh-every")?);
+    }
+    if give("eval-every") {
+        s.eval_every = Some(p.get_usize("eval-every")?);
+    }
+    if give("eval-batches") {
+        s.eval_batches = Some(p.get_usize("eval-batches")?);
+    }
+    if give("seed") {
+        s.seed = Some(p.get_u64("seed")?);
+    }
+    if give("stop-exploration-at") {
+        let stop = p.get("stop-exploration-at").parse::<i64>()?;
+        if stop >= 0 {
+            s.stop_exploration_at = Some(stop as usize);
+        }
+    }
+    if give("checkpoint") && !p.get("checkpoint").is_empty() {
+        s.checkpoint = Some(p.get("checkpoint").to_string());
+    }
+    if p.is_set("async-refresh") {
+        s.async_refresh = Some(true);
+    }
+    Ok(s)
 }
 
 fn cmd_eval(args: &[String]) -> Result<()> {
@@ -191,22 +193,19 @@ fn cmd_eval(args: &[String]) -> Result<()> {
         .opt("eval-batches", "16", "eval batches")
         .opt("seed", "0", "data seed");
     let p = cli.parse(args)?;
-    let manifest = Manifest::load(p.get("artifacts"))?;
-    let model = manifest.model(p.get("model"))?.clone();
-    let strategy = strategy_from_str(p.get("strategy"))?;
-    let seed = p.get_u64("seed")?;
-    let cfg = TrainerConfig {
-        steps: 0,
-        eval_batches: p.get_usize("eval-batches")?,
-        seed,
-        ..Default::default()
-    };
-    let runtime = Runtime::new()?;
-    let data = source_for(&model, seed ^ 0xDA7A)?;
-    let mut trainer = Trainer::new(runtime, model, strategy, data, cfg)?;
-    let ck = Checkpoint::load(p.get("checkpoint"))?;
-    ck.restore(&mut trainer.store, &mut [])?;
-    let ev = trainer.evaluate()?;
+    let spec = RunSpec::new()
+        .model(p.get("model"))
+        .strategy(p.get("strategy"))
+        .steps(0)
+        .eval_batches(p.get_usize("eval-batches")?)
+        .seed(p.get_u64("seed")?);
+    let mut session = Session::builder()
+        .artifacts(p.get("artifacts"))
+        .spec(spec)
+        .quiet()
+        .build()?;
+    session.restore_checkpoint(p.get("checkpoint"))?;
+    let ev = session.evaluate()?;
     println!(
         "eval: loss {:.4} acc {:.4} bpc {:.4} ppl {:.2}",
         ev.loss_mean, ev.accuracy, ev.bpc, ev.perplexity
@@ -233,21 +232,4 @@ fn cmd_info(args: &[String]) -> Result<()> {
         );
     }
     Ok(())
-}
-
-fn default_lr(kind: &str, base: f64, steps: usize) -> LrSchedule {
-    match kind {
-        "lm" => LrSchedule::WarmupCosine {
-            base: if base > 0.0 { base } else { 3e-3 },
-            warmup: (steps / 10).max(10),
-            floor: 1e-5,
-        },
-        "cnn" => LrSchedule::StepDrops {
-            base: if base > 0.0 { base } else { 0.05 },
-            factor: 0.1,
-            at: vec![0.5, 0.8],
-            warmup: steps / 20,
-        },
-        _ => LrSchedule::Constant { base: if base > 0.0 { base } else { 0.1 } },
-    }
 }

@@ -3,6 +3,7 @@
 
 pub mod flops;
 pub mod pruning;
+pub mod registry;
 pub mod rigl;
 pub mod set_evolve;
 pub mod static_random;
@@ -12,6 +13,9 @@ pub mod topk;
 pub mod topkast;
 
 pub use pruning::{Dense, MagnitudePruning};
+pub use registry::{
+    with_default_registry, StrategyRegistry, StrategySpec, StrategyTuning,
+};
 pub use rigl::RigL;
 pub use set_evolve::SetEvolve;
 pub use static_random::StaticRandom;
@@ -19,7 +23,7 @@ pub use store::{MaskPair, ParamEntry, ParamStore};
 pub use strategy::{update_store_masks, Densities, MaskStrategy, TensorCtx};
 pub use topkast::{TopKast, TopKastRandom};
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 /// Build a strategy from a config string, e.g.
 ///   "topkast:0.8,0.5"           (fwd sparsity 80%, bwd sparsity 50%)
@@ -30,52 +34,10 @@ use anyhow::{bail, Result};
 ///   "pruning:0.8"               (final sparsity)
 ///   "dense"
 /// Sparsities follow the paper's notation (fraction of *zero* weights).
+/// Delegates to the default [`StrategyRegistry`]; use a registry
+/// directly for custom strategies or ablation tuning.
 pub fn strategy_from_str(s: &str) -> Result<Box<dyn MaskStrategy>> {
-    let (name, args) = match s.split_once(':') {
-        Some((n, a)) => (n, a),
-        None => (s, ""),
-    };
-    let nums: Vec<f64> = if args.is_empty() {
-        vec![]
-    } else {
-        args.split(',')
-            .map(|x| x.trim().parse::<f64>())
-            .collect::<std::result::Result<_, _>>()?
-    };
-    let need = |n: usize| -> Result<()> {
-        if nums.len() != n {
-            bail!("strategy {name:?} needs {n} args, got {}", nums.len());
-        }
-        Ok(())
-    };
-    Ok(match name {
-        "dense" => Box::new(Dense),
-        "topkast" => {
-            need(2)?;
-            Box::new(TopKast::from_sparsities(nums[0], nums[1]))
-        }
-        "topkast_random" => {
-            need(2)?;
-            Box::new(TopKastRandom::new(1.0 - nums[0], 1.0 - nums[1]))
-        }
-        "static" => {
-            need(1)?;
-            Box::new(StaticRandom::new(1.0 - nums[0]))
-        }
-        "set" => {
-            need(2)?;
-            Box::new(SetEvolve::new(1.0 - nums[0], nums[1], 0.05))
-        }
-        "rigl" => {
-            need(3)?;
-            Box::new(RigL::new(1.0 - nums[0], nums[1], nums[2] as usize))
-        }
-        "pruning" => {
-            need(1)?;
-            Box::new(MagnitudePruning::new(1.0 - nums[0]))
-        }
-        _ => bail!("unknown strategy {name:?}"),
-    })
+    with_default_registry(|r| r.build(s))
 }
 
 #[cfg(test)]

@@ -1,0 +1,326 @@
+//! String-keyed strategy factories — the one place a strategy spec like
+//! `"topkast:0.8,0.5"` becomes a live [`MaskStrategy`].
+//!
+//! The registry replaces the old hardcoded `strategy_from_str` match:
+//! every built-in method registers a factory under its name, callers
+//! (CLI, config files, presets, benches, the Session builder) all parse
+//! through the same path, and because a factory can re-instantiate its
+//! strategy from the spec, consumers that need a second instance — the
+//! §2.4 async-refresh worker — no longer hand-build one. Additional
+//! always-sparse baselines (e.g. guided stochastic exploration) plug in
+//! via [`StrategyRegistry::register`] without touching the core.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::pruning::{Dense, MagnitudePruning};
+use super::rigl::RigL;
+use super::set_evolve::SetEvolve;
+use super::static_random::StaticRandom;
+use super::strategy::MaskStrategy;
+use super::topkast::{TopKast, TopKastRandom};
+
+/// A parsed strategy spec: `name[:arg,arg,...]` with numeric args in
+/// the paper's sparsity notation (fraction of *zero* weights).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StrategySpec {
+    pub name: String,
+    pub args: Vec<f64>,
+}
+
+impl StrategySpec {
+    pub fn parse(s: &str) -> Result<StrategySpec> {
+        let s = s.trim();
+        if s.is_empty() {
+            bail!("empty strategy spec");
+        }
+        let (name, args) = match s.split_once(':') {
+            Some((n, a)) => (n, a),
+            None => (s, ""),
+        };
+        let args = if args.trim().is_empty() {
+            vec![]
+        } else {
+            args.split(',')
+                .map(|x| {
+                    x.trim().parse::<f64>().map_err(|e| {
+                        anyhow!("strategy {name:?}: bad numeric argument {x:?}: {e}")
+                    })
+                })
+                .collect::<Result<Vec<f64>>>()?
+        };
+        Ok(StrategySpec { name: name.to_string(), args })
+    }
+
+    /// Exactly `n` args or a uniform error.
+    pub fn need(&self, n: usize) -> Result<&[f64]> {
+        if self.args.len() != n {
+            bail!(
+                "strategy {:?} needs {n} args, got {} (spec {self})",
+                self.name,
+                self.args.len()
+            );
+        }
+        Ok(&self.args)
+    }
+
+    fn sparsity(&self, idx: usize) -> Result<f64> {
+        let v = self.args[idx];
+        if !(0.0..=1.0).contains(&v) {
+            bail!("strategy {:?}: sparsity {v} not in [0, 1]", self.name);
+        }
+        Ok(v)
+    }
+}
+
+impl fmt::Display for StrategySpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.args.is_empty() {
+            write!(f, "{}", self.name)
+        } else {
+            let args: Vec<String> = self.args.iter().map(|a| a.to_string()).collect();
+            write!(f, "{}:{}", self.name, args.join(","))
+        }
+    }
+}
+
+/// Run-level knobs that tune a strategy beyond its spec string — today
+/// the Table-1 exploration-stop ablation; factories that don't support
+/// a set knob are rejected up front instead of silently ignoring it.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StrategyTuning {
+    /// Freeze B = A after this step (Top-KAST only, paper Table 1).
+    pub stop_exploration_at: Option<usize>,
+}
+
+pub type StrategyFactory =
+    fn(&StrategySpec, &StrategyTuning) -> Result<Box<dyn MaskStrategy>>;
+
+struct Entry {
+    usage: &'static str,
+    supports_stop_exploration: bool,
+    factory: StrategyFactory,
+}
+
+/// String-keyed strategy factories. [`StrategyRegistry::with_builtins`]
+/// knows every method the paper evaluates; `register` adds more.
+pub struct StrategyRegistry {
+    entries: BTreeMap<String, Entry>,
+}
+
+impl StrategyRegistry {
+    pub fn empty() -> Self {
+        StrategyRegistry { entries: BTreeMap::new() }
+    }
+
+    pub fn with_builtins() -> Self {
+        let mut r = Self::empty();
+        r.register("dense", "dense", false, |s, _| {
+            s.need(0)?;
+            Ok(Box::new(Dense))
+        });
+        r.register("topkast", "topkast:FWD_SP,BWD_SP", true, |s, t| {
+            let a = s.need(2)?;
+            let (sf, sb) = (s.sparsity(0)?, s.sparsity(1)?);
+            if sb > sf {
+                bail!(
+                    "topkast backward sparsity {} must be <= forward sparsity {} \
+                     (the backward set B is a superset of A)",
+                    a[1],
+                    a[0]
+                );
+            }
+            let mut k = TopKast::from_sparsities(sf, sb);
+            k.stop_exploration_at = t.stop_exploration_at;
+            Ok(Box::new(k))
+        });
+        r.register(
+            "topkast_random",
+            "topkast_random:FWD_SP,BWD_SP",
+            false,
+            |s, _| {
+                let _ = s.need(2)?;
+                let (sf, sb) = (s.sparsity(0)?, s.sparsity(1)?);
+                if sb > sf {
+                    bail!(
+                        "topkast_random backward sparsity {sb} must be <= \
+                         forward sparsity {sf}"
+                    );
+                }
+                Ok(Box::new(TopKastRandom::new(1.0 - sf, 1.0 - sb)))
+            },
+        );
+        r.register("static", "static:SPARSITY", false, |s, _| {
+            let _ = s.need(1)?;
+            Ok(Box::new(StaticRandom::new(1.0 - s.sparsity(0)?)))
+        });
+        r.register("set", "set:SPARSITY,DROP_FRAC", false, |s, _| {
+            let a = s.need(2)?;
+            Ok(Box::new(SetEvolve::new(1.0 - s.sparsity(0)?, a[1], 0.05)))
+        });
+        r.register("rigl", "rigl:SPARSITY,DROP_FRAC,UPDATE_EVERY", false, |s, _| {
+            let a = s.need(3)?;
+            Ok(Box::new(RigL::new(1.0 - s.sparsity(0)?, a[1], a[2] as usize)))
+        });
+        r.register("pruning", "pruning:FINAL_SPARSITY", false, |s, _| {
+            let _ = s.need(1)?;
+            Ok(Box::new(MagnitudePruning::new(1.0 - s.sparsity(0)?)))
+        });
+        r
+    }
+
+    /// Register (or replace) a factory under `name`. `usage` is the
+    /// spec syntax shown in CLI help; `supports_stop_exploration` gates
+    /// the Table-1 ablation knob.
+    pub fn register(
+        &mut self,
+        name: &str,
+        usage: &'static str,
+        supports_stop_exploration: bool,
+        factory: StrategyFactory,
+    ) {
+        self.entries.insert(
+            name.to_string(),
+            Entry { usage, supports_stop_exploration, factory },
+        );
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.keys().map(|k| k.as_str()).collect()
+    }
+
+    /// Spec syntax of every registered strategy, for CLI help text.
+    pub fn usage(&self) -> String {
+        self.entries
+            .values()
+            .map(|e| e.usage)
+            .collect::<Vec<_>>()
+            .join(" | ")
+    }
+
+    pub fn build(&self, spec: &str) -> Result<Box<dyn MaskStrategy>> {
+        self.build_tuned(spec, &StrategyTuning::default())
+    }
+
+    pub fn build_tuned(
+        &self,
+        spec: &str,
+        tuning: &StrategyTuning,
+    ) -> Result<Box<dyn MaskStrategy>> {
+        let parsed = StrategySpec::parse(spec)?;
+        let entry = self.entries.get(&parsed.name).ok_or_else(|| {
+            anyhow!(
+                "unknown strategy {:?} (known: {})",
+                parsed.name,
+                self.names().join(", ")
+            )
+        })?;
+        if tuning.stop_exploration_at.is_some() && !entry.supports_stop_exploration {
+            bail!(
+                "stop-exploration-at requires a strategy with an exploration \
+                 phase (topkast), got {:?}",
+                parsed.name
+            );
+        }
+        (entry.factory)(&parsed, tuning)
+    }
+}
+
+thread_local! {
+    static DEFAULT: StrategyRegistry = StrategyRegistry::with_builtins();
+}
+
+/// Run `f` against the process-default registry (all built-ins).
+pub fn with_default_registry<R>(f: impl FnOnce(&StrategyRegistry) -> R) -> R {
+    DEFAULT.with(f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_and_displays_specs() {
+        let s = StrategySpec::parse("topkast:0.8,0.5").unwrap();
+        assert_eq!(s.name, "topkast");
+        assert_eq!(s.args, vec![0.8, 0.5]);
+        assert_eq!(s.to_string(), "topkast:0.8,0.5");
+        assert_eq!(StrategySpec::parse("dense").unwrap().to_string(), "dense");
+        assert!(StrategySpec::parse("").is_err());
+        assert!(StrategySpec::parse("topkast:a,b").is_err());
+    }
+
+    #[test]
+    fn builds_all_builtins() {
+        let r = StrategyRegistry::with_builtins();
+        for (spec, want) in [
+            ("dense", "dense"),
+            ("topkast:0.8,0.5", "topkast"),
+            ("topkast_random:0.9,0.8", "topkast_random"),
+            ("static:0.8", "static"),
+            ("set:0.8,0.3", "set"),
+            ("rigl:0.8,0.3,100", "rigl"),
+            ("pruning:0.8", "pruning"),
+        ] {
+            assert_eq!(r.build(spec).unwrap().name(), want, "spec {spec}");
+        }
+        assert_eq!(r.names().len(), 7);
+        assert!(r.usage().contains("topkast:FWD_SP,BWD_SP"));
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        let r = StrategyRegistry::with_builtins();
+        assert!(r.build("nope").is_err());
+        assert!(r.build("topkast:0.8").is_err(), "missing backward sparsity");
+        assert!(r.build("topkast:0.5,0.8").is_err(), "B must be a superset of A");
+        assert!(r.build("topkast:1.5,0.5").is_err(), "sparsity out of range");
+        assert!(r.build("rigl:0.8").is_err());
+        assert!(r.build("set:a,b").is_err());
+    }
+
+    /// Regression for the old `--stop-exploration-at` path, which
+    /// indexed `parts[1]` and panicked on `topkast:0.8`: malformed
+    /// specs must now return an error, and the knob must be rejected
+    /// for strategies without an exploration phase.
+    #[test]
+    fn stop_exploration_tuning_is_validated() {
+        let r = StrategyRegistry::with_builtins();
+        let t = StrategyTuning { stop_exploration_at: Some(100) };
+        assert!(r.build_tuned("topkast:0.8", &t).is_err(), "no panic on 1 arg");
+        assert!(r.build_tuned("rigl:0.9,0.3,100", &t).is_err());
+        assert!(r.build_tuned("dense", &t).is_err());
+
+        let s = r.build_tuned("topkast:0.9,0.0", &t).unwrap();
+        assert_eq!(s.name(), "topkast");
+        // exploration stopped at 100: B collapses to A from there on
+        let before = s.densities(99, 200);
+        let after = s.densities(100, 200);
+        assert!(before.bwd > before.fwd);
+        assert_eq!(after.bwd, after.fwd);
+    }
+
+    #[test]
+    fn factories_reinstantiate_equivalent_strategies() {
+        // the property async refresh relies on: two builds of the same
+        // spec expose identical densities
+        let r = StrategyRegistry::with_builtins();
+        let a = r.build("topkast:0.8,0.5").unwrap();
+        let b = r.build("topkast:0.8,0.5").unwrap();
+        assert_eq!(a.name(), b.name());
+        assert_eq!(a.densities(0, 100), b.densities(0, 100));
+    }
+
+    #[test]
+    fn custom_registration_extends_registry() {
+        let mut r = StrategyRegistry::empty();
+        r.register("always_dense", "always_dense", false, |s, _| {
+            s.need(0)?;
+            Ok(Box::new(Dense))
+        });
+        assert_eq!(r.build("always_dense").unwrap().name(), "dense");
+        assert!(r.build("topkast:0.8,0.5").is_err(), "builtins not included");
+    }
+}

@@ -3,7 +3,7 @@
 //! Supports `--flag`, `--key value`, `--key=value`, positional args, and
 //! generates usage text from registered options.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::{bail, Result};
 
@@ -26,6 +26,10 @@ pub struct Cli {
 pub struct Parsed {
     values: BTreeMap<String, String>,
     flags: BTreeMap<String, bool>,
+    /// Options the user passed explicitly (vs. registered defaults) —
+    /// lets callers layer CLI values over presets/config files with
+    /// "explicit flags win" precedence.
+    given: BTreeSet<String>,
     pub positional: Vec<String>,
 }
 
@@ -113,6 +117,7 @@ impl Cli {
                     if inline.is_some() {
                         bail!("--{name} is a flag and takes no value");
                     }
+                    parsed.given.insert(name.clone());
                     parsed.flags.insert(name, true);
                 } else {
                     let value = match inline {
@@ -126,6 +131,7 @@ impl Cli {
                                 })?
                         }
                     };
+                    parsed.given.insert(name.clone());
                     parsed.values.insert(name, value);
                 }
             } else {
@@ -170,6 +176,12 @@ impl Parsed {
     pub fn is_set(&self, name: &str) -> bool {
         *self.flags.get(name).unwrap_or(&false)
     }
+
+    /// Whether the user passed this option explicitly (a default filled
+    /// in by the parser does not count).
+    pub fn is_given(&self, name: &str) -> bool {
+        self.given.contains(name)
+    }
 }
 
 #[cfg(test)]
@@ -203,6 +215,19 @@ mod tests {
         let p = cli().parse(&argv(&["--model", "x"])).unwrap();
         assert_eq!(p.get_usize("steps").unwrap(), 100);
         assert!(!p.is_set("verbose"));
+    }
+
+    #[test]
+    fn tracks_explicitly_given_options() {
+        let p = cli()
+            .parse(&argv(&["--model", "x", "--steps=7", "--verbose"]))
+            .unwrap();
+        assert!(p.is_given("model"));
+        assert!(p.is_given("steps"));
+        assert!(p.is_given("verbose"));
+        let q = cli().parse(&argv(&["--model", "x"])).unwrap();
+        assert!(!q.is_given("steps"), "default value is not 'given'");
+        assert!(!q.is_given("verbose"));
     }
 
     #[test]
