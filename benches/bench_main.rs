@@ -19,8 +19,10 @@ use anyhow::Result;
 
 use topkast::bench::reports::{f2, f3, pct};
 use topkast::bench::{run_training, Report, RunSpec, Table};
-use topkast::runtime::Manifest;
-use topkast::sparsity::flops;
+use topkast::coordinator::TrainerConfig;
+use topkast::runtime::{Manifest, Synthetic};
+use topkast::sparsity::{flops, TopKast};
+use topkast::util::json::Json;
 use topkast::util::timer::{Stats, Stopwatch};
 
 fn steps_vision() -> usize {
@@ -47,8 +49,31 @@ fn main() -> Result<()> {
         .collect();
     let want = |name: &str| filter.is_empty() || filter.iter().any(|f| name.contains(f));
 
-    let manifest = Manifest::load("artifacts")?;
     topkast::util::log::set_level(topkast::util::log::Level::Warn);
+    let total = Stopwatch::start();
+
+    // step_traffic runs on synthetic in-memory models — no artifacts
+    // needed, so it is the one scenario a bare checkout can always run
+    // (and the perf-trajectory baseline CI smokes on every push).
+    if want("step_traffic") {
+        let sw = Stopwatch::start();
+        println!("\n######## step_traffic ########");
+        let report = step_traffic()?;
+        report.save("step_traffic")?;
+        println!("{}", report.summary_line("step_traffic", sw.elapsed_ms() / 1e3));
+    }
+
+    let manifest = match Manifest::load("artifacts") {
+        Ok(m) => m,
+        Err(_) => {
+            println!(
+                "\nartifacts not built (run `make artifacts`) — \
+                 skipping the artifact-backed scenarios"
+            );
+            println!("\nall benches done in {:.1}s", total.elapsed_ms() / 1e3);
+            return Ok(());
+        }
+    };
 
     let experiments: &[(&str, fn(&Manifest) -> Result<Report>)] = &[
         ("fig2a_flops_vs_accuracy", fig2a),
@@ -64,7 +89,6 @@ fn main() -> Result<()> {
         ("perf_breakdown", perf),
     ];
 
-    let total = Stopwatch::start();
     for (name, f) in experiments {
         if !want(name) {
             continue;
@@ -424,6 +448,108 @@ fn appb(man: &Manifest) -> Result<Report> {
             t.row(vec![model.into(), pct(s), pct(r.accuracy)]);
         }
     }
+    rep.add(t);
+    Ok(rep)
+}
+
+// ---------------------------------------------------------------------------
+// STEP_TRAFFIC — the device-resident perf baseline. Runs the real
+// coordinator over synthetic in-memory models (two presets), measures
+// step/refresh latency percentiles and the per-step host↔device traffic
+// (analytic model cross-checked against the runtime's metered
+// counters), and writes one JSON line per preset to BENCH_topkast.json
+// — the file every later perf PR appends its numbers to.
+// ---------------------------------------------------------------------------
+fn step_traffic() -> Result<Report> {
+    let mut rep = Report::new();
+    let mut t = Table::new(
+        "step_traffic: device-resident step cost + traffic (topkast 80/50, N=10)",
+        &[
+            "preset",
+            "step_ms_p50",
+            "step_ms_p95",
+            "refresh_ms_p50",
+            "resident_kb",
+            "stream_b/step",
+            "legacy_b/step",
+        ],
+    );
+    let mut lines: Vec<String> = Vec::new();
+    for (preset, synth) in [("tiny", Synthetic::tiny()), ("small", Synthetic::small())]
+    {
+        let steps = 60usize;
+        let cfg = TrainerConfig {
+            steps,
+            refresh_every: 10,
+            seed: 7,
+            ..TrainerConfig::default()
+        };
+        let mut trainer =
+            synth.trainer(Box::new(TopKast::from_sparsities(0.8, 0.5)), cfg)?;
+        let before = trainer.runtime.transfer_stats();
+        for _ in 0..steps {
+            trainer.train_step()?;
+        }
+        let moved = trainer.runtime.transfer_stats().since(&before);
+        let traffic = trainer.traffic()?;
+        let step_ms = &trainer.metrics.step_time;
+        let refresh_ms = &trainer.metrics.refresh_time;
+        t.row(vec![
+            preset.into(),
+            f3(step_ms.percentile(50.0)),
+            f3(step_ms.percentile(95.0)),
+            f3(refresh_ms.percentile(50.0)),
+            format!("{:.1}", traffic.resident_bytes as f64 / 1024.0),
+            (traffic.step_h2d_bytes + traffic.step_d2h_bytes).to_string(),
+            traffic.legacy_step_bytes.to_string(),
+        ]);
+        lines.push(
+            Json::obj(vec![
+                ("scenario", Json::str("step_traffic")),
+                ("preset", Json::str(preset)),
+                ("steps", Json::num(steps as f64)),
+                ("step_ms_p50", Json::num(step_ms.percentile(50.0))),
+                ("step_ms_p95", Json::num(step_ms.percentile(95.0))),
+                ("refresh_ms_p50", Json::num(refresh_ms.percentile(50.0))),
+                ("refresh_ms_p95", Json::num(refresh_ms.percentile(95.0))),
+                ("resident_bytes", Json::num(traffic.resident_bytes as f64)),
+                (
+                    "streamed_bytes_per_step",
+                    Json::num((traffic.step_h2d_bytes + traffic.step_d2h_bytes) as f64),
+                ),
+                (
+                    "refresh_bytes",
+                    Json::num(
+                        (traffic.refresh_h2d_bytes + traffic.refresh_d2h_bytes) as f64,
+                    ),
+                ),
+                (
+                    "amortized_bytes_per_step_n10",
+                    Json::num(traffic.amortized_step_bytes(10)),
+                ),
+                ("legacy_step_bytes", Json::num(traffic.legacy_step_bytes as f64)),
+                // metered counters over the whole run divided by steps:
+                // comparable to amortized_bytes_per_step_n10 (includes
+                // the refresh traffic), not to streamed_bytes_per_step
+                (
+                    "measured_h2d_bytes_per_step",
+                    Json::num(moved.h2d_bytes as f64 / steps as f64),
+                ),
+                (
+                    "measured_d2h_bytes_per_step",
+                    Json::num(moved.d2h_bytes as f64 / steps as f64),
+                ),
+            ])
+            .to_string_compact(),
+        );
+        // the analytic account must not undershoot the metered reality:
+        // every steady step streams exactly step_h2d/step_d2h, and the
+        // measured mean adds only refresh/init traffic on top
+        assert!(moved.h2d_bytes >= steps as u64 * traffic.step_h2d_bytes);
+        assert!(moved.d2h_bytes >= steps as u64 * traffic.step_d2h_bytes);
+    }
+    std::fs::write("BENCH_topkast.json", lines.join("\n") + "\n")?;
+    println!("wrote BENCH_topkast.json ({} presets)", lines.len());
     rep.add(t);
     Ok(rep)
 }

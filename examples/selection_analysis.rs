@@ -53,7 +53,7 @@ fn main() -> Result<()> {
                 let Some(m) = e.masks.as_mut() else { continue };
                 let n = e.values.len();
                 let k = topk::k_for_density(n, density);
-                m.fwd = match rule {
+                m.set_fwd(match rule {
                     "topk" => topk::topk_mask(&e.values, k),
                     "bottomk" => {
                         // invert magnitudes: keep the k smallest
@@ -68,8 +68,10 @@ fn main() -> Result<()> {
                         }
                         mask
                     }
-                };
+                });
             }
+            // eval runs against the *device* masks — push the surgery down
+            session.trainer.push_masks_to_device()?;
             let loss = session.evaluate()?.loss_mean;
             cells.push(f3((loss - dense_loss).abs()));
         }

@@ -41,9 +41,13 @@ impl Session {
         self.trainer.evaluate()
     }
 
-    /// Write a checkpoint of the current run state.
-    pub fn save_checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
-        self.trainer.capture_checkpoint().save(path)
+    /// Write a checkpoint of the current run state (syncs the device
+    /// state to the host first).
+    pub fn save_checkpoint(
+        &mut self,
+        path: impl AsRef<std::path::Path>,
+    ) -> Result<()> {
+        self.trainer.capture_checkpoint()?.save(path)
     }
 
     /// Restore a checkpoint (params, masks, optimiser state, step).

@@ -42,6 +42,9 @@ pub struct AsyncMaskRefresher {
     res_rx: Receiver<RefreshResult>,
     worker: Option<JoinHandle<()>>,
     in_flight: bool,
+    /// Deterministic mode: `try_install` blocks on an in-flight request
+    /// instead of racing it (parity tests).
+    blocking: bool,
     /// Refreshes applied / requested (observability).
     pub applied: usize,
     pub requested: usize,
@@ -52,7 +55,7 @@ pub struct AsyncMaskRefresher {
 impl AsyncMaskRefresher {
     /// Spawn the worker with its own strategy instance and RNG stream.
     pub fn spawn(mut strategy: Box<dyn MaskStrategy>, seed: u64) -> Result<Self> {
-        if strategy_mutates_weights(strategy.name()) {
+        if strategy.mutates_weights() {
             bail!(
                 "strategy {:?} rewrites weights during mask updates and \
                  cannot run asynchronously from a snapshot",
@@ -70,14 +73,13 @@ impl AsyncMaskRefresher {
                     let mut masks = Vec::with_capacity(req.weights.len());
                     for (name, mut w) in req.weights {
                         let n = w.len();
-                        let mut pair = MaskPair::dense(n);
-                        pair.fwd.fill(0.0);
-                        pair.bwd.fill(0.0);
+                        let mut fwd = vec![0.0f32; n];
+                        let mut bwd = vec![0.0f32; n];
                         let ctx = TensorCtx {
                             name: &name,
                             weights: &mut w,
-                            mask_fwd: &mut pair.fwd,
-                            mask_bwd: &mut pair.bwd,
+                            mask_fwd: &mut fwd,
+                            mask_bwd: &mut bwd,
                             grad_norms: None,
                             rng: &mut rng,
                             step: req.step,
@@ -86,7 +88,7 @@ impl AsyncMaskRefresher {
                         if strategy.update_tensor(ctx).is_err() {
                             return; // trainer side will notice the hangup
                         }
-                        masks.push((name, pair));
+                        masks.push((name, MaskPair::from_vecs(fwd, bwd)));
                     }
                     let _ = res_tx.send(RefreshResult {
                         step: req.step,
@@ -100,10 +102,24 @@ impl AsyncMaskRefresher {
             res_rx,
             worker: Some(worker),
             in_flight: false,
+            blocking: false,
             applied: 0,
             requested: 0,
             last_compute_ms: 0.0,
         })
+    }
+
+    /// Deterministic mode for parity tests: an in-flight request is
+    /// waited for at the next `try_install` instead of raced.
+    pub fn set_blocking(&mut self, blocking: bool) {
+        self.blocking = blocking;
+    }
+
+    /// Whether a request is still being computed by the worker (a
+    /// `request` now would be dropped — callers can skip preparing the
+    /// snapshot).
+    pub fn is_in_flight(&self) -> bool {
+        self.in_flight
     }
 
     /// Ship a snapshot to the worker (no-op if one is still in flight —
@@ -132,6 +148,9 @@ impl AsyncMaskRefresher {
     /// Install a finished result if one is ready. Returns the step the
     /// installed masks were computed from (staleness = now - that).
     pub fn try_install(&mut self, store: &mut ParamStore) -> Result<Option<usize>> {
+        if self.blocking && self.in_flight {
+            return self.wait_install(store).map(Some);
+        }
         match self.res_rx.try_recv() {
             Ok(res) => {
                 for (name, pair) in res.masks {
@@ -179,12 +198,6 @@ impl Drop for AsyncMaskRefresher {
             let _ = h.join();
         }
     }
-}
-
-/// Strategies whose update_tensor mutates weights (SET re-inits grown
-/// connections, RigL zeroes dropped/grown ones).
-pub fn strategy_mutates_weights(name: &str) -> bool {
-    matches!(name, "set" | "rigl")
 }
 
 #[cfg(test)]
@@ -238,8 +251,8 @@ mod tests {
         let m = e.masks.as_ref().unwrap();
         let want_fwd = topk::topk_mask(&e.values, topk::k_for_density(40, 0.2));
         let want_bwd = topk::topk_mask(&e.values, topk::k_for_density(40, 0.5));
-        assert_eq!(m.fwd, want_fwd);
-        assert_eq!(m.bwd, want_bwd);
+        assert_eq!(m.fwd(), &want_fwd[..]);
+        assert_eq!(m.bwd(), &want_bwd[..]);
         assert_eq!(r.applied, 1);
     }
 
@@ -260,8 +273,9 @@ mod tests {
             0,
         );
         assert!(err.is_err());
-        assert!(strategy_mutates_weights("rigl"));
-        assert!(!strategy_mutates_weights("topkast"));
+        assert!(SetEvolve::new(0.2, 0.3, 0.05).mutates_weights());
+        assert!(crate::sparsity::RigL::new(0.2, 0.3, 10).mutates_weights());
+        assert!(!TopKast::new(0.2, 0.5).mutates_weights());
     }
 
     #[test]
@@ -282,5 +296,19 @@ mod tests {
             std::thread::sleep(std::time::Duration::from_millis(1));
         }
         assert_eq!(got, Some(3));
+    }
+
+    #[test]
+    fn blocking_mode_installs_deterministically() {
+        let mut st = store();
+        let mut r =
+            AsyncMaskRefresher::spawn(Box::new(TopKast::new(0.2, 0.5)), 4).unwrap();
+        r.set_blocking(true);
+        // nothing in flight: still non-blocking
+        assert!(r.try_install(&mut st).unwrap().is_none());
+        r.request(&st, 7, 100);
+        // in flight: the very next try_install waits and installs
+        assert_eq!(r.try_install(&mut st).unwrap(), Some(7));
+        assert_eq!(r.applied, 1);
     }
 }

@@ -32,8 +32,8 @@ impl Checkpoint {
         for e in &store.entries {
             params.push((e.spec.name.clone(), e.values.clone()));
             if let Some(m) = &e.masks {
-                masks_fwd.push((e.spec.name.clone(), m.fwd.clone()));
-                masks_bwd.push((e.spec.name.clone(), m.bwd.clone()));
+                masks_fwd.push((e.spec.name.clone(), m.fwd().to_vec()));
+                masks_bwd.push((e.spec.name.clone(), m.bwd().to_vec()));
             }
         }
         Checkpoint {
@@ -53,14 +53,18 @@ impl Checkpoint {
         for (name, m) in &self.masks_fwd {
             let e = store.get_mut(name)?;
             let masks = e.masks.as_mut().context("mask on dense tensor")?;
-            if masks.fwd.len() != m.len() {
+            if masks.fwd().len() != m.len() {
                 bail!("mask size mismatch for {name}");
             }
-            masks.fwd = m.clone();
+            masks.set_fwd(m.clone());
         }
         for (name, m) in &self.masks_bwd {
             let e = store.get_mut(name)?;
-            e.masks.as_mut().context("mask on dense tensor")?.bwd = m.clone();
+            let masks = e.masks.as_mut().context("mask on dense tensor")?;
+            if masks.bwd().len() != m.len() {
+                bail!("mask size mismatch for {name}");
+            }
+            masks.set_bwd(m.clone());
         }
         if opt.len() != self.opt.len() {
             bail!("opt slot count mismatch: {} vs {}", opt.len(), self.opt.len());
@@ -200,8 +204,8 @@ mod tests {
         let mut store = ParamStore::init(&specs(), 3);
         {
             let m = store.get_mut("w").unwrap().masks.as_mut().unwrap();
-            m.fwd = vec![1.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 1.0];
-            m.bwd = vec![1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 1.0];
+            m.set_fwd(vec![1.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 1.0]);
+            m.set_bwd(vec![1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 1.0]);
         }
         let opt = vec![vec![0.5f32; 8], vec![0.25f32; 4]];
         let ck = Checkpoint::capture(&store, &opt, 1234);
@@ -222,8 +226,8 @@ mod tests {
             store.get("w").unwrap().values
         );
         assert_eq!(
-            store2.get("w").unwrap().masks.as_ref().unwrap().fwd,
-            store.get("w").unwrap().masks.as_ref().unwrap().fwd
+            store2.get("w").unwrap().masks.as_ref().unwrap().fwd(),
+            store.get("w").unwrap().masks.as_ref().unwrap().fwd()
         );
         assert_eq!(opt2, opt);
     }

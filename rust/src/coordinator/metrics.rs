@@ -26,12 +26,12 @@ impl MaskChurn {
             if let Some(prev) = self.last.get(name) {
                 let changed = prev
                     .iter()
-                    .zip(&masks.fwd)
+                    .zip(masks.fwd())
                     .filter(|(a, b)| a != b)
                     .count();
                 churns.push(changed as f64 / prev.len().max(1) as f64);
             }
-            self.last.insert(name.clone(), masks.fwd.clone());
+            self.last.insert(name.clone(), masks.fwd().to_vec());
         }
         if !churns.is_empty() {
             self.history.push((step, churns));
@@ -78,8 +78,8 @@ impl ReservoirTracker {
     pub fn init(&mut self, store: &ParamStore) {
         for e in &store.entries {
             let Some(m) = &e.masks else { continue };
-            let res: Vec<u32> = (0..m.bwd.len() as u32)
-                .filter(|&i| m.bwd[i as usize] == 0.0)
+            let res: Vec<u32> = (0..m.bwd().len() as u32)
+                .filter(|&i| m.bwd()[i as usize] == 0.0)
                 .collect();
             self.woken
                 .insert(e.spec.name.clone(), vec![false; res.len()]);
@@ -103,7 +103,7 @@ impl ReservoirTracker {
                 continue;
             };
             for (slot, &i) in res.iter().enumerate() {
-                if m.fwd[i as usize] == 1.0 {
+                if m.fwd()[i as usize] == 1.0 {
                     wok[slot] = true;
                 }
             }
@@ -135,7 +135,6 @@ pub struct RunMetrics {
     pub reservoir: ReservoirTracker,
     pub step_time: Stats,
     pub refresh_time: Stats,
-    pub upload_bytes: u64,
     pub evals: Vec<(usize, EvalResult)>,
 }
 
@@ -226,13 +225,13 @@ mod tests {
         let mut churn = MaskChurn::default();
         {
             let m = st.get_mut("w").unwrap().masks.as_mut().unwrap();
-            m.fwd = vec![1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+            m.set_fwd(vec![1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
         }
         churn.snapshot(&st, 0);
         assert!(churn.history.is_empty(), "first snapshot has no baseline");
         {
             let m = st.get_mut("w").unwrap().masks.as_mut().unwrap();
-            m.fwd = vec![0.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+            m.set_fwd(vec![0.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
         }
         churn.snapshot(&st, 100);
         let s = churn.summary();
@@ -245,8 +244,8 @@ mod tests {
         let mut st = store();
         {
             let m = st.get_mut("w").unwrap().masks.as_mut().unwrap();
-            m.fwd = vec![1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
-            m.bwd = vec![1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+            m.set_fwd(vec![1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+            m.set_bwd(vec![1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
         }
         let mut r = ReservoirTracker::new();
         r.init(&st); // C = indices 2..9 (8 units)
@@ -254,14 +253,14 @@ mod tests {
         assert_eq!(r.history[0].1, 0.0);
         {
             let m = st.get_mut("w").unwrap().masks.as_mut().unwrap();
-            m.fwd[5] = 1.0; // a reservoir unit becomes active
+            m.edit(|fwd, _| fwd[5] = 1.0); // a reservoir unit becomes active
         }
         r.observe(&st, 10);
         assert!((r.final_fraction().unwrap() - 1.0 / 8.0).abs() < 1e-12);
         // wake-ups are sticky
         {
             let m = st.get_mut("w").unwrap().masks.as_mut().unwrap();
-            m.fwd[5] = 0.0;
+            m.edit(|fwd, _| fwd[5] = 0.0);
         }
         r.observe(&st, 20);
         assert!((r.final_fraction().unwrap() - 1.0 / 8.0).abs() < 1e-12);

@@ -19,6 +19,12 @@ use crate::sparsity::ParamStore;
 use crate::util::json::Json;
 
 /// Emitted after every completed training step.
+///
+/// Under the device-resident runtime, `store`'s *weight values* and
+/// `opt` are guaranteed fresh only when this observer returned true
+/// from [`TrainObserver::wants_host_state`] for this step — otherwise
+/// they are stale since the last sync point. Masks and everything
+/// derived from them (`effective_params`, nnz) are always current.
 pub struct StepEvent<'a> {
     /// Steps completed so far (1-based: first step reports 1).
     pub step: usize,
@@ -62,6 +68,17 @@ pub struct EndEvent<'a> {
 /// run (observers that should never kill training must swallow their
 /// own errors).
 pub trait TrainObserver: Send {
+    /// Whether this observer will read host-side weight/optimiser state
+    /// from the upcoming `on_step` event. Under the device-resident
+    /// runtime the host store's *values* are stale between sync points;
+    /// the trainer syncs device→host before `on_step` only when some
+    /// observer returns true here (mask-derived fields like
+    /// `effective_params` are always fresh and need no sync).
+    fn wants_host_state(&self, step: usize, total_steps: usize) -> bool {
+        let _ = (step, total_steps);
+        false
+    }
+
     fn on_step(&mut self, ev: &StepEvent<'_>) -> Result<()> {
         let _ = ev;
         Ok(())
@@ -228,11 +245,23 @@ impl PeriodicCheckpoint {
     pub fn at_end(path: impl Into<PathBuf>) -> Self {
         Self::every(0, path)
     }
+
+    /// One predicate for both "sync the host for me" and "write now",
+    /// so the two can never drift (a drift would checkpoint stale θ).
+    fn due(&self, step: usize, total_steps: usize) -> bool {
+        self.every > 0 && step % self.every == 0 && step < total_steps
+    }
 }
 
 impl TrainObserver for PeriodicCheckpoint {
+    fn wants_host_state(&self, step: usize, total_steps: usize) -> bool {
+        // checkpoints capture θ/opt values, so the cadence steps need a
+        // device→host sync (the final capture rides the end-of-run sync)
+        self.due(step, total_steps)
+    }
+
     fn on_step(&mut self, ev: &StepEvent<'_>) -> Result<()> {
-        if self.every > 0 && ev.step % self.every == 0 && ev.step < ev.total_steps {
+        if self.due(ev.step, ev.total_steps) {
             Checkpoint::capture(ev.store, ev.opt, ev.step).save(&self.path)?;
         }
         Ok(())

@@ -1,15 +1,22 @@
 //! The training leader: owns the dense host parameters, the mask
-//! strategy, the optimiser state and the PJRT executables, and drives
-//! the Top-KAST protocol:
+//! strategy, the device-resident runtime state and the PJRT
+//! executables, and drives the Top-KAST protocol:
 //!
 //!   1. every `refresh_every` steps (paper Appendix C: N=100 works as
-//!      well as N=1) recompute per-layer Top-K masks on the host;
-//!   2. dispatch the AOT train step with (θ, m_fwd, m_bwd, opt, batch);
-//!   3. write back θ/opt and record metrics.
+//!      well as N=1) sync θ device→host, recompute per-layer Top-K
+//!      masks on the host, and push only the new masks back down;
+//!   2. dispatch the AOT train step buffer-in/buffer-out against the
+//!      resident (θ, m_fwd, m_bwd, opt) with only the batch + step
+//!      scalars streamed up and the loss scalar streamed down;
+//!   3. record metrics; host weight state stays intentionally stale
+//!      until the next sync point (refresh / checkpoint / end of run —
+//!      see `runtime::device_state` for the protocol).
 //!
 //! Baselines (SET/RigL/static/pruning/dense) plug in through the same
 //! `MaskStrategy` interface; RigL additionally triggers the
-//! `grad_norms` artifact at its update steps.
+//! `grad_norms` artifact (against resident buffers) at its update
+//! steps, and weight-rewriting strategies (SET/RigL) cost one extra
+//! params upload per refresh.
 
 use std::collections::BTreeMap;
 
@@ -20,9 +27,11 @@ use super::checkpoint::Checkpoint;
 use super::metrics::{EvalResult, RunMetrics};
 use super::observer::{EndEvent, EvalEvent, RefreshEvent, StepEvent, TrainObserver};
 use super::schedule::LrSchedule;
-use crate::runtime::{client::TensorRef, ModelEntry, Runtime};
+use crate::runtime::{
+    client::TensorRef, DeviceState, ModelEntry, Runtime, TrafficModel,
+};
 use crate::sparsity::{update_store_masks, MaskStrategy, ParamStore};
-use crate::tensor::{HostTensor, Shape, TensorData};
+use crate::tensor::{HostTensor, TensorData};
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
 
@@ -73,8 +82,18 @@ pub struct Trainer {
     pub strategy: Box<dyn MaskStrategy>,
     pub cfg: TrainerConfig,
     pub metrics: RunMetrics,
-    /// Optimiser slots, ordered (param-major, slot-minor) as the train
-    /// artifact expects.
+    /// Device-resident θ/masks/opt (see `runtime::device_state`).
+    device: DeviceState,
+    /// True when the host store's weight values mirror the device
+    /// buffers. Cleared by every train step; restored at sync points
+    /// (mask refresh needs only this half).
+    params_synced: bool,
+    /// Same for the optimiser-slot mirror (needed at checkpoint/end
+    /// only, so refreshes skip the slot download).
+    opt_synced: bool,
+    /// Host mirror of the optimiser slots, ordered (param-major,
+    /// slot-minor) as the train artifact expects. Fresh only when
+    /// `opt_synced` (a params-only refresh sync leaves it stale).
     opt: Vec<Vec<f32>>,
     data: Box<dyn DataSource>,
     rng: Pcg64,
@@ -109,6 +128,8 @@ impl Trainer {
                 opt.push(vec![0.0f32; p.shape.numel()]);
             }
         }
+        let device =
+            DeviceState::from_host(runtime.client().clone(), &model, &store, &opt)?;
         let rng = Pcg64::new(cfg.seed ^ 0x7A5C, 0xEE);
         Ok(Trainer {
             runtime,
@@ -117,6 +138,9 @@ impl Trainer {
             strategy,
             cfg,
             metrics: RunMetrics::new(),
+            device,
+            params_synced: true,
+            opt_synced: true,
             opt,
             data,
             rng,
@@ -132,14 +156,75 @@ impl Trainer {
         self.observers.push(observer);
     }
 
+    /// Host mirror of the optimiser slots — fresh only at sync points
+    /// (refresh / checkpoint / end of run).
+    pub fn opt_slots(&self) -> &[Vec<f32>] {
+        &self.opt
+    }
+
+    /// Whether the host store currently mirrors the device state.
+    pub fn host_synced(&self) -> bool {
+        self.params_synced && self.opt_synced
+    }
+
+    /// Pull θ device→host if stale — the paper's refresh-point sync:
+    /// host Top-K reads only the dense weights, so the optimiser slots
+    /// stay on the device.
+    fn sync_params_host(&mut self) -> Result<()> {
+        if self.params_synced {
+            return Ok(());
+        }
+        self.device.sync_params_to_host(&mut self.store)?;
+        self.params_synced = true;
+        Ok(())
+    }
+
+    /// Pull θ + optimiser slots device→host if the host copy is stale.
+    /// These are the protocol's full-sync points: checkpoint capture,
+    /// end of run, and observers that declared `wants_host_state`
+    /// (mask refreshes use the cheaper params-only sync internally).
+    pub fn sync_host(&mut self) -> Result<()> {
+        self.sync_params_host()?;
+        if !self.opt_synced {
+            self.device.sync_opt_to_host(&mut self.opt)?;
+            self.opt_synced = true;
+        }
+        Ok(())
+    }
+
+    /// Push the store's masks down to the device. Called automatically
+    /// at refresh install points; call it manually after external mask
+    /// surgery on `store` (e.g. selection analysis) so the device sees
+    /// the edit.
+    pub fn push_masks_to_device(&mut self) -> Result<()> {
+        self.device.upload_masks(&self.store)
+    }
+
+    /// Per-step / per-refresh traffic account under the
+    /// device-resident protocol (and the legacy per-step cost it
+    /// replaced) — the communication model behind the Table-6
+    /// discussion and the bench `step_traffic` scenario.
+    pub fn traffic(&self) -> Result<TrafficModel> {
+        TrafficModel::of(
+            &self.model,
+            self.strategy.mutates_weights(),
+            // probe at a representative update step (RigL declares false
+            // only for step 0 / init)
+            self.strategy.needs_grad_norms(1),
+        )
+    }
+
     /// Snapshot the full run state (params, masks, optimiser, step).
-    pub fn capture_checkpoint(&self) -> Checkpoint {
-        Checkpoint::capture(&self.store, &self.opt, self.step)
+    /// Syncs the device state to the host first.
+    pub fn capture_checkpoint(&mut self) -> Result<Checkpoint> {
+        self.sync_host()?;
+        Ok(Checkpoint::capture(&self.store, &self.opt, self.step))
     }
 
     /// Restore a checkpoint into this trainer (params, masks, the
     /// optimiser state when the checkpoint carries one, and the step
     /// counter — so training resumes where the checkpoint left off).
+    /// The restored state is pushed down to the device wholesale.
     pub fn restore_checkpoint(&mut self, ck: &Checkpoint) -> Result<()> {
         if ck.opt.is_empty() {
             ck.restore(&mut self.store, &mut [])?;
@@ -152,6 +237,11 @@ impl Trainer {
             ck.restore(&mut self.store, &mut self.opt)?;
         }
         self.step = ck.step;
+        self.device.upload_params(&self.store)?;
+        self.device.upload_opt(&self.opt)?;
+        self.device.upload_masks(&self.store)?;
+        self.params_synced = true;
+        self.opt_synced = true;
         Ok(())
     }
 
@@ -180,6 +270,20 @@ impl Trainer {
         Ok(())
     }
 
+    /// Make the async refresher deterministic: `try_install` blocks on
+    /// an in-flight request instead of racing it (so a request at step
+    /// s always installs at step s+1). For parity tests; real runs want
+    /// the overlap.
+    pub fn set_async_blocking(&mut self, blocking: bool) -> Result<()> {
+        match self.async_refresher.as_mut() {
+            Some(r) => {
+                r.set_blocking(blocking);
+                Ok(())
+            }
+            None => bail!("async refresh is not enabled"),
+        }
+    }
+
     /// Number of async refreshes applied so far (observability/tests).
     pub fn async_refreshes_applied(&self) -> Option<usize> {
         self.async_refresher.as_ref().map(|r| r.applied)
@@ -191,9 +295,12 @@ impl Trainer {
         (1.0 / d.max(1e-6)) as f32
     }
 
-    /// Recompute masks on the host (the paper's CPU-side Top-K).
+    /// Recompute masks on the host (the paper's CPU-side Top-K): sync
+    /// θ device→host, select, push masks (and — for weight-rewriting
+    /// strategies — params) back down.
     pub fn refresh_masks(&mut self) -> Result<()> {
         let sw = Stopwatch::start();
+        self.sync_params_host()?;
         let needs_grads = self.strategy.needs_grad_norms(self.step)
             && self.strategy.wants_update(self.step, self.cfg.steps);
         let grad_norms = if needs_grads {
@@ -209,6 +316,12 @@ impl Trainer {
             self.step,
             self.cfg.steps,
         )?;
+        self.device.upload_masks(&self.store)?;
+        if self.strategy.mutates_weights() {
+            // SET re-inits grown connections, RigL zeroes dropped/grown
+            // ones — the host rewrite must reach the device
+            self.device.upload_params(&self.store)?;
+        }
         if !self.masks_initialised {
             self.metrics.reservoir.init(&self.store);
             self.masks_initialised = true;
@@ -228,15 +341,16 @@ impl Trainer {
         Ok(())
     }
 
-    /// Dense |grad| for the RigL baseline, via the dedicated artifact.
+    /// Dense |grad| for the RigL baseline, via the dedicated artifact —
+    /// runs against the *resident* params/masks, streaming one batch.
     fn run_grad_norms(&mut self) -> Result<BTreeMap<String, Vec<f32>>> {
         let (x, y) = self.data.next_train();
-        let mut inputs = self.param_inputs();
-        inputs.extend(self.mask_inputs(true));
-        inputs.push(x);
-        inputs.push(y);
         let exe = self.runtime.load(&self.model.grad_norms)?;
-        let outs = exe.run(&inputs)?;
+        let outs = self.device.run_with_fwd_masks(
+            exe,
+            TensorRef::from(&x),
+            TensorRef::from(&y),
+        )?;
         let mut map = BTreeMap::new();
         for (t, io) in outs.into_iter().zip(&exe.spec.outputs) {
             let name = io
@@ -251,31 +365,23 @@ impl Trainer {
         Ok(map)
     }
 
-    fn param_inputs(&self) -> Vec<HostTensor> {
-        self.store.param_tensors()
-    }
-
-    fn mask_inputs(&self, fwd: bool) -> Vec<HostTensor> {
-        if fwd {
-            self.store.fwd_mask_tensors()
-        } else {
-            self.store.bwd_mask_tensors()
-        }
-    }
-
-    /// One training step; returns the batch loss.
+    /// One training step; returns the batch loss. Steady-state steps
+    /// move only the batch + scalars up and the loss down — θ, masks
+    /// and opt stay on the device, with step-N output buffers feeding
+    /// step-N+1 directly.
     pub fn train_step(&mut self) -> Result<f64> {
         // Mask refresh on the paper's N-step cadence (always at step 0).
         let due = self.step == 0
             || (self.step % self.cfg.refresh_every == 0
                 && self.strategy.wants_update(self.step, self.cfg.steps));
-        if let Some(refresher) = self.async_refresher.as_mut() {
+        if self.async_refresher.is_some() {
             // Overlapped path: install any finished masks, then ship a
             // fresh snapshot if a refresh is due. Step 0 blocks so the
             // run never starts on all-ones masks.
             let mut installed = false;
             if self.step == 0 {
                 let sw = Stopwatch::start();
+                let refresher = self.async_refresher.as_mut().expect("checked");
                 refresher.request(&self.store, 0, self.cfg.steps);
                 refresher.wait_install(&mut self.store)?;
                 self.metrics.refresh_time.push(sw.elapsed_ms());
@@ -284,18 +390,39 @@ impl Trainer {
                 self.metrics.reservoir.observe(&self.store, 0);
                 installed = true;
             } else {
+                let refresher = self.async_refresher.as_mut().expect("checked");
                 if refresher.try_install(&mut self.store)?.is_some() {
                     self.metrics.reservoir.observe(&self.store, self.step);
                     installed = true;
                 }
-                if due {
+                let in_flight = self
+                    .async_refresher
+                    .as_ref()
+                    .expect("checked")
+                    .is_in_flight();
+                if due && !in_flight {
+                    // the worker selects from dense θ — the snapshot
+                    // must reflect the device state. Skipped when a
+                    // request is still in flight: request() would drop
+                    // the snapshot anyway, so the download would be
+                    // pure waste.
+                    self.sync_params_host()?;
+                    let refresher = self.async_refresher.as_mut().expect("checked");
                     refresher.request(&self.store, self.step, self.cfg.steps);
                 }
             }
             if installed {
+                // async-eligible strategies are mask-pure, so only the
+                // masks travel to the device
+                self.device.upload_masks(&self.store)?;
+                let elapsed_ms = self
+                    .async_refresher
+                    .as_ref()
+                    .expect("checked")
+                    .last_compute_ms;
                 let ev = RefreshEvent {
                     step: self.step,
-                    elapsed_ms: refresher.last_compute_ms,
+                    elapsed_ms,
                     asynchronous: true,
                     store: &self.store,
                 };
@@ -313,57 +440,22 @@ impl Trainer {
         let sw = Stopwatch::start();
         let (x, y) = self.data.next_train();
         let lr = self.cfg.lr.at(self.step, self.cfg.steps) as f32;
-        let scalars: Vec<[f32; 1]> = vec![
+        let scalars: [[f32; 1]; 4] = [
             [lr],
             [(self.step + 1) as f32],
             [self.cfg.reg_scale as f32],
             [self.inv_d()],
         ];
 
-        // Zero-clone marshalling (§Perf L3 iteration 2): borrow the
-        // store/opt slices directly; shapes come from the artifact
-        // signature inside run_borrowed.
-        let mut inputs: Vec<TensorRef<'_>> = Vec::with_capacity(
-            self.model.params.len() * (1 + self.model.optimizer.slots())
-                + 2 * self.model.sparse_params().len()
-                + 6,
-        );
-        for e in &self.store.entries {
-            inputs.push(TensorRef::F32(&e.values));
-        }
-        for fwd in [true, false] {
-            for e in &self.store.entries {
-                if let Some(m) = &e.masks {
-                    inputs.push(TensorRef::F32(if fwd { &m.fwd } else { &m.bwd }));
-                }
-            }
-        }
-        for slot in &self.opt {
-            inputs.push(TensorRef::F32(slot));
-        }
-        inputs.push(TensorRef::from(&x));
-        inputs.push(TensorRef::from(&y));
-        for s in &scalars {
-            inputs.push(TensorRef::F32(&s[..]));
-        }
-
         let exe = self.runtime.load(&self.model.train)?;
-        let outs = exe.run_borrowed(&inputs)?;
-        drop(inputs);
-
-        // outputs: new params (np), new opt (np*slots), loss
-        let np = self.model.params.len();
-        let slots = self.model.optimizer.slots();
-        for (i, out) in outs.iter().take(np).enumerate() {
-            let name = self.model.params[i].name.clone();
-            self.store
-                .set_values(&name, out.as_f32()?.to_vec())
-                .with_context(|| format!("writing back {name}"))?;
-        }
-        for (j, out) in outs[np..np + np * slots].iter().enumerate() {
-            self.opt[j] = out.as_f32()?.to_vec();
-        }
-        let loss = outs.last().context("no loss output")?.as_f32()?[0] as f64;
+        let loss = self.device.train_step(
+            exe,
+            TensorRef::from(&x),
+            TensorRef::from(&y),
+            &scalars,
+        )?;
+        self.params_synced = false;
+        self.opt_synced = false;
 
         self.metrics.losses.push((self.step, loss));
         self.metrics.step_time.push(sw.elapsed_ms());
@@ -371,17 +463,25 @@ impl Trainer {
         Ok(loss)
     }
 
-
     /// Run the full configured training loop, driving the attached
     /// observers (`on_step` / `on_eval` / `on_end`); mask-refresh hooks
-    /// fire from `train_step`. Logging lives in `ConsoleLogger` now —
-    /// a bare `Trainer` with no observers trains silently.
+    /// fire from `train_step`. The device state syncs to the host only
+    /// when an observer asks for it (`wants_host_state`) and once at
+    /// the end, so `store`/`opt_slots` are authoritative after
+    /// `train()` returns.
     pub fn train(&mut self) -> Result<()> {
         while self.step < self.cfg.steps {
             // capture the LR the upcoming step actually uses (train_step
             // increments self.step, so reading it after would be off by one)
             let lr = self.cfg.lr.at(self.step, self.cfg.steps);
             let loss = self.train_step()?;
+            let wants_host = self
+                .observers
+                .iter()
+                .any(|o| o.wants_host_state(self.step, self.cfg.steps));
+            if wants_host {
+                self.sync_host()?;
+            }
             let ev = StepEvent {
                 step: self.step,
                 total_steps: self.cfg.steps,
@@ -410,6 +510,7 @@ impl Trainer {
                 }
             }
         }
+        self.sync_host()?;
         let ev = EndEvent {
             step: self.step,
             strategy: self.strategy.name(),
@@ -423,19 +524,21 @@ impl Trainer {
         Ok(())
     }
 
-    /// Evaluate on the data source's deterministic eval stream.
+    /// Evaluate on the data source's deterministic eval stream — runs
+    /// against the resident params + forward masks (no host sync, no
+    /// param upload; only the batch streams).
     pub fn evaluate(&mut self) -> Result<EvalResult> {
         let mut loss_sum = 0.0f64;
         let mut metric_sum = 0.0f64;
         let mut batches = 0usize;
         for idx in 0..self.cfg.eval_batches {
             let Some((x, y)) = self.data.eval_batch(idx) else { break };
-            let mut inputs = self.param_inputs();
-            inputs.extend(self.mask_inputs(true));
-            inputs.push(x);
-            inputs.push(y);
             let exe = self.runtime.load(&self.model.eval)?;
-            let outs = exe.run(&inputs)?;
+            let outs = self.device.run_with_fwd_masks(
+                exe,
+                TensorRef::from(&x),
+                TensorRef::from(&y),
+            )?;
             loss_sum += outs[0].as_f32()?[0] as f64;
             metric_sum += outs[1].as_f32()?[0] as f64;
             batches += 1;
@@ -451,19 +554,5 @@ impl Trainer {
                 EvalResult::classifier(loss_sum, metric_sum, n)
             }
         })
-    }
-
-    /// Bytes uploaded per train step (params + masks + opt + batch) —
-    /// the communication-cost model behind the Table-6 discussion.
-    pub fn step_upload_bytes(&self) -> u64 {
-        let p: usize = self.model.params.iter().map(|s| s.shape.numel()).sum();
-        let m: usize = self
-            .model
-            .sparse_params()
-            .iter()
-            .map(|s| s.shape.numel())
-            .sum();
-        let slots = self.model.optimizer.slots();
-        ((p + 2 * m + p * slots) * 4) as u64
     }
 }

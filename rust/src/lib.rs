@@ -45,6 +45,8 @@
 //! reports to [`coordinator::observer::TrainObserver`] hooks (console
 //! logging, JSONL metric streaming, periodic checkpointing).
 
+#![allow(clippy::new_without_default)]
+
 pub mod api;
 pub mod bench;
 pub mod config;
@@ -54,3 +56,4 @@ pub mod runtime;
 pub mod sparsity;
 pub mod tensor;
 pub mod util;
+pub mod xla;

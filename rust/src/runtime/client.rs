@@ -2,17 +2,30 @@
 //!
 //! Pattern from /opt/xla-example/load_hlo: text → HloModuleProto →
 //! XlaComputation → PjRtLoadedExecutable. Artifacts are lowered with
-//! return_tuple=True, so every execution yields one tuple literal that
+//! return_tuple=True, so every execution yields one tuple result that
 //! we decompose into the manifest's declared outputs.
+//!
+//! Two execution paths:
+//!
+//! * [`Executable::run_device`] — buffer-in/buffer-out. Inputs may be
+//!   persistent device buffers ([`DeviceInput::Resident`]) or borrowed
+//!   host slices uploaded on the spot ([`DeviceInput::Host`]); outputs
+//!   come back as device buffers the caller can feed into the next
+//!   execution or selectively download. This is the hot path the
+//!   device-resident trainer (`runtime::device_state`) drives.
+//! * [`Executable::run_borrowed`] / [`Executable::run`] — the
+//!   host-round-trip convenience path: upload everything, download
+//!   every output. Built on `run_device`.
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use super::manifest::{ArtifactSpec, Dtype};
+use super::manifest::{ArtifactSpec, Dtype, IoSpec};
 use crate::tensor::{HostTensor, Shape, TensorData};
 use crate::util::timer::Stopwatch;
+use crate::xla;
 
 /// Shared PJRT client (CPU).
 pub struct Runtime {
@@ -56,6 +69,14 @@ impl<'a> From<&'a HostTensor> for TensorRef<'a> {
     }
 }
 
+/// One input position of a device execution: either state that already
+/// lives on the device (no transfer) or host data streamed up for this
+/// call (batches, step scalars).
+pub enum DeviceInput<'a> {
+    Resident(&'a xla::PjRtBuffer),
+    Host(TensorRef<'a>),
+}
+
 impl Runtime {
     pub fn new() -> Result<Self> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
@@ -66,6 +87,17 @@ impl Runtime {
         self.client.platform_name()
     }
 
+    /// The underlying client (device-state subsystems hold a clone so
+    /// they can upload/download against the same metered device).
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Cumulative host↔device traffic through this runtime's client.
+    pub fn transfer_stats(&self) -> xla::TransferSnapshot {
+        self.client.transfer_stats()
+    }
+
     /// Load + compile an artifact (cached by path).
     pub fn load(&mut self, spec: &ArtifactSpec) -> Result<&Executable> {
         let key = spec.file.to_string_lossy().to_string();
@@ -74,6 +106,14 @@ impl Runtime {
             self.cache.insert(key.clone(), exe);
         }
         Ok(&self.cache[&key])
+    }
+
+    /// Seed the executable cache directly (synthetic in-memory models;
+    /// see `runtime::synthetic`). Subsequent `load` calls for the same
+    /// artifact path return this executable without touching disk.
+    pub fn preload(&mut self, exe: Executable) {
+        let key = exe.spec.file.to_string_lossy().to_string();
+        self.cache.insert(key, exe);
     }
 
     fn compile(&self, spec: &ArtifactSpec) -> Result<Executable> {
@@ -108,17 +148,15 @@ impl Runtime {
 }
 
 impl Executable {
+    /// The client this executable runs on.
+    pub fn client(&self) -> xla::PjRtClient {
+        self.exe.client()
+    }
+
     /// Execute with host tensors; returns outputs in manifest order.
     ///
     /// Inputs are validated against the artifact signature — a mismatch
     /// here is a coordinator bug, and XLA's own error would be opaque.
-    ///
-    /// Uploads go through `buffer_from_host_buffer` + `execute_b` rather
-    /// than `execute(literals)`: the vendored xla_rs shim's `execute`
-    /// leaks every input buffer it creates (`buffer.release()` with no
-    /// owner — ~2 MB/step for lm_tiny, OOM-killing long sweeps), and the
-    /// literal path also costs an extra host copy. Rust-owned
-    /// `PjRtBuffer`s drop (and free) deterministically.
     pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         for (t, io) in inputs.iter().zip(&self.spec.inputs) {
             if t.shape != io.shape {
@@ -134,8 +172,34 @@ impl Executable {
         self.run_borrowed(&refs)
     }
 
-    /// Zero-clone execution path: upload straight from borrowed slices.
+    /// Host-round-trip path: upload every input from borrowed slices,
+    /// download every output.
     pub fn run_borrowed(&self, inputs: &[TensorRef<'_>]) -> Result<Vec<HostTensor>> {
+        let wrapped: Vec<DeviceInput<'_>> =
+            inputs.iter().map(|t| DeviceInput::Host(*t)).collect();
+        let outs = self.run_device(&wrapped)?;
+        outs.iter()
+            .zip(&self.spec.outputs)
+            .map(|(buf, io)| self.download(buf, io))
+            .collect()
+    }
+
+    /// Buffer-in/buffer-out execution: resident inputs are passed
+    /// through with zero transfer, host inputs are uploaded, and the
+    /// result tuple is split into per-output device buffers *without*
+    /// a literal round-trip. The caller owns the returned buffers —
+    /// feed them back as `Resident` inputs or `download` selectively.
+    ///
+    /// Uploads go through `buffer_from_host_buffer` + `execute_b`
+    /// rather than `execute(literals)`: the vendored xla_rs shim's
+    /// `execute` leaks every input buffer it creates (`buffer.release()`
+    /// with no owner — ~2 MB/step for lm_tiny, OOM-killing long
+    /// sweeps), and the literal path also costs an extra host copy.
+    /// Rust-owned `PjRtBuffer`s drop (and free) deterministically.
+    pub fn run_device(
+        &self,
+        inputs: &[DeviceInput<'_>],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
         if inputs.len() != self.spec.inputs.len() {
             bail!(
                 "{:?}: expected {} inputs, got {}",
@@ -145,52 +209,111 @@ impl Executable {
             );
         }
         let client = self.exe.client();
-        let mut buffers = Vec::with_capacity(inputs.len());
-        for (t, io) in inputs.iter().zip(&self.spec.inputs) {
-            if t.len() != io.shape.numel() {
-                bail!(
-                    "input {:?}: {} elements != expected shape {}",
-                    io.name,
-                    t.len(),
-                    io.shape
-                );
-            }
-            let buf = match (t, io.dtype) {
-                (TensorRef::F32(v), Dtype::F32) => {
-                    client.buffer_from_host_buffer::<f32>(v, io.shape.dims(), None)?
-                }
-                (TensorRef::I32(v), Dtype::I32) => {
-                    client.buffer_from_host_buffer::<i32>(v, io.shape.dims(), None)?
-                }
-                (d, want) => bail!(
-                    "input {:?}: dtype mismatch: host tensor is {}, artifact wants {want:?}",
-                    io.name,
-                    match d {
-                        TensorRef::F32(_) => "f32",
-                        TensorRef::I32(_) => "i32",
+        // Pass 1: upload every streamed input (owned buffers, parallel
+        // to `inputs` so pass 2 can borrow them in artifact order).
+        let mut uploads: Vec<Option<xla::PjRtBuffer>> =
+            Vec::with_capacity(inputs.len());
+        for (input, io) in inputs.iter().zip(&self.spec.inputs) {
+            match input {
+                DeviceInput::Resident(buf) => {
+                    if buf.element_count() != io.shape.numel() {
+                        bail!(
+                            "input {:?}: resident buffer has {} elements, \
+                             expected shape {}",
+                            io.name,
+                            buf.element_count(),
+                            io.shape
+                        );
                     }
-                ),
-            };
-            buffers.push(buf);
+                    let want = match io.dtype {
+                        Dtype::F32 => xla::ElemType::F32,
+                        Dtype::I32 => xla::ElemType::I32,
+                    };
+                    if buf.element_type() != Some(want) {
+                        bail!(
+                            "input {:?}: resident buffer dtype {:?} != artifact {:?}",
+                            io.name,
+                            buf.element_type(),
+                            io.dtype
+                        );
+                    }
+                    uploads.push(None);
+                }
+                DeviceInput::Host(t) => {
+                    if t.len() != io.shape.numel() {
+                        bail!(
+                            "input {:?}: {} elements != expected shape {}",
+                            io.name,
+                            t.len(),
+                            io.shape
+                        );
+                    }
+                    let buf = match (t, io.dtype) {
+                        (TensorRef::F32(v), Dtype::F32) => client
+                            .buffer_from_host_buffer::<f32>(v, io.shape.dims(), None)?,
+                        (TensorRef::I32(v), Dtype::I32) => client
+                            .buffer_from_host_buffer::<i32>(v, io.shape.dims(), None)?,
+                        (d, want) => bail!(
+                            "input {:?}: dtype mismatch: host tensor is {}, \
+                             artifact wants {want:?}",
+                            io.name,
+                            match d {
+                                TensorRef::F32(_) => "f32",
+                                TensorRef::I32(_) => "i32",
+                            }
+                        ),
+                    };
+                    uploads.push(Some(buf));
+                }
+            }
         }
-        let result = self.exe.execute_b(&buffers)?;
-        drop(buffers); // free device-side inputs eagerly
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        let parts = tuple.to_tuple().context("decomposing result tuple")?;
-        if parts.len() != self.spec.outputs.len() {
+        // Pass 2: interleave resident borrows with the fresh uploads.
+        let refs: Vec<&xla::PjRtBuffer> = inputs
+            .iter()
+            .zip(&uploads)
+            .map(|(input, upload)| match input {
+                DeviceInput::Resident(buf) => *buf,
+                DeviceInput::Host(_) => upload.as_ref().expect("uploaded in pass 1"),
+            })
+            .collect();
+        let result = self.exe.execute_b(&refs)?;
+        drop(refs);
+        drop(uploads); // free freshly-uploaded device inputs eagerly
+        let root = result
+            .into_iter()
+            .next()
+            .and_then(|mut v| if v.is_empty() { None } else { Some(v.remove(0)) })
+            .context("executable returned no result")?;
+        let outs = if root.is_tuple() {
+            root.tuple_parts()?
+        } else {
+            vec![root]
+        };
+        if outs.len() != self.spec.outputs.len() {
             bail!(
                 "expected {} outputs, got {}",
                 self.spec.outputs.len(),
-                parts.len()
+                outs.len()
             );
         }
-        let mut outs = Vec::with_capacity(parts.len());
-        for (lit, io) in parts.into_iter().zip(&self.spec.outputs) {
-            outs.push(from_literal(&lit, &io.shape, io.dtype)?);
+        for (buf, io) in outs.iter().zip(&self.spec.outputs) {
+            if buf.element_count() != io.shape.numel() {
+                bail!(
+                    "output {:?}: {} elements != declared shape {}",
+                    io.name,
+                    buf.element_count(),
+                    io.shape
+                );
+            }
         }
         Ok(outs)
+    }
+
+    /// Download one output buffer into a host tensor (metered
+    /// device→host transfer).
+    pub fn download(&self, buf: &xla::PjRtBuffer, io: &IoSpec) -> Result<HostTensor> {
+        let lit = buf.to_literal_sync().context("fetching result literal")?;
+        from_literal(&lit, &io.shape, io.dtype)
     }
 }
 
@@ -265,5 +388,42 @@ mod tests {
         // wrong dtype
         let badt = HostTensor::from_i32(Shape::new(&[2, 2]), vec![0; 4]).unwrap();
         assert!(exe.run(&[badt, ok]).is_err());
+    }
+
+    #[test]
+    fn run_device_mixes_resident_and_streamed_inputs() {
+        let rt = Runtime::new().unwrap();
+        let exe = tiny_executable(&rt);
+        let client = rt.client();
+        let resident = client
+            .buffer_from_host_buffer::<f32>(&[1.0, 1.0, 1.0, 1.0], &[2, 2], None)
+            .unwrap();
+        let before = rt.transfer_stats();
+        let host = [5.0f32, 6.0, 7.0, 8.0];
+        let outs = exe
+            .run_device(&[
+                DeviceInput::Resident(&resident),
+                DeviceInput::Host(TensorRef::F32(&host)),
+            ])
+            .unwrap();
+        let delta = rt.transfer_stats().since(&before);
+        // only the streamed input moved host→device; nothing downloaded
+        assert_eq!(delta.h2d_bytes, 16);
+        assert_eq!(delta.d2h_bytes, 0);
+        let t = exe.download(&outs[0], &exe.spec.outputs[0]).unwrap();
+        assert_eq!(t.as_f32().unwrap(), &[6.0, 7.0, 8.0, 9.0]);
+        assert_eq!(rt.transfer_stats().since(&before).d2h_bytes, 16);
+    }
+
+    #[test]
+    fn preload_serves_load_without_touching_disk() {
+        let mut rt = Runtime::new().unwrap();
+        let exe = tiny_executable(&rt);
+        let spec = exe.spec.clone();
+        rt.preload(exe);
+        // the path "<in-memory add>" does not exist on disk; load must
+        // come from the cache
+        let loaded = rt.load(&spec).unwrap();
+        assert_eq!(loaded.spec.inputs.len(), 2);
     }
 }

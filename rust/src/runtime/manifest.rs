@@ -92,7 +92,98 @@ pub struct ModelEntry {
     pub config: BTreeMap<String, Json>,
 }
 
+/// Addressable slices of the train artifact's flat input/output
+/// vectors. The AOT convention (python/compile/aot.py) is
+///
+///   inputs:  θ (np) | m_fwd (ns) | m_bwd (ns) | opt (np·slots)
+///            | x, y | lr, step, reg_scale, inv_d
+///   outputs: θ' (np) | opt' (np·slots) | loss
+///
+/// Grouping the positions here (instead of re-deriving offsets at
+/// every call site) is what lets `runtime::device_state` address
+/// "the params", "the masks", "the batch" as slices when deciding
+/// what stays resident and what streams per step.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TrainLayout {
+    pub params: std::ops::Range<usize>,
+    pub masks_fwd: std::ops::Range<usize>,
+    pub masks_bwd: std::ops::Range<usize>,
+    pub opt: std::ops::Range<usize>,
+    pub batch: std::ops::Range<usize>,
+    pub scalars: std::ops::Range<usize>,
+    pub out_params: std::ops::Range<usize>,
+    pub out_opt: std::ops::Range<usize>,
+    pub out_loss: usize,
+}
+
+/// Input grouping shared by the eval and grad_norms artifacts:
+/// θ (np) | m_fwd (ns) | x, y.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EvalLayout {
+    pub params: std::ops::Range<usize>,
+    pub masks_fwd: std::ops::Range<usize>,
+    pub batch: std::ops::Range<usize>,
+}
+
 impl ModelEntry {
+    /// Input/output grouping of the train artifact, validated against
+    /// the artifact's declared arity.
+    pub fn train_layout(&self) -> Result<TrainLayout> {
+        let np = self.params.len();
+        let ns = self.sparse_params().len();
+        let slots = self.optimizer.slots();
+        let layout = TrainLayout {
+            params: 0..np,
+            masks_fwd: np..np + ns,
+            masks_bwd: np + ns..np + 2 * ns,
+            opt: np + 2 * ns..np + 2 * ns + np * slots,
+            batch: np + 2 * ns + np * slots..np + 2 * ns + np * slots + 2,
+            scalars: np + 2 * ns + np * slots + 2..np + 2 * ns + np * slots + 6,
+            out_params: 0..np,
+            out_opt: np..np + np * slots,
+            out_loss: np + np * slots,
+        };
+        if self.train.inputs.len() != layout.scalars.end {
+            bail!(
+                "model {}: train artifact declares {} inputs, layout expects {}",
+                self.name,
+                self.train.inputs.len(),
+                layout.scalars.end
+            );
+        }
+        if self.train.outputs.len() != layout.out_loss + 1 {
+            bail!(
+                "model {}: train artifact declares {} outputs, layout expects {}",
+                self.name,
+                self.train.outputs.len(),
+                layout.out_loss + 1
+            );
+        }
+        Ok(layout)
+    }
+
+    /// Input grouping of an eval-convention artifact (eval itself and
+    /// grad_norms share it).
+    pub fn eval_layout(&self, spec: &ArtifactSpec) -> Result<EvalLayout> {
+        let np = self.params.len();
+        let ns = self.sparse_params().len();
+        let layout = EvalLayout {
+            params: 0..np,
+            masks_fwd: np..np + ns,
+            batch: np + ns..np + ns + 2,
+        };
+        if spec.inputs.len() != layout.batch.end {
+            bail!(
+                "model {}: artifact {:?} declares {} inputs, layout expects {}",
+                self.name,
+                spec.file.file_name().unwrap_or_default(),
+                spec.inputs.len(),
+                layout.batch.end
+            );
+        }
+        Ok(layout)
+    }
+
     pub fn cfg_usize(&self, key: &str) -> Result<usize> {
         self.config
             .get(key)
@@ -268,5 +359,83 @@ mod tests {
         if let Ok(man) = Manifest::load(art_dir()) {
             assert!(man.model("nope").is_err());
         }
+    }
+
+    fn layout_fixture(np: usize, ns: usize, slots: usize) -> ModelEntry {
+        let params: Vec<ParamSpec> = (0..np)
+            .map(|i| ParamSpec {
+                name: format!("p{i}"),
+                shape: Shape::new(&[4]),
+                init: InitKind::Zeros,
+                init_scale: 0.0,
+                sparse: i < ns,
+                mac: 0,
+            })
+            .collect();
+        let io = |n: usize| -> Vec<IoSpec> {
+            (0..n)
+                .map(|i| IoSpec {
+                    name: format!("io{i}"),
+                    shape: Shape::new(&[4]),
+                    dtype: Dtype::F32,
+                })
+                .collect()
+        };
+        let train = ArtifactSpec {
+            file: PathBuf::from("<train>"),
+            inputs: io(np + 2 * ns + np * slots + 6),
+            outputs: io(np + np * slots + 1),
+        };
+        let eval = ArtifactSpec {
+            file: PathBuf::from("<eval>"),
+            inputs: io(np + ns + 2),
+            outputs: io(2),
+        };
+        ModelEntry {
+            name: "fixture".into(),
+            kind: "mlp".into(),
+            optimizer: if slots == 2 { Optimizer::Adam } else { Optimizer::Sgd },
+            params,
+            train,
+            eval: eval.clone(),
+            grad_norms: eval,
+            config: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn train_layout_groups_follow_the_io_convention() {
+        let m = layout_fixture(3, 2, 2);
+        let l = m.train_layout().unwrap();
+        assert_eq!(l.params, 0..3);
+        assert_eq!(l.masks_fwd, 3..5);
+        assert_eq!(l.masks_bwd, 5..7);
+        assert_eq!(l.opt, 7..13);
+        assert_eq!(l.batch, 13..15);
+        assert_eq!(l.scalars, 15..19);
+        assert_eq!(l.scalars.end, m.train.inputs.len());
+        assert_eq!(l.out_params, 0..3);
+        assert_eq!(l.out_opt, 3..9);
+        assert_eq!(l.out_loss, 9);
+        assert_eq!(l.out_loss + 1, m.train.outputs.len());
+    }
+
+    #[test]
+    fn eval_layout_covers_eval_and_grad_norms() {
+        let m = layout_fixture(3, 2, 1);
+        let l = m.eval_layout(&m.eval).unwrap();
+        assert_eq!(l.params, 0..3);
+        assert_eq!(l.masks_fwd, 3..5);
+        assert_eq!(l.batch, 5..7);
+        assert!(m.eval_layout(&m.grad_norms).is_ok());
+    }
+
+    #[test]
+    fn layout_rejects_arity_mismatch() {
+        let mut m = layout_fixture(3, 2, 1);
+        m.train.inputs.pop();
+        assert!(m.train_layout().is_err());
+        m.eval.inputs.pop();
+        assert!(m.eval_layout(&m.eval.clone()).is_err());
     }
 }

@@ -1,17 +1,26 @@
-//! Runtime: the xla crate (PJRT C API) wrapper that loads the AOT HLO
-//! artifacts and executes them from the coordinator's hot path.
+//! Runtime: the xla (PJRT) wrapper that loads the AOT HLO artifacts
+//! and executes them from the coordinator's hot path, plus the
+//! device-resident training state that keeps θ/opt/masks on the
+//! accelerator between host syncs.
 //!
 //! Flow (see /opt/xla-example/load_hlo): HLO *text* →
 //! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
-//! `PjRtClient::compile` → `execute`. Text is the interchange format
-//! because jax ≥ 0.5 emits 64-bit instruction ids that xla_extension
-//! 0.5.1 rejects in proto form.
+//! `PjRtClient::compile` → buffer-in/buffer-out execution. Text is the
+//! interchange format because jax ≥ 0.5 emits 64-bit instruction ids
+//! that xla_extension 0.5.1 rejects in proto form.
+//!
+//! See `device_state` for the resident-state protocol and its sync
+//! points, and `synthetic` for artifact-free in-memory models.
 
 pub mod client;
+pub mod device_state;
 pub mod manifest;
+pub mod synthetic;
 
-pub use client::{Executable, Runtime};
+pub use client::{DeviceInput, Executable, Runtime, TensorRef};
+pub use device_state::{DeviceState, TrafficModel};
 pub use manifest::{
-    ArtifactSpec, Dtype, InitKind, IoSpec, Manifest, ModelEntry, Optimizer,
-    ParamSpec,
+    ArtifactSpec, Dtype, EvalLayout, InitKind, IoSpec, Manifest, ModelEntry,
+    Optimizer, ParamSpec, TrainLayout,
 };
+pub use synthetic::Synthetic;

@@ -1,0 +1,471 @@
+//! Synthetic in-memory models: a complete `ModelEntry` (train / eval /
+//! grad_norms) whose artifacts are built with the in-crate
+//! `XlaBuilder` instead of the python AOT pipeline, plus a matching
+//! deterministic `DataSource`.
+//!
+//! These exist so the full coordinator — device-resident loop, mask
+//! refresh, checkpointing, async refresher — can be driven end-to-end
+//! in environments without `artifacts/` (CI, the bench `step_traffic`
+//! scenario, the parity suites). The compute graphs follow the exact
+//! train/eval/grad_norms IO conventions of `python/compile/aot.py`
+//! (see `ModelEntry::train_layout`): the update rule is a stand-in,
+//! but it is deterministic, mask-respecting (no writes outside B, no
+//! forward reads outside A's contribution), and exercises every input
+//! group including the step scalars.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use super::client::Runtime;
+use super::manifest::{
+    ArtifactSpec, Dtype, InitKind, IoSpec, ModelEntry, Optimizer, ParamSpec,
+};
+use crate::coordinator::{DataSource, Trainer, TrainerConfig};
+use crate::sparsity::MaskStrategy;
+use crate::tensor::{HostTensor, Shape};
+use crate::util::rng::Pcg64;
+use crate::xla;
+
+/// A synthetic model: manifest entry + buildable computations.
+#[derive(Clone)]
+pub struct Synthetic {
+    pub model: ModelEntry,
+    features: usize,
+    batch: usize,
+}
+
+impl Synthetic {
+    /// Smallest preset (3 tensors, 2 sparse; SGD).
+    pub fn tiny() -> Synthetic {
+        Synthetic::new("syn_tiny", 8, 16, 4, Optimizer::Sgd)
+    }
+
+    /// A larger preset with two optimiser slots (Adam convention).
+    pub fn small() -> Synthetic {
+        Synthetic::new("syn_small", 64, 128, 16, Optimizer::Adam)
+    }
+
+    pub fn new(
+        name: &str,
+        features: usize,
+        hidden: usize,
+        batch: usize,
+        optimizer: Optimizer,
+    ) -> Synthetic {
+        let out = 4usize;
+        let params = vec![
+            param("w1", &[features, hidden], InitKind::Normal, 0.5, true),
+            param("b1", &[hidden], InitKind::Uniform, 0.2, false),
+            param("w2", &[hidden, out], InitKind::Normal, 0.5, true),
+        ];
+        let slots = optimizer.slots();
+        let np = params.len();
+
+        let batch_io = vec![
+            IoSpec {
+                name: "x".into(),
+                shape: Shape::new(&[batch, features]),
+                dtype: Dtype::F32,
+            },
+            IoSpec { name: "y".into(), shape: Shape::new(&[batch]), dtype: Dtype::F32 },
+        ];
+        let scalar_io = |n: &str| IoSpec {
+            name: n.into(),
+            shape: Shape::new(&[1]),
+            dtype: Dtype::F32,
+        };
+        let tensor_io = |prefix: &str, p: &ParamSpec| IoSpec {
+            name: format!("{prefix}{}", p.name),
+            shape: p.shape.clone(),
+            dtype: Dtype::F32,
+        };
+
+        let mut train_inputs: Vec<IoSpec> =
+            params.iter().map(|p| tensor_io("", p)).collect();
+        for prefix in ["mf:", "mb:"] {
+            train_inputs
+                .extend(params.iter().filter(|p| p.sparse).map(|p| tensor_io(prefix, p)));
+        }
+        for p in &params {
+            for j in 0..slots {
+                train_inputs.push(tensor_io(&format!("opt{j}:"), p));
+            }
+        }
+        train_inputs.extend(batch_io.iter().cloned());
+        for s in ["lr", "step", "reg_scale", "inv_d"] {
+            train_inputs.push(scalar_io(s));
+        }
+        let mut train_outputs: Vec<IoSpec> =
+            params.iter().map(|p| tensor_io("new:", p)).collect();
+        for p in &params {
+            for j in 0..slots {
+                train_outputs.push(tensor_io(&format!("newopt{j}:"), p));
+            }
+        }
+        train_outputs.push(scalar_io("loss"));
+
+        let mut eval_inputs: Vec<IoSpec> =
+            params.iter().map(|p| tensor_io("", p)).collect();
+        eval_inputs
+            .extend(params.iter().filter(|p| p.sparse).map(|p| tensor_io("mf:", p)));
+        eval_inputs.extend(batch_io.iter().cloned());
+        let eval_outputs = vec![scalar_io("loss"), scalar_io("metric")];
+        let gn_outputs: Vec<IoSpec> = params
+            .iter()
+            .filter(|p| p.sparse)
+            .map(|p| tensor_io("g:", p))
+            .collect();
+
+        let mut config = BTreeMap::new();
+        config.insert(
+            "batch_size".to_string(),
+            crate::util::json::Json::num(batch as f64),
+        );
+        let art = |suffix: &str, inputs: &[IoSpec], outputs: &[IoSpec]| ArtifactSpec {
+            file: PathBuf::from(format!("<synthetic:{name}:{suffix}>")),
+            inputs: inputs.to_vec(),
+            outputs: outputs.to_vec(),
+        };
+        let model = ModelEntry {
+            name: name.to_string(),
+            kind: "synthetic".to_string(),
+            optimizer,
+            train: art("train", &train_inputs, &train_outputs),
+            eval: art("eval", &eval_inputs, &eval_outputs),
+            grad_norms: art("grad_norms", &eval_inputs, &gn_outputs),
+            params,
+            config,
+        };
+        debug_assert_eq!(model.train.inputs.len(), np + 2 * 2 + np * slots + 6);
+        Synthetic { model, features, batch }
+    }
+
+    /// Compile the three computations and seed them into a runtime's
+    /// executable cache, so `Runtime::load` (and therefore a stock
+    /// `Trainer`) resolves them without touching disk.
+    pub fn install(&self, rt: &mut Runtime) -> Result<()> {
+        let train = rt.compile_computation(&self.build_train()?, &self.model.train)?;
+        rt.preload(train);
+        let eval = rt.compile_computation(&self.build_eval(false)?, &self.model.eval)?;
+        rt.preload(eval);
+        let gn =
+            rt.compile_computation(&self.build_eval(true)?, &self.model.grad_norms)?;
+        rt.preload(gn);
+        Ok(())
+    }
+
+    /// A fully-wired trainer over this model (own runtime + data).
+    pub fn trainer(
+        &self,
+        strategy: Box<dyn MaskStrategy>,
+        cfg: TrainerConfig,
+    ) -> Result<Trainer> {
+        let mut rt = Runtime::new()?;
+        self.install(&mut rt)?;
+        let data = self.data(cfg.seed ^ 0xDA7A);
+        Trainer::new(rt, self.model.clone(), strategy, data, cfg)
+    }
+
+    /// Deterministic data stream matching the model's batch shapes.
+    pub fn data(&self, seed: u64) -> Box<dyn DataSource> {
+        Box::new(SyntheticData {
+            rng: Pcg64::new(seed, 0x5D47A),
+            eval_seed: seed ^ 0xE7A1,
+            batch: self.batch,
+            features: self.features,
+        })
+    }
+
+    fn build_train(&self) -> Result<xla::XlaComputation> {
+        let model = &self.model;
+        let layout = model.train_layout()?;
+        let slots = model.optimizer.slots();
+        let b = xla::XlaBuilder::new(&format!("{}_train", model.name));
+        let inputs = declare_params(&b, &model.train)?;
+
+        let xm = inputs[layout.batch.start].mean()?;
+        let ym = inputs[layout.batch.start + 1].mean()?;
+        let lr = &inputs[layout.scalars.start];
+        let step = &inputs[layout.scalars.start + 1];
+        let reg = &inputs[layout.scalars.start + 2];
+        let inv_d = &inputs[layout.scalars.start + 3];
+        // a bounded step-dependent wobble so the step scalar matters:
+        // step_gain = 1 + 1e-3·step (kept tiny to stay finite)
+        let step_gain =
+            (b.constant_f32(1.0)? + (step * &b.constant_f32(1e-3)?)?)?;
+
+        // mask slot per sparse param, in spec order
+        let mut mask_of: BTreeMap<usize, usize> = BTreeMap::new();
+        for (pos, (i, _)) in
+            model.params.iter().enumerate().filter(|(_, p)| p.sparse).enumerate()
+        {
+            mask_of.insert(i, pos);
+        }
+
+        let mut new_params = Vec::with_capacity(model.params.len());
+        let mut new_opt = Vec::with_capacity(model.params.len() * slots);
+        let mut loss = b.constant_f32(0.01)?;
+        for (i, p) in model.params.iter().enumerate() {
+            let theta = &inputs[layout.params.start + i];
+            let ci = b.constant_f32(0.013 * (i + 1) as f32)?;
+            // a fake gradient with signal from the batch and the params
+            let mut g = ((theta * &xm)? + (&ci * &ym)?)?;
+            g = (&g * &step_gain)?;
+            if let Some(&mpos) = mask_of.get(&i) {
+                let fwd = &inputs[layout.masks_fwd.start + mpos];
+                let bwd = &inputs[layout.masks_bwd.start + mpos];
+                // forward contribution reads only A; updates only B
+                let act = ((theta * fwd)? * &(inv_d * &b.constant_f32(0.05)?)?)?;
+                g = (bwd * &(&g + &act)?)?;
+            }
+            // slot 0: momentum-style accumulator; slot 1 (when present):
+            // second-moment-style accumulator
+            let s0 = &inputs[layout.opt.start + i * slots];
+            let s0n = ((s0 * &b.constant_f32(0.9)?)? + g.clone())?;
+            let mut upd = s0n.clone();
+            let mut slot_outs = vec![s0n];
+            if slots == 2 {
+                let s1 = &inputs[layout.opt.start + i * slots + 1];
+                let s1n = ((s1 * &b.constant_f32(0.95)?)? + (&g * &g)?)?;
+                upd = (&upd + &(&s1n * &b.constant_f32(0.1)?)?)?;
+                slot_outs.push(s1n);
+            }
+            let mut delta = ((lr * &upd)? + (reg * theta)?)?;
+            if let Some(&mpos) = mask_of.get(&i) {
+                // §2.2: coordinates outside B stay bit-identical
+                let bwd = &inputs[layout.masks_bwd.start + mpos];
+                delta = (bwd * &delta)?;
+            }
+            new_params.push((theta - &delta)?);
+            new_opt.extend(slot_outs);
+            loss = (&loss + &(&g * &g)?.mean()?)?;
+        }
+
+        let mut outs = new_params;
+        outs.extend(new_opt);
+        outs.push(loss);
+        b.tuple(&outs)?.build()
+    }
+
+    /// Eval (`grad_norms = false`) or grad-norms (`true`) computation —
+    /// both read params + forward masks + one batch.
+    fn build_eval(&self, grad_norms: bool) -> Result<xla::XlaComputation> {
+        let model = &self.model;
+        let spec = if grad_norms { &model.grad_norms } else { &model.eval };
+        let layout = model.eval_layout(spec)?;
+        let b = xla::XlaBuilder::new(&format!(
+            "{}_{}",
+            model.name,
+            if grad_norms { "grad_norms" } else { "eval" }
+        ));
+        let inputs = declare_params(&b, spec)?;
+        let xm = inputs[layout.batch.start].mean()?;
+        let ym = inputs[layout.batch.start + 1].mean()?;
+
+        let mut mask_pos = 0usize;
+        let mut loss = b.constant_f32(0.01)?;
+        let mut gn_outs = Vec::new();
+        for (i, p) in model.params.iter().enumerate() {
+            let theta = &inputs[layout.params.start + i];
+            let active = if p.sparse {
+                let fwd = &inputs[layout.masks_fwd.start + mask_pos];
+                mask_pos += 1;
+                if grad_norms {
+                    // dense |grad| proxy: positive everywhere, so the
+                    // RigL grow criterion sees off-mask mass
+                    gn_outs.push(((theta * theta)? + (&xm * &xm)?)?);
+                }
+                (theta * fwd)?
+            } else {
+                theta.clone()
+            };
+            loss = (&loss + &(&active * &active)?.mean()?)?;
+        }
+        loss = (&loss + &(&xm * &xm)?)?;
+        let metric = ym;
+        if grad_norms {
+            b.tuple(&gn_outs)?.build()
+        } else {
+            b.tuple(&[loss, metric])?.build()
+        }
+    }
+}
+
+fn param(
+    name: &str,
+    dims: &[usize],
+    init: InitKind,
+    init_scale: f32,
+    sparse: bool,
+) -> ParamSpec {
+    ParamSpec {
+        name: name.into(),
+        shape: Shape::new(dims),
+        init,
+        init_scale,
+        sparse,
+        mac: dims.iter().product::<usize>() as u64,
+    }
+}
+
+/// Declare one builder parameter per artifact input, in order.
+fn declare_params(b: &xla::XlaBuilder, spec: &ArtifactSpec) -> Result<Vec<xla::XlaOp>> {
+    spec.inputs
+        .iter()
+        .enumerate()
+        .map(|(i, io)| {
+            b.parameter_s(
+                i as i64,
+                &xla::Shape::array::<f32>(io.shape.dims().to_vec()),
+                &io.name,
+            )
+        })
+        .collect()
+}
+
+/// Deterministic batches matching the synthetic model's shapes.
+struct SyntheticData {
+    rng: Pcg64,
+    eval_seed: u64,
+    batch: usize,
+    features: usize,
+}
+
+fn gen_batch(
+    rng: &mut Pcg64,
+    batch: usize,
+    features: usize,
+) -> (HostTensor, HostTensor) {
+    let x: Vec<f32> = (0..batch * features).map(|_| rng.normal_f32(1.0)).collect();
+    let y: Vec<f32> = (0..batch).map(|_| rng.normal_f32(1.0)).collect();
+    (
+        HostTensor {
+            shape: Shape::new(&[batch, features]),
+            data: crate::tensor::TensorData::F32(x),
+        },
+        HostTensor {
+            shape: Shape::new(&[batch]),
+            data: crate::tensor::TensorData::F32(y),
+        },
+    )
+}
+
+impl DataSource for SyntheticData {
+    fn next_train(&mut self) -> (HostTensor, HostTensor) {
+        gen_batch(&mut self.rng, self.batch, self.features)
+    }
+
+    fn eval_batch(&mut self, idx: usize) -> Option<(HostTensor, HostTensor)> {
+        if idx >= 4 {
+            return None;
+        }
+        let mut rng = Pcg64::new(self.eval_seed, idx as u64 + 1);
+        Some(gen_batch(&mut rng, self.batch, self.features))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::client::TensorRef;
+
+    #[test]
+    fn artifacts_compile_and_match_layouts() {
+        for synth in [Synthetic::tiny(), Synthetic::small()] {
+            let mut rt = Runtime::new().unwrap();
+            synth.install(&mut rt).unwrap();
+            assert!(synth.model.train_layout().is_ok());
+            assert!(synth.model.eval_layout(&synth.model.eval).is_ok());
+            // load resolves from the preloaded cache
+            let exe = rt.load(&synth.model.train).unwrap();
+            assert_eq!(exe.spec.inputs.len(), synth.model.train.inputs.len());
+        }
+    }
+
+    #[test]
+    fn train_step_respects_backward_mask() {
+        let synth = Synthetic::tiny();
+        let mut rt = Runtime::new().unwrap();
+        synth.install(&mut rt).unwrap();
+        let model = &synth.model;
+        let layout = model.train_layout().unwrap();
+        let mut store = crate::sparsity::ParamStore::init(&model.params, 3);
+        // sparse masks: fwd = bwd = top half by magnitude
+        for e in store.entries.iter_mut() {
+            if let Some(m) = e.masks.as_mut() {
+                let n = e.values.len();
+                let mask = crate::sparsity::topk::topk_mask(&e.values, n / 2);
+                m.set_fwd(mask.clone());
+                m.set_bwd(mask);
+            }
+        }
+        let slots = model.optimizer.slots();
+        let opt: Vec<Vec<f32>> = model
+            .params
+            .iter()
+            .flat_map(|p| {
+                std::iter::repeat_with(move || vec![0.0f32; p.shape.numel()])
+                    .take(slots)
+            })
+            .collect();
+        let mut data = synth.data(1);
+        let (x, y) = data.next_train();
+        let mut inputs: Vec<TensorRef<'_>> = vec![];
+        for e in &store.entries {
+            inputs.push(TensorRef::F32(&e.values));
+        }
+        for fwd in [true, false] {
+            for e in &store.entries {
+                if let Some(m) = &e.masks {
+                    inputs.push(TensorRef::F32(if fwd { m.fwd() } else { m.bwd() }));
+                }
+            }
+        }
+        for slot in &opt {
+            inputs.push(TensorRef::F32(slot));
+        }
+        inputs.push(TensorRef::from(&x));
+        inputs.push(TensorRef::from(&y));
+        let scalars = [[0.05f32], [1.0], [1e-4], [5.0]];
+        for s in &scalars {
+            inputs.push(TensorRef::F32(&s[..]));
+        }
+        let exe = rt.load(&model.train).unwrap();
+        let outs = exe.run_borrowed(&inputs).unwrap();
+        assert_eq!(outs.len(), model.params.len() * (1 + slots) + 1);
+        let loss = outs[layout.out_loss].as_f32().unwrap()[0];
+        assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+        // no updates outside B; some inside
+        for (i, p) in model.params.iter().enumerate() {
+            if !p.sparse {
+                continue;
+            }
+            let before = &store.get(&p.name).unwrap().values;
+            let masks = store.get(&p.name).unwrap().masks.as_ref().unwrap();
+            let after = outs[i].as_f32().unwrap();
+            let mut inside = 0;
+            for j in 0..before.len() {
+                if before[j] != after[j] {
+                    assert_ne!(masks.bwd()[j], 0.0, "{}: leak at {j}", p.name);
+                    inside += 1;
+                }
+            }
+            assert!(inside > 0, "{}: no updates inside B", p.name);
+        }
+    }
+
+    #[test]
+    fn data_stream_is_deterministic() {
+        let synth = Synthetic::tiny();
+        let mut a = synth.data(9);
+        let mut b = synth.data(9);
+        assert_eq!(a.next_train(), b.next_train());
+        assert_eq!(a.next_train(), b.next_train());
+        assert_eq!(a.eval_batch(0), b.eval_batch(0));
+        assert!(a.eval_batch(99).is_none());
+        let mut c = synth.data(10);
+        assert_ne!(a.eval_batch(1), c.eval_batch(1));
+    }
+}

@@ -9,7 +9,7 @@
 use anyhow::Result;
 
 use super::strategy::{Densities, MaskStrategy, TensorCtx};
-use super::topk::{k_for_density, topk_mask_into};
+use super::topk::{k_for_density, topk_mask_scratch, TopkScratch};
 
 #[derive(Clone, Debug)]
 pub struct MagnitudePruning {
@@ -18,11 +18,17 @@ pub struct MagnitudePruning {
     /// Pruning begins/ends at these fractions of total steps.
     pub t_start_frac: f64,
     pub t_end_frac: f64,
+    scratch: TopkScratch,
 }
 
 impl MagnitudePruning {
     pub fn new(d_final: f64) -> Self {
-        MagnitudePruning { d_final, t_start_frac: 0.1, t_end_frac: 0.8 }
+        MagnitudePruning {
+            d_final,
+            t_start_frac: 0.1,
+            t_end_frac: 0.8,
+            scratch: TopkScratch::new(),
+        }
     }
 
     /// Zhu–Gupta cubic sparsity ramp.
@@ -55,7 +61,7 @@ impl MaskStrategy for MagnitudePruning {
         let n = ctx.weights.len();
         let d = self.density_at(ctx.step, ctx.total_steps);
         let k = k_for_density(n, d);
-        topk_mask_into(ctx.weights, k, ctx.mask_fwd);
+        topk_mask_scratch(ctx.weights, k, ctx.mask_fwd, &mut self.scratch);
         // dense backward: every unit keeps learning (set B = everything)
         ctx.mask_bwd.fill(1.0);
         Ok(())

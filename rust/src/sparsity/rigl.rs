@@ -51,6 +51,10 @@ impl MaskStrategy for RigL {
         "rigl"
     }
 
+    fn mutates_weights(&self) -> bool {
+        true
+    }
+
     fn densities(&self, _step: usize, _total: usize) -> Densities {
         Densities { fwd: self.density, bwd: self.density }
     }

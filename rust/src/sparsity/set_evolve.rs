@@ -43,6 +43,10 @@ impl MaskStrategy for SetEvolve {
         "set"
     }
 
+    fn mutates_weights(&self) -> bool {
+        true
+    }
+
     fn densities(&self, _step: usize, _total: usize) -> Densities {
         Densities { fwd: self.density, bwd: self.density }
     }

@@ -2,34 +2,86 @@
 //! "The CPU could maintain the parameters in an appropriate data
 //! structure"). Owns initialisation (from manifest ParamSpecs), the
 //! current dense values, and the per-tensor masks.
+//!
+//! Under the device-resident runtime (`runtime::device_state`) the
+//! store stays the *mask authority* at all times, while its weight
+//! values are only guaranteed fresh at sync points — mask refresh,
+//! checkpoint capture, and end of run. Evaluation is *not* a sync
+//! point: it reads the resident device buffers directly and leaves
+//! the host copy untouched.
 
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, Result};
 
 use crate::runtime::manifest::{InitKind, ParamSpec};
-use crate::tensor::{HostTensor, Shape};
 use crate::util::rng::Pcg64;
 
 /// Forward + backward masks for one sparse tensor (0/1 as f32 — the
 /// exact representation uploaded to the device).
+///
+/// Buffers are private so the nnz counts can be cached: observers call
+/// `effective_params()` every logged step, and an O(total-params) scan
+/// there was measurable. All mutation paths (`set_fwd`/`set_bwd`/
+/// [`MaskPair::edit`]) recount on write.
 #[derive(Clone, Debug)]
 pub struct MaskPair {
-    pub fwd: Vec<f32>,
-    pub bwd: Vec<f32>,
+    fwd: Vec<f32>,
+    bwd: Vec<f32>,
+    fwd_nnz: usize,
+    bwd_nnz: usize,
+}
+
+fn nnz(v: &[f32]) -> usize {
+    v.iter().filter(|&&x| x != 0.0).count()
 }
 
 impl MaskPair {
     pub fn dense(n: usize) -> Self {
-        MaskPair { fwd: vec![1.0; n], bwd: vec![1.0; n] }
+        MaskPair { fwd: vec![1.0; n], bwd: vec![1.0; n], fwd_nnz: n, bwd_nnz: n }
     }
 
+    /// Take ownership of prebuilt mask vectors (counts them once).
+    pub fn from_vecs(fwd: Vec<f32>, bwd: Vec<f32>) -> Self {
+        let (fwd_nnz, bwd_nnz) = (nnz(&fwd), nnz(&bwd));
+        MaskPair { fwd, bwd, fwd_nnz, bwd_nnz }
+    }
+
+    pub fn fwd(&self) -> &[f32] {
+        &self.fwd
+    }
+
+    pub fn bwd(&self) -> &[f32] {
+        &self.bwd
+    }
+
+    /// Cached non-zero count of the forward mask.
     pub fn fwd_nnz(&self) -> usize {
-        self.fwd.iter().filter(|&&x| x != 0.0).count()
+        self.fwd_nnz
     }
 
+    /// Cached non-zero count of the backward mask.
     pub fn bwd_nnz(&self) -> usize {
-        self.bwd.iter().filter(|&&x| x != 0.0).count()
+        self.bwd_nnz
+    }
+
+    pub fn set_fwd(&mut self, m: Vec<f32>) {
+        self.fwd_nnz = nnz(&m);
+        self.fwd = m;
+    }
+
+    pub fn set_bwd(&mut self, m: Vec<f32>) {
+        self.bwd_nnz = nnz(&m);
+        self.bwd = m;
+    }
+
+    /// Mutate both buffers in place; the counts are refreshed after the
+    /// closure returns (this is the strategies' write path).
+    pub fn edit<R>(&mut self, f: impl FnOnce(&mut [f32], &mut [f32]) -> R) -> R {
+        let r = f(&mut self.fwd, &mut self.bwd);
+        self.fwd_nnz = nnz(&self.fwd);
+        self.bwd_nnz = nnz(&self.bwd);
+        r
     }
 
     /// Check A ⊆ B (every forward-active unit is backward-active).
@@ -49,7 +101,7 @@ pub struct ParamEntry {
 
 /// The host-side dense model: every parameter tensor plus optimiser
 /// slots are device-resident at train time; the store holds the *mask
-/// authority* and (at refresh points) a synced copy of the weights.
+/// authority* and (at sync points) a synced copy of the weights.
 #[derive(Clone, Debug)]
 pub struct ParamStore {
     pub entries: Vec<ParamEntry>,
@@ -113,7 +165,8 @@ impl ParamStore {
 
     /// Parameters that are *representable* under the current forward
     /// masks: dense tensors count fully, sparse tensors count nnz(fwd).
-    /// This is the paper's "Params" column in Tables 2/3/5.
+    /// This is the paper's "Params" column in Tables 2/3/5. O(#tensors)
+    /// thanks to the cached per-mask counts.
     pub fn effective_params(&self) -> usize {
         self.entries
             .iter()
@@ -122,43 +175,6 @@ impl ParamStore {
                 None => e.values.len(),
             })
             .sum()
-    }
-
-    /// Tensors as HostTensor views for upload (params in spec order).
-    pub fn param_tensors(&self) -> Vec<HostTensor> {
-        self.entries
-            .iter()
-            .map(|e| HostTensor {
-                shape: Shape(e.spec.shape.dims().to_vec()),
-                data: crate::tensor::TensorData::F32(e.values.clone()),
-            })
-            .collect()
-    }
-
-    /// Forward masks (sparse tensors only, spec order).
-    pub fn fwd_mask_tensors(&self) -> Vec<HostTensor> {
-        self.mask_tensors(true)
-    }
-
-    /// Backward masks (sparse tensors only, spec order).
-    pub fn bwd_mask_tensors(&self) -> Vec<HostTensor> {
-        self.mask_tensors(false)
-    }
-
-    fn mask_tensors(&self, fwd: bool) -> Vec<HostTensor> {
-        self.entries
-            .iter()
-            .filter_map(|e| {
-                e.masks.as_ref().map(|m| HostTensor {
-                    shape: Shape(e.spec.shape.dims().to_vec()),
-                    data: crate::tensor::TensorData::F32(if fwd {
-                        m.fwd.clone()
-                    } else {
-                        m.bwd.clone()
-                    }),
-                })
-            })
-            .collect()
     }
 
     /// Write back refreshed dense values (after a device→host sync).
@@ -235,19 +251,37 @@ mod tests {
         assert_eq!(st.total_params(), 32 + 8 + 8 + 16);
         let e = st.get_mut("w1").unwrap();
         let m = e.masks.as_mut().unwrap();
-        m.fwd.fill(0.0);
-        m.fwd[0] = 1.0;
+        let mut fwd = vec![0.0; 32];
+        fwd[0] = 1.0;
+        m.set_fwd(fwd);
         assert_eq!(st.effective_params(), 1 + 8 + 8 + 16);
+    }
+
+    #[test]
+    fn nnz_cache_tracks_every_write_path() {
+        let mut m = MaskPair::dense(6);
+        assert_eq!((m.fwd_nnz(), m.bwd_nnz()), (6, 6));
+        m.set_fwd(vec![1.0, 0.0, 0.0, 1.0, 0.0, 0.0]);
+        assert_eq!(m.fwd_nnz(), 2);
+        m.set_bwd(vec![1.0, 1.0, 0.0, 1.0, 0.0, 0.0]);
+        assert_eq!(m.bwd_nnz(), 3);
+        m.edit(|fwd, bwd| {
+            fwd.fill(0.0);
+            bwd[0] = 0.0;
+        });
+        assert_eq!((m.fwd_nnz(), m.bwd_nnz()), (0, 2));
+        let p = MaskPair::from_vecs(vec![1.0, 0.0], vec![1.0, 1.0]);
+        assert_eq!((p.fwd_nnz(), p.bwd_nnz()), (1, 2));
     }
 
     #[test]
     fn mask_nesting_check() {
         let mut m = MaskPair::dense(4);
         assert!(m.is_nested());
-        m.fwd = vec![1.0, 0.0, 0.0, 0.0];
-        m.bwd = vec![1.0, 1.0, 0.0, 0.0];
+        m.set_fwd(vec![1.0, 0.0, 0.0, 0.0]);
+        m.set_bwd(vec![1.0, 1.0, 0.0, 0.0]);
         assert!(m.is_nested());
-        m.bwd[0] = 0.0;
+        m.edit(|_, bwd| bwd[0] = 0.0);
         assert!(!m.is_nested());
     }
 }

@@ -8,7 +8,7 @@
 
 use anyhow::Result;
 
-use super::store::ParamStore;
+use super::store::{ParamEntry, ParamStore};
 use crate::util::rng::Pcg64;
 
 /// Per-refresh context handed to a strategy for one tensor.
@@ -47,6 +47,15 @@ pub trait MaskStrategy: Send {
         false
     }
 
+    /// Whether `update_tensor` rewrites weight values (SET re-inits
+    /// grown connections, RigL zeroes dropped/grown ones). Gates two
+    /// protocol decisions: such strategies cannot run on the §2.4
+    /// async path (stale-snapshot rewrites would be lost), and their
+    /// refreshes must re-upload params to the device.
+    fn mutates_weights(&self) -> bool {
+        false
+    }
+
     /// Whether masks should be recomputed at this step at all. The
     /// coordinator combines this with its own refresh interval.
     fn wants_update(&self, step: usize, total_steps: usize) -> bool {
@@ -78,17 +87,21 @@ pub fn update_store_masks(
         if !entry.spec.sparse {
             continue;
         }
-        let masks = entry.masks.as_mut().expect("sparse tensor has masks");
-        let gn = grad_norms.and_then(|m| m.get(&entry.spec.name)).map(|v| &v[..]);
-        strategy.update_tensor(TensorCtx {
-            name: &entry.spec.name,
-            weights: &mut entry.values,
-            mask_fwd: &mut masks.fwd,
-            mask_bwd: &mut masks.bwd,
-            grad_norms: gn,
-            rng,
-            step,
-            total_steps,
+        // split-borrow the entry so the mask edit can see the weights
+        let ParamEntry { spec, values, masks } = entry;
+        let masks = masks.as_mut().expect("sparse tensor has masks");
+        let gn = grad_norms.and_then(|m| m.get(&spec.name)).map(|v| &v[..]);
+        masks.edit(|mask_fwd, mask_bwd| {
+            strategy.update_tensor(TensorCtx {
+                name: &spec.name,
+                weights: values.as_mut_slice(),
+                mask_fwd,
+                mask_bwd,
+                grad_norms: gn,
+                rng: &mut *rng,
+                step,
+                total_steps,
+            })
         })?;
     }
     Ok(())

@@ -35,19 +35,37 @@ fn greater(w: &[f32], a: u32, b: u32) -> bool {
     ma > mb || (ma == mb && ia < ib)
 }
 
-/// Indices of the k largest-magnitude entries of `w` (deterministic
-/// tie-break by index). Returned indices are NOT sorted by magnitude.
-pub fn topk_indices(w: &[f32], k: usize) -> Vec<u32> {
+/// Reusable index workspace for the selection. Strategies hold one per
+/// instance so the refresh path is allocation-free after the first
+/// tensor of the largest size (the buffer grows to the high-water
+/// mark and is reused across tensors and refreshes).
+#[derive(Clone, Debug, Default)]
+pub struct TopkScratch {
+    idx: Vec<u32>,
+}
+
+impl TopkScratch {
+    pub fn new() -> Self {
+        TopkScratch::default()
+    }
+}
+
+/// Core selection: indices of the k largest-magnitude entries of `w`
+/// (deterministic tie-break by index), written into `scratch`. The
+/// returned slice is NOT sorted by magnitude.
+pub fn topk_select<'a>(
+    w: &[f32],
+    k: usize,
+    scratch: &'a mut TopkScratch,
+) -> &'a [u32] {
     let n = w.len();
     let k = k.min(n);
-    if k == 0 {
-        return vec![];
-    }
-    let mut idx: Vec<u32> = (0..n as u32).collect();
-    if k < n {
+    scratch.idx.clear();
+    scratch.idx.extend(0..n as u32);
+    if k > 0 && k < n {
         // select_nth_unstable_by puts the k-th "greatest" pivot in place
         // with everything greater before it.
-        idx.select_nth_unstable_by(k - 1, |&a, &b| {
+        scratch.idx.select_nth_unstable_by(k - 1, |&a, &b| {
             if greater(w, a, b) {
                 std::cmp::Ordering::Less
             } else if greater(w, b, a) {
@@ -56,28 +74,45 @@ pub fn topk_indices(w: &[f32], k: usize) -> Vec<u32> {
                 std::cmp::Ordering::Equal
             }
         });
-        idx.truncate(k);
     }
-    idx
+    &scratch.idx[..k]
+}
+
+/// Indices of the k largest-magnitude entries of `w` (allocating
+/// convenience wrapper over [`topk_select`]).
+pub fn topk_indices(w: &[f32], k: usize) -> Vec<u32> {
+    let mut scratch = TopkScratch::new();
+    topk_select(w, k, &mut scratch).to_vec()
 }
 
 /// 0/1 f32 mask with ones at the top-k magnitude positions.
 pub fn topk_mask(w: &[f32], k: usize) -> Vec<f32> {
     let mut mask = vec![0.0f32; w.len()];
-    for i in topk_indices(w, k) {
-        mask[i as usize] = 1.0;
-    }
+    let mut scratch = TopkScratch::new();
+    topk_mask_scratch(w, k, &mut mask, &mut scratch);
     mask
 }
 
-/// In-place variant writing into an existing buffer (hot path: mask
-/// refresh reuses allocations).
-pub fn topk_mask_into(w: &[f32], k: usize, out: &mut [f32]) {
+/// Hot-path variant: mask written into an existing buffer, selection
+/// workspace reused — zero allocations per refresh.
+pub fn topk_mask_scratch(
+    w: &[f32],
+    k: usize,
+    out: &mut [f32],
+    scratch: &mut TopkScratch,
+) {
     debug_assert_eq!(w.len(), out.len());
     out.fill(0.0);
-    for i in topk_indices(w, k) {
+    for &i in topk_select(w, k, scratch) {
         out[i as usize] = 1.0;
     }
+}
+
+/// In-place variant writing into an existing buffer (allocates its
+/// selection workspace; prefer [`topk_mask_scratch`] on hot paths).
+pub fn topk_mask_into(w: &[f32], k: usize, out: &mut [f32]) {
+    let mut scratch = TopkScratch::new();
+    topk_mask_scratch(w, k, out, &mut scratch);
 }
 
 /// The k-th largest magnitude (threshold view, used by tests/analysis).
@@ -218,5 +253,23 @@ mod tests {
         let mut buf = vec![9.0f32; w.len()];
         topk_mask_into(&w, 10, &mut buf);
         assert_eq!(buf, topk_mask(&w, 10));
+    }
+
+    #[test]
+    fn scratch_reuse_across_sizes_matches_fresh_selection() {
+        let mut scratch = TopkScratch::new();
+        for n in [64usize, 17, 128, 1] {
+            let w: Vec<f32> = (0..n).map(|i| ((i * 31) % 23) as f32 - 11.0).collect();
+            for k in [0, 1, n / 2, n] {
+                let mut a = vec![0.0f32; n];
+                topk_mask_scratch(&w, k, &mut a, &mut scratch);
+                assert_eq!(a, topk_mask(&w, k), "n={n} k={k}");
+                let mut got = topk_select(&w, k, &mut scratch).to_vec();
+                let mut want = brute_force(&w, k);
+                got.sort_unstable();
+                want.sort_unstable();
+                assert_eq!(got, want, "n={n} k={k}");
+            }
+        }
     }
 }

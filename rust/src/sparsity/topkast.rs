@@ -3,7 +3,7 @@
 use anyhow::Result;
 
 use super::strategy::{Densities, MaskStrategy, TensorCtx};
-use super::topk::{k_for_density, topk_mask_into};
+use super::topk::{k_for_density, topk_mask_scratch, TopkScratch};
 
 /// Top-KAST: A = top-(D·n) by |w|, B = top-((D+M)·n) by |w|.
 /// A ⊆ B holds by top-k nesting. Masks are recomputed from the dense
@@ -18,6 +18,8 @@ pub struct TopKast {
     /// Optional Table-1 ablation: after this step, stop exploration —
     /// B collapses to A (gradients only to active units).
     pub stop_exploration_at: Option<usize>,
+    /// Reused selection workspace (refresh path stays allocation-free).
+    scratch: TopkScratch,
 }
 
 impl TopKast {
@@ -26,7 +28,12 @@ impl TopKast {
             d_bwd >= d_fwd,
             "backward density {d_bwd} must be >= forward density {d_fwd} (B ⊇ A)"
         );
-        TopKast { d_fwd, d_bwd, stop_exploration_at: None }
+        TopKast {
+            d_fwd,
+            d_bwd,
+            stop_exploration_at: None,
+            scratch: TopkScratch::new(),
+        }
     }
 
     /// From the paper's (forward sparsity, backward sparsity) notation,
@@ -58,10 +65,10 @@ impl MaskStrategy for TopKast {
     fn update_tensor(&mut self, ctx: TensorCtx<'_>) -> Result<()> {
         let n = ctx.weights.len();
         let ka = k_for_density(n, self.d_fwd);
-        topk_mask_into(ctx.weights, ka, ctx.mask_fwd);
+        topk_mask_scratch(ctx.weights, ka, ctx.mask_fwd, &mut self.scratch);
         if self.exploring(ctx.step) {
             let kb = k_for_density(n, self.d_bwd).max(ka);
-            topk_mask_into(ctx.weights, kb, ctx.mask_bwd);
+            topk_mask_scratch(ctx.weights, kb, ctx.mask_bwd, &mut self.scratch);
         } else {
             ctx.mask_bwd.copy_from_slice(ctx.mask_fwd);
         }
@@ -75,12 +82,13 @@ impl MaskStrategy for TopKast {
 pub struct TopKastRandom {
     pub d_fwd: f64,
     pub d_bwd: f64,
+    scratch: TopkScratch,
 }
 
 impl TopKastRandom {
     pub fn new(d_fwd: f64, d_bwd: f64) -> Self {
         assert!(d_bwd >= d_fwd);
-        TopKastRandom { d_fwd, d_bwd }
+        TopKastRandom { d_fwd, d_bwd, scratch: TopkScratch::new() }
     }
 }
 
@@ -96,18 +104,44 @@ impl MaskStrategy for TopKastRandom {
     fn update_tensor(&mut self, ctx: TensorCtx<'_>) -> Result<()> {
         let n = ctx.weights.len();
         let ka = k_for_density(n, self.d_fwd);
-        topk_mask_into(ctx.weights, ka, ctx.mask_fwd);
+        topk_mask_scratch(ctx.weights, ka, ctx.mask_fwd, &mut self.scratch);
         ctx.mask_bwd.copy_from_slice(ctx.mask_fwd);
         let kb = k_for_density(n, self.d_bwd).max(ka);
-        let extra = kb - ka;
-        if extra > 0 {
-            // uniform sample from the complement of A
-            let complement: Vec<usize> = (0..n)
-                .filter(|&i| ctx.mask_fwd[i] == 0.0)
-                .collect();
-            let take = extra.min(complement.len());
-            for j in ctx.rng.sample_indices(complement.len(), take) {
-                ctx.mask_bwd[complement[j]] = 1.0;
+        let complement = n - ka;
+        let take = (kb - ka).min(complement);
+        if take == 0 {
+            return Ok(());
+        }
+        // Uniform sample of B\A from the complement of A, without
+        // materialising the O(n) complement index list: rejection-sample
+        // whichever side of the complement is smaller (≤ half), so at
+        // least half the complement stays acceptable throughout and the
+        // expected draw count is O(min(take, c-take) · n/c) for
+        // complement size c.
+        if 2 * take <= complement {
+            // include `take` complement positions
+            let mut placed = 0;
+            while placed < take {
+                let i = ctx.rng.next_below(n as u64) as usize;
+                if ctx.mask_bwd[i] == 0.0 {
+                    ctx.mask_bwd[i] = 1.0;
+                    placed += 1;
+                }
+            }
+        } else {
+            // turn the whole complement on, then knock out the excess
+            for i in 0..n {
+                if ctx.mask_fwd[i] == 0.0 {
+                    ctx.mask_bwd[i] = 1.0;
+                }
+            }
+            let mut removed = 0;
+            while removed < complement - take {
+                let i = ctx.rng.next_below(n as u64) as usize;
+                if ctx.mask_fwd[i] == 0.0 && ctx.mask_bwd[i] == 1.0 {
+                    ctx.mask_bwd[i] = 0.0;
+                    removed += 1;
+                }
             }
         }
         Ok(())

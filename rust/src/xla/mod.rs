@@ -1,0 +1,860 @@
+//! Host-simulated PJRT backend — an in-crate stand-in for the vendored
+//! `xla_rs` shim (PJRT C API bindings) that is not available in this
+//! build environment.
+//!
+//! The surface mirrors the subset of xla_rs the runtime layer uses
+//! (`PjRtClient`, `PjRtLoadedExecutable`, `PjRtBuffer`, `Literal`,
+//! `XlaBuilder`/`XlaOp`/`XlaComputation`, `HloModuleProto`), with the
+//! same buffer-in/buffer-out execution model:
+//!
+//! * `buffer_from_host_buffer` is the only host→device path and
+//!   `to_literal_sync` the only device→host path; both are metered on
+//!   the owning client (`TransferStats`), so tests can assert exactly
+//!   what a training loop moves across the simulated PCIe boundary.
+//! * Buffers are immutable once created and cheap to alias
+//!   (`Arc`-backed), so an executable's output buffers can be fed
+//!   straight back in as the next step's inputs without any host copy —
+//!   the contract `runtime::device_state` is built on.
+//! * `PjRtBuffer::tuple_parts` splits a tuple result into per-output
+//!   buffers *on device* (no transfer), mirroring PJRT's
+//!   untuple-on-device.
+//!
+//! Computations built with [`XlaBuilder`] (parameters, elementwise
+//! add/sub/mul with scalar broadcast, reduce-sum/mean, tuples) execute
+//! on the host with plain f32 arithmetic — deterministic, so the
+//! parity suites can demand bit-identical results between execution
+//! strategies. HLO-*text* artifacts (the python AOT path) parse and
+//! "compile", but executing one reports a clear error: interpreting
+//! arbitrary HLO is out of scope for the simulation; those paths need
+//! the real PJRT backend.
+
+use std::cell::RefCell;
+use std::path::Path;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+// ---------------------------------------------------------------------------
+// element types
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElemType {
+    F32,
+    I32,
+}
+
+impl ElemType {
+    pub fn byte_size(self) -> usize {
+        4
+    }
+}
+
+/// Host element types a buffer/literal can be built from or read into.
+pub trait NativeType: Copy + 'static {
+    const TY: ElemType;
+    fn wrap(data: Vec<Self>) -> Storage;
+    fn read(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    const TY: ElemType = ElemType::F32;
+    fn wrap(data: Vec<f32>) -> Storage {
+        Storage::F32(data)
+    }
+    fn read(lit: &Literal) -> Result<Vec<f32>> {
+        match &lit.0 {
+            LitData::F32(v) => Ok(v.clone()),
+            _ => bail!("literal is not f32"),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElemType = ElemType::I32;
+    fn wrap(data: Vec<i32>) -> Storage {
+        Storage::I32(data)
+    }
+    fn read(lit: &Literal) -> Result<Vec<i32>> {
+        match &lit.0 {
+            LitData::I32(v) => Ok(v.clone()),
+            _ => bail!("literal is not i32"),
+        }
+    }
+}
+
+/// Flat device/host value storage. Tuples nest buffers (device side).
+#[derive(Clone, Debug)]
+pub enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<PjRtBuffer>),
+}
+
+impl Storage {
+    fn flat_byte_size(&self) -> u64 {
+        match self {
+            Storage::F32(v) => 4 * v.len() as u64,
+            Storage::I32(v) => 4 * v.len() as u64,
+            Storage::Tuple(parts) => {
+                parts.iter().map(|p| p.data.flat_byte_size()).sum()
+            }
+        }
+    }
+
+    fn ty(&self) -> Option<ElemType> {
+        match self {
+            Storage::F32(_) => Some(ElemType::F32),
+            Storage::I32(_) => Some(ElemType::I32),
+            Storage::Tuple(_) => None,
+        }
+    }
+
+    fn numel(&self) -> usize {
+        match self {
+            Storage::F32(v) => v.len(),
+            Storage::I32(v) => v.len(),
+            Storage::Tuple(p) => p.len(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// transfer metering
+// ---------------------------------------------------------------------------
+
+/// Host↔device transfer counters, shared by every buffer of a client.
+#[derive(Debug, Default)]
+pub struct TransferStats {
+    h2d_bytes: AtomicU64,
+    h2d_calls: AtomicU64,
+    d2h_bytes: AtomicU64,
+    d2h_calls: AtomicU64,
+}
+
+/// A point-in-time copy of the counters (subtract two to get a delta).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TransferSnapshot {
+    pub h2d_bytes: u64,
+    pub h2d_calls: u64,
+    pub d2h_bytes: u64,
+    pub d2h_calls: u64,
+}
+
+impl TransferSnapshot {
+    /// Transfers that happened after `earlier` (counters are monotone).
+    pub fn since(&self, earlier: &TransferSnapshot) -> TransferSnapshot {
+        TransferSnapshot {
+            h2d_bytes: self.h2d_bytes - earlier.h2d_bytes,
+            h2d_calls: self.h2d_calls - earlier.h2d_calls,
+            d2h_bytes: self.d2h_bytes - earlier.d2h_bytes,
+            d2h_calls: self.d2h_calls - earlier.d2h_calls,
+        }
+    }
+}
+
+impl TransferStats {
+    fn record_h2d(&self, bytes: u64) {
+        self.h2d_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.h2d_calls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn record_d2h(&self, bytes: u64) {
+        self.d2h_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.d2h_calls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> TransferSnapshot {
+        TransferSnapshot {
+            h2d_bytes: self.h2d_bytes.load(Ordering::Relaxed),
+            h2d_calls: self.h2d_calls.load(Ordering::Relaxed),
+            d2h_bytes: self.d2h_bytes.load(Ordering::Relaxed),
+            d2h_calls: self.d2h_calls.load(Ordering::Relaxed),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// client / buffers / literals
+// ---------------------------------------------------------------------------
+
+/// The simulated PJRT client. Cheap to clone (shared handle).
+#[derive(Clone)]
+pub struct PjRtClient {
+    stats: Arc<TransferStats>,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { stats: Arc::new(TransferStats::default()) })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "host-sim".to_string()
+    }
+
+    /// Host→device upload — the metered entry point for all inputs.
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let numel: usize = dims.iter().product();
+        if numel != data.len() {
+            bail!(
+                "buffer_from_host_buffer: {} elements vs shape {:?}",
+                data.len(),
+                dims
+            );
+        }
+        self.stats.record_h2d(4 * data.len() as u64);
+        Ok(PjRtBuffer {
+            data: Arc::new(T::wrap(data.to_vec())),
+            stats: self.stats.clone(),
+        })
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        match &comp.kind {
+            ComputationKind::Graph(g) => {
+                g.validate()?;
+                Ok(PjRtLoadedExecutable {
+                    graph: Some(Arc::clone(g)),
+                    name: g.name.clone(),
+                    client: self.clone(),
+                })
+            }
+            ComputationKind::Opaque(name) => Ok(PjRtLoadedExecutable {
+                graph: None,
+                name: name.clone(),
+                client: self.clone(),
+            }),
+        }
+    }
+
+    pub fn transfer_stats(&self) -> TransferSnapshot {
+        self.stats.snapshot()
+    }
+}
+
+/// A device-resident value. Immutable; clones alias the same memory.
+#[derive(Clone, Debug)]
+pub struct PjRtBuffer {
+    data: Arc<Storage>,
+    stats: Arc<TransferStats>,
+}
+
+impl PjRtBuffer {
+    /// Device→host download — the metered exit point for all outputs.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        self.stats.record_d2h(self.data.flat_byte_size());
+        Ok(self.literal_no_transfer())
+    }
+
+    fn literal_no_transfer(&self) -> Literal {
+        match self.data.as_ref() {
+            Storage::F32(v) => Literal(LitData::F32(v.clone())),
+            Storage::I32(v) => Literal(LitData::I32(v.clone())),
+            Storage::Tuple(parts) => Literal(LitData::Tuple(
+                parts.iter().map(|p| p.literal_no_transfer()).collect(),
+            )),
+        }
+    }
+
+    /// Split a tuple result into its element buffers *on device* — no
+    /// host transfer, the parts alias the tuple's memory.
+    pub fn tuple_parts(&self) -> Result<Vec<PjRtBuffer>> {
+        match self.data.as_ref() {
+            Storage::Tuple(parts) => Ok(parts.clone()),
+            _ => bail!("buffer is not a tuple"),
+        }
+    }
+
+    pub fn is_tuple(&self) -> bool {
+        matches!(self.data.as_ref(), Storage::Tuple(_))
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.numel()
+    }
+
+    /// Element type of an array buffer (None for tuples).
+    pub fn element_type(&self) -> Option<ElemType> {
+        self.data.ty()
+    }
+
+    fn value(&self) -> &Storage {
+        self.data.as_ref()
+    }
+}
+
+#[derive(Clone, Debug)]
+enum LitData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// A host-side value downloaded from a buffer.
+#[derive(Clone, Debug)]
+pub struct Literal(LitData);
+
+impl Literal {
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::read(self)
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.0 {
+            LitData::Tuple(parts) => Ok(parts.clone()),
+            _ => bail!("literal is not a tuple"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shapes
+// ---------------------------------------------------------------------------
+
+/// An array shape + element type (builder-side).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Shape {
+    dims: Vec<usize>,
+    ty: ElemType,
+}
+
+impl Shape {
+    pub fn array<T: NativeType>(dims: Vec<usize>) -> Shape {
+        Shape { dims, ty: T::TY }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// computation graphs
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug)]
+enum BinOp {
+    Add,
+    Sub,
+    Mul,
+}
+
+#[derive(Clone, Debug)]
+enum Node {
+    Parameter { index: usize, numel: usize, ty: ElemType },
+    ConstantF32 { value: f32 },
+    Binary { op: BinOp, a: usize, b: usize },
+    ReduceSum { a: usize },
+    Mean { a: usize },
+    Tuple { parts: Vec<usize> },
+}
+
+#[derive(Debug)]
+struct Graph {
+    name: String,
+    nodes: Vec<Node>,
+    root: usize,
+}
+
+impl Graph {
+    /// Element count of a node's value ([1] for reductions/constants;
+    /// tuples report their arity).
+    fn numel(&self, id: usize) -> usize {
+        match &self.nodes[id] {
+            Node::Parameter { numel, .. } => *numel,
+            Node::ConstantF32 { .. } => 1,
+            Node::Binary { a, b, .. } => self.numel(*a).max(self.numel(*b)),
+            Node::ReduceSum { .. } | Node::Mean { .. } => 1,
+            Node::Tuple { parts } => parts.len(),
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        // parameters must be densely indexed 0..n
+        let mut indices: Vec<usize> = self
+            .nodes
+            .iter()
+            .filter_map(|n| match n {
+                Node::Parameter { index, .. } => Some(*index),
+                _ => None,
+            })
+            .collect();
+        indices.sort_unstable();
+        for (want, got) in indices.iter().enumerate() {
+            if want != *got {
+                bail!("{}: parameter indices not dense: {:?}", self.name, indices);
+            }
+        }
+        // binary shapes must match or broadcast from a scalar
+        for n in &self.nodes {
+            if let Node::Binary { a, b, .. } = n {
+                let (na, nb) = (self.numel(*a), self.numel(*b));
+                if na != nb && na != 1 && nb != 1 {
+                    bail!("{}: binary op over {na} vs {nb} elements", self.name);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn param_count(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n, Node::Parameter { .. }))
+            .count()
+    }
+
+    fn execute(
+        &self,
+        args: &[&PjRtBuffer],
+        client: &PjRtClient,
+    ) -> Result<PjRtBuffer> {
+        let mut values: Vec<Option<Arc<Storage>>> = vec![None; self.nodes.len()];
+        for (id, node) in self.nodes.iter().enumerate() {
+            let v: Arc<Storage> = match node {
+                Node::Parameter { index, numel, ty } => {
+                    let arg = args
+                        .get(*index)
+                        .with_context(|| format!("{}: missing arg {index}", self.name))?;
+                    if arg.element_count() != *numel {
+                        bail!(
+                            "{}: parameter {index}: {} elements != declared {numel}",
+                            self.name,
+                            arg.element_count()
+                        );
+                    }
+                    if arg.value().ty() != Some(*ty) {
+                        bail!("{}: parameter {index}: dtype mismatch", self.name);
+                    }
+                    // alias the device memory — no copy per execution
+                    Arc::clone(&arg.data)
+                }
+                Node::ConstantF32 { value } => Arc::new(Storage::F32(vec![*value])),
+                Node::Binary { op, a, b } => {
+                    let va = as_f32(&values, *a, &self.name)?;
+                    let vb = as_f32(&values, *b, &self.name)?;
+                    Arc::new(Storage::F32(apply_binary(*op, va, vb)))
+                }
+                Node::ReduceSum { a } => {
+                    let va = as_f32(&values, *a, &self.name)?;
+                    Arc::new(Storage::F32(vec![va.iter().sum()]))
+                }
+                Node::Mean { a } => {
+                    let va = as_f32(&values, *a, &self.name)?;
+                    let n = va.len().max(1) as f32;
+                    Arc::new(Storage::F32(vec![va.iter().sum::<f32>() / n]))
+                }
+                Node::Tuple { parts } => {
+                    let bufs = parts
+                        .iter()
+                        .map(|&p| {
+                            Ok(PjRtBuffer {
+                                data: values[p]
+                                    .clone()
+                                    .context("tuple part not evaluated")?,
+                                stats: client.stats.clone(),
+                            })
+                        })
+                        .collect::<Result<Vec<_>>>()?;
+                    Arc::new(Storage::Tuple(bufs))
+                }
+            };
+            values[id] = Some(v);
+        }
+        Ok(PjRtBuffer {
+            data: values[self.root].clone().context("root not evaluated")?,
+            stats: client.stats.clone(),
+        })
+    }
+}
+
+fn as_f32<'a>(
+    values: &'a [Option<Arc<Storage>>],
+    id: usize,
+    name: &str,
+) -> Result<&'a [f32]> {
+    match values[id].as_deref() {
+        Some(Storage::F32(v)) => Ok(v),
+        Some(_) => bail!("{name}: arithmetic on non-f32 value"),
+        None => bail!("{name}: operand evaluated out of order"),
+    }
+}
+
+fn apply_binary(op: BinOp, a: &[f32], b: &[f32]) -> Vec<f32> {
+    let f = |x: f32, y: f32| match op {
+        BinOp::Add => x + y,
+        BinOp::Sub => x - y,
+        BinOp::Mul => x * y,
+    };
+    match (a.len(), b.len()) {
+        (1, _) => b.iter().map(|&y| f(a[0], y)).collect(),
+        (_, 1) => a.iter().map(|&x| f(x, b[0])).collect(),
+        _ => a.iter().zip(b).map(|(&x, &y)| f(x, y)).collect(),
+    }
+}
+
+#[derive(Clone, Debug)]
+enum ComputationKind {
+    Graph(Arc<Graph>),
+    /// Parsed HLO text — structurally opaque to the simulator.
+    Opaque(String),
+}
+
+/// A built computation, ready to compile.
+#[derive(Clone, Debug)]
+pub struct XlaComputation {
+    kind: ComputationKind,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { kind: ComputationKind::Opaque(proto.name.clone()) }
+    }
+}
+
+/// Minimal stand-in for the HLO-text loader: verifies the artifact
+/// exists and captures its module name. Execution of such modules is
+/// unsupported in the host simulation (see module docs).
+pub struct HloModuleProto {
+    name: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(Path::new(path))
+            .with_context(|| format!("reading HLO text {path:?}"))?;
+        let name = text
+            .lines()
+            .find_map(|l| l.trim().strip_prefix("HloModule "))
+            .map(|rest| {
+                rest.split(|c: char| c == ',' || c == ' ')
+                    .next()
+                    .unwrap_or("unnamed")
+                    .to_string()
+            })
+            .unwrap_or_else(|| "unnamed".to_string());
+        Ok(HloModuleProto { name })
+    }
+}
+
+/// A compiled executable bound to a client.
+pub struct PjRtLoadedExecutable {
+    graph: Option<Arc<Graph>>,
+    name: String,
+    client: PjRtClient,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn client(&self) -> PjRtClient {
+        self.client.clone()
+    }
+
+    /// Buffer-in/buffer-out execution. Accepts owned or borrowed
+    /// buffers so callers can mix resident state with fresh uploads.
+    /// No host transfer happens here — inputs are already on device
+    /// and the result stays there until downloaded.
+    pub fn execute_b<B: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        args: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let Some(graph) = &self.graph else {
+            bail!(
+                "executable {:?} was compiled from HLO text, which the \
+                 host-sim backend cannot interpret; runtime drives need \
+                 the real PJRT backend",
+                self.name
+            );
+        };
+        if args.len() != graph.param_count() {
+            bail!(
+                "{}: expected {} args, got {}",
+                self.name,
+                graph.param_count(),
+                args.len()
+            );
+        }
+        let refs: Vec<&PjRtBuffer> = args.iter().map(|b| b.borrow()).collect();
+        let out = graph.execute(&refs, &self.client)?;
+        Ok(vec![vec![out]])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// builder
+// ---------------------------------------------------------------------------
+
+struct BuilderState {
+    name: String,
+    nodes: Vec<Node>,
+}
+
+/// Expression-graph builder (subset of xla_rs's `XlaBuilder`).
+#[derive(Clone)]
+pub struct XlaBuilder(Rc<RefCell<BuilderState>>);
+
+/// A node handle tied to its builder.
+#[derive(Clone)]
+pub struct XlaOp {
+    id: usize,
+    builder: XlaBuilder,
+}
+
+impl XlaBuilder {
+    pub fn new(name: &str) -> XlaBuilder {
+        XlaBuilder(Rc::new(RefCell::new(BuilderState {
+            name: name.to_string(),
+            nodes: vec![],
+        })))
+    }
+
+    fn push(&self, node: Node) -> XlaOp {
+        let mut st = self.0.borrow_mut();
+        st.nodes.push(node);
+        XlaOp { id: st.nodes.len() - 1, builder: self.clone() }
+    }
+
+    pub fn parameter_s(
+        &self,
+        index: i64,
+        shape: &Shape,
+        _name: &str,
+    ) -> Result<XlaOp> {
+        if index < 0 {
+            bail!("negative parameter index");
+        }
+        Ok(self.push(Node::Parameter {
+            index: index as usize,
+            numel: shape.numel(),
+            ty: shape.ty,
+        }))
+    }
+
+    pub fn constant_f32(&self, value: f32) -> Result<XlaOp> {
+        Ok(self.push(Node::ConstantF32 { value }))
+    }
+
+    pub fn tuple(&self, parts: &[XlaOp]) -> Result<XlaOp> {
+        for p in parts {
+            if !Rc::ptr_eq(&p.builder.0, &self.0) {
+                bail!("tuple part from a different builder");
+            }
+        }
+        let ids = parts.iter().map(|p| p.id).collect();
+        Ok(self.push(Node::Tuple { parts: ids }))
+    }
+}
+
+impl XlaOp {
+    fn binary(&self, rhs: &XlaOp, op: BinOp) -> Result<XlaOp> {
+        if !Rc::ptr_eq(&self.builder.0, &rhs.builder.0) {
+            bail!("operands from different builders");
+        }
+        Ok(self.builder.push(Node::Binary { op, a: self.id, b: rhs.id }))
+    }
+
+    pub fn reduce_sum(&self) -> Result<XlaOp> {
+        Ok(self.builder.push(Node::ReduceSum { a: self.id }))
+    }
+
+    pub fn mean(&self) -> Result<XlaOp> {
+        Ok(self.builder.push(Node::Mean { a: self.id }))
+    }
+
+    /// Finish the graph with this op as the root.
+    pub fn build(&self) -> Result<XlaComputation> {
+        let st = self.builder.0.borrow();
+        Ok(XlaComputation {
+            kind: ComputationKind::Graph(Arc::new(Graph {
+                name: st.name.clone(),
+                nodes: st.nodes.clone(),
+                root: self.id,
+            })),
+        })
+    }
+}
+
+macro_rules! impl_binop {
+    ($trait:ident, $method:ident, $op:expr) => {
+        impl std::ops::$trait for XlaOp {
+            type Output = Result<XlaOp>;
+            fn $method(self, rhs: XlaOp) -> Result<XlaOp> {
+                self.binary(&rhs, $op)
+            }
+        }
+        impl std::ops::$trait for &XlaOp {
+            type Output = Result<XlaOp>;
+            fn $method(self, rhs: &XlaOp) -> Result<XlaOp> {
+                self.binary(rhs, $op)
+            }
+        }
+        impl std::ops::$trait<&XlaOp> for XlaOp {
+            type Output = Result<XlaOp>;
+            fn $method(self, rhs: &XlaOp) -> Result<XlaOp> {
+                self.binary(rhs, $op)
+            }
+        }
+        impl std::ops::$trait<XlaOp> for &XlaOp {
+            type Output = Result<XlaOp>;
+            fn $method(self, rhs: XlaOp) -> Result<XlaOp> {
+                self.binary(&rhs, $op)
+            }
+        }
+    };
+}
+
+impl_binop!(Add, add, BinOp::Add);
+impl_binop!(Sub, sub, BinOp::Sub);
+impl_binop!(Mul, mul, BinOp::Mul);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scalar_shape() -> Shape {
+        Shape::array::<f32>(vec![1])
+    }
+
+    #[test]
+    fn add_and_download() {
+        let client = PjRtClient::cpu().unwrap();
+        let b = XlaBuilder::new("add");
+        let shape = Shape::array::<f32>(vec![3]);
+        let x = b.parameter_s(0, &shape, "x").unwrap();
+        let y = b.parameter_s(1, &shape, "y").unwrap();
+        let sum = (x + y).unwrap();
+        let comp = b.tuple(&[sum]).unwrap().build().unwrap();
+        let exe = client.compile(&comp).unwrap();
+
+        let bx = client
+            .buffer_from_host_buffer::<f32>(&[1.0, 2.0, 3.0], &[3], None)
+            .unwrap();
+        let by = client
+            .buffer_from_host_buffer::<f32>(&[10.0, 20.0, 30.0], &[3], None)
+            .unwrap();
+        let out = exe.execute_b(&[bx, by]).unwrap();
+        let lit = out[0][0].to_literal_sync().unwrap();
+        let parts = lit.to_tuple().unwrap();
+        assert_eq!(parts[0].to_vec::<f32>().unwrap(), vec![11.0, 22.0, 33.0]);
+    }
+
+    #[test]
+    fn scalar_broadcast_and_reductions() {
+        let client = PjRtClient::cpu().unwrap();
+        let b = XlaBuilder::new("bc");
+        let shape = Shape::array::<f32>(vec![4]);
+        let x = b.parameter_s(0, &shape, "x").unwrap();
+        let s = b.parameter_s(1, &scalar_shape(), "s").unwrap();
+        let scaled = (x.clone() * s).unwrap();
+        let total = scaled.reduce_sum().unwrap();
+        let avg = x.mean().unwrap();
+        let comp = b.tuple(&[total, avg]).unwrap().build().unwrap();
+        let exe = client.compile(&comp).unwrap();
+
+        let bx = client
+            .buffer_from_host_buffer::<f32>(&[1.0, 2.0, 3.0, 4.0], &[4], None)
+            .unwrap();
+        let bs = client.buffer_from_host_buffer::<f32>(&[2.0], &[1], None).unwrap();
+        let out = exe.execute_b(&[bx, bs]).unwrap();
+        let parts = out[0][0].tuple_parts().unwrap();
+        let total = parts[0].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+        let avg = parts[1].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+        assert_eq!(total, vec![20.0]);
+        assert_eq!(avg, vec![2.5]);
+    }
+
+    #[test]
+    fn outputs_feed_back_as_inputs_without_transfer() {
+        // p' = p * 0.5 — iterate device-side, download only at the end.
+        let client = PjRtClient::cpu().unwrap();
+        let b = XlaBuilder::new("halve");
+        let shape = Shape::array::<f32>(vec![2]);
+        let p = b.parameter_s(0, &shape, "p").unwrap();
+        let half = b.constant_f32(0.5).unwrap();
+        let comp = b.tuple(&[(p * half).unwrap()]).unwrap().build().unwrap();
+        let exe = client.compile(&comp).unwrap();
+
+        let mut buf = client
+            .buffer_from_host_buffer::<f32>(&[8.0, 16.0], &[2], None)
+            .unwrap();
+        let before = client.transfer_stats();
+        for _ in 0..3 {
+            let out = exe.execute_b(&[&buf]).unwrap();
+            buf = out[0][0].tuple_parts().unwrap()[0].clone();
+        }
+        let mid = client.transfer_stats();
+        assert_eq!(mid.since(&before), TransferSnapshot::default());
+
+        let v = buf.to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+        assert_eq!(v, vec![1.0, 2.0]);
+        let after = client.transfer_stats();
+        assert_eq!(after.since(&mid).d2h_bytes, 8);
+        assert_eq!(after.since(&mid).d2h_calls, 1);
+    }
+
+    #[test]
+    fn transfer_counters_meter_uploads() {
+        let client = PjRtClient::cpu().unwrap();
+        let before = client.transfer_stats();
+        let _ = client
+            .buffer_from_host_buffer::<f32>(&[0.0; 10], &[10], None)
+            .unwrap();
+        let _ = client.buffer_from_host_buffer::<i32>(&[0; 3], &[3], None).unwrap();
+        let d = client.transfer_stats().since(&before);
+        assert_eq!(d.h2d_bytes, 40 + 12);
+        assert_eq!(d.h2d_calls, 2);
+        assert_eq!(d.d2h_calls, 0);
+    }
+
+    #[test]
+    fn arity_and_shape_validation() {
+        let client = PjRtClient::cpu().unwrap();
+        let b = XlaBuilder::new("id");
+        let shape = Shape::array::<f32>(vec![2]);
+        let p = b.parameter_s(0, &shape, "p").unwrap();
+        let comp = b.tuple(&[p]).unwrap().build().unwrap();
+        let exe = client.compile(&comp).unwrap();
+        // wrong arity
+        assert!(exe.execute_b::<PjRtBuffer>(&[]).is_err());
+        // wrong element count
+        let bad = client.buffer_from_host_buffer::<f32>(&[0.0; 3], &[3], None).unwrap();
+        assert!(exe.execute_b(&[bad]).is_err());
+        // wrong dtype
+        let badt = client.buffer_from_host_buffer::<i32>(&[0; 2], &[2], None).unwrap();
+        assert!(exe.execute_b(&[badt]).is_err());
+    }
+
+    #[test]
+    fn deterministic_execution() {
+        let client = PjRtClient::cpu().unwrap();
+        let b = XlaBuilder::new("det");
+        let shape = Shape::array::<f32>(vec![16]);
+        let x = b.parameter_s(0, &shape, "x").unwrap();
+        let y = (x.clone() * x.clone()).unwrap();
+        let comp = b.tuple(&[(y - x).unwrap()]).unwrap().build().unwrap();
+        let exe = client.compile(&comp).unwrap();
+        let data: Vec<f32> = (0..16).map(|i| (i as f32 * 0.37).sin()).collect();
+        let run = || {
+            let bx = client.buffer_from_host_buffer::<f32>(&data, &[16], None).unwrap();
+            exe.execute_b(&[bx]).unwrap()[0][0]
+                .to_literal_sync()
+                .unwrap()
+                .to_tuple()
+                .unwrap()[0]
+                .to_vec::<f32>()
+                .unwrap()
+        };
+        assert_eq!(run(), run());
+    }
+}

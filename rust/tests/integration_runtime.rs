@@ -20,6 +20,37 @@ macro_rules! require_artifacts {
     };
 }
 
+/// Clone a store's params/masks into owned HostTensors (test-local:
+/// the library itself marshals borrowed slices / resident buffers and
+/// no longer exposes clone-returning helpers).
+fn param_tensors(store: &ParamStore) -> Vec<HostTensor> {
+    store
+        .entries
+        .iter()
+        .map(|e| HostTensor {
+            shape: Shape(e.spec.shape.dims().to_vec()),
+            data: TensorData::F32(e.values.clone()),
+        })
+        .collect()
+}
+
+fn mask_tensors(store: &ParamStore, fwd: bool) -> Vec<HostTensor> {
+    store
+        .entries
+        .iter()
+        .filter_map(|e| {
+            e.masks.as_ref().map(|m| HostTensor {
+                shape: Shape(e.spec.shape.dims().to_vec()),
+                data: TensorData::F32(if fwd {
+                    m.fwd().to_vec()
+                } else {
+                    m.bwd().to_vec()
+                }),
+            })
+        })
+        .collect()
+}
+
 /// Build a full train-step input vector for a model with given masks.
 fn train_inputs(
     man: &Manifest,
@@ -36,13 +67,13 @@ fn train_inputs(
             let n = e.values.len();
             let ka = topkast::sparsity::topk::k_for_density(n, d_fwd);
             let kb = topkast::sparsity::topk::k_for_density(n, d_bwd).max(ka);
-            m.fwd = topkast::sparsity::topk::topk_mask(&e.values, ka);
-            m.bwd = topkast::sparsity::topk::topk_mask(&e.values, kb);
+            m.set_fwd(topkast::sparsity::topk::topk_mask(&e.values, ka));
+            m.set_bwd(topkast::sparsity::topk::topk_mask(&e.values, kb));
         }
     }
-    let mut inputs = store.param_tensors();
-    inputs.extend(store.fwd_mask_tensors());
-    inputs.extend(store.bwd_mask_tensors());
+    let mut inputs = param_tensors(&store);
+    inputs.extend(mask_tensors(&store, true));
+    inputs.extend(mask_tensors(&store, false));
     let slots = model.optimizer.slots();
     for p in &model.params {
         for _ in 0..slots {
@@ -123,7 +154,7 @@ fn train_step_executes_and_respects_backward_mask() {
         let mut changed_inside = 0;
         for j in 0..before.len() {
             if (before[j] - after[j]).abs() > 0.0 {
-                if masks.bwd[j] == 0.0 {
+                if masks.bwd()[j] == 0.0 {
                     changed_outside += 1;
                 } else {
                     changed_inside += 1;
@@ -144,8 +175,8 @@ fn forward_ignores_masked_weights_end_to_end() {
     let (_, store) = train_inputs(&man, "mlp_tiny", 0.2, 0.5, 5);
 
     let build_eval_inputs = |store: &ParamStore| {
-        let mut v = store.param_tensors();
-        v.extend(store.fwd_mask_tensors());
+        let mut v = param_tensors(store);
+        v.extend(mask_tensors(store, true));
         let nb = v.len();
         for io in &model.eval.inputs[nb..nb + 2] {
             let numel = io.shape.numel();
@@ -171,7 +202,7 @@ fn forward_ignores_masked_weights_end_to_end() {
     let mut store2 = store.clone();
     for e in store2.entries.iter_mut() {
         if let Some(m) = &e.masks {
-            let fwd = m.fwd.clone();
+            let fwd = m.fwd().to_vec();
             for (j, v) in e.values.iter_mut().enumerate() {
                 if fwd[j] == 0.0 {
                     *v += 123.0; // huge perturbation outside A
@@ -194,8 +225,8 @@ fn grad_norms_artifact_gives_dense_signal() {
     let model = man.model("mlp_tiny").unwrap();
     let (_, store) = train_inputs(&man, "mlp_tiny", 0.2, 0.5, 7);
 
-    let mut inputs = store.param_tensors();
-    inputs.extend(store.fwd_mask_tensors());
+    let mut inputs = param_tensors(&store);
+    inputs.extend(mask_tensors(&store, true));
     let nb = inputs.len();
     for io in &model.grad_norms.inputs[nb..nb + 2] {
         let numel = io.shape.numel();
@@ -221,7 +252,7 @@ fn grad_norms_artifact_gives_dense_signal() {
         let masks = store.get(&p.name).unwrap().masks.as_ref().unwrap();
         let off_mass: f32 = g
             .iter()
-            .zip(&masks.fwd)
+            .zip(masks.fwd())
             .filter(|(_, &m)| m == 0.0)
             .map(|(&v, _)| v)
             .sum();

@@ -1,0 +1,333 @@
+//! Parity + traffic tests for the device-resident training loop.
+//!
+//! The device path (persistent `PjRtBuffer`s, step-N outputs chained
+//! into step-N+1 inputs, loss-only downloads) must be *bit-identical*
+//! to a host-round-trip reference loop that uploads and downloads
+//! everything each step — same losses, same params, same masks, same
+//! optimiser state — across ≥3 refresh cycles, through the §2.4 async
+//! refresher, and across a checkpoint save/restore mid-run.
+//!
+//! The traffic tests pin the acceptance criterion directly against the
+//! runtime's metered transfer counters: a steady-state step moves only
+//! the batch + step scalars up and the loss scalar down.
+
+use topkast::coordinator::{
+    AsyncMaskRefresher, DataSource, Trainer, TrainerConfig,
+};
+use topkast::runtime::client::TensorRef;
+use topkast::runtime::{Runtime, Synthetic};
+use topkast::sparsity::{
+    update_store_masks, MaskStrategy, ParamStore, TopKast,
+};
+use topkast::util::rng::Pcg64;
+
+fn cfg(steps: usize, refresh_every: usize, seed: u64) -> TrainerConfig {
+    TrainerConfig { steps, refresh_every, seed, ..TrainerConfig::default() }
+}
+
+fn strategy() -> Box<TopKast> {
+    Box::new(TopKast::from_sparsities(0.8, 0.5))
+}
+
+/// The pre-device-resident trainer, reimplemented over the
+/// host-round-trip path (`run_borrowed`): every step uploads
+/// θ/masks/opt and downloads θ'/opt'/loss. The refresh scheduling, RNG
+/// streams, scalar marshalling and data wiring replicate `Trainer`
+/// exactly, so any divergence is the device residency itself.
+struct HostLoop {
+    rt: Runtime,
+    synth: Synthetic,
+    store: ParamStore,
+    opt: Vec<Vec<f32>>,
+    strategy: Box<dyn MaskStrategy>,
+    rng: Pcg64,
+    data: Box<dyn DataSource>,
+    cfg: TrainerConfig,
+    step: usize,
+    refresher: Option<AsyncMaskRefresher>,
+}
+
+impl HostLoop {
+    fn new(synth: &Synthetic, cfg: TrainerConfig) -> Self {
+        let mut rt = Runtime::new().unwrap();
+        synth.install(&mut rt).unwrap();
+        let store = ParamStore::init(&synth.model.params, cfg.seed);
+        let slots = synth.model.optimizer.slots();
+        let opt = synth
+            .model
+            .params
+            .iter()
+            .flat_map(|p| {
+                std::iter::repeat_with(move || vec![0.0f32; p.shape.numel()])
+                    .take(slots)
+            })
+            .collect();
+        let data = synth.data(cfg.seed ^ 0xDA7A);
+        let rng = Pcg64::new(cfg.seed ^ 0x7A5C, 0xEE);
+        HostLoop {
+            rt,
+            synth: synth.clone(),
+            store,
+            opt,
+            strategy: strategy(),
+            rng,
+            data,
+            cfg,
+            step: 0,
+            refresher: None,
+        }
+    }
+
+    /// Mirror `Trainer::enable_async_refresh` + `set_async_blocking`.
+    fn enable_blocking_async(&mut self) {
+        let mut r =
+            AsyncMaskRefresher::spawn(strategy(), self.cfg.seed ^ 0xA57C).unwrap();
+        r.set_blocking(true);
+        self.refresher = Some(r);
+    }
+
+    fn step(&mut self) -> f64 {
+        let due = self.step == 0
+            || (self.step % self.cfg.refresh_every == 0
+                && self.strategy.wants_update(self.step, self.cfg.steps));
+        if let Some(r) = self.refresher.as_mut() {
+            if self.step == 0 {
+                r.request(&self.store, 0, self.cfg.steps);
+                r.wait_install(&mut self.store).unwrap();
+            } else {
+                r.try_install(&mut self.store).unwrap();
+                if due {
+                    r.request(&self.store, self.step, self.cfg.steps);
+                }
+            }
+        } else if due {
+            update_store_masks(
+                self.strategy.as_mut(),
+                &mut self.store,
+                None,
+                &mut self.rng,
+                self.step,
+                self.cfg.steps,
+            )
+            .unwrap();
+        }
+
+        let (x, y) = self.data.next_train();
+        let lr = self.cfg.lr.at(self.step, self.cfg.steps) as f32;
+        let d = self.strategy.densities(self.step, self.cfg.steps).fwd;
+        let scalars: [[f32; 1]; 4] = [
+            [lr],
+            [(self.step + 1) as f32],
+            [self.cfg.reg_scale as f32],
+            [(1.0 / d.max(1e-6)) as f32],
+        ];
+        let mut inputs: Vec<TensorRef<'_>> = vec![];
+        for e in &self.store.entries {
+            inputs.push(TensorRef::F32(&e.values));
+        }
+        for fwd in [true, false] {
+            for e in &self.store.entries {
+                if let Some(m) = &e.masks {
+                    inputs.push(TensorRef::F32(if fwd { m.fwd() } else { m.bwd() }));
+                }
+            }
+        }
+        for slot in &self.opt {
+            inputs.push(TensorRef::F32(slot));
+        }
+        inputs.push(TensorRef::from(&x));
+        inputs.push(TensorRef::from(&y));
+        for s in &scalars {
+            inputs.push(TensorRef::F32(&s[..]));
+        }
+
+        let exe = self.rt.load(&self.synth.model.train).unwrap();
+        let outs = exe.run_borrowed(&inputs).unwrap();
+        drop(inputs);
+        let np = self.synth.model.params.len();
+        let slots = self.synth.model.optimizer.slots();
+        for (i, out) in outs.iter().take(np).enumerate() {
+            let name = self.synth.model.params[i].name.clone();
+            self.store
+                .set_values(&name, out.as_f32().unwrap().to_vec())
+                .unwrap();
+        }
+        for (j, out) in outs[np..np + np * slots].iter().enumerate() {
+            self.opt[j] = out.as_f32().unwrap().to_vec();
+        }
+        let loss = outs.last().unwrap().as_f32().unwrap()[0] as f64;
+        self.step += 1;
+        loss
+    }
+}
+
+/// Bitwise comparison of the full run state.
+fn assert_state_matches(trainer: &mut Trainer, host: &HostLoop, tag: &str) {
+    trainer.sync_host().unwrap();
+    for (a, b) in trainer.store.entries.iter().zip(&host.store.entries) {
+        assert_eq!(a.values, b.values, "{tag}: params diverged on {}", a.spec.name);
+        match (&a.masks, &b.masks) {
+            (Some(ma), Some(mb)) => {
+                assert_eq!(ma.fwd(), mb.fwd(), "{tag}: fwd mask {}", a.spec.name);
+                assert_eq!(ma.bwd(), mb.bwd(), "{tag}: bwd mask {}", a.spec.name);
+            }
+            (None, None) => {}
+            _ => panic!("{tag}: mask presence mismatch"),
+        }
+    }
+    assert_eq!(trainer.opt_slots(), &host.opt[..], "{tag}: optimiser state");
+}
+
+#[test]
+fn device_resident_matches_host_roundtrip_over_refresh_cycles() {
+    for synth in [Synthetic::tiny(), Synthetic::small()] {
+        // 11 steps / refresh every 3 → refreshes at 0, 3, 6, 9 (≥3 cycles)
+        let cfg = cfg(11, 3, 5);
+        let mut trainer = synth.trainer(strategy(), cfg.clone()).unwrap();
+        let mut host = HostLoop::new(&synth, cfg.clone());
+        for s in 0..cfg.steps {
+            let a = trainer.train_step().unwrap();
+            let b = host.step();
+            assert_eq!(a, b, "{}: loss diverged at step {s}", synth.model.name);
+        }
+        assert_state_matches(&mut trainer, &host, &synth.model.name);
+    }
+}
+
+#[test]
+fn parity_holds_through_async_refresher() {
+    let synth = Synthetic::tiny();
+    let cfg = cfg(11, 3, 9);
+    let mut trainer = synth.trainer(strategy(), cfg.clone()).unwrap();
+    trainer.enable_async_refresh(strategy()).unwrap();
+    trainer.set_async_blocking(true).unwrap();
+    let mut host = HostLoop::new(&synth, cfg.clone());
+    host.enable_blocking_async();
+    for s in 0..cfg.steps {
+        let a = trainer.train_step().unwrap();
+        let b = host.step();
+        assert_eq!(a, b, "async loss diverged at step {s}");
+    }
+    assert!(trainer.async_refreshes_applied().unwrap() >= 3);
+    assert_state_matches(&mut trainer, &host, "async");
+}
+
+#[test]
+fn parity_survives_checkpoint_restore_mid_run() {
+    let synth = Synthetic::tiny();
+    let cfg = cfg(12, 3, 13);
+    // run 7 steps on a device-resident trainer, checkpoint mid-run
+    let mut t1 = synth.trainer(strategy(), cfg.clone()).unwrap();
+    for _ in 0..7 {
+        t1.train_step().unwrap();
+    }
+    let ck = t1.capture_checkpoint().unwrap();
+    assert_eq!(ck.step, 7);
+
+    // restore into a fresh trainer (fresh runtime, fresh device state)
+    let mut t2 = synth.trainer(strategy(), cfg.clone()).unwrap();
+    t2.restore_checkpoint(&ck).unwrap();
+
+    // host reference primed with the same restored state: fresh data
+    // stream and refresh RNG, exactly like a restored trainer
+    let mut host = HostLoop::new(&synth, cfg.clone());
+    ck.restore(&mut host.store, &mut host.opt).unwrap();
+    host.step = ck.step;
+
+    for s in 7..cfg.steps {
+        let a = t2.train_step().unwrap();
+        let b = host.step();
+        assert_eq!(a, b, "post-restore loss diverged at step {s}");
+    }
+    assert_state_matches(&mut t2, &host, "restore");
+}
+
+#[test]
+fn steady_state_steps_stream_only_batch_and_loss() {
+    let synth = Synthetic::tiny();
+    // refresh only at step 0 → steps 1.. are pure steady state
+    let mut trainer = synth.trainer(strategy(), cfg(50, 1000, 3)).unwrap();
+    let traffic = trainer.traffic().unwrap();
+    trainer.train_step().unwrap(); // step 0: refresh + mask upload
+    let before = trainer.runtime.transfer_stats();
+    let n = 5;
+    for _ in 0..n {
+        trainer.train_step().unwrap();
+    }
+    let d = trainer.runtime.transfer_stats().since(&before);
+    // exactly: batch (x, y) + 4 scalars up, loss down — per step
+    assert_eq!(d.h2d_bytes, n * traffic.step_h2d_bytes, "h2d bytes/step");
+    assert_eq!(d.h2d_calls, n * 6, "uploads/step: x, y, 4 scalars");
+    assert_eq!(d.d2h_bytes, n * traffic.step_d2h_bytes, "only the loss comes back");
+    assert_eq!(d.d2h_calls, n, "one download per step");
+    // and the streamed bytes are decoupled from the dense model size
+    assert!(traffic.step_h2d_bytes + traffic.step_d2h_bytes < traffic.resident_bytes);
+}
+
+#[test]
+fn host_syncs_happen_only_at_protocol_points() {
+    let synth = Synthetic::tiny();
+    let mut trainer = synth.trainer(strategy(), cfg(50, 4, 3)).unwrap();
+    let traffic = trainer.traffic().unwrap();
+    trainer.train_step().unwrap(); // step 0 (refresh, host still fresh)
+    for _ in 0..3 {
+        trainer.train_step().unwrap(); // steps 1..3: steady state
+    }
+    // step 4 is a refresh: params+opt come down once, masks go up once
+    let before = trainer.runtime.transfer_stats();
+    trainer.train_step().unwrap();
+    let d = trainer.runtime.transfer_stats().since(&before);
+    assert_eq!(
+        d.d2h_bytes,
+        traffic.refresh_d2h_bytes + traffic.step_d2h_bytes,
+        "refresh step downloads θ only (slots stay resident), plus the loss"
+    );
+    assert_eq!(
+        d.h2d_bytes,
+        traffic.refresh_h2d_bytes + traffic.step_h2d_bytes,
+        "refresh step uploads the new masks, plus the batch"
+    );
+
+    // eval streams batches and downloads two scalars per batch — the
+    // resident params/masks are reused, nothing else moves
+    let before = trainer.runtime.transfer_stats();
+    trainer.evaluate().unwrap();
+    let d = trainer.runtime.transfer_stats().since(&before);
+    let eval_batches = 4u64; // synthetic eval stream length
+    assert_eq!(d.h2d_calls, eval_batches * 2, "x and y per eval batch");
+    assert_eq!(d.d2h_bytes, eval_batches * 8, "loss+metric scalars only");
+
+    // checkpoint capture is a full device→host sync — θ plus the
+    // optimiser slots a refresh leaves resident (once; a second
+    // capture without training in between is free)
+    let before = trainer.runtime.transfer_stats();
+    trainer.capture_checkpoint().unwrap();
+    let d = trainer.runtime.transfer_stats().since(&before);
+    assert_eq!(d.d2h_bytes, traffic.checkpoint_d2h_bytes);
+    assert!(traffic.checkpoint_d2h_bytes > traffic.refresh_d2h_bytes);
+    let before = trainer.runtime.transfer_stats();
+    trainer.capture_checkpoint().unwrap();
+    assert_eq!(
+        trainer.runtime.transfer_stats().since(&before).d2h_bytes,
+        0,
+        "host already synced — no second download"
+    );
+}
+
+#[test]
+fn legacy_traffic_baseline_dwarfs_resident_steady_state() {
+    for synth in [Synthetic::tiny(), Synthetic::small()] {
+        let trainer = synth.trainer(strategy(), cfg(1, 1, 0)).unwrap();
+        let t = trainer.traffic().unwrap();
+        assert!(
+            t.legacy_step_bytes > 3 * (t.step_h2d_bytes + t.step_d2h_bytes),
+            "{}: legacy {} vs streamed {}",
+            synth.model.name,
+            t.legacy_step_bytes,
+            t.step_h2d_bytes + t.step_d2h_bytes
+        );
+        // amortised traffic at N=100 is within 2x of the streaming floor
+        let floor = (t.step_h2d_bytes + t.step_d2h_bytes) as f64;
+        assert!(t.amortized_step_bytes(100) < floor + t.legacy_step_bytes as f64);
+    }
+}

@@ -62,8 +62,26 @@ fn prop_store_mask_update_preserves_invariants_for_all_strategies() {
                                 format!("{}: A ⊄ B under {}", e.spec.name, s.name()),
                             )?;
                             ensure(
-                                masks.fwd.iter().all(|&x| x == 0.0 || x == 1.0),
+                                masks.fwd().iter().all(|&x| x == 0.0 || x == 1.0),
                                 "mask values must be exactly 0/1",
+                            )?;
+                            ensure(
+                                masks.fwd_nnz()
+                                    == masks
+                                        .fwd()
+                                        .iter()
+                                        .filter(|&&x| x != 0.0)
+                                        .count(),
+                                "cached fwd nnz drifted from the buffer",
+                            )?;
+                            ensure(
+                                masks.bwd_nnz()
+                                    == masks
+                                        .bwd()
+                                        .iter()
+                                        .filter(|&&x| x != 0.0)
+                                        .count(),
+                                "cached bwd nnz drifted from the buffer",
                             )?;
                         }
                         (None, false) => {}
