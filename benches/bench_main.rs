@@ -63,6 +63,20 @@ fn main() -> Result<()> {
         println!("{}", report.summary_line("step_traffic", sw.elapsed_ms() / 1e3));
     }
 
+    // replicated_step_traffic scales the same synthetic presets across
+    // data-parallel replica counts and *appends* per-replica-count
+    // lines to BENCH_topkast.json (after step_traffic rewrote it).
+    if want("replicated_step_traffic") {
+        let sw = Stopwatch::start();
+        println!("\n######## replicated_step_traffic ########");
+        let report = replicated_step_traffic()?;
+        report.save("replicated_step_traffic")?;
+        println!(
+            "{}",
+            report.summary_line("replicated_step_traffic", sw.elapsed_ms() / 1e3)
+        );
+    }
+
     let manifest = match Manifest::load("artifacts") {
         Ok(m) => m,
         Err(_) => {
@@ -550,6 +564,116 @@ fn step_traffic() -> Result<Report> {
     }
     std::fs::write("BENCH_topkast.json", lines.join("\n") + "\n")?;
     println!("wrote BENCH_topkast.json ({} presets)", lines.len());
+    rep.add(t);
+    Ok(rep)
+}
+
+// ---------------------------------------------------------------------------
+// REPLICATED_STEP_TRAFFIC — data-parallel scaling of the device-resident
+// loop. For each synthetic preset × replica count N ∈ {1, 2, 4}: run the
+// real coordinator (shard → grad → fixed-order all-reduce → replicated
+// apply), measure step percentiles, and record the per-replica h2d
+// shard bytes + all-reduce interconnect bytes from the analytic
+// TrafficModel (cross-checked against the per-device metered counters).
+// One JSON line per (preset, replicas) pair is *appended* to
+// BENCH_topkast.json so replica scaling joins the perf trajectory.
+// ---------------------------------------------------------------------------
+fn replicated_step_traffic() -> Result<Report> {
+    use std::io::Write as _;
+
+    let mut rep = Report::new();
+    let mut t = Table::new(
+        "replicated_step_traffic: data-parallel step cost (topkast 80/50, N=8)",
+        &[
+            "preset",
+            "replicas",
+            "step_ms_p50",
+            "step_ms_p95",
+            "replica_h2d_b/step",
+            "allreduce_b/step",
+            "total_h2d_b/step",
+        ],
+    );
+    let mut lines: Vec<String> = Vec::new();
+    for (preset, synth) in [("tiny", Synthetic::tiny()), ("small", Synthetic::small())]
+    {
+        for replicas in [1usize, 2, 4] {
+            let steps = 48usize;
+            let cfg = TrainerConfig {
+                steps,
+                refresh_every: 8,
+                seed: 7,
+                replicas,
+                ..TrainerConfig::default()
+            };
+            let mut trainer =
+                synth.trainer(Box::new(TopKast::from_sparsities(0.8, 0.5)), cfg)?;
+            let before = trainer.runtime.transfer_stats();
+            for _ in 0..steps {
+                trainer.train_step()?;
+            }
+            let moved = trainer.runtime.transfer_stats().since(&before);
+            let traffic = trainer.traffic()?;
+            let step_ms = &trainer.metrics.step_time;
+            t.row(vec![
+                preset.into(),
+                replicas.to_string(),
+                f3(step_ms.percentile(50.0)),
+                f3(step_ms.percentile(95.0)),
+                traffic.replica_step_h2d_bytes.to_string(),
+                traffic.allreduce_step_bytes.to_string(),
+                traffic.step_h2d_bytes.to_string(),
+            ]);
+            lines.push(
+                Json::obj(vec![
+                    ("scenario", Json::str("replicated_step_traffic")),
+                    ("preset", Json::str(preset)),
+                    ("replicas", Json::num(replicas as f64)),
+                    ("steps", Json::num(steps as f64)),
+                    ("step_ms_p50", Json::num(step_ms.percentile(50.0))),
+                    ("step_ms_p95", Json::num(step_ms.percentile(95.0))),
+                    (
+                        "replica_step_h2d_bytes",
+                        Json::num(traffic.replica_step_h2d_bytes as f64),
+                    ),
+                    (
+                        "allreduce_step_bytes",
+                        Json::num(traffic.allreduce_step_bytes as f64),
+                    ),
+                    ("step_h2d_bytes", Json::num(traffic.step_h2d_bytes as f64)),
+                    ("step_d2h_bytes", Json::num(traffic.step_d2h_bytes as f64)),
+                    (
+                        "resident_bytes_per_replica",
+                        Json::num(traffic.resident_bytes as f64),
+                    ),
+                    (
+                        "measured_h2d_bytes_per_step",
+                        Json::num(moved.h2d_bytes as f64 / steps as f64),
+                    ),
+                    (
+                        "measured_ar_bytes_per_step",
+                        Json::num(moved.ar_bytes as f64 / steps as f64),
+                    ),
+                ])
+                .to_string_compact(),
+            );
+            // the analytic account must not undershoot the metered
+            // counters: every steady step moves exactly the per-replica
+            // shard + scalars per device and the payload per all-reduce
+            assert!(moved.h2d_bytes >= steps as u64 * traffic.step_h2d_bytes);
+            assert!(moved.ar_bytes >= steps as u64 * traffic.allreduce_step_bytes);
+            assert!(moved.d2h_bytes >= steps as u64 * traffic.step_d2h_bytes);
+        }
+    }
+    let mut file = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open("BENCH_topkast.json")?;
+    file.write_all((lines.join("\n") + "\n").as_bytes())?;
+    println!(
+        "appended {} replicated_step_traffic records to BENCH_topkast.json",
+        lines.len()
+    );
     rep.add(t);
     Ok(rep)
 }

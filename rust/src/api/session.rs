@@ -158,7 +158,8 @@ impl<'m> SessionBuilder<'m> {
             .unwrap_or_else(StrategyRegistry::with_builtins);
         let strategy = registry.build_tuned(&resolved.strategy, &resolved.tuning)?;
 
-        let runtime = Runtime::new()?;
+        // one simulated device per data-parallel replica
+        let runtime = Runtime::with_devices(resolved.trainer.replicas)?;
         let data = source_for(&model, resolved.trainer.seed ^ 0xDA7A)?;
         let log_every = resolved.trainer.log_every;
         let mut trainer =

@@ -53,6 +53,10 @@ pub struct RunSpec {
     pub checkpoint: Option<String>,
     /// FLOPs-model multiplier for longer-trained runs (Fig 2a "2x").
     pub train_multiplier: Option<f64>,
+    /// Data-parallel replica count over the simulated device set
+    /// (default 1; see `runtime::replicated`). Replicated runs are
+    /// bit-identical to `replicas = 1` by protocol design.
+    pub replicas: Option<usize>,
 }
 
 const KNOWN_KEYS: &[&str] = &[
@@ -71,6 +75,7 @@ const KNOWN_KEYS: &[&str] = &[
     "async_refresh",
     "checkpoint",
     "train_multiplier",
+    "replicas",
 ];
 
 impl RunSpec {
@@ -170,6 +175,11 @@ impl RunSpec {
         self
     }
 
+    pub fn replicas(mut self, n: usize) -> Self {
+        self.replicas = Some(n);
+        self
+    }
+
     // -- layering ----------------------------------------------------------
 
     /// Layer `over` on top of `self`: every field set in `over` wins.
@@ -195,6 +205,7 @@ impl RunSpec {
             async_refresh: over.async_refresh.or(self.async_refresh),
             checkpoint: over.checkpoint.or(self.checkpoint),
             train_multiplier: over.train_multiplier.or(self.train_multiplier),
+            replicas: over.replicas.or(self.replicas),
         }
     }
 
@@ -270,6 +281,9 @@ impl RunSpec {
         if let Some(v) = j.opt("train_multiplier") {
             s.train_multiplier = Some(v.as_f64()?);
         }
+        if let Some(v) = j.opt("replicas") {
+            s.replicas = Some(v.as_usize()?);
+        }
         Ok(s)
     }
 
@@ -329,6 +343,9 @@ impl RunSpec {
         if let Some(v) = self.train_multiplier {
             pairs.push(("train_multiplier", Json::num(v)));
         }
+        if let Some(v) = self.replicas {
+            pairs.push(("replicas", Json::num(v as f64)));
+        }
         Json::obj(pairs)
     }
 
@@ -373,6 +390,7 @@ impl RunSpec {
             eval_batches: self.eval_batches.unwrap_or(d.eval_batches),
             seed: self.seed.unwrap_or(d.seed),
             log_every: self.log_every.unwrap_or(d.log_every).max(1),
+            replicas: self.replicas.unwrap_or(d.replicas).max(1),
         };
         Ok(ResolvedRun {
             model,
@@ -616,9 +634,11 @@ mod tests {
             .stop_exploration(120)
             .async_refresh(true)
             .checkpoint("out.ckpt")
-            .train_multiplier(2.0);
+            .train_multiplier(2.0)
+            .replicas(4);
         let text = spec.to_json().to_string_pretty();
         let back = RunSpec::from_json(&text).unwrap();
+        assert_eq!(back.replicas, Some(4));
         assert_eq!(back.model.as_deref(), Some("lm_tiny"));
         assert_eq!(back.strategy.as_deref(), Some("topkast:0.8,0.5"));
         assert_eq!(back.steps, Some(500));
@@ -654,6 +674,24 @@ mod tests {
             }
             other => panic!("schedule lost through json: {other:?}"),
         }
+    }
+
+    #[test]
+    fn replicas_default_to_one_and_floor_at_one() {
+        let r = RunSpec::run("m", "dense", 10).resolve("mlp").unwrap();
+        assert_eq!(r.trainer.replicas, 1, "unset → single device");
+        let r2 = RunSpec::run("m", "dense", 10)
+            .replicas(4)
+            .resolve("mlp")
+            .unwrap();
+        assert_eq!(r2.trainer.replicas, 4);
+        let r3 = RunSpec::run("m", "dense", 10)
+            .replicas(0)
+            .resolve("mlp")
+            .unwrap();
+        assert_eq!(r3.trainer.replicas, 1, "0 clamps to 1");
+        let j = RunSpec::from_json(r#"{"replicas": 2}"#).unwrap();
+        assert_eq!(j.replicas, Some(2));
     }
 
     #[test]

@@ -17,6 +17,12 @@
 //! `grad_norms` artifact (against resident buffers) at its update
 //! steps, and weight-rewriting strategies (SET/RigL) cost one extra
 //! params upload per refresh.
+//!
+//! With `replicas > 1` the resident state is one chain per
+//! data-parallel replica (`runtime::replicated`): batches shard across
+//! devices, gradients all-reduce in canonical order, and every refresh
+//! decision above is made once on the host and broadcast to all
+//! replicas.
 
 use std::collections::BTreeMap;
 
@@ -28,7 +34,8 @@ use super::metrics::{EvalResult, RunMetrics};
 use super::observer::{EndEvent, EvalEvent, RefreshEvent, StepEvent, TrainObserver};
 use super::schedule::LrSchedule;
 use crate::runtime::{
-    client::TensorRef, DeviceState, ModelEntry, Runtime, TrafficModel,
+    client::TensorRef, DeviceState, ModelEntry, ReplicatedState, Runtime,
+    TrafficModel,
 };
 use crate::sparsity::{update_store_masks, MaskStrategy, ParamStore};
 use crate::tensor::{HostTensor, TensorData};
@@ -57,6 +64,9 @@ pub struct TrainerConfig {
     pub eval_batches: usize,
     pub seed: u64,
     pub log_every: usize,
+    /// Data-parallel replica count over the simulated device set
+    /// (1 = the plain single-device path; see `runtime::replicated`).
+    pub replicas: usize,
 }
 
 impl Default for TrainerConfig {
@@ -71,6 +81,65 @@ impl Default for TrainerConfig {
             eval_batches: 8,
             seed: 0,
             log_every: 50,
+            replicas: 1,
+        }
+    }
+}
+
+/// The resident training state behind a trainer: one device chain, or
+/// one per data-parallel replica. The single-replica arm is exactly the
+/// pre-replication path — `replicas: 1` runs byte-for-byte the same
+/// code it always did.
+enum Resident {
+    Single(DeviceState),
+    Replicated(ReplicatedState),
+}
+
+impl Resident {
+    fn sync_params_to_host(&self, store: &mut ParamStore) -> Result<()> {
+        match self {
+            Resident::Single(d) => d.sync_params_to_host(store),
+            Resident::Replicated(r) => r.sync_params_to_host(store),
+        }
+    }
+
+    fn sync_opt_to_host(&self, opt: &mut [Vec<f32>]) -> Result<()> {
+        match self {
+            Resident::Single(d) => d.sync_opt_to_host(opt),
+            Resident::Replicated(r) => r.sync_opt_to_host(opt),
+        }
+    }
+
+    fn upload_params(&mut self, store: &ParamStore) -> Result<()> {
+        match self {
+            Resident::Single(d) => d.upload_params(store),
+            Resident::Replicated(r) => r.upload_params(store),
+        }
+    }
+
+    fn upload_masks(&mut self, store: &ParamStore) -> Result<()> {
+        match self {
+            Resident::Single(d) => d.upload_masks(store),
+            Resident::Replicated(r) => r.upload_masks(store),
+        }
+    }
+
+    fn upload_opt(&mut self, opt: &[Vec<f32>]) -> Result<()> {
+        match self {
+            Resident::Single(d) => d.upload_opt(opt),
+            Resident::Replicated(r) => r.upload_opt(opt),
+        }
+    }
+
+    fn run_with_fwd_masks(
+        &self,
+        exe: &crate::runtime::Executable,
+        x: TensorRef<'_>,
+        y: TensorRef<'_>,
+    ) -> Result<Vec<HostTensor>> {
+        match self {
+            Resident::Single(d) => d.run_with_fwd_masks(exe, x, y),
+            Resident::Replicated(r) => r.run_with_fwd_masks(exe, x, y),
         }
     }
 }
@@ -82,8 +151,9 @@ pub struct Trainer {
     pub strategy: Box<dyn MaskStrategy>,
     pub cfg: TrainerConfig,
     pub metrics: RunMetrics,
-    /// Device-resident θ/masks/opt (see `runtime::device_state`).
-    device: DeviceState,
+    /// Device-resident θ/masks/opt — one chain, or one per replica
+    /// (see `runtime::device_state` / `runtime::replicated`).
+    device: Resident,
     /// True when the host store's weight values mirror the device
     /// buffers. Cleared by every train step; restored at sync points
     /// (mask refresh needs only this half).
@@ -115,10 +185,21 @@ impl Trainer {
         data: Box<dyn DataSource>,
         cfg: TrainerConfig,
     ) -> Result<Self> {
-        // compile all three artifacts up front (cached)
+        // compile all artifacts up front (cached)
         runtime.load(&model.train)?;
         runtime.load(&model.eval)?;
         runtime.load(&model.grad_norms)?;
+        if cfg.replicas > 1 {
+            let rep = model.replication.as_ref().with_context(|| {
+                format!(
+                    "model {}: replicas = {} but the model carries no \
+                     replication artifacts (grad/apply)",
+                    model.name, cfg.replicas
+                )
+            })?;
+            runtime.load(&rep.grad)?;
+            runtime.load(&rep.apply)?;
+        }
 
         let store = ParamStore::init(&model.params, cfg.seed);
         let slots = model.optimizer.slots();
@@ -128,8 +209,22 @@ impl Trainer {
                 opt.push(vec![0.0f32; p.shape.numel()]);
             }
         }
-        let device =
-            DeviceState::from_host(runtime.client().clone(), &model, &store, &opt)?;
+        let device = if cfg.replicas > 1 {
+            Resident::Replicated(ReplicatedState::from_host(
+                runtime.client().clone(),
+                &model,
+                &store,
+                &opt,
+                cfg.replicas,
+            )?)
+        } else {
+            Resident::Single(DeviceState::from_host(
+                runtime.client().clone(),
+                &model,
+                &store,
+                &opt,
+            )?)
+        };
         let rng = Pcg64::new(cfg.seed ^ 0x7A5C, 0xEE);
         Ok(Trainer {
             runtime,
@@ -160,6 +255,25 @@ impl Trainer {
     /// (refresh / checkpoint / end of run).
     pub fn opt_slots(&self) -> &[Vec<f32>] {
         &self.opt
+    }
+
+    /// Number of data-parallel replicas this trainer drives (1 = the
+    /// plain single-device path).
+    pub fn replica_count(&self) -> usize {
+        match &self.device {
+            Resident::Single(_) => 1,
+            Resident::Replicated(r) => r.replica_count(),
+        }
+    }
+
+    /// Prove the replica-lockstep invariant (replicated runs only; a
+    /// single-device trainer is trivially in lockstep). Downloads every
+    /// replica's resident state — diagnostics/tests, not the hot path.
+    pub fn verify_replica_lockstep(&self) -> Result<()> {
+        match &self.device {
+            Resident::Single(_) => Ok(()),
+            Resident::Replicated(r) => r.verify_lockstep(),
+        }
     }
 
     /// Whether the host store currently mirrors the device state.
@@ -205,12 +319,13 @@ impl Trainer {
     /// replaced) — the communication model behind the Table-6
     /// discussion and the bench `step_traffic` scenario.
     pub fn traffic(&self) -> Result<TrafficModel> {
-        TrafficModel::of(
+        TrafficModel::replicated(
             &self.model,
             self.strategy.mutates_weights(),
             // probe at a representative update step (RigL declares false
             // only for step 0 / init)
             self.strategy.needs_grad_norms(1),
+            self.replica_count(),
         )
     }
 
@@ -447,13 +562,33 @@ impl Trainer {
             [self.inv_d()],
         ];
 
-        let exe = self.runtime.load(&self.model.train)?;
-        let loss = self.device.train_step(
-            exe,
-            TensorRef::from(&x),
-            TensorRef::from(&y),
-            &scalars,
-        )?;
+        let loss = match &mut self.device {
+            Resident::Single(device) => {
+                let exe = self.runtime.load(&self.model.train)?;
+                device.train_step(
+                    exe,
+                    TensorRef::from(&x),
+                    TensorRef::from(&y),
+                    &scalars,
+                )?
+            }
+            Resident::Replicated(replicas) => {
+                let rep = self
+                    .model
+                    .replication
+                    .as_ref()
+                    .expect("validated in Trainer::new");
+                let grad = self.runtime.get(&rep.grad)?;
+                let apply = self.runtime.get(&rep.apply)?;
+                replicas.train_step(
+                    grad,
+                    apply,
+                    TensorRef::from(&x),
+                    TensorRef::from(&y),
+                    &scalars,
+                )?
+            }
+        };
         self.params_synced = false;
         self.opt_synced = false;
 

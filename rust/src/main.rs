@@ -80,6 +80,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
         .opt("eval-every", "0", "evaluate every N steps (0 = only at end)")
         .opt("eval-batches", "8", "eval batches per evaluation")
         .opt("seed", "0", "seed for init/data/masks")
+        .opt("replicas", "1", "data-parallel replicas on the simulated device set")
         .opt("checkpoint", "", "path to write the final checkpoint")
         .opt("metrics-jsonl", "", "stream step/eval metrics to this JSONL file")
         .opt(
@@ -170,6 +171,9 @@ fn train_spec(p: &Parsed, explicit_only: bool) -> Result<RunSpec> {
     }
     if give("seed") {
         s.seed = Some(p.get_u64("seed")?);
+    }
+    if give("replicas") {
+        s.replicas = Some(p.get_usize("replicas")?);
     }
     if give("stop-exploration-at") {
         let stop = p.get("stop-exploration-at").parse::<i64>()?;

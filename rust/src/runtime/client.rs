@@ -79,12 +79,24 @@ pub enum DeviceInput<'a> {
 
 impl Runtime {
     pub fn new() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Self::with_devices(1)
+    }
+
+    /// A runtime over a simulated device set of the given size (one
+    /// device per data-parallel replica; see `runtime::replicated`).
+    pub fn with_devices(devices: usize) -> Result<Self> {
+        let client = xla::PjRtClient::cpu_with_devices(devices.max(1))
+            .context("creating PJRT CPU client")?;
         Ok(Runtime { client, cache: BTreeMap::new() })
     }
 
     pub fn platform(&self) -> String {
         self.client.platform_name()
+    }
+
+    /// Number of addressable devices behind this runtime.
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
     }
 
     /// The underlying client (device-state subsystems hold a clone so
@@ -93,9 +105,15 @@ impl Runtime {
         &self.client
     }
 
-    /// Cumulative host↔device traffic through this runtime's client.
+    /// Cumulative host↔device traffic through this runtime's client,
+    /// aggregated over every device.
     pub fn transfer_stats(&self) -> xla::TransferSnapshot {
         self.client.transfer_stats()
+    }
+
+    /// Traffic through one device only (per-replica accounting).
+    pub fn device_transfer_stats(&self, device: usize) -> Result<xla::TransferSnapshot> {
+        self.client.device_transfer_stats(device)
     }
 
     /// Load + compile an artifact (cached by path).
@@ -106,6 +124,17 @@ impl Runtime {
             self.cache.insert(key.clone(), exe);
         }
         Ok(&self.cache[&key])
+    }
+
+    /// Fetch an already-loaded executable without taking `&mut self` —
+    /// lets a caller hold several executables at once (the replicated
+    /// step needs grad + apply together). Artifacts are loaded once at
+    /// trainer construction, so a miss here is a wiring bug.
+    pub fn get(&self, spec: &ArtifactSpec) -> Result<&Executable> {
+        let key = spec.file.to_string_lossy().to_string();
+        self.cache.get(&key).with_context(|| {
+            format!("artifact {key:?} not loaded (Runtime::load it first)")
+        })
     }
 
     /// Seed the executable cache directly (synthetic in-memory models;
@@ -200,6 +229,17 @@ impl Executable {
         &self,
         inputs: &[DeviceInput<'_>],
     ) -> Result<Vec<xla::PjRtBuffer>> {
+        self.run_device_on(inputs, 0)
+    }
+
+    /// [`Executable::run_device`] targeting a specific device: streamed
+    /// inputs upload to `device`, and every resident input must already
+    /// live there (one replica's state never silently migrates).
+    pub fn run_device_on(
+        &self,
+        inputs: &[DeviceInput<'_>],
+        device: usize,
+    ) -> Result<Vec<xla::PjRtBuffer>> {
         if inputs.len() != self.spec.inputs.len() {
             bail!(
                 "{:?}: expected {} inputs, got {}",
@@ -237,6 +277,14 @@ impl Executable {
                             io.dtype
                         );
                     }
+                    if buf.device() != device {
+                        bail!(
+                            "input {:?}: resident buffer on device {}, \
+                             execution targets device {device}",
+                            io.name,
+                            buf.device()
+                        );
+                    }
                     uploads.push(None);
                 }
                 DeviceInput::Host(t) => {
@@ -250,9 +298,17 @@ impl Executable {
                     }
                     let buf = match (t, io.dtype) {
                         (TensorRef::F32(v), Dtype::F32) => client
-                            .buffer_from_host_buffer::<f32>(v, io.shape.dims(), None)?,
+                            .buffer_from_host_buffer::<f32>(
+                                v,
+                                io.shape.dims(),
+                                Some(device),
+                            )?,
                         (TensorRef::I32(v), Dtype::I32) => client
-                            .buffer_from_host_buffer::<i32>(v, io.shape.dims(), None)?,
+                            .buffer_from_host_buffer::<i32>(
+                                v,
+                                io.shape.dims(),
+                                Some(device),
+                            )?,
                         (d, want) => bail!(
                             "input {:?}: dtype mismatch: host tensor is {}, \
                              artifact wants {want:?}",

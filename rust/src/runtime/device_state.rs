@@ -49,9 +49,13 @@ use crate::sparsity::ParamStore;
 use crate::tensor::HostTensor;
 use crate::xla;
 
-/// Persistent device buffers for one model's training state.
+/// Persistent device buffers for one model's training state, pinned to
+/// one simulated device (a data-parallel run holds one per replica —
+/// see `runtime::replicated`).
 pub struct DeviceState {
     client: xla::PjRtClient,
+    /// The device every buffer of this state lives on.
+    device: usize,
     layout: TrainLayout,
     eval_layout: EvalLayout,
     /// Row-major dims per param (upload shapes), spec order.
@@ -65,13 +69,32 @@ pub struct DeviceState {
 }
 
 impl DeviceState {
-    /// Build the resident state and upload the initial host state.
+    /// Build the resident state on device 0 and upload the initial
+    /// host state.
     pub fn from_host(
         client: xla::PjRtClient,
         model: &ModelEntry,
         store: &ParamStore,
         opt: &[Vec<f32>],
     ) -> Result<DeviceState> {
+        Self::from_host_on(client, model, store, opt, 0)
+    }
+
+    /// Build the resident state on a specific device (one replica of a
+    /// data-parallel set).
+    pub fn from_host_on(
+        client: xla::PjRtClient,
+        model: &ModelEntry,
+        store: &ParamStore,
+        opt: &[Vec<f32>],
+        device: usize,
+    ) -> Result<DeviceState> {
+        if device >= client.device_count() {
+            bail!(
+                "device {device} out of range: client has {} simulated device(s)",
+                client.device_count()
+            );
+        }
         let layout = model.train_layout()?;
         let eval_layout = model.eval_layout(&model.eval)?;
         // grad_norms shares the eval input convention; validate now so
@@ -91,6 +114,7 @@ impl DeviceState {
             .collect();
         let mut state = DeviceState {
             client,
+            device,
             layout,
             eval_layout,
             param_dims,
@@ -106,8 +130,13 @@ impl DeviceState {
         Ok(state)
     }
 
+    /// The simulated device this state is resident on.
+    pub fn device(&self) -> usize {
+        self.device
+    }
+
     fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        self.client.buffer_from_host_buffer::<f32>(data, dims, None)
+        self.client.buffer_from_host_buffer::<f32>(data, dims, Some(self.device))
     }
 
     /// Push the host store's dense values down (init, restore, or after
@@ -241,7 +270,7 @@ impl DeviceState {
         for s in scalars {
             inputs.push(DeviceInput::Host(TensorRef::F32(&s[..])));
         }
-        let outs = exe.run_device(&inputs)?;
+        let outs = exe.run_device_on(&inputs, self.device)?;
         drop(inputs);
         // chain: step-N outputs become step-N+1 resident inputs
         self.params = outs[self.layout.out_params.clone()].to_vec();
@@ -250,6 +279,76 @@ impl DeviceState {
         let loss_io = &exe.spec.outputs[self.layout.out_loss];
         let loss = exe.download(loss_buf, loss_io)?.as_f32()?[0] as f64;
         Ok(loss)
+    }
+
+    /// Replicated-apply step: like [`DeviceState::train_step`], but the
+    /// batch input positions carry the all-reduced gradient payload
+    /// (resident buffers from `PjRtClient::all_reduce_sum`) instead of
+    /// a host batch. Outputs chain into the resident state as usual;
+    /// the loss buffer is returned *undownloaded* so a replicated
+    /// caller pays the d2h transfer on one replica only.
+    pub fn apply_step(
+        &mut self,
+        exe: &Executable,
+        payload: &[xla::PjRtBuffer],
+        scalars: &[[f32; 1]],
+    ) -> Result<xla::PjRtBuffer> {
+        if payload.len() != self.layout.batch.len() {
+            bail!(
+                "expected {} payload buffers (one per batch slot), got {}",
+                self.layout.batch.len(),
+                payload.len()
+            );
+        }
+        if scalars.len() != self.layout.scalars.len() {
+            bail!(
+                "expected {} step scalars, got {}",
+                self.layout.scalars.len(),
+                scalars.len()
+            );
+        }
+        let mut inputs: Vec<DeviceInput<'_>> =
+            Vec::with_capacity(self.layout.scalars.end);
+        for buf in &self.params {
+            inputs.push(DeviceInput::Resident(buf));
+        }
+        for buf in self.masks_fwd.iter().chain(&self.masks_bwd) {
+            inputs.push(DeviceInput::Resident(buf));
+        }
+        for buf in &self.opt {
+            inputs.push(DeviceInput::Resident(buf));
+        }
+        for buf in payload {
+            inputs.push(DeviceInput::Resident(buf));
+        }
+        for s in scalars {
+            inputs.push(DeviceInput::Host(TensorRef::F32(&s[..])));
+        }
+        let outs = exe.run_device_on(&inputs, self.device)?;
+        drop(inputs);
+        self.params = outs[self.layout.out_params.clone()].to_vec();
+        self.opt = outs[self.layout.out_opt.clone()].to_vec();
+        Ok(outs[self.layout.out_loss].clone())
+    }
+
+    /// Download the resident params, masks and optimiser slots as raw
+    /// vectors. Diagnostics/tests only (metered d2h traffic!) — the
+    /// replica-parity suite uses it to prove lockstep across devices.
+    #[allow(clippy::type_complexity)]
+    pub fn dump_resident(
+        &self,
+    ) -> Result<(Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<Vec<f32>>)> {
+        let dl = |bufs: &[xla::PjRtBuffer]| -> Result<Vec<Vec<f32>>> {
+            bufs.iter()
+                .map(|b| b.to_literal_sync()?.to_vec::<f32>())
+                .collect()
+        };
+        Ok((
+            dl(&self.params)?,
+            dl(&self.masks_fwd)?,
+            dl(&self.masks_bwd)?,
+            dl(&self.opt)?,
+        ))
     }
 
     /// Run an eval-convention artifact (eval or grad_norms) against the
@@ -273,7 +372,7 @@ impl DeviceState {
         }
         inputs.push(DeviceInput::Host(x));
         inputs.push(DeviceInput::Host(y));
-        let outs = exe.run_device(&inputs)?;
+        let outs = exe.run_device_on(&inputs, self.device)?;
         outs.iter()
             .zip(&exe.spec.outputs)
             .map(|(buf, io)| exe.download(buf, io))
@@ -287,19 +386,35 @@ impl DeviceState {
 /// (which assumed every tensor re-uploaded every step).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TrafficModel {
-    /// Bytes parked on the device between refreshes (θ + opt + masks).
+    /// Data-parallel replica count the account is for (1 = the plain
+    /// single-device protocol).
+    pub replicas: u64,
+    /// Bytes parked on *each* device between refreshes (θ + opt +
+    /// masks); the replica set holds `replicas ×` this in total.
     pub resident_bytes: u64,
-    /// Host→device bytes per steady-state step (batch + step scalars).
+    /// Host→device bytes per steady-state step, total across replicas
+    /// (each replica streams its batch shard + its own step scalars).
     pub step_h2d_bytes: u64,
-    /// Device→host bytes per steady-state step (the loss scalar).
+    /// Host→device bytes per steady-state step through *one* replica's
+    /// link (its shard + the step scalars). Equals `step_h2d_bytes`
+    /// when `replicas == 1`.
+    pub replica_step_h2d_bytes: u64,
+    /// Interconnect bytes per step for the fixed-order gradient
+    /// all-reduce, summed over the replica set (0 when `replicas == 1`
+    /// — a lone participant moves nothing).
+    pub allreduce_step_bytes: u64,
+    /// Device→host bytes per steady-state step (the loss scalar,
+    /// downloaded from replica 0 only).
     pub step_d2h_bytes: u64,
     /// Device→host bytes at a mask refresh: the dense θ for host
     /// Top-K (slots stay resident), plus the grad_norms outputs for
-    /// gradient-guided strategies.
+    /// gradient-guided strategies. Replica 0 serves the sync, so this
+    /// does not scale with the replica count.
     pub refresh_d2h_bytes: u64,
-    /// Host→device bytes at a mask refresh (new masks; plus a
-    /// grad_norms batch and/or a params re-upload for strategies that
-    /// need them — SET/RigL).
+    /// Host→device bytes at a mask refresh (new masks — broadcast to
+    /// every replica so the A/B sets never diverge; plus a grad_norms
+    /// batch on replica 0 and/or a per-replica params re-upload for
+    /// strategies that need them — SET/RigL).
     pub refresh_h2d_bytes: u64,
     /// Device→host bytes of a full sync (checkpoint capture / end of
     /// run): θ + optimiser slots.
@@ -321,6 +436,22 @@ impl TrafficModel {
         strategy_rewrites_weights: bool,
         strategy_uses_grad_norms: bool,
     ) -> Result<Self> {
+        Self::replicated(model, strategy_rewrites_weights, strategy_uses_grad_norms, 1)
+    }
+
+    /// The account for an N-replica data-parallel run (`replicas = 1`
+    /// reduces exactly to [`TrafficModel::of`]). Per-replica steady
+    /// state streams one batch shard + the step scalars up; the
+    /// gradient payload (the replication grad artifact's outputs)
+    /// crosses the interconnect once per replica per step; refresh
+    /// broadcasts the masks to every replica while θ downloads and the
+    /// grad_norms batch stay on replica 0.
+    pub fn replicated(
+        model: &ModelEntry,
+        strategy_rewrites_weights: bool,
+        strategy_uses_grad_norms: bool,
+        replicas: usize,
+    ) -> Result<Self> {
         let layout = model.train_layout()?;
         let p_bytes: u64 =
             model.params.iter().map(|p| 4 * p.shape.numel() as u64).sum();
@@ -338,14 +469,50 @@ impl TrafficModel {
         let loss_bytes = 4u64;
         let grad_norms_h2d = if strategy_uses_grad_norms { batch_bytes } else { 0 };
         let grad_norms_d2h = if strategy_uses_grad_norms { m_bytes } else { 0 };
+        let r = replicas.max(1) as u64;
+        let (shard_bytes, allreduce_step_bytes) = if replicas > 1 {
+            let rep = model.replication.as_ref().with_context(|| {
+                format!(
+                    "model {}: traffic account for {replicas} replicas needs \
+                     replication artifacts (grad/apply)",
+                    model.name
+                )
+            })?;
+            if rep.replicas != replicas {
+                bail!(
+                    "model {}: replication artifacts were built for {} \
+                     replicas, account requested for {replicas}",
+                    model.name,
+                    rep.replicas
+                );
+            }
+            let shard: u64 = rep
+                .grad
+                .inputs
+                .iter()
+                .map(|io| 4 * io.shape.numel() as u64)
+                .sum();
+            let payload: u64 = rep
+                .grad
+                .outputs
+                .iter()
+                .map(|io| 4 * io.shape.numel() as u64)
+                .sum();
+            (shard, r * payload)
+        } else {
+            (batch_bytes, 0)
+        };
         Ok(TrafficModel {
+            replicas: r,
             resident_bytes: p_bytes * (1 + slots) + 2 * m_bytes,
-            step_h2d_bytes: batch_bytes + scalar_bytes,
+            step_h2d_bytes: r * (shard_bytes + scalar_bytes),
+            replica_step_h2d_bytes: shard_bytes + scalar_bytes,
+            allreduce_step_bytes,
             step_d2h_bytes: loss_bytes,
             refresh_d2h_bytes: p_bytes + grad_norms_d2h,
-            refresh_h2d_bytes: 2 * m_bytes
+            refresh_h2d_bytes: r * 2 * m_bytes
                 + grad_norms_h2d
-                + if strategy_rewrites_weights { p_bytes } else { 0 },
+                + if strategy_rewrites_weights { r * p_bytes } else { 0 },
             checkpoint_d2h_bytes: p_bytes * (1 + slots),
             legacy_step_bytes: p_bytes * (1 + slots) + 2 * m_bytes
                 + batch_bytes
@@ -398,6 +565,33 @@ mod tests {
         // refresh downloads θ only; a checkpoint additionally syncs
         // the optimiser slots
         assert!(t.checkpoint_d2h_bytes > t.refresh_d2h_bytes);
+    }
+
+    #[test]
+    fn replicated_traffic_keys_accounting_by_replica() {
+        let synth = Synthetic::tiny();
+        let base = TrafficModel::of(&synth.model, false, false).unwrap();
+        assert_eq!(base.replicas, 1);
+        assert_eq!(base.replica_step_h2d_bytes, base.step_h2d_bytes);
+        assert_eq!(base.allreduce_step_bytes, 0, "one replica: no interconnect");
+        // without replication artifacts, an N-replica account is a
+        // clear error, not a silently-wrong single-device number
+        assert!(TrafficModel::replicated(&synth.model, false, false, 2).is_err());
+
+        let replicated = synth.replicated(4).unwrap();
+        let t = TrafficModel::replicated(&replicated.model, false, false, 4).unwrap();
+        assert_eq!(t.replicas, 4);
+        assert_eq!(t.step_h2d_bytes, 4 * t.replica_step_h2d_bytes);
+        // each replica uploads its shard: shard + scalars < full batch + scalars
+        assert!(t.replica_step_h2d_bytes < base.step_h2d_bytes);
+        // payload = the grad outputs (two scalars), once per replica
+        assert_eq!(t.allreduce_step_bytes, 4 * 2 * 4);
+        // refresh: masks broadcast to all replicas, θ down from one
+        assert_eq!(t.refresh_h2d_bytes, 4 * base.refresh_h2d_bytes);
+        assert_eq!(t.refresh_d2h_bytes, base.refresh_d2h_bytes);
+        assert_eq!(t.checkpoint_d2h_bytes, base.checkpoint_d2h_bytes);
+        // mismatched replica count is rejected
+        assert!(TrafficModel::replicated(&replicated.model, false, false, 2).is_err());
     }
 
     #[test]

@@ -78,6 +78,24 @@ impl Optimizer {
     }
 }
 
+/// Artifacts for data-parallel replication (see `runtime::replicated`):
+/// a per-replica partial-gradient artifact over one batch shard, and a
+/// replicated apply artifact that follows the train input convention
+/// with the batch positions carrying the all-reduced gradient payload
+/// instead of raw examples. Real manifests do not ship these yet; the
+/// synthetic models build them on demand for a concrete replica count.
+#[derive(Clone, Debug)]
+pub struct ReplicationSpec {
+    /// The replica count the shard-sized grad artifact was built for.
+    pub replicas: usize,
+    /// Per-replica: one batch shard in, the gradient payload out (the
+    /// outputs are exactly what the step all-reduces).
+    pub grad: ArtifactSpec,
+    /// Replicated on every device: train-convention inputs with the
+    /// batch slots carrying the reduced payload; train outputs.
+    pub apply: ArtifactSpec,
+}
+
 /// Everything the coordinator needs to drive one model configuration.
 #[derive(Clone, Debug)]
 pub struct ModelEntry {
@@ -88,6 +106,8 @@ pub struct ModelEntry {
     pub train: ArtifactSpec,
     pub eval: ArtifactSpec,
     pub grad_norms: ArtifactSpec,
+    /// Data-parallel artifacts, when the model carries them.
+    pub replication: Option<ReplicationSpec>,
     /// Raw config map (batch_size, seq_len, vocab, classes...).
     pub config: BTreeMap<String, Json>,
 }
@@ -125,6 +145,45 @@ pub struct EvalLayout {
     pub batch: std::ops::Range<usize>,
 }
 
+/// Buffer-table addressing for N data-parallel replicas: the train
+/// layout instantiated once per device, keyed by **(replica, tensor)**
+/// instead of tensor alone. The single-device `TrainLayout` silently
+/// assumed one buffer table; `ReplicatedState` keeps one table per
+/// replica in canonical order, and this wrapper names that addressing
+/// (per-replica slot ranges plus the flat↔(replica, slot) mapping for
+/// anything that views the replica set as one concatenated table —
+/// e.g. the per-replica transfer-count accounting in the parity
+/// suite).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ReplicatedLayout {
+    pub replicas: usize,
+    pub per_replica: TrainLayout,
+}
+
+impl ReplicatedLayout {
+    /// Input slots one replica contributes to the flat table.
+    pub fn inputs_per_replica(&self) -> usize {
+        self.per_replica.scalars.end
+    }
+
+    /// Flat index of input slot `input` on `replica` (canonical order:
+    /// replica-major, slot-minor).
+    pub fn input_index(&self, replica: usize, input: usize) -> usize {
+        debug_assert!(replica < self.replicas && input < self.inputs_per_replica());
+        replica * self.inputs_per_replica() + input
+    }
+
+    /// Inverse of [`ReplicatedLayout::input_index`].
+    pub fn owner(&self, flat: usize) -> (usize, usize) {
+        (flat / self.inputs_per_replica(), flat % self.inputs_per_replica())
+    }
+
+    /// Total input slots across the replica set.
+    pub fn total_inputs(&self) -> usize {
+        self.replicas * self.inputs_per_replica()
+    }
+}
+
 impl ModelEntry {
     /// Input/output grouping of the train artifact, validated against
     /// the artifact's declared arity.
@@ -160,6 +219,16 @@ impl ModelEntry {
             );
         }
         Ok(layout)
+    }
+
+    /// The (replica, tensor)-keyed layout for an N-replica run:
+    /// validates the train layout once and wraps it with the replica
+    /// addressing.
+    pub fn replicated_layout(&self, replicas: usize) -> Result<ReplicatedLayout> {
+        if replicas == 0 {
+            bail!("model {}: replica count must be >= 1", self.name);
+        }
+        Ok(ReplicatedLayout { replicas, per_replica: self.train_layout()? })
     }
 
     /// Input grouping of an eval-convention artifact (eval itself and
@@ -263,6 +332,9 @@ fn parse_model(name: &str, v: &Json, dir: &Path) -> Result<ModelEntry> {
         train: parse_artifact(arts.get("train")?, dir)?,
         eval: parse_artifact(arts.get("eval")?, dir)?,
         grad_norms: parse_artifact(arts.get("grad_norms")?, dir)?,
+        // format-1 manifests carry no replication artifacts; the
+        // synthetic models attach them in memory (runtime::synthetic)
+        replication: None,
         config: v.get("config")?.as_obj()?.clone(),
     })
 }
@@ -399,6 +471,7 @@ mod tests {
             train,
             eval: eval.clone(),
             grad_norms: eval,
+            replication: None,
             config: BTreeMap::new(),
         }
     }
@@ -428,6 +501,25 @@ mod tests {
         assert_eq!(l.masks_fwd, 3..5);
         assert_eq!(l.batch, 5..7);
         assert!(m.eval_layout(&m.grad_norms).is_ok());
+    }
+
+    #[test]
+    fn replicated_layout_keys_buffers_by_replica_and_tensor() {
+        let m = layout_fixture(3, 2, 2);
+        let l = m.replicated_layout(4).unwrap();
+        let per = l.inputs_per_replica();
+        assert_eq!(per, m.train.inputs.len());
+        assert_eq!(l.total_inputs(), 4 * per);
+        // replica-major, slot-minor: the same tensor on two replicas
+        // maps to two distinct flat slots
+        assert_eq!(l.input_index(0, 0), 0);
+        assert_eq!(l.input_index(1, 0), per);
+        assert_ne!(l.input_index(0, 5), l.input_index(1, 5));
+        for flat in [0, per - 1, per, 3 * per + 7] {
+            let (r, slot) = l.owner(flat);
+            assert_eq!(l.input_index(r, slot), flat, "round-trip at {flat}");
+        }
+        assert!(m.replicated_layout(0).is_err());
     }
 
     #[test]

@@ -10,17 +10,20 @@
 //! that xla_extension 0.5.1 rejects in proto form.
 //!
 //! See `device_state` for the resident-state protocol and its sync
-//! points, and `synthetic` for artifact-free in-memory models.
+//! points, `replicated` for the data-parallel replica protocol on top
+//! of it, and `synthetic` for artifact-free in-memory models.
 
 pub mod client;
 pub mod device_state;
 pub mod manifest;
+pub mod replicated;
 pub mod synthetic;
 
 pub use client::{DeviceInput, Executable, Runtime, TensorRef};
 pub use device_state::{DeviceState, TrafficModel};
 pub use manifest::{
     ArtifactSpec, Dtype, EvalLayout, InitKind, IoSpec, Manifest, ModelEntry,
-    Optimizer, ParamSpec, TrainLayout,
+    Optimizer, ParamSpec, ReplicatedLayout, ReplicationSpec, TrainLayout,
 };
+pub use replicated::{shard_ranges, ReplicatedState};
 pub use synthetic::Synthetic;

@@ -1,0 +1,424 @@
+//! Data-parallel replicas over the host-sim device set — the survey's
+//! (Hoefler et al., 2021) observation that sparse-training wins only
+//! materialise once they compose with data parallelism, applied to the
+//! device-resident protocol of `runtime::device_state`.
+//!
+//! # Protocol
+//!
+//! One [`DeviceState`] chain lives on each of N simulated devices, all
+//! initialised from the same host store. Every training step runs
+//!
+//! 1. **shard** — the host batch is split into N contiguous shards
+//!    ([`shard_ranges`]), one per replica, so each replica's host link
+//!    carries 1/N of the batch;
+//! 2. **grad** — each replica executes the per-replica grad artifact
+//!    over its shard, producing its partial gradient payload as
+//!    device-resident buffers (for the synthetic family the payload is
+//!    the batch-moment partial sums — the sufficient statistics of the
+//!    shard's gradient contribution);
+//! 3. **all-reduce** — the partials are reduced with
+//!    `PjRtClient::all_reduce_sum` in **canonical replica order**
+//!    (replica 0 first, always), so the result is independent of the
+//!    order replicas finished computing;
+//! 4. **apply** — every replica executes the apply artifact (train
+//!    input convention, batch slots = reduced payload) against its own
+//!    resident θ/masks/opt, chaining the outputs into its next step.
+//!    Identical inputs ⇒ bitwise-identical outputs, so the replicas
+//!    advance in **lockstep**: at every step each device holds the
+//!    same bits a single-device run would hold.
+//!
+//! # Sync points and mask broadcast
+//!
+//! The host-facing sync points are exactly those of the single-device
+//! protocol, with **replica 0 as the host-facing replica**: mask
+//! refresh downloads θ from replica 0 only, eval/grad_norms stream
+//! batches against replica 0's resident buffers, checkpoint/end-of-run
+//! sync from replica 0. Mask refresh stays a *single host-side
+//! decision*: the strategy selects once on the host, and the resulting
+//! A/B masks are **broadcast** (uploaded) to every replica — Top-KAST's
+//! forward/backward sets can therefore never diverge across replicas.
+//!
+//! # Exactness
+//!
+//! Parity with the single-device baseline is *bitwise*, not
+//! approximate, and rests on two invariants pinned by
+//! `rust/tests/parity_replicated.rs`:
+//!
+//! * the simulator's reductions use a canonical pairwise tree
+//!   (`xla::pairwise_sum` semantics), so a full-batch reduction equals
+//!   the fixed-order all-reduce of aligned shard partials bit-for-bit
+//!   (power-of-two batch sizes and replica counts);
+//! * the apply artifact reproduces the fused train artifact's update
+//!   arithmetic exactly, consuming the reduced payload where the fused
+//!   graph reduces the batch itself.
+//!
+//! Future PRs that touch the reduction order, the shard layout, or the
+//! payload definition must preserve these invariants.
+
+use std::ops::Range;
+
+use anyhow::{bail, Context, Result};
+
+use super::client::{DeviceInput, Executable, TensorRef};
+use super::device_state::DeviceState;
+use super::manifest::{ModelEntry, ReplicatedLayout, ReplicationSpec};
+use crate::sparsity::ParamStore;
+use crate::tensor::HostTensor;
+use crate::xla;
+
+/// Contiguous batch shards: every index in `0..n` exactly once, shard
+/// sizes differing by at most one (the first `n % replicas` shards take
+/// the extra example). The replicated trainer requires the divisible
+/// case; the general form exists so sharding is well-defined — and
+/// property-tested — for arbitrary batch/replica combinations.
+pub fn shard_ranges(n: usize, replicas: usize) -> Vec<Range<usize>> {
+    assert!(replicas > 0, "shard_ranges: replicas must be >= 1");
+    let base = n / replicas;
+    let extra = n % replicas;
+    let mut out = Vec::with_capacity(replicas);
+    let mut start = 0;
+    for r in 0..replicas {
+        let len = base + usize::from(r < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// N device-resident state chains advancing in lockstep (see module
+/// docs for the shard → grad → all-reduce → apply protocol).
+pub struct ReplicatedState {
+    client: xla::PjRtClient,
+    /// One resident chain per replica, canonical order (index =
+    /// replica = device).
+    replicas: Vec<DeviceState>,
+    /// (replica, tensor)-keyed buffer addressing.
+    layout: ReplicatedLayout,
+    /// Flat f32 elements per replica shard of x and y.
+    shard_x: usize,
+    shard_y: usize,
+}
+
+impl ReplicatedState {
+    /// Build one resident chain per replica from the host state.
+    /// Fails with a clear message when the replica count exceeds the
+    /// simulated device set, the model carries no replication
+    /// artifacts, they were built for a different replica count, or
+    /// the batch does not shard evenly.
+    pub fn from_host(
+        client: xla::PjRtClient,
+        model: &ModelEntry,
+        store: &ParamStore,
+        opt: &[Vec<f32>],
+        replicas: usize,
+    ) -> Result<ReplicatedState> {
+        if replicas == 0 {
+            bail!("replicated state needs at least one replica");
+        }
+        if replicas > client.device_count() {
+            bail!(
+                "replicas = {replicas} exceeds the simulated device count {} \
+                 (build the runtime with Runtime::with_devices({replicas}))",
+                client.device_count()
+            );
+        }
+        let rep = replication_spec(model, replicas)?;
+        let layout = model.replicated_layout(replicas)?;
+        // shard shapes: the grad artifact's declared inputs must tile
+        // the train artifact's batch exactly `replicas` times
+        let batch = &model.train.inputs[layout.per_replica.batch.clone()];
+        if rep.grad.inputs.len() != batch.len() {
+            bail!(
+                "model {}: grad artifact declares {} inputs, batch has {}",
+                model.name,
+                rep.grad.inputs.len(),
+                batch.len()
+            );
+        }
+        for (shard_io, full_io) in rep.grad.inputs.iter().zip(batch) {
+            if shard_io.shape.numel() * replicas != full_io.shape.numel() {
+                bail!(
+                    "model {}: batch input {:?} has {} elements, not divisible \
+                     into {replicas} shards of {} (batch_size must be a \
+                     multiple of the replica count)",
+                    model.name,
+                    full_io.name,
+                    full_io.shape.numel(),
+                    shard_io.shape.numel()
+                );
+            }
+        }
+        let [x_io, y_io] = rep.grad.inputs.as_slice() else {
+            bail!(
+                "model {}: grad artifact declares {} inputs, the batch \
+                 convention is exactly (x, y)",
+                model.name,
+                rep.grad.inputs.len()
+            );
+        };
+        let shard_x = x_io.shape.numel();
+        let shard_y = y_io.shape.numel();
+        if shard_y == 0 || shard_x % shard_y != 0 {
+            bail!(
+                "model {}: grad shard shapes ({shard_x}, {shard_y}) do not \
+                 describe whole examples",
+                model.name
+            );
+        }
+        let states = (0..replicas)
+            .map(|d| DeviceState::from_host_on(client.clone(), model, store, opt, d))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ReplicatedState {
+            client,
+            replicas: states,
+            layout,
+            shard_x,
+            shard_y,
+        })
+    }
+
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// The (replica, tensor)-keyed buffer addressing of this run.
+    pub fn layout(&self) -> &ReplicatedLayout {
+        &self.layout
+    }
+
+    /// Broadcast the host store's dense values to every replica.
+    pub fn upload_params(&mut self, store: &ParamStore) -> Result<()> {
+        for state in &mut self.replicas {
+            state.upload_params(store)?;
+        }
+        Ok(())
+    }
+
+    /// Broadcast the host store's masks to every replica — the single
+    /// host-side refresh decision reaching all devices at once.
+    pub fn upload_masks(&mut self, store: &ParamStore) -> Result<()> {
+        for state in &mut self.replicas {
+            state.upload_masks(store)?;
+        }
+        Ok(())
+    }
+
+    /// Broadcast host optimiser slots to every replica.
+    pub fn upload_opt(&mut self, opt: &[Vec<f32>]) -> Result<()> {
+        for state in &mut self.replicas {
+            state.upload_opt(opt)?;
+        }
+        Ok(())
+    }
+
+    /// Download the dense θ from the host-facing replica (0). Replicas
+    /// advance in lockstep, so one download speaks for all.
+    pub fn sync_params_to_host(&self, store: &mut ParamStore) -> Result<()> {
+        self.replicas[0].sync_params_to_host(store)
+    }
+
+    /// Download the optimiser slots from replica 0.
+    pub fn sync_opt_to_host(&self, opt: &mut [Vec<f32>]) -> Result<()> {
+        self.replicas[0].sync_opt_to_host(opt)
+    }
+
+    /// Run an eval-convention artifact against replica 0's resident
+    /// params + forward masks, streaming only the batch.
+    pub fn run_with_fwd_masks(
+        &self,
+        exe: &Executable,
+        x: TensorRef<'_>,
+        y: TensorRef<'_>,
+    ) -> Result<Vec<HostTensor>> {
+        self.replicas[0].run_with_fwd_masks(exe, x, y)
+    }
+
+    /// One replicated training step: shard the batch, run the grad
+    /// artifact per replica, all-reduce the payload in canonical
+    /// replica order, apply on every replica, and download the loss
+    /// from replica 0 only.
+    pub fn train_step(
+        &mut self,
+        grad: &Executable,
+        apply: &Executable,
+        x: TensorRef<'_>,
+        y: TensorRef<'_>,
+        scalars: &[[f32; 1]],
+    ) -> Result<f64> {
+        let (TensorRef::F32(xv), TensorRef::F32(yv)) = (x, y) else {
+            bail!("replicated training expects f32 batches");
+        };
+        let n = self.replicas.len();
+        if xv.len() != self.shard_x * n || yv.len() != self.shard_y * n {
+            bail!(
+                "batch ({}, {}) does not tile into {n} shards of ({}, {})",
+                xv.len(),
+                yv.len(),
+                self.shard_x,
+                self.shard_y
+            );
+        }
+        // grad partials, one shard per replica (each replica's host
+        // link carries only its shard). Example ranges come from
+        // shard_ranges — the one sharding definition — scaled by the
+        // per-example element count for x.
+        let rows = shard_ranges(self.shard_y * n, n);
+        let per_row = self.shard_x / self.shard_y;
+        let mut partials: Vec<Vec<xla::PjRtBuffer>> = Vec::with_capacity(n);
+        for (r, state) in self.replicas.iter().enumerate() {
+            let xs = &xv[rows[r].start * per_row..rows[r].end * per_row];
+            let ys = &yv[rows[r].clone()];
+            let outs = grad.run_device_on(
+                &[
+                    DeviceInput::Host(TensorRef::F32(xs)),
+                    DeviceInput::Host(TensorRef::F32(ys)),
+                ],
+                state.device(),
+            )?;
+            partials.push(outs);
+        }
+        // fixed-order all-reduce: canonical replica order, whatever
+        // order the partials above were produced in
+        let payload_len = grad.spec.outputs.len();
+        let mut reduced: Vec<Vec<xla::PjRtBuffer>> =
+            (0..n).map(|_| Vec::with_capacity(payload_len)).collect();
+        for o in 0..payload_len {
+            let refs: Vec<&xla::PjRtBuffer> =
+                partials.iter().map(|p| &p[o]).collect();
+            for (r, buf) in self.client.all_reduce_sum(&refs)?.into_iter().enumerate()
+            {
+                reduced[r].push(buf);
+            }
+        }
+        drop(partials);
+        // replicated apply: every chain advances; only replica 0's
+        // loss crosses back to the host
+        let mut loss_buf = None;
+        for (r, state) in self.replicas.iter_mut().enumerate() {
+            let lb = state.apply_step(apply, &reduced[r], scalars)?;
+            if r == 0 {
+                loss_buf = Some(lb);
+            }
+        }
+        let loss_buf = loss_buf.context("replica set is empty")?;
+        let loss_io = &apply.spec.outputs[self.layout.per_replica.out_loss];
+        Ok(apply.download(&loss_buf, loss_io)?.as_f32()?[0] as f64)
+    }
+
+    /// Prove the lockstep invariant: download every replica's resident
+    /// params/masks/opt and check they are bit-identical to replica 0.
+    /// Diagnostics/tests only — this is metered d2h traffic on every
+    /// device, so call it outside transfer-counting windows.
+    pub fn verify_lockstep(&self) -> Result<()> {
+        let reference = self.replicas[0].dump_resident()?;
+        for (r, state) in self.replicas.iter().enumerate().skip(1) {
+            let other = state.dump_resident()?;
+            let groups = [
+                ("params", &reference.0, &other.0),
+                ("masks_fwd", &reference.1, &other.1),
+                ("masks_bwd", &reference.2, &other.2),
+                ("opt", &reference.3, &other.3),
+            ];
+            for (what, a, b) in groups {
+                if a != b {
+                    bail!("replica {r} diverged from replica 0 in {what}");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn replication_spec(model: &ModelEntry, replicas: usize) -> Result<&ReplicationSpec> {
+    let rep = model.replication.as_ref().with_context(|| {
+        format!(
+            "model {}: replicas = {replicas} but the model carries no \
+             replication artifacts (grad/apply); synthetic models attach \
+             them via Synthetic::replicated",
+            model.name
+        )
+    })?;
+    if rep.replicas != replicas {
+        bail!(
+            "model {}: replication artifacts were built for {} replicas, \
+             run wants {replicas}",
+            model.name,
+            rep.replicas
+        );
+    }
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Runtime, Synthetic};
+
+    #[test]
+    fn shard_ranges_basic_shapes() {
+        assert_eq!(shard_ranges(8, 2), vec![0..4, 4..8]);
+        assert_eq!(shard_ranges(7, 3), vec![0..3, 3..5, 5..7]);
+        assert_eq!(shard_ranges(2, 4), vec![0..1, 1..2, 2..2, 2..2]);
+        assert_eq!(shard_ranges(0, 2), vec![0..0, 0..0]);
+    }
+
+    #[test]
+    fn replicas_beyond_device_count_is_a_clear_error() {
+        let synth = Synthetic::tiny().replicated(4).unwrap();
+        let rt = Runtime::with_devices(2).unwrap();
+        let store = ParamStore::init(&synth.model.params, 1);
+        let slots = synth.model.optimizer.slots();
+        let opt: Vec<Vec<f32>> = synth
+            .model
+            .params
+            .iter()
+            .flat_map(|p| {
+                std::iter::repeat_with(move || vec![0.0f32; p.shape.numel()])
+                    .take(slots)
+            })
+            .collect();
+        let err = ReplicatedState::from_host(
+            rt.client().clone(),
+            &synth.model,
+            &store,
+            &opt,
+            4,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("exceeds the simulated device count"));
+    }
+
+    #[test]
+    fn missing_or_mismatched_replication_artifacts_error() {
+        let plain = Synthetic::tiny();
+        let rt = Runtime::with_devices(2).unwrap();
+        let store = ParamStore::init(&plain.model.params, 1);
+        let err = ReplicatedState::from_host(
+            rt.client().clone(),
+            &plain.model,
+            &store,
+            &[],
+            2,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("no replication artifacts"), "{err}");
+
+        let built_for_4 = plain.replicated(4).unwrap();
+        let err = ReplicatedState::from_host(
+            rt.client().clone(),
+            &built_for_4.model,
+            &store,
+            &[],
+            2,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("built for 4 replicas"), "{err}");
+    }
+
+    #[test]
+    fn non_divisible_batch_is_a_clear_error() {
+        // syn_tiny has batch_size 4 — 3 replicas cannot shard it evenly
+        let err = Synthetic::tiny().replicated(3).unwrap_err();
+        assert!(err.to_string().contains("multiple of"), "{err}");
+    }
+}

@@ -16,11 +16,12 @@
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::client::Runtime;
 use super::manifest::{
     ArtifactSpec, Dtype, InitKind, IoSpec, ModelEntry, Optimizer, ParamSpec,
+    ReplicationSpec,
 };
 use crate::coordinator::{DataSource, Trainer, TrainerConfig};
 use crate::sparsity::MaskStrategy;
@@ -142,9 +143,74 @@ impl Synthetic {
         Synthetic { model, features, batch }
     }
 
-    /// Compile the three computations and seed them into a runtime's
+    /// Attach data-parallel replication artifacts for a concrete
+    /// replica count: a shard-sized grad artifact (partial batch-moment
+    /// sums — the gradient's sufficient statistics for this model
+    /// family) and an apply artifact that reproduces the fused train
+    /// update bit-for-bit from the all-reduced payload. Fails when the
+    /// batch does not shard evenly.
+    pub fn replicated(&self, replicas: usize) -> Result<Synthetic> {
+        if replicas == 0 {
+            bail!("replicas must be >= 1");
+        }
+        if self.batch % replicas != 0 {
+            bail!(
+                "model {}: batch_size {} is not a multiple of {replicas} \
+                 replicas",
+                self.model.name,
+                self.batch
+            );
+        }
+        let shard = self.batch / replicas;
+        let name = &self.model.name;
+        let grad = ArtifactSpec {
+            file: PathBuf::from(format!("<synthetic:{name}:grad/r{replicas}>")),
+            inputs: vec![
+                IoSpec {
+                    name: "x".into(),
+                    shape: Shape::new(&[shard, self.features]),
+                    dtype: Dtype::F32,
+                },
+                IoSpec {
+                    name: "y".into(),
+                    shape: Shape::new(&[shard]),
+                    dtype: Dtype::F32,
+                },
+            ],
+            outputs: vec![
+                IoSpec { name: "gsum_x".into(), shape: Shape::new(&[1]), dtype: Dtype::F32 },
+                IoSpec { name: "gsum_y".into(), shape: Shape::new(&[1]), dtype: Dtype::F32 },
+            ],
+        };
+        // apply: train-convention inputs with the batch slots replaced
+        // by the reduced payload (same arity, so TrainLayout addresses
+        // both artifacts)
+        let layout = self.model.train_layout()?;
+        let mut apply_inputs = self.model.train.inputs.clone();
+        apply_inputs[layout.batch.start] = IoSpec {
+            name: "gsum_x".into(),
+            shape: Shape::new(&[1]),
+            dtype: Dtype::F32,
+        };
+        apply_inputs[layout.batch.start + 1] = IoSpec {
+            name: "gsum_y".into(),
+            shape: Shape::new(&[1]),
+            dtype: Dtype::F32,
+        };
+        let apply = ArtifactSpec {
+            file: PathBuf::from(format!("<synthetic:{name}:apply>")),
+            inputs: apply_inputs,
+            outputs: self.model.train.outputs.clone(),
+        };
+        let mut out = self.clone();
+        out.model.replication = Some(ReplicationSpec { replicas, grad, apply });
+        Ok(out)
+    }
+
+    /// Compile the computations and seed them into a runtime's
     /// executable cache, so `Runtime::load` (and therefore a stock
-    /// `Trainer`) resolves them without touching disk.
+    /// `Trainer`) resolves them without touching disk. Includes the
+    /// grad/apply pair when replication artifacts are attached.
     pub fn install(&self, rt: &mut Runtime) -> Result<()> {
         let train = rt.compile_computation(&self.build_train()?, &self.model.train)?;
         rt.preload(train);
@@ -153,19 +219,37 @@ impl Synthetic {
         let gn =
             rt.compile_computation(&self.build_eval(true)?, &self.model.grad_norms)?;
         rt.preload(gn);
+        if let Some(rep) = &self.model.replication {
+            let grad = rt.compile_computation(&self.build_grad(&rep.grad)?, &rep.grad)?;
+            rt.preload(grad);
+            let apply = rt.compile_computation(
+                &self.build_step(&rep.apply, true)?,
+                &rep.apply,
+            )?;
+            rt.preload(apply);
+        }
         Ok(())
     }
 
-    /// A fully-wired trainer over this model (own runtime + data).
+    /// A fully-wired trainer over this model (own runtime + data). The
+    /// runtime's simulated device set matches `cfg.replicas`, and
+    /// replication artifacts are attached automatically when the config
+    /// asks for more than one replica.
     pub fn trainer(
         &self,
         strategy: Box<dyn MaskStrategy>,
         cfg: TrainerConfig,
     ) -> Result<Trainer> {
-        let mut rt = Runtime::new()?;
-        self.install(&mut rt)?;
-        let data = self.data(cfg.seed ^ 0xDA7A);
-        Trainer::new(rt, self.model.clone(), strategy, data, cfg)
+        let replicas = cfg.replicas.max(1);
+        let mut rt = Runtime::with_devices(replicas)?;
+        let synth = if replicas > 1 && self.model.replication.is_none() {
+            self.replicated(replicas)?
+        } else {
+            self.clone()
+        };
+        synth.install(&mut rt)?;
+        let data = synth.data(cfg.seed ^ 0xDA7A);
+        Trainer::new(rt, synth.model.clone(), strategy, data, cfg)
     }
 
     /// Deterministic data stream matching the model's batch shapes.
@@ -179,14 +263,53 @@ impl Synthetic {
     }
 
     fn build_train(&self) -> Result<xla::XlaComputation> {
+        self.build_step(&self.model.train, false)
+    }
+
+    /// Per-replica partial-gradient computation: reduce one batch shard
+    /// to its payload (partial sums of x and y). The canonical-tree
+    /// `ReduceSum` makes the fixed-order all-reduce of these partials
+    /// bit-identical to the full-batch reduction inside `build_step`.
+    fn build_grad(&self, spec: &ArtifactSpec) -> Result<xla::XlaComputation> {
+        let b = xla::XlaBuilder::new(&format!("{}_grad", self.model.name));
+        let inputs = declare_params(&b, spec)?;
+        let sx = inputs[0].reduce_sum()?;
+        let sy = inputs[1].reduce_sum()?;
+        b.tuple(&[sx, sy])?.build()
+    }
+
+    /// The shared update graph. With `from_payload = false` this is the
+    /// fused train step (batch in, moments reduced in-graph); with
+    /// `true` it is the replicated apply step, whose batch slots carry
+    /// the all-reduced payload sums and whose moment division uses the
+    /// *full-batch* element counts — every node downstream of the
+    /// moments is identical, which is what makes replicated runs
+    /// bit-identical to single-device runs.
+    fn build_step(
+        &self,
+        spec: &ArtifactSpec,
+        from_payload: bool,
+    ) -> Result<xla::XlaComputation> {
         let model = &self.model;
         let layout = model.train_layout()?;
         let slots = model.optimizer.slots();
-        let b = xla::XlaBuilder::new(&format!("{}_train", model.name));
-        let inputs = declare_params(&b, &model.train)?;
+        let suffix = if from_payload { "apply" } else { "train" };
+        let b = xla::XlaBuilder::new(&format!("{}_{suffix}", model.name));
+        let inputs = declare_params(&b, spec)?;
 
-        let xm = inputs[layout.batch.start].mean()?;
-        let ym = inputs[layout.batch.start + 1].mean()?;
+        let (xm, ym) = if from_payload {
+            let nx = (self.batch * self.features) as f32;
+            let ny = self.batch as f32;
+            (
+                (&inputs[layout.batch.start] / &b.constant_f32(nx)?)?,
+                (&inputs[layout.batch.start + 1] / &b.constant_f32(ny)?)?,
+            )
+        } else {
+            (
+                inputs[layout.batch.start].mean()?,
+                inputs[layout.batch.start + 1].mean()?,
+            )
+        };
         let lr = &inputs[layout.scalars.start];
         let step = &inputs[layout.scalars.start + 1];
         let reg = &inputs[layout.scalars.start + 2];
@@ -454,6 +577,28 @@ mod tests {
             }
             assert!(inside > 0, "{}: no updates inside B", p.name);
         }
+    }
+
+    #[test]
+    fn replication_artifacts_compile_and_follow_the_train_layout() {
+        for replicas in [2usize, 4] {
+            let synth = Synthetic::tiny().replicated(replicas).unwrap();
+            let mut rt = Runtime::with_devices(replicas).unwrap();
+            synth.install(&mut rt).unwrap();
+            let rep = synth.model.replication.as_ref().unwrap();
+            assert_eq!(rep.replicas, replicas);
+            // apply follows the train convention exactly (TrainLayout
+            // addresses both), grad tiles the batch
+            assert_eq!(rep.apply.inputs.len(), synth.model.train.inputs.len());
+            assert_eq!(rep.apply.outputs.len(), synth.model.train.outputs.len());
+            let layout = synth.model.train_layout().unwrap();
+            let full_x = synth.model.train.inputs[layout.batch.start].shape.numel();
+            assert_eq!(rep.grad.inputs[0].shape.numel() * replicas, full_x);
+            assert!(rt.get(&rep.grad).is_ok(), "grad preloaded");
+            assert!(rt.get(&rep.apply).is_ok(), "apply preloaded");
+        }
+        assert!(Synthetic::tiny().replicated(3).is_err(), "4 % 3 != 0");
+        assert!(Synthetic::tiny().replicated(0).is_err());
     }
 
     #[test]

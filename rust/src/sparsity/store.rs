@@ -275,6 +275,46 @@ mod tests {
     }
 
     #[test]
+    fn property_nnz_cache_consistent_under_arbitrary_mutation() {
+        use crate::util::proptest::{ensure, property_cases};
+        // Drive MaskPair through random sequences of every write path
+        // (set_fwd / set_bwd / edit) and check the cached counts always
+        // equal a fresh recount — the invariant effective_params() and
+        // the traffic tests lean on.
+        property_cases("MaskPair nnz cache == recount", 128, |rng| {
+            let n = 1 + rng.next_below(64) as usize;
+            let mut m = MaskPair::dense(n);
+            let random_mask = |rng: &mut crate::util::rng::Pcg64| -> Vec<f32> {
+                (0..n)
+                    .map(|_| if rng.next_below(2) == 0 { 0.0 } else { 1.0 })
+                    .collect()
+            };
+            for _ in 0..8 {
+                match rng.next_below(3) {
+                    0 => m.set_fwd(random_mask(rng)),
+                    1 => m.set_bwd(random_mask(rng)),
+                    _ => {
+                        let flip = rng.next_below(n as u64) as usize;
+                        m.edit(|fwd, bwd| {
+                            fwd[flip] = 1.0 - fwd[flip];
+                            bwd[flip] = 1.0 - bwd[flip];
+                        });
+                    }
+                }
+                ensure(
+                    m.fwd_nnz() == nnz(m.fwd()),
+                    format!("fwd cache {} != recount {}", m.fwd_nnz(), nnz(m.fwd())),
+                )?;
+                ensure(
+                    m.bwd_nnz() == nnz(m.bwd()),
+                    format!("bwd cache {} != recount {}", m.bwd_nnz(), nnz(m.bwd())),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn mask_nesting_check() {
         let mut m = MaskPair::dense(4);
         assert!(m.is_nested());

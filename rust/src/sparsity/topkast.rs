@@ -279,4 +279,94 @@ mod tests {
     fn rejects_bwd_below_fwd() {
         TopKast::new(0.5, 0.2);
     }
+
+    #[test]
+    fn scratch_reuse_across_refreshes_matches_fresh_strategy() {
+        // One long-lived strategy instance (its TopkScratch grows to
+        // the high-water mark and is reused) must select exactly what a
+        // fresh instance selects, across refreshes and tensor sizes —
+        // including shrinking back to tiny tensors after a large one.
+        let mut reused = TopKast::from_sparsities(0.8, 0.5);
+        for refresh in 0..4 {
+            for n in [64usize, 300, 7, 128, 1] {
+                let mut w: Vec<f32> = (0..n)
+                    .map(|i| (((i * 37 + refresh * 101) % 23) as f32) - 11.0)
+                    .collect();
+                let (mf_a, mb_a) = run(&mut reused, &mut w.clone(), refresh);
+                let mut fresh = TopKast::from_sparsities(0.8, 0.5);
+                let (mf_b, mb_b) = run(&mut fresh, &mut w, refresh);
+                assert_eq!(mf_a, mf_b, "fwd mask drifted (refresh {refresh}, n {n})");
+                assert_eq!(mb_a, mb_b, "bwd mask drifted (refresh {refresh}, n {n})");
+            }
+        }
+    }
+
+    #[test]
+    fn property_random_b_rejection_sampling_exact_membership() {
+        // Both sampler branches — include-sampling (take ≤ half the
+        // complement) and knockout-sampling (take > half) — must place
+        // exactly kb − ka units, all strictly in the complement of A,
+        // with no duplicates (masks stay 0/1).
+        property("random-B rejection sampling: exact B\\A membership", |rng| {
+            let mut w = gen_vec_f32(rng, 8, 160);
+            let n = w.len();
+            // d_bwd near d_fwd hits the include branch, d_bwd near 1.0
+            // hits the knockout branch; draw across the whole range
+            let d_fwd = 0.05 + rng.next_f64() * 0.3;
+            let d_bwd = d_fwd + rng.next_f64() * (1.0 - d_fwd);
+            let mut s = TopKastRandom::new(d_fwd, d_bwd);
+            let mut mf = vec![0.0; n];
+            let mut mb = vec![0.0; n];
+            let mut r2 = rng.fork(7);
+            s.update_tensor(TensorCtx {
+                name: "t",
+                weights: &mut w,
+                mask_fwd: &mut mf,
+                mask_bwd: &mut mb,
+                grad_norms: None,
+                rng: &mut r2,
+                step: 0,
+                total_steps: 10,
+            })
+            .map_err(|e| e.to_string())?;
+            let ka = k_for_density(n, d_fwd);
+            let kb = k_for_density(n, d_bwd).max(ka);
+            let complement = n - ka;
+            let take = (kb - ka).min(complement);
+            for (i, (&f, &b)) in mf.iter().zip(&mb).enumerate() {
+                ensure(f == 0.0 || f == 1.0, format!("fwd not 0/1 at {i}"))?;
+                ensure(b == 0.0 || b == 1.0, format!("bwd not 0/1 at {i}"))?;
+                ensure(f <= b, format!("A ⊄ B at {i}"))?;
+            }
+            let grown = mf
+                .iter()
+                .zip(&mb)
+                .filter(|(&f, &b)| f == 0.0 && b == 1.0)
+                .count();
+            ensure(
+                grown == take,
+                format!("B\\A has {grown} units, want {take} (n={n}, ka={ka}, kb={kb})"),
+            )?;
+            ensure(
+                mb.iter().filter(|&&b| b == 1.0).count() == ka + take,
+                "|B| must be exactly |A| + |B\\A|",
+            )
+        });
+    }
+
+    #[test]
+    fn random_b_knockout_branch_exact() {
+        // Deterministically exercise the knockout branch (2·take >
+        // complement): d_fwd 0.1, d_bwd 0.95 over 100 units → ka = 10,
+        // kb = 95, take = 85 > 45 = complement/2.
+        let mut w: Vec<f32> = (0..100).map(|i| ((i * 13) % 31) as f32 - 15.0).collect();
+        let mut s = TopKastRandom::new(0.1, 0.95);
+        let (mf, mb) = run(&mut s, &mut w, 0);
+        assert_eq!(mf.iter().filter(|&&x| x == 1.0).count(), 10);
+        assert_eq!(mb.iter().filter(|&&x| x == 1.0).count(), 95);
+        assert!(mf.iter().zip(&mb).all(|(&f, &b)| f <= b));
+        // exactly take = 85 grown units, all strictly outside A
+        let grown = mf.iter().zip(&mb).filter(|(&f, &b)| f == 0.0 && b == 1.0).count();
+        assert_eq!(grown, 85);
+    }
 }

@@ -20,13 +20,29 @@
 //!   untuple-on-device.
 //!
 //! Computations built with [`XlaBuilder`] (parameters, elementwise
-//! add/sub/mul with scalar broadcast, reduce-sum/mean, tuples) execute
-//! on the host with plain f32 arithmetic — deterministic, so the
-//! parity suites can demand bit-identical results between execution
+//! add/sub/mul/div with scalar broadcast, reduce-sum/mean, tuples)
+//! execute on the host with plain f32 arithmetic — deterministic, so
+//! the parity suites can demand bit-identical results between execution
 //! strategies. HLO-*text* artifacts (the python AOT path) parse and
 //! "compile", but executing one reports a clear error: interpreting
 //! arbitrary HLO is out of scope for the simulation; those paths need
 //! the real PJRT backend.
+//!
+//! # Multiple devices
+//!
+//! A client simulates an *addressable set* of devices
+//! ([`PjRtClient::cpu_with_devices`]); every buffer is pinned to one
+//! device and transfers are metered **per device**
+//! ([`PjRtClient::device_transfer_stats`]) as well as in aggregate.
+//! Executions run on the device their inputs live on (mixing devices in
+//! one call is an error, like real PJRT). The one inter-device
+//! primitive is [`PjRtClient::all_reduce_sum`]: a deterministic,
+//! fixed-order elementwise sum across one buffer per replica, reduced
+//! with the same canonical pairwise tree the reduction ops use — so a
+//! full-batch `ReduceSum` equals the all-reduce of per-shard partial
+//! sums bit-for-bit whenever the shards align with the tree (sizes and
+//! replica counts that are powers of two). Interconnect traffic is
+//! metered separately from host↔device traffic (`ar_bytes`/`ar_calls`).
 
 use std::cell::RefCell;
 use std::path::Path;
@@ -125,13 +141,16 @@ impl Storage {
 // transfer metering
 // ---------------------------------------------------------------------------
 
-/// Host↔device transfer counters, shared by every buffer of a client.
+/// Transfer counters for one simulated device: host↔device traffic
+/// plus the interconnect bytes it moved through all-reduces.
 #[derive(Debug, Default)]
 pub struct TransferStats {
     h2d_bytes: AtomicU64,
     h2d_calls: AtomicU64,
     d2h_bytes: AtomicU64,
     d2h_calls: AtomicU64,
+    ar_bytes: AtomicU64,
+    ar_calls: AtomicU64,
 }
 
 /// A point-in-time copy of the counters (subtract two to get a delta).
@@ -141,6 +160,10 @@ pub struct TransferSnapshot {
     pub h2d_calls: u64,
     pub d2h_bytes: u64,
     pub d2h_calls: u64,
+    /// Interconnect payload bytes this device contributed to
+    /// all-reduces (not host traffic).
+    pub ar_bytes: u64,
+    pub ar_calls: u64,
 }
 
 impl TransferSnapshot {
@@ -151,7 +174,21 @@ impl TransferSnapshot {
             h2d_calls: self.h2d_calls - earlier.h2d_calls,
             d2h_bytes: self.d2h_bytes - earlier.d2h_bytes,
             d2h_calls: self.d2h_calls - earlier.d2h_calls,
+            ar_bytes: self.ar_bytes - earlier.ar_bytes,
+            ar_calls: self.ar_calls - earlier.ar_calls,
         }
+    }
+
+    /// Add another snapshot's counters into this one (aggregate view
+    /// across devices — every field, so new counters can't be missed
+    /// by callers that hand-rolled the sum).
+    pub fn accumulate(&mut self, other: &TransferSnapshot) {
+        self.h2d_bytes += other.h2d_bytes;
+        self.h2d_calls += other.h2d_calls;
+        self.d2h_bytes += other.d2h_bytes;
+        self.d2h_calls += other.d2h_calls;
+        self.ar_bytes += other.ar_bytes;
+        self.ar_calls += other.ar_calls;
     }
 }
 
@@ -166,12 +203,49 @@ impl TransferStats {
         self.d2h_calls.fetch_add(1, Ordering::Relaxed);
     }
 
+    fn record_ar(&self, bytes: u64) {
+        self.ar_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.ar_calls.fetch_add(1, Ordering::Relaxed);
+    }
+
     fn snapshot(&self) -> TransferSnapshot {
         TransferSnapshot {
             h2d_bytes: self.h2d_bytes.load(Ordering::Relaxed),
             h2d_calls: self.h2d_calls.load(Ordering::Relaxed),
             d2h_bytes: self.d2h_bytes.load(Ordering::Relaxed),
             d2h_calls: self.d2h_calls.load(Ordering::Relaxed),
+            ar_bytes: self.ar_bytes.load(Ordering::Relaxed),
+            ar_calls: self.ar_calls.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Canonical pairwise (recursive-halving) summation. The reduction
+/// tree splits at ceil(n/2), so for power-of-two lengths every aligned
+/// power-of-two chunk is an exact subtree: summing each chunk with
+/// this function and then combining the partials with the same tree
+/// reproduces the full sum *bit-for-bit*. That composition law is what
+/// lets data-parallel replicas reduce per-shard partials into exactly
+/// the value a single device would have computed.
+fn pairwise_sum(v: &[f32]) -> f32 {
+    match v.len() {
+        0 => 0.0,
+        1 => v[0],
+        n => {
+            let m = n.div_ceil(2);
+            pairwise_sum(&v[..m]) + pairwise_sum(&v[m..])
+        }
+    }
+}
+
+/// The same canonical tree applied across replicas for one element
+/// position (`vals[replica][j]`).
+fn pairwise_sum_across(vals: &[&[f32]], j: usize) -> f32 {
+    match vals.len() {
+        1 => vals[0][j],
+        n => {
+            let m = n.div_ceil(2);
+            pairwise_sum_across(&vals[..m], j) + pairwise_sum_across(&vals[m..], j)
         }
     }
 }
@@ -180,27 +254,68 @@ impl TransferStats {
 // client / buffers / literals
 // ---------------------------------------------------------------------------
 
-/// The simulated PJRT client. Cheap to clone (shared handle).
+/// Upper bound on the simulated device set — generous for a host sim,
+/// but finite so a typo'd replica count fails loudly instead of
+/// allocating absurd state.
+pub const MAX_SIM_DEVICES: usize = 64;
+
+/// The simulated PJRT client: an addressable set of devices. Cheap to
+/// clone (shared handle).
 #[derive(Clone)]
 pub struct PjRtClient {
-    stats: Arc<TransferStats>,
+    /// One transfer meter per simulated device.
+    devices: Arc<Vec<Arc<TransferStats>>>,
 }
 
 impl PjRtClient {
     pub fn cpu() -> Result<PjRtClient> {
-        Ok(PjRtClient { stats: Arc::new(TransferStats::default()) })
+        Self::cpu_with_devices(1)
+    }
+
+    /// A client simulating `devices` addressable devices (each with its
+    /// own transfer meter).
+    pub fn cpu_with_devices(devices: usize) -> Result<PjRtClient> {
+        if devices == 0 {
+            bail!("a PJRT client needs at least one device");
+        }
+        if devices > MAX_SIM_DEVICES {
+            bail!(
+                "requested {devices} simulated devices, but the host-sim \
+                 backend supports at most {MAX_SIM_DEVICES}"
+            );
+        }
+        Ok(PjRtClient {
+            devices: Arc::new(
+                (0..devices).map(|_| Arc::new(TransferStats::default())).collect(),
+            ),
+        })
     }
 
     pub fn platform_name(&self) -> String {
         "host-sim".to_string()
     }
 
+    /// Number of addressable devices on this client.
+    pub fn device_count(&self) -> usize {
+        self.devices.len()
+    }
+
+    fn device_stats(&self, device: usize) -> Result<&Arc<TransferStats>> {
+        self.devices.get(device).with_context(|| {
+            format!(
+                "device {device} out of range: client has {} simulated device(s)",
+                self.devices.len()
+            )
+        })
+    }
+
     /// Host→device upload — the metered entry point for all inputs.
+    /// `device` selects the target device (default 0).
     pub fn buffer_from_host_buffer<T: NativeType>(
         &self,
         data: &[T],
         dims: &[usize],
-        _device: Option<usize>,
+        device: Option<usize>,
     ) -> Result<PjRtBuffer> {
         let numel: usize = dims.iter().product();
         if numel != data.len() {
@@ -210,10 +325,13 @@ impl PjRtClient {
                 dims
             );
         }
-        self.stats.record_h2d(4 * data.len() as u64);
+        let device = device.unwrap_or(0);
+        let stats = self.device_stats(device)?;
+        stats.record_h2d(4 * data.len() as u64);
         Ok(PjRtBuffer {
             data: Arc::new(T::wrap(data.to_vec())),
-            stats: self.stats.clone(),
+            stats: stats.clone(),
+            device,
         })
     }
 
@@ -235,8 +353,64 @@ impl PjRtClient {
         }
     }
 
+    /// Aggregate host↔device + interconnect traffic across all devices.
     pub fn transfer_stats(&self) -> TransferSnapshot {
-        self.stats.snapshot()
+        let mut total = TransferSnapshot::default();
+        for d in self.devices.iter() {
+            total.accumulate(&d.snapshot());
+        }
+        total
+    }
+
+    /// Traffic through one device only.
+    pub fn device_transfer_stats(&self, device: usize) -> Result<TransferSnapshot> {
+        Ok(self.device_stats(device)?.snapshot())
+    }
+
+    /// Deterministic fixed-order all-reduce: the elementwise sum of one
+    /// buffer per replica, reduced with the canonical pairwise tree *in
+    /// the order given* — callers pass buffers in canonical replica
+    /// order, which makes the result independent of the order replicas
+    /// finished producing them. Returns one result buffer per input, on
+    /// that input's device, all aliasing a single reduced payload (the
+    /// simulated interconnect broadcast). Each participating device
+    /// meters `ar_bytes += payload` / `ar_calls += 1`; a
+    /// single-participant all-reduce is the identity and moves nothing.
+    pub fn all_reduce_sum(&self, inputs: &[&PjRtBuffer]) -> Result<Vec<PjRtBuffer>> {
+        let Some(first) = inputs.first() else {
+            bail!("all_reduce_sum over zero buffers");
+        };
+        let n = first.element_count();
+        let mut vals: Vec<&[f32]> = Vec::with_capacity(inputs.len());
+        for (r, buf) in inputs.iter().enumerate() {
+            match buf.data.as_ref() {
+                Storage::F32(v) if v.len() == n => vals.push(v),
+                Storage::F32(v) => bail!(
+                    "all_reduce_sum: replica {r} has {} elements, replica 0 has {n}",
+                    v.len()
+                ),
+                _ => bail!("all_reduce_sum: replica {r} buffer is not f32"),
+            }
+            self.device_stats(buf.device)?; // buffer must belong here
+        }
+        if inputs.len() == 1 {
+            return Ok(vec![(*first).clone()]);
+        }
+        let reduced: Vec<f32> =
+            (0..n).map(|j| pairwise_sum_across(&vals, j)).collect();
+        let data = Arc::new(Storage::F32(reduced));
+        let payload = 4 * n as u64;
+        inputs
+            .iter()
+            .map(|buf| {
+                buf.stats.record_ar(payload);
+                Ok(PjRtBuffer {
+                    data: Arc::clone(&data),
+                    stats: buf.stats.clone(),
+                    device: buf.device,
+                })
+            })
+            .collect()
     }
 }
 
@@ -245,6 +419,8 @@ impl PjRtClient {
 pub struct PjRtBuffer {
     data: Arc<Storage>,
     stats: Arc<TransferStats>,
+    /// The simulated device this buffer lives on.
+    device: usize,
 }
 
 impl PjRtBuffer {
@@ -284,6 +460,11 @@ impl PjRtBuffer {
     /// Element type of an array buffer (None for tuples).
     pub fn element_type(&self) -> Option<ElemType> {
         self.data.ty()
+    }
+
+    /// The simulated device this buffer is resident on.
+    pub fn device(&self) -> usize {
+        self.device
     }
 
     fn value(&self) -> &Storage {
@@ -349,6 +530,7 @@ enum BinOp {
     Add,
     Sub,
     Mul,
+    Div,
 }
 
 #[derive(Clone, Debug)]
@@ -420,7 +602,9 @@ impl Graph {
         &self,
         args: &[&PjRtBuffer],
         client: &PjRtClient,
+        device: usize,
     ) -> Result<PjRtBuffer> {
+        let stats = client.device_stats(device)?.clone();
         let mut values: Vec<Option<Arc<Storage>>> = vec![None; self.nodes.len()];
         for (id, node) in self.nodes.iter().enumerate() {
             let v: Arc<Storage> = match node {
@@ -448,13 +632,15 @@ impl Graph {
                     Arc::new(Storage::F32(apply_binary(*op, va, vb)))
                 }
                 Node::ReduceSum { a } => {
+                    // canonical pairwise tree — see `pairwise_sum` for
+                    // why the order matters (replica composition)
                     let va = as_f32(&values, *a, &self.name)?;
-                    Arc::new(Storage::F32(vec![va.iter().sum()]))
+                    Arc::new(Storage::F32(vec![pairwise_sum(va)]))
                 }
                 Node::Mean { a } => {
                     let va = as_f32(&values, *a, &self.name)?;
                     let n = va.len().max(1) as f32;
-                    Arc::new(Storage::F32(vec![va.iter().sum::<f32>() / n]))
+                    Arc::new(Storage::F32(vec![pairwise_sum(va) / n]))
                 }
                 Node::Tuple { parts } => {
                     let bufs = parts
@@ -464,7 +650,8 @@ impl Graph {
                                 data: values[p]
                                     .clone()
                                     .context("tuple part not evaluated")?,
-                                stats: client.stats.clone(),
+                                stats: stats.clone(),
+                                device,
                             })
                         })
                         .collect::<Result<Vec<_>>>()?;
@@ -475,7 +662,8 @@ impl Graph {
         }
         Ok(PjRtBuffer {
             data: values[self.root].clone().context("root not evaluated")?,
-            stats: client.stats.clone(),
+            stats,
+            device,
         })
     }
 }
@@ -497,6 +685,7 @@ fn apply_binary(op: BinOp, a: &[f32], b: &[f32]) -> Vec<f32> {
         BinOp::Add => x + y,
         BinOp::Sub => x - y,
         BinOp::Mul => x * y,
+        BinOp::Div => x / y,
     };
     match (a.len(), b.len()) {
         (1, _) => b.iter().map(|&y| f(a[0], y)).collect(),
@@ -564,7 +753,9 @@ impl PjRtLoadedExecutable {
     /// Buffer-in/buffer-out execution. Accepts owned or borrowed
     /// buffers so callers can mix resident state with fresh uploads.
     /// No host transfer happens here — inputs are already on device
-    /// and the result stays there until downloaded.
+    /// and the result stays there until downloaded. Execution runs on
+    /// the device the inputs live on (all inputs must agree, like real
+    /// PJRT; a zero-input computation runs on device 0).
     pub fn execute_b<B: std::borrow::Borrow<PjRtBuffer>>(
         &self,
         args: &[B],
@@ -586,7 +777,18 @@ impl PjRtLoadedExecutable {
             );
         }
         let refs: Vec<&PjRtBuffer> = args.iter().map(|b| b.borrow()).collect();
-        let out = graph.execute(&refs, &self.client)?;
+        let device = refs.first().map(|b| b.device).unwrap_or(0);
+        for (i, b) in refs.iter().enumerate() {
+            if b.device != device {
+                bail!(
+                    "{}: inputs span devices (arg 0 on device {device}, \
+                     arg {i} on device {})",
+                    self.name,
+                    b.device
+                );
+            }
+        }
+        let out = graph.execute(&refs, &self.client, device)?;
         Ok(vec![vec![out]])
     }
 }
@@ -717,6 +919,7 @@ macro_rules! impl_binop {
 impl_binop!(Add, add, BinOp::Add);
 impl_binop!(Sub, sub, BinOp::Sub);
 impl_binop!(Mul, mul, BinOp::Mul);
+impl_binop!(Div, div, BinOp::Div);
 
 #[cfg(test)]
 mod tests {
@@ -833,6 +1036,121 @@ mod tests {
         // wrong dtype
         let badt = client.buffer_from_host_buffer::<i32>(&[0; 2], &[2], None).unwrap();
         assert!(exe.execute_b(&[badt]).is_err());
+    }
+
+    #[test]
+    fn per_device_metering_and_aggregate() {
+        let client = PjRtClient::cpu_with_devices(3).unwrap();
+        assert_eq!(client.device_count(), 3);
+        client
+            .buffer_from_host_buffer::<f32>(&[0.0; 4], &[4], Some(0))
+            .unwrap();
+        client
+            .buffer_from_host_buffer::<f32>(&[0.0; 2], &[2], Some(2))
+            .unwrap();
+        let d0 = client.device_transfer_stats(0).unwrap();
+        let d1 = client.device_transfer_stats(1).unwrap();
+        let d2 = client.device_transfer_stats(2).unwrap();
+        assert_eq!((d0.h2d_bytes, d0.h2d_calls), (16, 1));
+        assert_eq!(d1, TransferSnapshot::default());
+        assert_eq!((d2.h2d_bytes, d2.h2d_calls), (8, 1));
+        let total = client.transfer_stats();
+        assert_eq!((total.h2d_bytes, total.h2d_calls), (24, 2));
+        // out-of-range device is a clear error, not a panic
+        assert!(client
+            .buffer_from_host_buffer::<f32>(&[0.0], &[1], Some(3))
+            .is_err());
+        assert!(PjRtClient::cpu_with_devices(0).is_err());
+        assert!(PjRtClient::cpu_with_devices(MAX_SIM_DEVICES + 1).is_err());
+    }
+
+    #[test]
+    fn execution_follows_input_device_and_rejects_mixing() {
+        let client = PjRtClient::cpu_with_devices(2).unwrap();
+        let b = XlaBuilder::new("id");
+        let shape = Shape::array::<f32>(vec![2]);
+        let x = b.parameter_s(0, &shape, "x").unwrap();
+        let y = b.parameter_s(1, &shape, "y").unwrap();
+        let comp = b.tuple(&[(x + y).unwrap()]).unwrap().build().unwrap();
+        let exe = client.compile(&comp).unwrap();
+        let on1a = client
+            .buffer_from_host_buffer::<f32>(&[1.0, 2.0], &[2], Some(1))
+            .unwrap();
+        let on1b = client
+            .buffer_from_host_buffer::<f32>(&[3.0, 4.0], &[2], Some(1))
+            .unwrap();
+        let out = exe.execute_b(&[&on1a, &on1b]).unwrap();
+        let sum = out[0][0].tuple_parts().unwrap()[0].clone();
+        assert_eq!(sum.device(), 1, "result stays on the input device");
+        let before = client.device_transfer_stats(1).unwrap();
+        sum.to_literal_sync().unwrap();
+        let d = client.device_transfer_stats(1).unwrap().since(&before);
+        assert_eq!(d.d2h_bytes, 8, "download metered on the owning device");
+        assert_eq!(client.device_transfer_stats(0).unwrap().d2h_bytes, 0);
+        // mixing devices in one execution is an error
+        let on0 = client
+            .buffer_from_host_buffer::<f32>(&[0.0, 0.0], &[2], Some(0))
+            .unwrap();
+        let err = exe.execute_b(&[&on0, &on1a]).unwrap_err();
+        assert!(err.to_string().contains("span devices"), "{err}");
+    }
+
+    #[test]
+    fn all_reduce_is_fixed_order_and_composes_with_reduce_sum() {
+        let client = PjRtClient::cpu_with_devices(4).unwrap();
+        // full-batch ReduceSum over 16 elements vs the all-reduce of
+        // per-shard partial sums: bit-identical (the composition law
+        // the replicated trainer rests on)
+        let full: Vec<f32> = (0..16).map(|i| ((i as f32) * 0.73).sin() * 3.0).collect();
+        let sum_of = |v: &[f32], device: usize| {
+            let b = XlaBuilder::new("sum");
+            let shape = Shape::array::<f32>(vec![v.len()]);
+            let x = b.parameter_s(0, &shape, "x").unwrap();
+            let comp = b.tuple(&[x.reduce_sum().unwrap()]).unwrap().build().unwrap();
+            let exe = client.compile(&comp).unwrap();
+            let buf = client
+                .buffer_from_host_buffer::<f32>(v, &[v.len()], Some(device))
+                .unwrap();
+            exe.execute_b(&[&buf]).unwrap()[0][0].tuple_parts().unwrap()[0].clone()
+        };
+        let want = sum_of(&full, 0)
+            .to_literal_sync()
+            .unwrap()
+            .to_vec::<f32>()
+            .unwrap();
+        for replicas in [2usize, 4] {
+            let shard = full.len() / replicas;
+            let partials: Vec<PjRtBuffer> = (0..replicas)
+                .map(|r| sum_of(&full[r * shard..(r + 1) * shard], r))
+                .collect();
+            let refs: Vec<&PjRtBuffer> = partials.iter().collect();
+            let before = client.device_transfer_stats(0).unwrap();
+            let reduced = client.all_reduce_sum(&refs).unwrap();
+            assert_eq!(reduced.len(), replicas);
+            for (r, buf) in reduced.iter().enumerate() {
+                assert_eq!(buf.device(), r);
+                let got = buf.to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+                assert_eq!(got, want, "replicas={replicas} replica={r}");
+            }
+            let d = client.device_transfer_stats(0).unwrap().since(&before);
+            assert_eq!(d.ar_bytes, 4, "scalar payload metered per device");
+            assert_eq!(d.ar_calls, 1);
+        }
+        // single participant: identity, nothing metered
+        let lone = client
+            .buffer_from_host_buffer::<f32>(&[5.0], &[1], Some(2))
+            .unwrap();
+        let before = client.device_transfer_stats(2).unwrap();
+        let out = client.all_reduce_sum(&[&lone]).unwrap();
+        assert_eq!(
+            out[0].to_literal_sync().unwrap().to_vec::<f32>().unwrap(),
+            vec![5.0]
+        );
+        assert_eq!(client.device_transfer_stats(2).unwrap().since(&before).ar_calls, 0);
+        // shape mismatch is an error
+        let bad = client.buffer_from_host_buffer::<f32>(&[0.0; 2], &[2], None).unwrap();
+        assert!(client.all_reduce_sum(&[&lone, &bad]).is_err());
+        assert!(client.all_reduce_sum(&[]).is_err());
     }
 
     #[test]

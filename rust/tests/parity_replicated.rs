@@ -1,0 +1,450 @@
+//! Replica-parity + determinism suite for data-parallel training on
+//! the host-sim backend (`runtime::replicated`).
+//!
+//! The pinned invariants:
+//!
+//! * **Bitwise parity** — N ∈ {1, 2, 4} replicas produce *bit-identical*
+//!   losses, params, masks and optimiser state to the single-device
+//!   baseline over ≥3 mask-refresh cycles, including through a mid-run
+//!   checkpoint save/restore (and a single-device checkpoint restores
+//!   into a replicated run).
+//! * **Exact per-replica traffic** — the "batch up, loss down"
+//!   steady-state invariant of `parity_device_state.rs`, extended per
+//!   replica: each device streams exactly its batch shard + the step
+//!   scalars up, the loss comes down from replica 0 only, and the
+//!   all-reduce moves exactly the payload per device per step.
+//! * **Fixed-order all-reduce** — canonical-order pairwise reduction:
+//!   invariant to replica completion order, exact under f32 fixed-order
+//!   semantics, and batch sharding covers every example exactly once
+//!   for arbitrary batch/replica combinations.
+//!
+//! CI runs this suite under a `REPLICAS` env matrix (1, 2, 4); without
+//! the variable every replica count is exercised in one process.
+
+use topkast::coordinator::{Trainer, TrainerConfig};
+use topkast::runtime::{shard_ranges, Synthetic};
+use topkast::sparsity::TopKast;
+use topkast::util::proptest::{ensure, property_cases};
+use topkast::xla::PjRtClient;
+
+fn cfg(steps: usize, refresh_every: usize, seed: u64, replicas: usize) -> TrainerConfig {
+    TrainerConfig { steps, refresh_every, seed, replicas, ..TrainerConfig::default() }
+}
+
+fn strategy() -> Box<TopKast> {
+    Box::new(TopKast::from_sparsities(0.8, 0.5))
+}
+
+/// Replica counts to exercise: the `REPLICAS` env var pins one (the CI
+/// matrix); otherwise all of {1, 2, 4} run in-process.
+fn replicas_under_test() -> Vec<usize> {
+    match std::env::var("REPLICAS") {
+        Ok(v) => vec![v
+            .parse()
+            .unwrap_or_else(|_| panic!("REPLICAS must be an integer, got {v:?}"))],
+        Err(_) => vec![1, 2, 4],
+    }
+}
+
+fn multi_replicas() -> Vec<usize> {
+    replicas_under_test().into_iter().filter(|&r| r > 1).collect()
+}
+
+/// Bitwise comparison of two trainers' full host-visible state.
+fn assert_trainers_match(a: &mut Trainer, b: &mut Trainer, tag: &str) {
+    a.sync_host().unwrap();
+    b.sync_host().unwrap();
+    for (ea, eb) in a.store.entries.iter().zip(&b.store.entries) {
+        assert_eq!(ea.values, eb.values, "{tag}: params diverged on {}", ea.spec.name);
+        match (&ea.masks, &eb.masks) {
+            (Some(ma), Some(mb)) => {
+                assert_eq!(ma.fwd(), mb.fwd(), "{tag}: fwd mask {}", ea.spec.name);
+                assert_eq!(ma.bwd(), mb.bwd(), "{tag}: bwd mask {}", ea.spec.name);
+            }
+            (None, None) => {}
+            _ => panic!("{tag}: mask presence mismatch"),
+        }
+    }
+    assert_eq!(a.opt_slots(), b.opt_slots(), "{tag}: optimiser state");
+}
+
+#[test]
+fn replicated_matches_single_device_bitwise_over_refresh_cycles() {
+    for synth in [Synthetic::tiny(), Synthetic::small()] {
+        for replicas in replicas_under_test() {
+            // 11 steps / refresh every 3 → refreshes at 0, 3, 6, 9
+            // (≥3 full cycles)
+            let steps = 11;
+            let mut baseline = synth.trainer(strategy(), cfg(steps, 3, 5, 1)).unwrap();
+            let mut replicated =
+                synth.trainer(strategy(), cfg(steps, 3, 5, replicas)).unwrap();
+            assert_eq!(replicated.replica_count(), replicas);
+            for s in 0..steps {
+                let a = baseline.train_step().unwrap();
+                let b = replicated.train_step().unwrap();
+                assert_eq!(
+                    a, b,
+                    "{} x{replicas}: loss diverged at step {s}",
+                    synth.model.name
+                );
+            }
+            replicated.verify_replica_lockstep().unwrap();
+            let tag = format!("{} x{replicas}", synth.model.name);
+            assert_trainers_match(&mut replicated, &mut baseline, &tag);
+            // eval reads replica 0's resident buffers — same bits, same
+            // result
+            let ea = baseline.evaluate().unwrap();
+            let eb = replicated.evaluate().unwrap();
+            assert_eq!(ea.loss_mean, eb.loss_mean, "{tag}: eval loss");
+        }
+    }
+}
+
+#[test]
+fn parity_survives_checkpoint_restore_mid_run() {
+    let synth = Synthetic::tiny();
+    for replicas in replicas_under_test() {
+        let total = 12;
+        // run 7 steps on both paths; the mid-run checkpoints must agree
+        let mut base1 = synth.trainer(strategy(), cfg(total, 3, 13, 1)).unwrap();
+        let mut repl1 = synth.trainer(strategy(), cfg(total, 3, 13, replicas)).unwrap();
+        for _ in 0..7 {
+            let a = base1.train_step().unwrap();
+            let b = repl1.train_step().unwrap();
+            assert_eq!(a, b, "x{replicas}: pre-checkpoint loss diverged");
+        }
+        let ck_base = base1.capture_checkpoint().unwrap();
+        let ck_repl = repl1.capture_checkpoint().unwrap();
+        assert_eq!(ck_base.step, 7);
+        assert_eq!(ck_repl.step, 7);
+        assert_eq!(ck_base.params, ck_repl.params, "x{replicas}: checkpoint params");
+        assert_eq!(ck_base.masks_fwd, ck_repl.masks_fwd);
+        assert_eq!(ck_base.masks_bwd, ck_repl.masks_bwd);
+        assert_eq!(ck_base.opt, ck_repl.opt, "x{replicas}: checkpoint opt");
+
+        // cross-restore: the *single-device* checkpoint resumes a
+        // replicated run (fresh runtime, fresh device set), against a
+        // restored single-device reference
+        let mut base2 = synth.trainer(strategy(), cfg(total, 3, 13, 1)).unwrap();
+        base2.restore_checkpoint(&ck_base).unwrap();
+        let mut repl2 = synth.trainer(strategy(), cfg(total, 3, 13, replicas)).unwrap();
+        repl2.restore_checkpoint(&ck_base).unwrap();
+        for s in 7..total {
+            let a = base2.train_step().unwrap();
+            let b = repl2.train_step().unwrap();
+            assert_eq!(a, b, "x{replicas}: post-restore loss diverged at step {s}");
+        }
+        repl2.verify_replica_lockstep().unwrap();
+        assert_trainers_match(&mut repl2, &mut base2, &format!("restore x{replicas}"));
+    }
+}
+
+#[test]
+fn steady_state_per_replica_traffic_is_exact() {
+    let synth = Synthetic::tiny();
+    for replicas in multi_replicas() {
+        // refresh only at step 0 → steps 1.. are pure steady state
+        let mut trainer =
+            synth.trainer(strategy(), cfg(40, 1000, 3, replicas)).unwrap();
+        let traffic = trainer.traffic().unwrap();
+        assert_eq!(traffic.replicas, replicas as u64);
+        assert_eq!(
+            traffic.step_h2d_bytes,
+            replicas as u64 * traffic.replica_step_h2d_bytes,
+            "aggregate = replicas × per-replica"
+        );
+        let rep = trainer.model.replication.as_ref().unwrap();
+        let payload_tensors = rep.grad.outputs.len() as u64;
+        let layout = trainer.model.replicated_layout(replicas).unwrap();
+        let uploads_per_step = (layout.per_replica.batch.len()
+            + layout.per_replica.scalars.len()) as u64;
+
+        trainer.train_step().unwrap(); // step 0: refresh + mask upload
+        let before: Vec<_> = (0..replicas)
+            .map(|r| trainer.runtime.device_transfer_stats(r).unwrap())
+            .collect();
+        let n = 5u64;
+        for _ in 0..n {
+            trainer.train_step().unwrap();
+        }
+        for r in 0..replicas {
+            let d = trainer
+                .runtime
+                .device_transfer_stats(r)
+                .unwrap()
+                .since(&before[r]);
+            // batch shard + step scalars up, per replica
+            assert_eq!(
+                d.h2d_bytes,
+                n * traffic.replica_step_h2d_bytes,
+                "replica {r}: h2d bytes/step"
+            );
+            assert_eq!(
+                d.h2d_calls,
+                n * uploads_per_step,
+                "replica {r}: uploads/step (shard x, shard y, scalars)"
+            );
+            // the all-reduce payload crosses the interconnect once per
+            // payload tensor per step, on every device
+            assert_eq!(
+                d.ar_bytes,
+                n * traffic.allreduce_step_bytes / replicas as u64,
+                "replica {r}: all-reduce bytes/step"
+            );
+            assert_eq!(d.ar_calls, n * payload_tensors, "replica {r}: ar calls");
+            // only replica 0 talks back to the host (the loss scalar)
+            if r == 0 {
+                assert_eq!(d.d2h_bytes, n * traffic.step_d2h_bytes, "loss down");
+                assert_eq!(d.d2h_calls, n);
+            } else {
+                assert_eq!(d.d2h_bytes, 0, "replica {r}: no downloads");
+                assert_eq!(d.d2h_calls, 0);
+            }
+        }
+        // aggregate view matches the model too ("batch up, loss down")
+        let total: topkast::xla::TransferSnapshot = {
+            let mut agg = topkast::xla::TransferSnapshot::default();
+            for (r, earlier) in before.iter().enumerate() {
+                let now = trainer.runtime.device_transfer_stats(r).unwrap();
+                agg.accumulate(&now.since(earlier));
+            }
+            agg
+        };
+        assert_eq!(total.h2d_bytes, n * traffic.step_h2d_bytes);
+        assert_eq!(total.d2h_bytes, n * traffic.step_d2h_bytes);
+        assert_eq!(total.ar_bytes, n * traffic.allreduce_step_bytes);
+        // lockstep still holds (this downloads state, so it comes last)
+        trainer.verify_replica_lockstep().unwrap();
+    }
+}
+
+#[test]
+fn refresh_broadcasts_masks_to_every_replica() {
+    let synth = Synthetic::tiny();
+    for replicas in multi_replicas() {
+        let mut trainer = synth.trainer(strategy(), cfg(10, 4, 3, replicas)).unwrap();
+        let traffic = trainer.traffic().unwrap();
+        for _ in 0..4 {
+            trainer.train_step().unwrap(); // step 0 refresh + 3 steady
+        }
+        // step 4 is a refresh: θ comes down from replica 0 once; the
+        // new masks broadcast to every replica
+        let before: Vec<_> = (0..replicas)
+            .map(|r| trainer.runtime.device_transfer_stats(r).unwrap())
+            .collect();
+        trainer.train_step().unwrap();
+        let per_replica_mask_bytes = traffic.refresh_h2d_bytes / replicas as u64;
+        for r in 0..replicas {
+            let d = trainer
+                .runtime
+                .device_transfer_stats(r)
+                .unwrap()
+                .since(&before[r]);
+            assert_eq!(
+                d.h2d_bytes,
+                per_replica_mask_bytes + traffic.replica_step_h2d_bytes,
+                "replica {r}: refresh uploads its mask copy + the step shard"
+            );
+            if r == 0 {
+                assert_eq!(
+                    d.d2h_bytes,
+                    traffic.refresh_d2h_bytes + traffic.step_d2h_bytes,
+                    "refresh syncs θ from the host-facing replica only"
+                );
+            } else {
+                assert_eq!(d.d2h_bytes, 0, "replica {r}: refresh costs no download");
+            }
+        }
+        // the single host decision reached every device: still lockstep
+        trainer.verify_replica_lockstep().unwrap();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// property tests: the fixed-order all-reduce primitive + batch sharding
+// ---------------------------------------------------------------------------
+
+/// Host-side reference of the canonical pairwise tree the sim uses.
+fn reference_tree(vals: &[Vec<f32>], j: usize) -> f32 {
+    fn go(vals: &[Vec<f32>], j: usize) -> f32 {
+        match vals.len() {
+            1 => vals[0][j],
+            n => {
+                let m = n.div_ceil(2);
+                go(&vals[..m], j) + go(&vals[m..], j)
+            }
+        }
+    }
+    go(vals, j)
+}
+
+#[test]
+fn property_all_reduce_is_canonical_order_and_exact() {
+    property_cases("all-reduce: fixed order, exact f32 tree sum", 96, |rng| {
+        let replicas = 1 + rng.next_below(6) as usize;
+        let len = 1 + rng.next_below(32) as usize;
+        let vals: Vec<Vec<f32>> = (0..replicas)
+            .map(|_| (0..len).map(|_| rng.normal_f32(2.0)).collect())
+            .collect();
+        let client = PjRtClient::cpu_with_devices(replicas).map_err(|e| e.to_string())?;
+        // "completion order" = the order partials were produced; upload
+        // in a rotated order, reduce in canonical order
+        let rotate = rng.next_below(replicas as u64) as usize;
+        let mut bufs = vec![None; replicas];
+        for i in 0..replicas {
+            let r = (i + rotate) % replicas;
+            bufs[r] = Some(
+                client
+                    .buffer_from_host_buffer::<f32>(&vals[r], &[len], Some(r))
+                    .map_err(|e| e.to_string())?,
+            );
+        }
+        let bufs: Vec<_> = bufs.into_iter().map(|b| b.unwrap()).collect();
+        let refs: Vec<_> = bufs.iter().collect();
+        let reduced = client.all_reduce_sum(&refs).map_err(|e| e.to_string())?;
+        ensure(reduced.len() == replicas, "one result per replica")?;
+        let want: Vec<f32> = (0..len).map(|j| reference_tree(&vals, j)).collect();
+        for (r, buf) in reduced.iter().enumerate() {
+            let got = buf
+                .to_literal_sync()
+                .and_then(|l| l.to_vec::<f32>())
+                .map_err(|e| e.to_string())?;
+            // bitwise: exact fixed-order f32 semantics, not approximate
+            ensure(
+                got.iter().map(|v| v.to_bits()).eq(want.iter().map(|v| v.to_bits())),
+                format!("replica {r}: tree sum mismatch"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_all_reduce_invariant_to_completion_order() {
+    property_cases("all-reduce: completion order irrelevant", 64, |rng| {
+        let replicas = 2 + rng.next_below(4) as usize;
+        let len = 1 + rng.next_below(16) as usize;
+        let vals: Vec<Vec<f32>> = (0..replicas)
+            .map(|_| (0..len).map(|_| rng.normal_f32(1.0)).collect())
+            .collect();
+        let run = |order: Vec<usize>| -> Result<Vec<u32>, String> {
+            let client =
+                PjRtClient::cpu_with_devices(replicas).map_err(|e| e.to_string())?;
+            let mut bufs = vec![None; replicas];
+            for &r in &order {
+                bufs[r] = Some(
+                    client
+                        .buffer_from_host_buffer::<f32>(&vals[r], &[len], Some(r))
+                        .map_err(|e| e.to_string())?,
+                );
+            }
+            let bufs: Vec<_> = bufs.into_iter().map(|b| b.unwrap()).collect();
+            let refs: Vec<_> = bufs.iter().collect();
+            let out = client.all_reduce_sum(&refs).map_err(|e| e.to_string())?;
+            out[0]
+                .to_literal_sync()
+                .and_then(|l| l.to_vec::<f32>())
+                .map(|v| v.iter().map(|x| x.to_bits()).collect())
+                .map_err(|e| e.to_string())
+        };
+        let forward: Vec<usize> = (0..replicas).collect();
+        let mut shuffled = forward.clone();
+        // Fisher–Yates with the property rng
+        for i in (1..shuffled.len()).rev() {
+            let j = rng.next_below(i as u64 + 1) as usize;
+            shuffled.swap(i, j);
+        }
+        ensure(
+            run(forward)? == run(shuffled)?,
+            "result depends on completion order",
+        )
+    });
+}
+
+#[test]
+fn property_sharding_covers_every_example_exactly_once() {
+    property_cases("shard_ranges: exact cover, balanced", 256, |rng| {
+        let n = rng.next_below(201) as usize;
+        let replicas = 1 + rng.next_below(16) as usize;
+        let shards = shard_ranges(n, replicas);
+        ensure(shards.len() == replicas, "one shard per replica")?;
+        // contiguous exact cover: starts chain, ends at n
+        let mut expect_start = 0;
+        for (r, s) in shards.iter().enumerate() {
+            ensure(
+                s.start == expect_start,
+                format!("shard {r} starts at {} not {expect_start}", s.start),
+            )?;
+            ensure(s.end >= s.start, "non-negative shard")?;
+            expect_start = s.end;
+        }
+        ensure(expect_start == n, "shards must cover 0..n exactly")?;
+        // balanced: sizes differ by at most one, extras first
+        let sizes: Vec<usize> = shards.iter().map(|s| s.end - s.start).collect();
+        let (min, max) = (
+            *sizes.iter().min().unwrap_or(&0),
+            *sizes.iter().max().unwrap_or(&0),
+        );
+        ensure(max - min <= 1, format!("unbalanced shards: {sizes:?}"))?;
+        ensure(
+            sizes.windows(2).all(|w| w[0] >= w[1]),
+            "larger shards must come first",
+        )?;
+        // non-divisible remainders really occur in the generated cases
+        let _ = n % replicas;
+        Ok(())
+    });
+}
+
+/// The exactness theorem the replicated trainer rests on, stated
+/// directly: a full power-of-two batch reduction equals the canonical
+/// all-reduce of aligned shard partials, bit for bit.
+#[test]
+fn property_shard_partials_compose_bitwise() {
+    property_cases("pairwise composition over pow2 shards", 96, |rng| {
+        let log_n = 2 + rng.next_below(5); // n ∈ {4..64}
+        let n = 1usize << log_n;
+        let replicas = 1usize << rng.next_below(log_n.min(3)); // R | n, R ≤ 4 or 8
+        let vals: Vec<f32> = (0..n).map(|_| rng.normal_f32(3.0)).collect();
+        let client =
+            PjRtClient::cpu_with_devices(replicas).map_err(|e| e.to_string())?;
+        let sum_on = |v: &[f32], device: usize| -> Result<topkast::xla::PjRtBuffer, String> {
+            let b = topkast::xla::XlaBuilder::new("sum");
+            let shape = topkast::xla::Shape::array::<f32>(vec![v.len()]);
+            let x = b.parameter_s(0, &shape, "x").map_err(|e| e.to_string())?;
+            let comp = b
+                .tuple(&[x.reduce_sum().map_err(|e| e.to_string())?])
+                .and_then(|t| t.build())
+                .map_err(|e| e.to_string())?;
+            let exe = client.compile(&comp).map_err(|e| e.to_string())?;
+            let buf = client
+                .buffer_from_host_buffer::<f32>(v, &[v.len()], Some(device))
+                .map_err(|e| e.to_string())?;
+            Ok(exe.execute_b(&[&buf]).map_err(|e| e.to_string())?[0][0]
+                .tuple_parts()
+                .map_err(|e| e.to_string())?[0]
+                .clone())
+        };
+        let full = sum_on(&vals, 0)?
+            .to_literal_sync()
+            .and_then(|l| l.to_vec::<f32>())
+            .map_err(|e| e.to_string())?;
+        let shard = n / replicas;
+        let partials = (0..replicas)
+            .map(|r| sum_on(&vals[r * shard..(r + 1) * shard], r))
+            .collect::<Result<Vec<_>, _>>()?;
+        let refs: Vec<_> = partials.iter().collect();
+        let reduced = client.all_reduce_sum(&refs).map_err(|e| e.to_string())?;
+        let got = reduced[0]
+            .to_literal_sync()
+            .and_then(|l| l.to_vec::<f32>())
+            .map_err(|e| e.to_string())?;
+        ensure(
+            got[0].to_bits() == full[0].to_bits(),
+            format!(
+                "composition broke: shards({replicas}) gave {} vs full {}",
+                got[0], full[0]
+            ),
+        )
+    });
+}
