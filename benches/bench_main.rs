@@ -77,6 +77,18 @@ fn main() -> Result<()> {
         );
     }
 
+    // sparse_exchange sweeps sparsity levels over the synthetic presets
+    // and *appends* bytes-vs-sparsity lines to BENCH_topkast.json: the
+    // O(nnz) refresh downloads, O(Δnnz) mask broadcasts, and v2-vs-v1
+    // checkpoint sizes of the compact exchange plane.
+    if want("sparse_exchange") {
+        let sw = Stopwatch::start();
+        println!("\n######## sparse_exchange ########");
+        let report = sparse_exchange()?;
+        report.save("sparse_exchange")?;
+        println!("{}", report.summary_line("sparse_exchange", sw.elapsed_ms() / 1e3));
+    }
+
     let manifest = match Manifest::load("artifacts") {
         Ok(m) => m,
         Err(_) => {
@@ -534,7 +546,8 @@ fn step_traffic() -> Result<Report> {
                 (
                     "refresh_bytes",
                     Json::num(
-                        (traffic.refresh_h2d_bytes + traffic.refresh_d2h_bytes) as f64,
+                        (traffic.refresh_h2d_install_bytes + traffic.refresh_d2h_bytes)
+                            as f64,
                     ),
                 ),
                 (
@@ -674,6 +687,131 @@ fn replicated_step_traffic() -> Result<Report> {
         "appended {} replicated_step_traffic records to BENCH_topkast.json",
         lines.len()
     );
+    rep.add(t);
+    Ok(rep)
+}
+
+// ---------------------------------------------------------------------------
+// SPARSE_EXCHANGE — the compact exchange plane across sparsity levels.
+// For each synthetic preset × sparsity ∈ {0.8, 0.9, 0.98}: run the real
+// coordinator under topkast:{s},{s}, meter the per-refresh host↔device
+// bytes (θ values at the active set down, index deltas up — subtracting
+// the known steady-state step traffic), record the analytic TrafficModel
+// account and its legacy-dense counterpart, and write the v2-vs-v1
+// checkpoint sizes. One JSON line per (preset, sparsity) is *appended*
+// to BENCH_topkast.json so exchange-plane scaling joins the trajectory;
+// the CI release smoke asserts refresh bytes shrink monotonically with
+// sparsity.
+// ---------------------------------------------------------------------------
+fn sparse_exchange() -> Result<Report> {
+    use std::io::Write as _;
+    use topkast::coordinator::Checkpoint;
+
+    let mut rep = Report::new();
+    let mut t = Table::new(
+        "sparse_exchange: refresh bytes + checkpoint size vs sparsity (topkast s,s; N=6)",
+        &[
+            "preset",
+            "sparsity",
+            "refresh_d2h_b",
+            "refresh_h2d_b",
+            "legacy_d2h_b",
+            "ckpt_v2_b",
+            "ckpt_v1_b",
+        ],
+    );
+    let mut lines: Vec<String> = Vec::new();
+    let dir = std::env::temp_dir().join("topkast_bench_sparse_exchange");
+    std::fs::create_dir_all(&dir)?;
+    for (preset, synth) in [("tiny", Synthetic::tiny()), ("small", Synthetic::small())]
+    {
+        for sparsity in [0.8, 0.9, 0.98] {
+            let steps = 30usize;
+            let refresh_every = 6usize;
+            let cfg = TrainerConfig {
+                steps,
+                refresh_every,
+                seed: 7,
+                ..TrainerConfig::default()
+            };
+            let mut trainer = synth.trainer(
+                Box::new(TopKast::from_sparsities(sparsity, sparsity)),
+                cfg,
+            )?;
+            let traffic = trainer.traffic()?;
+            // meter each post-warmup refresh step and subtract the
+            // steady-state step cost to isolate the refresh bytes
+            let (mut refresh_h2d, mut refresh_d2h, mut refreshes) = (0u64, 0u64, 0u64);
+            for step in 0..steps {
+                let is_refresh = step > 0 && step % refresh_every == 0;
+                let before = trainer.runtime.transfer_stats();
+                trainer.train_step()?;
+                if is_refresh {
+                    let d = trainer.runtime.transfer_stats().since(&before);
+                    refresh_h2d += d.h2d_bytes - traffic.step_h2d_bytes;
+                    refresh_d2h += d.d2h_bytes - traffic.step_d2h_bytes;
+                    refreshes += 1;
+                }
+            }
+            let mean_h2d = refresh_h2d / refreshes.max(1);
+            let mean_d2h = refresh_d2h / refreshes.max(1);
+            // checkpoint sizes: compact v2 vs the legacy dense v1
+            let ck = trainer.capture_checkpoint()?;
+            let dense =
+                Checkpoint::capture_dense(&trainer.store, trainer.opt_slots(), ck.step);
+            let v2_path = dir.join(format!("{preset}_{sparsity}_v2.ckpt"));
+            let v1_path = dir.join(format!("{preset}_{sparsity}_v1.ckpt"));
+            ck.save(&v2_path)?;
+            dense.save_v1(&v1_path)?;
+            let v2_bytes = std::fs::metadata(&v2_path)?.len();
+            let v1_bytes = std::fs::metadata(&v1_path)?.len();
+            t.row(vec![
+                preset.into(),
+                format!("{sparsity}"),
+                mean_d2h.to_string(),
+                mean_h2d.to_string(),
+                traffic.legacy_refresh_d2h_bytes.to_string(),
+                v2_bytes.to_string(),
+                v1_bytes.to_string(),
+            ]);
+            lines.push(
+                Json::obj(vec![
+                    ("scenario", Json::str("sparse_exchange")),
+                    ("preset", Json::str(preset)),
+                    ("sparsity", Json::num(sparsity)),
+                    ("steps", Json::num(steps as f64)),
+                    ("refresh_d2h_bytes", Json::num(traffic.refresh_d2h_bytes as f64)),
+                    (
+                        "refresh_h2d_install_bytes",
+                        Json::num(traffic.refresh_h2d_install_bytes as f64),
+                    ),
+                    (
+                        "legacy_refresh_d2h_bytes",
+                        Json::num(traffic.legacy_refresh_d2h_bytes as f64),
+                    ),
+                    (
+                        "legacy_refresh_h2d_bytes",
+                        Json::num(traffic.legacy_refresh_h2d_bytes as f64),
+                    ),
+                    ("measured_refresh_d2h_bytes", Json::num(mean_d2h as f64)),
+                    ("measured_refresh_h2d_bytes", Json::num(mean_h2d as f64)),
+                    ("checkpoint_v2_bytes", Json::num(v2_bytes as f64)),
+                    ("checkpoint_v1_bytes", Json::num(v1_bytes as f64)),
+                ])
+                .to_string_compact(),
+            );
+            // the measured refresh can never exceed the analytic
+            // worst case (full reinstall) or undershoot the θ download
+            assert!(mean_d2h == traffic.refresh_d2h_bytes);
+            assert!(mean_h2d <= traffic.refresh_h2d_install_bytes * 2);
+        }
+    }
+    let mut file = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open("BENCH_topkast.json")?;
+    file.write_all((lines.join("\n") + "\n").as_bytes())?;
+    println!("appended {} sparse_exchange records to BENCH_topkast.json", lines.len());
     rep.add(t);
     Ok(rep)
 }

@@ -20,6 +20,7 @@ use std::thread::JoinHandle;
 use anyhow::{bail, Result};
 
 use crate::sparsity::{MaskPair, MaskStrategy, ParamStore, TensorCtx};
+use crate::tensor::SparseSet;
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
 
@@ -73,13 +74,13 @@ impl AsyncMaskRefresher {
                     let mut masks = Vec::with_capacity(req.weights.len());
                     for (name, mut w) in req.weights {
                         let n = w.len();
-                        let mut fwd = vec![0.0f32; n];
-                        let mut bwd = vec![0.0f32; n];
+                        let mut fwd = SparseSet::empty(n);
+                        let mut bwd = SparseSet::empty(n);
                         let ctx = TensorCtx {
                             name: &name,
                             weights: &mut w,
-                            mask_fwd: &mut fwd,
-                            mask_bwd: &mut bwd,
+                            fwd: &mut fwd,
+                            bwd: &mut bwd,
                             grad_norms: None,
                             rng: &mut rng,
                             step: req.step,
@@ -88,7 +89,7 @@ impl AsyncMaskRefresher {
                         if strategy.update_tensor(ctx).is_err() {
                             return; // trainer side will notice the hangup
                         }
-                        masks.push((name, MaskPair::from_vecs(fwd, bwd)));
+                        masks.push((name, MaskPair::from_sets(fwd, bwd)));
                     }
                     let _ = res_tx.send(RefreshResult {
                         step: req.step,
@@ -156,7 +157,9 @@ impl AsyncMaskRefresher {
                 for (name, pair) in res.masks {
                     let e = store.get_mut(&name)?;
                     if let Some(m) = e.masks.as_mut() {
-                        *m = pair;
+                        // install (not assign): the store pair keeps its
+                        // accumulated `touched` history
+                        m.install(&pair);
                     }
                 }
                 self.in_flight = false;
@@ -180,7 +183,7 @@ impl AsyncMaskRefresher {
         for (name, pair) in res.masks {
             let e = store.get_mut(&name)?;
             if let Some(m) = e.masks.as_mut() {
-                *m = pair;
+                m.install(&pair);
             }
         }
         self.in_flight = false;
@@ -251,8 +254,9 @@ mod tests {
         let m = e.masks.as_ref().unwrap();
         let want_fwd = topk::topk_mask(&e.values, topk::k_for_density(40, 0.2));
         let want_bwd = topk::topk_mask(&e.values, topk::k_for_density(40, 0.5));
-        assert_eq!(m.fwd(), &want_fwd[..]);
-        assert_eq!(m.bwd(), &want_bwd[..]);
+        assert_eq!(m.fwd_dense(), want_fwd);
+        assert_eq!(m.bwd_dense(), want_bwd);
+        assert!(m.fwd().is_subset_of(m.touched()), "install must touch");
         assert_eq!(r.applied, 1);
     }
 

@@ -1,84 +1,350 @@
-//! Checkpointing: dense θ + masks + optimiser state + step counter.
+//! Checkpointing: θ + masks + optimiser state + step counter, in a
+//! versioned binary container.
 //!
-//! Container format (offline — no serde/flatbuffers): a JSON header
-//! describing tensor names/shapes/offsets, then raw little-endian f32
-//! blobs. Deterministic layout so checkpoints diff/rehash cleanly.
+//! Container format (offline — no serde/flatbuffers): a 4-byte magic
+//! with an explicit version digit, a u64 header length, a JSON header
+//! describing typed sections (name/kind/dtype/offset/len), then the
+//! raw little-endian blob. Deterministic layout so checkpoints
+//! diff/rehash cleanly.
 //!
-//!   magic "TKC1" | u64 header_len | header JSON | blob bytes
+//!   magic "TKC1"|"TKC2" | u64 header_len | header JSON | blob bytes
+//!
+//! **v2 (written by [`Checkpoint::save`])** is the compact sparse
+//! format: masks are stored as sorted u32 index lists, and a sparse
+//! tensor's θ/opt values are stored only at its `touched` set (the
+//! union of every active set it ever trained under — see
+//! [`crate::sparsity::MaskPair`]). Positions outside `touched` provably
+//! hold their init values (and exactly-zero optimiser slots), so a v2
+//! checkpoint restores **bit-exactly** into a store initialised with
+//! the same seed — which the header records and [`Checkpoint::restore`]
+//! verifies. At 90 % sparsity this cuts checkpoint size by well over
+//! 4× vs the dense format. Tensors whose touched set grew past the
+//! break-even point fall back to dense sections (still v2).
+//!
+//! **v1 (legacy, readable forever; written by [`Checkpoint::save_v1`])**
+//! stores dense f32 everything — params, 0/1 masks, opt — and restores
+//! into any store regardless of seed.
 
-use std::io::{Read, Write};
+use std::io::Write;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
 use crate::sparsity::ParamStore;
+use crate::tensor::{SparseSet, SparseSlice};
 use crate::util::json::Json;
 
-const MAGIC: &[u8; 4] = b"TKC1";
+const MAGIC_V1: &[u8; 4] = b"TKC1";
+const MAGIC_V2: &[u8; 4] = b"TKC2";
+
+/// One tensor's (or optimiser slot's) stored values.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorPayload {
+    /// Every element, dense f32 (dense tensors; legacy v1 files; sparse
+    /// tensors past the sparse-storage break-even point).
+    Dense(Vec<f32>),
+    /// Values at the tensor's touched indices only. Restoring requires
+    /// the target's untouched positions to already hold the right
+    /// values (same-seed init for θ; zeros for opt — re-zeroed on
+    /// restore).
+    Sparse(SparseSlice),
+}
+
+impl TensorPayload {
+    fn stored_values(&self) -> usize {
+        match self {
+            TensorPayload::Dense(v) => v.len(),
+            TensorPayload::Sparse(s) => s.len(),
+        }
+    }
+}
 
 pub struct Checkpoint {
     pub step: usize,
-    pub params: Vec<(String, Vec<f32>)>,
-    pub masks_fwd: Vec<(String, Vec<f32>)>,
-    pub masks_bwd: Vec<(String, Vec<f32>)>,
-    pub opt: Vec<Vec<f32>>,
+    /// `ParamStore::init` seed of the captured run — recorded so
+    /// sparse payloads can verify the restore target reconstructs the
+    /// same untouched values. None for legacy v1 files and hand-built
+    /// stores (which force dense capture).
+    pub seed: Option<u64>,
+    pub params: Vec<(String, TensorPayload)>,
+    pub masks_fwd: Vec<(String, SparseSet)>,
+    pub masks_bwd: Vec<(String, SparseSet)>,
+    /// Per-sparse-tensor touched sets (the index lists sparse payloads
+    /// are aligned to). Parallel to the sparse entries, keyed by name.
+    pub touched: Vec<(String, SparseSet)>,
+    pub opt: Vec<TensorPayload>,
+}
+
+/// Whether sparse storage pays for a tensor: idx (t) + θ values (t) +
+/// opt values (slots·t) vs dense (1+slots)·n words.
+fn worth_sparse(touched: usize, n: usize, slots: usize) -> bool {
+    touched * (2 + slots) < n * (1 + slots)
 }
 
 impl Checkpoint {
+    /// Snapshot a store + optimiser mirror compactly: sparse tensors
+    /// store touched-indexed values (when that is smaller), masks are
+    /// index sets. Requires the caller to have synced the host first.
     pub fn capture(store: &ParamStore, opt: &[Vec<f32>], step: usize) -> Self {
+        Self::capture_impl(store, opt, step, true)
+    }
+
+    /// Snapshot with every payload dense — the legacy representation
+    /// ([`Checkpoint::save_v1`] requires it; also the fallback for
+    /// stores without a recorded init seed).
+    pub fn capture_dense(store: &ParamStore, opt: &[Vec<f32>], step: usize) -> Self {
+        Self::capture_impl(store, opt, step, false)
+    }
+
+    fn capture_impl(
+        store: &ParamStore,
+        opt: &[Vec<f32>],
+        step: usize,
+        compact: bool,
+    ) -> Self {
+        // without an init seed, untouched values cannot be regenerated
+        // at restore — fall back to dense payloads
+        let compact = compact && store.init_seed().is_some();
+        let slots = if store.entries.is_empty() {
+            0
+        } else {
+            opt.len() / store.entries.len()
+        };
         let mut params = vec![];
         let mut masks_fwd = vec![];
         let mut masks_bwd = vec![];
-        for e in &store.entries {
-            params.push((e.spec.name.clone(), e.values.clone()));
-            if let Some(m) = &e.masks {
-                masks_fwd.push((e.spec.name.clone(), m.fwd().to_vec()));
-                masks_bwd.push((e.spec.name.clone(), m.bwd().to_vec()));
+        let mut touched = vec![];
+        let mut opt_payloads: Vec<TensorPayload> = Vec::with_capacity(opt.len());
+        for (i, e) in store.entries.iter().enumerate() {
+            let name = e.spec.name.clone();
+            let sparse_here = compact
+                && e.masks.as_ref().is_some_and(|m| {
+                    worth_sparse(m.touched().len(), e.values.len(), slots)
+                });
+            if sparse_here {
+                let m = e.masks.as_ref().expect("checked");
+                let t = m.touched().clone();
+                params.push((
+                    name.clone(),
+                    TensorPayload::Sparse(SparseSlice::gather(&t, &e.values)),
+                ));
+                for j in 0..slots {
+                    opt_payloads
+                        .push(TensorPayload::Sparse(SparseSlice::gather(&t, &opt[i * slots + j])));
+                }
+                touched.push((name.clone(), t));
+            } else {
+                params.push((name.clone(), TensorPayload::Dense(e.values.clone())));
+                for j in 0..slots {
+                    opt_payloads.push(TensorPayload::Dense(opt[i * slots + j].clone()));
+                }
             }
+            if let Some(m) = &e.masks {
+                masks_fwd.push((name.clone(), m.fwd().clone()));
+                masks_bwd.push((name, m.bwd().clone()));
+            }
+        }
+        // any slots past entries × slots (ragged callers) stay dense
+        for slot in &opt[store.entries.len() * slots..] {
+            opt_payloads.push(TensorPayload::Dense(slot.clone()));
         }
         Checkpoint {
             step,
+            seed: store.init_seed(),
             params,
             masks_fwd,
             masks_bwd,
-            opt: opt.to_vec(),
+            touched,
+            opt: opt_payloads,
         }
     }
 
-    /// Restore into a store (+ opt slots). Shapes must match.
+    /// Restore into a store (+ opt slots). Shapes must match. Sparse
+    /// payloads reconstruct untouched positions by replaying the
+    /// captured run's init from the recorded seed, so they restore
+    /// exactly into any store built from the same specs — fresh, other
+    /// seed, or trained past the checkpoint (a rollback).
     pub fn restore(&self, store: &mut ParamStore, opt: &mut [Vec<f32>]) -> Result<()> {
-        for (name, vals) in &self.params {
-            store.set_values(name, vals.clone())?;
-        }
-        for (name, m) in &self.masks_fwd {
-            let e = store.get_mut(name)?;
-            let masks = e.masks.as_mut().context("mask on dense tensor")?;
-            if masks.fwd().len() != m.len() {
-                bail!("mask size mismatch for {name}");
+        for (name, payload) in &self.params {
+            match payload {
+                TensorPayload::Dense(vals) => {
+                    store.set_values(name, vals.clone())?;
+                    if let Some(m) = store.get_mut(name)?.masks.as_mut() {
+                        // dense payload carries no touched history —
+                        // assume fully trained
+                        m.mark_all_touched();
+                    }
+                }
+                TensorPayload::Sparse(slice) => {
+                    let seed = self.seed.context(
+                        "sparse checkpoint carries no init seed: values \
+                         outside the touched set cannot be reconstructed \
+                         (re-save with Checkpoint::capture_dense)",
+                    )?;
+                    // Reset the tensor to the captured run's init base
+                    // (replayed from the recorded seed), then scatter
+                    // the stored values on top. This is exact whatever
+                    // state the target holds — a fresh store, or one
+                    // trained past the checkpoint being rolled back to
+                    // — as long as it was built from the same specs.
+                    let init = store.regenerate_init_values(name, seed)?;
+                    let e = store.get_mut(name)?;
+                    if slice.indices.domain() != e.values.len() {
+                        bail!(
+                            "sparse payload for {name} indexes {} elements, \
+                             store tensor has {}",
+                            slice.indices.domain(),
+                            e.values.len()
+                        );
+                    }
+                    e.values = init;
+                    slice.scatter_into(&mut e.values);
+                    let m = e.masks.as_mut().with_context(|| {
+                        format!("sparse payload for dense tensor {name}")
+                    })?;
+                    m.set_touched(slice.indices.clone());
+                }
             }
-            masks.set_fwd(m.clone());
         }
-        for (name, m) in &self.masks_bwd {
-            let e = store.get_mut(name)?;
-            let masks = e.masks.as_mut().context("mask on dense tensor")?;
-            if masks.bwd().len() != m.len() {
-                bail!("mask size mismatch for {name}");
+        for (list, is_fwd) in [(&self.masks_fwd, true), (&self.masks_bwd, false)] {
+            for (name, set) in list {
+                let e = store.get_mut(name)?;
+                let masks = e.masks.as_mut().context("mask on dense tensor")?;
+                if set.domain() != masks.domain() {
+                    bail!("mask size mismatch for {name}");
+                }
+                if is_fwd {
+                    masks.set_fwd(set.clone());
+                } else {
+                    masks.set_bwd(set.clone());
+                }
             }
-            masks.set_bwd(m.clone());
         }
         if opt.len() != self.opt.len() {
             bail!("opt slot count mismatch: {} vs {}", opt.len(), self.opt.len());
         }
         for (dst, src) in opt.iter_mut().zip(&self.opt) {
-            if dst.len() != src.len() {
-                bail!("opt slot size mismatch");
+            match src {
+                TensorPayload::Dense(v) => {
+                    if dst.len() != v.len() {
+                        bail!("opt slot size mismatch");
+                    }
+                    dst.copy_from_slice(v);
+                }
+                TensorPayload::Sparse(slice) => {
+                    if slice.indices.domain() != dst.len() {
+                        bail!("opt slot size mismatch");
+                    }
+                    // untouched slots are exactly zero by the touched
+                    // invariant — re-zero, then scatter the stored ones
+                    dst.fill(0.0);
+                    slice.scatter_into(dst);
+                }
             }
-            dst.copy_from_slice(src);
         }
         Ok(())
     }
 
+    /// Write the compact v2 container (sparse sections where captured
+    /// sparsely, dense where not — the format carries both).
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut blob: Vec<u8> = Vec::new();
+        let mut sections = Vec::new();
+        let mut section = |kind: &str,
+                           name: &str,
+                           dtype: &str,
+                           len: usize,
+                           domain: Option<usize>,
+                           blob: &mut Vec<u8>| {
+            let mut fields = vec![
+                ("kind", Json::str(kind)),
+                ("name", Json::str(name)),
+                ("dtype", Json::str(dtype)),
+                ("offset", Json::num(blob.len() as f64)),
+                ("len", Json::num(len as f64)),
+            ];
+            if let Some(d) = domain {
+                fields.push(("domain", Json::num(d as f64)));
+            }
+            sections.push(Json::obj(fields));
+        };
+        let push_f32 = |data: &[f32], blob: &mut Vec<u8>| {
+            for v in data {
+                blob.extend_from_slice(&v.to_le_bytes());
+            }
+        };
+        let push_u32 = |data: &[u32], blob: &mut Vec<u8>| {
+            for v in data {
+                blob.extend_from_slice(&v.to_le_bytes());
+            }
+        };
+        for (n, payload) in &self.params {
+            match payload {
+                TensorPayload::Dense(v) => {
+                    section("param", n, "f32", v.len(), None, &mut blob);
+                    push_f32(v, &mut blob);
+                }
+                TensorPayload::Sparse(s) => {
+                    section(
+                        "param_idx",
+                        n,
+                        "u32",
+                        s.indices.len(),
+                        Some(s.indices.domain()),
+                        &mut blob,
+                    );
+                    push_u32(s.indices.indices(), &mut blob);
+                    section("param_vals", n, "f32", s.values.len(), None, &mut blob);
+                    push_f32(&s.values, &mut blob);
+                }
+            }
+        }
+        for (kind, list) in
+            [("mask_fwd", &self.masks_fwd), ("mask_bwd", &self.masks_bwd)]
+        {
+            for (n, set) in list {
+                section(kind, n, "u32", set.len(), Some(set.domain()), &mut blob);
+                push_u32(set.indices(), &mut blob);
+            }
+        }
+        for (i, payload) in self.opt.iter().enumerate() {
+            let name = format!("slot{i}");
+            match payload {
+                TensorPayload::Dense(v) => {
+                    section("opt", &name, "f32", v.len(), None, &mut blob);
+                    push_f32(v, &mut blob);
+                }
+                TensorPayload::Sparse(s) => {
+                    section(
+                        "opt_vals",
+                        &name,
+                        "f32",
+                        s.values.len(),
+                        Some(s.indices.domain()),
+                        &mut blob,
+                    );
+                    push_f32(&s.values, &mut blob);
+                }
+            }
+        }
+        let mut header_fields = vec![
+            ("version", Json::num(2.0)),
+            ("step", Json::num(self.step as f64)),
+            ("blob_len", Json::num(blob.len() as f64)),
+            ("sections", Json::Arr(sections)),
+        ];
+        if let Some(seed) = self.seed {
+            // as a string: JSON numbers are f64 and cannot carry every u64
+            header_fields.push(("seed", Json::str(seed.to_string())));
+        }
+        let header = Json::obj(header_fields).to_string_compact();
+        write_container(path.as_ref(), MAGIC_V2, &header, &blob)
+    }
+
+    /// Write the legacy v1 container (dense f32 everything). Errors if
+    /// this checkpoint holds sparse payloads — capture with
+    /// [`Checkpoint::capture_dense`] for a v1-writable snapshot.
+    pub fn save_v1(&self, path: impl AsRef<Path>) -> Result<()> {
         let mut blob: Vec<u8> = Vec::new();
         let mut sections = Vec::new();
         let mut push = |kind: &str, name: &str, data: &[f32], blob: &mut Vec<u8>| {
@@ -93,55 +359,97 @@ impl Checkpoint {
                 ("len", Json::num(data.len() as f64)),
             ]));
         };
+        let dense = |p: &TensorPayload| -> Result<Vec<f32>> {
+            match p {
+                TensorPayload::Dense(v) => Ok(v.clone()),
+                TensorPayload::Sparse(_) => bail!(
+                    "v1 checkpoints are dense-only; capture with \
+                     Checkpoint::capture_dense"
+                ),
+            }
+        };
         for (n, v) in &self.params {
-            push("param", n, v, &mut blob);
+            push("param", n, &dense(v)?, &mut blob);
         }
-        for (n, v) in &self.masks_fwd {
-            push("mask_fwd", n, v, &mut blob);
+        for (n, set) in &self.masks_fwd {
+            push("mask_fwd", n, &set.to_dense(), &mut blob);
         }
-        for (n, v) in &self.masks_bwd {
-            push("mask_bwd", n, v, &mut blob);
+        for (n, set) in &self.masks_bwd {
+            push("mask_bwd", n, &set.to_dense(), &mut blob);
         }
         for (i, v) in self.opt.iter().enumerate() {
-            push("opt", &format!("slot{i}"), v, &mut blob);
+            push("opt", &format!("slot{i}"), &dense(v)?, &mut blob);
         }
         let header = Json::obj(vec![
             ("step", Json::num(self.step as f64)),
             ("sections", Json::Arr(sections)),
         ])
         .to_string_compact();
-
-        let tmp = path.as_ref().with_extension("tmp");
-        {
-            let mut f = std::fs::File::create(&tmp)
-                .with_context(|| format!("creating {tmp:?}"))?;
-            f.write_all(MAGIC)?;
-            f.write_all(&(header.len() as u64).to_le_bytes())?;
-            f.write_all(header.as_bytes())?;
-            f.write_all(&blob)?;
-            f.sync_all()?;
-        }
-        std::fs::rename(&tmp, path.as_ref())?; // atomic replace
-        Ok(())
+        write_container(path.as_ref(), MAGIC_V1, &header, &blob)
     }
 
+    /// Load a checkpoint of either format version, with explicit
+    /// corrupt-file/truncation diagnostics (bad magic, unsupported
+    /// version, header/blob truncation, out-of-bounds sections).
     pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
-        let mut f = std::fs::File::open(path.as_ref())
-            .with_context(|| format!("opening {:?}", path.as_ref()))?;
-        let mut magic = [0u8; 4];
-        f.read_exact(&mut magic)?;
-        if &magic != MAGIC {
-            bail!("not a Top-KAST checkpoint (bad magic)");
+        let path = path.as_ref();
+        let data =
+            std::fs::read(path).with_context(|| format!("opening {path:?}"))?;
+        if data.len() < 12 {
+            bail!(
+                "truncated checkpoint {path:?}: {} bytes, but the container \
+                 header (magic + length) needs 12",
+                data.len()
+            );
         }
-        let mut lenb = [0u8; 8];
-        f.read_exact(&mut lenb)?;
-        let hlen = u64::from_le_bytes(lenb) as usize;
-        let mut hbuf = vec![0u8; hlen];
-        f.read_exact(&mut hbuf)?;
-        let header = Json::parse(std::str::from_utf8(&hbuf)?)?;
-        let mut blob = Vec::new();
-        f.read_to_end(&mut blob)?;
+        let magic: [u8; 4] = data[0..4].try_into().expect("4 bytes");
+        let version = if &magic == MAGIC_V1 {
+            1
+        } else if &magic == MAGIC_V2 {
+            2
+        } else if magic[..3] == *b"TKC" {
+            bail!(
+                "unsupported checkpoint version {:?} (this build reads TKC1 \
+                 and TKC2)",
+                String::from_utf8_lossy(&magic)
+            );
+        } else {
+            bail!("not a Top-KAST checkpoint (bad magic {magic:02x?})");
+        };
+        let hlen =
+            u64::from_le_bytes(data[4..12].try_into().expect("8 bytes")) as usize;
+        if hlen > data.len() - 12 {
+            bail!(
+                "corrupt or truncated checkpoint {path:?}: header claims \
+                 {hlen} bytes but only {} remain after the magic",
+                data.len() - 12
+            );
+        }
+        let header_text = std::str::from_utf8(&data[12..12 + hlen])
+            .context("checkpoint header is not valid UTF-8 (corrupt file?)")?;
+        let header = Json::parse(header_text)
+            .context("parsing checkpoint header JSON (corrupt file?)")?;
+        let blob = &data[12 + hlen..];
+        if version == 2 {
+            let declared = header.get("blob_len")?.as_usize()?;
+            if blob.len() != declared {
+                bail!(
+                    "truncated checkpoint {path:?}: header declares a {declared}-byte \
+                     blob, file holds {}",
+                    blob.len()
+                );
+            }
+            let hv = header.get("version")?.as_usize()?;
+            if hv != 2 {
+                bail!("checkpoint header version {hv} does not match magic TKC2");
+            }
+            Self::load_v2(&header, blob)
+        } else {
+            Self::load_v1(&header, blob)
+        }
+    }
 
+    fn load_v1(header: &Json, blob: &[u8]) -> Result<Checkpoint> {
         let step = header.get("step")?.as_usize()?;
         let mut params = vec![];
         let mut masks_fwd = vec![];
@@ -150,26 +458,190 @@ impl Checkpoint {
         for s in header.get("sections")?.as_arr()? {
             let kind = s.get("kind")?.as_str()?;
             let name = s.get("name")?.as_str()?.to_string();
-            let off = s.get("offset")?.as_usize()?;
-            let len = s.get("len")?.as_usize()?;
-            let end = off + len * 4;
-            if end > blob.len() {
-                bail!("section {name} out of bounds");
-            }
-            let data: Vec<f32> = blob[off..end]
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                .collect();
+            let data = read_f32s(blob, s, &name)?;
             match kind {
-                "param" => params.push((name, data)),
-                "mask_fwd" => masks_fwd.push((name, data)),
-                "mask_bwd" => masks_bwd.push((name, data)),
-                "opt" => opt.push(data),
-                k => bail!("unknown section kind {k:?}"),
+                "param" => params.push((name, TensorPayload::Dense(data))),
+                "mask_fwd" => masks_fwd.push((name, SparseSet::from_dense_mask(&data))),
+                "mask_bwd" => masks_bwd.push((name, SparseSet::from_dense_mask(&data))),
+                "opt" => opt.push(TensorPayload::Dense(data)),
+                k => bail!("unknown v1 section kind {k:?}"),
             }
         }
-        Ok(Checkpoint { step, params, masks_fwd, masks_bwd, opt })
+        Ok(Checkpoint {
+            step,
+            seed: None,
+            params,
+            masks_fwd,
+            masks_bwd,
+            touched: vec![],
+            opt,
+        })
     }
+
+    fn load_v2(header: &Json, blob: &[u8]) -> Result<Checkpoint> {
+        let step = header.get("step")?.as_usize()?;
+        let seed = match header.opt("seed") {
+            Some(j) => Some(
+                j.as_str()?
+                    .parse::<u64>()
+                    .context("checkpoint seed is not a u64")?,
+            ),
+            None => None,
+        };
+        let mut params: Vec<(String, TensorPayload)> = vec![];
+        let mut masks_fwd = vec![];
+        let mut masks_bwd = vec![];
+        let mut touched: Vec<(String, SparseSet)> = vec![];
+        let mut opt = vec![];
+        let mut pending_idx: Option<(String, SparseSet)> = None;
+        for s in header.get("sections")?.as_arr()? {
+            let kind = s.get("kind")?.as_str()?;
+            let name = s.get("name")?.as_str()?.to_string();
+            if kind != "param_vals" && pending_idx.is_some() {
+                bail!("param_idx section without a following param_vals");
+            }
+            match kind {
+                "param" => {
+                    params.push((name, TensorPayload::Dense(read_f32s(blob, s, "param")?)))
+                }
+                "param_idx" => {
+                    let domain = s.get("domain")?.as_usize()?;
+                    let set = SparseSet::from_sorted(domain, read_u32s(blob, s, &name)?)
+                        .with_context(|| format!("param_idx for {name}"))?;
+                    pending_idx = Some((name, set));
+                }
+                "param_vals" => {
+                    let Some((idx_name, set)) = pending_idx.take() else {
+                        bail!("param_vals for {name} without a preceding param_idx");
+                    };
+                    if idx_name != name {
+                        bail!(
+                            "param_vals {name:?} does not match param_idx {idx_name:?}"
+                        );
+                    }
+                    let values = read_f32s(blob, s, &name)?;
+                    let slice = SparseSlice::from_parts(set.clone(), values)
+                        .with_context(|| format!("sparse payload for {name}"))?;
+                    touched.push((name.clone(), set));
+                    params.push((name, TensorPayload::Sparse(slice)));
+                }
+                "mask_fwd" | "mask_bwd" => {
+                    let domain = s.get("domain")?.as_usize()?;
+                    let set = SparseSet::from_sorted(domain, read_u32s(blob, s, &name)?)
+                        .with_context(|| format!("{kind} for {name}"))?;
+                    if kind == "mask_fwd" {
+                        masks_fwd.push((name, set));
+                    } else {
+                        masks_bwd.push((name, set));
+                    }
+                }
+                "opt" => opt.push(TensorPayload::Dense(read_f32s(blob, s, &name)?)),
+                "opt_vals" => {
+                    // sparse opt slots are aligned to their param's
+                    // touched set: param-major order, so the owning
+                    // param is opt_index / slots — recovered below once
+                    // all sections are read
+                    opt.push(TensorPayload::Sparse(SparseSlice {
+                        indices: SparseSet::empty(s.get("domain")?.as_usize()?),
+                        values: read_f32s(blob, s, &name)?,
+                    }));
+                }
+                k => bail!("unknown v2 section kind {k:?}"),
+            }
+        }
+        if pending_idx.is_some() {
+            bail!("trailing param_idx section without values");
+        }
+        // wire sparse opt slots to their param's touched set; an
+        // opt_vals section with no param to align to is a corrupt file,
+        // not a panic later in restore
+        let slots = if params.is_empty() { 0 } else { opt.len() / params.len() };
+        for (j, payload) in opt.iter_mut().enumerate() {
+            if let TensorPayload::Sparse(slice) = payload {
+                if slots == 0 {
+                    bail!(
+                        "opt slot{j} is sparse but the checkpoint carries \
+                         no param sections to align it with (corrupt file?)"
+                    );
+                }
+                let (pname, ppayload) = params
+                    .get(j / slots)
+                    .context("opt slot beyond the param list")?;
+                let TensorPayload::Sparse(pslice) = ppayload else {
+                    bail!(
+                        "sparse opt slot{j} belongs to densely-stored \
+                         param {pname}"
+                    );
+                };
+                if pslice.indices.len() != slice.values.len() {
+                    bail!(
+                        "opt slot{j}: {} values vs {} touched indices of {pname}",
+                        slice.values.len(),
+                        pslice.indices.len()
+                    );
+                }
+                slice.indices = pslice.indices.clone();
+            }
+        }
+        Ok(Checkpoint { step, seed, params, masks_fwd, masks_bwd, touched, opt })
+    }
+
+    /// Total stored value count (diagnostics; the on-disk size is ~4×
+    /// this plus the header).
+    pub fn stored_values(&self) -> usize {
+        self.params.iter().map(|(_, p)| p.stored_values()).sum::<usize>()
+            + self.opt.iter().map(|p| p.stored_values()).sum::<usize>()
+            + self.masks_fwd.iter().map(|(_, s)| s.len()).sum::<usize>()
+            + self.masks_bwd.iter().map(|(_, s)| s.len()).sum::<usize>()
+    }
+}
+
+/// Shared atomic container writer (tmp file + rename).
+fn write_container(path: &Path, magic: &[u8; 4], header: &str, blob: &[u8]) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f =
+            std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?;
+        f.write_all(magic)?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        f.write_all(blob)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?; // atomic replace
+    Ok(())
+}
+
+fn section_range(blob: &[u8], s: &Json, name: &str) -> Result<(usize, usize)> {
+    let off = s.get("offset")?.as_usize()?;
+    let len = s.get("len")?.as_usize()?;
+    let end = off
+        .checked_add(len.checked_mul(4).context("section length overflow")?)
+        .context("section offset overflow")?;
+    if end > blob.len() {
+        bail!(
+            "section {name} out of bounds (ends at {end}, blob is {} bytes) — \
+             corrupt or truncated checkpoint",
+            blob.len()
+        );
+    }
+    Ok((off, end))
+}
+
+fn read_f32s(blob: &[u8], s: &Json, name: &str) -> Result<Vec<f32>> {
+    let (off, end) = section_range(blob, s, name)?;
+    Ok(blob[off..end]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn read_u32s(blob: &[u8], s: &Json, name: &str) -> Result<Vec<u32>> {
+    let (off, end) = section_range(blob, s, name)?;
+    Ok(blob[off..end]
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
 }
 
 #[cfg(test)]
@@ -199,26 +671,34 @@ mod tests {
         ]
     }
 
+    fn dir(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(name);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
     #[test]
-    fn roundtrip() {
+    fn v2_roundtrip_dense_payloads() {
         let mut store = ParamStore::init(&specs(), 3);
         {
             let m = store.get_mut("w").unwrap().masks.as_mut().unwrap();
             m.set_fwd(vec![1.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 1.0]);
             m.set_bwd(vec![1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 1.0]);
+            m.mark_all_touched(); // force dense payloads through v2
         }
         let opt = vec![vec![0.5f32; 8], vec![0.25f32; 4]];
         let ck = Checkpoint::capture(&store, &opt, 1234);
 
-        let dir = std::env::temp_dir().join("topkast_ck_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("test.ckpt");
+        let path = dir("topkast_ck_test").join("test.ckpt");
         ck.save(&path).unwrap();
-
         let loaded = Checkpoint::load(&path).unwrap();
         assert_eq!(loaded.step, 1234);
+        assert_eq!(loaded.seed, Some(3));
+        assert_eq!(loaded.params, ck.params);
+        assert_eq!(loaded.masks_fwd, ck.masks_fwd);
+        assert_eq!(loaded.opt, ck.opt);
 
-        let mut store2 = ParamStore::init(&specs(), 999); // different init
+        let mut store2 = ParamStore::init(&specs(), 3);
         let mut opt2 = vec![vec![0.0f32; 8], vec![0.0f32; 4]];
         loaded.restore(&mut store2, &mut opt2).unwrap();
         assert_eq!(
@@ -233,12 +713,174 @@ mod tests {
     }
 
     #[test]
-    fn rejects_corrupt() {
-        let dir = std::env::temp_dir().join("topkast_ck_test2");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("bad.ckpt");
-        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
-        assert!(Checkpoint::load(&path).is_err());
+    fn v2_sparse_payloads_restore_bit_exactly_into_same_seed_store() {
+        let mut store = ParamStore::init(&specs(), 11);
+        {
+            let m = store.get_mut("w").unwrap().masks.as_mut().unwrap();
+            m.set_fwd(vec![1.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+            m.set_bwd(vec![1.0, 0.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0]);
+        }
+        // "train" inside touched only (the invariant sparse storage needs)
+        for i in [0usize, 2, 3] {
+            store.get_mut("w").unwrap().values[i] = 7.0 + i as f32;
+        }
+        store.get_mut("b").unwrap().values = vec![1.0, 2.0, 3.0, 4.0];
+        let opt = vec![vec![0.0, 0.0, 0.5, 0.25, 0.0, 0.0, 0.0, 0.0], vec![0.1f32; 4]];
+        let ck = Checkpoint::capture(&store, &opt, 9);
+        // w stored sparsely: touched = {0, 2, 3}
+        assert!(matches!(
+            ck.params.iter().find(|(n, _)| n == "w").unwrap().1,
+            TensorPayload::Sparse(ref s) if s.indices.indices() == [0, 2, 3]
+        ));
+        // dense tensor b stays dense
+        assert!(matches!(
+            ck.params.iter().find(|(n, _)| n == "b").unwrap().1,
+            TensorPayload::Dense(_)
+        ));
+
+        let path = dir("topkast_ck_sparse").join("sparse.ckpt");
+        ck.save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.params, ck.params);
+        assert_eq!(loaded.touched, ck.touched);
+
+        // same-seed store: bit-exact restore, including untouched init
+        let mut store2 = ParamStore::init(&specs(), 11);
+        let mut opt2 = vec![vec![9.0f32; 8], vec![9.0f32; 4]];
+        loaded.restore(&mut store2, &mut opt2).unwrap();
+        assert_eq!(store2.get("w").unwrap().values, store.get("w").unwrap().values);
+        assert_eq!(store2.get("b").unwrap().values, store.get("b").unwrap().values);
+        assert_eq!(opt2, opt, "sparse opt slots re-zero then scatter");
+
+        // different-seed store: the init base is replayed from the
+        // *recorded* seed, so the restore is still bit-exact
+        let mut store3 = ParamStore::init(&specs(), 12);
+        let mut opt3 = vec![vec![0.0f32; 8], vec![0.0f32; 4]];
+        loaded.restore(&mut store3, &mut opt3).unwrap();
+        assert_eq!(store3.get("w").unwrap().values, store.get("w").unwrap().values);
+        assert_eq!(opt3, opt);
+    }
+
+    #[test]
+    fn v2_sparse_restore_rolls_back_training_past_the_checkpoint() {
+        // Capture with touched = {0, 2}, then "train on" — values move
+        // at positions outside the captured touched set (a later, wider
+        // active set). Restoring must reset those positions to the
+        // captured run's *init*, not leave the later values in place.
+        let mut store = ParamStore::init(&specs(), 21);
+        {
+            let m = store.get_mut("w").unwrap().masks.as_mut().unwrap();
+            m.set_fwd(vec![1.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+            m.set_bwd(vec![1.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        }
+        store.get_mut("w").unwrap().values[0] = 5.0;
+        let opt = vec![vec![0.0f32; 8], vec![0.0f32; 4]];
+        let ck = Checkpoint::capture(&store, &opt, 10);
+        let want = store.get("w").unwrap().values.clone();
+
+        // keep training: the active set widens to include position 5
+        {
+            let m = store.get_mut("w").unwrap().masks.as_mut().unwrap();
+            m.set_fwd(vec![1.0, 0.0, 1.0, 0.0, 0.0, 1.0, 0.0, 0.0]);
+            m.set_bwd(vec![1.0, 0.0, 1.0, 0.0, 0.0, 1.0, 0.0, 0.0]);
+        }
+        store.get_mut("w").unwrap().values[5] = -42.0;
+        let mut opt2 = vec![vec![1.0f32; 8], vec![1.0f32; 4]];
+
+        ck.restore(&mut store, &mut opt2).unwrap();
+        assert_eq!(
+            store.get("w").unwrap().values,
+            want,
+            "rollback must reset positions trained after the capture to init"
+        );
+        assert_eq!(
+            store.get("w").unwrap().masks.as_ref().unwrap().touched().indices(),
+            &[0, 2],
+            "touched rolls back with the checkpoint"
+        );
+        assert_eq!(opt2[0], vec![0.0f32; 8], "sparse opt slots re-zeroed");
+    }
+
+    #[test]
+    fn v1_writer_and_loader_stay_compatible() {
+        let mut store = ParamStore::init(&specs(), 3);
+        {
+            let m = store.get_mut("w").unwrap().masks.as_mut().unwrap();
+            m.set_fwd(vec![1.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 1.0]);
+            m.set_bwd(vec![1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 1.0]);
+        }
+        let opt = vec![vec![0.5f32; 8], vec![0.25f32; 4]];
+        let ck = Checkpoint::capture_dense(&store, &opt, 77);
+        let path = dir("topkast_ck_v1").join("legacy.ckpt");
+        ck.save_v1(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.step, 77);
+        assert_eq!(loaded.seed, None, "v1 carries no seed");
+        // v1 restores into any store, any seed
+        let mut store2 = ParamStore::init(&specs(), 999);
+        let mut opt2 = vec![vec![0.0f32; 8], vec![0.0f32; 4]];
+        loaded.restore(&mut store2, &mut opt2).unwrap();
+        assert_eq!(store2.get("w").unwrap().values, store.get("w").unwrap().values);
+        assert_eq!(
+            store2.get("w").unwrap().masks.as_ref().unwrap().fwd(),
+            store.get("w").unwrap().masks.as_ref().unwrap().fwd()
+        );
+        assert_eq!(opt2, opt);
+        // a sparse capture cannot be written as v1
+        let sparse = Checkpoint::capture(&store, &opt, 1);
+        if sparse.params.iter().any(|(_, p)| matches!(p, TensorPayload::Sparse(_))) {
+            assert!(sparse.save_v1(dir("topkast_ck_v1").join("no.ckpt")).is_err());
+        }
+    }
+
+    #[test]
+    fn rejects_corrupt_with_clear_errors() {
+        let d = dir("topkast_ck_test2");
+        // not a checkpoint at all
+        let bad = d.join("bad.ckpt");
+        std::fs::write(&bad, b"definitely not a checkpoint").unwrap();
+        let err = Checkpoint::load(&bad).unwrap_err().to_string();
+        assert!(err.contains("bad magic"), "{err}");
+        // shorter than the container header
+        let tiny = d.join("tiny.ckpt");
+        std::fs::write(&tiny, b"TKC2").unwrap();
+        let err = Checkpoint::load(&tiny).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+        // future version
+        let future = d.join("future.ckpt");
+        std::fs::write(&future, b"TKC9\0\0\0\0\0\0\0\0").unwrap();
+        let err = Checkpoint::load(&future).unwrap_err().to_string();
+        assert!(err.contains("unsupported checkpoint version"), "{err}");
+        // header length pointing past EOF
+        let hdr = d.join("hdr.ckpt");
+        let mut bytes = b"TKC2".to_vec();
+        bytes.extend_from_slice(&(1_000_000u64).to_le_bytes());
+        bytes.extend_from_slice(b"{}");
+        std::fs::write(&hdr, &bytes).unwrap();
+        let err = Checkpoint::load(&hdr).unwrap_err().to_string();
+        assert!(err.contains("header claims"), "{err}");
+        // a sparse opt_vals section with no param sections to align it
+        // with: a clean corrupt-file error, not a panic in restore
+        let orphan = d.join("orphan.ckpt");
+        let header = r#"{"version":2,"step":0,"blob_len":12,"sections":[{"kind":"opt_vals","name":"slot0","dtype":"f32","offset":0,"len":3,"domain":8}]}"#;
+        let mut bytes = b"TKC2".to_vec();
+        bytes.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        bytes.extend_from_slice(&[0u8; 12]);
+        std::fs::write(&orphan, &bytes).unwrap();
+        let err = Checkpoint::load(&orphan).unwrap_err().to_string();
+        assert!(err.contains("no param sections"), "{err}");
+        // valid save, then truncate the blob → explicit truncation error
+        let store = ParamStore::init(&specs(), 0);
+        let opt = vec![vec![0.0f32; 8], vec![0.0f32; 4]];
+        let good = d.join("good.ckpt");
+        Checkpoint::capture_dense(&store, &opt, 5).save(&good).unwrap();
+        let mut bytes = std::fs::read(&good).unwrap();
+        bytes.truncate(bytes.len() - 7);
+        let cut = d.join("cut.ckpt");
+        std::fs::write(&cut, &bytes).unwrap();
+        let err = Checkpoint::load(&cut).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
     }
 
     #[test]
@@ -249,5 +891,27 @@ mod tests {
         let mut store2 = ParamStore::init(&specs(), 0);
         let mut opt_bad = vec![vec![0.0f32; 8]]; // wrong slot count
         assert!(ck.restore(&mut store2, &mut opt_bad).is_err());
+    }
+
+    #[test]
+    fn sparse_capture_is_smaller_on_disk() {
+        let mut store = ParamStore::init(&specs(), 4);
+        {
+            let m = store.get_mut("w").unwrap().masks.as_mut().unwrap();
+            m.set_fwd(vec![1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+            m.set_bwd(vec![1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        }
+        let opt = vec![vec![0.0f32; 8], vec![0.0f32; 4]];
+        let d = dir("topkast_ck_size");
+        let sparse_path = d.join("sparse.ckpt");
+        let dense_path = d.join("dense.ckpt");
+        Checkpoint::capture(&store, &opt, 1).save(&sparse_path).unwrap();
+        Checkpoint::capture_dense(&store, &opt, 1).save_v1(&dense_path).unwrap();
+        let sparse_len = std::fs::metadata(&sparse_path).unwrap().len();
+        let dense_len = std::fs::metadata(&dense_path).unwrap().len();
+        assert!(
+            sparse_len < dense_len,
+            "sparse {sparse_len} !< dense {dense_len}"
+        );
     }
 }

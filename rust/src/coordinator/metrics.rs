@@ -4,15 +4,17 @@
 use std::collections::BTreeMap;
 
 use crate::sparsity::ParamStore;
+use crate::tensor::SparseSet;
 use crate::util::timer::Stats;
 
 /// Fig 3(a): fraction of mask entries that changed between snapshots,
 /// per layer — the paper plots min/mean/max across layers at 5k-step
-/// spacing.
+/// spacing. Snapshots are index sets, so churn is the symmetric
+/// difference size over the domain — O(nnz) per snapshot, not O(n).
 #[derive(Default)]
 pub struct MaskChurn {
-    /// last snapshot per tensor (forward masks)
-    last: BTreeMap<String, Vec<f32>>,
+    /// last snapshot per tensor (forward index sets)
+    last: BTreeMap<String, SparseSet>,
     /// (step, per-layer churn fractions)
     pub history: Vec<(usize, Vec<f64>)>,
 }
@@ -24,14 +26,10 @@ impl MaskChurn {
             let Some(masks) = &e.masks else { continue };
             let name = &e.spec.name;
             if let Some(prev) = self.last.get(name) {
-                let changed = prev
-                    .iter()
-                    .zip(masks.fwd())
-                    .filter(|(a, b)| a != b)
-                    .count();
-                churns.push(changed as f64 / prev.len().max(1) as f64);
+                let changed = prev.delta_to(masks.fwd()).total();
+                churns.push(changed as f64 / prev.domain().max(1) as f64);
             }
-            self.last.insert(name.clone(), masks.fwd().to_vec());
+            self.last.insert(name.clone(), masks.fwd().clone());
         }
         if !churns.is_empty() {
             self.history.push((step, churns));
@@ -78,9 +76,7 @@ impl ReservoirTracker {
     pub fn init(&mut self, store: &ParamStore) {
         for e in &store.entries {
             let Some(m) = &e.masks else { continue };
-            let res: Vec<u32> = (0..m.bwd().len() as u32)
-                .filter(|&i| m.bwd()[i as usize] == 0.0)
-                .collect();
+            let res: Vec<u32> = m.active_union().complement_indices();
             self.woken
                 .insert(e.spec.name.clone(), vec![false; res.len()]);
             self.reservoir.insert(e.spec.name.clone(), res);
@@ -103,7 +99,7 @@ impl ReservoirTracker {
                 continue;
             };
             for (slot, &i) in res.iter().enumerate() {
-                if m.fwd()[i as usize] == 1.0 {
+                if m.fwd().contains(i) {
                     wok[slot] = true;
                 }
             }
@@ -253,14 +249,15 @@ mod tests {
         assert_eq!(r.history[0].1, 0.0);
         {
             let m = st.get_mut("w").unwrap().masks.as_mut().unwrap();
-            m.edit(|fwd, _| fwd[5] = 1.0); // a reservoir unit becomes active
+            // a reservoir unit becomes active
+            m.edit(|fwd, _| fwd.set_from_unsorted(&[0, 5]));
         }
         r.observe(&st, 10);
         assert!((r.final_fraction().unwrap() - 1.0 / 8.0).abs() < 1e-12);
         // wake-ups are sticky
         {
             let m = st.get_mut("w").unwrap().masks.as_mut().unwrap();
-            m.edit(|fwd, _| fwd[5] = 0.0);
+            m.edit(|fwd, _| fwd.set_from_unsorted(&[0]));
         }
         r.observe(&st, 20);
         assert!((r.final_fraction().unwrap() - 1.0 / 8.0).abs() < 1e-12);

@@ -12,7 +12,7 @@ pub mod sources;
 pub mod train;
 
 pub use async_masks::AsyncMaskRefresher;
-pub use checkpoint::Checkpoint;
+pub use checkpoint::{Checkpoint, TensorPayload};
 pub use metrics::{EvalResult, MaskChurn, ReservoirTracker, RunMetrics};
 pub use observer::{
     ConsoleLogger, EndEvent, EvalEvent, JsonlMetrics, PeriodicCheckpoint,

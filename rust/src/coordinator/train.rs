@@ -3,8 +3,11 @@
 //! executables, and drives the Top-KAST protocol:
 //!
 //!   1. every `refresh_every` steps (paper Appendix C: N=100 works as
-//!      well as N=1) sync θ device→host, recompute per-layer Top-K
-//!      masks on the host, and push only the new masks back down;
+//!      well as N=1) sync the *active* θ device→host (values at the
+//!      installed fwd∪bwd sets — O(nnz); positions outside B are
+//!      bit-identical on both sides by the mask-respecting update),
+//!      recompute per-layer Top-K masks on the host, and push only the
+//!      index *deltas* back down (O(Δnnz) per replica);
 //!   2. dispatch the AOT train step buffer-in/buffer-out against the
 //!      resident (θ, m_fwd, m_bwd, opt) with only the batch + step
 //!      scalars streamed up and the loss scalar streamed down;
@@ -110,6 +113,13 @@ impl Resident {
         }
     }
 
+    fn sync_active_params_to_host(&self, store: &mut ParamStore) -> Result<()> {
+        match self {
+            Resident::Single(d) => d.sync_active_params_to_host(store),
+            Resident::Replicated(r) => r.sync_active_params_to_host(store),
+        }
+    }
+
     fn upload_params(&mut self, store: &ParamStore) -> Result<()> {
         match self {
             Resident::Single(d) => d.upload_params(store),
@@ -117,10 +127,24 @@ impl Resident {
         }
     }
 
+    fn upload_sparse_params(&mut self, store: &ParamStore) -> Result<()> {
+        match self {
+            Resident::Single(d) => d.upload_sparse_params(store),
+            Resident::Replicated(r) => r.upload_sparse_params(store),
+        }
+    }
+
     fn upload_masks(&mut self, store: &ParamStore) -> Result<()> {
         match self {
             Resident::Single(d) => d.upload_masks(store),
             Resident::Replicated(r) => r.upload_masks(store),
+        }
+    }
+
+    fn upload_mask_deltas(&mut self, store: &ParamStore) -> Result<()> {
+        match self {
+            Resident::Single(d) => d.upload_mask_deltas(store),
+            Resident::Replicated(r) => r.upload_mask_deltas(store),
         }
     }
 
@@ -154,10 +178,14 @@ pub struct Trainer {
     /// Device-resident θ/masks/opt — one chain, or one per replica
     /// (see `runtime::device_state` / `runtime::replicated`).
     device: Resident,
-    /// True when the host store's weight values mirror the device
-    /// buffers. Cleared by every train step; restored at sync points
-    /// (mask refresh needs only this half).
+    /// True when the host store's weight values fully mirror the
+    /// device buffers (all tensors, dense included). Cleared by every
+    /// train step; restored by `sync_host`.
     params_synced: bool,
+    /// True when the *sparse* tensors' host values mirror the device
+    /// (the O(nnz) active sync — all a mask refresh needs). Implied by
+    /// `params_synced`; cleared by every train step.
+    active_synced: bool,
     /// Same for the optimiser-slot mirror (needed at checkpoint/end
     /// only, so refreshes skip the slot download).
     opt_synced: bool,
@@ -235,6 +263,7 @@ impl Trainer {
             metrics: RunMetrics::new(),
             device,
             params_synced: true,
+            active_synced: true,
             opt_synced: true,
             opt,
             data,
@@ -281,24 +310,31 @@ impl Trainer {
         self.params_synced && self.opt_synced
     }
 
-    /// Pull θ device→host if stale — the paper's refresh-point sync:
-    /// host Top-K reads only the dense weights, so the optimiser slots
-    /// stay on the device.
+    /// Pull the *active* θ device→host if stale — the paper's
+    /// refresh-point sync: host Top-K reads only the sparse tensors'
+    /// weights, every position outside the installed fwd∪bwd sets is
+    /// bit-identical on both sides already, and the optimiser slots
+    /// stay on the device. O(nnz) metered bytes.
     fn sync_params_host(&mut self) -> Result<()> {
-        if self.params_synced {
+        if self.params_synced || self.active_synced {
             return Ok(());
         }
-        self.device.sync_params_to_host(&mut self.store)?;
-        self.params_synced = true;
+        self.device.sync_active_params_to_host(&mut self.store)?;
+        self.active_synced = true;
         Ok(())
     }
 
-    /// Pull θ + optimiser slots device→host if the host copy is stale.
-    /// These are the protocol's full-sync points: checkpoint capture,
-    /// end of run, and observers that declared `wants_host_state`
-    /// (mask refreshes use the cheaper params-only sync internally).
+    /// Pull the full θ + optimiser slots device→host if the host copy
+    /// is stale. These are the protocol's full-sync points: checkpoint
+    /// capture, end of run, and observers that declared
+    /// `wants_host_state` (mask refreshes use the O(nnz) active sync
+    /// internally).
     pub fn sync_host(&mut self) -> Result<()> {
-        self.sync_params_host()?;
+        if !self.params_synced {
+            self.device.sync_params_to_host(&mut self.store)?;
+            self.params_synced = true;
+            self.active_synced = true;
+        }
         if !self.opt_synced {
             self.device.sync_opt_to_host(&mut self.opt)?;
             self.opt_synced = true;
@@ -306,12 +342,12 @@ impl Trainer {
         Ok(())
     }
 
-    /// Push the store's masks down to the device. Called automatically
-    /// at refresh install points; call it manually after external mask
-    /// surgery on `store` (e.g. selection analysis) so the device sees
-    /// the edit.
+    /// Push the store's masks down to the device as index deltas
+    /// against whatever is installed. Called automatically at refresh
+    /// install points; call it manually after external mask surgery on
+    /// `store` (e.g. selection analysis) so the device sees the edit.
     pub fn push_masks_to_device(&mut self) -> Result<()> {
-        self.device.upload_masks(&self.store)
+        self.device.upload_mask_deltas(&self.store)
     }
 
     /// Per-step / per-refresh traffic account under the
@@ -319,13 +355,14 @@ impl Trainer {
     /// replaced) — the communication model behind the Table-6
     /// discussion and the bench `step_traffic` scenario.
     pub fn traffic(&self) -> Result<TrafficModel> {
-        TrafficModel::replicated(
+        TrafficModel::with_densities(
             &self.model,
             self.strategy.mutates_weights(),
             // probe at a representative update step (RigL declares false
             // only for step 0 / init)
             self.strategy.needs_grad_norms(1),
             self.replica_count(),
+            self.strategy.densities(self.step, self.cfg.steps),
         )
     }
 
@@ -356,6 +393,7 @@ impl Trainer {
         self.device.upload_opt(&self.opt)?;
         self.device.upload_masks(&self.store)?;
         self.params_synced = true;
+        self.active_synced = true;
         self.opt_synced = true;
         Ok(())
     }
@@ -411,8 +449,9 @@ impl Trainer {
     }
 
     /// Recompute masks on the host (the paper's CPU-side Top-K): sync
-    /// θ device→host, select, push masks (and — for weight-rewriting
-    /// strategies — params) back down.
+    /// the active θ device→host (O(nnz)), select, push the index
+    /// deltas (and — for weight-rewriting strategies — the sparse
+    /// tensors' params) back down.
     pub fn refresh_masks(&mut self) -> Result<()> {
         let sw = Stopwatch::start();
         self.sync_params_host()?;
@@ -431,11 +470,13 @@ impl Trainer {
             self.step,
             self.cfg.steps,
         )?;
-        self.device.upload_masks(&self.store)?;
+        self.device.upload_mask_deltas(&self.store)?;
         if self.strategy.mutates_weights() {
             // SET re-inits grown connections, RigL zeroes dropped/grown
-            // ones — the host rewrite must reach the device
-            self.device.upload_params(&self.store)?;
+            // ones — the host rewrite must reach the device. Sparse
+            // tensors only: the host's dense tensors are stale between
+            // full syncs and must not clobber trained device state.
+            self.device.upload_sparse_params(&self.store)?;
         }
         if !self.masks_initialised {
             self.metrics.reservoir.init(&self.store);
@@ -527,9 +568,16 @@ impl Trainer {
                 }
             }
             if installed {
+                // Heal the host copy at the *old* installed sets before
+                // the new masks land: positions leaving the active set
+                // were trained during the in-flight window and would
+                // never be gathered again once outside the installed
+                // union (the dense-exchange loop healed them with its
+                // full θ download; the O(nnz) sync must do it here).
+                self.sync_params_host()?;
                 // async-eligible strategies are mask-pure, so only the
-                // masks travel to the device
-                self.device.upload_masks(&self.store)?;
+                // index deltas travel to the device
+                self.device.upload_mask_deltas(&self.store)?;
                 let elapsed_ms = self
                     .async_refresher
                     .as_ref()
@@ -590,6 +638,7 @@ impl Trainer {
             }
         };
         self.params_synced = false;
+        self.active_synced = false;
         self.opt_synced = false;
 
         self.metrics.losses.push((self.step, loss));

@@ -14,39 +14,52 @@
 //! per-step transfers are the batch + step scalars up and the loss
 //! scalar down.
 //!
-//! # Sync points
+//! # Sync points — the compact (O(nnz)) exchange plane
 //!
 //! Host↔device synchronisation happens exactly where the paper needs
-//! dense weights on the CPU, and nowhere else:
+//! weights on the CPU, and nowhere else — and what moves is
+//! proportional to the *active* set, not the dense model:
 //!
 //! * **mask refresh** (every `refresh_every` steps, or when the §2.4
-//!   async worker needs a fresh snapshot): the dense θ device→host
-//!   ([`DeviceState::sync_params_to_host`] — the optimiser slots stay
-//!   resident), host Top-K, then only the new masks host→device
-//!   ([`DeviceState::upload_masks`]) — plus params host→device when
-//!   the strategy rewrote weights (SET/RigL re-init grown
-//!   connections, declared via `MaskStrategy::mutates_weights`);
+//!   async worker needs a fresh snapshot): θ values at the installed
+//!   fwd∪bwd sets device→host
+//!   ([`DeviceState::sync_active_params_to_host`] — O(nnz); the
+//!   optimiser slots stay resident, and positions outside B are
+//!   bit-identical on both sides because the train artifacts mask the
+//!   update with m_bwd), host Top-K, then only the **index deltas**
+//!   host→device ([`DeviceState::upload_mask_deltas`] — O(Δnnz) per
+//!   replica, installed with the simulated scatter path
+//!   `PjRtBuffer::scatter_mask_update`) — plus the sparse tensors'
+//!   params host→device when the strategy rewrote weights (SET/RigL
+//!   re-init grown connections, declared via
+//!   `MaskStrategy::mutates_weights`);
 //! * **eval / grad_norms**: no sync at all — both artifacts read the
 //!   *resident* param/mask buffers and stream only the batch
 //!   ([`DeviceState::run_with_fwd_masks`]);
 //! * **checkpoint capture** and **end of run**: full params+opt
-//!   device→host so the host store is authoritative again;
+//!   device→host so the host store is authoritative again (once per
+//!   run, the one remaining dense transfer);
 //! * **checkpoint restore** / external mask surgery: full host→device
-//!   re-upload.
+//!   re-upload (masks as index installs,
+//!   [`DeviceState::upload_masks`]).
 //!
 //! The host `ParamStore` stays the *mask authority* at all times (masks
 //! are computed there and pushed down); between syncs its weight values
-//! are stale by design. [`TrafficModel`] is the analytic per-step
-//! traffic account (resident vs streamed bytes) that the bench
-//! `step_traffic` scenario and the transfer-counting tests check
-//! against the runtime's real counters.
+//! are stale by design, and its dense (non-sparse) tensors stay stale
+//! through refreshes too — nothing on the refresh path reads them.
+//! [`TrafficModel`] is the analytic traffic account (resident vs
+//! streamed vs refresh bytes, sparse vs legacy-dense) that the bench
+//! `step_traffic`/`sparse_exchange` scenarios and the transfer-counting
+//! tests check against the runtime's real counters.
 
 use anyhow::{bail, Context, Result};
 
 use super::client::{DeviceInput, Executable, TensorRef};
 use super::manifest::{EvalLayout, ModelEntry, TrainLayout};
+use crate::sparsity::strategy::Densities;
+use crate::sparsity::topk::k_for_density;
 use crate::sparsity::ParamStore;
-use crate::tensor::HostTensor;
+use crate::tensor::{HostTensor, SparseSet};
 use crate::xla;
 
 /// Persistent device buffers for one model's training state, pinned to
@@ -66,6 +79,12 @@ pub struct DeviceState {
     masks_fwd: Vec<xla::PjRtBuffer>,
     masks_bwd: Vec<xla::PjRtBuffer>,
     opt: Vec<xla::PjRtBuffer>,
+    /// Host-side record of the index sets currently expanded into
+    /// `masks_fwd`/`masks_bwd` (one (fwd, bwd) pair per sparse tensor,
+    /// `sparse_idx` order). The delta base for refresh broadcasts and
+    /// the gather driver for active-θ syncs; bookkeeping only — no
+    /// traffic.
+    installed_masks: Vec<(SparseSet, SparseSet)>,
 }
 
 impl DeviceState {
@@ -123,6 +142,7 @@ impl DeviceState {
             masks_fwd: vec![],
             masks_bwd: vec![],
             opt: vec![],
+            installed_masks: vec![],
         };
         state.upload_params(store)?;
         state.upload_masks(store)?;
@@ -139,8 +159,7 @@ impl DeviceState {
         self.client.buffer_from_host_buffer::<f32>(data, dims, Some(self.device))
     }
 
-    /// Push the host store's dense values down (init, restore, or after
-    /// a weight-rewriting mask update).
+    /// Push the host store's dense values down (init, restore).
     pub fn upload_params(&mut self, store: &ParamStore) -> Result<()> {
         self.params = store
             .entries
@@ -151,10 +170,34 @@ impl DeviceState {
         Ok(())
     }
 
-    /// Push the host store's masks down (refresh install points only).
+    /// Push only the *sparse* tensors' dense values down — the refresh
+    /// path for weight-rewriting strategies (SET/RigL). The host's
+    /// dense (non-sparse) tensors are stale between full syncs, so a
+    /// full `upload_params` here would clobber trained state; the
+    /// sparse tensors' host values are exact after the active-θ sync.
+    pub fn upload_sparse_params(&mut self, store: &ParamStore) -> Result<()> {
+        if store.entries.len() != self.params.len() {
+            bail!(
+                "store has {} params, device {}",
+                store.entries.len(),
+                self.params.len()
+            );
+        }
+        for &i in &self.sparse_idx {
+            let e = &store.entries[i];
+            self.params[i] = self.upload_f32(&e.values, &self.param_dims[i])?;
+        }
+        Ok(())
+    }
+
+    /// Install the host store's masks wholesale (construction, restore,
+    /// external surgery with no usable delta base). Each mask crosses
+    /// the simulated bus as its index list — O(nnz), not O(n) — and is
+    /// expanded into the dense resident 0/1 buffer device-side.
     pub fn upload_masks(&mut self, store: &ParamStore) -> Result<()> {
         let mut fwd = Vec::with_capacity(self.sparse_idx.len());
         let mut bwd = Vec::with_capacity(self.sparse_idx.len());
+        let mut installed = Vec::with_capacity(self.sparse_idx.len());
         for &i in &self.sparse_idx {
             let e = &store.entries[i];
             let m = e
@@ -162,12 +205,61 @@ impl DeviceState {
                 .as_ref()
                 .with_context(|| format!("sparse param {} has no masks", e.spec.name))?;
             let dims = &self.param_dims[i];
-            fwd.push(self.upload_f32(m.fwd(), dims)?);
-            bwd.push(self.upload_f32(m.bwd(), dims)?);
+            fwd.push(self.client.mask_from_indices(
+                dims,
+                m.fwd().indices(),
+                Some(self.device),
+            )?);
+            bwd.push(self.client.mask_from_indices(
+                dims,
+                m.bwd().indices(),
+                Some(self.device),
+            )?);
+            installed.push((m.fwd().clone(), m.bwd().clone()));
         }
         self.masks_fwd = fwd;
         self.masks_bwd = bwd;
+        self.installed_masks = installed;
         Ok(())
+    }
+
+    /// Refresh install: ship only the index *deltas* between the
+    /// currently installed sets and the store's new masks — O(Δnnz)
+    /// host→device — and apply them with the metered scatter path.
+    /// Unchanged masks move nothing at all.
+    pub fn upload_mask_deltas(&mut self, store: &ParamStore) -> Result<()> {
+        if self.installed_masks.len() != self.sparse_idx.len() {
+            // no delta base (shouldn't happen after construction) —
+            // fall back to a full install
+            return self.upload_masks(store);
+        }
+        for (pos, &i) in self.sparse_idx.iter().enumerate() {
+            let e = &store.entries[i];
+            let m = e
+                .masks
+                .as_ref()
+                .with_context(|| format!("sparse param {} has no masks", e.spec.name))?;
+            let (old_fwd, old_bwd) = &self.installed_masks[pos];
+            let df = old_fwd.delta_to(m.fwd());
+            if !df.is_empty() {
+                self.masks_fwd[pos] =
+                    self.masks_fwd[pos].scatter_mask_update(&df.added, &df.removed)?;
+            }
+            let db = old_bwd.delta_to(m.bwd());
+            if !db.is_empty() {
+                self.masks_bwd[pos] =
+                    self.masks_bwd[pos].scatter_mask_update(&db.added, &db.removed)?;
+            }
+            self.installed_masks[pos] = (m.fwd().clone(), m.bwd().clone());
+        }
+        Ok(())
+    }
+
+    /// The index sets currently installed on the device for one sparse
+    /// tensor (`sparse_idx` order) — tests use this to compute expected
+    /// delta traffic independently.
+    pub fn installed_masks(&self, pos: usize) -> &(SparseSet, SparseSet) {
+        &self.installed_masks[pos]
     }
 
     /// Push host optimiser slots down (init and checkpoint restore).
@@ -192,8 +284,41 @@ impl DeviceState {
         Ok(())
     }
 
-    /// Download the dense θ into the host store — the mask-refresh
-    /// sync (host Top-K needs only the weights, not the slots).
+    /// Refresh sync: download only the θ values at each sparse tensor's
+    /// installed fwd∪bwd set — O(nnz) device→host — and scatter them
+    /// into the host store. Exact, not approximate: the train artifacts
+    /// mask the update with m_bwd (pinned by the mask-respecting
+    /// tests), so every position outside the installed sets is
+    /// bit-identical on host and device already. Dense (non-sparse)
+    /// tensors are not touched — nothing on the refresh path reads
+    /// them.
+    pub fn sync_active_params_to_host(&self, store: &mut ParamStore) -> Result<()> {
+        if store.entries.len() != self.params.len() {
+            bail!(
+                "store has {} params, device {}",
+                store.entries.len(),
+                self.params.len()
+            );
+        }
+        for (pos, &i) in self.sparse_idx.iter().enumerate() {
+            let (fwd, bwd) = &self.installed_masks[pos];
+            let union = fwd.union(bwd);
+            if union.is_empty() {
+                continue;
+            }
+            let values = self.params[i].gather_to_host(union.indices())?;
+            let entry = &mut store.entries[i];
+            if union.domain() != entry.values.len() {
+                bail!("param {} size drifted on device", entry.spec.name);
+            }
+            union.scatter(&values, &mut entry.values);
+        }
+        Ok(())
+    }
+
+    /// Download the dense θ into the host store — the full sync used at
+    /// checkpoint capture and end of run (refreshes use the O(nnz)
+    /// [`DeviceState::sync_active_params_to_host`] instead).
     pub fn sync_params_to_host(&self, store: &mut ParamStore) -> Result<()> {
         if store.entries.len() != self.params.len() {
             bail!(
@@ -380,10 +505,11 @@ impl DeviceState {
     }
 }
 
-/// Analytic per-step traffic account for a model under the
-/// device-resident protocol, split into what stays resident and what
-/// streams — the successor of the old `step_upload_bytes` scalar
-/// (which assumed every tensor re-uploaded every step).
+/// Analytic traffic account for a model under the device-resident
+/// protocol, split three ways: what stays resident, what streams per
+/// step, and what a refresh moves under the **compact sparse
+/// exchange** (index deltas up, active θ down) vs the **legacy dense
+/// exchange** (dense 0/1 masks up, dense θ down) it replaced.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TrafficModel {
     /// Data-parallel replica count the account is for (1 = the plain
@@ -406,16 +532,30 @@ pub struct TrafficModel {
     /// Device→host bytes per steady-state step (the loss scalar,
     /// downloaded from replica 0 only).
     pub step_d2h_bytes: u64,
-    /// Device→host bytes at a mask refresh: the dense θ for host
-    /// Top-K (slots stay resident), plus the grad_norms outputs for
-    /// gradient-guided strategies. Replica 0 serves the sync, so this
-    /// does not scale with the replica count.
+    /// Device→host bytes at a mask refresh under the sparse exchange:
+    /// θ values at each sparse tensor's installed fwd∪bwd set —
+    /// **O(nnz)**, 4·Σ|B_t| for nested strategies — plus the dense
+    /// |grad| maps for gradient-guided strategies (RigL's grow
+    /// criterion is inherently dense). Replica 0 serves the sync, so
+    /// this does not scale with the replica count.
     pub refresh_d2h_bytes: u64,
-    /// Host→device bytes at a mask refresh (new masks — broadcast to
-    /// every replica so the A/B sets never diverge; plus a grad_norms
-    /// batch on replica 0 and/or a per-replica params re-upload for
-    /// strategies that need them — SET/RigL).
-    pub refresh_h2d_bytes: u64,
+    /// Host→device bytes of a *full* mask install (construction /
+    /// restore / worst-case refresh where the whole set churns):
+    /// 4·Σ(|A_t| + |B_t|) index words per replica, plus
+    /// `refresh_h2d_fixed_bytes`. A steady refresh moves
+    /// [`TrafficModel::refresh_h2d_delta_bytes`] instead — **O(Δnnz)**.
+    pub refresh_h2d_install_bytes: u64,
+    /// Content-independent part of every refresh upload: the
+    /// grad_norms batch on replica 0, plus the sparse tensors' param
+    /// re-upload (per replica) for weight-rewriting strategies.
+    pub refresh_h2d_fixed_bytes: u64,
+    /// What the dense exchange plane moved at a refresh before the
+    /// sparse protocol: two dense 0/1 f32 masks per sparse tensor per
+    /// replica (+ grad_norms batch + full dense params for rewriting
+    /// strategies) up…
+    pub legacy_refresh_h2d_bytes: u64,
+    /// …and the full dense θ down.
+    pub legacy_refresh_d2h_bytes: u64,
     /// Device→host bytes of a full sync (checkpoint capture / end of
     /// run): θ + optimiser slots.
     pub checkpoint_d2h_bytes: u64,
@@ -426,11 +566,13 @@ pub struct TrafficModel {
 }
 
 impl TrafficModel {
-    /// Build the account from a model's manifest entry.
-    /// `strategy_rewrites_weights` adds the param re-upload that
-    /// SET/RigL refreshes require; `strategy_uses_grad_norms` adds the
-    /// grad_norms pass RigL runs at each update (one batch up, one
-    /// dense |grad| tensor per sparse param down).
+    /// Build the account from a model's manifest entry, assuming dense
+    /// masks (densities 1.0 — the conservative default when no
+    /// strategy is in scope). `strategy_rewrites_weights` adds the
+    /// sparse-param re-upload that SET/RigL refreshes require;
+    /// `strategy_uses_grad_norms` adds the grad_norms pass RigL runs
+    /// at each update (one batch up, one dense |grad| tensor per
+    /// sparse param down).
     pub fn of(
         model: &ModelEntry,
         strategy_rewrites_weights: bool,
@@ -439,18 +581,41 @@ impl TrafficModel {
         Self::replicated(model, strategy_rewrites_weights, strategy_uses_grad_norms, 1)
     }
 
-    /// The account for an N-replica data-parallel run (`replicas = 1`
-    /// reduces exactly to [`TrafficModel::of`]). Per-replica steady
-    /// state streams one batch shard + the step scalars up; the
-    /// gradient payload (the replication grad artifact's outputs)
-    /// crosses the interconnect once per replica per step; refresh
-    /// broadcasts the masks to every replica while θ downloads and the
-    /// grad_norms batch stay on replica 0.
+    /// [`TrafficModel::of`] for an N-replica run (dense-mask densities).
     pub fn replicated(
         model: &ModelEntry,
         strategy_rewrites_weights: bool,
         strategy_uses_grad_norms: bool,
         replicas: usize,
+    ) -> Result<Self> {
+        Self::with_densities(
+            model,
+            strategy_rewrites_weights,
+            strategy_uses_grad_norms,
+            replicas,
+            Densities { fwd: 1.0, bwd: 1.0 },
+        )
+    }
+
+    /// The full account for an N-replica data-parallel run at the
+    /// strategy's nominal densities (`replicas = 1` reduces exactly to
+    /// the single-device protocol). Per-replica steady state streams
+    /// one batch shard + the step scalars up; the gradient payload
+    /// (the replication grad artifact's outputs) crosses the
+    /// interconnect once per replica per step; a refresh broadcasts
+    /// index deltas to every replica while the active-θ download and
+    /// the grad_norms batch stay on replica 0.
+    ///
+    /// Sparse set sizes come from `k_for_density` per tensor — the same
+    /// rounding the strategies use — with |B_t| = max(k_bwd, k_fwd)
+    /// (every shipped strategy keeps A ⊆ B). Schedule-varying
+    /// strategies (pruning) are accounted at the densities passed in.
+    pub fn with_densities(
+        model: &ModelEntry,
+        strategy_rewrites_weights: bool,
+        strategy_uses_grad_norms: bool,
+        replicas: usize,
+        densities: Densities,
     ) -> Result<Self> {
         let layout = model.train_layout()?;
         let p_bytes: u64 =
@@ -460,6 +625,15 @@ impl TrafficModel {
             .iter()
             .map(|p| 4 * p.shape.numel() as u64)
             .sum();
+        let p_sparse_bytes = m_bytes; // dense f32 values of the sparse tensors
+        let (mut nnz_fwd, mut nnz_bwd) = (0u64, 0u64);
+        for p in model.sparse_params() {
+            let n = p.shape.numel();
+            let ka = k_for_density(n, densities.fwd);
+            let kb = k_for_density(n, densities.bwd).max(ka);
+            nnz_fwd += ka as u64;
+            nnz_bwd += kb as u64;
+        }
         let slots = model.optimizer.slots() as u64;
         let batch_bytes: u64 = model.train.inputs[layout.batch.clone()]
             .iter()
@@ -502,6 +676,8 @@ impl TrafficModel {
         } else {
             (batch_bytes, 0)
         };
+        let refresh_h2d_fixed_bytes = grad_norms_h2d
+            + if strategy_rewrites_weights { r * p_sparse_bytes } else { 0 };
         Ok(TrafficModel {
             replicas: r,
             resident_bytes: p_bytes * (1 + slots) + 2 * m_bytes,
@@ -509,10 +685,14 @@ impl TrafficModel {
             replica_step_h2d_bytes: shard_bytes + scalar_bytes,
             allreduce_step_bytes,
             step_d2h_bytes: loss_bytes,
-            refresh_d2h_bytes: p_bytes + grad_norms_d2h,
-            refresh_h2d_bytes: r * 2 * m_bytes
+            refresh_d2h_bytes: 4 * nnz_bwd + grad_norms_d2h,
+            refresh_h2d_install_bytes: r * 4 * (nnz_fwd + nnz_bwd)
+                + refresh_h2d_fixed_bytes,
+            refresh_h2d_fixed_bytes,
+            legacy_refresh_h2d_bytes: r * 2 * m_bytes
                 + grad_norms_h2d
                 + if strategy_rewrites_weights { r * p_bytes } else { 0 },
+            legacy_refresh_d2h_bytes: p_bytes + grad_norms_d2h,
             checkpoint_d2h_bytes: p_bytes * (1 + slots),
             legacy_step_bytes: p_bytes * (1 + slots) + 2 * m_bytes
                 + batch_bytes
@@ -522,11 +702,19 @@ impl TrafficModel {
         })
     }
 
-    /// Mean bytes/step when refreshing every N steps.
+    /// Host→device bytes of a refresh that ships `delta_indices` index
+    /// words (Σ per-tensor |added| + |removed| across both masks) —
+    /// the broadcast reaches every replica, the fixed part rides along.
+    pub fn refresh_h2d_delta_bytes(&self, delta_indices: u64) -> u64 {
+        self.replicas * 4 * delta_indices + self.refresh_h2d_fixed_bytes
+    }
+
+    /// Mean bytes/step when refreshing every N steps, charging every
+    /// refresh at the full-install worst case.
     pub fn amortized_step_bytes(&self, refresh_every: usize) -> f64 {
         let n = refresh_every.max(1) as f64;
         (self.step_h2d_bytes + self.step_d2h_bytes) as f64
-            + (self.refresh_d2h_bytes + self.refresh_h2d_bytes) as f64 / n
+            + (self.refresh_d2h_bytes + self.refresh_h2d_install_bytes) as f64 / n
     }
 }
 
@@ -560,11 +748,56 @@ mod tests {
         // |grad| per sparse tensor down at each refresh
         let g = TrafficModel::of(&synth.model, true, true).unwrap();
         assert!(g.refresh_d2h_bytes > t.refresh_d2h_bytes);
-        assert!(g.refresh_h2d_bytes > t.refresh_h2d_bytes);
+        assert!(g.refresh_h2d_install_bytes > t.refresh_h2d_install_bytes);
+        assert_eq!(g.refresh_h2d_delta_bytes(0), g.refresh_h2d_fixed_bytes);
         assert_eq!(g.step_h2d_bytes, t.step_h2d_bytes, "steady state unchanged");
-        // refresh downloads θ only; a checkpoint additionally syncs
-        // the optimiser slots
+        // refresh downloads active θ only; a checkpoint syncs the full
+        // dense θ plus the optimiser slots
         assert!(t.checkpoint_d2h_bytes > t.refresh_d2h_bytes);
+    }
+
+    #[test]
+    fn sparse_exchange_account_scales_with_nnz_not_n() {
+        let synth = Synthetic::small();
+        let dense = TrafficModel::of(&synth.model, false, false).unwrap();
+        let mut last_d2h = u64::MAX;
+        let mut last_install = u64::MAX;
+        for sparsity in [0.8, 0.9, 0.98] {
+            let d = 1.0 - sparsity;
+            let t = TrafficModel::with_densities(
+                &synth.model,
+                false,
+                false,
+                1,
+                Densities { fwd: d, bwd: d },
+            )
+            .unwrap();
+            // exact: refresh d2h = 4·Σ k_for_density(n_t, d)
+            let want: u64 = synth
+                .model
+                .sparse_params()
+                .iter()
+                .map(|p| 4 * k_for_density(p.shape.numel(), d) as u64)
+                .sum();
+            assert_eq!(t.refresh_d2h_bytes, want);
+            assert_eq!(t.refresh_h2d_install_bytes, 2 * want);
+            // refresh bytes shrink monotonically with sparsity, and the
+            // sparse exchange undercuts the legacy dense one
+            assert!(t.refresh_d2h_bytes < last_d2h);
+            assert!(t.refresh_h2d_install_bytes < last_install);
+            assert!(t.refresh_d2h_bytes < dense.legacy_refresh_d2h_bytes);
+            assert!(t.refresh_h2d_install_bytes < dense.legacy_refresh_h2d_bytes);
+            // delta accounting: Δ index words broadcast per replica
+            assert_eq!(t.refresh_h2d_delta_bytes(10), 40);
+            last_d2h = t.refresh_d2h_bytes;
+            last_install = t.refresh_h2d_install_bytes;
+        }
+        // at density 1.0 the index install degenerates to the dense
+        // mask cost (u32 index words == f32 mask words)
+        assert_eq!(
+            dense.refresh_h2d_install_bytes,
+            dense.legacy_refresh_h2d_bytes
+        );
     }
 
     #[test]
@@ -586,8 +819,9 @@ mod tests {
         assert!(t.replica_step_h2d_bytes < base.step_h2d_bytes);
         // payload = the grad outputs (two scalars), once per replica
         assert_eq!(t.allreduce_step_bytes, 4 * 2 * 4);
-        // refresh: masks broadcast to all replicas, θ down from one
-        assert_eq!(t.refresh_h2d_bytes, 4 * base.refresh_h2d_bytes);
+        // refresh: index deltas broadcast to all replicas, θ down from one
+        assert_eq!(t.refresh_h2d_install_bytes, 4 * base.refresh_h2d_install_bytes);
+        assert_eq!(t.refresh_h2d_delta_bytes(7), 4 * base.refresh_h2d_delta_bytes(7));
         assert_eq!(t.refresh_d2h_bytes, base.refresh_d2h_bytes);
         assert_eq!(t.checkpoint_d2h_bytes, base.checkpoint_d2h_bytes);
         // mismatched replica count is rejected

@@ -31,11 +31,12 @@
 //!
 //! The host-facing sync points are exactly those of the single-device
 //! protocol, with **replica 0 as the host-facing replica**: mask
-//! refresh downloads θ from replica 0 only, eval/grad_norms stream
-//! batches against replica 0's resident buffers, checkpoint/end-of-run
-//! sync from replica 0. Mask refresh stays a *single host-side
-//! decision*: the strategy selects once on the host, and the resulting
-//! A/B masks are **broadcast** (uploaded) to every replica — Top-KAST's
+//! refresh downloads the active θ (installed fwd∪bwd values, O(nnz))
+//! from replica 0 only, eval/grad_norms stream batches against replica
+//! 0's resident buffers, checkpoint/end-of-run sync from replica 0.
+//! Mask refresh stays a *single host-side decision*: the strategy
+//! selects once on the host, and the resulting index **deltas** are
+//! broadcast (O(Δnnz) per link) to every replica — Top-KAST's
 //! forward/backward sets can therefore never diverge across replicas.
 //!
 //! # Exactness
@@ -194,11 +195,30 @@ impl ReplicatedState {
         Ok(())
     }
 
-    /// Broadcast the host store's masks to every replica — the single
-    /// host-side refresh decision reaching all devices at once.
+    /// Broadcast the host store's sparse tensors' dense values to every
+    /// replica (weight-rewriting refreshes — SET/RigL).
+    pub fn upload_sparse_params(&mut self, store: &ParamStore) -> Result<()> {
+        for state in &mut self.replicas {
+            state.upload_sparse_params(store)?;
+        }
+        Ok(())
+    }
+
+    /// Install the host store's masks wholesale on every replica
+    /// (construction / restore): index lists, O(nnz) per replica.
     pub fn upload_masks(&mut self, store: &ParamStore) -> Result<()> {
         for state in &mut self.replicas {
             state.upload_masks(store)?;
+        }
+        Ok(())
+    }
+
+    /// Broadcast the refresh's index *deltas* to every replica — the
+    /// single host-side refresh decision reaching all devices at once,
+    /// at O(Δnnz) per replica link.
+    pub fn upload_mask_deltas(&mut self, store: &ParamStore) -> Result<()> {
+        for state in &mut self.replicas {
+            state.upload_mask_deltas(store)?;
         }
         Ok(())
     }
@@ -211,8 +231,15 @@ impl ReplicatedState {
         Ok(())
     }
 
-    /// Download the dense θ from the host-facing replica (0). Replicas
-    /// advance in lockstep, so one download speaks for all.
+    /// Refresh sync: θ values at the installed fwd∪bwd sets from the
+    /// host-facing replica (0) only — O(nnz). Replicas advance in
+    /// lockstep, so one download speaks for all.
+    pub fn sync_active_params_to_host(&self, store: &mut ParamStore) -> Result<()> {
+        self.replicas[0].sync_active_params_to_host(store)
+    }
+
+    /// Download the dense θ from the host-facing replica (0) — the
+    /// full checkpoint/end-of-run sync.
     pub fn sync_params_to_host(&self, store: &mut ParamStore) -> Result<()> {
         self.replicas[0].sync_params_to_host(store)
     }

@@ -41,6 +41,26 @@ pub fn inference_flops(specs: &[ParamSpec], d_fwd: f64) -> f64 {
         .sum()
 }
 
+/// Inference FLOPs per example from a store's *actual* masks: each
+/// sparse tensor contributes at its own realised density nnz(A)/n (the
+/// `SparseSet` size over the domain), dense tensors at 1. The
+/// mask-level counterpart of [`inference_flops`]'s uniform-density
+/// model, and by construction consistent with
+/// `ParamStore::effective_params` — both read the same set sizes.
+pub fn inference_flops_actual(store: &crate::sparsity::ParamStore) -> f64 {
+    store
+        .entries
+        .iter()
+        .map(|e| {
+            let df = match &e.masks {
+                Some(m) => m.fwd_nnz() as f64 / e.values.len().max(1) as f64,
+                None => 1.0,
+            };
+            2.0 * e.spec.mac as f64 * df
+        })
+        .sum()
+}
+
 /// Whole-run training FLOPs for a strategy, integrating its schedule
 /// (pruning's density ramp, RigL's amortised dense gradients). Returned
 /// as a fraction of the dense run's FLOPs — exactly Fig 2(a)'s x-axis.
@@ -135,6 +155,104 @@ mod tests {
         let d = Dense;
         let frac = run_flops_fraction(&d, &specs(), 1000, 1.0);
         assert!((frac - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn property_flops_and_effective_params_agree_with_sparse_set_nnz() {
+        use crate::sparsity::ParamStore;
+        use crate::tensor::SparseSet;
+        use crate::util::proptest::{ensure, property_cases};
+        // Across random mask edits, both accounting surfaces must read
+        // straight off the SparseSet sizes: effective_params == Σ dense
+        // numel + Σ nnz(A_t), inference_flops_actual == Σ 2·mac·nnz/n —
+        // and one added index moves them by exactly (1, 2·mac/n).
+        property_cases("flops/effective-params ⇄ SparseSet nnz", 96, |rng| {
+            let n_tensors = 1 + rng.next_below(4) as usize;
+            let specs: Vec<ParamSpec> = (0..n_tensors)
+                .map(|i| {
+                    let n = 4 + rng.next_below(60) as usize;
+                    ParamSpec {
+                        name: format!("t{i}"),
+                        shape: Shape::new(&[n]),
+                        init: InitKind::Normal,
+                        init_scale: 0.1,
+                        sparse: rng.next_below(4) != 0,
+                        mac: rng.next_below(500),
+                    }
+                })
+                .collect();
+            let mut store = ParamStore::init(&specs, rng.next_u64());
+            for _ in 0..4 {
+                // random mask edit on every sparse tensor
+                for e in store.entries.iter_mut() {
+                    let Some(m) = e.masks.as_mut() else { continue };
+                    let n = e.values.len();
+                    let k = rng.next_below(n as u64 + 1) as usize;
+                    let idx: Vec<u32> = rng
+                        .sample_indices(n, k)
+                        .into_iter()
+                        .map(|i| i as u32)
+                        .collect();
+                    m.set_fwd(SparseSet::from_unsorted(n, idx));
+                }
+                // recount independently from the sets
+                let (mut want_params, mut want_flops) = (0usize, 0.0f64);
+                for e in &store.entries {
+                    match &e.masks {
+                        Some(m) => {
+                            let nnz = m.fwd().indices().len();
+                            want_params += nnz;
+                            want_flops += 2.0 * e.spec.mac as f64 * nnz as f64
+                                / e.values.len() as f64;
+                        }
+                        None => {
+                            want_params += e.values.len();
+                            want_flops += 2.0 * e.spec.mac as f64;
+                        }
+                    }
+                }
+                ensure(
+                    store.effective_params() == want_params,
+                    "effective_params != Σ SparseSet nnz",
+                )?;
+                ensure(
+                    (inference_flops_actual(&store) - want_flops).abs() < 1e-6,
+                    "inference_flops_actual != Σ 2·mac·nnz/n",
+                )?;
+            }
+            // single-index edit moves both accounts by the linked amount
+            let edit = store.entries.iter().find_map(|e| {
+                let m = e.masks.as_ref()?;
+                let n = e.values.len();
+                let missing = (0..n as u32).find(|&i| !m.fwd().contains(i))?;
+                Some((e.spec.name.clone(), n, e.spec.mac as f64, missing))
+            });
+            if let Some((name, n, mac, missing)) = edit {
+                let before_p = store.effective_params();
+                let before_f = inference_flops_actual(&store);
+                let m = store
+                    .get_mut(&name)
+                    .expect("entry exists")
+                    .masks
+                    .as_mut()
+                    .expect("checked");
+                let mut idx = m.fwd().indices().to_vec();
+                idx.push(missing);
+                m.set_fwd(SparseSet::from_unsorted(n, idx));
+                ensure(
+                    store.effective_params() == before_p + 1,
+                    "one added index must add one effective param",
+                )?;
+                ensure(
+                    (inference_flops_actual(&store)
+                        - (before_f + 2.0 * mac / n as f64))
+                        .abs()
+                        < 1e-6,
+                    "one added index must add 2·mac/n FLOPs",
+                )?;
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -1,5 +1,6 @@
-//! Sparsity: host-side Top-K, the dense parameter store, and every
-//! mask-update strategy the paper evaluates (Top-KAST + all baselines).
+//! Sparsity: host-side Top-K, the parameter store (dense weight values,
+//! compact index-set masks — see [`store`]), and every mask-update
+//! strategy the paper evaluates (Top-KAST + all baselines).
 
 pub mod flops;
 pub mod pruning;

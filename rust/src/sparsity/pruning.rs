@@ -9,7 +9,8 @@
 use anyhow::Result;
 
 use super::strategy::{Densities, MaskStrategy, TensorCtx};
-use super::topk::{k_for_density, topk_mask_scratch, TopkScratch};
+use super::topk::{k_for_density, topk_select, TopkScratch};
+use crate::tensor::SparseSet;
 
 #[derive(Clone, Debug)]
 pub struct MagnitudePruning {
@@ -61,9 +62,10 @@ impl MaskStrategy for MagnitudePruning {
         let n = ctx.weights.len();
         let d = self.density_at(ctx.step, ctx.total_steps);
         let k = k_for_density(n, d);
-        topk_mask_scratch(ctx.weights, k, ctx.mask_fwd, &mut self.scratch);
+        ctx.fwd
+            .set_from_unsorted(topk_select(ctx.weights, k, &mut self.scratch));
         // dense backward: every unit keeps learning (set B = everything)
-        ctx.mask_bwd.fill(1.0);
+        *ctx.bwd = SparseSet::full(n);
         Ok(())
     }
 }
@@ -86,8 +88,9 @@ impl MaskStrategy for Dense {
     }
 
     fn update_tensor(&mut self, ctx: TensorCtx<'_>) -> Result<()> {
-        ctx.mask_fwd.fill(1.0);
-        ctx.mask_bwd.fill(1.0);
+        let n = ctx.weights.len();
+        *ctx.fwd = SparseSet::full(n);
+        *ctx.bwd = SparseSet::full(n);
         Ok(())
     }
 }
@@ -121,24 +124,25 @@ mod tests {
         let mut p = MagnitudePruning::new(0.2);
         let n = 50;
         let mut w: Vec<f32> = (0..n).map(|i| i as f32 - 25.0).collect();
-        let (mut mf, mut mb) = (vec![0.0; n], vec![0.0; n]);
+        let mut mf = SparseSet::empty(n);
+        let mut mb = SparseSet::empty(n);
         let mut rng = Pcg64::seeded(0);
         p.update_tensor(TensorCtx {
             name: "t",
             weights: &mut w,
-            mask_fwd: &mut mf,
-            mask_bwd: &mut mb,
+            fwd: &mut mf,
+            bwd: &mut mb,
             grad_norms: None,
             rng: &mut rng,
             step: 900,
             total_steps: 1000,
         })
         .unwrap();
-        assert_eq!(mf.iter().filter(|&&x| x == 1.0).count(), 10);
-        assert!(mb.iter().all(|&x| x == 1.0), "pruning backward is dense");
+        assert_eq!(mf.len(), 10);
+        assert_eq!(mb.len(), n, "pruning backward is dense");
         // weight 0 (magnitude 25) must be kept; weight near 25 (mag ~0) dropped
-        assert_eq!(mf[0], 1.0);
-        assert_eq!(mf[25], 0.0);
+        assert!(mf.contains(0));
+        assert!(!mf.contains(25));
     }
 
     #[test]
@@ -146,21 +150,22 @@ mod tests {
         let mut d = Dense;
         let n = 10;
         let mut w = vec![0.0f32; n];
-        let (mut mf, mut mb) = (vec![0.0; n], vec![0.0; n]);
+        let mut mf = SparseSet::empty(n);
+        let mut mb = SparseSet::empty(n);
         let mut rng = Pcg64::seeded(0);
         d.update_tensor(TensorCtx {
             name: "t",
             weights: &mut w,
-            mask_fwd: &mut mf,
-            mask_bwd: &mut mb,
+            fwd: &mut mf,
+            bwd: &mut mb,
             grad_norms: None,
             rng: &mut rng,
             step: 0,
             total_steps: 1,
         })
         .unwrap();
-        assert!(mf.iter().all(|&x| x == 1.0));
-        assert!(mb.iter().all(|&x| x == 1.0));
+        assert_eq!(mf, SparseSet::full(n));
+        assert_eq!(mb, SparseSet::full(n));
         assert_eq!(d.densities(0, 1), Densities { fwd: 1.0, bwd: 1.0 });
     }
 }

@@ -5,12 +5,16 @@
 //! The dense gradient RigL occasionally needs is exactly the part the
 //! paper's Appendix C argues is awkward inside DL frameworks; here it is
 //! explicit: the coordinator runs the dedicated `grad_norms` artifact at
-//! RigL update steps and hands the magnitudes to this strategy.
+//! RigL update steps and hands the magnitudes to this strategy. The
+//! drop/grow edit is computed directly on the active index set; the
+//! complement walk is inherently O(n) (the grow criterion ranks every
+//! inactive position by its dense |grad|).
 
 use anyhow::Result;
 
 use super::strategy::{Densities, MaskStrategy, TensorCtx};
 use super::topk::k_for_density;
+use crate::tensor::SparseSet;
 
 #[derive(Clone, Debug)]
 pub struct RigL {
@@ -87,11 +91,14 @@ impl MaskStrategy for RigL {
         let k = k_for_density(n, self.density);
 
         if !self.initialised || ctx.step == 0 {
-            ctx.mask_fwd.fill(0.0);
-            for i in ctx.rng.sample_indices(n, k) {
-                ctx.mask_fwd[i] = 1.0;
-            }
-            ctx.mask_bwd.copy_from_slice(ctx.mask_fwd);
+            let idx: Vec<u32> = ctx
+                .rng
+                .sample_indices(n, k)
+                .into_iter()
+                .map(|i| i as u32)
+                .collect();
+            ctx.fwd.set_from_unsorted(&idx);
+            ctx.bwd.clone_from(ctx.fwd);
             self.initialised = true;
             return Ok(());
         }
@@ -108,8 +115,7 @@ impl MaskStrategy for RigL {
         };
         debug_assert_eq!(grads.len(), n);
 
-        let mut active: Vec<usize> =
-            (0..n).filter(|&i| ctx.mask_fwd[i] == 1.0).collect();
+        let mut active: Vec<u32> = ctx.fwd.indices().to_vec();
         let n_drop = ((active.len() as f64)
             * self.drop_frac_at(ctx.step, ctx.total_steps))
         .round() as usize;
@@ -120,32 +126,37 @@ impl MaskStrategy for RigL {
 
         // Drop lowest |w| among active.
         active.sort_by(|&a, &b| {
-            ctx.weights[a]
+            ctx.weights[a as usize]
                 .abs()
-                .partial_cmp(&ctx.weights[b].abs())
+                .partial_cmp(&ctx.weights[b as usize].abs())
                 .unwrap()
                 .then(a.cmp(&b))
         });
         for &i in active.iter().take(n_drop) {
-            ctx.mask_fwd[i] = 0.0;
-            ctx.weights[i] = 0.0;
+            ctx.weights[i as usize] = 0.0;
         }
+        let survivors = &active[n_drop..];
 
-        // Grow highest |grad| among (now-)inactive; new weights start at
-        // zero (RigL's convention — they receive momentum immediately).
-        let mut inactive: Vec<usize> =
-            (0..n).filter(|&i| ctx.mask_fwd[i] == 0.0).collect();
+        // Grow highest |grad| among the (now-)inactive — the complement
+        // of the survivor set, which includes the just-dropped units;
+        // new weights start at zero (RigL's convention — they receive
+        // momentum immediately).
+        let survivor_set = SparseSet::from_unsorted(n, survivors.to_vec());
+        let mut inactive: Vec<u32> = survivor_set.complement_indices();
         inactive.sort_by(|&a, &b| {
-            grads[b]
-                .partial_cmp(&grads[a])
+            grads[b as usize]
+                .partial_cmp(&grads[a as usize])
                 .unwrap()
                 .then(a.cmp(&b))
         });
-        for &i in inactive.iter().take(n_drop.min(inactive.len())) {
-            ctx.mask_fwd[i] = 1.0;
-            ctx.weights[i] = 0.0;
+        let n_grow = n_drop.min(inactive.len());
+        for &i in inactive.iter().take(n_grow) {
+            ctx.weights[i as usize] = 0.0;
         }
-        ctx.mask_bwd.copy_from_slice(ctx.mask_fwd);
+        let mut new_active: Vec<u32> = survivors.to_vec();
+        new_active.extend(inactive.iter().take(n_grow));
+        ctx.fwd.set_from_unsorted(&new_active);
+        ctx.bwd.clone_from(ctx.fwd);
         Ok(())
     }
 }
@@ -155,11 +166,12 @@ mod tests {
     use super::*;
     use crate::util::rng::Pcg64;
 
+    #[allow(clippy::too_many_arguments)]
     fn ctx_run(
         s: &mut RigL,
-        w: &mut Vec<f32>,
-        mf: &mut Vec<f32>,
-        mb: &mut Vec<f32>,
+        w: &mut [f32],
+        mf: &mut SparseSet,
+        mb: &mut SparseSet,
         g: Option<&[f32]>,
         rng: &mut Pcg64,
         step: usize,
@@ -168,8 +180,8 @@ mod tests {
         s.update_tensor(TensorCtx {
             name: "t",
             weights: w,
-            mask_fwd: mf,
-            mask_bwd: mb,
+            fwd: mf,
+            bwd: mb,
             grad_norms: g,
             rng,
             step,
@@ -184,18 +196,18 @@ mod tests {
         let mut rng = Pcg64::seeded(0);
         let mut w: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.1)).collect();
         let mut s = RigL::new(0.2, 0.5, 100);
-        let (mut mf, mut mb) = (vec![0.0; n], vec![0.0; n]);
+        let (mut mf, mut mb) = (SparseSet::empty(n), SparseSet::empty(n));
         ctx_run(&mut s, &mut w, &mut mf, &mut mb, None, &mut rng, 0, 1000);
-        assert_eq!(mf.iter().filter(|&&x| x == 1.0).count(), 20);
+        assert_eq!(mf.len(), 20);
 
-        // Gradient spike on position 7 (if inactive) must wake it up.
-        let target = (0..n).find(|&i| mf[i] == 0.0).unwrap();
+        // Gradient spike on an inactive position must wake it up.
+        let target = (0..n as u32).find(|&i| !mf.contains(i)).unwrap();
         let mut g = vec![0.001f32; n];
-        g[target] = 100.0;
+        g[target as usize] = 100.0;
         ctx_run(&mut s, &mut w, &mut mf, &mut mb, Some(&g), &mut rng, 100, 1000);
-        assert_eq!(mf[target], 1.0, "largest-gradient unit not grown");
-        assert_eq!(w[target], 0.0, "grown weight must be zero-init");
-        assert_eq!(mf.iter().filter(|&&x| x == 1.0).count(), 20, "density kept");
+        assert!(mf.contains(target), "largest-gradient unit not grown");
+        assert_eq!(w[target as usize], 0.0, "grown weight must be zero-init");
+        assert_eq!(mf.len(), 20, "density kept");
     }
 
     #[test]
@@ -204,7 +216,7 @@ mod tests {
         let mut rng = Pcg64::seeded(1);
         let mut w: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.1)).collect();
         let mut s = RigL::new(0.3, 0.5, 10);
-        let (mut mf, mut mb) = (vec![0.0; n], vec![0.0; n]);
+        let (mut mf, mut mb) = (SparseSet::empty(n), SparseSet::empty(n));
         ctx_run(&mut s, &mut w, &mut mf, &mut mb, None, &mut rng, 0, 100);
         let g = vec![1.0f32; n];
         let snapshot = mf.clone();
@@ -220,13 +232,13 @@ mod tests {
         let mut rng = Pcg64::seeded(2);
         let mut w: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.1)).collect();
         let mut s = RigL::new(0.3, 0.5, 10);
-        let (mut mf, mut mb) = (vec![0.0; n], vec![0.0; n]);
+        let (mut mf, mut mb) = (SparseSet::empty(n), SparseSet::empty(n));
         ctx_run(&mut s, &mut w, &mut mf, &mut mb, None, &mut rng, 0, 1000);
         let r = s.update_tensor(TensorCtx {
             name: "t",
             weights: &mut w,
-            mask_fwd: &mut mf,
-            mask_bwd: &mut mb,
+            fwd: &mut mf,
+            bwd: &mut mb,
             grad_norms: None,
             rng: &mut rng,
             step: 10,

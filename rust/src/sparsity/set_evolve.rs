@@ -2,11 +2,14 @@
 //! random-growth baseline of Fig 2: periodically drop the
 //! smallest-magnitude active connections and grow the same number at
 //! random, re-initialising grown weights from the init distribution.
+//! The evolution is an edit on the active index set; only the uniform
+//! grow step walks the complement (inherently O(n)).
 
 use anyhow::Result;
 
 use super::strategy::{Densities, MaskStrategy, TensorCtx};
 use super::topk::k_for_density;
+use crate::tensor::SparseSet;
 
 #[derive(Clone, Debug)]
 pub struct SetEvolve {
@@ -61,18 +64,20 @@ impl MaskStrategy for SetEvolve {
 
         if !self.initialised || ctx.step == 0 {
             // ER-style random init mask at the target density.
-            ctx.mask_fwd.fill(0.0);
-            for i in ctx.rng.sample_indices(n, k) {
-                ctx.mask_fwd[i] = 1.0;
-            }
-            ctx.mask_bwd.copy_from_slice(ctx.mask_fwd);
+            let idx: Vec<u32> = ctx
+                .rng
+                .sample_indices(n, k)
+                .into_iter()
+                .map(|i| i as u32)
+                .collect();
+            ctx.fwd.set_from_unsorted(&idx);
+            ctx.bwd.clone_from(ctx.fwd);
             self.initialised = true;
             return Ok(());
         }
 
         // Drop: lowest-|w| active connections.
-        let mut active: Vec<usize> =
-            (0..n).filter(|&i| ctx.mask_fwd[i] == 1.0).collect();
+        let mut active: Vec<u32> = ctx.fwd.indices().to_vec();
         let n_drop = ((active.len() as f64)
             * self.drop_frac_at(ctx.step, ctx.total_steps))
         .round() as usize;
@@ -81,28 +86,31 @@ impl MaskStrategy for SetEvolve {
             return Ok(());
         }
         active.sort_by(|&a, &b| {
-            ctx.weights[a]
+            ctx.weights[a as usize]
                 .abs()
-                .partial_cmp(&ctx.weights[b].abs())
+                .partial_cmp(&ctx.weights[b as usize].abs())
                 .unwrap()
                 .then(a.cmp(&b))
         });
         for &i in active.iter().take(n_drop) {
-            ctx.mask_fwd[i] = 0.0;
-            ctx.weights[i] = 0.0;
+            ctx.weights[i as usize] = 0.0;
         }
+        let survivors = &active[n_drop..];
 
-        // Grow: uniform over inactive positions; re-init from the
+        // Grow: uniform over inactive positions (the complement of the
+        // survivors, including just-dropped units); re-init from the
         // original init distribution (SET's convention).
-        let inactive: Vec<usize> =
-            (0..n).filter(|&i| ctx.mask_fwd[i] == 0.0).collect();
+        let survivor_set = SparseSet::from_unsorted(n, survivors.to_vec());
+        let inactive: Vec<u32> = survivor_set.complement_indices();
         let n_grow = n_drop.min(inactive.len());
+        let mut new_active: Vec<u32> = survivors.to_vec();
         for j in ctx.rng.sample_indices(inactive.len(), n_grow) {
             let i = inactive[j];
-            ctx.mask_fwd[i] = 1.0;
-            ctx.weights[i] = ctx.rng.normal_f32(self.init_scale);
+            ctx.weights[i as usize] = ctx.rng.normal_f32(self.init_scale);
+            new_active.push(i);
         }
-        ctx.mask_bwd.copy_from_slice(ctx.mask_fwd);
+        ctx.fwd.set_from_unsorted(&new_active);
+        ctx.bwd.clone_from(ctx.fwd);
         Ok(())
     }
 }
@@ -115,17 +123,17 @@ mod tests {
 
     fn step_once(
         s: &mut SetEvolve,
-        w: &mut Vec<f32>,
-        mf: &mut Vec<f32>,
-        mb: &mut Vec<f32>,
+        w: &mut [f32],
+        mf: &mut SparseSet,
+        mb: &mut SparseSet,
         rng: &mut Pcg64,
         step: usize,
     ) {
         s.update_tensor(TensorCtx {
             name: "t",
             weights: w,
-            mask_fwd: mf,
-            mask_bwd: mb,
+            fwd: mf,
+            bwd: mb,
             grad_norms: None,
             rng,
             step,
@@ -140,13 +148,15 @@ mod tests {
             let n = 50 + rng.next_below(200) as usize;
             let mut w: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.1)).collect();
             let mut s = SetEvolve::new(0.3, 0.3, 0.1);
-            let (mut mf, mut mb) = (vec![0.0; n], vec![0.0; n]);
+            let (mut mf, mut mb) = (SparseSet::empty(n), SparseSet::empty(n));
             let mut r2 = rng.fork(1);
             let k = k_for_density(n, 0.3);
             for step in [0usize, 100, 200, 300] {
                 step_once(&mut s, &mut w, &mut mf, &mut mb, &mut r2, step);
-                let nnz = mf.iter().filter(|&&x| x == 1.0).count();
-                ensure(nnz == k, format!("step {step}: nnz {nnz} != {k}"))?;
+                ensure(
+                    mf.len() == k,
+                    format!("step {step}: nnz {} != {k}", mf.len()),
+                )?;
                 ensure(mf == mb, "SET fwd == bwd")?;
             }
             Ok(())
@@ -159,21 +169,14 @@ mod tests {
         let mut rng = Pcg64::seeded(3);
         let mut w: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.1)).collect();
         let mut s = SetEvolve::new(0.4, 0.5, 0.1);
-        let (mut mf, mut mb) = (vec![0.0; n], vec![0.0; n]);
+        let (mut mf, mut mb) = (SparseSet::empty(n), SparseSet::empty(n));
         step_once(&mut s, &mut w, &mut mf, &mut mb, &mut rng, 0);
         let before = mf.clone();
         step_once(&mut s, &mut w, &mut mf, &mut mb, &mut rng, 100);
-        let changed = before
-            .iter()
-            .zip(&mf)
-            .filter(|(a, b)| a != b)
-            .count();
-        assert!(changed > 0, "mask should evolve");
-        // every inactive position must carry weight 0 after evolution
-        for i in 0..n {
-            if mf[i] == 0.0 && before[i] == 1.0 {
-                assert_eq!(w[i], 0.0, "dropped weight not zeroed at {i}");
-            }
+        assert_ne!(before, mf, "mask should evolve");
+        // every dropped position must carry weight 0 after evolution
+        for i in before.diff(&mf).iter() {
+            assert_eq!(w[i as usize], 0.0, "dropped weight not zeroed at {i}");
         }
     }
 

@@ -39,11 +39,14 @@ impl MaskStrategy for StaticRandom {
         }
         let n = ctx.weights.len();
         let k = k_for_density(n, self.density);
-        ctx.mask_fwd.fill(0.0);
-        for i in ctx.rng.sample_indices(n, k) {
-            ctx.mask_fwd[i] = 1.0;
-        }
-        ctx.mask_bwd.copy_from_slice(ctx.mask_fwd);
+        let idx: Vec<u32> = ctx
+            .rng
+            .sample_indices(n, k)
+            .into_iter()
+            .map(|i| i as u32)
+            .collect();
+        ctx.fwd.set_from_unsorted(&idx);
+        ctx.bwd.clone_from(ctx.fwd);
         self.initialised = true;
         Ok(())
     }
@@ -52,35 +55,36 @@ impl MaskStrategy for StaticRandom {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::SparseSet;
     use crate::util::rng::Pcg64;
 
     #[test]
     fn mask_fixed_after_init() {
         let mut s = StaticRandom::new(0.3);
         let mut w = vec![0.5f32; 100];
-        let mut mf = vec![0.0; 100];
-        let mut mb = vec![0.0; 100];
+        let mut mf = SparseSet::empty(100);
+        let mut mb = SparseSet::empty(100);
         let mut rng = Pcg64::seeded(5);
         s.update_tensor(TensorCtx {
             name: "t",
             weights: &mut w,
-            mask_fwd: &mut mf,
-            mask_bwd: &mut mb,
+            fwd: &mut mf,
+            bwd: &mut mb,
             grad_norms: None,
             rng: &mut rng,
             step: 0,
             total_steps: 10,
         })
         .unwrap();
-        assert_eq!(mf.iter().filter(|&&x| x == 1.0).count(), 30);
+        assert_eq!(mf.len(), 30);
         assert_eq!(mf, mb);
         let snapshot = mf.clone();
         // later refreshes must not move the mask
         s.update_tensor(TensorCtx {
             name: "t",
             weights: &mut w,
-            mask_fwd: &mut mf,
-            mask_bwd: &mut mb,
+            fwd: &mut mf,
+            bwd: &mut mb,
             grad_norms: None,
             rng: &mut rng,
             step: 50,

@@ -1,96 +1,178 @@
-//! The dense parameter store — the host-resident θ of the paper (§2.4:
-//! "The CPU could maintain the parameters in an appropriate data
-//! structure"). Owns initialisation (from manifest ParamSpecs), the
-//! current dense values, and the per-tensor masks.
+//! The host parameter store — the paper's §2.4 CPU-side θ "in an
+//! appropriate data structure". Weight *values* stay dense on the host
+//! (masked-out weights keep their magnitudes so they can re-enter the
+//! top-k later), but the masks are **compact**: [`MaskPair`] holds
+//! sorted index sets ([`SparseSet`]), not dense 0/1 vectors, so mask
+//! state, exchange traffic and checkpoints all scale with nnz.
+//!
+//! Densification happens only at the edges that need a dense view: the
+//! simulated device expands an index install/delta into its resident
+//! 0/1 buffer (`xla::PjRtClient::mask_from_indices` /
+//! `PjRtBuffer::scatter_mask_update`), and the legacy host-round-trip
+//! execution path materialises masks via [`MaskPair::fwd_dense`] /
+//! [`MaskPair::bwd_dense`].
 //!
 //! Under the device-resident runtime (`runtime::device_state`) the
 //! store stays the *mask authority* at all times, while its weight
-//! values are only guaranteed fresh at sync points — mask refresh,
-//! checkpoint capture, and end of run. Evaluation is *not* a sync
-//! point: it reads the resident device buffers directly and leaves
-//! the host copy untouched.
+//! values are only guaranteed fresh at sync points — mask refresh
+//! (sparse tensors only, via the O(nnz) active-θ gather), checkpoint
+//! capture, and end of run. Evaluation is *not* a sync point: it reads
+//! the resident device buffers directly and leaves the host copy
+//! untouched.
 
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, Result};
 
 use crate::runtime::manifest::{InitKind, ParamSpec};
+use crate::tensor::SparseSet;
 use crate::util::rng::Pcg64;
 
-/// Forward + backward masks for one sparse tensor (0/1 as f32 — the
-/// exact representation uploaded to the device).
+/// Forward + backward masks for one sparse tensor, as sorted index
+/// sets over the tensor's flat domain — the compact representation the
+/// whole exchange plane (device installs, refresh syncs, checkpoints)
+/// is keyed on. The device-side dense 0/1 expansion happens at install
+/// time; the host never materialises dense masks except through the
+/// explicit [`MaskPair::fwd_dense`]/[`MaskPair::bwd_dense`] helpers.
 ///
-/// Buffers are private so the nnz counts can be cached: observers call
-/// `effective_params()` every logged step, and an O(total-params) scan
-/// there was measurable. All mutation paths (`set_fwd`/`set_bwd`/
-/// [`MaskPair::edit`]) recount on write.
+/// Alongside A (fwd) and B (bwd) the pair tracks `touched`: the union
+/// of every active set that has ever been installed. Because the train
+/// artifacts write only inside B (`delta = m_bwd ⊙ delta`, pinned by
+/// the mask-respecting tests) and host-side strategy rewrites stay
+/// inside the active sets, a position outside `touched` still holds
+/// its *init* value (and exactly-zero optimiser slots) — which is what
+/// lets v2 checkpoints store only `touched`-indexed values and remain
+/// bit-exact.
 #[derive(Clone, Debug)]
 pub struct MaskPair {
-    fwd: Vec<f32>,
-    bwd: Vec<f32>,
-    fwd_nnz: usize,
-    bwd_nnz: usize,
-}
-
-fn nnz(v: &[f32]) -> usize {
-    v.iter().filter(|&&x| x != 0.0).count()
+    fwd: SparseSet,
+    bwd: SparseSet,
+    /// Union of every (fwd ∪ bwd) this pair has held — see type docs.
+    touched: SparseSet,
 }
 
 impl MaskPair {
+    /// The all-ones placeholder masks a sparse tensor starts with
+    /// (replaced by the strategy at the step-0 refresh, before any
+    /// train step runs). `touched` starts *empty*: the placeholder is
+    /// never trained on under the coordinator protocol.
     pub fn dense(n: usize) -> Self {
-        MaskPair { fwd: vec![1.0; n], bwd: vec![1.0; n], fwd_nnz: n, bwd_nnz: n }
+        MaskPair {
+            fwd: SparseSet::full(n),
+            bwd: SparseSet::full(n),
+            touched: SparseSet::empty(n),
+        }
     }
 
-    /// Take ownership of prebuilt mask vectors (counts them once).
+    /// Take ownership of prebuilt index sets (async worker results).
+    pub fn from_sets(fwd: SparseSet, bwd: SparseSet) -> Self {
+        assert_eq!(fwd.domain(), bwd.domain(), "fwd/bwd domain mismatch");
+        let touched = fwd.union(&bwd);
+        MaskPair { fwd, bwd, touched }
+    }
+
+    /// Convenience: build from dense 0/1 vectors (tests, legacy data).
     pub fn from_vecs(fwd: Vec<f32>, bwd: Vec<f32>) -> Self {
-        let (fwd_nnz, bwd_nnz) = (nnz(&fwd), nnz(&bwd));
-        MaskPair { fwd, bwd, fwd_nnz, bwd_nnz }
+        Self::from_sets(SparseSet::from(fwd), SparseSet::from(bwd))
     }
 
-    pub fn fwd(&self) -> &[f32] {
+    pub fn fwd(&self) -> &SparseSet {
         &self.fwd
     }
 
-    pub fn bwd(&self) -> &[f32] {
+    pub fn bwd(&self) -> &SparseSet {
         &self.bwd
     }
 
-    /// Cached non-zero count of the forward mask.
+    /// Dense 0/1 materialisation of the forward mask (legacy
+    /// host-round-trip upload path and diagnostics only).
+    pub fn fwd_dense(&self) -> Vec<f32> {
+        self.fwd.to_dense()
+    }
+
+    /// Dense 0/1 materialisation of the backward mask.
+    pub fn bwd_dense(&self) -> Vec<f32> {
+        self.bwd.to_dense()
+    }
+
+    /// Non-zero count of the forward mask — O(1), it is the set size.
     pub fn fwd_nnz(&self) -> usize {
-        self.fwd_nnz
+        self.fwd.len()
     }
 
-    /// Cached non-zero count of the backward mask.
+    /// Non-zero count of the backward mask.
     pub fn bwd_nnz(&self) -> usize {
-        self.bwd_nnz
+        self.bwd.len()
     }
 
-    pub fn set_fwd(&mut self, m: Vec<f32>) {
-        self.fwd_nnz = nnz(&m);
+    /// The tensor's flat element count both sets index into.
+    pub fn domain(&self) -> usize {
+        self.fwd.domain()
+    }
+
+    /// fwd ∪ bwd — the positions a refresh must download θ for.
+    pub fn active_union(&self) -> SparseSet {
+        self.fwd.union(&self.bwd)
+    }
+
+    pub fn set_fwd(&mut self, m: impl Into<SparseSet>) {
+        let m = m.into();
+        assert_eq!(m.domain(), self.fwd.domain(), "fwd mask domain changed");
+        self.touched.union_in_place(&m);
         self.fwd = m;
     }
 
-    pub fn set_bwd(&mut self, m: Vec<f32>) {
-        self.bwd_nnz = nnz(&m);
+    pub fn set_bwd(&mut self, m: impl Into<SparseSet>) {
+        let m = m.into();
+        assert_eq!(m.domain(), self.bwd.domain(), "bwd mask domain changed");
+        self.touched.union_in_place(&m);
         self.bwd = m;
     }
 
-    /// Mutate both buffers in place; the counts are refreshed after the
-    /// closure returns (this is the strategies' write path).
-    pub fn edit<R>(&mut self, f: impl FnOnce(&mut [f32], &mut [f32]) -> R) -> R {
+    /// Install another pair's sets into this one, accumulating into
+    /// `touched` (the async-refresh install path — a plain assignment
+    /// would lose the history).
+    pub fn install(&mut self, other: &MaskPair) {
+        self.set_fwd(other.fwd.clone());
+        self.set_bwd(other.bwd.clone());
+        self.touched.union_in_place(&other.touched);
+    }
+
+    /// Mutate both sets in place; the new active sets are folded into
+    /// `touched` after the closure returns (the strategies' write
+    /// path, driven by `update_store_masks`).
+    pub fn edit<R>(&mut self, f: impl FnOnce(&mut SparseSet, &mut SparseSet) -> R) -> R {
         let r = f(&mut self.fwd, &mut self.bwd);
-        self.fwd_nnz = nnz(&self.fwd);
-        self.bwd_nnz = nnz(&self.bwd);
+        self.touched.union_in_place(&self.fwd);
+        self.touched.union_in_place(&self.bwd);
         r
     }
 
     /// Check A ⊆ B (every forward-active unit is backward-active).
     pub fn is_nested(&self) -> bool {
-        self.fwd.iter().zip(&self.bwd).all(|(&f, &b)| f <= b)
+        self.fwd.is_subset_of(&self.bwd)
+    }
+
+    /// Positions whose θ/opt may deviate from (init, 0) — see type docs.
+    pub fn touched(&self) -> &SparseSet {
+        &self.touched
+    }
+
+    /// Overwrite the touched set (checkpoint restore: the checkpoint's
+    /// own history replaces whatever this pair accumulated).
+    pub fn set_touched(&mut self, touched: SparseSet) {
+        assert_eq!(touched.domain(), self.fwd.domain(), "touched domain changed");
+        self.touched = touched;
+    }
+
+    /// Declare every position potentially trained (dense-payload
+    /// restores, or masks installed outside the refresh protocol).
+    pub fn mark_all_touched(&mut self) {
+        self.touched = SparseSet::full(self.fwd.domain());
     }
 }
 
-/// One tensor's dense state.
+/// One tensor's state: dense values + compact masks.
 #[derive(Clone, Debug)]
 pub struct ParamEntry {
     pub spec: ParamSpec,
@@ -99,13 +181,36 @@ pub struct ParamEntry {
     pub masks: Option<MaskPair>,
 }
 
-/// The host-side dense model: every parameter tensor plus optimiser
-/// slots are device-resident at train time; the store holds the *mask
-/// authority* and (at sync points) a synced copy of the weights.
+/// The host-side model: dense weight values per tensor (the paper
+/// keeps full θ on the CPU) plus index-set masks for the sparse ones.
+/// At train time everything is device-resident; the store holds the
+/// *mask authority* and (at sync points) a synced copy of the weights.
+///
+/// Invariant relied on by sparse checkpoints: writers of `values` keep
+/// positions outside each mask's `touched` set at their init values
+/// (device syncs and in-mask strategy rewrites do by construction; a
+/// caller editing weights out-of-band must `mark_all_touched`).
 #[derive(Clone, Debug)]
 pub struct ParamStore {
     pub entries: Vec<ParamEntry>,
     index: BTreeMap<String, usize>,
+    /// The seed `init` drew the values from — recorded so sparse (v2)
+    /// checkpoints can verify the restore target reconstructs the same
+    /// untouched values.
+    init_seed: Option<u64>,
+}
+
+/// Draw one tensor's init values from its per-entry child stream.
+fn draw_init(spec: &ParamSpec, child: &mut Pcg64) -> Vec<f32> {
+    let n = spec.shape.numel();
+    match spec.init {
+        InitKind::Normal => (0..n).map(|_| child.normal_f32(spec.init_scale)).collect(),
+        InitKind::Uniform => (0..n)
+            .map(|_| (child.next_f32() * 2.0 - 1.0) * spec.init_scale)
+            .collect(),
+        InitKind::Zeros => vec![0.0; n],
+        InitKind::Ones => vec![1.0; n],
+    }
 }
 
 impl ParamStore {
@@ -117,22 +222,40 @@ impl ParamStore {
         let mut index = BTreeMap::new();
         for (i, spec) in specs.iter().enumerate() {
             let mut child = rng.fork(i as u64);
+            let values = draw_init(spec, &mut child);
             let n = spec.shape.numel();
-            let values: Vec<f32> = match spec.init {
-                InitKind::Normal => {
-                    (0..n).map(|_| child.normal_f32(spec.init_scale)).collect()
-                }
-                InitKind::Uniform => (0..n)
-                    .map(|_| (child.next_f32() * 2.0 - 1.0) * spec.init_scale)
-                    .collect(),
-                InitKind::Zeros => vec![0.0; n],
-                InitKind::Ones => vec![1.0; n],
-            };
             let masks = spec.sparse.then(|| MaskPair::dense(n));
             index.insert(spec.name.clone(), i);
             entries.push(ParamEntry { spec: spec.clone(), values, masks });
         }
-        ParamStore { entries, index }
+        ParamStore { entries, index, init_seed: Some(seed) }
+    }
+
+    /// The seed the values were initialised from (None only for stores
+    /// assembled by hand).
+    pub fn init_seed(&self) -> Option<u64> {
+        self.init_seed
+    }
+
+    /// Regenerate the init values entry `name` received (or would have
+    /// received) from `ParamStore::init(specs, seed)` — the
+    /// deterministic base that sparse checkpoint payloads are relative
+    /// to. Exact for any store built from the same specs in the same
+    /// order; the per-entry child streams are replayed from the seed.
+    pub fn regenerate_init_values(&self, name: &str, seed: u64) -> Result<Vec<f32>> {
+        let i = *self
+            .index
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown param {name:?}"))?;
+        // `init` forks one child per entry in order; replay that
+        // sequence so entry i's stream comes out identical.
+        let mut rng = Pcg64::new(seed, 0x1217);
+        let mut child = None;
+        for j in 0..=i {
+            child = Some(rng.fork(j as u64));
+        }
+        let mut child = child.expect("0..=i is never empty");
+        Ok(draw_init(&self.entries[i].spec, &mut child))
     }
 
     pub fn get(&self, name: &str) -> Result<&ParamEntry> {
@@ -166,7 +289,7 @@ impl ParamStore {
     /// Parameters that are *representable* under the current forward
     /// masks: dense tensors count fully, sparse tensors count nnz(fwd).
     /// This is the paper's "Params" column in Tables 2/3/5. O(#tensors)
-    /// thanks to the cached per-mask counts.
+    /// because the set sizes are the counts.
     pub fn effective_params(&self) -> usize {
         self.entries
             .iter()
@@ -226,6 +349,7 @@ mod tests {
         assert!(w1.iter().any(|&x| x != 0.0));
         let w2 = &st.get("w2").unwrap().values;
         assert!(w2.iter().all(|&x| x.abs() <= 0.1));
+        assert_eq!(st.init_seed(), Some(7));
     }
 
     #[test]
@@ -235,6 +359,29 @@ mod tests {
         assert_eq!(a.get("w1").unwrap().values, b.get("w1").unwrap().values);
         let c = ParamStore::init(&specs(), 43);
         assert_ne!(a.get("w1").unwrap().values, c.get("w1").unwrap().values);
+    }
+
+    #[test]
+    fn regenerated_init_replays_the_per_entry_streams_exactly() {
+        let st = ParamStore::init(&specs(), 42);
+        for e in &st.entries {
+            assert_eq!(
+                st.regenerate_init_values(&e.spec.name, 42).unwrap(),
+                e.values,
+                "{}: regeneration must replay init bit-exactly",
+                e.spec.name
+            );
+        }
+        // works from a store of a *different* seed too — the base is
+        // replayed from the seed argument, not the store's own values
+        let other = ParamStore::init(&specs(), 7);
+        for e in &st.entries {
+            assert_eq!(
+                other.regenerate_init_values(&e.spec.name, 42).unwrap(),
+                e.values
+            );
+        }
+        assert!(st.regenerate_init_values("nope", 42).is_err());
     }
 
     #[test]
@@ -258,56 +405,81 @@ mod tests {
     }
 
     #[test]
-    fn nnz_cache_tracks_every_write_path() {
+    fn set_backed_masks_track_every_write_path() {
         let mut m = MaskPair::dense(6);
         assert_eq!((m.fwd_nnz(), m.bwd_nnz()), (6, 6));
+        assert!(m.touched().is_empty(), "placeholder masks are untrained");
         m.set_fwd(vec![1.0, 0.0, 0.0, 1.0, 0.0, 0.0]);
         assert_eq!(m.fwd_nnz(), 2);
+        assert_eq!(m.fwd().indices(), &[0, 3]);
         m.set_bwd(vec![1.0, 1.0, 0.0, 1.0, 0.0, 0.0]);
         assert_eq!(m.bwd_nnz(), 3);
         m.edit(|fwd, bwd| {
-            fwd.fill(0.0);
-            bwd[0] = 0.0;
+            fwd.set_from_unsorted(&[]);
+            bwd.set_from_unsorted(&[0, 3]);
         });
         assert_eq!((m.fwd_nnz(), m.bwd_nnz()), (0, 2));
+        // touched accumulated every installed active set
+        assert_eq!(m.touched().indices(), &[0, 1, 3]);
         let p = MaskPair::from_vecs(vec![1.0, 0.0], vec![1.0, 1.0]);
         assert_eq!((p.fwd_nnz(), p.bwd_nnz()), (1, 2));
+        assert_eq!(p.active_union().indices(), &[0, 1]);
+        assert_eq!(p.touched().indices(), &[0, 1]);
     }
 
     #[test]
-    fn property_nnz_cache_consistent_under_arbitrary_mutation() {
+    fn property_touched_covers_every_installed_active_set() {
         use crate::util::proptest::{ensure, property_cases};
         // Drive MaskPair through random sequences of every write path
-        // (set_fwd / set_bwd / edit) and check the cached counts always
-        // equal a fresh recount — the invariant effective_params() and
-        // the traffic tests lean on.
-        property_cases("MaskPair nnz cache == recount", 128, |rng| {
+        // (set_fwd / set_bwd / edit / install) and check `touched`
+        // always contains the running union of installed active sets —
+        // the invariant sparse checkpoints lean on.
+        property_cases("MaskPair touched ⊇ ∪ active sets", 128, |rng| {
             let n = 1 + rng.next_below(64) as usize;
             let mut m = MaskPair::dense(n);
-            let random_mask = |rng: &mut crate::util::rng::Pcg64| -> Vec<f32> {
-                (0..n)
-                    .map(|_| if rng.next_below(2) == 0 { 0.0 } else { 1.0 })
-                    .collect()
+            let mut reference = SparseSet::empty(n);
+            let random_set = |rng: &mut crate::util::rng::Pcg64| -> SparseSet {
+                let k = rng.next_below(n as u64 + 1) as usize;
+                SparseSet::from_unsorted(
+                    n,
+                    rng.sample_indices(n, k).into_iter().map(|i| i as u32).collect(),
+                )
             };
             for _ in 0..8 {
                 match rng.next_below(3) {
-                    0 => m.set_fwd(random_mask(rng)),
-                    1 => m.set_bwd(random_mask(rng)),
+                    0 => {
+                        let s = random_set(rng);
+                        reference.union_in_place(&s);
+                        m.set_fwd(s);
+                    }
+                    1 => {
+                        let s = random_set(rng);
+                        reference.union_in_place(&s);
+                        m.set_bwd(s);
+                    }
                     _ => {
-                        let flip = rng.next_below(n as u64) as usize;
+                        let s = random_set(rng);
+                        let s2 = random_set(rng);
+                        reference.union_in_place(&s);
+                        reference.union_in_place(&s2);
                         m.edit(|fwd, bwd| {
-                            fwd[flip] = 1.0 - fwd[flip];
-                            bwd[flip] = 1.0 - bwd[flip];
+                            fwd.set_from_unsorted(s.indices());
+                            bwd.set_from_unsorted(s2.indices());
                         });
                     }
                 }
                 ensure(
-                    m.fwd_nnz() == nnz(m.fwd()),
-                    format!("fwd cache {} != recount {}", m.fwd_nnz(), nnz(m.fwd())),
+                    reference.is_subset_of(m.touched()),
+                    "touched lost an installed active set",
                 )?;
                 ensure(
-                    m.bwd_nnz() == nnz(m.bwd()),
-                    format!("bwd cache {} != recount {}", m.bwd_nnz(), nnz(m.bwd())),
+                    m.fwd().is_subset_of(m.touched())
+                        && m.bwd().is_subset_of(m.touched()),
+                    "current active sets must be touched",
+                )?;
+                ensure(
+                    m.fwd_nnz() == m.fwd_dense().iter().filter(|&&x| x != 0.0).count(),
+                    "set size != dense nnz",
                 )?;
             }
             Ok(())
@@ -321,7 +493,24 @@ mod tests {
         m.set_fwd(vec![1.0, 0.0, 0.0, 0.0]);
         m.set_bwd(vec![1.0, 1.0, 0.0, 0.0]);
         assert!(m.is_nested());
-        m.edit(|_, bwd| bwd[0] = 0.0);
+        m.edit(|_, bwd| bwd.set_from_unsorted(&[1]));
         assert!(!m.is_nested());
+    }
+
+    #[test]
+    fn install_preserves_touched_history() {
+        let mut m = MaskPair::dense(6);
+        m.set_fwd(vec![1.0, 1.0, 0.0, 0.0, 0.0, 0.0]);
+        m.set_bwd(vec![1.0, 1.0, 1.0, 0.0, 0.0, 0.0]);
+        let fresh = MaskPair::from_vecs(
+            vec![0.0, 0.0, 0.0, 1.0, 0.0, 0.0],
+            vec![0.0, 0.0, 0.0, 1.0, 1.0, 0.0],
+        );
+        m.install(&fresh);
+        assert_eq!(m.fwd().indices(), &[3]);
+        assert_eq!(m.bwd().indices(), &[3, 4]);
+        assert_eq!(m.touched().indices(), &[0, 1, 2, 3, 4]);
+        m.mark_all_touched();
+        assert_eq!(m.touched().len(), 6);
     }
 }

@@ -3,12 +3,16 @@
 //!
 //! The coordinator calls `update_masks` at refresh points (every
 //! `refresh_every` steps, paper Appendix C); a strategy rewrites the
-//! per-tensor forward/backward masks (and, for SET/RigL, may re-init
-//! grown weights) on the host. The device only ever receives the masks.
+//! per-tensor forward/backward **index sets** (and, for SET/RigL, may
+//! re-init grown weights) on the host. Strategies emit the top-k index
+//! lists they already compute — no dense 0/1 vectors are materialised
+//! on this path; the device expands index deltas into its resident
+//! mask buffers at install time.
 
 use anyhow::Result;
 
 use super::store::{ParamEntry, ParamStore};
+use crate::tensor::SparseSet;
 use crate::util::rng::Pcg64;
 
 /// Per-refresh context handed to a strategy for one tensor.
@@ -16,8 +20,10 @@ pub struct TensorCtx<'a> {
     pub name: &'a str,
     /// Dense host weights (strategies may rewrite grown entries).
     pub weights: &'a mut [f32],
-    pub mask_fwd: &'a mut [f32],
-    pub mask_bwd: &'a mut [f32],
+    /// Forward index set A (write the new selection into it).
+    pub fwd: &'a mut SparseSet,
+    /// Backward index set B.
+    pub bwd: &'a mut SparseSet,
     /// |grad| from the grad_norms artifact — present only when the
     /// strategy declared `needs_grad_norms(step)`.
     pub grad_norms: Option<&'a [f32]>,
@@ -51,7 +57,8 @@ pub trait MaskStrategy: Send {
     /// grown connections, RigL zeroes dropped/grown ones). Gates two
     /// protocol decisions: such strategies cannot run on the §2.4
     /// async path (stale-snapshot rewrites would be lost), and their
-    /// refreshes must re-upload params to the device.
+    /// refreshes must re-upload the sparse tensors' params to the
+    /// device.
     fn mutates_weights(&self) -> bool {
         false
     }
@@ -63,7 +70,7 @@ pub trait MaskStrategy: Send {
         true
     }
 
-    /// Rewrite one tensor's masks in place.
+    /// Rewrite one tensor's index sets in place.
     fn update_tensor(&mut self, ctx: TensorCtx<'_>) -> Result<()>;
 
     /// Average backward density over a whole run — the x-axis of
@@ -91,12 +98,12 @@ pub fn update_store_masks(
         let ParamEntry { spec, values, masks } = entry;
         let masks = masks.as_mut().expect("sparse tensor has masks");
         let gn = grad_norms.and_then(|m| m.get(&spec.name)).map(|v| &v[..]);
-        masks.edit(|mask_fwd, mask_bwd| {
+        masks.edit(|fwd, bwd| {
             strategy.update_tensor(TensorCtx {
                 name: &spec.name,
                 weights: values.as_mut_slice(),
-                mask_fwd,
-                mask_bwd,
+                fwd,
+                bwd,
                 grad_norms: gn,
                 rng: &mut *rng,
                 step,

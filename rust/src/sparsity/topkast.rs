@@ -3,12 +3,15 @@
 use anyhow::Result;
 
 use super::strategy::{Densities, MaskStrategy, TensorCtx};
-use super::topk::{k_for_density, topk_mask_scratch, TopkScratch};
+use super::topk::{k_for_density, topk_select, TopkScratch};
 
 /// Top-KAST: A = top-(D·n) by |w|, B = top-((D+M)·n) by |w|.
-/// A ⊆ B holds by top-k nesting. Masks are recomputed from the dense
-/// host weights at every refresh; between refreshes they are frozen
-/// (paper Appendix C shows N=100 matches N=1).
+/// A ⊆ B holds by top-k nesting. The selection emits its index list
+/// straight into the tensor's [`crate::tensor::SparseSet`]s — no dense
+/// 0/1 vector exists anywhere on the refresh path. Masks are
+/// recomputed from the dense host weights at every refresh; between
+/// refreshes they are frozen (paper Appendix C shows N=100 matches
+/// N=1).
 #[derive(Clone, Debug)]
 pub struct TopKast {
     /// Forward density D (= 1 - forward sparsity).
@@ -65,12 +68,14 @@ impl MaskStrategy for TopKast {
     fn update_tensor(&mut self, ctx: TensorCtx<'_>) -> Result<()> {
         let n = ctx.weights.len();
         let ka = k_for_density(n, self.d_fwd);
-        topk_mask_scratch(ctx.weights, ka, ctx.mask_fwd, &mut self.scratch);
+        ctx.fwd
+            .set_from_unsorted(topk_select(ctx.weights, ka, &mut self.scratch));
         if self.exploring(ctx.step) {
             let kb = k_for_density(n, self.d_bwd).max(ka);
-            topk_mask_scratch(ctx.weights, kb, ctx.mask_bwd, &mut self.scratch);
+            ctx.bwd
+                .set_from_unsorted(topk_select(ctx.weights, kb, &mut self.scratch));
         } else {
-            ctx.mask_bwd.copy_from_slice(ctx.mask_fwd);
+            ctx.bwd.clone_from(ctx.fwd);
         }
         Ok(())
     }
@@ -104,46 +109,47 @@ impl MaskStrategy for TopKastRandom {
     fn update_tensor(&mut self, ctx: TensorCtx<'_>) -> Result<()> {
         let n = ctx.weights.len();
         let ka = k_for_density(n, self.d_fwd);
-        topk_mask_scratch(ctx.weights, ka, ctx.mask_fwd, &mut self.scratch);
-        ctx.mask_bwd.copy_from_slice(ctx.mask_fwd);
-        let kb = k_for_density(n, self.d_bwd).max(ka);
-        let complement = n - ka;
-        let take = (kb - ka).min(complement);
+        ctx.fwd
+            .set_from_unsorted(topk_select(ctx.weights, ka, &mut self.scratch));
+        let complement = n - ctx.fwd.len();
+        let take = (k_for_density(n, self.d_bwd).max(ka) - ka).min(complement);
         if take == 0 {
+            ctx.bwd.clone_from(ctx.fwd);
             return Ok(());
         }
-        // Uniform sample of B\A from the complement of A, without
-        // materialising the O(n) complement index list: rejection-sample
-        // whichever side of the complement is smaller (≤ half), so at
-        // least half the complement stays acceptable throughout and the
-        // expected draw count is O(min(take, c-take) · n/c) for
+        // Uniform sample of B\A from the complement of A: rejection-
+        // sample whichever side of the complement is smaller (≤ half),
+        // so at least half the complement stays acceptable throughout
+        // and the expected draw count is O(min(take, c-take) · n/c) for
         // complement size c.
+        let mut b: Vec<u32> = ctx.fwd.indices().to_vec();
         if 2 * take <= complement {
             // include `take` complement positions
-            let mut placed = 0;
-            while placed < take {
-                let i = ctx.rng.next_below(n as u64) as usize;
-                if ctx.mask_bwd[i] == 0.0 {
-                    ctx.mask_bwd[i] = 1.0;
-                    placed += 1;
+            let mut drawn = std::collections::HashSet::with_capacity(take);
+            while drawn.len() < take {
+                let i = ctx.rng.next_below(n as u64) as u32;
+                if !ctx.fwd.contains(i) {
+                    drawn.insert(i);
                 }
             }
+            b.extend(drawn);
         } else {
             // turn the whole complement on, then knock out the excess
-            for i in 0..n {
-                if ctx.mask_fwd[i] == 0.0 {
-                    ctx.mask_bwd[i] = 1.0;
-                }
+            let mut on: Vec<bool> = vec![true; n];
+            for &i in ctx.fwd.indices() {
+                on[i as usize] = false;
             }
             let mut removed = 0;
             while removed < complement - take {
                 let i = ctx.rng.next_below(n as u64) as usize;
-                if ctx.mask_fwd[i] == 0.0 && ctx.mask_bwd[i] == 1.0 {
-                    ctx.mask_bwd[i] = 0.0;
+                if !ctx.fwd.contains(i as u32) && on[i] {
+                    on[i] = false;
                     removed += 1;
                 }
             }
+            b.extend((0..n as u32).filter(|&i| on[i as usize]));
         }
+        ctx.bwd.set_from_unsorted(&b);
         Ok(())
     }
 }
@@ -151,27 +157,29 @@ impl MaskStrategy for TopKastRandom {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::SparseSet;
     use crate::util::proptest::{ensure, gen_vec_f32, property};
     use crate::util::rng::Pcg64;
 
+    /// Drive one refresh and return dense 0/1 views for assertions.
     fn run(strat: &mut dyn MaskStrategy, w: &mut [f32], step: usize) -> (Vec<f32>, Vec<f32>) {
         let n = w.len();
-        let mut mf = vec![0.0; n];
-        let mut mb = vec![0.0; n];
+        let mut mf = SparseSet::empty(n);
+        let mut mb = SparseSet::empty(n);
         let mut rng = Pcg64::seeded(1);
         strat
             .update_tensor(TensorCtx {
                 name: "t",
                 weights: w,
-                mask_fwd: &mut mf,
-                mask_bwd: &mut mb,
+                fwd: &mut mf,
+                bwd: &mut mb,
                 grad_norms: None,
                 rng: &mut rng,
                 step,
                 total_steps: 100,
             })
             .unwrap();
-        (mf, mb)
+        (mf.to_dense(), mb.to_dense())
     }
 
     #[test]
@@ -205,14 +213,14 @@ mod tests {
             let d_bwd = d_fwd + rng.next_f64() * (1.0 - d_fwd);
             let mut s = TopKast::new(d_fwd, d_bwd);
             let n = w.len();
-            let mut mf = vec![0.0; n];
-            let mut mb = vec![0.0; n];
+            let mut mf = SparseSet::empty(n);
+            let mut mb = SparseSet::empty(n);
             let mut r2 = rng.fork(9);
             s.update_tensor(TensorCtx {
                 name: "t",
                 weights: &mut w,
-                mask_fwd: &mut mf,
-                mask_bwd: &mut mb,
+                fwd: &mut mf,
+                bwd: &mut mb,
                 grad_norms: None,
                 rng: &mut r2,
                 step: 0,
@@ -221,21 +229,17 @@ mod tests {
             .map_err(|e| e.to_string())?;
             let ka = k_for_density(n, d_fwd);
             let kb = k_for_density(n, d_bwd).max(ka);
-            ensure(mf.iter().filter(|&&x| x == 1.0).count() == ka, "fwd count")?;
-            ensure(mb.iter().filter(|&&x| x == 1.0).count() == kb, "bwd count")?;
-            ensure(mf.iter().zip(&mb).all(|(&f, &b)| f <= b), "A ⊆ B")?;
+            ensure(mf.len() == ka, "fwd count")?;
+            ensure(mb.len() == kb, "bwd count")?;
+            ensure(mf.is_subset_of(&mb), "A ⊆ B")?;
             // every active weight magnitude >= every inactive magnitude
             let min_active = mf
                 .iter()
-                .enumerate()
-                .filter(|(_, &m)| m == 1.0)
-                .map(|(i, _)| w[i].abs())
+                .map(|i| w[i as usize].abs())
                 .fold(f32::INFINITY, f32::min);
-            let max_inactive = mf
-                .iter()
-                .enumerate()
-                .filter(|(_, &m)| m == 0.0)
-                .map(|(i, _)| w[i].abs())
+            let max_inactive = (0..n as u32)
+                .filter(|&i| !mf.contains(i))
+                .map(|i| w[i as usize].abs())
                 .fold(0.0f32, f32::max);
             ensure(
                 min_active >= max_inactive || (min_active - max_inactive).abs() < 1e-7,
@@ -250,27 +254,24 @@ mod tests {
             let mut w = gen_vec_f32(rng, 10, 128);
             let n = w.len();
             let mut s = TopKastRandom::new(0.2, 0.5);
-            let mut mf = vec![0.0; n];
-            let mut mb = vec![0.0; n];
+            let mut mf = SparseSet::empty(n);
+            let mut mb = SparseSet::empty(n);
             let mut r2 = rng.fork(3);
             s.update_tensor(TensorCtx {
                 name: "t",
                 weights: &mut w,
-                mask_fwd: &mut mf,
-                mask_bwd: &mut mb,
+                fwd: &mut mf,
+                bwd: &mut mb,
                 grad_norms: None,
                 rng: &mut r2,
                 step: 0,
                 total_steps: 10,
             })
             .map_err(|e| e.to_string())?;
-            ensure(mf.iter().zip(&mb).all(|(&f, &b)| f <= b), "A ⊆ B")?;
+            ensure(mf.is_subset_of(&mb), "A ⊆ B")?;
             let ka = k_for_density(n, 0.2);
             let kb = k_for_density(n, 0.5).max(ka);
-            ensure(
-                mb.iter().filter(|&&x| x == 1.0).count() == kb,
-                "B count mismatch",
-            )
+            ensure(mb.len() == kb, "B count mismatch")
         });
     }
 
@@ -306,7 +307,7 @@ mod tests {
         // Both sampler branches — include-sampling (take ≤ half the
         // complement) and knockout-sampling (take > half) — must place
         // exactly kb − ka units, all strictly in the complement of A,
-        // with no duplicates (masks stay 0/1).
+        // with no duplicates (the sets stay sets).
         property("random-B rejection sampling: exact B\\A membership", |rng| {
             let mut w = gen_vec_f32(rng, 8, 160);
             let n = w.len();
@@ -315,14 +316,14 @@ mod tests {
             let d_fwd = 0.05 + rng.next_f64() * 0.3;
             let d_bwd = d_fwd + rng.next_f64() * (1.0 - d_fwd);
             let mut s = TopKastRandom::new(d_fwd, d_bwd);
-            let mut mf = vec![0.0; n];
-            let mut mb = vec![0.0; n];
+            let mut mf = SparseSet::empty(n);
+            let mut mb = SparseSet::empty(n);
             let mut r2 = rng.fork(7);
             s.update_tensor(TensorCtx {
                 name: "t",
                 weights: &mut w,
-                mask_fwd: &mut mf,
-                mask_bwd: &mut mb,
+                fwd: &mut mf,
+                bwd: &mut mb,
                 grad_norms: None,
                 rng: &mut r2,
                 step: 0,
@@ -333,22 +334,21 @@ mod tests {
             let kb = k_for_density(n, d_bwd).max(ka);
             let complement = n - ka;
             let take = (kb - ka).min(complement);
-            for (i, (&f, &b)) in mf.iter().zip(&mb).enumerate() {
-                ensure(f == 0.0 || f == 1.0, format!("fwd not 0/1 at {i}"))?;
-                ensure(b == 0.0 || b == 1.0, format!("bwd not 0/1 at {i}"))?;
-                ensure(f <= b, format!("A ⊄ B at {i}"))?;
-            }
-            let grown = mf
-                .iter()
-                .zip(&mb)
-                .filter(|(&f, &b)| f == 0.0 && b == 1.0)
-                .count();
+            ensure(mf.is_subset_of(&mb), "A ⊄ B")?;
+            let grown = mb.diff(&mf);
             ensure(
-                grown == take,
-                format!("B\\A has {grown} units, want {take} (n={n}, ka={ka}, kb={kb})"),
+                grown.len() == take,
+                format!(
+                    "B\\A has {} units, want {take} (n={n}, ka={ka}, kb={kb})",
+                    grown.len()
+                ),
             )?;
             ensure(
-                mb.iter().filter(|&&b| b == 1.0).count() == ka + take,
+                grown.iter().all(|i| !mf.contains(i)),
+                "B\\A must be strictly outside A",
+            )?;
+            ensure(
+                mb.len() == ka + take,
                 "|B| must be exactly |A| + |B\\A|",
             )
         });

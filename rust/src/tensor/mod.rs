@@ -4,8 +4,10 @@
 //! top-k, masks, and marshals.
 
 mod shape;
+pub mod sparse;
 #[allow(clippy::module_inception)]
 mod tensor;
 
 pub use shape::Shape;
+pub use sparse::{SparseDelta, SparseSet, SparseSlice};
 pub use tensor::{HostTensor, TensorData};

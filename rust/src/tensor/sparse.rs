@@ -1,0 +1,479 @@
+//! Compact sparse representations for the exchange plane.
+//!
+//! Top-KAST's claim is constant sparsity in *both* passes, so nothing
+//! that crosses a boundary — host↔device mask installs, refresh θ
+//! syncs, checkpoints — should cost O(total params). [`SparseSet`] is
+//! the index-set half of that story (a sorted, deduplicated u32 index
+//! list over a fixed domain), [`SparseSlice`] the indices+values half,
+//! and [`SparseDelta`] the add/remove edit between two sets (what a
+//! mask refresh actually ships to the device: O(Δnnz), not O(n)).
+//!
+//! Densification (a 0/1 f32 vector) happens only at the edges that
+//! genuinely need a dense view: the simulated device expands an index
+//! install into its resident mask buffer ([`crate::xla`]), and the
+//! legacy host-round-trip execution path materialises masks via
+//! [`SparseSet::to_dense`].
+
+use anyhow::{bail, Result};
+
+/// A sorted set of u32 indices over a fixed domain `0..domain`.
+///
+/// Invariants (maintained by every constructor and mutator): indices
+/// are strictly increasing and `< domain`. Equality is structural, so
+/// two sets over the same domain compare equal iff they contain the
+/// same indices.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SparseSet {
+    domain: usize,
+    idx: Vec<u32>,
+}
+
+/// The edit turning one [`SparseSet`] into another: indices to add and
+/// indices to remove (both sorted). This is the refresh broadcast unit
+/// — `total()` u32 words cross the host→device boundary per replica.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SparseDelta {
+    pub added: Vec<u32>,
+    pub removed: Vec<u32>,
+}
+
+impl SparseDelta {
+    /// Number of index words the delta moves (|added| + |removed|).
+    pub fn total(&self) -> usize {
+        self.added.len() + self.removed.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.added.is_empty() && self.removed.is_empty()
+    }
+}
+
+impl SparseSet {
+    /// The empty set over `0..domain`.
+    pub fn empty(domain: usize) -> SparseSet {
+        SparseSet { domain, idx: Vec::new() }
+    }
+
+    /// The full set `0..domain`.
+    pub fn full(domain: usize) -> SparseSet {
+        SparseSet { domain, idx: (0..domain as u32).collect() }
+    }
+
+    /// From a sorted, strictly-increasing index list. Errors (rather
+    /// than panics) because this is the deserialization entry point —
+    /// checkpoint/corrupt-file paths land here.
+    pub fn from_sorted(domain: usize, idx: Vec<u32>) -> Result<SparseSet> {
+        for w in idx.windows(2) {
+            if w[0] >= w[1] {
+                bail!("index list not strictly increasing at {} >= {}", w[0], w[1]);
+            }
+        }
+        if let Some(&last) = idx.last() {
+            if last as usize >= domain {
+                bail!("index {last} out of domain {domain}");
+            }
+        }
+        Ok(SparseSet { domain, idx })
+    }
+
+    /// From an arbitrary (unsorted, possibly duplicated) index list —
+    /// the strategy emission path. Panics on out-of-domain indices
+    /// (a strategy bug, not an input condition).
+    pub fn from_unsorted(domain: usize, idx: Vec<u32>) -> SparseSet {
+        let mut s = SparseSet::empty(domain);
+        s.set_from_unsorted(&idx);
+        s
+    }
+
+    /// From a dense 0/1-style mask (any non-zero entry is "in").
+    pub fn from_dense_mask(mask: &[f32]) -> SparseSet {
+        SparseSet {
+            domain: mask.len(),
+            idx: mask
+                .iter()
+                .enumerate()
+                .filter(|(_, &v)| v != 0.0)
+                .map(|(i, _)| i as u32)
+                .collect(),
+        }
+    }
+
+    /// Replace the contents with an arbitrary index list, keeping the
+    /// domain (reuses the internal buffer — the strategies' hot path).
+    pub fn set_from_unsorted(&mut self, idx: &[u32]) {
+        self.idx.clear();
+        self.idx.extend_from_slice(idx);
+        self.idx.sort_unstable();
+        self.idx.dedup();
+        if let Some(&last) = self.idx.last() {
+            assert!(
+                (last as usize) < self.domain,
+                "index {last} out of domain {}",
+                self.domain
+            );
+        }
+    }
+
+    /// Number of indices in the set (the nnz of the mask it encodes).
+    pub fn len(&self) -> usize {
+        self.idx.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    /// The domain size n the set indexes into.
+    pub fn domain(&self) -> usize {
+        self.domain
+    }
+
+    /// The sorted index list.
+    pub fn indices(&self) -> &[u32] {
+        &self.idx
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = u32> + '_ {
+        self.idx.iter().copied()
+    }
+
+    /// Membership test (binary search — O(log nnz)).
+    pub fn contains(&self, i: u32) -> bool {
+        self.idx.binary_search(&i).is_ok()
+    }
+
+    /// Densify into a fresh 0/1 f32 vector of length `domain`.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.domain];
+        self.write_dense(&mut out);
+        out
+    }
+
+    /// Densify into an existing buffer (must be `domain` long).
+    pub fn write_dense(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.domain, "dense buffer size != domain");
+        out.fill(0.0);
+        for &i in &self.idx {
+            out[i as usize] = 1.0;
+        }
+    }
+
+    /// The sorted indices *not* in the set (O(domain)).
+    pub fn complement_indices(&self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.domain - self.idx.len());
+        let mut members = self.idx.iter().peekable();
+        for i in 0..self.domain as u32 {
+            if members.peek() == Some(&&i) {
+                members.next();
+            } else {
+                out.push(i);
+            }
+        }
+        out
+    }
+
+    fn check_same_domain(&self, other: &SparseSet) {
+        assert_eq!(
+            self.domain, other.domain,
+            "set operation across domains {} vs {}",
+            self.domain, other.domain
+        );
+    }
+
+    /// Sorted-merge union.
+    pub fn union(&self, other: &SparseSet) -> SparseSet {
+        self.check_same_domain(other);
+        let mut out = Vec::with_capacity(self.idx.len() + other.idx.len());
+        let (mut a, mut b) = (self.idx.iter().peekable(), other.idx.iter().peekable());
+        loop {
+            match (a.peek(), b.peek()) {
+                (Some(&&x), Some(&&y)) => match x.cmp(&y) {
+                    std::cmp::Ordering::Less => {
+                        out.push(x);
+                        a.next();
+                    }
+                    std::cmp::Ordering::Greater => {
+                        out.push(y);
+                        b.next();
+                    }
+                    std::cmp::Ordering::Equal => {
+                        out.push(x);
+                        a.next();
+                        b.next();
+                    }
+                },
+                (Some(&&x), None) => {
+                    out.push(x);
+                    a.next();
+                }
+                (None, Some(&&y)) => {
+                    out.push(y);
+                    b.next();
+                }
+                (None, None) => break,
+            }
+        }
+        SparseSet { domain: self.domain, idx: out }
+    }
+
+    /// `self ∪= other` (no-op fast path when `other ⊆ self`).
+    pub fn union_in_place(&mut self, other: &SparseSet) {
+        self.check_same_domain(other);
+        if other.idx.iter().all(|&i| self.contains(i)) {
+            return;
+        }
+        *self = self.union(other);
+    }
+
+    /// Sorted-merge intersection.
+    pub fn intersect(&self, other: &SparseSet) -> SparseSet {
+        self.check_same_domain(other);
+        let mut out = Vec::new();
+        let mut b = other.idx.iter().peekable();
+        for &x in &self.idx {
+            while matches!(b.peek(), Some(&&y) if y < x) {
+                b.next();
+            }
+            if b.peek() == Some(&&x) {
+                out.push(x);
+            }
+        }
+        SparseSet { domain: self.domain, idx: out }
+    }
+
+    /// Set difference `self \ other`.
+    pub fn diff(&self, other: &SparseSet) -> SparseSet {
+        self.check_same_domain(other);
+        let mut out = Vec::new();
+        let mut b = other.idx.iter().peekable();
+        for &x in &self.idx {
+            while matches!(b.peek(), Some(&&y) if y < x) {
+                b.next();
+            }
+            if b.peek() != Some(&&x) {
+                out.push(x);
+            }
+        }
+        SparseSet { domain: self.domain, idx: out }
+    }
+
+    pub fn is_subset_of(&self, other: &SparseSet) -> bool {
+        self.check_same_domain(other);
+        self.idx.iter().all(|&i| other.contains(i))
+    }
+
+    /// The edit turning `self` into `new` (added = new \ self,
+    /// removed = self \ new) — what a refresh ships to the device.
+    pub fn delta_to(&self, new: &SparseSet) -> SparseDelta {
+        SparseDelta {
+            added: new.diff(self).idx,
+            removed: self.diff(new).idx,
+        }
+    }
+
+    /// Gather `dense[i]` for every index in the set.
+    pub fn gather(&self, dense: &[f32]) -> Vec<f32> {
+        assert_eq!(dense.len(), self.domain, "gather source size != domain");
+        self.idx.iter().map(|&i| dense[i as usize]).collect()
+    }
+
+    /// Scatter `values[j]` to `out[idx[j]]` (inverse of [`gather`]:
+    /// positions outside the set are left untouched).
+    ///
+    /// [`gather`]: SparseSet::gather
+    pub fn scatter(&self, values: &[f32], out: &mut [f32]) {
+        assert_eq!(out.len(), self.domain, "scatter target size != domain");
+        assert_eq!(values.len(), self.idx.len(), "scatter value count != nnz");
+        for (&i, &v) in self.idx.iter().zip(values) {
+            out[i as usize] = v;
+        }
+    }
+}
+
+/// Conversions from dense 0/1 masks — lets legacy call sites keep
+/// passing `Vec<f32>` masks into the set-backed `MaskPair` API.
+impl From<&[f32]> for SparseSet {
+    fn from(mask: &[f32]) -> SparseSet {
+        SparseSet::from_dense_mask(mask)
+    }
+}
+
+impl From<Vec<f32>> for SparseSet {
+    fn from(mask: Vec<f32>) -> SparseSet {
+        SparseSet::from_dense_mask(&mask)
+    }
+}
+
+impl From<&SparseSet> for SparseSet {
+    fn from(s: &SparseSet) -> SparseSet {
+        s.clone()
+    }
+}
+
+/// Indices + values: a sparse view of a dense f32 tensor. The exchange
+/// unit for θ (refresh downloads gather the active values; v2
+/// checkpoints store one slice per sparse tensor).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseSlice {
+    pub indices: SparseSet,
+    pub values: Vec<f32>,
+}
+
+impl SparseSlice {
+    /// Gather `dense` at `set`'s indices.
+    pub fn gather(set: &SparseSet, dense: &[f32]) -> SparseSlice {
+        SparseSlice { indices: set.clone(), values: set.gather(dense) }
+    }
+
+    pub fn from_parts(indices: SparseSet, values: Vec<f32>) -> Result<SparseSlice> {
+        if indices.len() != values.len() {
+            bail!(
+                "sparse slice: {} indices vs {} values",
+                indices.len(),
+                values.len()
+            );
+        }
+        Ok(SparseSlice { indices, values })
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Write the values back at their indices; positions outside the
+    /// slice are left untouched.
+    pub fn scatter_into(&self, out: &mut [f32]) {
+        self.indices.scatter(&self.values, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{ensure, property_cases};
+
+    fn set(domain: usize, idx: &[u32]) -> SparseSet {
+        SparseSet::from_sorted(domain, idx.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn constructors_and_invariants() {
+        assert_eq!(SparseSet::empty(5).len(), 0);
+        assert_eq!(SparseSet::full(4).indices(), &[0, 1, 2, 3]);
+        assert!(SparseSet::from_sorted(4, vec![1, 1, 2]).is_err(), "dupes");
+        assert!(SparseSet::from_sorted(4, vec![2, 1]).is_err(), "unsorted");
+        assert!(SparseSet::from_sorted(4, vec![4]).is_err(), "out of domain");
+        let s = SparseSet::from_unsorted(8, vec![5, 1, 5, 3]);
+        assert_eq!(s.indices(), &[1, 3, 5]);
+        let d = SparseSet::from_dense_mask(&[1.0, 0.0, 0.5, 0.0]);
+        assert_eq!(d.indices(), &[0, 2]);
+        assert_eq!(d.domain(), 4);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let s = set(6, &[0, 2, 5]);
+        let dense = s.to_dense();
+        assert_eq!(dense, vec![1.0, 0.0, 1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(SparseSet::from_dense_mask(&dense), s);
+    }
+
+    #[test]
+    fn set_algebra() {
+        let a = set(10, &[1, 3, 5, 7]);
+        let b = set(10, &[3, 4, 7, 9]);
+        assert_eq!(a.union(&b).indices(), &[1, 3, 4, 5, 7, 9]);
+        assert_eq!(a.intersect(&b).indices(), &[3, 7]);
+        assert_eq!(a.diff(&b).indices(), &[1, 5]);
+        assert_eq!(b.diff(&a).indices(), &[4, 9]);
+        assert!(a.intersect(&b).is_subset_of(&a));
+        assert!(!a.is_subset_of(&b));
+        assert_eq!(a.complement_indices(), vec![0, 2, 4, 6, 8, 9]);
+        let mut c = a.clone();
+        c.union_in_place(&b);
+        assert_eq!(c, a.union(&b));
+    }
+
+    #[test]
+    fn delta_roundtrip() {
+        let old = set(10, &[1, 3, 5, 7]);
+        let new = set(10, &[3, 4, 7, 8]);
+        let d = old.delta_to(&new);
+        assert_eq!(d.added, vec![4, 8]);
+        assert_eq!(d.removed, vec![1, 5]);
+        assert_eq!(d.total(), 4);
+        // applying the delta reproduces the new set
+        let mut dense = old.to_dense();
+        for &i in &d.removed {
+            dense[i as usize] = 0.0;
+        }
+        for &i in &d.added {
+            dense[i as usize] = 1.0;
+        }
+        assert_eq!(SparseSet::from_dense_mask(&dense), new);
+        assert!(old.delta_to(&old).is_empty());
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let s = set(5, &[1, 4]);
+        let dense = [10.0f32, 11.0, 12.0, 13.0, 14.0];
+        let slice = SparseSlice::gather(&s, &dense);
+        assert_eq!(slice.values, vec![11.0, 14.0]);
+        let mut out = [0.0f32; 5];
+        slice.scatter_into(&mut out);
+        assert_eq!(out, [0.0, 11.0, 0.0, 0.0, 14.0]);
+        assert!(SparseSlice::from_parts(s, vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn property_set_algebra_matches_dense_reference() {
+        property_cases("SparseSet ops == dense-mask reference", 128, |rng| {
+            let n = 1 + rng.next_below(96) as usize;
+            let rand_mask = |rng: &mut crate::util::rng::Pcg64| -> Vec<f32> {
+                (0..n)
+                    .map(|_| if rng.next_below(3) == 0 { 1.0 } else { 0.0 })
+                    .collect()
+            };
+            let (ma, mb) = (rand_mask(rng), rand_mask(rng));
+            let (a, b) = (SparseSet::from_dense_mask(&ma), SparseSet::from_dense_mask(&mb));
+            let dense_ref = |f: fn(f32, f32) -> bool| -> Vec<u32> {
+                (0..n as u32).filter(|&i| f(ma[i as usize], mb[i as usize])).collect()
+            };
+            ensure(
+                a.union(&b).indices() == dense_ref(|x, y| x != 0.0 || y != 0.0),
+                "union",
+            )?;
+            ensure(
+                a.intersect(&b).indices() == dense_ref(|x, y| x != 0.0 && y != 0.0),
+                "intersect",
+            )?;
+            ensure(
+                a.diff(&b).indices() == dense_ref(|x, y| x != 0.0 && y == 0.0),
+                "diff",
+            )?;
+            let d = a.delta_to(&b);
+            ensure(
+                d.added == dense_ref(|x, y| x == 0.0 && y != 0.0)
+                    && d.removed == dense_ref(|x, y| x != 0.0 && y == 0.0),
+                "delta",
+            )?;
+            ensure(a.to_dense() == ma, "dense roundtrip")?;
+            ensure(
+                a.len() == ma.iter().filter(|&&v| v != 0.0).count(),
+                "len == nnz",
+            )?;
+            for i in 0..n as u32 {
+                ensure(
+                    a.contains(i) == (ma[i as usize] != 0.0),
+                    format!("contains({i})"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+}

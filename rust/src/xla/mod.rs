@@ -220,6 +220,22 @@ impl TransferStats {
     }
 }
 
+/// Shared validation for the sparse exchange entry points: indices
+/// must be strictly increasing and in-bounds (the SparseSet contract).
+fn validate_sorted_indices(indices: &[u32], numel: usize, what: &str) -> Result<()> {
+    for w in indices.windows(2) {
+        if w[0] >= w[1] {
+            bail!("{what}: indices not strictly increasing ({} then {})", w[0], w[1]);
+        }
+    }
+    if let Some(&last) = indices.last() {
+        if last as usize >= numel {
+            bail!("{what}: index {last} out of bounds for {numel} elements");
+        }
+    }
+    Ok(())
+}
+
 /// Canonical pairwise (recursive-halving) summation. The reduction
 /// tree splits at ceil(n/2), so for power-of-two lengths every aligned
 /// power-of-two chunk is an exact subtree: summing each chunk with
@@ -335,6 +351,33 @@ impl PjRtClient {
         })
     }
 
+    /// Metered sparse mask install: build a dense 0/1 f32 buffer of
+    /// shape `dims` on `device` from a sorted index list. Only the
+    /// indices cross the simulated bus (4 bytes each, one h2d call);
+    /// the dense expansion happens device-side — the scatter half of
+    /// the compact exchange plane (`tensor::sparse`).
+    pub fn mask_from_indices(
+        &self,
+        dims: &[usize],
+        indices: &[u32],
+        device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let numel: usize = dims.iter().product();
+        validate_sorted_indices(indices, numel, "mask_from_indices")?;
+        let device = device.unwrap_or(0);
+        let stats = self.device_stats(device)?;
+        stats.record_h2d(4 * indices.len() as u64);
+        let mut dense = vec![0.0f32; numel];
+        for &i in indices {
+            dense[i as usize] = 1.0;
+        }
+        Ok(PjRtBuffer {
+            data: Arc::new(Storage::F32(dense)),
+            stats: stats.clone(),
+            device,
+        })
+    }
+
     pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
         match &comp.kind {
             ComputationKind::Graph(g) => {
@@ -438,6 +481,56 @@ impl PjRtBuffer {
                 parts.iter().map(|p| p.literal_no_transfer()).collect(),
             )),
         }
+    }
+
+    /// Scatter-style mask update: a new resident buffer equal to this
+    /// 0/1 mask with `removed` cleared and `added` set — the refresh
+    /// broadcast path. Only the delta's indices cross the simulated bus
+    /// (4·(|added|+|removed|) bytes, one h2d call); an empty delta
+    /// aliases this buffer and moves nothing.
+    pub fn scatter_mask_update(
+        &self,
+        added: &[u32],
+        removed: &[u32],
+    ) -> Result<PjRtBuffer> {
+        let Storage::F32(values) = self.data.as_ref() else {
+            bail!("scatter_mask_update on a non-f32 buffer");
+        };
+        let n = values.len();
+        validate_sorted_indices(added, n, "scatter_mask_update(added)")?;
+        validate_sorted_indices(removed, n, "scatter_mask_update(removed)")?;
+        if added.is_empty() && removed.is_empty() {
+            return Ok(self.clone());
+        }
+        self.stats
+            .record_h2d(4 * (added.len() + removed.len()) as u64);
+        let mut dense = values.clone();
+        for &i in removed {
+            dense[i as usize] = 0.0;
+        }
+        for &i in added {
+            dense[i as usize] = 1.0;
+        }
+        Ok(PjRtBuffer {
+            data: Arc::new(Storage::F32(dense)),
+            stats: self.stats.clone(),
+            device: self.device,
+        })
+    }
+
+    /// Metered sparse download: the buffer's values at the given sorted
+    /// indices. The gather is driven by device-resident index state
+    /// (the installed masks), so only the values cross the bus —
+    /// 4·len bytes in one d2h call; an empty gather moves nothing.
+    pub fn gather_to_host(&self, indices: &[u32]) -> Result<Vec<f32>> {
+        let Storage::F32(values) = self.data.as_ref() else {
+            bail!("gather_to_host on a non-f32 buffer");
+        };
+        validate_sorted_indices(indices, values.len(), "gather_to_host")?;
+        if !indices.is_empty() {
+            self.stats.record_d2h(4 * indices.len() as u64);
+        }
+        Ok(indices.iter().map(|&i| values[i as usize]).collect())
     }
 
     /// Split a tuple result into its element buffers *on device* — no
@@ -1151,6 +1244,65 @@ mod tests {
         let bad = client.buffer_from_host_buffer::<f32>(&[0.0; 2], &[2], None).unwrap();
         assert!(client.all_reduce_sum(&[&lone, &bad]).is_err());
         assert!(client.all_reduce_sum(&[]).is_err());
+    }
+
+    #[test]
+    fn sparse_mask_install_and_delta_meter_index_bytes_only() {
+        let client = PjRtClient::cpu_with_devices(2).unwrap();
+        let before = client.device_transfer_stats(1).unwrap();
+        // install a 3-of-8 mask: 3 indices = 12 bytes up, dense on device
+        let mask = client.mask_from_indices(&[8], &[1, 4, 6], Some(1)).unwrap();
+        let d = client.device_transfer_stats(1).unwrap().since(&before);
+        assert_eq!((d.h2d_bytes, d.h2d_calls), (12, 1));
+        assert_eq!(mask.device(), 1);
+        assert_eq!(
+            mask.to_literal_sync().unwrap().to_vec::<f32>().unwrap(),
+            vec![0.0, 1.0, 0.0, 0.0, 1.0, 0.0, 1.0, 0.0]
+        );
+        // delta update: +{2} −{4, 6} = 3 index words = 12 bytes, 1 call
+        let before = client.device_transfer_stats(1).unwrap();
+        let updated = mask.scatter_mask_update(&[2], &[4, 6]).unwrap();
+        let d = client.device_transfer_stats(1).unwrap().since(&before);
+        assert_eq!((d.h2d_bytes, d.h2d_calls), (12, 1));
+        assert_eq!(
+            updated.to_literal_sync().unwrap().to_vec::<f32>().unwrap(),
+            vec![0.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0]
+        );
+        // empty delta: aliases, moves nothing
+        let before = client.device_transfer_stats(1).unwrap();
+        let same = updated.scatter_mask_update(&[], &[]).unwrap();
+        assert_eq!(
+            client.device_transfer_stats(1).unwrap().since(&before),
+            TransferSnapshot::default()
+        );
+        assert_eq!(same.element_count(), 8);
+        // validation: unsorted / out-of-range indices are clear errors
+        assert!(client.mask_from_indices(&[8], &[4, 1], None).is_err());
+        assert!(client.mask_from_indices(&[8], &[8], None).is_err());
+        assert!(mask.scatter_mask_update(&[9], &[]).is_err());
+    }
+
+    #[test]
+    fn gather_download_meters_value_bytes_only() {
+        let client = PjRtClient::cpu().unwrap();
+        let buf = client
+            .buffer_from_host_buffer::<f32>(
+                &[10.0, 11.0, 12.0, 13.0, 14.0, 15.0],
+                &[6],
+                None,
+            )
+            .unwrap();
+        let before = client.transfer_stats();
+        let vals = buf.gather_to_host(&[0, 2, 5]).unwrap();
+        assert_eq!(vals, vec![10.0, 12.0, 15.0]);
+        let d = client.transfer_stats().since(&before);
+        assert_eq!((d.d2h_bytes, d.d2h_calls), (12, 1));
+        // empty gather moves nothing
+        let before = client.transfer_stats();
+        assert!(buf.gather_to_host(&[]).unwrap().is_empty());
+        assert_eq!(client.transfer_stats().since(&before).d2h_calls, 0);
+        assert!(buf.gather_to_host(&[6]).is_err(), "out of bounds");
+        assert!(buf.gather_to_host(&[2, 2]).is_err(), "duplicates");
     }
 
     #[test]

@@ -121,15 +121,21 @@ impl HostLoop {
             [self.cfg.reg_scale as f32],
             [(1.0 / d.max(1e-6)) as f32],
         ];
+        // the host-round-trip path is the legacy dense exchange: masks
+        // are materialised from the index sets for upload
+        let dense_masks: Vec<(Vec<f32>, Vec<f32>)> = self
+            .store
+            .entries
+            .iter()
+            .filter_map(|e| e.masks.as_ref().map(|m| (m.fwd_dense(), m.bwd_dense())))
+            .collect();
         let mut inputs: Vec<TensorRef<'_>> = vec![];
         for e in &self.store.entries {
             inputs.push(TensorRef::F32(&e.values));
         }
         for fwd in [true, false] {
-            for e in &self.store.entries {
-                if let Some(m) = &e.masks {
-                    inputs.push(TensorRef::F32(if fwd { m.fwd() } else { m.bwd() }));
-                }
+            for m in &dense_masks {
+                inputs.push(TensorRef::F32(if fwd { &m.0 } else { &m.1 }));
             }
         }
         for slot in &self.opt {
@@ -273,19 +279,42 @@ fn host_syncs_happen_only_at_protocol_points() {
     for _ in 0..3 {
         trainer.train_step().unwrap(); // steps 1..3: steady state
     }
-    // step 4 is a refresh: params+opt come down once, masks go up once
+    // step 4 is a refresh: the active θ (installed fwd∪bwd values)
+    // comes down once — O(nnz) — and only the index *deltas* go up.
+    // Clone the installed masks first so the expected delta can be
+    // computed independently of the runtime's own bookkeeping.
+    let installed: Vec<_> = trainer
+        .store
+        .entries
+        .iter()
+        .filter_map(|e| e.masks.as_ref().map(|m| (m.fwd().clone(), m.bwd().clone())))
+        .collect();
     let before = trainer.runtime.transfer_stats();
     trainer.train_step().unwrap();
     let d = trainer.runtime.transfer_stats().since(&before);
+    let delta_indices: u64 = trainer
+        .store
+        .entries
+        .iter()
+        .filter_map(|e| e.masks.as_ref())
+        .zip(&installed)
+        .map(|(m, (old_f, old_b))| {
+            (old_f.delta_to(m.fwd()).total() + old_b.delta_to(m.bwd()).total()) as u64
+        })
+        .sum();
     assert_eq!(
         d.d2h_bytes,
         traffic.refresh_d2h_bytes + traffic.step_d2h_bytes,
-        "refresh step downloads θ only (slots stay resident), plus the loss"
+        "refresh step downloads the active θ only (slots stay resident), plus the loss"
     );
     assert_eq!(
         d.h2d_bytes,
-        traffic.refresh_h2d_bytes + traffic.step_h2d_bytes,
-        "refresh step uploads the new masks, plus the batch"
+        traffic.refresh_h2d_delta_bytes(delta_indices) + traffic.step_h2d_bytes,
+        "refresh step uploads the mask deltas, plus the batch"
+    );
+    assert!(
+        traffic.refresh_d2h_bytes < traffic.legacy_refresh_d2h_bytes,
+        "sparse refresh download beats the dense θ sync it replaced"
     );
 
     // eval streams batches and downloads two scalars per batch — the

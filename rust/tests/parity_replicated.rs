@@ -227,13 +227,37 @@ fn refresh_broadcasts_masks_to_every_replica() {
         for _ in 0..4 {
             trainer.train_step().unwrap(); // step 0 refresh + 3 steady
         }
-        // step 4 is a refresh: θ comes down from replica 0 once; the
-        // new masks broadcast to every replica
+        // step 4 is a refresh: the active θ comes down from replica 0
+        // once (O(nnz)); the index *deltas* broadcast to every replica
+        // (O(Δnnz) per link). Clone the installed masks first so the
+        // expected delta is computed independently.
+        let installed: Vec<_> = trainer
+            .store
+            .entries
+            .iter()
+            .filter_map(|e| e.masks.as_ref().map(|m| (m.fwd().clone(), m.bwd().clone())))
+            .collect();
         let before: Vec<_> = (0..replicas)
             .map(|r| trainer.runtime.device_transfer_stats(r).unwrap())
             .collect();
         trainer.train_step().unwrap();
-        let per_replica_mask_bytes = traffic.refresh_h2d_bytes / replicas as u64;
+        let delta_indices: u64 = trainer
+            .store
+            .entries
+            .iter()
+            .filter_map(|e| e.masks.as_ref())
+            .zip(&installed)
+            .map(|(m, (old_f, old_b))| {
+                (old_f.delta_to(m.fwd()).total() + old_b.delta_to(m.bwd()).total())
+                    as u64
+            })
+            .sum();
+        let per_replica_mask_bytes = 4 * delta_indices;
+        assert_eq!(
+            traffic.refresh_h2d_delta_bytes(delta_indices),
+            replicas as u64 * per_replica_mask_bytes,
+            "mask-pure strategy: the delta broadcast is the whole refresh upload"
+        );
         for r in 0..replicas {
             let d = trainer
                 .runtime
@@ -243,13 +267,13 @@ fn refresh_broadcasts_masks_to_every_replica() {
             assert_eq!(
                 d.h2d_bytes,
                 per_replica_mask_bytes + traffic.replica_step_h2d_bytes,
-                "replica {r}: refresh uploads its mask copy + the step shard"
+                "replica {r}: refresh uploads its delta copy + the step shard"
             );
             if r == 0 {
                 assert_eq!(
                     d.d2h_bytes,
                     traffic.refresh_d2h_bytes + traffic.step_d2h_bytes,
-                    "refresh syncs θ from the host-facing replica only"
+                    "refresh syncs the active θ from the host-facing replica only"
                 );
             } else {
                 assert_eq!(d.d2h_bytes, 0, "replica {r}: refresh costs no download");

@@ -61,27 +61,30 @@ fn prop_store_mask_update_preserves_invariants_for_all_strategies() {
                                 masks.is_nested(),
                                 format!("{}: A ⊄ B under {}", e.spec.name, s.name()),
                             )?;
+                            // index sets must stay canonical over the
+                            // tensor's domain, and the dense view must
+                            // agree with the set sizes
                             ensure(
-                                masks.fwd().iter().all(|&x| x == 0.0 || x == 1.0),
-                                "mask values must be exactly 0/1",
+                                masks.domain() == e.values.len(),
+                                "mask domain drifted from the tensor size",
+                            )?;
+                            ensure(
+                                masks.fwd().indices().windows(2).all(|w| w[0] < w[1]),
+                                "fwd indices not strictly increasing",
                             )?;
                             ensure(
                                 masks.fwd_nnz()
                                     == masks
-                                        .fwd()
+                                        .fwd_dense()
                                         .iter()
-                                        .filter(|&&x| x != 0.0)
+                                        .filter(|&&x| x == 1.0)
                                         .count(),
-                                "cached fwd nnz drifted from the buffer",
+                                "set size disagrees with the dense view",
                             )?;
                             ensure(
-                                masks.bwd_nnz()
-                                    == masks
-                                        .bwd()
-                                        .iter()
-                                        .filter(|&&x| x != 0.0)
-                                        .count(),
-                                "cached bwd nnz drifted from the buffer",
+                                masks.fwd().is_subset_of(masks.touched())
+                                    && masks.bwd().is_subset_of(masks.touched()),
+                                "installed active sets must be touched",
                             )?;
                         }
                         (None, false) => {}

@@ -1,0 +1,294 @@
+//! The compact sparse exchange plane, end to end: O(nnz) refresh
+//! downloads and O(Δnnz) mask broadcasts pinned by exact
+//! transfer-count assertions at two sparsity levels, v2 checkpoints
+//! that shrink with sparsity and survive disk round-trips, and the
+//! pinned v1 fixture written by the legacy dense writer.
+
+use topkast::coordinator::{Checkpoint, TensorPayload, Trainer, TrainerConfig};
+use topkast::runtime::Synthetic;
+use topkast::sparsity::topk::k_for_density;
+use topkast::sparsity::{ParamStore, TopKast};
+use topkast::tensor::SparseSet;
+
+fn cfg(steps: usize, refresh_every: usize, seed: u64) -> TrainerConfig {
+    TrainerConfig { steps, refresh_every, seed, ..TrainerConfig::default() }
+}
+
+fn trainer_at(synth: &Synthetic, sparsity: f64, cfg: TrainerConfig) -> Trainer {
+    synth
+        .trainer(Box::new(TopKast::from_sparsities(sparsity, sparsity)), cfg)
+        .unwrap()
+}
+
+/// Clone the sparse tensors' current (installed) index sets.
+fn mask_sets(trainer: &Trainer) -> Vec<(SparseSet, SparseSet)> {
+    trainer
+        .store
+        .entries
+        .iter()
+        .filter_map(|e| e.masks.as_ref().map(|m| (m.fwd().clone(), m.bwd().clone())))
+        .collect()
+}
+
+/// Σ per-tensor |added| + |removed| across both masks, old → current.
+fn delta_indices(trainer: &Trainer, old: &[(SparseSet, SparseSet)]) -> u64 {
+    trainer
+        .store
+        .entries
+        .iter()
+        .filter_map(|e| e.masks.as_ref())
+        .zip(old)
+        .map(|(m, (of, ob))| {
+            (of.delta_to(m.fwd()).total() + ob.delta_to(m.bwd()).total()) as u64
+        })
+        .sum()
+}
+
+/// The acceptance criterion stated directly: at a refresh, d2h moves
+/// exactly 4·Σnnz(fwd∪bwd) bytes (+ the loss) and h2d exactly
+/// 4·Δindices (+ the step batch) — verified at two sparsity levels,
+/// with the byte counts shrinking as sparsity rises.
+#[test]
+fn refresh_traffic_is_exactly_nnz_down_and_delta_up_at_two_sparsities() {
+    let synth = Synthetic::small();
+    let mut refresh_d2h_by_sparsity = Vec::new();
+    for sparsity in [0.8, 0.98] {
+        let mut trainer = trainer_at(&synth, sparsity, cfg(20, 4, 3));
+        let traffic = trainer.traffic().unwrap();
+        // analytic refresh d2h = 4·Σ k_for_density(n_t, d) — nnz-shaped
+        let d = 1.0 - sparsity;
+        let want_nnz_bytes: u64 = synth
+            .model
+            .sparse_params()
+            .iter()
+            .map(|p| 4 * k_for_density(p.shape.numel(), d) as u64)
+            .sum();
+        assert_eq!(traffic.refresh_d2h_bytes, want_nnz_bytes);
+        for _ in 0..4 {
+            trainer.train_step().unwrap(); // step-0 refresh + 3 steady
+        }
+        // independently recompute the expected Σ|fwd∪bwd| from the
+        // installed masks, then meter the step-4 refresh exactly
+        let installed = mask_sets(&trainer);
+        let union_bytes: u64 = installed
+            .iter()
+            .map(|(f, b)| 4 * f.union(b).len() as u64)
+            .sum();
+        assert_eq!(union_bytes, want_nnz_bytes, "A ⊆ B ⇒ union is B");
+        let before = trainer.runtime.transfer_stats();
+        trainer.train_step().unwrap();
+        let moved = trainer.runtime.transfer_stats().since(&before);
+        let delta = delta_indices(&trainer, &installed);
+        assert_eq!(
+            moved.d2h_bytes,
+            union_bytes + traffic.step_d2h_bytes,
+            "sparsity {sparsity}: refresh downloads the active θ + the loss"
+        );
+        assert_eq!(
+            moved.h2d_bytes,
+            4 * delta + traffic.step_h2d_bytes,
+            "sparsity {sparsity}: refresh uploads the index deltas + the batch"
+        );
+        assert_eq!(
+            moved.h2d_bytes,
+            traffic.refresh_h2d_delta_bytes(delta) + traffic.step_h2d_bytes,
+            "the TrafficModel delta account matches the meter"
+        );
+        // and far below the legacy dense exchange
+        assert!(union_bytes < traffic.legacy_refresh_d2h_bytes / 4);
+        refresh_d2h_by_sparsity.push(union_bytes);
+    }
+    assert!(
+        refresh_d2h_by_sparsity[1] < refresh_d2h_by_sparsity[0] / 5,
+        "98% sparse refresh must move far less than 80% sparse: {refresh_d2h_by_sparsity:?}"
+    );
+}
+
+/// Checkpoint-size acceptance criterion: a 90%-sparse model's v2
+/// checkpoint is under 25% of the v1 dense size, mid-run (after the
+/// touched set has accumulated refresh churn — the bound holds even if
+/// consecutive top-k selections were completely disjoint).
+#[test]
+fn v2_checkpoint_of_90pct_sparse_model_is_under_quarter_of_v1() {
+    let synth = Synthetic::small();
+    let mut trainer = trainer_at(&synth, 0.9, cfg(8, 4, 7));
+    for _ in 0..8 {
+        trainer.train_step().unwrap();
+    }
+    let ck = trainer.capture_checkpoint().unwrap();
+    let dense = Checkpoint::capture_dense(&trainer.store, trainer.opt_slots(), ck.step);
+
+    let dir = std::env::temp_dir().join("topkast_sparse_exchange_size");
+    std::fs::create_dir_all(&dir).unwrap();
+    let v2_path = dir.join("sparse.ckpt");
+    let v1_path = dir.join("dense.ckpt");
+    ck.save(&v2_path).unwrap();
+    dense.save_v1(&v1_path).unwrap();
+    let v2_len = std::fs::metadata(&v2_path).unwrap().len();
+    let v1_len = std::fs::metadata(&v1_path).unwrap().len();
+    assert!(
+        4 * v2_len < v1_len,
+        "90%-sparse v2 checkpoint is {v2_len} bytes, v1 dense {v1_len} — want < 25%"
+    );
+
+    // every sparse tensor actually took the compact representation
+    for (name, payload) in &ck.params {
+        let sparse_tensor = trainer
+            .store
+            .get(name)
+            .unwrap()
+            .masks
+            .is_some();
+        assert_eq!(
+            matches!(payload, TensorPayload::Sparse(_)),
+            sparse_tensor,
+            "{name}: unexpected payload representation"
+        );
+    }
+}
+
+/// A v2 checkpoint written to disk restores a fresh same-seed trainer
+/// to the exact captured state (the disk round-trip counterpart of the
+/// in-memory mid-run restore the parity suites pin).
+#[test]
+fn v2_disk_roundtrip_restores_bit_identical_state() {
+    let synth = Synthetic::tiny();
+    let mut t1 = trainer_at(&synth, 0.8, cfg(12, 3, 13));
+    for _ in 0..7 {
+        t1.train_step().unwrap();
+    }
+    let ck = t1.capture_checkpoint().unwrap();
+    let dir = std::env::temp_dir().join("topkast_sparse_exchange_rt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("mid.ckpt");
+    ck.save(&path).unwrap();
+    let loaded = Checkpoint::load(&path).unwrap();
+    assert_eq!(loaded.step, 7);
+    assert_eq!(loaded.params, ck.params);
+    assert_eq!(loaded.masks_fwd, ck.masks_fwd);
+    assert_eq!(loaded.masks_bwd, ck.masks_bwd);
+    assert_eq!(loaded.opt, ck.opt);
+    assert_eq!(loaded.touched, ck.touched);
+
+    let mut t2 = trainer_at(&synth, 0.8, cfg(12, 3, 13));
+    t2.restore_checkpoint(&loaded).unwrap();
+    t2.sync_host().unwrap();
+    t1.sync_host().unwrap();
+    for (a, b) in t1.store.entries.iter().zip(&t2.store.entries) {
+        assert_eq!(a.values, b.values, "θ diverged on {}", a.spec.name);
+        match (&a.masks, &b.masks) {
+            (Some(ma), Some(mb)) => {
+                assert_eq!(ma.fwd(), mb.fwd());
+                assert_eq!(ma.bwd(), mb.bwd());
+                assert_eq!(ma.touched(), mb.touched());
+            }
+            (None, None) => {}
+            _ => panic!("mask presence mismatch"),
+        }
+    }
+    assert_eq!(t1.opt_slots(), t2.opt_slots());
+    // and both runs continue identically
+    for s in 7..12 {
+        let a = t1.train_step().unwrap();
+        let b = t2.train_step().unwrap();
+        assert_eq!(a, b, "post-restore loss diverged at step {s}");
+    }
+}
+
+/// The pinned fixture: a v1 checkpoint written by the legacy dense
+/// writer (fixed bytes in-tree) loads into the new store bit-identically
+/// — the forever-compatibility contract for old checkpoints.
+#[test]
+fn pinned_v1_fixture_loads_bit_identically() {
+    use topkast::runtime::manifest::{InitKind, ParamSpec};
+    use topkast::tensor::Shape;
+
+    let path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/rust/tests/fixtures/checkpoint_v1_dense.ckpt"
+    );
+    let ck = Checkpoint::load(path).unwrap();
+    assert_eq!(ck.step, 4242);
+    assert_eq!(ck.seed, None, "v1 carries no seed");
+
+    let w = [0.5f32, -1.25, 2.0, -0.125, 3.5, 0.0625, -7.75, 0.25];
+    let b = [1.0f32, -2.0, 0.5, 4.0];
+    let s0 = [1.5f32, -0.5, 0.75, 0.0, 2.5, -1.0, 0.125, 8.0];
+    let s1 = [0.25f32, 0.5, -0.75, 1.0];
+    assert_eq!(ck.params.len(), 2);
+    assert_eq!(ck.params[0].0, "w");
+    assert_eq!(ck.params[0].1, TensorPayload::Dense(w.to_vec()));
+    assert_eq!(ck.params[1].1, TensorPayload::Dense(b.to_vec()));
+    assert_eq!(ck.masks_fwd[0].1.indices(), &[0, 2, 7]);
+    assert_eq!(ck.masks_bwd[0].1.indices(), &[0, 1, 2, 7]);
+    assert_eq!(ck.opt.len(), 2);
+    assert_eq!(ck.opt[0], TensorPayload::Dense(s0.to_vec()));
+    assert_eq!(ck.opt[1], TensorPayload::Dense(s1.to_vec()));
+
+    // restores into a store of ANY seed (dense payloads need no init
+    // reconstruction), bit-identically
+    let specs = vec![
+        ParamSpec {
+            name: "w".into(),
+            shape: Shape::new(&[8]),
+            init: InitKind::Normal,
+            init_scale: 0.1,
+            sparse: true,
+            mac: 8,
+        },
+        ParamSpec {
+            name: "b".into(),
+            shape: Shape::new(&[4]),
+            init: InitKind::Zeros,
+            init_scale: 0.0,
+            sparse: false,
+            mac: 0,
+        },
+    ];
+    let mut store = ParamStore::init(&specs, 987_654);
+    let mut opt = vec![vec![0.0f32; 8], vec![0.0f32; 4]];
+    ck.restore(&mut store, &mut opt).unwrap();
+    assert_eq!(store.get("w").unwrap().values, w);
+    assert_eq!(store.get("b").unwrap().values, b);
+    let m = store.get("w").unwrap().masks.as_ref().unwrap();
+    assert_eq!(m.fwd().indices(), &[0, 2, 7]);
+    assert_eq!(m.bwd().indices(), &[0, 1, 2, 7]);
+    assert_eq!(m.touched(), &SparseSet::full(8), "v1 history is unknown → full");
+    assert_eq!(opt[0], s0.to_vec());
+    assert_eq!(opt[1], s1.to_vec());
+}
+
+/// v2 checkpoints of an *untrained* store are near-empty: the touched
+/// sets are empty, so sparse tensors serialise to indices-only
+/// sections — the degenerate end of the O(nnz) scaling.
+#[test]
+fn untrained_sparse_tensors_checkpoint_to_almost_nothing() {
+    let synth = Synthetic::small();
+    let store = ParamStore::init(&synth.model.params, 5);
+    let slots = synth.model.optimizer.slots();
+    let opt: Vec<Vec<f32>> = synth
+        .model
+        .params
+        .iter()
+        .flat_map(|p| {
+            std::iter::repeat_with(move || vec![0.0f32; p.shape.numel()]).take(slots)
+        })
+        .collect();
+    let ck = Checkpoint::capture(&store, &opt, 0);
+    let sparse_stored: usize = ck
+        .params
+        .iter()
+        .filter_map(|(_, p)| match p {
+            TensorPayload::Sparse(s) => Some(s.len()),
+            TensorPayload::Dense(_) => None,
+        })
+        .sum();
+    assert_eq!(sparse_stored, 0, "untouched tensors store zero values");
+    // …and it restores exactly (same-seed store reconstructs init)
+    let mut store2 = ParamStore::init(&synth.model.params, 5);
+    let mut opt2 = opt.clone();
+    ck.restore(&mut store2, &mut opt2).unwrap();
+    for (a, b) in store.entries.iter().zip(&store2.entries) {
+        assert_eq!(a.values, b.values);
+    }
+}
