@@ -20,7 +20,7 @@ use anyhow::Result;
 use topkast::bench::reports::{f2, f3, pct};
 use topkast::bench::{run_training, Report, RunSpec, Table};
 use topkast::coordinator::TrainerConfig;
-use topkast::runtime::{Manifest, Synthetic};
+use topkast::runtime::{env_backend_name, Manifest, Synthetic};
 use topkast::sparsity::{flops, TopKast};
 use topkast::util::json::Json;
 use topkast::util::timer::{Stats, Stopwatch};
@@ -532,6 +532,7 @@ fn step_traffic() -> Result<Report> {
         lines.push(
             Json::obj(vec![
                 ("scenario", Json::str("step_traffic")),
+                ("backend", Json::str(env_backend_name())),
                 ("preset", Json::str(preset)),
                 ("steps", Json::num(steps as f64)),
                 ("step_ms_p50", Json::num(step_ms.percentile(50.0))),
@@ -640,6 +641,7 @@ fn replicated_step_traffic() -> Result<Report> {
             lines.push(
                 Json::obj(vec![
                     ("scenario", Json::str("replicated_step_traffic")),
+                    ("backend", Json::str(env_backend_name())),
                     ("preset", Json::str(preset)),
                     ("replicas", Json::num(replicas as f64)),
                     ("steps", Json::num(steps as f64)),
@@ -777,6 +779,7 @@ fn sparse_exchange() -> Result<Report> {
             lines.push(
                 Json::obj(vec![
                     ("scenario", Json::str("sparse_exchange")),
+                    ("backend", Json::str(env_backend_name())),
                     ("preset", Json::str(preset)),
                     ("sparsity", Json::num(sparsity)),
                     ("steps", Json::num(steps as f64)),

@@ -14,6 +14,7 @@ from __future__ import annotations
 import argparse
 import hashlib
 import json
+import math
 import os
 import sys
 import time
@@ -109,6 +110,51 @@ def grad_norms_io(cfg: ModelConfig) -> tuple[list[IoSpec], list[IoSpec]]:
     return inputs, outputs
 
 
+def _total_params(cfg: ModelConfig) -> int:
+    return sum(math.prod(s.shape) for s in M.param_specs(cfg))
+
+
+def _payload_specs(cfg: ModelConfig) -> tuple[IoSpec, IoSpec]:
+    """The all-reduced gradient payload: exactly two tensors, filling
+    the apply artifact's two batch slots (the runtime's TrainLayout
+    addresses train and apply identically)."""
+    return (
+        IoSpec("gsum", (_total_params(cfg),), "f32"),
+        IoSpec("loss_sum", (1,), "f32"),
+    )
+
+
+def grad_io(
+    cfg: ModelConfig, replicas: int
+) -> tuple[list[IoSpec], list[IoSpec]]:
+    """Per-replica grad artifact: eval-convention inputs (θ | m_fwd |
+    batch *shard*), gradient-payload outputs. The runtime feeds the
+    resident params/masks and streams only the shard
+    (rust/src/runtime/replicated.rs)."""
+    specs = M.param_specs(cfg)
+    sparse = [s for s in specs if s.sparse]
+    xb, yb = batch_specs(cfg)
+    shard = cfg.batch_size // replicas
+    xs = IoSpec("x", (shard,) + tuple(xb.shape[1:]), xb.dtype)
+    ys = IoSpec("y", (shard,) + tuple(yb.shape[1:]), yb.dtype)
+    inputs = (
+        [IoSpec("p:" + s.name, s.shape, "f32") for s in specs]
+        + [IoSpec("mf:" + s.name, s.shape, "f32") for s in sparse]
+        + [xs, ys]
+    )
+    return inputs, list(_payload_specs(cfg))
+
+
+def apply_io(cfg: ModelConfig) -> tuple[list[IoSpec], list[IoSpec]]:
+    """Replicated apply artifact: the train convention with the batch
+    slots carrying the all-reduced payload (same arity, same outputs)."""
+    inputs, outputs = train_io(cfg)
+    gsum, loss_sum = _payload_specs(cfg)
+    inputs[-6] = gsum
+    inputs[-5] = loss_sum
+    return inputs, outputs
+
+
 # ---------------------------------------------------------------------------
 # Flat-argument wrappers around the dict-based step functions
 # ---------------------------------------------------------------------------
@@ -182,6 +228,56 @@ def _flat_grad_norms(cfg: ModelConfig):
     return fn
 
 
+def _flat_grad_payload(cfg: ModelConfig):
+    specs = M.param_specs(cfg)
+    sparse = [s for s in specs if s.sparse]
+    step_fn = M.make_grad_payload(cfg)
+
+    def fn(*flat):
+        i = 0
+        params = {s.name: flat[i + j] for j, s in enumerate(specs)}
+        i += len(specs)
+        mf = {s.name: flat[i + j] for j, s in enumerate(sparse)}
+        i += len(sparse)
+        x, y = flat[i], flat[i + 1]
+        return step_fn(params, mf, x, y)
+
+    return fn
+
+
+def _flat_apply(cfg: ModelConfig):
+    specs = M.param_specs(cfg)
+    sparse = [s for s in specs if s.sparse]
+    step_fn = M.make_apply_step(cfg)
+    np_, ns = len(specs), len(sparse)
+
+    def fn(*flat):
+        i = 0
+        params = {s.name: flat[i + j] for j, s in enumerate(specs)}
+        i += np_
+        mf = {s.name: flat[i + j] for j, s in enumerate(sparse)}
+        i += ns
+        mb = {s.name: flat[i + j] for j, s in enumerate(sparse)}
+        i += ns
+        opt = {}
+        for s in specs:
+            for n in opt_slot_names(cfg, s.name):
+                opt[n] = flat[i]
+                i += 1
+        gsum, loss_sum = flat[i], flat[i + 1]
+        lr, stp, reg, invd = flat[i + 2 : i + 6]
+        new_params, new_opt, loss = step_fn(
+            params, mf, mb, opt, gsum, loss_sum, lr, stp, reg, invd
+        )
+        outs = [new_params[s.name] for s in specs]
+        for s in specs:
+            outs += [new_opt[n] for n in opt_slot_names(cfg, s.name)]
+        outs.append(loss)
+        return tuple(outs)
+
+    return fn
+
+
 STEPS = {
     "train": (_flat_train, train_io),
     "eval": (_flat_eval, eval_io),
@@ -194,9 +290,14 @@ STEPS = {
 # ---------------------------------------------------------------------------
 
 
-def lower_artifact(cfg: ModelConfig, kind: str, out_dir: str) -> dict:
-    builder, io_fn = STEPS[kind]
-    inputs, outputs = io_fn(cfg)
+def _lower(
+    cfg: ModelConfig,
+    kind: str,
+    fn,
+    inputs: list[IoSpec],
+    outputs: list[IoSpec],
+    out_dir: str,
+) -> dict:
     avals = [
         jax.ShapeDtypeStruct(tuple(i.shape), DTYPE[i.dtype]) for i in inputs
     ]
@@ -204,7 +305,7 @@ def lower_artifact(cfg: ModelConfig, kind: str, out_dir: str) -> dict:
     # keep_unused: the IO convention is positional; an artifact that
     # drops an unused scalar (e.g. `step` under SGD) would desync the
     # rust marshalling.
-    lowered = jax.jit(builder(cfg), keep_unused=True).lower(*avals)
+    lowered = jax.jit(fn, keep_unused=True).lower(*avals)
     text = to_hlo_text(lowered)
     fname = f"{cfg.name}.{kind}.hlo.txt"
     with open(os.path.join(out_dir, fname), "w") as f:
@@ -222,7 +323,45 @@ def lower_artifact(cfg: ModelConfig, kind: str, out_dir: str) -> dict:
     }
 
 
-def build_all(out_dir: str, only: list[str] | None = None) -> None:
+def lower_artifact(cfg: ModelConfig, kind: str, out_dir: str) -> dict:
+    builder, io_fn = STEPS[kind]
+    inputs, outputs = io_fn(cfg)
+    return _lower(cfg, kind, builder(cfg), inputs, outputs, out_dir)
+
+
+def lower_replication(
+    cfg: ModelConfig, replicas: int, out_dir: str
+) -> dict | None:
+    """Lower the data-parallel grad/apply pair for a concrete replica
+    count (the manifest's optional `"replication"` block; see
+    rust/src/runtime/replicated.rs for the protocol). Skipped when the
+    batch does not shard evenly."""
+    if replicas < 2:
+        return None
+    if cfg.batch_size % replicas != 0:
+        print(
+            f"  [skip] replication: batch_size {cfg.batch_size} is not a "
+            f"multiple of {replicas} replicas",
+            file=sys.stderr,
+        )
+        return None
+    gin, gout = grad_io(cfg, replicas)
+    ain, aout = apply_io(cfg)
+    return {
+        "replicas": replicas,
+        "grad": _lower(
+            cfg, f"grad_r{replicas}", _flat_grad_payload(cfg), gin, gout,
+            out_dir,
+        ),
+        "apply": _lower(cfg, "apply", _flat_apply(cfg), ain, aout, out_dir),
+    }
+
+
+def build_all(
+    out_dir: str,
+    only: list[str] | None = None,
+    replicas: int = 2,
+) -> None:
     os.makedirs(out_dir, exist_ok=True)
     registry = model_registry()
     manifest: dict = {"format": 1, "models": {}}
@@ -241,6 +380,9 @@ def build_all(out_dir: str, only: list[str] | None = None) -> None:
         }
         for kind in ("train", "eval", "grad_norms"):
             entry["artifacts"][kind] = lower_artifact(cfg, kind, out_dir)
+        rep = lower_replication(cfg, replicas, out_dir)
+        if rep is not None:
+            entry["replication"] = rep
         manifest["models"][name] = entry
     path = os.path.join(out_dir, "manifest.json")
     # Merge with an existing manifest when building a subset.
@@ -258,8 +400,15 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out", default="../artifacts", help="artifact dir")
     ap.add_argument("--only", nargs="*", help="subset of model names")
+    ap.add_argument(
+        "--replicas",
+        type=int,
+        default=2,
+        help="replica count for the data-parallel grad/apply artifacts "
+        "(< 2 disables them)",
+    )
     args = ap.parse_args()
-    build_all(args.out, args.only)
+    build_all(args.out, args.only, args.replicas)
 
 
 if __name__ == "__main__":

@@ -232,6 +232,24 @@ def primary_loss(cfg: ModelConfig, params: Params, masks: Masks, x, y):
     return _xent(logits, y)
 
 
+def primary_loss_sum(cfg: ModelConfig, params: Params, masks: Masks, x, y):
+    """Shard-summed primary loss: `primary_loss` without the mean, so
+    partial sums over batch shards compose additively (the replicated
+    grad payload)."""
+    if cfg.kind == "lm":
+        logits = lm_apply(cfg, params, masks, x)
+        b, s, v = logits.shape
+        return _xent(logits.reshape(b * s, v), y.reshape(b * s)) * (b * s)
+    logits = apply_fn(cfg)(cfg, params, masks, x)
+    return _xent(logits, y) * y.shape[0]
+
+
+def rows_per_batch(cfg: ModelConfig) -> int:
+    """The denominator `primary_loss` means over for one full batch
+    (examples, or tokens for the LM family)."""
+    return cfg.batch_size * (cfg.seq_len if cfg.kind == "lm" else 1)
+
+
 def exploration_reg(params: Params, m_fwd: Masks, m_bwd: Masks, inv_d):
     """Σ_tensors Loss_R (§2.3). Dense tensors see m_fwd=m_bwd=1 so the
     penalty degrades to plain L2 weight decay on them."""
@@ -279,29 +297,102 @@ def make_train_step(cfg: ModelConfig) -> Callable:
             return lp + reg_scale[0] * lr_, lp
 
         grads, lp = jax.grad(loss_fn, has_aux=True)(params)
-
-        new_params: Params = {}
-        new_opt: Params = {}
-        for spec in specs:
-            name = spec.name
-            w, g, mb = params[name], grads[name], m_bwd[name]
-            if cfg.optimizer == "sgd":
-                nw, nv = K.sgd_momentum_update(
-                    w, opt[name + "/m"], g, mb, lr, cfg.momentum
-                )
-                new_params[name] = nw
-                new_opt[name + "/m"] = nv
-            else:
-                nw, nm1, nm2 = K.adam_update(
-                    w, opt[name + "/m1"], opt[name + "/m2"], g, mb, lr, step,
-                    cfg.adam_b1, cfg.adam_b2, cfg.adam_eps,
-                )
-                new_params[name] = nw
-                new_opt[name + "/m1"] = nm1
-                new_opt[name + "/m2"] = nm2
+        new_params, new_opt = _optimizer_update(
+            cfg, specs, params, opt, grads, m_bwd, lr, step
+        )
         return new_params, new_opt, lp.reshape(1)
 
     return train_step
+
+
+def _optimizer_update(cfg, specs, params, opt, grads, m_bwd, lr, step):
+    """The §2.2 masked optimiser update, shared by the fused train step
+    and the replicated apply step so the two can never drift."""
+    new_params: Params = {}
+    new_opt: Params = {}
+    for spec in specs:
+        name = spec.name
+        w, g, mb = params[name], grads[name], m_bwd[name]
+        if cfg.optimizer == "sgd":
+            nw, nv = K.sgd_momentum_update(
+                w, opt[name + "/m"], g, mb, lr, cfg.momentum
+            )
+            new_params[name] = nw
+            new_opt[name + "/m"] = nv
+        else:
+            nw, nm1, nm2 = K.adam_update(
+                w, opt[name + "/m1"], opt[name + "/m2"], g, mb, lr, step,
+                cfg.adam_b1, cfg.adam_b2, cfg.adam_eps,
+            )
+            new_params[name] = nw
+            new_opt[name + "/m1"] = nm1
+            new_opt[name + "/m2"] = nm2
+    return new_params, new_opt
+
+
+def make_grad_payload(cfg: ModelConfig) -> Callable:
+    """grad_payload(params, m_fwd_s, x, y) ->
+    (gsum f32[total_params], loss_sum f32[1]).
+
+    The per-replica half of the data-parallel split (runtime::replicated):
+    the gradient of the *shard-summed* primary loss wrt every parameter,
+    flattened and concatenated in spec order. Shard payloads compose by
+    addition, so the fixed-order all-reduce of the gsum vectors is the
+    full batch's summed gradient. The data-independent exploration
+    regulariser (§2.3) is deliberately absent — `make_apply_step` adds
+    its gradient once, locally, after the reduce (summing it here would
+    scale it by the replica count).
+    """
+    specs = param_specs(cfg)
+
+    def grad_payload(params, m_fwd_s, x, y):
+        m_fwd = full_masks(cfg, m_fwd_s)
+
+        def loss_fn(p):
+            ls = primary_loss_sum(cfg, p, m_fwd, x, y)
+            return ls, ls
+
+        grads, ls = jax.grad(loss_fn, has_aux=True)(params)
+        gsum = jnp.concatenate([grads[s.name].reshape(-1) for s in specs])
+        return gsum, ls.reshape(1)
+
+    return grad_payload
+
+
+def make_apply_step(cfg: ModelConfig) -> Callable:
+    """apply_step(params, m_fwd_s, m_bwd_s, opt, gsum, loss_sum,
+    lr, step, reg_scale, inv_d) -> (new_params, new_opt, loss).
+
+    Reproduces `make_train_step`'s update from the all-reduced payload:
+    data gradient = gsum / rows_per_batch(cfg) (the mean the fused step
+    takes in-graph), plus the locally recomputed regulariser gradient.
+    Replicated on every device against its resident θ/masks/opt.
+    """
+    specs = param_specs(cfg)
+    rows = float(rows_per_batch(cfg))
+
+    def apply_step(params, m_fwd_s, m_bwd_s, opt, gsum, loss_sum, lr, step,
+                   reg_scale, inv_d):
+        m_fwd = full_masks(cfg, m_fwd_s)
+        m_bwd = full_masks(cfg, m_bwd_s)
+
+        def reg_fn(p):
+            return exploration_reg(p, m_fwd, m_bwd, inv_d[0])
+
+        reg_grads = jax.grad(reg_fn)(params)
+        grads: Params = {}
+        off = 0
+        for spec in specs:
+            n = math.prod(spec.shape)
+            g = gsum[off:off + n].reshape(spec.shape) / rows
+            grads[spec.name] = g + reg_scale[0] * reg_grads[spec.name]
+            off += n
+        new_params, new_opt = _optimizer_update(
+            cfg, specs, params, opt, grads, m_bwd, lr, step
+        )
+        return new_params, new_opt, loss_sum / rows
+
+    return apply_step
 
 
 def make_eval_step(cfg: ModelConfig) -> Callable:

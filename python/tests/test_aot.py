@@ -39,6 +39,106 @@ def test_io_conventions(name):
     assert len(gout) == len(sparse)
 
 
+@pytest.mark.parametrize("name", list(REG))
+def test_replication_io_conventions(name):
+    cfg = REG[name]
+    specs = M.param_specs(cfg)
+    sparse = [s for s in specs if s.sparse]
+    replicas = 2
+    if cfg.batch_size % replicas:
+        pytest.skip("batch does not shard evenly")
+
+    # grad: eval-convention inputs over one batch *shard*, exactly the
+    # two payload outputs that fill apply's batch slots
+    gin, gout = aot.grad_io(cfg, replicas)
+    assert len(gin) == len(specs) + len(sparse) + 2
+    assert gin[-2].shape[0] == cfg.batch_size // replicas
+    assert gin[-1].shape[0] == cfg.batch_size // replicas
+    assert [o.name for o in gout] == ["gsum", "loss_sum"]
+    total = sum(int(np.prod(s.shape)) for s in specs)
+    assert gout[0].shape == (total,)
+
+    # apply: train arity with the batch slots replaced by the payload
+    tin, tout = aot.train_io(cfg)
+    ain, aout = aot.apply_io(cfg)
+    assert len(ain) == len(tin)
+    assert [o.name for o in aout] == [o.name for o in tout]
+    assert [i.name for i in ain[-6:-4]] == ["gsum", "loss_sum"]
+    assert [i.name for i in ain[:-6]] == [i.name for i in tin[:-6]]
+    assert [i.name for i in ain[-4:]] == [i.name for i in tin[-4:]]
+
+
+def test_apply_from_payload_matches_fused_train():
+    """The replicated decomposition (shard grad sums → all-reduce →
+    apply) must reproduce the fused train step: same new params, opt
+    and loss up to float tolerance (bitwise parity is pinned for the
+    synthetic family in rust; real graphs reassociate reductions)."""
+    cfg = REG["mlp_tiny"]
+    replicas = 2
+    assert cfg.batch_size % replicas == 0
+    specs = M.param_specs(cfg)
+    sparse = [s for s in specs if s.sparse]
+    rng = np.random.default_rng(7)
+    params = {
+        s.name: jnp.asarray(rng.normal(0, 0.1, s.shape).astype(np.float32))
+        for s in specs
+    }
+    mf = {
+        s.name: jnp.asarray((rng.random(s.shape) < 0.4).astype(np.float32))
+        for s in sparse
+    }
+    mb = {
+        s.name: jnp.maximum(
+            mf[s.name],
+            jnp.asarray((rng.random(s.shape) < 0.3).astype(np.float32)),
+        )
+        for s in sparse
+    }
+    opt = {}
+    for s in specs:
+        for n in aot.opt_slot_names(cfg, s.name):
+            opt[n] = jnp.asarray(
+                rng.normal(0, 0.01, s.shape).astype(np.float32)
+            )
+    x = jnp.asarray(
+        rng.normal(size=(cfg.batch_size, cfg.features)).astype(np.float32)
+    )
+    y = jnp.asarray(rng.integers(0, cfg.classes, cfg.batch_size).astype(np.int32))
+    scal = [jnp.asarray([v], jnp.float32) for v in (0.1, 1.0, 1e-4, 2.5)]
+
+    want_p, want_o, want_l = M.make_train_step(cfg)(
+        params, mf, mb, opt, x, y, *scal
+    )
+
+    # per-shard payloads, summed in replica order = the all-reduce
+    grad_fn = M.make_grad_payload(cfg)
+    shard = cfg.batch_size // replicas
+    gsum = jnp.zeros((sum(int(np.prod(s.shape)) for s in specs),), jnp.float32)
+    loss_sum = jnp.zeros((1,), jnp.float32)
+    for r in range(replicas):
+        g, ls = grad_fn(params, mf, x[r * shard:(r + 1) * shard],
+                        y[r * shard:(r + 1) * shard])
+        gsum = gsum + g
+        loss_sum = loss_sum + ls
+
+    got_p, got_o, got_l = M.make_apply_step(cfg)(
+        params, mf, mb, opt, gsum, loss_sum, *scal
+    )
+    np.testing.assert_allclose(
+        np.asarray(got_l), np.asarray(want_l), rtol=1e-5, atol=1e-6
+    )
+    for s in specs:
+        np.testing.assert_allclose(
+            np.asarray(got_p[s.name]), np.asarray(want_p[s.name]),
+            rtol=1e-4, atol=1e-6, err_msg=s.name,
+        )
+        for n in aot.opt_slot_names(cfg, s.name):
+            np.testing.assert_allclose(
+                np.asarray(got_o[n]), np.asarray(want_o[n]),
+                rtol=1e-4, atol=1e-6, err_msg=n,
+            )
+
+
 def test_flat_matches_dict_train():
     """The flat wrapper must be a pure re-indexing of the dict step."""
     cfg = REG["mlp_tiny"]
@@ -106,6 +206,25 @@ def test_manifest_consistent_with_registry():
             want_in, want_out = aot.STEPS[kind][1](cfg)
             assert [i["name"] for i in art["inputs"]] == [i.name for i in want_in]
             assert [o["name"] for o in art["outputs"]] == [o.name for o in want_out]
+        # the optional data-parallel block (manifests built before
+        # `--replicas` landed don't carry it)
+        if "replication" in entry:
+            rep = entry["replication"]
+            replicas = rep["replicas"]
+            assert cfg.batch_size % replicas == 0
+            gin, gout = aot.grad_io(cfg, replicas)
+            ain, aout = aot.apply_io(cfg)
+            for art, (want_in, want_out) in (
+                (rep["grad"], (gin, gout)),
+                (rep["apply"], (ain, aout)),
+            ):
+                assert os.path.exists(os.path.join(ART, art["file"]))
+                assert [i["name"] for i in art["inputs"]] == [
+                    i.name for i in want_in
+                ]
+                assert [o["name"] for o in art["outputs"]] == [
+                    o.name for o in want_out
+                ]
 
 
 @pytest.mark.skipif(

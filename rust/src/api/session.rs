@@ -15,22 +15,26 @@ use crate::coordinator::{
     source_for, Checkpoint, ConsoleLogger, EvalResult, PeriodicCheckpoint,
     Trainer, TrainObserver,
 };
-use crate::runtime::{Manifest, Runtime};
+use crate::runtime::{backend::Backend, AnyBackend, Manifest, Runtime};
 use crate::sparsity::StrategyRegistry;
 
 /// A fully-wired training run. The underlying [`Trainer`] is public so
 /// analysis code can reach the store, metrics and runtime directly.
-pub struct Session {
-    pub trainer: Trainer,
+/// Generic over the [`Backend`]; the builder constructs the
+/// env-selected [`AnyBackend`] default.
+pub struct Session<B: Backend = AnyBackend> {
+    pub trainer: Trainer<B>,
     /// The resolved spec this session was built from (archivable).
     pub resolved: ResolvedRun,
 }
 
-impl Session {
+impl Session<AnyBackend> {
     pub fn builder<'m>() -> SessionBuilder<'m> {
         SessionBuilder::new()
     }
+}
 
+impl<B: Backend> Session<B> {
     /// Run the configured training loop (drives the observers).
     pub fn train(&mut self) -> Result<()> {
         self.trainer.train()

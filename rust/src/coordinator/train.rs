@@ -37,8 +37,9 @@ use super::metrics::{EvalResult, RunMetrics};
 use super::observer::{EndEvent, EvalEvent, RefreshEvent, StepEvent, TrainObserver};
 use super::schedule::LrSchedule;
 use crate::runtime::{
-    client::TensorRef, DeviceState, ModelEntry, ReplicatedState, Runtime,
-    TrafficModel,
+    backend::{AnyBackend, Backend},
+    client::TensorRef,
+    DeviceState, ModelEntry, ReplicatedState, Runtime, TrafficModel,
 };
 use crate::sparsity::{update_store_masks, MaskStrategy, ParamStore};
 use crate::tensor::{HostTensor, TensorData};
@@ -93,12 +94,12 @@ impl Default for TrainerConfig {
 /// one per data-parallel replica. The single-replica arm is exactly the
 /// pre-replication path — `replicas: 1` runs byte-for-byte the same
 /// code it always did.
-enum Resident {
-    Single(DeviceState),
-    Replicated(ReplicatedState),
+enum Resident<B: Backend> {
+    Single(DeviceState<B>),
+    Replicated(ReplicatedState<B>),
 }
 
-impl Resident {
+impl<B: Backend> Resident<B> {
     fn sync_params_to_host(&self, store: &mut ParamStore) -> Result<()> {
         match self {
             Resident::Single(d) => d.sync_params_to_host(store),
@@ -157,7 +158,7 @@ impl Resident {
 
     fn run_with_fwd_masks(
         &self,
-        exe: &crate::runtime::Executable,
+        exe: &crate::runtime::Executable<B>,
         x: TensorRef<'_>,
         y: TensorRef<'_>,
     ) -> Result<Vec<HostTensor>> {
@@ -168,8 +169,8 @@ impl Resident {
     }
 }
 
-pub struct Trainer {
-    pub runtime: Runtime,
+pub struct Trainer<B: Backend = AnyBackend> {
+    pub runtime: Runtime<B>,
     pub model: ModelEntry,
     pub store: ParamStore,
     pub strategy: Box<dyn MaskStrategy>,
@@ -177,7 +178,7 @@ pub struct Trainer {
     pub metrics: RunMetrics,
     /// Device-resident θ/masks/opt — one chain, or one per replica
     /// (see `runtime::device_state` / `runtime::replicated`).
-    device: Resident,
+    device: Resident<B>,
     /// True when the host store's weight values fully mirror the
     /// device buffers (all tensors, dense included). Cleared by every
     /// train step; restored by `sync_host`.
@@ -205,9 +206,9 @@ pub struct Trainer {
     observers: Vec<Box<dyn TrainObserver>>,
 }
 
-impl Trainer {
+impl<B: Backend> Trainer<B> {
     pub fn new(
-        mut runtime: Runtime,
+        mut runtime: Runtime<B>,
         model: ModelEntry,
         strategy: Box<dyn MaskStrategy>,
         data: Box<dyn DataSource>,

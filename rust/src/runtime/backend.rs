@@ -1,0 +1,767 @@
+//! The backend seam: everything the runtime layer asks of a device,
+//! expressed as one trait — with buffer *ownership* semantics that
+//! match real PJRT, so swapping the in-crate host-sim for vendored
+//! PJRT bindings is a trait impl, not a rewrite.
+//!
+//! Three associated types form the surface: the **Client** (the
+//! implementing type itself — [`Backend`] is implemented directly on
+//! the client handle, and [`Backend::Client`] names it for callers
+//! that store one), the **Buffer** (a device-resident value, see
+//! [`BufferOps`]) and the **Executable** (a compiled artifact, run via
+//! [`Backend::execute`]).
+//!
+//! # The ownership contract
+//!
+//! Real PJRT buffers are move-only with *input donation*: an execution
+//! may consume an input's device memory for its outputs, after which
+//! every handle to that input is dead. The host-sim's `Arc`-backed
+//! buffers would happily tolerate reuse, so the contract below is
+//! stated here once and enforced at runtime by
+//! [`StrictBackend`](super::strict::StrictBackend) — which calls
+//! mirror each semantic:
+//!
+//! * **Donate** ([`ExecInput::Donate`], the consuming receivers of
+//!   [`BufferOps::tuple_parts`] and [`BufferOps::scatter_mask_update`]):
+//!   ownership transfers to the call. The handle — and every clone of
+//!   it — must never be used again. This is how the training chain
+//!   runs: step N's θ/opt output buffers are donated into step N+1,
+//!   a refresh's mask buffer is donated into its scatter update, and
+//!   the per-step host uploads (batch, scalars) are donated to the
+//!   execution that consumes them.
+//! * **Borrow** ([`ExecInput::Borrow`], plus the `&self` reads
+//!   [`BufferOps::to_literal_sync`] and [`BufferOps::gather_to_host`],
+//!   and [`Backend::all_reduce_sum`] inputs): the call reads the buffer
+//!   and leaves it valid. Mask buffers are borrowed by every step (they
+//!   change only at refreshes); eval/grad_norms borrow the resident
+//!   params because the training chain still needs them afterwards —
+//!   the one deliberate concurrent-read escape hatch in the protocol.
+//! * **Clone**: an alias to the same device memory, *not* a copy —
+//!   legal only while the buffer has not been donated, and donation
+//!   through any alias invalidates all of them. The runtime layer
+//!   itself never clones resident buffers on the training path; clones
+//!   exist for host-side conveniences (e.g. the loss buffer a
+//!   replicated step returns undownloaded).
+//! * **Metadata** ([`BufferOps::element_count`] /
+//!   [`BufferOps::element_type`] / [`BufferOps::is_tuple`] /
+//!   [`BufferOps::device`]): host-side shape records, readable at any
+//!   time — PJRT keeps these outside device memory.
+//! * **Drop** without donation is always legal (frees the device
+//!   memory).
+//!
+//! A failed execution poisons any state whose buffers were donated to
+//! it — exactly as on real hardware, where the donated memory is gone
+//! either way. Callers treat errors from [`Backend::execute`] as fatal
+//! to the resident chain.
+//!
+//! # Backend selection
+//!
+//! [`AnyBackend`] is the default backend everywhere
+//! (`Runtime<B = AnyBackend>` and friends); it dispatches between the
+//! raw host-sim (`sim`), the donation-enforcing wrapper (`strict`) and
+//! — behind the `pjrt` feature — the real-bindings scaffold (`pjrt`).
+//! `Runtime::new`/`Runtime::with_devices` pick the variant from the
+//! `TOPKAST_BACKEND` environment variable (default `sim`), which is
+//! how the bit-parity suites run unchanged against both in-crate
+//! backends.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::xla;
+
+use super::strict::{StrictBackend, StrictBuffer, StrictExecutable};
+
+/// One input position of a backend execution, with its ownership mode
+/// (see the module docs for the contract).
+pub enum ExecInput<'a, B: Backend + ?Sized> {
+    /// Ownership transfers to the execution (PJRT input donation); the
+    /// handle and all its clones are dead afterwards.
+    Donate(B::Buffer),
+    /// Read for the duration of the call; stays valid afterwards.
+    Borrow(&'a B::Buffer),
+}
+
+impl<B: Backend + ?Sized> ExecInput<'_, B> {
+    /// The buffer behind this input, ownership mode erased (for
+    /// metadata reads and ref-marshalling inside backends).
+    pub fn buffer(&self) -> &B::Buffer {
+        match self {
+            ExecInput::Donate(b) => b,
+            ExecInput::Borrow(b) => b,
+        }
+    }
+}
+
+/// Handle-level operations of a backend's device buffer. Receivers
+/// encode the ownership contract: `self` consumes (donation), `&self`
+/// borrows (see module docs).
+pub trait BufferOps: Clone {
+    /// Host-side shape metadata — legal at any time.
+    fn element_count(&self) -> usize;
+    /// Element type of an array buffer (`None` for tuples).
+    fn element_type(&self) -> Option<xla::ElemType>;
+    fn is_tuple(&self) -> bool;
+    /// The device this buffer is resident on.
+    fn device(&self) -> usize;
+
+    /// Metered device→host download of the full value.
+    fn to_literal_sync(&self) -> Result<xla::Literal>;
+    /// Metered sparse download: values at the given sorted indices.
+    fn gather_to_host(&self, indices: &[u32]) -> Result<Vec<f32>>;
+
+    /// Split a tuple result into its element buffers, consuming the
+    /// tuple handle (donation: the parts take over its memory).
+    fn tuple_parts(self) -> Result<Vec<Self>>;
+    /// Scatter-style 0/1 mask delta update, consuming the old mask
+    /// buffer (donation) and yielding its replacement.
+    fn scatter_mask_update(self, added: &[u32], removed: &[u32]) -> Result<Self>;
+
+    /// Unmetered diagnostic peek at an f32 buffer's device values, for
+    /// `cfg(debug_assertions)` invariant checks that must not perturb
+    /// the transfer counters the parity suites pin. Backends without a
+    /// free host view (real PJRT) return `None` and the checks skip.
+    fn debug_read_f32(&self) -> Option<Vec<f32>>;
+}
+
+/// The device runtime's full surface. Implemented by the client handle
+/// itself ([`Backend::Client`] names that type for storage).
+pub trait Backend: Clone + Sized + 'static {
+    /// The client handle type — the implementing type.
+    type Client: Clone;
+    type Buffer: BufferOps;
+    type Executable;
+
+    /// Short stable identifier (`"sim"`, `"strict"`, `"pjrt"`) —
+    /// bench/CI tagging.
+    fn name(&self) -> &'static str;
+    fn platform_name(&self) -> String;
+    /// Number of addressable devices behind this client.
+    fn device_count(&self) -> usize;
+    /// A clone of the client handle.
+    fn client(&self) -> Self::Client;
+
+    /// Metered host→device upload.
+    fn buffer_from_host_buffer<T: xla::NativeType>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        device: Option<usize>,
+    ) -> Result<Self::Buffer>;
+
+    /// Metered sparse mask install: dense 0/1 buffer from an index
+    /// list, only the indices crossing the bus.
+    fn mask_from_indices(
+        &self,
+        dims: &[usize],
+        indices: &[u32],
+        device: Option<usize>,
+    ) -> Result<Self::Buffer>;
+
+    fn compile(&self, comp: &xla::XlaComputation) -> Result<Self::Executable>;
+
+    /// Compile from an HLO-text artifact on disk. The default parses
+    /// through the in-crate text loader; a real-PJRT backend overrides
+    /// this to hand the text to its own compiler.
+    fn compile_hlo_text(&self, path: &Path) -> Result<Self::Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        self.compile(&xla::XlaComputation::from_proto(&proto))
+    }
+
+    /// Run a compiled executable. `Donate` inputs are consumed (their
+    /// memory may back the outputs); `Borrow` inputs stay valid. All
+    /// inputs must live on one device. Returns the output buffers —
+    /// either a single (possibly tuple) root or the already-split
+    /// outputs, backend's choice; callers split tuples via
+    /// [`BufferOps::tuple_parts`].
+    fn execute(
+        &self,
+        exe: &Self::Executable,
+        inputs: Vec<ExecInput<'_, Self>>,
+    ) -> Result<Vec<Self::Buffer>>;
+
+    /// Deterministic fixed-order all-reduce over one buffer per
+    /// replica (canonical replica order). Inputs are *borrowed*;
+    /// outputs are fresh per-device buffers.
+    fn all_reduce_sum(&self, inputs: &[&Self::Buffer]) -> Result<Vec<Self::Buffer>>;
+
+    /// Cumulative host↔device + interconnect traffic, all devices.
+    fn transfer_stats(&self) -> xla::TransferSnapshot;
+    /// Traffic through one device only.
+    fn device_transfer_stats(&self, device: usize) -> Result<xla::TransferSnapshot>;
+}
+
+// ---------------------------------------------------------------------------
+// sim backend: the in-crate host simulator, used directly
+// ---------------------------------------------------------------------------
+
+impl BufferOps for xla::PjRtBuffer {
+    fn element_count(&self) -> usize {
+        xla::PjRtBuffer::element_count(self)
+    }
+
+    fn element_type(&self) -> Option<xla::ElemType> {
+        xla::PjRtBuffer::element_type(self)
+    }
+
+    fn is_tuple(&self) -> bool {
+        xla::PjRtBuffer::is_tuple(self)
+    }
+
+    fn device(&self) -> usize {
+        xla::PjRtBuffer::device(self)
+    }
+
+    fn to_literal_sync(&self) -> Result<xla::Literal> {
+        xla::PjRtBuffer::to_literal_sync(self)
+    }
+
+    fn gather_to_host(&self, indices: &[u32]) -> Result<Vec<f32>> {
+        xla::PjRtBuffer::gather_to_host(self, indices)
+    }
+
+    fn tuple_parts(self) -> Result<Vec<Self>> {
+        // the sim's parts alias the tuple; dropping the consumed tuple
+        // handle here is the donation
+        xla::PjRtBuffer::tuple_parts(&self)
+    }
+
+    fn scatter_mask_update(self, added: &[u32], removed: &[u32]) -> Result<Self> {
+        xla::PjRtBuffer::scatter_mask_update(&self, added, removed)
+    }
+
+    fn debug_read_f32(&self) -> Option<Vec<f32>> {
+        xla::PjRtBuffer::debug_read_f32(self)
+    }
+}
+
+/// The raw host-sim client is the reference backend: `Arc`-backed
+/// buffers that tolerate any use, with exact transfer metering.
+impl Backend for xla::PjRtClient {
+    type Client = xla::PjRtClient;
+    type Buffer = xla::PjRtBuffer;
+    type Executable = xla::PjRtLoadedExecutable;
+
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn platform_name(&self) -> String {
+        xla::PjRtClient::platform_name(self)
+    }
+
+    fn device_count(&self) -> usize {
+        xla::PjRtClient::device_count(self)
+    }
+
+    fn client(&self) -> Self::Client {
+        self.clone()
+    }
+
+    fn buffer_from_host_buffer<T: xla::NativeType>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        device: Option<usize>,
+    ) -> Result<Self::Buffer> {
+        xla::PjRtClient::buffer_from_host_buffer(self, data, dims, device)
+    }
+
+    fn mask_from_indices(
+        &self,
+        dims: &[usize],
+        indices: &[u32],
+        device: Option<usize>,
+    ) -> Result<Self::Buffer> {
+        xla::PjRtClient::mask_from_indices(self, dims, indices, device)
+    }
+
+    fn compile(&self, comp: &xla::XlaComputation) -> Result<Self::Executable> {
+        xla::PjRtClient::compile(self, comp)
+    }
+
+    fn execute(
+        &self,
+        exe: &Self::Executable,
+        inputs: Vec<ExecInput<'_, Self>>,
+    ) -> Result<Vec<Self::Buffer>> {
+        let refs: Vec<&xla::PjRtBuffer> =
+            inputs.iter().map(|i| i.buffer()).collect();
+        let result = exe.execute_b(&refs)?;
+        drop(refs);
+        drop(inputs); // donated buffers are freed here
+        result
+            .into_iter()
+            .next()
+            .filter(|row| !row.is_empty())
+            .context("executable returned no result")
+    }
+
+    fn all_reduce_sum(&self, inputs: &[&Self::Buffer]) -> Result<Vec<Self::Buffer>> {
+        xla::PjRtClient::all_reduce_sum(self, inputs)
+    }
+
+    fn transfer_stats(&self) -> xla::TransferSnapshot {
+        xla::PjRtClient::transfer_stats(self)
+    }
+
+    fn device_transfer_stats(&self, device: usize) -> Result<xla::TransferSnapshot> {
+        xla::PjRtClient::device_transfer_stats(self, device)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AnyBackend: runtime-selected dispatch (the default type parameter)
+// ---------------------------------------------------------------------------
+
+/// The environment variable that selects the backend for
+/// `Runtime::new`/`Runtime::with_devices` (`sim` | `strict`, plus
+/// `pjrt` behind the feature; default `sim`).
+pub const BACKEND_ENV: &str = "TOPKAST_BACKEND";
+
+/// The backend name `TOPKAST_BACKEND` currently selects (without
+/// constructing a client) — bench/CI tagging for code paths that
+/// build their runtimes later or not at all.
+pub fn env_backend_name() -> &'static str {
+    match std::env::var(BACKEND_ENV).as_deref() {
+        Ok("strict") => "strict",
+        #[cfg(feature = "pjrt")]
+        Ok("pjrt") => "pjrt",
+        _ => "sim",
+    }
+}
+
+/// Runtime-dispatched backend: the default `B` everywhere, so one
+/// binary serves every variant and the env switch reaches all suites.
+#[derive(Clone)]
+pub enum AnyBackend {
+    Sim(xla::PjRtClient),
+    Strict(StrictBackend),
+    #[cfg(feature = "pjrt")]
+    Pjrt(super::pjrt::PjrtBackend),
+}
+
+/// A buffer of whichever backend [`AnyBackend`] dispatches to. Mixing
+/// variants across a client is a hard error, never a silent coercion.
+#[derive(Clone)]
+pub enum AnyBuffer {
+    Sim(xla::PjRtBuffer),
+    Strict(StrictBuffer),
+    #[cfg(feature = "pjrt")]
+    Pjrt(super::pjrt::PjrtBuffer),
+}
+
+pub enum AnyExecutable {
+    Sim(xla::PjRtLoadedExecutable),
+    Strict(StrictExecutable),
+    #[cfg(feature = "pjrt")]
+    Pjrt(super::pjrt::PjrtExecutable),
+}
+
+fn cross_backend(expected: &'static str, what: &'static str) -> anyhow::Error {
+    anyhow::anyhow!(
+        "cross-backend mix: the {expected} backend was handed a {what} \
+         from a different backend variant"
+    )
+}
+
+impl AnyBackend {
+    /// Build the backend `TOPKAST_BACKEND` selects, over a simulated
+    /// device set of the given size.
+    pub fn from_env(devices: usize) -> Result<AnyBackend> {
+        match std::env::var(BACKEND_ENV) {
+            Err(std::env::VarError::NotPresent) => Self::from_name("sim", devices),
+            Err(e) => bail!("reading {BACKEND_ENV}: {e}"),
+            Ok(name) => Self::from_name(&name, devices),
+        }
+    }
+
+    /// Build a backend by name (`sim` | `strict`, plus `pjrt` behind
+    /// the feature). The parsing half of [`AnyBackend::from_env`],
+    /// testable without touching the process environment.
+    pub fn from_name(name: &str, devices: usize) -> Result<AnyBackend> {
+        match name {
+            "" | "sim" => Ok(AnyBackend::Sim(xla::PjRtClient::cpu_with_devices(devices)?)),
+            "strict" => Ok(AnyBackend::Strict(StrictBackend::with_devices(devices)?)),
+            #[cfg(feature = "pjrt")]
+            "pjrt" => Ok(AnyBackend::Pjrt(super::pjrt::PjrtBackend::with_devices(
+                devices,
+            )?)),
+            other => bail!(
+                "unknown {BACKEND_ENV} value {other:?} (expected \"sim\" or \
+                 \"strict\"{})",
+                if cfg!(feature = "pjrt") { " or \"pjrt\"" } else { "" }
+            ),
+        }
+    }
+
+    /// The raw host-sim backend (no donation enforcement).
+    pub fn sim(devices: usize) -> Result<AnyBackend> {
+        Self::from_name("sim", devices)
+    }
+
+    /// The donation-enforcing wrapper over the host-sim.
+    pub fn strict(devices: usize) -> Result<AnyBackend> {
+        Self::from_name("strict", devices)
+    }
+}
+
+impl BufferOps for AnyBuffer {
+    fn element_count(&self) -> usize {
+        match self {
+            AnyBuffer::Sim(b) => b.element_count(),
+            AnyBuffer::Strict(b) => b.element_count(),
+            #[cfg(feature = "pjrt")]
+            AnyBuffer::Pjrt(b) => b.element_count(),
+        }
+    }
+
+    fn element_type(&self) -> Option<xla::ElemType> {
+        match self {
+            AnyBuffer::Sim(b) => b.element_type(),
+            AnyBuffer::Strict(b) => b.element_type(),
+            #[cfg(feature = "pjrt")]
+            AnyBuffer::Pjrt(b) => b.element_type(),
+        }
+    }
+
+    fn is_tuple(&self) -> bool {
+        match self {
+            AnyBuffer::Sim(b) => b.is_tuple(),
+            AnyBuffer::Strict(b) => b.is_tuple(),
+            #[cfg(feature = "pjrt")]
+            AnyBuffer::Pjrt(b) => b.is_tuple(),
+        }
+    }
+
+    fn device(&self) -> usize {
+        match self {
+            AnyBuffer::Sim(b) => BufferOps::device(b),
+            AnyBuffer::Strict(b) => b.device(),
+            #[cfg(feature = "pjrt")]
+            AnyBuffer::Pjrt(b) => b.device(),
+        }
+    }
+
+    fn to_literal_sync(&self) -> Result<xla::Literal> {
+        match self {
+            AnyBuffer::Sim(b) => BufferOps::to_literal_sync(b),
+            AnyBuffer::Strict(b) => b.to_literal_sync(),
+            #[cfg(feature = "pjrt")]
+            AnyBuffer::Pjrt(b) => b.to_literal_sync(),
+        }
+    }
+
+    fn gather_to_host(&self, indices: &[u32]) -> Result<Vec<f32>> {
+        match self {
+            AnyBuffer::Sim(b) => BufferOps::gather_to_host(b, indices),
+            AnyBuffer::Strict(b) => b.gather_to_host(indices),
+            #[cfg(feature = "pjrt")]
+            AnyBuffer::Pjrt(b) => b.gather_to_host(indices),
+        }
+    }
+
+    fn tuple_parts(self) -> Result<Vec<Self>> {
+        match self {
+            AnyBuffer::Sim(b) => Ok(BufferOps::tuple_parts(b)?
+                .into_iter()
+                .map(AnyBuffer::Sim)
+                .collect()),
+            AnyBuffer::Strict(b) => Ok(b
+                .tuple_parts()?
+                .into_iter()
+                .map(AnyBuffer::Strict)
+                .collect()),
+            #[cfg(feature = "pjrt")]
+            AnyBuffer::Pjrt(b) => Ok(b
+                .tuple_parts()?
+                .into_iter()
+                .map(AnyBuffer::Pjrt)
+                .collect()),
+        }
+    }
+
+    fn scatter_mask_update(self, added: &[u32], removed: &[u32]) -> Result<Self> {
+        match self {
+            AnyBuffer::Sim(b) => {
+                Ok(AnyBuffer::Sim(BufferOps::scatter_mask_update(b, added, removed)?))
+            }
+            AnyBuffer::Strict(b) => {
+                Ok(AnyBuffer::Strict(b.scatter_mask_update(added, removed)?))
+            }
+            #[cfg(feature = "pjrt")]
+            AnyBuffer::Pjrt(b) => {
+                Ok(AnyBuffer::Pjrt(b.scatter_mask_update(added, removed)?))
+            }
+        }
+    }
+
+    fn debug_read_f32(&self) -> Option<Vec<f32>> {
+        match self {
+            AnyBuffer::Sim(b) => BufferOps::debug_read_f32(b),
+            AnyBuffer::Strict(b) => b.debug_read_f32(),
+            #[cfg(feature = "pjrt")]
+            AnyBuffer::Pjrt(b) => b.debug_read_f32(),
+        }
+    }
+}
+
+impl Backend for AnyBackend {
+    type Client = AnyBackend;
+    type Buffer = AnyBuffer;
+    type Executable = AnyExecutable;
+
+    fn name(&self) -> &'static str {
+        match self {
+            AnyBackend::Sim(c) => c.name(),
+            AnyBackend::Strict(c) => Backend::name(c),
+            #[cfg(feature = "pjrt")]
+            AnyBackend::Pjrt(c) => Backend::name(c),
+        }
+    }
+
+    fn platform_name(&self) -> String {
+        match self {
+            AnyBackend::Sim(c) => Backend::platform_name(c),
+            AnyBackend::Strict(c) => Backend::platform_name(c),
+            #[cfg(feature = "pjrt")]
+            AnyBackend::Pjrt(c) => Backend::platform_name(c),
+        }
+    }
+
+    fn device_count(&self) -> usize {
+        match self {
+            AnyBackend::Sim(c) => Backend::device_count(c),
+            AnyBackend::Strict(c) => Backend::device_count(c),
+            #[cfg(feature = "pjrt")]
+            AnyBackend::Pjrt(c) => Backend::device_count(c),
+        }
+    }
+
+    fn client(&self) -> Self::Client {
+        self.clone()
+    }
+
+    fn buffer_from_host_buffer<T: xla::NativeType>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        device: Option<usize>,
+    ) -> Result<Self::Buffer> {
+        match self {
+            AnyBackend::Sim(c) => Ok(AnyBuffer::Sim(Backend::buffer_from_host_buffer(
+                c, data, dims, device,
+            )?)),
+            AnyBackend::Strict(c) => {
+                Ok(AnyBuffer::Strict(c.buffer_from_host_buffer(data, dims, device)?))
+            }
+            #[cfg(feature = "pjrt")]
+            AnyBackend::Pjrt(c) => {
+                Ok(AnyBuffer::Pjrt(c.buffer_from_host_buffer(data, dims, device)?))
+            }
+        }
+    }
+
+    fn mask_from_indices(
+        &self,
+        dims: &[usize],
+        indices: &[u32],
+        device: Option<usize>,
+    ) -> Result<Self::Buffer> {
+        match self {
+            AnyBackend::Sim(c) => Ok(AnyBuffer::Sim(Backend::mask_from_indices(
+                c, dims, indices, device,
+            )?)),
+            AnyBackend::Strict(c) => {
+                Ok(AnyBuffer::Strict(c.mask_from_indices(dims, indices, device)?))
+            }
+            #[cfg(feature = "pjrt")]
+            AnyBackend::Pjrt(c) => {
+                Ok(AnyBuffer::Pjrt(c.mask_from_indices(dims, indices, device)?))
+            }
+        }
+    }
+
+    fn compile(&self, comp: &xla::XlaComputation) -> Result<Self::Executable> {
+        match self {
+            AnyBackend::Sim(c) => Ok(AnyExecutable::Sim(Backend::compile(c, comp)?)),
+            AnyBackend::Strict(c) => Ok(AnyExecutable::Strict(c.compile(comp)?)),
+            #[cfg(feature = "pjrt")]
+            AnyBackend::Pjrt(c) => Ok(AnyExecutable::Pjrt(c.compile(comp)?)),
+        }
+    }
+
+    fn execute(
+        &self,
+        exe: &Self::Executable,
+        inputs: Vec<ExecInput<'_, Self>>,
+    ) -> Result<Vec<Self::Buffer>> {
+        match (self, exe) {
+            (AnyBackend::Sim(c), AnyExecutable::Sim(e)) => {
+                let mut unwrapped: Vec<ExecInput<'_, xla::PjRtClient>> =
+                    Vec::with_capacity(inputs.len());
+                for input in &inputs {
+                    unwrapped.push(match input {
+                        ExecInput::Donate(AnyBuffer::Sim(b)) => {
+                            // the outer vec keeps the wrapper alive for
+                            // the call; dropping it below completes the
+                            // donation
+                            ExecInput::Borrow(b)
+                        }
+                        ExecInput::Borrow(AnyBuffer::Sim(b)) => ExecInput::Borrow(b),
+                        _ => return Err(cross_backend("sim", "buffer")),
+                    });
+                }
+                let outs = Backend::execute(c, e, unwrapped)?;
+                drop(inputs);
+                Ok(outs.into_iter().map(AnyBuffer::Sim).collect())
+            }
+            (AnyBackend::Strict(c), AnyExecutable::Strict(e)) => {
+                let mut unwrapped: Vec<ExecInput<'_, StrictBackend>> =
+                    Vec::with_capacity(inputs.len());
+                for input in inputs {
+                    unwrapped.push(match input {
+                        ExecInput::Donate(AnyBuffer::Strict(b)) => ExecInput::Donate(b),
+                        ExecInput::Borrow(AnyBuffer::Strict(b)) => ExecInput::Borrow(b),
+                        _ => return Err(cross_backend("strict", "buffer")),
+                    });
+                }
+                Ok(c.execute(e, unwrapped)?
+                    .into_iter()
+                    .map(AnyBuffer::Strict)
+                    .collect())
+            }
+            #[cfg(feature = "pjrt")]
+            (AnyBackend::Pjrt(c), AnyExecutable::Pjrt(e)) => {
+                let mut unwrapped: Vec<ExecInput<'_, super::pjrt::PjrtBackend>> =
+                    Vec::with_capacity(inputs.len());
+                for input in inputs {
+                    unwrapped.push(match input {
+                        ExecInput::Donate(AnyBuffer::Pjrt(b)) => ExecInput::Donate(b),
+                        ExecInput::Borrow(AnyBuffer::Pjrt(b)) => ExecInput::Borrow(b),
+                        _ => return Err(cross_backend("pjrt", "buffer")),
+                    });
+                }
+                Ok(c.execute(e, unwrapped)?
+                    .into_iter()
+                    .map(AnyBuffer::Pjrt)
+                    .collect())
+            }
+            _ => Err(cross_backend(self.name(), "executable")),
+        }
+    }
+
+    fn all_reduce_sum(&self, inputs: &[&Self::Buffer]) -> Result<Vec<Self::Buffer>> {
+        match self {
+            AnyBackend::Sim(c) => {
+                let refs = inputs
+                    .iter()
+                    .map(|b| match b {
+                        AnyBuffer::Sim(b) => Ok(b),
+                        _ => Err(cross_backend("sim", "buffer")),
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(Backend::all_reduce_sum(c, &refs)?
+                    .into_iter()
+                    .map(AnyBuffer::Sim)
+                    .collect())
+            }
+            AnyBackend::Strict(c) => {
+                let refs = inputs
+                    .iter()
+                    .map(|b| match b {
+                        AnyBuffer::Strict(b) => Ok(b),
+                        _ => Err(cross_backend("strict", "buffer")),
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(c.all_reduce_sum(&refs)?
+                    .into_iter()
+                    .map(AnyBuffer::Strict)
+                    .collect())
+            }
+            #[cfg(feature = "pjrt")]
+            AnyBackend::Pjrt(c) => {
+                let refs = inputs
+                    .iter()
+                    .map(|b| match b {
+                        AnyBuffer::Pjrt(b) => Ok(b),
+                        _ => Err(cross_backend("pjrt", "buffer")),
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(c.all_reduce_sum(&refs)?
+                    .into_iter()
+                    .map(AnyBuffer::Pjrt)
+                    .collect())
+            }
+        }
+    }
+
+    fn transfer_stats(&self) -> xla::TransferSnapshot {
+        match self {
+            AnyBackend::Sim(c) => Backend::transfer_stats(c),
+            AnyBackend::Strict(c) => Backend::transfer_stats(c),
+            #[cfg(feature = "pjrt")]
+            AnyBackend::Pjrt(c) => Backend::transfer_stats(c),
+        }
+    }
+
+    fn device_transfer_stats(&self, device: usize) -> Result<xla::TransferSnapshot> {
+        match self {
+            AnyBackend::Sim(c) => Backend::device_transfer_stats(c, device),
+            AnyBackend::Strict(c) => Backend::device_transfer_stats(c, device),
+            #[cfg(feature = "pjrt")]
+            AnyBackend::Pjrt(c) => Backend::device_transfer_stats(c, device),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_names_resolve_without_the_environment() {
+        assert_eq!(AnyBackend::from_name("sim", 1).unwrap().name(), "sim");
+        assert_eq!(AnyBackend::from_name("", 1).unwrap().name(), "sim");
+        assert_eq!(AnyBackend::from_name("strict", 2).unwrap().name(), "strict");
+        let err = AnyBackend::from_name("vulkan", 1).unwrap_err().to_string();
+        assert!(err.contains("TOPKAST_BACKEND"), "{err}");
+        assert!(err.contains("vulkan"), "{err}");
+    }
+
+    #[test]
+    fn both_in_crate_backends_present_the_same_platform() {
+        // suites that assert on the platform string must not fork on
+        // the backend switch — strict is the same simulated device
+        let sim = AnyBackend::sim(1).unwrap();
+        let strict = AnyBackend::strict(1).unwrap();
+        assert_eq!(sim.platform_name(), strict.platform_name());
+        assert_eq!(sim.device_count(), strict.device_count());
+    }
+
+    #[test]
+    fn cross_backend_buffers_are_rejected() {
+        let sim = AnyBackend::sim(1).unwrap();
+        let strict = AnyBackend::strict(1).unwrap();
+        let b = strict.buffer_from_host_buffer::<f32>(&[1.0], &[1], None).unwrap();
+        let err = sim.all_reduce_sum(&[&b]).unwrap_err().to_string();
+        assert!(err.contains("cross-backend"), "{err}");
+    }
+
+    #[test]
+    fn metering_is_identical_across_sim_and_strict() {
+        let sim = AnyBackend::sim(1).unwrap();
+        let strict = AnyBackend::strict(1).unwrap();
+        for backend in [&sim, &strict] {
+            backend
+                .buffer_from_host_buffer::<f32>(&[1.0, 2.0, 3.0], &[3], None)
+                .unwrap();
+            backend.mask_from_indices(&[4], &[1, 3], None).unwrap();
+        }
+        assert_eq!(sim.transfer_stats(), strict.transfer_stats());
+        assert_eq!(sim.transfer_stats().h2d_bytes, 12 + 8);
+    }
+}

@@ -1,42 +1,49 @@
-//! PJRT wrapper: load HLO-text artifacts, compile once, execute many.
+//! Backend wrapper: load HLO-text artifacts, compile once, execute many.
 //!
 //! Pattern from /opt/xla-example/load_hlo: text → HloModuleProto →
-//! XlaComputation → PjRtLoadedExecutable. Artifacts are lowered with
+//! XlaComputation → compiled executable. Artifacts are lowered with
 //! return_tuple=True, so every execution yields one tuple result that
 //! we decompose into the manifest's declared outputs.
+//!
+//! Everything here is generic over [`Backend`] (default:
+//! [`AnyBackend`], selected by `TOPKAST_BACKEND`); buffer ownership
+//! follows the donation contract in [`super::backend`].
 //!
 //! Two execution paths:
 //!
 //! * [`Executable::run_device`] — buffer-in/buffer-out. Inputs may be
-//!   persistent device buffers ([`DeviceInput::Resident`]) or borrowed
-//!   host slices uploaded on the spot ([`DeviceInput::Host`]); outputs
-//!   come back as device buffers the caller can feed into the next
-//!   execution or selectively download. This is the hot path the
+//!   persistent device buffers ([`DeviceInput::Resident`], borrowed
+//!   and left valid), resident buffers *donated* to the execution
+//!   ([`DeviceInput::Donate`] — how the trainer chains step N's θ/opt
+//!   into step N+1), or borrowed host slices uploaded on the spot
+//!   ([`DeviceInput::Host`], the upload is donated); outputs come back
+//!   as device buffers the caller owns. This is the hot path the
 //!   device-resident trainer (`runtime::device_state`) drives.
 //! * [`Executable::run_borrowed`] / [`Executable::run`] — the
 //!   host-round-trip convenience path: upload everything, download
 //!   every output. Built on `run_device`.
 
 use std::collections::BTreeMap;
-use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use super::backend::{AnyBackend, Backend, BufferOps, ExecInput};
 use super::manifest::{ArtifactSpec, Dtype, IoSpec};
 use crate::tensor::{HostTensor, Shape, TensorData};
 use crate::util::timer::Stopwatch;
 use crate::xla;
 
-/// Shared PJRT client (CPU).
-pub struct Runtime {
-    client: xla::PjRtClient,
+/// Shared backend client plus a compile cache.
+pub struct Runtime<B: Backend = AnyBackend> {
+    client: B,
     /// Compiled executables keyed by artifact path.
-    cache: BTreeMap<String, Executable>,
+    cache: BTreeMap<String, Executable<B>>,
 }
 
 /// One compiled artifact plus its IO signature.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
+pub struct Executable<B: Backend = AnyBackend> {
+    exe: B::Executable,
+    client: B,
     pub spec: ArtifactSpec,
     pub compile_ms: f64,
 }
@@ -69,29 +76,50 @@ impl<'a> From<&'a HostTensor> for TensorRef<'a> {
     }
 }
 
-/// One input position of a device execution: either state that already
-/// lives on the device (no transfer) or host data streamed up for this
-/// call (batches, step scalars).
-pub enum DeviceInput<'a> {
-    Resident(&'a xla::PjRtBuffer),
+/// One input position of a device execution, with its ownership mode.
+pub enum DeviceInput<'a, B: Backend = AnyBackend> {
+    /// Device state the execution reads and leaves valid (masks,
+    /// params under eval/grad_norms — the concurrent-read escape
+    /// hatch).
+    Resident(&'a B::Buffer),
+    /// Device state whose ownership transfers to the execution (the
+    /// θ/opt chaining path: step N's outputs are consumed by step
+    /// N+1). The handle — and every clone — is dead afterwards.
+    Donate(B::Buffer),
+    /// Host data streamed up for this call (batches, step scalars);
+    /// the upload buffer is donated to the execution.
     Host(TensorRef<'a>),
 }
 
-impl Runtime {
+impl Runtime<AnyBackend> {
     pub fn new() -> Result<Self> {
         Self::with_devices(1)
     }
 
     /// A runtime over a simulated device set of the given size (one
-    /// device per data-parallel replica; see `runtime::replicated`).
+    /// device per data-parallel replica; see `runtime::replicated`),
+    /// on the backend `TOPKAST_BACKEND` selects (default `sim`).
     pub fn with_devices(devices: usize) -> Result<Self> {
-        let client = xla::PjRtClient::cpu_with_devices(devices.max(1))
+        let client = AnyBackend::from_env(devices.max(1))
             .context("creating PJRT CPU client")?;
-        Ok(Runtime { client, cache: BTreeMap::new() })
+        Ok(Runtime::from_backend(client))
+    }
+}
+
+impl<B: Backend> Runtime<B> {
+    /// A runtime over an explicitly-constructed backend (tests pin the
+    /// variant without touching the process environment).
+    pub fn from_backend(client: B) -> Self {
+        Runtime { client, cache: BTreeMap::new() }
     }
 
     pub fn platform(&self) -> String {
         self.client.platform_name()
+    }
+
+    /// The short backend identifier (`"sim"`, `"strict"`, ...).
+    pub fn backend_name(&self) -> &'static str {
+        self.client.name()
     }
 
     /// Number of addressable devices behind this runtime.
@@ -101,7 +129,7 @@ impl Runtime {
 
     /// The underlying client (device-state subsystems hold a clone so
     /// they can upload/download against the same metered device).
-    pub fn client(&self) -> &xla::PjRtClient {
+    pub fn client(&self) -> &B {
         &self.client
     }
 
@@ -117,7 +145,7 @@ impl Runtime {
     }
 
     /// Load + compile an artifact (cached by path).
-    pub fn load(&mut self, spec: &ArtifactSpec) -> Result<&Executable> {
+    pub fn load(&mut self, spec: &ArtifactSpec) -> Result<&Executable<B>> {
         let key = spec.file.to_string_lossy().to_string();
         if !self.cache.contains_key(&key) {
             let exe = self.compile(spec)?;
@@ -130,7 +158,7 @@ impl Runtime {
     /// lets a caller hold several executables at once (the replicated
     /// step needs grad + apply together). Artifacts are loaded once at
     /// trainer construction, so a miss here is a wiring bug.
-    pub fn get(&self, spec: &ArtifactSpec) -> Result<&Executable> {
+    pub fn get(&self, spec: &ArtifactSpec) -> Result<&Executable<B>> {
         let key = spec.file.to_string_lossy().to_string();
         self.cache.get(&key).with_context(|| {
             format!("artifact {key:?} not loaded (Runtime::load it first)")
@@ -140,19 +168,28 @@ impl Runtime {
     /// Seed the executable cache directly (synthetic in-memory models;
     /// see `runtime::synthetic`). Subsequent `load` calls for the same
     /// artifact path return this executable without touching disk.
-    pub fn preload(&mut self, exe: Executable) {
+    pub fn preload(&mut self, exe: Executable<B>) {
         let key = exe.spec.file.to_string_lossy().to_string();
         self.cache.insert(key, exe);
     }
 
-    fn compile(&self, spec: &ArtifactSpec) -> Result<Executable> {
-        let path: &Path = &spec.file;
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not utf-8")?,
-        )
-        .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        self.compile_computation(&comp, spec)
+    fn compile(&self, spec: &ArtifactSpec) -> Result<Executable<B>> {
+        let sw = Stopwatch::start();
+        let exe = self
+            .client
+            .compile_hlo_text(&spec.file)
+            .with_context(|| format!("compiling {:?}", spec.file))?;
+        crate::debug!(
+            "compiled {} in {:.0} ms",
+            spec.file.file_name().unwrap_or_default().to_string_lossy(),
+            sw.elapsed_ms()
+        );
+        Ok(Executable {
+            exe,
+            client: self.client.clone(),
+            spec: spec.clone(),
+            compile_ms: sw.elapsed_ms(),
+        })
     }
 
     /// Compile an already-built XlaComputation against an IO signature
@@ -161,7 +198,7 @@ impl Runtime {
         &self,
         comp: &xla::XlaComputation,
         spec: &ArtifactSpec,
-    ) -> Result<Executable> {
+    ) -> Result<Executable<B>> {
         let sw = Stopwatch::start();
         let exe = self
             .client
@@ -172,14 +209,19 @@ impl Runtime {
             spec.file.file_name().unwrap_or_default().to_string_lossy(),
             sw.elapsed_ms()
         );
-        Ok(Executable { exe, spec: spec.clone(), compile_ms: sw.elapsed_ms() })
+        Ok(Executable {
+            exe,
+            client: self.client.clone(),
+            spec: spec.clone(),
+            compile_ms: sw.elapsed_ms(),
+        })
     }
 }
 
-impl Executable {
+impl<B: Backend> Executable<B> {
     /// The client this executable runs on.
-    pub fn client(&self) -> xla::PjRtClient {
-        self.exe.client()
+    pub fn client(&self) -> B {
+        self.client.clone()
     }
 
     /// Execute with host tensors; returns outputs in manifest order.
@@ -204,42 +246,42 @@ impl Executable {
     /// Host-round-trip path: upload every input from borrowed slices,
     /// download every output.
     pub fn run_borrowed(&self, inputs: &[TensorRef<'_>]) -> Result<Vec<HostTensor>> {
-        let wrapped: Vec<DeviceInput<'_>> =
+        let wrapped: Vec<DeviceInput<'_, B>> =
             inputs.iter().map(|t| DeviceInput::Host(*t)).collect();
-        let outs = self.run_device(&wrapped)?;
+        let outs = self.run_device(wrapped)?;
         outs.iter()
             .zip(&self.spec.outputs)
             .map(|(buf, io)| self.download(buf, io))
             .collect()
     }
 
-    /// Buffer-in/buffer-out execution: resident inputs are passed
-    /// through with zero transfer, host inputs are uploaded, and the
-    /// result tuple is split into per-output device buffers *without*
-    /// a literal round-trip. The caller owns the returned buffers —
-    /// feed them back as `Resident` inputs or `download` selectively.
-    ///
-    /// Uploads go through `buffer_from_host_buffer` + `execute_b`
-    /// rather than `execute(literals)`: the vendored xla_rs shim's
-    /// `execute` leaks every input buffer it creates (`buffer.release()`
-    /// with no owner — ~2 MB/step for lm_tiny, OOM-killing long
-    /// sweeps), and the literal path also costs an extra host copy.
-    /// Rust-owned `PjRtBuffer`s drop (and free) deterministically.
-    pub fn run_device(
-        &self,
-        inputs: &[DeviceInput<'_>],
-    ) -> Result<Vec<xla::PjRtBuffer>> {
+    /// Buffer-in/buffer-out execution: resident inputs are borrowed
+    /// (zero transfer), donated inputs are consumed by the execution,
+    /// host inputs are uploaded, and the result tuple is split into
+    /// per-output device buffers *without* a literal round-trip. The
+    /// caller owns the returned buffers — chain them back as `Donate`
+    /// inputs or `download` selectively.
+    pub fn run_device(&self, inputs: Vec<DeviceInput<'_, B>>) -> Result<Vec<B::Buffer>> {
         self.run_device_on(inputs, 0)
     }
 
     /// [`Executable::run_device`] targeting a specific device: streamed
-    /// inputs upload to `device`, and every resident input must already
-    /// live there (one replica's state never silently migrates).
+    /// inputs upload to `device`, and every resident/donated input must
+    /// already live there (one replica's state never silently
+    /// migrates).
+    ///
+    /// Uploads go through `buffer_from_host_buffer` + buffer-level
+    /// execute rather than `execute(literals)`: the vendored xla_rs
+    /// shim's `execute` leaks every input buffer it creates
+    /// (`buffer.release()` with no owner — ~2 MB/step for lm_tiny,
+    /// OOM-killing long sweeps), and the literal path also costs an
+    /// extra host copy. Rust-owned buffers drop (and free)
+    /// deterministically.
     pub fn run_device_on(
         &self,
-        inputs: &[DeviceInput<'_>],
+        inputs: Vec<DeviceInput<'_, B>>,
         device: usize,
-    ) -> Result<Vec<xla::PjRtBuffer>> {
+    ) -> Result<Vec<B::Buffer>> {
         if inputs.len() != self.spec.inputs.len() {
             bail!(
                 "{:?}: expected {} inputs, got {}",
@@ -248,44 +290,50 @@ impl Executable {
                 inputs.len()
             );
         }
-        let client = self.exe.client();
-        // Pass 1: upload every streamed input (owned buffers, parallel
-        // to `inputs` so pass 2 can borrow them in artifact order).
-        let mut uploads: Vec<Option<xla::PjRtBuffer>> =
-            Vec::with_capacity(inputs.len());
-        for (input, io) in inputs.iter().zip(&self.spec.inputs) {
+        let validate_resident = |buf: &B::Buffer, io: &IoSpec| -> Result<()> {
+            if buf.element_count() != io.shape.numel() {
+                bail!(
+                    "input {:?}: resident buffer has {} elements, \
+                     expected shape {}",
+                    io.name,
+                    buf.element_count(),
+                    io.shape
+                );
+            }
+            let want = match io.dtype {
+                Dtype::F32 => xla::ElemType::F32,
+                Dtype::I32 => xla::ElemType::I32,
+            };
+            if buf.element_type() != Some(want) {
+                bail!(
+                    "input {:?}: resident buffer dtype {:?} != artifact {:?}",
+                    io.name,
+                    buf.element_type(),
+                    io.dtype
+                );
+            }
+            if buf.device() != device {
+                bail!(
+                    "input {:?}: resident buffer on device {}, \
+                     execution targets device {device}",
+                    io.name,
+                    buf.device()
+                );
+            }
+            Ok(())
+        };
+        // Validate and marshal in one pass over artifact order; host
+        // uploads become owned buffers donated to the execution.
+        let mut exec_inputs: Vec<ExecInput<'_, B>> = Vec::with_capacity(inputs.len());
+        for (input, io) in inputs.into_iter().zip(&self.spec.inputs) {
             match input {
                 DeviceInput::Resident(buf) => {
-                    if buf.element_count() != io.shape.numel() {
-                        bail!(
-                            "input {:?}: resident buffer has {} elements, \
-                             expected shape {}",
-                            io.name,
-                            buf.element_count(),
-                            io.shape
-                        );
-                    }
-                    let want = match io.dtype {
-                        Dtype::F32 => xla::ElemType::F32,
-                        Dtype::I32 => xla::ElemType::I32,
-                    };
-                    if buf.element_type() != Some(want) {
-                        bail!(
-                            "input {:?}: resident buffer dtype {:?} != artifact {:?}",
-                            io.name,
-                            buf.element_type(),
-                            io.dtype
-                        );
-                    }
-                    if buf.device() != device {
-                        bail!(
-                            "input {:?}: resident buffer on device {}, \
-                             execution targets device {device}",
-                            io.name,
-                            buf.device()
-                        );
-                    }
-                    uploads.push(None);
+                    validate_resident(buf, io)?;
+                    exec_inputs.push(ExecInput::Borrow(buf));
+                }
+                DeviceInput::Donate(buf) => {
+                    validate_resident(&buf, io)?;
+                    exec_inputs.push(ExecInput::Donate(buf));
                 }
                 DeviceInput::Host(t) => {
                     if t.len() != io.shape.numel() {
@@ -297,18 +345,20 @@ impl Executable {
                         );
                     }
                     let buf = match (t, io.dtype) {
-                        (TensorRef::F32(v), Dtype::F32) => client
-                            .buffer_from_host_buffer::<f32>(
+                        (TensorRef::F32(v), Dtype::F32) => {
+                            self.client.buffer_from_host_buffer::<f32>(
                                 v,
                                 io.shape.dims(),
                                 Some(device),
-                            )?,
-                        (TensorRef::I32(v), Dtype::I32) => client
-                            .buffer_from_host_buffer::<i32>(
+                            )?
+                        }
+                        (TensorRef::I32(v), Dtype::I32) => {
+                            self.client.buffer_from_host_buffer::<i32>(
                                 v,
                                 io.shape.dims(),
                                 Some(device),
-                            )?,
+                            )?
+                        }
                         (d, want) => bail!(
                             "input {:?}: dtype mismatch: host tensor is {}, \
                              artifact wants {want:?}",
@@ -319,31 +369,15 @@ impl Executable {
                             }
                         ),
                     };
-                    uploads.push(Some(buf));
+                    exec_inputs.push(ExecInput::Donate(buf));
                 }
             }
         }
-        // Pass 2: interleave resident borrows with the fresh uploads.
-        let refs: Vec<&xla::PjRtBuffer> = inputs
-            .iter()
-            .zip(&uploads)
-            .map(|(input, upload)| match input {
-                DeviceInput::Resident(buf) => *buf,
-                DeviceInput::Host(_) => upload.as_ref().expect("uploaded in pass 1"),
-            })
-            .collect();
-        let result = self.exe.execute_b(&refs)?;
-        drop(refs);
-        drop(uploads); // free freshly-uploaded device inputs eagerly
-        let root = result
-            .into_iter()
-            .next()
-            .and_then(|mut v| if v.is_empty() { None } else { Some(v.remove(0)) })
-            .context("executable returned no result")?;
-        let outs = if root.is_tuple() {
-            root.tuple_parts()?
+        let row = self.client.execute(&self.exe, exec_inputs)?;
+        let outs = if row.len() == 1 && row[0].is_tuple() {
+            row.into_iter().next().unwrap().tuple_parts()?
         } else {
-            vec![root]
+            row
         };
         if outs.len() != self.spec.outputs.len() {
             bail!(
@@ -367,7 +401,7 @@ impl Executable {
 
     /// Download one output buffer into a host tensor (metered
     /// device→host transfer).
-    pub fn download(&self, buf: &xla::PjRtBuffer, io: &IoSpec) -> Result<HostTensor> {
+    pub fn download(&self, buf: &B::Buffer, io: &IoSpec) -> Result<HostTensor> {
         let lit = buf.to_literal_sync().context("fetching result literal")?;
         from_literal(&lit, &io.shape, io.dtype)
     }
@@ -391,7 +425,6 @@ fn from_literal(lit: &xla::Literal, shape: &Shape, dtype: Dtype) -> Result<HostT
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::manifest::IoSpec;
 
     /// A trivial in-memory computation (tuple(x + y) over f32[2,2]) so
     /// the runtime plumbing can be tested without python-built artifacts.
@@ -457,7 +490,7 @@ mod tests {
         let before = rt.transfer_stats();
         let host = [5.0f32, 6.0, 7.0, 8.0];
         let outs = exe
-            .run_device(&[
+            .run_device(vec![
                 DeviceInput::Resident(&resident),
                 DeviceInput::Host(TensorRef::F32(&host)),
             ])
@@ -469,6 +502,33 @@ mod tests {
         let t = exe.download(&outs[0], &exe.spec.outputs[0]).unwrap();
         assert_eq!(t.as_f32().unwrap(), &[6.0, 7.0, 8.0, 9.0]);
         assert_eq!(rt.transfer_stats().since(&before).d2h_bytes, 16);
+    }
+
+    #[test]
+    fn run_device_chains_donated_outputs() {
+        // step N's output fed back as a Donate input — the ownership
+        // protocol the training chain runs on
+        let rt = Runtime::new().unwrap();
+        let exe = tiny_executable(&rt);
+        let ones = [1.0f32; 4];
+        let mut acc = exe
+            .run_device(vec![
+                DeviceInput::Host(TensorRef::F32(&ones)),
+                DeviceInput::Host(TensorRef::F32(&ones)),
+            ])
+            .unwrap()
+            .remove(0);
+        for _ in 0..3 {
+            acc = exe
+                .run_device(vec![
+                    DeviceInput::Donate(acc),
+                    DeviceInput::Host(TensorRef::F32(&ones)),
+                ])
+                .unwrap()
+                .remove(0);
+        }
+        let t = exe.download(&acc, &exe.spec.outputs[0]).unwrap();
+        assert_eq!(t.as_f32().unwrap(), &[5.0, 5.0, 5.0, 5.0]);
     }
 
     #[test]

@@ -54,19 +54,22 @@
 
 use anyhow::{bail, Context, Result};
 
+use super::backend::{AnyBackend, Backend, BufferOps};
 use super::client::{DeviceInput, Executable, TensorRef};
 use super::manifest::{EvalLayout, ModelEntry, TrainLayout};
 use crate::sparsity::strategy::Densities;
 use crate::sparsity::topk::k_for_density;
 use crate::sparsity::ParamStore;
 use crate::tensor::{HostTensor, SparseSet};
-use crate::xla;
 
 /// Persistent device buffers for one model's training state, pinned to
 /// one simulated device (a data-parallel run holds one per replica —
-/// see `runtime::replicated`).
-pub struct DeviceState {
-    client: xla::PjRtClient,
+/// see `runtime::replicated`). Generic over the [`Backend`]; buffer
+/// ownership follows the donation contract in `runtime::backend` —
+/// step N's θ/opt are *donated* into step N+1 (never reused), masks
+/// are borrowed per step and consumed only by refresh scatters.
+pub struct DeviceState<B: Backend = AnyBackend> {
+    client: B,
     /// The device every buffer of this state lives on.
     device: usize,
     layout: TrainLayout,
@@ -75,10 +78,10 @@ pub struct DeviceState {
     param_dims: Vec<Vec<usize>>,
     /// Positions of sparse params within spec order (mask ordering).
     sparse_idx: Vec<usize>,
-    params: Vec<xla::PjRtBuffer>,
-    masks_fwd: Vec<xla::PjRtBuffer>,
-    masks_bwd: Vec<xla::PjRtBuffer>,
-    opt: Vec<xla::PjRtBuffer>,
+    params: Vec<B::Buffer>,
+    masks_fwd: Vec<B::Buffer>,
+    masks_bwd: Vec<B::Buffer>,
+    opt: Vec<B::Buffer>,
     /// Host-side record of the index sets currently expanded into
     /// `masks_fwd`/`masks_bwd` (one (fwd, bwd) pair per sparse tensor,
     /// `sparse_idx` order). The delta base for refresh broadcasts and
@@ -87,27 +90,27 @@ pub struct DeviceState {
     installed_masks: Vec<(SparseSet, SparseSet)>,
 }
 
-impl DeviceState {
+impl<B: Backend> DeviceState<B> {
     /// Build the resident state on device 0 and upload the initial
     /// host state.
     pub fn from_host(
-        client: xla::PjRtClient,
+        client: B,
         model: &ModelEntry,
         store: &ParamStore,
         opt: &[Vec<f32>],
-    ) -> Result<DeviceState> {
+    ) -> Result<DeviceState<B>> {
         Self::from_host_on(client, model, store, opt, 0)
     }
 
     /// Build the resident state on a specific device (one replica of a
     /// data-parallel set).
     pub fn from_host_on(
-        client: xla::PjRtClient,
+        client: B,
         model: &ModelEntry,
         store: &ParamStore,
         opt: &[Vec<f32>],
         device: usize,
-    ) -> Result<DeviceState> {
+    ) -> Result<DeviceState<B>> {
         if device >= client.device_count() {
             bail!(
                 "device {device} out of range: client has {} simulated device(s)",
@@ -155,7 +158,7 @@ impl DeviceState {
         self.device
     }
 
-    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<B::Buffer> {
         self.client.buffer_from_host_buffer::<f32>(data, dims, Some(self.device))
     }
 
@@ -185,6 +188,8 @@ impl DeviceState {
         }
         for &i in &self.sparse_idx {
             let e = &store.entries[i];
+            #[cfg(debug_assertions)]
+            debug_assert_untouched_match_init(store, i, &e.values, "host store");
             self.params[i] = self.upload_f32(&e.values, &self.param_dims[i])?;
         }
         Ok(())
@@ -242,13 +247,17 @@ impl DeviceState {
             let (old_fwd, old_bwd) = &self.installed_masks[pos];
             let df = old_fwd.delta_to(m.fwd());
             if !df.is_empty() {
-                self.masks_fwd[pos] =
-                    self.masks_fwd[pos].scatter_mask_update(&df.added, &df.removed)?;
+                // the scatter *consumes* the old mask buffer (donation)
+                // and yields its replacement
+                let cur = self.masks_fwd.remove(pos);
+                self.masks_fwd
+                    .insert(pos, cur.scatter_mask_update(&df.added, &df.removed)?);
             }
             let db = old_bwd.delta_to(m.bwd());
             if !db.is_empty() {
-                self.masks_bwd[pos] =
-                    self.masks_bwd[pos].scatter_mask_update(&db.added, &db.removed)?;
+                let cur = self.masks_bwd.remove(pos);
+                self.masks_bwd
+                    .insert(pos, cur.scatter_mask_update(&db.added, &db.removed)?);
             }
             self.installed_masks[pos] = (m.fwd().clone(), m.bwd().clone());
         }
@@ -312,6 +321,15 @@ impl DeviceState {
                 bail!("param {} size drifted on device", entry.spec.name);
             }
             union.scatter(&values, &mut entry.values);
+            // the O(nnz) sync is exact only because the train artifacts
+            // mask the update with m_bwd; if a future graph writes
+            // outside the masks, the device copy drifts from init at
+            // untouched positions and this check fails loudly instead
+            // of silently corrupting parity
+            #[cfg(debug_assertions)]
+            if let Some(device_values) = self.params[i].debug_read_f32() {
+                debug_assert_untouched_match_init(store, i, &device_values, "device");
+            }
         }
         Ok(())
     }
@@ -362,12 +380,53 @@ impl DeviceState {
         self.sync_opt_to_host(opt)
     }
 
-    /// One buffer-in/buffer-out training step: resident θ/masks/opt,
-    /// streamed batch + scalars, output buffers installed as the new
-    /// resident state, and only the loss scalar downloaded.
+    /// Distribute a train/apply execution's outputs into the resident
+    /// state — the ownership-transferring half of the chaining
+    /// protocol: step N's output buffers *become* step N+1's θ/opt
+    /// without a clone, and the owned loss buffer is handed back.
+    fn chain_outputs(&mut self, outs: Vec<B::Buffer>) -> Result<B::Buffer> {
+        let mut params = Vec::with_capacity(self.layout.out_params.len());
+        let mut opt = Vec::with_capacity(self.layout.out_opt.len());
+        let mut loss = None;
+        for (i, buf) in outs.into_iter().enumerate() {
+            if self.layout.out_params.contains(&i) {
+                params.push(buf);
+            } else if self.layout.out_opt.contains(&i) {
+                opt.push(buf);
+            } else if i == self.layout.out_loss {
+                loss = Some(buf);
+            }
+            // anything else is dropped — frees the device memory
+        }
+        if params.len() != self.layout.out_params.len()
+            || opt.len() != self.layout.out_opt.len()
+        {
+            bail!(
+                "train outputs missing param/opt positions (layout expects \
+                 {}+{}, got {}+{})",
+                self.layout.out_params.len(),
+                self.layout.out_opt.len(),
+                params.len(),
+                opt.len()
+            );
+        }
+        self.params = params;
+        self.opt = opt;
+        loss.context("train outputs missing the loss position")
+    }
+
+    /// One buffer-in/buffer-out training step: resident θ/opt are
+    /// *donated* to the execution (step N's memory backs step N+1's
+    /// outputs — real-PJRT input donation), masks are borrowed, the
+    /// batch + scalars are streamed, output buffers are installed as
+    /// the new resident state, and only the loss scalar is downloaded.
+    ///
+    /// A failed execution leaves this state poisoned (θ/opt were
+    /// donated either way) — callers treat the error as fatal to the
+    /// chain, matching real hardware.
     pub fn train_step(
         &mut self,
-        exe: &Executable,
+        exe: &Executable<B>,
         x: TensorRef<'_>,
         y: TensorRef<'_>,
         scalars: &[[f32; 1]],
@@ -379,45 +438,43 @@ impl DeviceState {
                 scalars.len()
             );
         }
-        let mut inputs: Vec<DeviceInput<'_>> =
+        let params = std::mem::take(&mut self.params);
+        let opt = std::mem::take(&mut self.opt);
+        let mut inputs: Vec<DeviceInput<'_, B>> =
             Vec::with_capacity(self.layout.scalars.end);
-        for buf in &self.params {
-            inputs.push(DeviceInput::Resident(buf));
+        for buf in params {
+            inputs.push(DeviceInput::Donate(buf));
         }
         for buf in self.masks_fwd.iter().chain(&self.masks_bwd) {
             inputs.push(DeviceInput::Resident(buf));
         }
-        for buf in &self.opt {
-            inputs.push(DeviceInput::Resident(buf));
+        for buf in opt {
+            inputs.push(DeviceInput::Donate(buf));
         }
         inputs.push(DeviceInput::Host(x));
         inputs.push(DeviceInput::Host(y));
         for s in scalars {
             inputs.push(DeviceInput::Host(TensorRef::F32(&s[..])));
         }
-        let outs = exe.run_device_on(&inputs, self.device)?;
-        drop(inputs);
-        // chain: step-N outputs become step-N+1 resident inputs
-        self.params = outs[self.layout.out_params.clone()].to_vec();
-        self.opt = outs[self.layout.out_opt.clone()].to_vec();
-        let loss_buf = &outs[self.layout.out_loss];
+        let outs = exe.run_device_on(inputs, self.device)?;
+        let loss_buf = self.chain_outputs(outs)?;
         let loss_io = &exe.spec.outputs[self.layout.out_loss];
-        let loss = exe.download(loss_buf, loss_io)?.as_f32()?[0] as f64;
+        let loss = exe.download(&loss_buf, loss_io)?.as_f32()?[0] as f64;
         Ok(loss)
     }
 
     /// Replicated-apply step: like [`DeviceState::train_step`], but the
     /// batch input positions carry the all-reduced gradient payload
-    /// (resident buffers from `PjRtClient::all_reduce_sum`) instead of
-    /// a host batch. Outputs chain into the resident state as usual;
-    /// the loss buffer is returned *undownloaded* so a replicated
-    /// caller pays the d2h transfer on one replica only.
+    /// (owned buffers from `Backend::all_reduce_sum`, donated here)
+    /// instead of a host batch. Outputs chain into the resident state
+    /// as usual; the loss buffer is returned *undownloaded* so a
+    /// replicated caller pays the d2h transfer on one replica only.
     pub fn apply_step(
         &mut self,
-        exe: &Executable,
-        payload: &[xla::PjRtBuffer],
+        exe: &Executable<B>,
+        payload: Vec<B::Buffer>,
         scalars: &[[f32; 1]],
-    ) -> Result<xla::PjRtBuffer> {
+    ) -> Result<B::Buffer> {
         if payload.len() != self.layout.batch.len() {
             bail!(
                 "expected {} payload buffers (one per batch slot), got {}",
@@ -432,28 +489,27 @@ impl DeviceState {
                 scalars.len()
             );
         }
-        let mut inputs: Vec<DeviceInput<'_>> =
+        let params = std::mem::take(&mut self.params);
+        let opt = std::mem::take(&mut self.opt);
+        let mut inputs: Vec<DeviceInput<'_, B>> =
             Vec::with_capacity(self.layout.scalars.end);
-        for buf in &self.params {
-            inputs.push(DeviceInput::Resident(buf));
+        for buf in params {
+            inputs.push(DeviceInput::Donate(buf));
         }
         for buf in self.masks_fwd.iter().chain(&self.masks_bwd) {
             inputs.push(DeviceInput::Resident(buf));
         }
-        for buf in &self.opt {
-            inputs.push(DeviceInput::Resident(buf));
+        for buf in opt {
+            inputs.push(DeviceInput::Donate(buf));
         }
         for buf in payload {
-            inputs.push(DeviceInput::Resident(buf));
+            inputs.push(DeviceInput::Donate(buf));
         }
         for s in scalars {
             inputs.push(DeviceInput::Host(TensorRef::F32(&s[..])));
         }
-        let outs = exe.run_device_on(&inputs, self.device)?;
-        drop(inputs);
-        self.params = outs[self.layout.out_params.clone()].to_vec();
-        self.opt = outs[self.layout.out_opt.clone()].to_vec();
-        Ok(outs[self.layout.out_loss].clone())
+        let outs = exe.run_device_on(inputs, self.device)?;
+        self.chain_outputs(outs)
     }
 
     /// Download the resident params, masks and optimiser slots as raw
@@ -463,7 +519,7 @@ impl DeviceState {
     pub fn dump_resident(
         &self,
     ) -> Result<(Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<Vec<f32>>)> {
-        let dl = |bufs: &[xla::PjRtBuffer]| -> Result<Vec<Vec<f32>>> {
+        let dl = |bufs: &[B::Buffer]| -> Result<Vec<Vec<f32>>> {
             bufs.iter()
                 .map(|b| b.to_literal_sync()?.to_vec::<f32>())
                 .collect()
@@ -478,16 +534,35 @@ impl DeviceState {
 
     /// Run an eval-convention artifact (eval or grad_norms) against the
     /// resident params + forward masks, streaming only the batch.
+    /// Params/masks are *borrowed* (the concurrent-read escape hatch in
+    /// the donation contract — the training chain still owns them).
     /// Returns all outputs downloaded (they are scalars for eval,
     /// per-tensor |grad| maps for grad_norms — both refresh-cadence
     /// sized, not per-step).
     pub fn run_with_fwd_masks(
         &self,
-        exe: &Executable,
+        exe: &Executable<B>,
         x: TensorRef<'_>,
         y: TensorRef<'_>,
     ) -> Result<Vec<HostTensor>> {
-        let mut inputs: Vec<DeviceInput<'_>> =
+        let outs = self.run_with_fwd_masks_resident(exe, x, y)?;
+        outs.iter()
+            .zip(&exe.spec.outputs)
+            .map(|(buf, io)| exe.download(buf, io))
+            .collect()
+    }
+
+    /// [`DeviceState::run_with_fwd_masks`] without the download: the
+    /// outputs stay device-resident. The replicated grad path uses this
+    /// for eval-convention grad artifacts whose payload feeds the
+    /// all-reduce — nothing may cross back to the host.
+    pub fn run_with_fwd_masks_resident(
+        &self,
+        exe: &Executable<B>,
+        x: TensorRef<'_>,
+        y: TensorRef<'_>,
+    ) -> Result<Vec<B::Buffer>> {
+        let mut inputs: Vec<DeviceInput<'_, B>> =
             Vec::with_capacity(self.eval_layout.batch.end);
         for buf in &self.params {
             inputs.push(DeviceInput::Resident(buf));
@@ -497,11 +572,42 @@ impl DeviceState {
         }
         inputs.push(DeviceInput::Host(x));
         inputs.push(DeviceInput::Host(y));
-        let outs = exe.run_device_on(&inputs, self.device)?;
-        outs.iter()
-            .zip(&exe.spec.outputs)
-            .map(|(buf, io)| exe.download(buf, io))
-            .collect()
+        exe.run_device_on(inputs, self.device)
+    }
+}
+
+/// Debug-only invariant behind the O(nnz) exchange: a position a
+/// sparse tensor's masks have never touched must still hold its init
+/// value (the train artifacts mask every update with m_bwd). `values`
+/// may be the host store's copy or an unmetered device peek; stores
+/// assembled by hand (no init seed) skip the check.
+#[cfg(debug_assertions)]
+fn debug_assert_untouched_match_init(
+    store: &ParamStore,
+    i: usize,
+    values: &[f32],
+    side: &str,
+) {
+    let Some(seed) = store.init_seed() else { return };
+    let entry = &store.entries[i];
+    let Some(masks) = entry.masks.as_ref() else { return };
+    let Ok(init) = store.regenerate_init_values(&entry.spec.name, seed) else {
+        return;
+    };
+    if init.len() != values.len() {
+        return; // size drift is reported by the metered paths
+    }
+    let touched = masks.touched();
+    for (j, (&v, &v0)) in values.iter().zip(&init).enumerate() {
+        if !touched.contains(j as u32) {
+            debug_assert!(
+                v.to_bits() == v0.to_bits(),
+                "param {}[{j}] ({side}): untouched position drifted from its \
+                 init value ({v0} -> {v}) — the update graph wrote outside \
+                 m_bwd, which breaks the O(nnz) refresh sync",
+                entry.spec.name,
+            );
+        }
     }
 }
 

@@ -82,8 +82,10 @@ impl Optimizer {
 /// a per-replica partial-gradient artifact over one batch shard, and a
 /// replicated apply artifact that follows the train input convention
 /// with the batch positions carrying the all-reduced gradient payload
-/// instead of raw examples. Real manifests do not ship these yet; the
-/// synthetic models build them on demand for a concrete replica count.
+/// instead of raw examples. Real manifests ship these under the
+/// optional `"replication"` key (aot.py `--replicas`, eval-convention
+/// grad inputs); the synthetic models build theirs in memory for any
+/// concrete replica count.
 #[derive(Clone, Debug)]
 pub struct ReplicationSpec {
     /// The replica count the shard-sized grad artifact was built for.
@@ -332,11 +334,23 @@ fn parse_model(name: &str, v: &Json, dir: &Path) -> Result<ModelEntry> {
         train: parse_artifact(arts.get("train")?, dir)?,
         eval: parse_artifact(arts.get("eval")?, dir)?,
         grad_norms: parse_artifact(arts.get("grad_norms")?, dir)?,
-        // format-1 manifests carry no replication artifacts; the
-        // synthetic models attach them in memory (runtime::synthetic)
-        replication: None,
+        replication: parse_replication(v, dir)
+            .context("replication artifacts")?,
         config: v.get("config")?.as_obj()?.clone(),
     })
+}
+
+/// The optional `"replication"` block — absent in manifests built
+/// without `--replicas` (and in all pre-existing ones).
+fn parse_replication(v: &Json, dir: &Path) -> Result<Option<ReplicationSpec>> {
+    let Ok(rep) = v.get("replication") else {
+        return Ok(None);
+    };
+    Ok(Some(ReplicationSpec {
+        replicas: rep.get("replicas")?.as_usize()?,
+        grad: parse_artifact(rep.get("grad")?, dir)?,
+        apply: parse_artifact(rep.get("apply")?, dir)?,
+    }))
 }
 
 fn parse_param(v: &Json) -> Result<ParamSpec> {
@@ -520,6 +534,41 @@ mod tests {
             assert_eq!(l.input_index(r, slot), flat, "round-trip at {flat}");
         }
         assert!(m.replicated_layout(0).is_err());
+    }
+
+    #[test]
+    fn replication_block_is_optional_and_parses_when_present() {
+        let art = r#"{"file": "m.hlo.txt", "inputs": [], "outputs": []}"#;
+        let without = format!(
+            r#"{{"kind": "mlp", "optimizer": "sgd", "params": [], "config": {{}},
+                "artifacts": {{"train": {art}, "eval": {art},
+                               "grad_norms": {art}}}}}"#
+        );
+        let m = parse_model("m", &Json::parse(&without).unwrap(), Path::new("a"))
+            .unwrap();
+        assert!(m.replication.is_none());
+
+        let payload = r#"{"file": "m.grad.hlo.txt",
+            "inputs": [{"name": "x", "shape": [2, 8], "dtype": "f32"},
+                       {"name": "y", "shape": [2], "dtype": "i32"}],
+            "outputs": [{"name": "gsum", "shape": [40], "dtype": "f32"},
+                        {"name": "loss_sum", "shape": [1], "dtype": "f32"}]}"#;
+        let with = format!(
+            r#"{{"kind": "mlp", "optimizer": "sgd", "params": [], "config": {{}},
+                "artifacts": {{"train": {art}, "eval": {art},
+                               "grad_norms": {art}}},
+                "replication": {{"replicas": 2, "grad": {payload},
+                                 "apply": {art}}}}}"#
+        );
+        let m =
+            parse_model("m", &Json::parse(&with).unwrap(), Path::new("a")).unwrap();
+        let rep = m.replication.unwrap();
+        assert_eq!(rep.replicas, 2);
+        assert_eq!(rep.grad.file, Path::new("a").join("m.grad.hlo.txt"));
+        assert_eq!(rep.grad.inputs.len(), 2);
+        assert_eq!(rep.grad.outputs[0].name, "gsum");
+        assert_eq!(rep.grad.outputs[0].shape.numel(), 40);
+        assert_eq!(rep.apply.file, Path::new("a").join("m.hlo.txt"));
     }
 
     #[test]

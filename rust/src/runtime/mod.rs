@@ -9,16 +9,23 @@
 //! interchange format because jax ≥ 0.5 emits 64-bit instruction ids
 //! that xla_extension 0.5.1 rejects in proto form.
 //!
-//! See `device_state` for the resident-state protocol and its sync
-//! points, `replicated` for the data-parallel replica protocol on top
-//! of it, and `synthetic` for artifact-free in-memory models.
+//! See `backend` for the trait seam (and its buffer-ownership
+//! contract) everything above executes through, `device_state` for the
+//! resident-state protocol and its sync points, `replicated` for the
+//! data-parallel replica protocol on top of it, and `synthetic` for
+//! artifact-free in-memory models.
 
+pub mod backend;
 pub mod client;
 pub mod device_state;
 pub mod manifest;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 pub mod replicated;
+pub mod strict;
 pub mod synthetic;
 
+pub use backend::{env_backend_name, AnyBackend, Backend, BufferOps, ExecInput, BACKEND_ENV};
 pub use client::{DeviceInput, Executable, Runtime, TensorRef};
 pub use device_state::{DeviceState, TrafficModel};
 pub use manifest::{
@@ -26,4 +33,5 @@ pub use manifest::{
     Optimizer, ParamSpec, ReplicatedLayout, ReplicationSpec, TrainLayout,
 };
 pub use replicated::{shard_ranges, ReplicatedState};
+pub use strict::StrictBackend;
 pub use synthetic::Synthetic;

@@ -1,0 +1,144 @@
+//! Feature-gated landing pad for real PJRT bindings (`--features
+//! pjrt`). No bindings are vendored yet: this module pins the shape a
+//! real backend must take — [`Backend`] over move-only buffers — and
+//! compiles clean under `-D warnings` so the scaffold cannot rot, but
+//! constructing it is an error until the FFI layer lands.
+//!
+//! The buffer and executable types are uninhabited on purpose: every
+//! method body is a `match` on the empty type, so the compiler proves
+//! no code path can reach un-implemented device behaviour. Swapping in
+//! vendored bindings means replacing these enums with FFI handle
+//! wrappers; the trait surface (and the donation contract documented
+//! in [`super::backend`]) is already the one the rest of the crate
+//! trains through.
+
+use anyhow::{bail, Result};
+
+use crate::xla;
+
+use super::backend::{Backend, BufferOps, ExecInput};
+
+/// Placeholder client for the real-PJRT backend. Construction fails
+/// until bindings are vendored.
+#[derive(Clone)]
+pub struct PjrtBackend {
+    _devices: usize,
+}
+
+/// Uninhabited: no real PJRT buffer can exist yet.
+#[derive(Clone)]
+pub enum PjrtBuffer {}
+
+/// Uninhabited: no real PJRT executable can exist yet.
+pub enum PjrtExecutable {}
+
+impl PjrtBackend {
+    pub fn with_devices(_devices: usize) -> Result<PjrtBackend> {
+        bail!(
+            "the pjrt backend is a compile-time scaffold: no vendored PJRT \
+             bindings yet (use TOPKAST_BACKEND=sim or strict)"
+        )
+    }
+}
+
+impl BufferOps for PjrtBuffer {
+    fn element_count(&self) -> usize {
+        match *self {}
+    }
+
+    fn element_type(&self) -> Option<xla::ElemType> {
+        match *self {}
+    }
+
+    fn is_tuple(&self) -> bool {
+        match *self {}
+    }
+
+    fn device(&self) -> usize {
+        match *self {}
+    }
+
+    fn to_literal_sync(&self) -> Result<xla::Literal> {
+        match *self {}
+    }
+
+    fn gather_to_host(&self, _indices: &[u32]) -> Result<Vec<f32>> {
+        match *self {}
+    }
+
+    fn tuple_parts(self) -> Result<Vec<Self>> {
+        match self {}
+    }
+
+    fn scatter_mask_update(self, _added: &[u32], _removed: &[u32]) -> Result<Self> {
+        match self {}
+    }
+
+    fn debug_read_f32(&self) -> Option<Vec<f32>> {
+        match *self {}
+    }
+}
+
+impl Backend for PjrtBackend {
+    type Client = PjrtBackend;
+    type Buffer = PjrtBuffer;
+    type Executable = PjrtExecutable;
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn platform_name(&self) -> String {
+        "pjrt-unbound".to_string()
+    }
+
+    fn device_count(&self) -> usize {
+        self._devices
+    }
+
+    fn client(&self) -> Self::Client {
+        self.clone()
+    }
+
+    fn buffer_from_host_buffer<T: xla::NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<Self::Buffer> {
+        bail!("pjrt backend: no vendored bindings yet")
+    }
+
+    fn mask_from_indices(
+        &self,
+        _dims: &[usize],
+        _indices: &[u32],
+        _device: Option<usize>,
+    ) -> Result<Self::Buffer> {
+        bail!("pjrt backend: no vendored bindings yet")
+    }
+
+    fn compile(&self, _comp: &xla::XlaComputation) -> Result<Self::Executable> {
+        bail!("pjrt backend: no vendored bindings yet")
+    }
+
+    fn execute(
+        &self,
+        exe: &Self::Executable,
+        _inputs: Vec<ExecInput<'_, Self>>,
+    ) -> Result<Vec<Self::Buffer>> {
+        match *exe {}
+    }
+
+    fn all_reduce_sum(&self, _inputs: &[&Self::Buffer]) -> Result<Vec<Self::Buffer>> {
+        bail!("pjrt backend: no vendored bindings yet")
+    }
+
+    fn transfer_stats(&self) -> xla::TransferSnapshot {
+        xla::TransferSnapshot::default()
+    }
+
+    fn device_transfer_stats(&self, _device: usize) -> Result<xla::TransferSnapshot> {
+        bail!("pjrt backend: no vendored bindings yet")
+    }
+}

@@ -60,12 +60,12 @@ use std::ops::Range;
 
 use anyhow::{bail, Context, Result};
 
+use super::backend::{AnyBackend, Backend};
 use super::client::{DeviceInput, Executable, TensorRef};
 use super::device_state::DeviceState;
 use super::manifest::{ModelEntry, ReplicatedLayout, ReplicationSpec};
 use crate::sparsity::ParamStore;
 use crate::tensor::HostTensor;
-use crate::xla;
 
 /// Contiguous batch shards: every index in `0..n` exactly once, shard
 /// sizes differing by at most one (the first `n % replicas` shards take
@@ -88,31 +88,36 @@ pub fn shard_ranges(n: usize, replicas: usize) -> Vec<Range<usize>> {
 
 /// N device-resident state chains advancing in lockstep (see module
 /// docs for the shard → grad → all-reduce → apply protocol).
-pub struct ReplicatedState {
-    client: xla::PjRtClient,
+pub struct ReplicatedState<B: Backend = AnyBackend> {
+    client: B,
     /// One resident chain per replica, canonical order (index =
     /// replica = device).
-    replicas: Vec<DeviceState>,
+    replicas: Vec<DeviceState<B>>,
     /// (replica, tensor)-keyed buffer addressing.
     layout: ReplicatedLayout,
+    /// Whether the grad artifact follows the eval convention
+    /// (θ | m_fwd | batch shard — real AOT manifests) instead of the
+    /// data-only convention (batch shard alone — the synthetic family,
+    /// whose payload is pure data statistics).
+    grad_resident: bool,
     /// Flat f32 elements per replica shard of x and y.
     shard_x: usize,
     shard_y: usize,
 }
 
-impl ReplicatedState {
+impl<B: Backend> ReplicatedState<B> {
     /// Build one resident chain per replica from the host state.
     /// Fails with a clear message when the replica count exceeds the
     /// simulated device set, the model carries no replication
     /// artifacts, they were built for a different replica count, or
     /// the batch does not shard evenly.
     pub fn from_host(
-        client: xla::PjRtClient,
+        client: B,
         model: &ModelEntry,
         store: &ParamStore,
         opt: &[Vec<f32>],
         replicas: usize,
-    ) -> Result<ReplicatedState> {
+    ) -> Result<ReplicatedState<B>> {
         if replicas == 0 {
             bail!("replicated state needs at least one replica");
         }
@@ -125,18 +130,41 @@ impl ReplicatedState {
         }
         let rep = replication_spec(model, replicas)?;
         let layout = model.replicated_layout(replicas)?;
-        // shard shapes: the grad artifact's declared inputs must tile
-        // the train artifact's batch exactly `replicas` times
+        // Two grad conventions: data-only (batch shard alone — the
+        // synthetic family) or eval (θ | m_fwd | batch shard — real AOT
+        // manifests, whose payload is the shard's summed gradient).
+        // Either way the batch shard is the *last* two inputs and the
+        // payload arity must match the apply artifact's batch slots.
         let batch = &model.train.inputs[layout.per_replica.batch.clone()];
-        if rep.grad.inputs.len() != batch.len() {
+        let np = model.params.len();
+        let ns = model.sparse_params().len();
+        let gi = rep.grad.inputs.len();
+        let grad_resident = if gi == batch.len() {
+            false
+        } else if gi == np + ns + batch.len() {
+            true
+        } else {
             bail!(
-                "model {}: grad artifact declares {} inputs, batch has {}",
+                "model {}: grad artifact declares {gi} inputs; expected \
+                 {} (batch shard) or {} (θ | m_fwd | batch shard)",
                 model.name,
-                rep.grad.inputs.len(),
+                batch.len(),
+                np + ns + batch.len()
+            );
+        };
+        if rep.grad.outputs.len() != batch.len() {
+            bail!(
+                "model {}: grad artifact produces {} payload tensors, the \
+                 apply artifact's batch slots absorb exactly {}",
+                model.name,
+                rep.grad.outputs.len(),
                 batch.len()
             );
         }
-        for (shard_io, full_io) in rep.grad.inputs.iter().zip(batch) {
+        // shard shapes: the grad artifact's batch inputs must tile the
+        // train artifact's batch exactly `replicas` times
+        let shard_ios = &rep.grad.inputs[gi - batch.len()..];
+        for (shard_io, full_io) in shard_ios.iter().zip(batch) {
             if shard_io.shape.numel() * replicas != full_io.shape.numel() {
                 bail!(
                     "model {}: batch input {:?} has {} elements, not divisible \
@@ -149,12 +177,12 @@ impl ReplicatedState {
                 );
             }
         }
-        let [x_io, y_io] = rep.grad.inputs.as_slice() else {
+        let [x_io, y_io] = shard_ios else {
             bail!(
-                "model {}: grad artifact declares {} inputs, the batch \
-                 convention is exactly (x, y)",
+                "model {}: the batch convention is exactly (x, y), got {} \
+                 batch slots",
                 model.name,
-                rep.grad.inputs.len()
+                shard_ios.len()
             );
         };
         let shard_x = x_io.shape.numel();
@@ -173,6 +201,7 @@ impl ReplicatedState {
             client,
             replicas: states,
             layout,
+            grad_resident,
             shard_x,
             shard_y,
         })
@@ -253,7 +282,7 @@ impl ReplicatedState {
     /// params + forward masks, streaming only the batch.
     pub fn run_with_fwd_masks(
         &self,
-        exe: &Executable,
+        exe: &Executable<B>,
         x: TensorRef<'_>,
         y: TensorRef<'_>,
     ) -> Result<Vec<HostTensor>> {
@@ -266,8 +295,8 @@ impl ReplicatedState {
     /// from replica 0 only.
     pub fn train_step(
         &mut self,
-        grad: &Executable,
-        apply: &Executable,
+        grad: &Executable<B>,
+        apply: &Executable<B>,
         x: TensorRef<'_>,
         y: TensorRef<'_>,
         scalars: &[[f32; 1]],
@@ -291,38 +320,52 @@ impl ReplicatedState {
         // per-example element count for x.
         let rows = shard_ranges(self.shard_y * n, n);
         let per_row = self.shard_x / self.shard_y;
-        let mut partials: Vec<Vec<xla::PjRtBuffer>> = Vec::with_capacity(n);
+        let mut partials: Vec<Vec<B::Buffer>> = Vec::with_capacity(n);
         for (r, state) in self.replicas.iter().enumerate() {
             let xs = &xv[rows[r].start * per_row..rows[r].end * per_row];
             let ys = &yv[rows[r].clone()];
-            let outs = grad.run_device_on(
-                &[
-                    DeviceInput::Host(TensorRef::F32(xs)),
-                    DeviceInput::Host(TensorRef::F32(ys)),
-                ],
-                state.device(),
-            )?;
+            let outs = if self.grad_resident {
+                // eval-convention grad: resident θ + m_fwd borrowed,
+                // only the shard streams; the payload stays on-device
+                state.run_with_fwd_masks_resident(
+                    grad,
+                    TensorRef::F32(xs),
+                    TensorRef::F32(ys),
+                )?
+            } else {
+                grad.run_device_on(
+                    vec![
+                        DeviceInput::Host(TensorRef::F32(xs)),
+                        DeviceInput::Host(TensorRef::F32(ys)),
+                    ],
+                    state.device(),
+                )?
+            };
             partials.push(outs);
         }
         // fixed-order all-reduce: canonical replica order, whatever
-        // order the partials above were produced in
+        // order the partials above were produced in. Inputs are
+        // borrowed; the owned outputs are donated to each replica's
+        // apply below.
         let payload_len = grad.spec.outputs.len();
-        let mut reduced: Vec<Vec<xla::PjRtBuffer>> =
+        let mut reduced: Vec<Vec<B::Buffer>> =
             (0..n).map(|_| Vec::with_capacity(payload_len)).collect();
         for o in 0..payload_len {
-            let refs: Vec<&xla::PjRtBuffer> =
-                partials.iter().map(|p| &p[o]).collect();
+            let refs: Vec<&B::Buffer> = partials.iter().map(|p| &p[o]).collect();
             for (r, buf) in self.client.all_reduce_sum(&refs)?.into_iter().enumerate()
             {
                 reduced[r].push(buf);
             }
         }
         drop(partials);
-        // replicated apply: every chain advances; only replica 0's
-        // loss crosses back to the host
+        // replicated apply: every chain advances, consuming its copy of
+        // the reduced payload; only replica 0's loss crosses back to
+        // the host
         let mut loss_buf = None;
-        for (r, state) in self.replicas.iter_mut().enumerate() {
-            let lb = state.apply_step(apply, &reduced[r], scalars)?;
+        for ((r, state), payload) in
+            self.replicas.iter_mut().enumerate().zip(reduced)
+        {
+            let lb = state.apply_step(apply, payload, scalars)?;
             if r == 0 {
                 loss_buf = Some(lb);
             }

@@ -1,0 +1,292 @@
+//! `StrictBackend`: the host-sim with real-PJRT buffer ownership
+//! enforced at runtime.
+//!
+//! The raw simulator's `Arc`-backed buffers tolerate any access
+//! pattern, so a runtime layer that silently reuses a donated buffer
+//! would still pass every bit-parity suite against it — and then
+//! crash (or corrupt memory) the day real PJRT bindings are swapped
+//! in. This wrapper is the tripwire: each buffer carries a shared
+//! donation flag; donating through *any* alias (an
+//! [`ExecInput::Donate`] execution input, a consuming
+//! [`BufferOps::tuple_parts`] / [`BufferOps::scatter_mask_update`])
+//! flips the flag, and every later data access through any alias is a
+//! hard `use-after-donate` error. Metadata reads
+//! (`element_count`/`element_type`/`is_tuple`/`device`) stay legal —
+//! PJRT keeps shape records host-side.
+//!
+//! Donation flags flip *before* the wrapped call runs, so a failed
+//! execution leaves its donated inputs poisoned — exactly the
+//! real-hardware contract (the donated memory is gone either way).
+//!
+//! Everything else — numerics, device layout, transfer metering — is
+//! delegated untouched, so losses, params, masks, optimizer state and
+//! `TransferSnapshot` counters are bitwise identical to the `sim`
+//! backend. That identity is what lets the parity suites certify the
+//! runtime layer under `TOPKAST_BACKEND=strict`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::xla;
+
+use super::backend::{Backend, BufferOps, ExecInput};
+
+/// Host-sim client plus donation bookkeeping. See the module docs.
+#[derive(Clone)]
+pub struct StrictBackend {
+    inner: xla::PjRtClient,
+}
+
+/// A sim buffer plus a donation flag shared by every clone (clones
+/// alias the same device memory, so donation kills them all).
+#[derive(Clone)]
+pub struct StrictBuffer {
+    inner: xla::PjRtBuffer,
+    donated: Arc<AtomicBool>,
+}
+
+pub struct StrictExecutable {
+    inner: xla::PjRtLoadedExecutable,
+}
+
+impl StrictBuffer {
+    fn fresh(inner: xla::PjRtBuffer) -> StrictBuffer {
+        StrictBuffer {
+            inner,
+            donated: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    /// Bail if this buffer (through any alias) has been donated.
+    fn guard(&self, op: &str) -> Result<()> {
+        if self.donated.load(Ordering::SeqCst) {
+            bail!(
+                "use-after-donate: {op} on a buffer whose ownership was \
+                 already transferred (donated to an execution or consumed \
+                 by tuple_parts/scatter_mask_update)"
+            );
+        }
+        Ok(())
+    }
+
+    /// Complete a donation: every alias of this buffer is dead now.
+    fn mark_donated(&self) {
+        self.donated.store(true, Ordering::SeqCst);
+    }
+}
+
+impl StrictBackend {
+    pub fn with_devices(devices: usize) -> Result<StrictBackend> {
+        Ok(StrictBackend {
+            inner: xla::PjRtClient::cpu_with_devices(devices)?,
+        })
+    }
+}
+
+impl BufferOps for StrictBuffer {
+    fn element_count(&self) -> usize {
+        self.inner.element_count()
+    }
+
+    fn element_type(&self) -> Option<xla::ElemType> {
+        self.inner.element_type()
+    }
+
+    fn is_tuple(&self) -> bool {
+        self.inner.is_tuple()
+    }
+
+    fn device(&self) -> usize {
+        self.inner.device()
+    }
+
+    fn to_literal_sync(&self) -> Result<xla::Literal> {
+        self.guard("to_literal_sync")?;
+        self.inner.to_literal_sync()
+    }
+
+    fn gather_to_host(&self, indices: &[u32]) -> Result<Vec<f32>> {
+        self.guard("gather_to_host")?;
+        self.inner.gather_to_host(indices)
+    }
+
+    fn tuple_parts(self) -> Result<Vec<Self>> {
+        self.guard("tuple_parts")?;
+        self.mark_donated();
+        Ok(self
+            .inner
+            .tuple_parts()?
+            .into_iter()
+            .map(StrictBuffer::fresh)
+            .collect())
+    }
+
+    fn scatter_mask_update(self, added: &[u32], removed: &[u32]) -> Result<Self> {
+        self.guard("scatter_mask_update")?;
+        self.mark_donated();
+        Ok(StrictBuffer::fresh(
+            self.inner.scatter_mask_update(added, removed)?,
+        ))
+    }
+
+    fn debug_read_f32(&self) -> Option<Vec<f32>> {
+        if self.donated.load(Ordering::SeqCst) {
+            return None; // no free host view of dead memory
+        }
+        self.inner.debug_read_f32()
+    }
+}
+
+impl Backend for StrictBackend {
+    type Client = StrictBackend;
+    type Buffer = StrictBuffer;
+    type Executable = StrictExecutable;
+
+    fn name(&self) -> &'static str {
+        "strict"
+    }
+
+    fn platform_name(&self) -> String {
+        self.inner.platform_name()
+    }
+
+    fn device_count(&self) -> usize {
+        self.inner.device_count()
+    }
+
+    fn client(&self) -> Self::Client {
+        self.clone()
+    }
+
+    fn buffer_from_host_buffer<T: xla::NativeType>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        device: Option<usize>,
+    ) -> Result<Self::Buffer> {
+        Ok(StrictBuffer::fresh(
+            self.inner.buffer_from_host_buffer(data, dims, device)?,
+        ))
+    }
+
+    fn mask_from_indices(
+        &self,
+        dims: &[usize],
+        indices: &[u32],
+        device: Option<usize>,
+    ) -> Result<Self::Buffer> {
+        Ok(StrictBuffer::fresh(
+            self.inner.mask_from_indices(dims, indices, device)?,
+        ))
+    }
+
+    fn compile(&self, comp: &xla::XlaComputation) -> Result<Self::Executable> {
+        Ok(StrictExecutable {
+            inner: self.inner.compile(comp)?,
+        })
+    }
+
+    fn execute(
+        &self,
+        exe: &Self::Executable,
+        inputs: Vec<ExecInput<'_, Self>>,
+    ) -> Result<Vec<Self::Buffer>> {
+        // guard every input before flipping any flag, so a buffer that
+        // appears both as Donate and Borrow is caught, not poisoned
+        for input in &inputs {
+            input.buffer().guard("execute input")?;
+        }
+        // donation happens at dispatch: even a failed execution has
+        // consumed the donated memory
+        for input in &inputs {
+            if let ExecInput::Donate(b) = input {
+                b.mark_donated();
+            }
+        }
+        let refs: Vec<&xla::PjRtBuffer> =
+            inputs.iter().map(|i| &i.buffer().inner).collect();
+        let result = exe.inner.execute_b(&refs)?;
+        drop(refs);
+        drop(inputs);
+        let row = result.into_iter().next().unwrap_or_default();
+        if row.is_empty() {
+            bail!("executable returned no result");
+        }
+        Ok(row.into_iter().map(StrictBuffer::fresh).collect())
+    }
+
+    fn all_reduce_sum(&self, inputs: &[&Self::Buffer]) -> Result<Vec<Self::Buffer>> {
+        for b in inputs {
+            b.guard("all_reduce_sum input")?;
+        }
+        let refs: Vec<&xla::PjRtBuffer> = inputs.iter().map(|b| &b.inner).collect();
+        // sim outputs may alias one Arc across devices; each replica
+        // still gets its own donation flag — donating one replica's
+        // reduced payload must not poison its siblings
+        Ok(self
+            .inner
+            .all_reduce_sum(&refs)?
+            .into_iter()
+            .map(StrictBuffer::fresh)
+            .collect())
+    }
+
+    fn transfer_stats(&self) -> xla::TransferSnapshot {
+        self.inner.transfer_stats()
+    }
+
+    fn device_transfer_stats(&self, device: usize) -> Result<xla::TransferSnapshot> {
+        self.inner.device_transfer_stats(device)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn upload(b: &StrictBackend, v: &[f32]) -> StrictBuffer {
+        b.buffer_from_host_buffer(v, &[v.len()], None).unwrap()
+    }
+
+    #[test]
+    fn clones_die_with_the_original_on_donation() {
+        let backend = StrictBackend::with_devices(1).unwrap();
+        let buf = upload(&backend, &[1.0, 2.0]);
+        let alias = buf.clone();
+        // donate through the original via a consuming op
+        let _updated = buf.scatter_mask_update(&[0], &[]).unwrap();
+        let err = alias.to_literal_sync().unwrap_err().to_string();
+        assert!(err.contains("use-after-donate"), "{err}");
+        let err = alias.gather_to_host(&[0]).unwrap_err().to_string();
+        assert!(err.contains("use-after-donate"), "{err}");
+        // metadata stays readable — host-side shape records
+        assert_eq!(alias.element_count(), 2);
+        assert!(!alias.is_tuple());
+        assert_eq!(alias.debug_read_f32(), None);
+    }
+
+    #[test]
+    fn borrowed_buffers_survive_execution() {
+        let backend = StrictBackend::with_devices(1).unwrap();
+        let buf = upload(&backend, &[3.0]);
+        // all_reduce borrows: the input must stay readable
+        let out = backend.all_reduce_sum(&[&buf]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(buf.to_literal_sync().is_ok());
+        // outputs carry fresh flags: donating one leaves inputs alive
+        let _ = out.into_iter().next().unwrap().scatter_mask_update(&[], &[]).unwrap();
+        assert!(buf.to_literal_sync().is_ok());
+    }
+
+    #[test]
+    fn metering_delegates_exactly() {
+        let backend = StrictBackend::with_devices(1).unwrap();
+        let raw = xla::PjRtClient::cpu().unwrap();
+        upload(&backend, &[1.0, 2.0, 3.0]);
+        raw.buffer_from_host_buffer::<f32>(&[1.0, 2.0, 3.0], &[3], None)
+            .unwrap();
+        assert_eq!(backend.transfer_stats(), raw.transfer_stats());
+    }
+}

@@ -211,7 +211,7 @@ impl Synthetic {
     /// executable cache, so `Runtime::load` (and therefore a stock
     /// `Trainer`) resolves them without touching disk. Includes the
     /// grad/apply pair when replication artifacts are attached.
-    pub fn install(&self, rt: &mut Runtime) -> Result<()> {
+    pub fn install<B: super::backend::Backend>(&self, rt: &mut Runtime<B>) -> Result<()> {
         let train = rt.compile_computation(&self.build_train()?, &self.model.train)?;
         rt.preload(train);
         let eval = rt.compile_computation(&self.build_eval(false)?, &self.model.eval)?;

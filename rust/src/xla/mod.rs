@@ -560,6 +560,17 @@ impl PjRtBuffer {
         self.device
     }
 
+    /// Unmetered diagnostic peek at an f32 buffer's device values —
+    /// for `cfg(debug_assertions)` invariant checks only, so they do
+    /// not perturb the transfer counters the parity suites pin.
+    /// Returns `None` for non-f32/tuple buffers.
+    pub fn debug_read_f32(&self) -> Option<Vec<f32>> {
+        match self.data.as_ref() {
+            Storage::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+
     fn value(&self) -> &Storage {
         self.data.as_ref()
     }

@@ -1,0 +1,226 @@
+//! Donation-semantics enforcement suite: the full training protocol
+//! run against `StrictBackend`, which turns any use of a buffer after
+//! its ownership was transferred (PJRT input donation) into a hard
+//! error instead of the host-sim's silent tolerance.
+//!
+//! What this proves: the device-resident chain — step outputs donated
+//! into the next step, refresh scatters consuming the old mask
+//! buffers, all-reduce payloads donated into the apply step — performs
+//! **zero illegal reuses** across ≥3 refresh cycles, under async
+//! refresh, across data-parallel replicas, and through a mid-run
+//! checkpoint restore. And since strict wraps the same simulator, the
+//! results (and the metered transfer counters) must be *bit-identical*
+//! to the raw sim backend.
+//!
+//! Backends are constructed by name (`AnyBackend::from_name`), never
+//! from the environment, so the suite is deterministic regardless of
+//! `TOPKAST_BACKEND`. CI additionally runs the parity suites under the
+//! env matrix.
+
+use topkast::coordinator::{Trainer, TrainerConfig};
+use topkast::runtime::{
+    AnyBackend, Backend, BufferOps, ExecInput, Runtime, Synthetic,
+};
+use topkast::sparsity::TopKast;
+use topkast::xla;
+
+fn cfg(steps: usize, refresh_every: usize, seed: u64, replicas: usize) -> TrainerConfig {
+    TrainerConfig { steps, refresh_every, seed, replicas, ..TrainerConfig::default() }
+}
+
+fn strategy() -> Box<TopKast> {
+    Box::new(TopKast::from_sparsities(0.8, 0.5))
+}
+
+/// A trainer over the named backend, built without touching the
+/// process environment (mirrors `Synthetic::trainer`, minus the env
+/// switch).
+fn trainer_on(backend: &str, synth: &Synthetic, cfg: TrainerConfig) -> Trainer {
+    let replicas = cfg.replicas.max(1);
+    let client = AnyBackend::from_name(backend, replicas).unwrap();
+    let mut rt = Runtime::from_backend(client);
+    assert_eq!(rt.backend_name(), backend);
+    let synth = if replicas > 1 && synth.model.replication.is_none() {
+        synth.replicated(replicas).unwrap()
+    } else {
+        synth.clone()
+    };
+    synth.install(&mut rt).unwrap();
+    let data = synth.data(cfg.seed ^ 0xDA7A);
+    Trainer::new(rt, synth.model.clone(), strategy(), data, cfg).unwrap()
+}
+
+/// `x + x` on one input, compiled for the given backend.
+fn double_exe(
+    client: &AnyBackend,
+    len: usize,
+) -> <AnyBackend as Backend>::Executable {
+    let b = xla::XlaBuilder::new("double");
+    let x = b
+        .parameter_s(0, &xla::Shape::array::<f32>(vec![len]), "x")
+        .unwrap();
+    let comp = b.tuple(&[(&x + &x).unwrap()]).unwrap().build().unwrap();
+    client.compile(&comp).unwrap()
+}
+
+#[test]
+fn use_after_donate_is_rejected_through_every_alias() {
+    let client = AnyBackend::strict(1).unwrap();
+    let exe = double_exe(&client, 3);
+    let buf = client
+        .buffer_from_host_buffer::<f32>(&[1.0, 2.0, 3.0], &[3], None)
+        .unwrap();
+    let alias = buf.clone();
+
+    let outs = client.execute(&exe, vec![ExecInput::Donate(buf)]).unwrap();
+    let root = outs.into_iter().next().unwrap();
+    let parts = root.tuple_parts().unwrap();
+    let got = parts[0].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+    assert_eq!(got, vec![2.0, 4.0, 6.0]);
+
+    // the donation killed the clone too — every data access errors
+    let err = alias.to_literal_sync().unwrap_err().to_string();
+    assert!(err.contains("use-after-donate"), "{err}");
+    let err = alias.gather_to_host(&[0]).unwrap_err().to_string();
+    assert!(err.contains("use-after-donate"), "{err}");
+    let err = client
+        .execute(&exe, vec![ExecInput::Borrow(&alias)])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("use-after-donate"), "{err}");
+    assert!(alias.debug_read_f32().is_none(), "no free peek at dead memory");
+    // host-side metadata stays readable (PJRT keeps it off-device)
+    assert_eq!(alias.element_count(), 3);
+}
+
+#[test]
+fn borrowed_inputs_survive_execution_and_tuples_donate() {
+    let client = AnyBackend::strict(1).unwrap();
+    let exe = double_exe(&client, 2);
+    let buf = client
+        .buffer_from_host_buffer::<f32>(&[5.0, 7.0], &[2], None)
+        .unwrap();
+    // borrow twice: the buffer must remain valid between and after
+    for _ in 0..2 {
+        let outs = client.execute(&exe, vec![ExecInput::Borrow(&buf)]).unwrap();
+        let parts = outs.into_iter().next().unwrap().tuple_parts().unwrap();
+        let got = parts[0].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+        assert_eq!(got, vec![10.0, 14.0]);
+    }
+    assert_eq!(
+        buf.to_literal_sync().unwrap().to_vec::<f32>().unwrap(),
+        vec![5.0, 7.0]
+    );
+
+    // splitting a tuple consumes the tuple handle
+    let outs = client.execute(&exe, vec![ExecInput::Borrow(&buf)]).unwrap();
+    let root = outs.into_iter().next().unwrap();
+    let root_alias = root.clone();
+    let _parts = root.tuple_parts().unwrap();
+    let err = root_alias.tuple_parts().unwrap_err().to_string();
+    assert!(err.contains("use-after-donate"), "{err}");
+}
+
+#[test]
+fn strict_trainer_runs_refresh_cycles_and_checkpoint_restore_clean() {
+    for synth in [Synthetic::tiny(), Synthetic::small()] {
+        // 11 steps / refresh every 3 → refreshes at 0, 3, 6, 9 (≥3 full
+        // cycles). Any illegal reuse in the chain → hard error → unwrap
+        // panics.
+        let steps = 11;
+        let mut t = trainer_on("strict", &synth, cfg(steps, 3, 5, 1));
+        for _ in 0..7 {
+            t.train_step().unwrap();
+        }
+        // eval + grad_norms borrow the resident params mid-chain (the
+        // documented escape hatch) — the chain must continue afterwards
+        t.evaluate().unwrap();
+        let ck = t.capture_checkpoint().unwrap();
+        assert_eq!(ck.step, 7);
+        for _ in 7..steps {
+            t.train_step().unwrap();
+        }
+
+        // restore mid-run state into a *fresh* strict trainer and keep
+        // going: the wholesale re-upload must rebuild a clean chain
+        let mut resumed = trainer_on("strict", &synth, cfg(steps, 3, 5, 1));
+        resumed.restore_checkpoint(&ck).unwrap();
+        for _ in 7..steps {
+            resumed.train_step().unwrap();
+        }
+        resumed.evaluate().unwrap();
+    }
+}
+
+#[test]
+fn strict_trainer_runs_async_refresh_clean() {
+    let synth = Synthetic::tiny();
+    let mut t = trainer_on("strict", &synth, cfg(11, 3, 7, 1));
+    t.enable_async_refresh(strategy()).unwrap();
+    for _ in 0..11 {
+        t.train_step().unwrap();
+    }
+    t.evaluate().unwrap();
+}
+
+#[test]
+fn strict_trainer_runs_replicated_clean() {
+    // 4 replicas: grad payloads all-reduced, reduced buffers donated
+    // into each replica's apply step, masks broadcast per device
+    let synth = Synthetic::tiny();
+    let mut t = trainer_on("strict", &synth, cfg(11, 3, 9, 4));
+    assert_eq!(t.replica_count(), 4);
+    for _ in 0..11 {
+        t.train_step().unwrap();
+    }
+    t.verify_replica_lockstep().unwrap();
+    t.evaluate().unwrap();
+}
+
+#[test]
+fn sim_and_strict_are_bitwise_identical_including_transfer_counters() {
+    for replicas in [1usize, 2] {
+        let synth = Synthetic::tiny();
+        let steps = 11;
+        let mut sim = trainer_on("sim", &synth, cfg(steps, 3, 5, replicas));
+        let mut strict = trainer_on("strict", &synth, cfg(steps, 3, 5, replicas));
+        for s in 0..steps {
+            let a = sim.train_step().unwrap();
+            let b = strict.train_step().unwrap();
+            assert_eq!(a, b, "x{replicas}: loss diverged at step {s}");
+        }
+        let ea = sim.evaluate().unwrap();
+        let eb = strict.evaluate().unwrap();
+        assert_eq!(ea.loss_mean, eb.loss_mean, "x{replicas}: eval loss");
+
+        sim.sync_host().unwrap();
+        strict.sync_host().unwrap();
+        for (ea, eb) in sim.store.entries.iter().zip(&strict.store.entries) {
+            assert_eq!(ea.values, eb.values, "params diverged on {}", ea.spec.name);
+            match (&ea.masks, &eb.masks) {
+                (Some(ma), Some(mb)) => {
+                    assert_eq!(ma.fwd(), mb.fwd(), "fwd mask {}", ea.spec.name);
+                    assert_eq!(ma.bwd(), mb.bwd(), "bwd mask {}", ea.spec.name);
+                }
+                (None, None) => {}
+                _ => panic!("mask presence mismatch on {}", ea.spec.name),
+            }
+        }
+        assert_eq!(sim.opt_slots(), strict.opt_slots(), "optimiser state");
+
+        // enforcement is free on the wire: the metered counters the
+        // parity suites pin must be identical snapshot-for-snapshot
+        assert_eq!(
+            sim.runtime.transfer_stats(),
+            strict.runtime.transfer_stats(),
+            "x{replicas}: transfer counters"
+        );
+        for r in 0..replicas {
+            assert_eq!(
+                sim.runtime.device_transfer_stats(r).unwrap(),
+                strict.runtime.device_transfer_stats(r).unwrap(),
+                "x{replicas}: device {r} counters"
+            );
+        }
+    }
+}
