@@ -89,6 +89,19 @@ fn main() -> Result<()> {
         println!("{}", report.summary_line("sparse_exchange", sw.elapsed_ms() / 1e3));
     }
 
+    // serve_traffic exercises the inference serving plane on synthetic
+    // presets: batched open-loop traffic over 1/2 devices with one
+    // same-run hot swap mid-trace, *appending* throughput/latency/swap
+    // lines to BENCH_topkast.json. Opt-in by name: the step_traffic
+    // smoke contract does not expect its records.
+    if want("serve_traffic") {
+        let sw = Stopwatch::start();
+        println!("\n######## serve_traffic ########");
+        let report = serve_traffic()?;
+        report.save("serve_traffic")?;
+        println!("{}", report.summary_line("serve_traffic", sw.elapsed_ms() / 1e3));
+    }
+
     let manifest = match Manifest::load("artifacts") {
         Ok(m) => m,
         Err(_) => {
@@ -815,6 +828,146 @@ fn sparse_exchange() -> Result<Report> {
         .open("BENCH_topkast.json")?;
     file.write_all((lines.join("\n") + "\n").as_bytes())?;
     println!("appended {} sparse_exchange records to BENCH_topkast.json", lines.len());
+    rep.add(t);
+    Ok(rep)
+}
+
+// ---------------------------------------------------------------------------
+// SERVE_TRAFFIC — the inference serving plane. For each synthetic
+// preset × device count ∈ {1, 2}: train two same-run checkpoints
+// straddling mask refreshes, serve the first under an open-loop trace,
+// hot-swap to the second mid-trace, and finish the trace. Records
+// requests/sec, p50/p95 latency ticks, the measured swap bytes
+// (asserted ∝ Δnnz — strictly below the full-upload cost) and the
+// swap blackout window. One JSON line per (preset, devices) pair is
+// *appended* to BENCH_topkast.json.
+// ---------------------------------------------------------------------------
+fn serve_traffic() -> Result<Report> {
+    use std::io::Write as _;
+    use topkast::runtime::Runtime;
+    use topkast::serve::{
+        CheckpointSwapper, ModelServer, ServeConfig, SwapMode, TraceConfig,
+    };
+
+    let mut rep = Report::new();
+    let mut t = Table::new(
+        "serve_traffic: batched inference + hot swap (topkast 80/50)",
+        &[
+            "preset",
+            "devices",
+            "req/s",
+            "p50_ticks",
+            "p95_ticks",
+            "swap_h2d_b",
+            "full_upload_b",
+            "blackout_ms",
+        ],
+    );
+    let mut lines: Vec<String> = Vec::new();
+    for (preset, synth) in [("tiny", Synthetic::tiny()), ("small", Synthetic::small())]
+    {
+        // two checkpoints of one run, straddling mask refreshes, so the
+        // swap takes the O(Δnnz) delta path
+        let cfg = TrainerConfig {
+            steps: 24,
+            refresh_every: 6,
+            seed: 7,
+            ..TrainerConfig::default()
+        };
+        let mut trainer =
+            synth.trainer(Box::new(TopKast::from_sparsities(0.8, 0.5)), cfg)?;
+        for _ in 0..12 {
+            trainer.train_step()?;
+        }
+        let ck_a = trainer.capture_checkpoint()?;
+        for _ in 0..12 {
+            trainer.train_step()?;
+        }
+        let ck_b = trainer.capture_checkpoint()?;
+
+        for devices in [1usize, 2] {
+            let mut rt = Runtime::with_devices(devices)?;
+            synth.install(&mut rt)?;
+            let mut server = ModelServer::from_checkpoint(
+                rt,
+                synth.model.clone(),
+                &ck_a,
+                ServeConfig { max_batch: 0, inflight_limit: 1 },
+            )?;
+            let requests = 96usize;
+            // one full batch per device per tick keeps every device busy
+            let per_tick = devices * server.batch_size();
+            let t1 = server.run_open_loop(&TraceConfig {
+                requests: requests / 2,
+                per_tick,
+                seed: 11,
+            })?;
+            let swap = CheckpointSwapper::new().swap(&mut server, &ck_b)?;
+            assert_eq!(swap.mode, SwapMode::Delta, "same-run swap must take the delta path");
+            assert!(
+                swap.swap_h2d_bytes < swap.full_upload_bytes,
+                "delta swap ({} b) must undercut a full reload ({} b)",
+                swap.swap_h2d_bytes,
+                swap.full_upload_bytes
+            );
+            let t2 = server.run_open_loop(&TraceConfig {
+                requests: requests - requests / 2,
+                per_tick,
+                seed: 12,
+            })?;
+            let wall_ms = t1.wall_ms + t2.wall_ms;
+            let rps = if wall_ms > 0.0 {
+                requests as f64 / (wall_ms / 1e3)
+            } else {
+                0.0
+            };
+            let stats = server.stats();
+            let p50 = stats.latency_percentile(0.50);
+            let p95 = stats.latency_percentile(0.95);
+            t.row(vec![
+                preset.into(),
+                devices.to_string(),
+                format!("{rps:.0}"),
+                f2(p50),
+                f2(p95),
+                swap.swap_h2d_bytes.to_string(),
+                swap.full_upload_bytes.to_string(),
+                f3(swap.blackout_ms),
+            ]);
+            lines.push(
+                Json::obj(vec![
+                    ("scenario", Json::str("serve_traffic")),
+                    ("backend", Json::str(env_backend_name())),
+                    ("preset", Json::str(preset)),
+                    ("devices", Json::num(devices as f64)),
+                    ("requests", Json::num(requests as f64)),
+                    ("executions", Json::num(stats.executions as f64)),
+                    ("requests_per_sec", Json::num(rps)),
+                    ("latency_p50_ticks", Json::num(p50)),
+                    ("latency_p95_ticks", Json::num(p95)),
+                    ("swap_mode", Json::str("delta")),
+                    ("swap_blackout_ms", Json::num(swap.blackout_ms)),
+                    ("swap_h2d_bytes", Json::num(swap.swap_h2d_bytes as f64)),
+                    ("full_upload_bytes", Json::num(swap.full_upload_bytes as f64)),
+                    (
+                        "delta_index_words",
+                        Json::num(swap.delta_index_words as f64),
+                    ),
+                    (
+                        "changed_value_words",
+                        Json::num(swap.changed_value_words as f64),
+                    ),
+                ])
+                .to_string_compact(),
+            );
+        }
+    }
+    let mut file = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open("BENCH_topkast.json")?;
+    file.write_all((lines.join("\n") + "\n").as_bytes())?;
+    println!("appended {} serve_traffic records to BENCH_topkast.json", lines.len());
     rep.add(t);
     Ok(rep)
 }

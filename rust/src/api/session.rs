@@ -15,7 +15,7 @@ use crate::coordinator::{
     source_for, Checkpoint, ConsoleLogger, EvalResult, PeriodicCheckpoint,
     Trainer, TrainObserver,
 };
-use crate::runtime::{backend::Backend, AnyBackend, Manifest, Runtime};
+use crate::runtime::{backend::Backend, AnyBackend, Manifest, Runtime, Synthetic};
 use crate::sparsity::StrategyRegistry;
 
 /// A fully-wired training run. The underlying [`Trainer`] is public so
@@ -141,20 +141,35 @@ impl<'m> SessionBuilder<'m> {
     /// Resolve the spec and wire manifest, runtime, data, strategy and
     /// observers into a ready [`Session`].
     pub fn build(self) -> Result<Session> {
-        let loaded;
-        let manifest = match self.manifest {
-            Some(m) => m,
-            None => {
-                loaded = Manifest::load(&self.artifacts)?;
-                &loaded
-            }
-        };
         let model_name = self
             .spec
             .model
             .clone()
             .context("session: no model set (use RunSpec::model, a preset or --model)")?;
-        let model = manifest.model(&model_name)?.clone();
+
+        // The syn_* names resolve to in-memory compiled models — no
+        // artifacts/ directory needed, which is what CI smoke jobs and
+        // the serving examples run on.
+        let synth = match model_name.as_str() {
+            "syn_tiny" => Some(Synthetic::tiny()),
+            "syn_small" => Some(Synthetic::small()),
+            _ => None,
+        };
+
+        let loaded;
+        let model = match &synth {
+            Some(s) => s.model.clone(),
+            None => {
+                let manifest = match self.manifest {
+                    Some(m) => m,
+                    None => {
+                        loaded = Manifest::load(&self.artifacts)?;
+                        &loaded
+                    }
+                };
+                manifest.model(&model_name)?.clone()
+            }
+        };
         let resolved = self.spec.resolve(&model.kind)?;
 
         let registry = self
@@ -163,8 +178,25 @@ impl<'m> SessionBuilder<'m> {
         let strategy = registry.build_tuned(&resolved.strategy, &resolved.tuning)?;
 
         // one simulated device per data-parallel replica
-        let runtime = Runtime::with_devices(resolved.trainer.replicas)?;
-        let data = source_for(&model, resolved.trainer.seed ^ 0xDA7A)?;
+        let replicas = resolved.trainer.replicas;
+        let (runtime, model, data) = match synth {
+            Some(s) => {
+                let mut rt = Runtime::with_devices(replicas)?;
+                let s = if replicas > 1 && s.model.replication.is_none() {
+                    s.replicated(replicas)?
+                } else {
+                    s
+                };
+                s.install(&mut rt)?;
+                let data = s.data(resolved.trainer.seed ^ 0xDA7A);
+                (rt, s.model.clone(), data)
+            }
+            None => {
+                let rt = Runtime::with_devices(replicas)?;
+                let data = source_for(&model, resolved.trainer.seed ^ 0xDA7A)?;
+                (rt, model, data)
+            }
+        };
         let log_every = resolved.trainer.log_every;
         let mut trainer =
             Trainer::new(runtime, model, strategy, data, resolved.trainer.clone())?;
@@ -226,6 +258,20 @@ mod tests {
         assert_eq!(b.spec.model.as_deref(), Some("mlp_tiny"));
         assert_eq!(b.spec.seed, Some(99));
         assert_eq!(b.spec.steps, Some(300), "preset steps kept");
+    }
+
+    #[test]
+    fn synthetic_model_builds_without_artifacts() {
+        // "syn_tiny" must never touch the artifacts dir
+        let mut s = Session::builder()
+            .artifacts("/nonexistent")
+            .spec(RunSpec::run("syn_tiny", "topkast:0.8,0.5", 2).refresh_every(1))
+            .quiet()
+            .build()
+            .unwrap();
+        s.train().unwrap();
+        assert_eq!(s.trainer.step, 2);
+        s.evaluate().unwrap();
     }
 
     // Full builds need PJRT + artifacts; exercised when present (the

@@ -30,7 +30,8 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::sparsity::ParamStore;
+use crate::runtime::manifest::ParamSpec;
+use crate::sparsity::{replay_init_values, ParamStore};
 use crate::tensor::{SparseSet, SparseSlice};
 use crate::util::json::Json;
 
@@ -432,11 +433,19 @@ impl Checkpoint {
         let blob = &data[12 + hlen..];
         if version == 2 {
             let declared = header.get("blob_len")?.as_usize()?;
-            if blob.len() != declared {
+            if blob.len() < declared {
                 bail!(
                     "truncated checkpoint {path:?}: header declares a {declared}-byte \
                      blob, file holds {}",
                     blob.len()
+                );
+            }
+            if blob.len() > declared {
+                bail!(
+                    "checkpoint {path:?} has {} trailing bytes past the declared \
+                     {declared}-byte blob — refusing a file longer than \
+                     header + blob (corrupt write or concatenated data?)",
+                    blob.len() - declared
                 );
             }
             let hv = header.get("version")?.as_usize()?;
@@ -455,9 +464,13 @@ impl Checkpoint {
         let mut masks_fwd = vec![];
         let mut masks_bwd = vec![];
         let mut opt = vec![];
+        // v1 headers carry no blob_len; the sections' furthest end is
+        // the declared extent, and anything past it is trailing junk
+        let mut max_end = 0usize;
         for s in header.get("sections")?.as_arr()? {
             let kind = s.get("kind")?.as_str()?;
             let name = s.get("name")?.as_str()?.to_string();
+            max_end = max_end.max(section_range(blob, s, &name)?.1);
             let data = read_f32s(blob, s, &name)?;
             match kind {
                 "param" => params.push((name, TensorPayload::Dense(data))),
@@ -466,6 +479,14 @@ impl Checkpoint {
                 "opt" => opt.push(TensorPayload::Dense(data)),
                 k => bail!("unknown v1 section kind {k:?}"),
             }
+        }
+        if blob.len() > max_end {
+            bail!(
+                "checkpoint has {} trailing bytes past the last declared \
+                 section (ends at {max_end}) — refusing a file longer than \
+                 header + blob (corrupt write or concatenated data?)",
+                blob.len() - max_end
+            );
         }
         Ok(Checkpoint {
             step,
@@ -584,6 +605,75 @@ impl Checkpoint {
             }
         }
         Ok(Checkpoint { step, seed, params, masks_fwd, masks_bwd, touched, opt })
+    }
+
+    // ------------------------------------------------------------------
+    // Read-side API: the serving plane reads masks and values straight
+    // off a loaded checkpoint — no ParamStore, no optimiser mirror, no
+    // mutation. Sparse payloads are densified by replaying the recorded
+    // init seed, exactly as `restore` would, but into a fresh vector.
+    // ------------------------------------------------------------------
+
+    /// The stored forward mask of a sparse tensor, as an index set.
+    pub fn fwd_mask(&self, name: &str) -> Result<&SparseSet> {
+        self.masks_fwd
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| s)
+            .with_context(|| format!("checkpoint carries no fwd mask for {name:?}"))
+    }
+
+    /// The stored backward mask of a sparse tensor, as an index set.
+    pub fn bwd_mask(&self, name: &str) -> Result<&SparseSet> {
+        self.masks_bwd
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| s)
+            .with_context(|| format!("checkpoint carries no bwd mask for {name:?}"))
+    }
+
+    /// Stored param names, in section order (the manifest's order for
+    /// checkpoints captured by the trainer).
+    pub fn param_names(&self) -> impl Iterator<Item = &str> {
+        self.params.iter().map(|(n, _)| n.as_str())
+    }
+
+    /// One tensor's full dense values. Dense payloads are returned as
+    /// stored; sparse payloads are reconstructed by replaying the
+    /// recorded init seed for the untouched base and scattering the
+    /// stored touched values on top — bit-exact with what `restore`
+    /// would leave in a store built from the same `specs`.
+    pub fn param_values(&self, specs: &[ParamSpec], name: &str) -> Result<Vec<f32>> {
+        let (_, payload) = self
+            .params
+            .iter()
+            .find(|(n, _)| n == name)
+            .with_context(|| format!("checkpoint carries no param {name:?}"))?;
+        match payload {
+            TensorPayload::Dense(v) => Ok(v.clone()),
+            TensorPayload::Sparse(slice) => {
+                let seed = self.seed.context(
+                    "sparse checkpoint carries no init seed: values outside \
+                     the touched set cannot be reconstructed",
+                )?;
+                let i = specs
+                    .iter()
+                    .position(|s| s.name == name)
+                    .with_context(|| format!("specs carry no param {name:?}"))?;
+                let spec = &specs[i];
+                if slice.indices.domain() != spec.shape.numel() {
+                    bail!(
+                        "sparse payload for {name} indexes {} elements, spec \
+                         declares {}",
+                        slice.indices.domain(),
+                        spec.shape.numel()
+                    );
+                }
+                let mut values = replay_init_values(spec, i, seed);
+                slice.scatter_into(&mut values);
+                Ok(values)
+            }
+        }
     }
 
     /// Total stored value count (diagnostics; the on-disk size is ~4×
@@ -881,6 +971,77 @@ mod tests {
         std::fs::write(&cut, &bytes).unwrap();
         let err = Checkpoint::load(&cut).unwrap_err().to_string();
         assert!(err.contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn rejects_trailing_bytes_with_a_distinct_error() {
+        let d = dir("topkast_ck_tail");
+        let store = ParamStore::init(&specs(), 0);
+        let opt = vec![vec![0.0f32; 8], vec![0.0f32; 4]];
+        // v2: file longer than header + declared blob
+        let good2 = d.join("good2.ckpt");
+        Checkpoint::capture_dense(&store, &opt, 5).save(&good2).unwrap();
+        let mut bytes = std::fs::read(&good2).unwrap();
+        bytes.extend_from_slice(&[0xAB; 9]);
+        let tail2 = d.join("tail2.ckpt");
+        std::fs::write(&tail2, &bytes).unwrap();
+        let err = Checkpoint::load(&tail2).unwrap_err().to_string();
+        assert!(err.contains("9 trailing bytes"), "{err}");
+        assert!(!err.contains("truncated"), "distinct from truncation: {err}");
+        // v1: file longer than the last declared section's end
+        let good1 = d.join("good1.ckpt");
+        Checkpoint::capture_dense(&store, &opt, 5).save_v1(&good1).unwrap();
+        let mut bytes = std::fs::read(&good1).unwrap();
+        bytes.extend_from_slice(&[0xCD; 4]);
+        let tail1 = d.join("tail1.ckpt");
+        std::fs::write(&tail1, &bytes).unwrap();
+        let err = Checkpoint::load(&tail1).unwrap_err().to_string();
+        assert!(err.contains("4 trailing bytes"), "{err}");
+        // the untouched files still load
+        assert!(Checkpoint::load(&good2).is_ok());
+        assert!(Checkpoint::load(&good1).is_ok());
+    }
+
+    #[test]
+    fn read_side_api_matches_restore() {
+        let specs = specs();
+        let mut store = ParamStore::init(&specs, 31);
+        {
+            let m = store.get_mut("w").unwrap().masks.as_mut().unwrap();
+            m.set_fwd(vec![1.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+            m.set_bwd(vec![1.0, 0.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0]);
+        }
+        for i in [0usize, 2, 3] {
+            store.get_mut("w").unwrap().values[i] = 3.0 - i as f32;
+        }
+        store.get_mut("b").unwrap().values = vec![4.0, 3.0, 2.0, 1.0];
+        let opt = vec![vec![0.0f32; 8], vec![0.0f32; 4]];
+        let ck = Checkpoint::capture(&store, &opt, 8);
+        assert!(
+            matches!(ck.params[0].1, TensorPayload::Sparse(_)),
+            "w must exercise the seed-replay path"
+        );
+        // values come back dense and bit-exact without any ParamStore
+        assert_eq!(
+            ck.param_values(&specs, "w").unwrap(),
+            store.get("w").unwrap().values
+        );
+        assert_eq!(
+            ck.param_values(&specs, "b").unwrap(),
+            store.get("b").unwrap().values
+        );
+        assert_eq!(
+            ck.fwd_mask("w").unwrap(),
+            store.get("w").unwrap().masks.as_ref().unwrap().fwd()
+        );
+        assert_eq!(
+            ck.bwd_mask("w").unwrap(),
+            store.get("w").unwrap().masks.as_ref().unwrap().bwd()
+        );
+        assert_eq!(ck.param_names().collect::<Vec<_>>(), ["w", "b"]);
+        // misses are clear errors
+        assert!(ck.param_values(&specs, "nope").is_err());
+        assert!(ck.fwd_mask("b").is_err(), "dense tensors carry no masks");
     }
 
     #[test]

@@ -709,6 +709,23 @@ impl<B: Backend> Trainer<B> {
         Ok(())
     }
 
+    /// Run a single eval batch on the resident training state and
+    /// return the raw `(loss, metric)` scalars undigested — the
+    /// bitwise reference the serving plane's parity tests compare
+    /// against. `None` when the data source has no batch at `idx`.
+    pub fn eval_batch_outputs(&mut self, idx: usize) -> Result<Option<(f32, f32)>> {
+        let Some((x, y)) = self.data.eval_batch(idx) else {
+            return Ok(None);
+        };
+        let exe = self.runtime.load(&self.model.eval)?;
+        let outs = self.device.run_with_fwd_masks(
+            exe,
+            TensorRef::from(&x),
+            TensorRef::from(&y),
+        )?;
+        Ok(Some((outs[0].as_f32()?[0], outs[1].as_f32()?[0])))
+    }
+
     /// Evaluate on the data source's deterministic eval stream — runs
     /// against the resident params + forward masks (no host sync, no
     /// param upload; only the batch streams).

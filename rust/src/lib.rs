@@ -53,6 +53,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod runtime;
+pub mod serve;
 pub mod sparsity;
 pub mod tensor;
 pub mod util;

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   train    — run a full training job (model × strategy × schedule)
 //!   eval     — evaluate a checkpoint
+//!   serve    — serve a checkpoint: batched inference, optional hot swap
 //!   info     — list models/artifacts in the manifest
 //!   presets  — list named experiment presets
 //!
@@ -14,13 +15,16 @@
 //!   topkast train --model lm_tiny --strategy topkast:0.8,0.5 --steps 500
 //!   topkast train --preset enwik8-topkast-80 --seed 3
 //!   topkast train --config run.json --steps 100
+//!   topkast serve --model syn_tiny --checkpoint a.ckpt --swap-to b.ckpt --devices 2
 //!   topkast info
 
 use anyhow::{bail, Result};
 
 use topkast::api::{JsonlMetrics, RunSpec, Session};
+use topkast::coordinator::Checkpoint;
 use topkast::info;
-use topkast::runtime::Manifest;
+use topkast::runtime::{Manifest, Runtime, Synthetic};
+use topkast::serve::{CheckpointSwapper, ModelServer, ServeConfig, TraceConfig};
 use topkast::sparsity::with_default_registry;
 use topkast::util::cli::{Cli, Parsed};
 
@@ -34,14 +38,15 @@ fn main() {
 fn run() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first() else {
-        bail!("usage: topkast <train|eval|info|presets> [options]  (--help per command)")
+        bail!("usage: topkast <train|eval|serve|info|presets> [options]  (--help per command)")
     };
     match cmd.as_str() {
         "train" => cmd_train(&args[1..]),
         "eval" => cmd_eval(&args[1..]),
+        "serve" => cmd_serve(&args[1..]),
         "info" => cmd_info(&args[1..]),
         "presets" => cmd_presets(),
-        c => bail!("unknown command {c:?} (expected train|eval|info|presets)"),
+        c => bail!("unknown command {c:?} (expected train|eval|serve|info|presets)"),
     }
 }
 
@@ -213,6 +218,101 @@ fn cmd_eval(args: &[String]) -> Result<()> {
     println!(
         "eval: loss {:.4} acc {:.4} bpc {:.4} ppl {:.2}",
         ev.loss_mean, ev.accuracy, ev.bpc, ev.perplexity
+    );
+    Ok(())
+}
+
+/// Serve a checkpoint through the inference plane: an open-loop trace
+/// of synthetic requests, optionally hot-swapping to a successor
+/// checkpoint halfway through the trace.
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let cli = common_cli("topkast serve", "serve a checkpoint with batched inference")
+        .req("checkpoint", "TKC1/TKC2 checkpoint to serve")
+        .opt("devices", "1", "simulated devices to spread executions over")
+        .opt("max-batch", "0", "requests per execution (0 = the graph batch size)")
+        .opt("inflight", "1", "max in-flight executions per device")
+        .opt("swap-to", "", "checkpoint to hot-swap to halfway through the trace")
+        .opt("requests", "64", "total requests in the open-loop trace")
+        .opt("per-tick", "2", "request arrivals per tick")
+        .opt("seed", "0", "trace seed");
+    let p = cli.parse(args)?;
+
+    let model_name = p.get("model");
+    let devices = p.get_usize("devices")?.max(1);
+    // syn_* models are in-memory (no artifacts dir); anything else
+    // resolves through the manifest like train/eval do.
+    let (runtime, model) = match model_name {
+        "syn_tiny" | "syn_small" => {
+            let synth = if model_name == "syn_tiny" {
+                Synthetic::tiny()
+            } else {
+                Synthetic::small()
+            };
+            let mut rt = Runtime::with_devices(devices)?;
+            synth.install(&mut rt)?;
+            (rt, synth.model.clone())
+        }
+        _ => {
+            let manifest = Manifest::load(p.get("artifacts"))?;
+            (Runtime::with_devices(devices)?, manifest.model(model_name)?.clone())
+        }
+    };
+
+    let ck = Checkpoint::load(p.get("checkpoint"))?;
+    let cfg = ServeConfig {
+        max_batch: p.get_usize("max-batch")?,
+        inflight_limit: p.get_usize("inflight")?,
+    };
+    let mut server = ModelServer::from_checkpoint(runtime, model, &ck, cfg)?;
+    info!(
+        "serving {} (step {}) on {} devices — batch {}, max-batch {}",
+        server.model().name,
+        server.installed_step(),
+        server.device_count(),
+        server.batch_size(),
+        p.get("max-batch"),
+    );
+
+    let requests = p.get_usize("requests")?;
+    let per_tick = p.get_usize("per-tick")?.max(1);
+    let seed = p.get_u64("seed")?;
+    let swap_to = p.get("swap-to").to_string();
+    let first = if swap_to.is_empty() { requests } else { requests / 2 };
+
+    let t1 = server.run_open_loop(&TraceConfig { requests: first, per_tick, seed })?;
+    println!(
+        "trace: {} requests in {} executions — {:.0} req/s, p50 {} ticks, p95 {} ticks",
+        t1.requests, t1.executions, t1.requests_per_sec, t1.p50_ticks, t1.p95_ticks
+    );
+
+    if !swap_to.is_empty() {
+        let incoming = Checkpoint::load(&swap_to)?;
+        let report = CheckpointSwapper::new().swap(&mut server, &incoming)?;
+        println!(
+            "swap: {:?} step {} -> {} — {} h2d bytes (full reload costs {}), \
+             blackout {:.3} ms",
+            report.mode,
+            report.step_from,
+            report.step_to,
+            report.swap_h2d_bytes,
+            report.full_upload_bytes,
+            report.blackout_ms
+        );
+        let t2 = server.run_open_loop(&TraceConfig {
+            requests: requests - first,
+            per_tick,
+            seed: seed ^ 0x51AB,
+        })?;
+        println!(
+            "post-swap trace: {} requests — {:.0} req/s, p50 {} ticks, p95 {} ticks",
+            t2.requests, t2.requests_per_sec, t2.p50_ticks, t2.p95_ticks
+        );
+    }
+
+    let s = server.stats();
+    println!(
+        "served: {} requests, {} executions ({} padded rows), per-device {:?}",
+        s.completed, s.executions, s.padded_rows, s.per_device_executions
     );
     Ok(())
 }

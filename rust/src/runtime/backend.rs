@@ -116,6 +116,11 @@ pub trait BufferOps: Clone {
     /// Scatter-style 0/1 mask delta update, consuming the old mask
     /// buffer (donation) and yielding its replacement.
     fn scatter_mask_update(self, added: &[u32], removed: &[u32]) -> Result<Self>;
+    /// Scatter-style sparse f32 value update (`values[k]` written at
+    /// sorted `indices[k]`), consuming the old buffer (donation) and
+    /// yielding its replacement — the value half of a sparse upload;
+    /// hot-swap and refresh paths share it.
+    fn scatter_values_update(self, indices: &[u32], values: &[f32]) -> Result<Self>;
 
     /// Unmetered diagnostic peek at an f32 buffer's device values, for
     /// `cfg(debug_assertions)` invariant checks that must not perturb
@@ -231,6 +236,10 @@ impl BufferOps for xla::PjRtBuffer {
 
     fn scatter_mask_update(self, added: &[u32], removed: &[u32]) -> Result<Self> {
         xla::PjRtBuffer::scatter_mask_update(&self, added, removed)
+    }
+
+    fn scatter_values_update(self, indices: &[u32], values: &[f32]) -> Result<Self> {
+        xla::PjRtBuffer::scatter_values_update(&self, indices, values)
     }
 
     fn debug_read_f32(&self) -> Option<Vec<f32>> {
@@ -495,6 +504,21 @@ impl BufferOps for AnyBuffer {
             #[cfg(feature = "pjrt")]
             AnyBuffer::Pjrt(b) => {
                 Ok(AnyBuffer::Pjrt(b.scatter_mask_update(added, removed)?))
+            }
+        }
+    }
+
+    fn scatter_values_update(self, indices: &[u32], values: &[f32]) -> Result<Self> {
+        match self {
+            AnyBuffer::Sim(b) => {
+                Ok(AnyBuffer::Sim(BufferOps::scatter_values_update(b, indices, values)?))
+            }
+            AnyBuffer::Strict(b) => {
+                Ok(AnyBuffer::Strict(b.scatter_values_update(indices, values)?))
+            }
+            #[cfg(feature = "pjrt")]
+            AnyBuffer::Pjrt(b) => {
+                Ok(AnyBuffer::Pjrt(b.scatter_values_update(indices, values)?))
             }
         }
     }

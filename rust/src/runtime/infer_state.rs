@@ -1,0 +1,236 @@
+//! Inference-only resident device state — the serving plane's
+//! counterpart to [`DeviceState`](super::device_state::DeviceState).
+//!
+//! A training device holds θ, optimiser slots and both mask sets, and
+//! chains them step-to-step through donation. An inference device is
+//! strictly smaller: θ and the *forward* masks only (the paper's set A
+//! is all a forward pass reads — B and the opt slots exist for
+//! training and never cross the bus here), and nothing chains —
+//! every execution **borrows** the resident buffers and streams the
+//! request batch up, so repeated inference leaves state untouched and
+//! runs clean under `StrictBackend`.
+//!
+//! The only consuming operations on this state are the hot-swap
+//! updates ([`InferState::apply_fwd_mask_delta`] /
+//! [`InferState::apply_value_update`]): exactly the training refresh
+//! path (`scatter_mask_update` plus a sparse θ scatter), where the old
+//! buffer is donated to the scatter that yields its replacement —
+//! O(Δnnz) bytes per swap, metered.
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::{SparseDelta, SparseSet};
+
+use super::backend::{AnyBackend, Backend, BufferOps};
+use super::client::{DeviceInput, Executable, TensorRef};
+use super::manifest::ModelEntry;
+
+/// Resident eval-convention state for one simulated device: θ buffers
+/// in manifest param order, fwd-mask buffers in sparse-param order,
+/// plus the host-side bookkeeping of which index sets are installed.
+pub struct InferState<B: Backend = AnyBackend> {
+    client: B,
+    device: usize,
+    params: Vec<B::Buffer>,
+    masks_fwd: Vec<B::Buffer>,
+    /// The fwd set currently installed per sparse tensor — the delta
+    /// base hot swaps diff against.
+    installed_fwd: Vec<SparseSet>,
+    /// Flat dims per param (upload shape and domain validation).
+    param_dims: Vec<Vec<usize>>,
+    /// Spec indices of the sparse params, in spec order.
+    sparse_idx: Vec<usize>,
+}
+
+impl<B: Backend> InferState<B> {
+    /// Upload a model's inference state onto one device: dense θ per
+    /// param (4·n bytes each, once), fwd masks as index installs
+    /// (4·|fwd| bytes each via `mask_from_indices`). `values` is one
+    /// dense vector per param in spec order; `fwd_sets` one index set
+    /// per *sparse* param in spec order. Opt slots are never uploaded.
+    pub fn install_on(
+        client: &B,
+        model: &ModelEntry,
+        values: &[Vec<f32>],
+        fwd_sets: &[SparseSet],
+        device: usize,
+    ) -> Result<InferState<B>> {
+        if device >= client.device_count() {
+            bail!(
+                "device {device} out of range: client has {} devices",
+                client.device_count()
+            );
+        }
+        if values.len() != model.params.len() {
+            bail!(
+                "model {} has {} params, got {} value vectors",
+                model.name,
+                model.params.len(),
+                values.len()
+            );
+        }
+        let sparse_idx: Vec<usize> = model
+            .params
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.sparse)
+            .map(|(i, _)| i)
+            .collect();
+        if fwd_sets.len() != sparse_idx.len() {
+            bail!(
+                "model {} has {} sparse params, got {} fwd sets",
+                model.name,
+                sparse_idx.len(),
+                fwd_sets.len()
+            );
+        }
+        let param_dims: Vec<Vec<usize>> =
+            model.params.iter().map(|p| p.shape.dims().to_vec()).collect();
+        let mut params = Vec::with_capacity(values.len());
+        for (i, (vals, spec)) in values.iter().zip(&model.params).enumerate() {
+            if vals.len() != spec.shape.numel() {
+                bail!(
+                    "param {}: {} values, spec declares {}",
+                    spec.name,
+                    vals.len(),
+                    spec.shape.numel()
+                );
+            }
+            params.push(client.buffer_from_host_buffer(
+                vals,
+                &param_dims[i],
+                Some(device),
+            )?);
+        }
+        let mut masks_fwd = Vec::with_capacity(sparse_idx.len());
+        let mut installed_fwd = Vec::with_capacity(sparse_idx.len());
+        for (pos, &i) in sparse_idx.iter().enumerate() {
+            let set = &fwd_sets[pos];
+            if set.domain() != model.params[i].shape.numel() {
+                bail!(
+                    "fwd mask for {} spans {} elements, spec declares {}",
+                    model.params[i].name,
+                    set.domain(),
+                    model.params[i].shape.numel()
+                );
+            }
+            masks_fwd.push(client.mask_from_indices(
+                &param_dims[i],
+                set.indices(),
+                Some(device),
+            )?);
+            installed_fwd.push(set.clone());
+        }
+        Ok(InferState {
+            client: client.clone(),
+            device,
+            params,
+            masks_fwd,
+            installed_fwd,
+            param_dims,
+            sparse_idx,
+        })
+    }
+
+    pub fn device(&self) -> usize {
+        self.device
+    }
+
+    pub fn client(&self) -> &B {
+        &self.client
+    }
+
+    /// The fwd index set installed for sparse tensor `pos` (sparse
+    /// order) — swap logic diffs the incoming checkpoint against this.
+    pub fn installed_fwd(&self, pos: usize) -> &SparseSet {
+        &self.installed_fwd[pos]
+    }
+
+    /// Run an eval-convention executable over one request batch: θ and
+    /// fwd masks are *borrowed* resident inputs, x/y stream up as this
+    /// call's upload. Per execution the bus carries exactly the batch
+    /// bytes up and (after the caller downloads the two scalar
+    /// outputs) 8 bytes down — nothing is donated, so the state
+    /// survives arbitrarily many calls under `StrictBackend`.
+    pub fn run_eval(
+        &self,
+        exe: &Executable<B>,
+        x: TensorRef<'_>,
+        y: TensorRef<'_>,
+    ) -> Result<Vec<B::Buffer>> {
+        let mut inputs: Vec<DeviceInput<'_, B>> =
+            Vec::with_capacity(self.params.len() + self.masks_fwd.len() + 2);
+        for buf in &self.params {
+            inputs.push(DeviceInput::Resident(buf));
+        }
+        for buf in &self.masks_fwd {
+            inputs.push(DeviceInput::Resident(buf));
+        }
+        inputs.push(DeviceInput::Host(x));
+        inputs.push(DeviceInput::Host(y));
+        exe.run_device_on(inputs, self.device)
+    }
+
+    /// Hot-swap half 1: move sparse tensor `pos`'s fwd mask to
+    /// `target` by shipping only the index delta (the training refresh
+    /// path — the old mask buffer is donated to the scatter that
+    /// yields its replacement). Returns the delta for byte accounting;
+    /// an unchanged mask moves nothing.
+    pub fn apply_fwd_mask_delta(
+        &mut self,
+        pos: usize,
+        target: &SparseSet,
+    ) -> Result<SparseDelta> {
+        let installed = self
+            .installed_fwd
+            .get(pos)
+            .with_context(|| format!("no sparse tensor at position {pos}"))?;
+        if target.domain() != installed.domain() {
+            bail!(
+                "fwd mask delta for sparse tensor {pos}: domain {} -> {}",
+                installed.domain(),
+                target.domain()
+            );
+        }
+        let delta = installed.delta_to(target);
+        if !delta.is_empty() {
+            let cur = self.masks_fwd.remove(pos);
+            self.masks_fwd
+                .insert(pos, cur.scatter_mask_update(&delta.added, &delta.removed)?);
+        }
+        self.installed_fwd[pos] = target.clone();
+        Ok(delta)
+    }
+
+    /// Hot-swap half 2: overwrite θ of param `param_index` (spec
+    /// order) at the given sorted indices — 4·(|indices|+|values|)
+    /// bytes via the metered value scatter, old buffer donated. An
+    /// empty update moves nothing.
+    pub fn apply_value_update(
+        &mut self,
+        param_index: usize,
+        indices: &[u32],
+        values: &[f32],
+    ) -> Result<()> {
+        if param_index >= self.params.len() {
+            bail!("param index {param_index} out of range");
+        }
+        if indices.is_empty() {
+            return Ok(());
+        }
+        let cur = self.params.remove(param_index);
+        self.params
+            .insert(param_index, cur.scatter_values_update(indices, values)?);
+        Ok(())
+    }
+
+    /// Spec indices of the sparse params, in sparse order.
+    pub fn sparse_indices(&self) -> &[usize] {
+        &self.sparse_idx
+    }
+
+    /// Flat dims of param `i` (spec order).
+    pub fn param_dims(&self, i: usize) -> &[usize] {
+        &self.param_dims[i]
+    }
+}

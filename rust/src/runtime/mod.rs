@@ -18,6 +18,7 @@
 pub mod backend;
 pub mod client;
 pub mod device_state;
+pub mod infer_state;
 pub mod manifest;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
@@ -28,6 +29,7 @@ pub mod synthetic;
 pub use backend::{env_backend_name, AnyBackend, Backend, BufferOps, ExecInput, BACKEND_ENV};
 pub use client::{DeviceInput, Executable, Runtime, TensorRef};
 pub use device_state::{DeviceState, TrafficModel};
+pub use infer_state::InferState;
 pub use manifest::{
     ArtifactSpec, Dtype, EvalLayout, InitKind, IoSpec, Manifest, ModelEntry,
     Optimizer, ParamSpec, ReplicatedLayout, ReplicationSpec, TrainLayout,

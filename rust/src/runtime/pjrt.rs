@@ -74,6 +74,10 @@ impl BufferOps for PjrtBuffer {
         match self {}
     }
 
+    fn scatter_values_update(self, _indices: &[u32], _values: &[f32]) -> Result<Self> {
+        match self {}
+    }
+
     fn debug_read_f32(&self) -> Option<Vec<f32>> {
         match *self {}
     }

@@ -131,6 +131,14 @@ impl BufferOps for StrictBuffer {
         ))
     }
 
+    fn scatter_values_update(self, indices: &[u32], values: &[f32]) -> Result<Self> {
+        self.guard("scatter_values_update")?;
+        self.mark_donated();
+        Ok(StrictBuffer::fresh(
+            self.inner.scatter_values_update(indices, values)?,
+        ))
+    }
+
     fn debug_read_f32(&self) -> Option<Vec<f32>> {
         if self.donated.load(Ordering::SeqCst) {
             return None; // no free host view of dead memory

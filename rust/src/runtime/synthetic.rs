@@ -136,6 +136,7 @@ impl Synthetic {
             train: art("train", &train_inputs, &train_outputs),
             eval: art("eval", &eval_inputs, &eval_outputs),
             grad_norms: art("grad_norms", &eval_inputs, &gn_outputs),
+            replication: None,
             params,
             config,
         };

@@ -1,0 +1,57 @@
+//! The inference serving plane: load a `TKC2` (or legacy `TKC1`)
+//! checkpoint into resident inference-only device buffers, batch
+//! concurrent requests across the simulated device set, and hot-swap
+//! checkpoints mid-traffic.
+//!
+//! This is the first inference-side consumer of the training-side
+//! invariants: it reads checkpoints through the
+//! [`Checkpoint`](crate::coordinator::checkpoint::Checkpoint)
+//! read-side API (no `ParamStore`, no optimiser mirror — opt slots
+//! never cross the bus), installs θ and the paper's forward set A as
+//! resident buffers via [`InferState`](crate::runtime::InferState),
+//! and serves every request by *borrowing* that state — steady-state
+//! traffic is exactly "batch up, logits down" per execution, and the
+//! whole plane runs clean under `TOPKAST_BACKEND=strict` (any
+//! accidental donation of a resident buffer is a hard
+//! use-after-donate error).
+//!
+//! # Swap protocol
+//!
+//! [`CheckpointSwapper`] moves a live [`ModelServer`] to a new
+//! checkpoint between ticks. Two paths:
+//!
+//! * **Delta swap** — eligible when the incoming checkpoint is a
+//!   *same-run successor*: it records an init seed, that seed equals
+//!   the installed model's, and its param sections match the serving
+//!   manifest name-for-name. The installed state is then bit-equal to
+//!   the same init base, so only differences need to move: per sparse
+//!   tensor the fwd-mask *index delta* (the training refresh path —
+//!   `scatter_mask_update`), and per param the θ values whose bits
+//!   changed vs the server's host mirror (`scatter_values_update`).
+//!   The upload is exactly `4·Δindices + 4·|changed θ|` bytes per
+//!   device, where `Δindices` counts every index word crossing the bus
+//!   (mask delta added+removed, plus one index per changed θ value)
+//!   and `|changed θ|` counts the value words — O(Δnnz) between
+//!   successive refreshes of one run.
+//! * **Full reload** — the fallback for a *foreign* checkpoint (no
+//!   recorded seed, a different seed, or any extraction mismatch):
+//!   fresh `InferState`s are built on a shadow buffer set at full
+//!   upload cost (dense θ + fwd index installs) while the old state
+//!   remains installed, then the server flips to the shadows
+//!   atomically.
+//!
+//! **Blackout** is the wall-clock window during which the server could
+//! not admit an execution: the whole scatter window for a delta swap
+//! (the resident buffers are being replaced in place), but only the
+//! pointer flip for a full reload (the expensive uploads happen on
+//! shadows, off the serving path). Both are measured and reported in
+//! [`SwapReport`], along with measured swap bytes and the
+//! full-upload cost they undercut.
+
+pub mod server;
+pub mod swap;
+
+pub use server::{
+    Completion, ModelServer, ServeConfig, ServeStats, TraceConfig, TraceSummary,
+};
+pub use swap::{CheckpointSwapper, SwapMode, SwapReport};

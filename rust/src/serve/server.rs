@@ -1,0 +1,445 @@
+//! [`ModelServer`]: resident-buffer inference over a checkpoint, with
+//! an admission/batching queue over the simulated device set.
+//!
+//! Time is tick-driven and deterministic: callers [`submit`] requests
+//! (one example each), and every [`tick`] first retires the
+//! executions launched on the previous tick (service time is one
+//! tick), then packs queued requests into device-batch-sized
+//! executions and places them least-loaded-first across the devices,
+//! respecting a per-device in-flight limit. Wall-clock throughput is
+//! measured separately by the open-loop trace driver.
+//!
+//! [`submit`]: ModelServer::submit
+//! [`tick`]: ModelServer::tick
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::runtime::manifest::Dtype;
+use crate::runtime::{Backend, InferState, ModelEntry, Runtime, TensorRef};
+use crate::runtime::backend::AnyBackend;
+use crate::tensor::SparseSet;
+use crate::util::rng::Pcg64;
+use crate::util::timer::Stopwatch;
+
+/// Serving knobs. `max_batch` is how many requests one execution
+/// carries (0, or anything larger than the compiled graph's batch,
+/// resolves to the graph batch; smaller values leave the tail of each
+/// execution zero-padded). `inflight_limit` caps executions
+/// outstanding per device per tick (0 resolves to 1).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeConfig {
+    pub max_batch: usize,
+    pub inflight_limit: usize,
+}
+
+struct QueuedRequest {
+    id: u64,
+    x: Vec<f32>,
+    y: f32,
+    arrived: u64,
+}
+
+/// One retired execution: which requests it carried, where and when it
+/// ran, and the eval-convention logits ([loss, metric] scalars) it
+/// produced for the whole batch.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub request_ids: Vec<u64>,
+    pub device: usize,
+    pub launched: u64,
+    pub completed: u64,
+    pub loss: f32,
+    pub metric: f32,
+    /// Zero-padded rows in this execution (drain-time partial batch).
+    pub padded: usize,
+}
+
+/// Lifetime counters of one server.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub executions: u64,
+    pub padded_rows: u64,
+    pub per_device_executions: Vec<u64>,
+    /// Per completed request: completion tick − arrival tick.
+    pub latencies_ticks: Vec<u64>,
+}
+
+impl ServeStats {
+    /// Latency percentile in ticks (`p` in [0, 1]); 0 when nothing has
+    /// completed yet. Nearest-rank on the sorted sample.
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        if self.latencies_ticks.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.latencies_ticks.clone();
+        v.sort_unstable();
+        let idx = ((v.len() - 1) as f64 * p.clamp(0.0, 1.0)).round() as usize;
+        v[idx] as f64
+    }
+}
+
+/// Deterministic open-loop arrival trace: `per_tick` synthetic
+/// requests drawn from a seeded stream are submitted every tick until
+/// `requests` have arrived, then the queue drains.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceConfig {
+    pub requests: usize,
+    pub per_tick: usize,
+    pub seed: u64,
+}
+
+/// What one [`ModelServer::run_open_loop`] call did. Percentiles and
+/// device spread cover the server's lifetime (so a swap mid-traffic
+/// keeps one continuous latency record); requests and wall time cover
+/// this call only.
+#[derive(Clone, Debug)]
+pub struct TraceSummary {
+    pub requests: usize,
+    pub executions: u64,
+    pub wall_ms: f64,
+    pub requests_per_sec: f64,
+    pub p50_ticks: f64,
+    pub p95_ticks: f64,
+    pub per_device_executions: Vec<u64>,
+}
+
+/// A checkpoint loaded into inference-only resident buffers on every
+/// device of a runtime, plus the admission queue in front of them. See
+/// the [module docs](self) and [crate::serve] for the protocol.
+pub struct ModelServer<B: Backend = AnyBackend> {
+    pub(super) runtime: Runtime<B>,
+    pub(super) model: ModelEntry,
+    /// One resident state per device, all serving the same model.
+    pub(super) states: Vec<InferState<B>>,
+    /// Host mirror of θ per param (spec order) — the diff base a delta
+    /// swap compares the incoming checkpoint against.
+    pub(super) values: Vec<Vec<f32>>,
+    /// Host mirror of the installed fwd sets (sparse order).
+    pub(super) fwd_sets: Vec<SparseSet>,
+    /// Init seed of the installed checkpoint (delta-swap eligibility).
+    pub(super) seed: Option<u64>,
+    /// Step of the installed checkpoint.
+    pub(super) step: usize,
+    graph_batch: usize,
+    row_len: usize,
+    max_batch: usize,
+    inflight_limit: usize,
+    queue: VecDeque<QueuedRequest>,
+    inflight: Vec<Completion>,
+    tick: u64,
+    next_id: u64,
+    stats: ServeStats,
+}
+
+/// Pull a model's serving state (dense θ per param, fwd set per sparse
+/// param) off a loaded checkpoint, validating it against the manifest.
+pub(super) fn extract_model_state(
+    model: &ModelEntry,
+    ck: &Checkpoint,
+) -> Result<(Vec<Vec<f32>>, Vec<SparseSet>)> {
+    let have: Vec<&str> = ck.param_names().collect();
+    let want: Vec<&str> = model.params.iter().map(|p| p.name.as_str()).collect();
+    if have != want {
+        bail!(
+            "checkpoint params {have:?} do not match serving model {} \
+             params {want:?}",
+            model.name
+        );
+    }
+    let values = model
+        .params
+        .iter()
+        .map(|p| ck.param_values(&model.params, &p.name))
+        .collect::<Result<Vec<_>>>()?;
+    let mut fwd = Vec::new();
+    for p in model.params.iter().filter(|p| p.sparse) {
+        let set = ck.fwd_mask(&p.name)?;
+        if set.domain() != p.shape.numel() {
+            bail!(
+                "fwd mask for {} spans {} elements, spec declares {}",
+                p.name,
+                set.domain(),
+                p.shape.numel()
+            );
+        }
+        fwd.push(set.clone());
+    }
+    Ok((values, fwd))
+}
+
+impl<B: Backend> ModelServer<B> {
+    /// Load `ck` into resident inference buffers on every device of
+    /// `runtime` and stand up the admission queue. The model's eval
+    /// artifact must be loadable through the runtime (synthetic models
+    /// preload it; manifest models compile from disk here).
+    pub fn from_checkpoint(
+        mut runtime: Runtime<B>,
+        model: ModelEntry,
+        ck: &Checkpoint,
+        cfg: ServeConfig,
+    ) -> Result<ModelServer<B>> {
+        runtime.load(&model.eval)?;
+        let (graph_batch, row_len) = {
+            let exe = runtime.get(&model.eval)?;
+            let layout = model.eval_layout(&exe.spec)?;
+            let x_io = &exe.spec.inputs[layout.batch.start];
+            let y_io = &exe.spec.inputs[layout.batch.start + 1];
+            if x_io.dtype != Dtype::F32 || y_io.dtype != Dtype::F32 {
+                bail!(
+                    "serve supports f32 batches only; eval artifact of {} \
+                     declares x {:?} / y {:?}",
+                    model.name,
+                    x_io.dtype,
+                    y_io.dtype
+                );
+            }
+            let batch = *x_io
+                .shape
+                .dims()
+                .first()
+                .context("eval batch input is a scalar")?;
+            if batch == 0 || y_io.shape.numel() != batch {
+                bail!(
+                    "eval artifact of {}: x batch {} vs y {} labels",
+                    model.name,
+                    batch,
+                    y_io.shape.numel()
+                );
+            }
+            (batch, x_io.shape.numel() / batch)
+        };
+        let (values, fwd_sets) = extract_model_state(&model, ck)?;
+        let client = runtime.client().clone();
+        let devices = runtime.device_count();
+        let mut states = Vec::with_capacity(devices);
+        for d in 0..devices {
+            states.push(InferState::install_on(&client, &model, &values, &fwd_sets, d)?);
+        }
+        let max_batch = match cfg.max_batch {
+            0 => graph_batch,
+            n => n.min(graph_batch),
+        };
+        Ok(ModelServer {
+            runtime,
+            model,
+            states,
+            values,
+            fwd_sets,
+            seed: ck.seed,
+            step: ck.step,
+            graph_batch,
+            row_len,
+            max_batch,
+            inflight_limit: cfg.inflight_limit.max(1),
+            queue: VecDeque::new(),
+            inflight: Vec::new(),
+            tick: 0,
+            next_id: 0,
+            stats: ServeStats {
+                per_device_executions: vec![0; devices],
+                ..ServeStats::default()
+            },
+        })
+    }
+
+    /// Enqueue one request (a single example). Returns its id; the
+    /// matching [`Completion`] carries it once the batch it joins
+    /// retires.
+    pub fn submit(&mut self, x: Vec<f32>, y: f32) -> Result<u64> {
+        if x.len() != self.row_len {
+            bail!(
+                "request row has {} features, model {} takes {}",
+                x.len(),
+                self.model.name,
+                self.row_len
+            );
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.stats.submitted += 1;
+        self.queue.push_back(QueuedRequest { id, x, y, arrived: self.tick });
+        Ok(id)
+    }
+
+    /// Advance one tick: retire executions launched last tick, then
+    /// admit full batches from the queue onto the least-loaded devices.
+    pub fn tick(&mut self) -> Result<Vec<Completion>> {
+        self.step_tick(false)
+    }
+
+    /// Run the clock until queue and in-flight work are empty, padding
+    /// the final partial batch with zero rows. Returns everything that
+    /// retired.
+    pub fn drain(&mut self) -> Result<Vec<Completion>> {
+        let mut all = Vec::new();
+        while !self.queue.is_empty() || !self.inflight.is_empty() {
+            all.extend(self.step_tick(true)?);
+        }
+        Ok(all)
+    }
+
+    fn step_tick(&mut self, flush: bool) -> Result<Vec<Completion>> {
+        self.tick += 1;
+        let tick = self.tick;
+        let mut done = Vec::new();
+        self.inflight.retain(|c| {
+            if c.completed <= tick {
+                done.push(c.clone());
+                false
+            } else {
+                true
+            }
+        });
+        for c in &done {
+            self.stats.completed += c.request_ids.len() as u64;
+        }
+        self.admit(flush)?;
+        Ok(done)
+    }
+
+    fn inflight_on(&self, device: usize) -> usize {
+        self.inflight
+            .iter()
+            .filter(|c| c.device == device && c.completed > self.tick)
+            .count()
+    }
+
+    /// Least-loaded placement, ties to the lowest device index.
+    fn pick_device(&self) -> Option<usize> {
+        (0..self.states.len())
+            .map(|d| (self.inflight_on(d), d))
+            .filter(|&(n, _)| n < self.inflight_limit)
+            .min()
+            .map(|(_, d)| d)
+    }
+
+    fn admit(&mut self, flush: bool) -> Result<()> {
+        loop {
+            let take = self.max_batch.min(self.queue.len());
+            if take == 0 || (take < self.max_batch && !flush) {
+                break;
+            }
+            let Some(device) = self.pick_device() else { break };
+            let mut ids = Vec::with_capacity(take);
+            let mut arrivals = Vec::with_capacity(take);
+            let mut x = vec![0.0f32; self.graph_batch * self.row_len];
+            let mut y = vec![0.0f32; self.graph_batch];
+            for slot in 0..take {
+                let r = self.queue.pop_front().expect("take <= queue.len()");
+                x[slot * self.row_len..(slot + 1) * self.row_len]
+                    .copy_from_slice(&r.x);
+                y[slot] = r.y;
+                arrivals.push(r.arrived);
+                ids.push(r.id);
+            }
+            let (loss, metric) = self.execute_on(device, &x, &y)?;
+            let completed = self.tick + 1;
+            for &arrived in &arrivals {
+                self.stats.latencies_ticks.push(completed.saturating_sub(arrived));
+            }
+            self.stats.executions += 1;
+            self.stats.per_device_executions[device] += 1;
+            self.stats.padded_rows += (self.graph_batch - take) as u64;
+            self.inflight.push(Completion {
+                request_ids: ids,
+                device,
+                launched: self.tick,
+                completed,
+                loss,
+                metric,
+                padded: self.graph_batch - take,
+            });
+        }
+        Ok(())
+    }
+
+    /// One eval-convention execution on `device`: resident θ + fwd
+    /// masks borrowed, batch streamed up, two scalar logits downloaded.
+    fn execute_on(&self, device: usize, x: &[f32], y: &[f32]) -> Result<(f32, f32)> {
+        let exe = self.runtime.get(&self.model.eval)?;
+        let outs =
+            self.states[device].run_eval(exe, TensorRef::F32(x), TensorRef::F32(y))?;
+        if outs.len() < 2 {
+            bail!("eval artifact returned {} outputs, expected 2", outs.len());
+        }
+        let loss = exe.download(&outs[0], &exe.spec.outputs[0])?.as_f32()?[0];
+        let metric = exe.download(&outs[1], &exe.spec.outputs[1])?.as_f32()?[0];
+        Ok((loss, metric))
+    }
+
+    /// Drive a deterministic open-loop arrival trace to completion.
+    pub fn run_open_loop(&mut self, trace: &TraceConfig) -> Result<TraceSummary> {
+        let sw = Stopwatch::start();
+        let mut rng = Pcg64::new(trace.seed, 0x5EE7);
+        let mut sent = 0usize;
+        while sent < trace.requests {
+            for _ in 0..trace.per_tick.max(1).min(trace.requests - sent) {
+                let x: Vec<f32> = (0..self.row_len)
+                    .map(|_| rng.next_f32() * 2.0 - 1.0)
+                    .collect();
+                let y = rng.next_f32();
+                self.submit(x, y)?;
+                sent += 1;
+            }
+            self.tick()?;
+        }
+        self.drain()?;
+        let wall_ms = sw.elapsed_ms();
+        Ok(TraceSummary {
+            requests: sent,
+            executions: self.stats.executions,
+            wall_ms,
+            requests_per_sec: if wall_ms > 0.0 {
+                sent as f64 / (wall_ms / 1e3)
+            } else {
+                0.0
+            },
+            p50_ticks: self.stats.latency_percentile(0.50),
+            p95_ticks: self.stats.latency_percentile(0.95),
+            per_device_executions: self.stats.per_device_executions.clone(),
+        })
+    }
+
+    pub fn stats(&self) -> &ServeStats {
+        &self.stats
+    }
+
+    /// The step of the currently installed checkpoint.
+    pub fn installed_step(&self) -> usize {
+        self.step
+    }
+
+    /// The init seed of the currently installed checkpoint.
+    pub fn installed_seed(&self) -> Option<u64> {
+        self.seed
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.states.len()
+    }
+
+    /// Requests one execution carries (the compiled graph's batch).
+    pub fn batch_size(&self) -> usize {
+        self.graph_batch
+    }
+
+    /// Features per request row.
+    pub fn row_len(&self) -> usize {
+        self.row_len
+    }
+
+    pub fn model(&self) -> &ModelEntry {
+        &self.model
+    }
+
+    /// Cumulative transfer counters of the backing client (all
+    /// devices) — the serve suites pin "batch up, logits down" on this.
+    pub fn transfer_stats(&self) -> crate::xla::TransferSnapshot {
+        self.runtime.transfer_stats()
+    }
+}

@@ -1,0 +1,167 @@
+//! [`CheckpointSwapper`]: hot-swap a live [`ModelServer`] to a new
+//! checkpoint. See the [module docs](super) for the protocol
+//! (delta-eligible vs full-reload conditions, blackout definition,
+//! byte accounting).
+
+use anyhow::Result;
+
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::runtime::{Backend, InferState};
+use crate::util::timer::Stopwatch;
+
+use super::server::{extract_model_state, ModelServer};
+
+/// Which path a swap took.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SwapMode {
+    /// Same-run successor: fwd-mask index deltas + changed-θ value
+    /// scatters onto the live buffers — O(Δnnz).
+    Delta,
+    /// Foreign checkpoint: full upload onto shadow buffers, then an
+    /// atomic flip.
+    FullReload,
+}
+
+/// What a swap moved and how long traffic stood still.
+#[derive(Clone, Debug)]
+pub struct SwapReport {
+    pub mode: SwapMode,
+    pub step_from: usize,
+    pub step_to: usize,
+    pub devices: usize,
+    /// Wall-clock window during which no execution could be admitted:
+    /// the in-place scatter window for [`SwapMode::Delta`], only the
+    /// pointer flip for [`SwapMode::FullReload`].
+    pub blackout_ms: f64,
+    /// Measured h2d bytes of the swap, summed over all devices.
+    pub swap_h2d_bytes: u64,
+    /// What a cold install of the incoming checkpoint costs (dense θ +
+    /// fwd index installs), all devices — the baseline a delta swap
+    /// undercuts, and exactly what [`SwapMode::FullReload`] pays.
+    pub full_upload_bytes: u64,
+    /// Index words shipped per device on the delta path: fwd-mask
+    /// delta (added+removed) plus one index per changed θ value.
+    pub delta_index_words: usize,
+    /// Changed θ value words shipped per device on the delta path.
+    pub changed_value_words: usize,
+}
+
+/// Stateless swap executor (the policy — eligibility and path choice —
+/// is fixed by the protocol; knobs would live here).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CheckpointSwapper;
+
+impl CheckpointSwapper {
+    pub fn new() -> CheckpointSwapper {
+        CheckpointSwapper
+    }
+
+    /// Swap `server` to `incoming` between ticks. Delta-eligible when
+    /// both the installed and incoming checkpoints record the same
+    /// init seed (and the param sections match the serving manifest —
+    /// extraction enforces that for either path); everything else
+    /// takes the shadow-reload path. In-flight work is unaffected
+    /// either way: swaps run between ticks, after the previous tick's
+    /// executions already produced their logits.
+    pub fn swap<B: Backend>(
+        &self,
+        server: &mut ModelServer<B>,
+        incoming: &Checkpoint,
+    ) -> Result<SwapReport> {
+        let (values, fwd_sets) = extract_model_state(&server.model, incoming)?;
+        let devices = server.states.len();
+        let dense_words: usize =
+            server.model.params.iter().map(|p| p.shape.numel()).sum();
+        let fwd_words: usize = fwd_sets.iter().map(|s| s.len()).sum();
+        let full_upload_bytes = (devices * 4 * (dense_words + fwd_words)) as u64;
+        let delta_eligible = matches!(
+            (server.seed, incoming.seed),
+            (Some(a), Some(b)) if a == b
+        );
+        let step_from = server.step;
+        let before = server.runtime.transfer_stats();
+
+        let (mode, blackout_ms, delta_index_words, changed_value_words);
+        if delta_eligible {
+            // diff on the host first: mask deltas vs the installed
+            // sets, θ bit-changes vs the host mirror
+            let mask_words: usize = server
+                .fwd_sets
+                .iter()
+                .zip(&fwd_sets)
+                .map(|(old, new)| old.delta_to(new).total())
+                .sum();
+            let updates: Vec<(Vec<u32>, Vec<f32>)> = server
+                .values
+                .iter()
+                .zip(&values)
+                .map(|(old, new)| {
+                    let mut idx = Vec::new();
+                    let mut vals = Vec::new();
+                    for (j, (o, n)) in old.iter().zip(new).enumerate() {
+                        if o.to_bits() != n.to_bits() {
+                            idx.push(j as u32);
+                            vals.push(*n);
+                        }
+                    }
+                    (idx, vals)
+                })
+                .collect();
+            let changed: usize = updates.iter().map(|(i, _)| i.len()).sum();
+            // blackout: the live buffers are replaced in place, so the
+            // whole scatter window stalls admission
+            let sw = Stopwatch::start();
+            for state in &mut server.states {
+                for (pos, target) in fwd_sets.iter().enumerate() {
+                    state.apply_fwd_mask_delta(pos, target)?;
+                }
+                for (i, (idx, vals)) in updates.iter().enumerate() {
+                    state.apply_value_update(i, idx, vals)?;
+                }
+            }
+            blackout_ms = sw.elapsed_ms();
+            mode = SwapMode::Delta;
+            delta_index_words = mask_words + changed;
+            changed_value_words = changed;
+        } else {
+            // foreign checkpoint: build complete shadow states at full
+            // upload cost while the installed ones keep serving, then
+            // flip — blackout is just the exchange
+            let client = server.runtime.client().clone();
+            let mut shadows = Vec::with_capacity(devices);
+            for d in 0..devices {
+                shadows.push(InferState::install_on(
+                    &client,
+                    &server.model,
+                    &values,
+                    &fwd_sets,
+                    d,
+                )?);
+            }
+            let sw = Stopwatch::start();
+            server.states = shadows;
+            blackout_ms = sw.elapsed_ms();
+            mode = SwapMode::FullReload;
+            delta_index_words = 0;
+            changed_value_words = 0;
+        }
+
+        let swap_h2d_bytes =
+            server.runtime.transfer_stats().since(&before).h2d_bytes;
+        server.values = values;
+        server.fwd_sets = fwd_sets;
+        server.seed = incoming.seed;
+        server.step = incoming.step;
+        Ok(SwapReport {
+            mode,
+            step_from,
+            step_to: incoming.step,
+            devices,
+            blackout_ms,
+            swap_h2d_bytes,
+            full_upload_bytes,
+            delta_index_words,
+            changed_value_words,
+        })
+    }
+}

@@ -20,7 +20,7 @@ pub use registry::{
 pub use rigl::RigL;
 pub use set_evolve::SetEvolve;
 pub use static_random::StaticRandom;
-pub use store::{MaskPair, ParamEntry, ParamStore};
+pub use store::{replay_init_values, MaskPair, ParamEntry, ParamStore};
 pub use strategy::{update_store_masks, Densities, MaskStrategy, TensorCtx};
 pub use topkast::{TopKast, TopKastRandom};
 

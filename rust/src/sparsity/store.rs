@@ -200,6 +200,22 @@ pub struct ParamStore {
     init_seed: Option<u64>,
 }
 
+/// Replay the init values the entry at position `index` receives from
+/// `ParamStore::init(specs, seed)`, without building a store — the
+/// deterministic base sparse checkpoint payloads are relative to.
+/// `init` forks one child stream per entry in order, so the fork
+/// sequence is replayed up to `index` and entry `index`'s stream comes
+/// out identical.
+pub fn replay_init_values(spec: &ParamSpec, index: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::new(seed, 0x1217);
+    let mut child = None;
+    for j in 0..=index {
+        child = Some(rng.fork(j as u64));
+    }
+    let mut child = child.expect("0..=index is never empty");
+    draw_init(spec, &mut child)
+}
+
 /// Draw one tensor's init values from its per-entry child stream.
 fn draw_init(spec: &ParamSpec, child: &mut Pcg64) -> Vec<f32> {
     let n = spec.shape.numel();
@@ -247,15 +263,7 @@ impl ParamStore {
             .index
             .get(name)
             .ok_or_else(|| anyhow!("unknown param {name:?}"))?;
-        // `init` forks one child per entry in order; replay that
-        // sequence so entry i's stream comes out identical.
-        let mut rng = Pcg64::new(seed, 0x1217);
-        let mut child = None;
-        for j in 0..=i {
-            child = Some(rng.fork(j as u64));
-        }
-        let mut child = child.expect("0..=i is never empty");
-        Ok(draw_init(&self.entries[i].spec, &mut child))
+        Ok(replay_init_values(&self.entries[i].spec, i, seed))
     }
 
     pub fn get(&self, name: &str) -> Result<&ParamEntry> {

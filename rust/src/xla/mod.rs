@@ -518,6 +518,44 @@ impl PjRtBuffer {
         })
     }
 
+    /// Scatter-style sparse value update: a new resident buffer equal
+    /// to this f32 buffer with `values[k]` written at `indices[k]` —
+    /// the serve-plane hot-swap path (and the value half of a refresh
+    /// upload). Index words and value words both cross the simulated
+    /// bus — 4·(|indices|+|values|) bytes in one h2d call; an empty
+    /// update aliases this buffer and moves nothing.
+    pub fn scatter_values_update(
+        &self,
+        indices: &[u32],
+        values: &[f32],
+    ) -> Result<PjRtBuffer> {
+        let Storage::F32(current) = self.data.as_ref() else {
+            bail!("scatter_values_update on a non-f32 buffer");
+        };
+        let n = current.len();
+        validate_sorted_indices(indices, n, "scatter_values_update")?;
+        if indices.len() != values.len() {
+            bail!(
+                "scatter_values_update: {} indices but {} values",
+                indices.len(),
+                values.len()
+            );
+        }
+        if indices.is_empty() {
+            return Ok(self.clone());
+        }
+        self.stats.record_h2d(4 * (indices.len() + values.len()) as u64);
+        let mut dense = current.clone();
+        for (&i, &v) in indices.iter().zip(values) {
+            dense[i as usize] = v;
+        }
+        Ok(PjRtBuffer {
+            data: Arc::new(Storage::F32(dense)),
+            stats: self.stats.clone(),
+            device: self.device,
+        })
+    }
+
     /// Metered sparse download: the buffer's values at the given sorted
     /// indices. The gather is driven by device-resident index state
     /// (the installed masks), so only the values cross the bus —
@@ -1291,6 +1329,45 @@ mod tests {
         assert!(client.mask_from_indices(&[8], &[4, 1], None).is_err());
         assert!(client.mask_from_indices(&[8], &[8], None).is_err());
         assert!(mask.scatter_mask_update(&[9], &[]).is_err());
+    }
+
+    #[test]
+    fn sparse_value_scatter_meters_index_plus_value_bytes() {
+        let client = PjRtClient::cpu_with_devices(2).unwrap();
+        let buf = client
+            .buffer_from_host_buffer::<f32>(
+                &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0],
+                &[6],
+                Some(1),
+            )
+            .unwrap();
+        // 2 indices + 2 values = 4 words = 16 bytes, one h2d call
+        let before = client.device_transfer_stats(1).unwrap();
+        let updated = buf.scatter_values_update(&[1, 4], &[-1.5, 9.0]).unwrap();
+        let d = client.device_transfer_stats(1).unwrap().since(&before);
+        assert_eq!((d.h2d_bytes, d.h2d_calls), (16, 1));
+        assert_eq!(updated.device(), 1);
+        assert_eq!(
+            updated.debug_read_f32().unwrap(),
+            vec![0.0, -1.5, 2.0, 3.0, 9.0, 5.0]
+        );
+        // the source buffer is untouched (new memory, not in-place)
+        assert_eq!(
+            buf.debug_read_f32().unwrap(),
+            vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]
+        );
+        // empty update aliases and moves nothing
+        let before = client.device_transfer_stats(1).unwrap();
+        let same = updated.scatter_values_update(&[], &[]).unwrap();
+        assert_eq!(
+            client.device_transfer_stats(1).unwrap().since(&before),
+            TransferSnapshot::default()
+        );
+        assert_eq!(same.element_count(), 6);
+        // validation: unsorted, out-of-range, length mismatch
+        assert!(buf.scatter_values_update(&[4, 1], &[0.0, 0.0]).is_err());
+        assert!(buf.scatter_values_update(&[6], &[0.0]).is_err());
+        assert!(buf.scatter_values_update(&[1, 4], &[0.0]).is_err());
     }
 
     #[test]

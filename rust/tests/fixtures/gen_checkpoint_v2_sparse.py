@@ -1,0 +1,65 @@
+#!/usr/bin/env python3
+"""Writes checkpoint_v2_sparse.ckpt, the pinned TKC2 compatibility fixture.
+
+The byte layout mirrors what `Checkpoint::save` emits: 4-byte magic
+"TKC2", u64 LE header length, compact JSON header, little-endian blob.
+All f32 values are exactly representable so the rust test can compare
+bit-for-bit. The sparse param's touched set ({0,1,2,3,7}) is a superset
+of both masks, matching the training invariant; untouched positions are
+reconstructed at load time by replaying init seed 31.
+
+Run from the repo root:  python3 rust/tests/fixtures/gen_checkpoint_v2_sparse.py
+"""
+import json
+import struct
+from pathlib import Path
+
+blob = bytearray()
+sections = []
+
+
+def section(kind, name, dtype, values, domain=None):
+    fmt = "<%d%s" % (len(values), "I" if dtype == "u32" else "f")
+    entry = {
+        "kind": kind,
+        "name": name,
+        "dtype": dtype,
+        "offset": len(blob),
+        "len": len(values),
+    }
+    if domain is not None:
+        entry["domain"] = domain
+    sections.append(entry)
+    blob.extend(struct.pack(fmt, *values))
+
+
+# params: w stored sparsely at its touched set, b stored dense
+section("param_idx", "w", "u32", [0, 1, 2, 3, 7], domain=8)
+section("param_vals", "w", "f32", [0.5, -1.25, 2.0, -0.125, -7.75])
+section("param", "b", "f32", [1.0, -2.0, 0.5, 4.0])
+# masks of w (fwd ⊆ bwd ⊆ touched)
+section("mask_fwd", "w", "u32", [0, 2, 7], domain=8)
+section("mask_bwd", "w", "u32", [0, 1, 2, 7], domain=8)
+# one optimiser slot per param: sparse for w (aligned to touched),
+# dense for b
+section("opt_vals", "slot0", "f32", [0.25, 0.125, -0.5, 0.0625, 8.0], domain=8)
+section("opt", "slot1", "f32", [0.0625, 0.0, -1.0, 2.5])
+
+header = json.dumps(
+    {
+        "version": 2,
+        "step": 4242,
+        "blob_len": len(blob),
+        "sections": sections,
+        "seed": "31",
+    },
+    separators=(",", ":"),
+)
+
+out = Path(__file__).parent / "checkpoint_v2_sparse.ckpt"
+with open(out, "wb") as f:
+    f.write(b"TKC2")
+    f.write(struct.pack("<Q", len(header)))
+    f.write(header.encode())
+    f.write(blob)
+print(f"wrote {out}: header {len(header)} bytes, blob {len(blob)} bytes")

@@ -1,0 +1,372 @@
+//! Serving-plane acceptance suite.
+//!
+//! Proves the three load-bearing properties of `topkast::serve`:
+//!
+//! 1. **Inference parity** — logits served from a checkpoint are
+//!    bitwise identical to the `Trainer`'s own eval on the same state,
+//!    for every request, across 1/2/4 simulated devices.
+//! 2. **O(Δnnz) hot swap** — a same-run successor swap uploads exactly
+//!    `4·Δindices + 4·|changed θ|` bytes per device (recomputed here
+//!    from the two checkpoints independently of the swap code), and the
+//!    post-swap logits are bitwise identical to a cold load of the
+//!    successor. A foreign checkpoint falls back to a full reload.
+//! 3. **Strict cleanliness** — the serve path never donates a resident
+//!    buffer: the whole suite runs on `StrictBackend` as well as the
+//!    host-sim, and repeated inference moves exactly "batch up, logits
+//!    down" on the metered counters per execution.
+//!
+//! Backends are constructed by name (`AnyBackend::from_name`), so the
+//! suite is deterministic regardless of `TOPKAST_BACKEND`; CI runs it
+//! under the env matrix anyway.
+
+use topkast::coordinator::{Checkpoint, Trainer, TrainerConfig};
+use topkast::runtime::{AnyBackend, Runtime, Synthetic};
+use topkast::serve::{CheckpointSwapper, Completion, ModelServer, ServeConfig, SwapMode};
+use topkast::sparsity::TopKast;
+use topkast::tensor::SparseSet;
+
+const BACKENDS: [&str; 2] = ["sim", "strict"];
+
+fn cfg(steps: usize, seed: u64) -> TrainerConfig {
+    TrainerConfig { steps, refresh_every: 3, seed, ..TrainerConfig::default() }
+}
+
+fn strategy() -> Box<TopKast> {
+    Box::new(TopKast::from_sparsities(0.8, 0.5))
+}
+
+fn trainer_on(backend: &str, synth: &Synthetic, cfg: TrainerConfig) -> Trainer {
+    let client = AnyBackend::from_name(backend, 1).unwrap();
+    let mut rt = Runtime::from_backend(client);
+    synth.install(&mut rt).unwrap();
+    let data = synth.data(cfg.seed ^ 0xDA7A);
+    Trainer::new(rt, synth.model.clone(), strategy(), data, cfg).unwrap()
+}
+
+fn server_on(
+    backend: &str,
+    synth: &Synthetic,
+    ck: &Checkpoint,
+    devices: usize,
+    cfg: ServeConfig,
+) -> ModelServer {
+    let client = AnyBackend::from_name(backend, devices).unwrap();
+    let mut rt = Runtime::from_backend(client);
+    synth.install(&mut rt).unwrap();
+    ModelServer::from_checkpoint(rt, synth.model.clone(), ck, cfg).unwrap()
+}
+
+/// The deterministic eval stream as flat request rows: one `(x_row, y)`
+/// per example, in eval-batch order.
+fn eval_requests(synth: &Synthetic, seed: u64) -> Vec<(Vec<f32>, f32)> {
+    let mut data = synth.data(seed ^ 0xDA7A);
+    let batch = synth.model.batch_size();
+    let mut rows = Vec::new();
+    let mut idx = 0;
+    while let Some((x, y)) = data.eval_batch(idx) {
+        let xs = x.as_f32().unwrap();
+        let ys = y.as_f32().unwrap();
+        let row_len = xs.len() / batch;
+        for slot in 0..batch {
+            rows.push((
+                xs[slot * row_len..(slot + 1) * row_len].to_vec(),
+                ys[slot],
+            ));
+        }
+        idx += 1;
+    }
+    rows
+}
+
+/// Submit the whole eval stream and drain, returning completions.
+fn serve_eval_stream(
+    server: &mut ModelServer,
+    rows: &[(Vec<f32>, f32)],
+) -> Vec<Completion> {
+    for (x, y) in rows {
+        server.submit(x.clone(), *y).unwrap();
+    }
+    server.drain().unwrap()
+}
+
+#[test]
+fn served_logits_match_trainer_eval_bitwise_across_device_counts() {
+    for backend in BACKENDS {
+        let synth = Synthetic::tiny();
+        let seed = 5;
+        let mut trainer = trainer_on(backend, &synth, cfg(10, seed));
+        for _ in 0..10 {
+            trainer.train_step().unwrap();
+        }
+        let ck = trainer.capture_checkpoint().unwrap();
+
+        // the reference: the trainer's own eval on its resident state
+        // (which the checkpoint just captured), batch by batch
+        let mut reference = Vec::new();
+        let mut idx = 0;
+        while let Some(out) = trainer.eval_batch_outputs(idx).unwrap() {
+            reference.push(out);
+            idx += 1;
+        }
+        assert!(reference.len() >= 2, "need multiple eval batches");
+
+        let rows = eval_requests(&synth, seed);
+        let batch = synth.model.batch_size();
+        assert_eq!(rows.len(), reference.len() * batch);
+
+        for devices in [1usize, 2, 4] {
+            let mut server =
+                server_on(backend, &synth, &ck, devices, ServeConfig::default());
+            let completions = serve_eval_stream(&mut server, &rows);
+            assert_eq!(
+                completions.len(),
+                reference.len(),
+                "{backend} x{devices}: one execution per eval batch"
+            );
+            for c in &completions {
+                // FIFO admission in batch-size chunks keeps request ids
+                // aligned with eval batches regardless of placement
+                let b = (c.request_ids[0] / batch as u64) as usize;
+                let want: Vec<u64> = (0..batch as u64)
+                    .map(|i| (b * batch) as u64 + i)
+                    .collect();
+                assert_eq!(c.request_ids, want, "{backend} x{devices}: batch {b}");
+                assert_eq!(c.padded, 0);
+                let (loss, metric) = reference[b];
+                assert_eq!(
+                    c.loss.to_bits(),
+                    loss.to_bits(),
+                    "{backend} x{devices}: loss of batch {b} (device {})",
+                    c.device
+                );
+                assert_eq!(
+                    c.metric.to_bits(),
+                    metric.to_bits(),
+                    "{backend} x{devices}: metric of batch {b}"
+                );
+            }
+            // everything submitted retired exactly once
+            let s = server.stats();
+            assert_eq!(s.submitted, rows.len() as u64);
+            assert_eq!(s.completed, rows.len() as u64);
+            assert_eq!(s.executions, reference.len() as u64);
+            assert_eq!(s.padded_rows, 0);
+            if devices >= reference.len() {
+                // enough devices: every batch launches on its own
+                // device on the first tick (least-loaded placement)
+                let busy =
+                    s.per_device_executions.iter().filter(|&&n| n > 0).count();
+                assert_eq!(busy, reference.len(), "{backend} x{devices}: spread");
+            }
+        }
+    }
+}
+
+/// Host-side recomputation of what a delta swap must move, straight
+/// from the two checkpoints: fwd-mask delta words and changed-θ words.
+fn expected_delta(
+    synth: &Synthetic,
+    a: &Checkpoint,
+    b: &Checkpoint,
+) -> (usize, usize) {
+    let specs = &synth.model.params;
+    let mut mask_words = 0usize;
+    let mut changed = 0usize;
+    for p in specs {
+        if p.sparse {
+            let fa: &SparseSet = a.fwd_mask(&p.name).unwrap();
+            let fb: &SparseSet = b.fwd_mask(&p.name).unwrap();
+            mask_words += fa.delta_to(fb).total();
+        }
+        let va = a.param_values(specs, &p.name).unwrap();
+        let vb = b.param_values(specs, &p.name).unwrap();
+        changed += va
+            .iter()
+            .zip(&vb)
+            .filter(|(x, y)| x.to_bits() != y.to_bits())
+            .count();
+    }
+    (mask_words, changed)
+}
+
+#[test]
+fn same_run_swap_moves_exactly_delta_bytes_and_matches_cold_load() {
+    for backend in BACKENDS {
+        let synth = Synthetic::tiny();
+        let seed = 7;
+        let mut trainer = trainer_on(backend, &synth, cfg(24, seed));
+        for _ in 0..12 {
+            trainer.train_step().unwrap();
+        }
+        let ck_a = trainer.capture_checkpoint().unwrap();
+        for _ in 12..24 {
+            trainer.train_step().unwrap();
+        }
+        let ck_b = trainer.capture_checkpoint().unwrap();
+        assert_eq!(ck_a.seed, ck_b.seed, "same run records one init seed");
+
+        let (mask_words, changed) = expected_delta(&synth, &ck_a, &ck_b);
+        assert!(mask_words > 0, "refresh between captures must move masks");
+        assert!(changed > 0, "training between captures must change θ");
+
+        let rows = eval_requests(&synth, seed);
+        for devices in [1usize, 2] {
+            let mut server =
+                server_on(backend, &synth, &ck_a, devices, ServeConfig::default());
+            // traffic before the swap, so it is genuinely mid-life
+            serve_eval_stream(&mut server, &rows);
+
+            let before = server.transfer_stats();
+            let report =
+                CheckpointSwapper::new().swap(&mut server, &ck_b).unwrap();
+            let moved = server.transfer_stats().since(&before);
+
+            assert_eq!(report.mode, SwapMode::Delta, "{backend} x{devices}");
+            assert_eq!(report.delta_index_words, mask_words + changed);
+            assert_eq!(report.changed_value_words, changed);
+            // the acceptance equation: 4·Δindices + 4·|changed θ| per
+            // device, nothing else on the bus
+            let expected =
+                (devices * (4 * (mask_words + changed) + 4 * changed)) as u64;
+            assert_eq!(report.swap_h2d_bytes, expected, "{backend} x{devices}");
+            assert_eq!(moved.h2d_bytes, expected, "{backend} x{devices}: metered");
+            assert_eq!(moved.d2h_bytes, 0, "a swap downloads nothing");
+            assert!(report.swap_h2d_bytes < report.full_upload_bytes);
+            assert_eq!(server.installed_step(), ck_b.step);
+
+            // post-swap logits ≡ a cold server loaded from ck_b
+            let swapped = serve_eval_stream(&mut server, &rows);
+            let mut cold =
+                server_on(backend, &synth, &ck_b, devices, ServeConfig::default());
+            let cold_outs = serve_eval_stream(&mut cold, &rows);
+            assert_eq!(swapped.len(), cold_outs.len());
+            for (s, c) in swapped.iter().zip(&cold_outs) {
+                assert_eq!(s.request_ids.len(), c.request_ids.len());
+                assert_eq!(
+                    s.loss.to_bits(),
+                    c.loss.to_bits(),
+                    "{backend} x{devices}: post-swap loss"
+                );
+                assert_eq!(s.metric.to_bits(), c.metric.to_bits());
+            }
+        }
+    }
+}
+
+#[test]
+fn foreign_checkpoint_falls_back_to_full_reload() {
+    for backend in BACKENDS {
+        let synth = Synthetic::tiny();
+        let mut t1 = trainer_on(backend, &synth, cfg(6, 5));
+        for _ in 0..6 {
+            t1.train_step().unwrap();
+        }
+        let installed = t1.capture_checkpoint().unwrap();
+        // a different seed is a different run — not delta-eligible
+        let mut t2 = trainer_on(backend, &synth, cfg(6, 6));
+        for _ in 0..6 {
+            t2.train_step().unwrap();
+        }
+        let foreign = t2.capture_checkpoint().unwrap();
+        assert_ne!(installed.seed, foreign.seed);
+
+        let rows = eval_requests(&synth, 5);
+        let mut server =
+            server_on(backend, &synth, &installed, 2, ServeConfig::default());
+        serve_eval_stream(&mut server, &rows);
+
+        let before = server.transfer_stats();
+        let report = CheckpointSwapper::new().swap(&mut server, &foreign).unwrap();
+        let moved = server.transfer_stats().since(&before);
+        assert_eq!(report.mode, SwapMode::FullReload, "{backend}");
+        // a full reload pays exactly the cold-install cost (dense θ +
+        // fwd index uploads, every device)
+        assert_eq!(report.swap_h2d_bytes, report.full_upload_bytes, "{backend}");
+        assert_eq!(moved.h2d_bytes, report.full_upload_bytes);
+        assert_eq!(report.delta_index_words, 0);
+
+        // and the flipped shadows serve the foreign model bit-exactly
+        let swapped = serve_eval_stream(&mut server, &rows);
+        let mut cold =
+            server_on(backend, &synth, &foreign, 2, ServeConfig::default());
+        let cold_outs = serve_eval_stream(&mut cold, &rows);
+        for (s, c) in swapped.iter().zip(&cold_outs) {
+            assert_eq!(s.loss.to_bits(), c.loss.to_bits(), "{backend}");
+            assert_eq!(s.metric.to_bits(), c.metric.to_bits(), "{backend}");
+        }
+    }
+}
+
+#[test]
+fn strict_serve_streams_exactly_batch_up_logits_down_per_execution() {
+    // satellite guarantee: the serve path borrows the resident buffers
+    // — repeated inference neither donates them nor moves a byte beyond
+    // the request batch (up) and the two scalar logits (down)
+    let synth = Synthetic::tiny();
+    let seed = 9;
+    let mut trainer = trainer_on("strict", &synth, cfg(8, seed));
+    for _ in 0..8 {
+        trainer.train_step().unwrap();
+    }
+    let ck = trainer.capture_checkpoint().unwrap();
+
+    let mut server = server_on("strict", &synth, &ck, 1, ServeConfig::default());
+    let batch = server.batch_size();
+    let row_len = server.row_len();
+    let rows = eval_requests(&synth, seed);
+    assert!(rows.len() >= batch);
+
+    for round in 0..5 {
+        let before = server.transfer_stats();
+        for (x, y) in rows.iter().take(batch) {
+            server.submit(x.clone(), *y).unwrap();
+        }
+        let done = server.drain().unwrap();
+        assert_eq!(done.len(), 1, "round {round}: one full-batch execution");
+        let moved = server.transfer_stats().since(&before);
+        // up: x (batch·row_len) + y (batch) f32 words; down: loss+metric
+        assert_eq!(
+            moved.h2d_bytes,
+            (4 * batch * (row_len + 1)) as u64,
+            "round {round}: batch up"
+        );
+        assert_eq!(moved.d2h_bytes, 8, "round {round}: logits down");
+    }
+
+    // after arbitrary traffic the resident buffers are still alive and
+    // swappable — any donation along the way would have errored above
+    // same seed → deterministic replay of the first 8 steps, then 3
+    // more: a true same-run successor of the installed checkpoint
+    let mut t2 = trainer_on("strict", &synth, cfg(11, seed));
+    for _ in 0..11 {
+        t2.train_step().unwrap();
+    }
+    let successor = t2.capture_checkpoint().unwrap();
+    let report = CheckpointSwapper::new().swap(&mut server, &successor).unwrap();
+    assert_eq!(report.mode, SwapMode::Delta);
+    serve_eval_stream(&mut server, &rows);
+}
+
+#[test]
+fn partial_batches_pad_with_zero_rows_and_account_for_them() {
+    let synth = Synthetic::tiny();
+    let mut trainer = trainer_on("sim", &synth, cfg(6, 3));
+    for _ in 0..6 {
+        trainer.train_step().unwrap();
+    }
+    let ck = trainer.capture_checkpoint().unwrap();
+    let mut server = server_on("sim", &synth, &ck, 1, ServeConfig::default());
+    let batch = server.batch_size();
+    let rows = eval_requests(&synth, 3);
+
+    // one short of a full batch: tick() must hold it, drain() must pad
+    for (x, y) in rows.iter().take(batch - 1) {
+        server.submit(x.clone(), *y).unwrap();
+    }
+    assert!(server.tick().unwrap().is_empty(), "partial batch not admitted");
+    let done = server.drain().unwrap();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].padded, 1);
+    assert_eq!(server.stats().padded_rows, 1);
+    assert_eq!(done[0].request_ids.len(), batch - 1);
+}

@@ -258,6 +258,153 @@ fn pinned_v1_fixture_loads_bit_identically() {
     assert_eq!(opt[1], s1.to_vec());
 }
 
+/// The pinned v2 fixture: a TKC2 compact sparse checkpoint with fixed
+/// in-tree bytes (written by `gen_checkpoint_v2_sparse.py`) loads
+/// bit-identically — the forever-compatibility contract for the sparse
+/// format, mirroring the TKC1 fixture above. The sparse param stores
+/// values only at its touched set; everything outside it is
+/// reconstructed by replaying the recorded init seed.
+#[test]
+fn pinned_v2_sparse_fixture_loads_bit_identically() {
+    use topkast::runtime::manifest::{InitKind, ParamSpec};
+    use topkast::sparsity::replay_init_values;
+    use topkast::tensor::Shape;
+
+    let path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/rust/tests/fixtures/checkpoint_v2_sparse.ckpt"
+    );
+    let ck = Checkpoint::load(path).unwrap();
+    assert_eq!(ck.step, 4242);
+    assert_eq!(ck.seed, Some(31), "v2 records the init seed");
+
+    let touched = [0u32, 1, 2, 3, 7];
+    let w_vals = [0.5f32, -1.25, 2.0, -0.125, -7.75];
+    let b = [1.0f32, -2.0, 0.5, 4.0];
+    let s0 = [0.25f32, 0.125, -0.5, 0.0625, 8.0];
+    let s1 = [0.0625f32, 0.0, -1.0, 2.5];
+    assert_eq!(ck.params.len(), 2);
+    assert_eq!(ck.params[0].0, "w");
+    let TensorPayload::Sparse(slice) = &ck.params[0].1 else {
+        panic!("w is stored sparsely");
+    };
+    assert_eq!(slice.indices.indices(), &touched);
+    assert_eq!(slice.indices.domain(), 8);
+    assert_eq!(slice.values, w_vals);
+    assert_eq!(ck.params[1].1, TensorPayload::Dense(b.to_vec()));
+    assert_eq!(ck.masks_fwd[0].1.indices(), &[0, 2, 7]);
+    assert_eq!(ck.masks_bwd[0].1.indices(), &[0, 1, 2, 7]);
+    // the sparse opt slot came back aligned to w's touched set
+    assert_eq!(ck.opt.len(), 2);
+    let TensorPayload::Sparse(opt0) = &ck.opt[0] else {
+        panic!("slot0 is stored sparsely");
+    };
+    assert_eq!(opt0.indices.indices(), &touched);
+    assert_eq!(opt0.values, s0);
+    assert_eq!(ck.opt[1], TensorPayload::Dense(s1.to_vec()));
+
+    let specs = vec![
+        ParamSpec {
+            name: "w".into(),
+            shape: Shape::new(&[8]),
+            init: InitKind::Normal,
+            init_scale: 0.1,
+            sparse: true,
+            mac: 8,
+        },
+        ParamSpec {
+            name: "b".into(),
+            shape: Shape::new(&[4]),
+            init: InitKind::Zeros,
+            init_scale: 0.0,
+            sparse: false,
+            mac: 0,
+        },
+    ];
+    // expected dense w: replay the recorded seed's init draw, then
+    // scatter the stored touched values on top
+    let mut w_expect = replay_init_values(&specs[0], 0, 31);
+    for (&i, &v) in touched.iter().zip(&w_vals) {
+        w_expect[i as usize] = v;
+    }
+
+    // read-side API (what the serving plane consumes)
+    assert_eq!(ck.param_values(&specs, "w").unwrap(), w_expect);
+    assert_eq!(ck.param_values(&specs, "b").unwrap(), b.to_vec());
+    assert_eq!(ck.fwd_mask("w").unwrap().indices(), &[0, 2, 7]);
+
+    // restore path — same reconstruction, plus zero opt outside touched
+    let mut store = ParamStore::init(&specs, 987_654);
+    let mut opt = vec![vec![1.0f32; 8], vec![1.0f32; 4]];
+    ck.restore(&mut store, &mut opt).unwrap();
+    assert_eq!(store.get("w").unwrap().values, w_expect);
+    assert_eq!(store.get("b").unwrap().values, b);
+    let m = store.get("w").unwrap().masks.as_ref().unwrap();
+    assert_eq!(m.fwd().indices(), &[0, 2, 7]);
+    assert_eq!(m.bwd().indices(), &[0, 1, 2, 7]);
+    assert_eq!(m.touched().indices(), &touched, "v2 carries the real history");
+    let mut s0_expect = [0.0f32; 8];
+    for (&i, &v) in touched.iter().zip(&s0) {
+        s0_expect[i as usize] = v;
+    }
+    assert_eq!(opt[0], s0_expect);
+    assert_eq!(opt[1], s1.to_vec());
+}
+
+/// Every way of cutting the v2 fixture short (or long) produces the
+/// matching distinct load error: below the container header, inside the
+/// JSON header, at each section boundary of the blob, and past the
+/// declared end.
+#[test]
+fn v2_fixture_truncated_at_every_boundary_errors_distinctly() {
+    let path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/rust/tests/fixtures/checkpoint_v2_sparse.ckpt"
+    );
+    let bytes = std::fs::read(path).unwrap();
+    let hlen = u64::from_le_bytes(bytes[4..12].try_into().unwrap()) as usize;
+    let blob_start = 12 + hlen;
+    let blob_len = bytes.len() - blob_start;
+    assert_eq!(blob_len, 120, "pinned blob layout");
+
+    let d = std::env::temp_dir().join("topkast_v2_fixture_cuts");
+    std::fs::create_dir_all(&d).unwrap();
+    let load_cut = |at: usize| {
+        let p = d.join(format!("cut_{at}.ckpt"));
+        std::fs::write(&p, &bytes[..at]).unwrap();
+        Checkpoint::load(&p).unwrap_err().to_string()
+    };
+
+    // below the 12-byte container header
+    let err = load_cut(8);
+    assert!(err.contains("container header"), "{err}");
+    // inside the JSON header
+    let err = load_cut(12 + hlen / 2);
+    assert!(err.contains("header claims"), "{err}");
+    // at the start of each blob section (offsets pinned by the
+    // generator: param_idx, param_vals, param, mask_fwd, mask_bwd,
+    // opt_vals, opt) and one word into the first section
+    for cut in [0usize, 4, 20, 40, 56, 68, 84, 104] {
+        let err = load_cut(blob_start + cut);
+        assert!(
+            err.contains(&format!(
+                "header declares a {blob_len}-byte blob, file holds {cut}"
+            )),
+            "cut at blob+{cut}: {err}"
+        );
+    }
+    // longer than declared: the distinct trailing-bytes error
+    let p = d.join("long.ckpt");
+    let mut long = bytes.clone();
+    long.extend_from_slice(&[0u8; 7]);
+    std::fs::write(&p, &long).unwrap();
+    let err = Checkpoint::load(&p).unwrap_err().to_string();
+    assert!(err.contains("7 trailing bytes"), "{err}");
+    assert!(!err.contains("truncated"), "trailing ≠ truncated: {err}");
+    // the untouched fixture still loads
+    Checkpoint::load(path).unwrap();
+}
+
 /// v2 checkpoints of an *untrained* store are near-empty: the touched
 /// sets are empty, so sparse tensors serialise to indices-only
 /// sections — the degenerate end of the O(nnz) scaling.
