@@ -15,7 +15,9 @@ use crate::coordinator::{
     source_for, Checkpoint, ConsoleLogger, EvalResult, PeriodicCheckpoint,
     Trainer, TrainObserver,
 };
-use crate::runtime::{backend::Backend, AnyBackend, Manifest, Runtime, Synthetic};
+use crate::runtime::{
+    backend::Backend, AnyBackend, FaultPlan, Manifest, Runtime, Synthetic,
+};
 use crate::sparsity::StrategyRegistry;
 
 /// A fully-wired training run. The underlying [`Trainer`] is public so
@@ -177,11 +179,25 @@ impl<'m> SessionBuilder<'m> {
             .unwrap_or_else(StrategyRegistry::with_builtins);
         let strategy = registry.build_tuned(&resolved.strategy, &resolved.tuning)?;
 
-        // one simulated device per data-parallel replica
+        // one simulated device per data-parallel replica. A `faults`
+        // plan wraps the env-selected backend in a `FaultBackend`
+        // BEFORE any artifact loads, so compiled executables and
+        // injected faults live on the same client.
         let replicas = resolved.trainer.replicas;
+        let make_runtime = || -> Result<Runtime> {
+            let mut client = AnyBackend::from_env(replicas.max(1))
+                .context("creating PJRT CPU client")?;
+            if let Some(plan) = &resolved.faults {
+                let plan = FaultPlan::parse(plan)
+                    .context("run spec: parsing the faults plan")?;
+                client = AnyBackend::faulty(client, plan);
+                crate::info!("fault injection armed: {}", resolved.faults.as_deref().unwrap_or(""));
+            }
+            Ok(Runtime::from_backend(client))
+        };
         let (runtime, model, data) = match synth {
             Some(s) => {
-                let mut rt = Runtime::with_devices(replicas)?;
+                let mut rt = make_runtime()?;
                 let s = if replicas > 1 && s.model.replication.is_none() {
                     s.replicated(replicas)?
                 } else {
@@ -192,7 +208,7 @@ impl<'m> SessionBuilder<'m> {
                 (rt, s.model.clone(), data)
             }
             None => {
-                let rt = Runtime::with_devices(replicas)?;
+                let rt = make_runtime()?;
                 let data = source_for(&model, resolved.trainer.seed ^ 0xDA7A)?;
                 (rt, model, data)
             }
@@ -216,7 +232,17 @@ impl<'m> SessionBuilder<'m> {
             trainer.add_observer(observer);
         }
         if let Some(path) = &resolved.checkpoint {
-            trainer.add_observer(Box::new(PeriodicCheckpoint::at_end(path.clone())));
+            // with a retention ring requested, cadence saves ride the
+            // eval cadence (the run's existing host-sync points);
+            // otherwise only the final checkpoint is written
+            let obs = if resolved.checkpoint_keep > 0 {
+                let every = resolved.trainer.eval_every.unwrap_or(0);
+                PeriodicCheckpoint::every(every, path.clone())
+                    .with_keep(resolved.checkpoint_keep)
+            } else {
+                PeriodicCheckpoint::at_end(path.clone())
+            };
+            trainer.add_observer(Box::new(obs));
         }
 
         Ok(Session { trainer, resolved })

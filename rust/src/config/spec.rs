@@ -57,6 +57,15 @@ pub struct RunSpec {
     /// (default 1; see `runtime::replicated`). Replicated runs are
     /// bit-identical to `replicas = 1` by protocol design.
     pub replicas: Option<usize>,
+    /// Fault-injection plan (see `runtime::fault::FaultPlan::parse`),
+    /// e.g. `"seed=3;transfer=0.02;exec=0.05;max=16"`. Wraps the
+    /// session's backend in a `FaultBackend`; recovery keeps the run
+    /// bit-identical to the fault-free execution.
+    pub faults: Option<String>,
+    /// How many periodic checkpoints to retain on disk (last-N ring;
+    /// 0 = keep everything). Only meaningful with `checkpoint` set and
+    /// `eval_every > 0` cadence saves.
+    pub checkpoint_keep: Option<usize>,
 }
 
 const KNOWN_KEYS: &[&str] = &[
@@ -76,6 +85,8 @@ const KNOWN_KEYS: &[&str] = &[
     "checkpoint",
     "train_multiplier",
     "replicas",
+    "faults",
+    "checkpoint_keep",
 ];
 
 impl RunSpec {
@@ -180,6 +191,16 @@ impl RunSpec {
         self
     }
 
+    pub fn faults(mut self, plan: &str) -> Self {
+        self.faults = Some(plan.to_string());
+        self
+    }
+
+    pub fn checkpoint_keep(mut self, n: usize) -> Self {
+        self.checkpoint_keep = Some(n);
+        self
+    }
+
     // -- layering ----------------------------------------------------------
 
     /// Layer `over` on top of `self`: every field set in `over` wins.
@@ -206,6 +227,8 @@ impl RunSpec {
             checkpoint: over.checkpoint.or(self.checkpoint),
             train_multiplier: over.train_multiplier.or(self.train_multiplier),
             replicas: over.replicas.or(self.replicas),
+            faults: over.faults.or(self.faults),
+            checkpoint_keep: over.checkpoint_keep.or(self.checkpoint_keep),
         }
     }
 
@@ -284,6 +307,12 @@ impl RunSpec {
         if let Some(v) = j.opt("replicas") {
             s.replicas = Some(v.as_usize()?);
         }
+        if let Some(v) = j.opt("faults") {
+            s.faults = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = j.opt("checkpoint_keep") {
+            s.checkpoint_keep = Some(v.as_usize()?);
+        }
         Ok(s)
     }
 
@@ -346,6 +375,12 @@ impl RunSpec {
         if let Some(v) = self.replicas {
             pairs.push(("replicas", Json::num(v as f64)));
         }
+        if let Some(v) = &self.faults {
+            pairs.push(("faults", Json::str(v.clone())));
+        }
+        if let Some(v) = self.checkpoint_keep {
+            pairs.push(("checkpoint_keep", Json::num(v as f64)));
+        }
         Json::obj(pairs)
     }
 
@@ -400,6 +435,8 @@ impl RunSpec {
             async_refresh: self.async_refresh.unwrap_or(false),
             checkpoint: self.checkpoint.clone(),
             train_multiplier: self.train_multiplier.unwrap_or(1.0),
+            faults: self.faults.clone(),
+            checkpoint_keep: self.checkpoint_keep.unwrap_or(0),
         })
     }
 }
@@ -415,6 +452,10 @@ pub struct ResolvedRun {
     pub async_refresh: bool,
     pub checkpoint: Option<String>,
     pub train_multiplier: f64,
+    /// Fault-injection plan text, if the run opted into chaos testing.
+    pub faults: Option<String>,
+    /// Last-N checkpoint retention for periodic saves (0 = keep all).
+    pub checkpoint_keep: usize,
 }
 
 /// The per-model-kind default LR schedule (paper Supplementary A/B,
@@ -635,10 +676,17 @@ mod tests {
             .async_refresh(true)
             .checkpoint("out.ckpt")
             .train_multiplier(2.0)
-            .replicas(4);
+            .replicas(4)
+            .faults("seed=3;transfer=0.02;exec=0.05;max=16")
+            .checkpoint_keep(3);
         let text = spec.to_json().to_string_pretty();
         let back = RunSpec::from_json(&text).unwrap();
         assert_eq!(back.replicas, Some(4));
+        assert_eq!(
+            back.faults.as_deref(),
+            Some("seed=3;transfer=0.02;exec=0.05;max=16")
+        );
+        assert_eq!(back.checkpoint_keep, Some(3));
         assert_eq!(back.model.as_deref(), Some("lm_tiny"));
         assert_eq!(back.strategy.as_deref(), Some("topkast:0.8,0.5"));
         assert_eq!(back.steps, Some(500));

@@ -687,8 +687,20 @@ impl Checkpoint {
 }
 
 /// Shared atomic container writer (tmp file + rename).
+///
+/// The tmp name appends `.tmp` to the *full* filename rather than
+/// replacing the extension: sibling checkpoints sharing a stem
+/// (`ck.tkc1` / `ck.tkc2`) must not collide on one tmp file, or a
+/// crash while saving one could clobber the other's in-flight write.
+/// A crash before the `rename` leaves the previous checkpoint at
+/// `path` untouched, with only an orphan `.tmp` beside it.
 fn write_container(path: &Path, magic: &[u8; 4], header: &str, blob: &[u8]) -> Result<()> {
-    let tmp = path.with_extension("tmp");
+    let mut tmp_name = path
+        .file_name()
+        .with_context(|| format!("checkpoint path {path:?} has no filename"))?
+        .to_os_string();
+    tmp_name.push(".tmp");
+    let tmp = path.with_file_name(tmp_name);
     {
         let mut f =
             std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?;
@@ -1074,5 +1086,125 @@ mod tests {
             sparse_len < dense_len,
             "sparse {sparse_len} !< dense {dense_len}"
         );
+    }
+
+    #[test]
+    fn crashed_save_leaves_the_previous_checkpoint_intact() {
+        // Simulate a crash mid-save: the writer got as far as a partial
+        // tmp file but never reached the rename. The checkpoint at the
+        // real path must still load bit-for-bit.
+        let d = dir("topkast_ck_atomic");
+        let store = ParamStore::init(&specs(), 6);
+        let opt = vec![vec![0.25f32; 8], vec![0.5f32; 4]];
+        let ck = Checkpoint::capture(&store, &opt, 42);
+        let path = d.join("run.tkc2");
+        ck.save(&path).unwrap();
+        let before = std::fs::read(&path).unwrap();
+
+        // a later save dies after writing half the container
+        let mut partial = before.clone();
+        partial.truncate(before.len() / 2);
+        std::fs::write(d.join("run.tkc2.tmp"), &partial).unwrap();
+
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.step, 42);
+        assert_eq!(loaded.params, ck.params);
+        assert_eq!(
+            std::fs::read(&path).unwrap(),
+            before,
+            "orphan tmp must not disturb the committed file"
+        );
+    }
+
+    #[test]
+    fn sibling_containers_use_distinct_tmp_names() {
+        // `a.tkc1` and `a.tkc2` share a stem; their tmp files must not
+        // collide, or concurrent/interleaved saves could clobber each
+        // other mid-write. The tmp name appends to the full filename,
+        // so a literal `a.tmp` bystander also survives both saves.
+        let d = dir("topkast_ck_tmpname");
+        let store = ParamStore::init(&specs(), 2);
+        let opt = vec![vec![0.0f32; 8], vec![0.0f32; 4]];
+        let bystander = d.join("a.tmp");
+        std::fs::write(&bystander, b"unrelated").unwrap();
+        Checkpoint::capture_dense(&store, &opt, 1).save(d.join("a.tkc2")).unwrap();
+        Checkpoint::capture_dense(&store, &opt, 1)
+            .save_v1(d.join("a.tkc1"))
+            .unwrap();
+        assert_eq!(std::fs::read(&bystander).unwrap(), b"unrelated");
+        assert!(Checkpoint::load(d.join("a.tkc2")).is_ok());
+        assert!(Checkpoint::load(d.join("a.tkc1")).is_ok());
+    }
+
+    #[test]
+    fn load_never_panics_on_truncated_containers() {
+        // Property: for BOTH container formats, cutting the file at any
+        // random point must produce Err — never a panic, never a silent
+        // partial load.
+        use crate::util::proptest::{ensure, property_cases};
+        let d = dir("topkast_ck_prop_trunc");
+        let store = ParamStore::init(&specs(), 13);
+        let opt = vec![vec![0.5f32; 8], vec![0.25f32; 4]];
+        let v2 = d.join("p.tkc2");
+        let v1 = d.join("p.tkc1");
+        Checkpoint::capture(&store, &opt, 3).save(&v2).unwrap();
+        Checkpoint::capture_dense(&store, &opt, 3).save_v1(&v1).unwrap();
+        let originals =
+            [std::fs::read(&v2).unwrap(), std::fs::read(&v1).unwrap()];
+        let mut case = 0usize;
+        property_cases("truncated checkpoints load as Err", 128, |rng| {
+            let bytes = &originals[rng.next_below(2) as usize];
+            let cut = rng.next_below(bytes.len() as u64) as usize;
+            let path = d.join(format!("cut{case}.ckpt"));
+            case += 1;
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            let res = Checkpoint::load(&path);
+            std::fs::remove_file(&path).ok();
+            ensure(
+                res.is_err(),
+                format!("truncation to {cut} bytes loaded as Ok"),
+            )
+        });
+    }
+
+    #[test]
+    fn load_never_panics_on_flipped_bytes() {
+        // Property: flipping up to 4 random bytes anywhere in either
+        // container must never panic. Flips in value sections may still
+        // load (that's data, not structure) — the invariant under test
+        // is "Err or Ok, never a crash", plus structural sanity when it
+        // does load.
+        use crate::util::proptest::property_cases;
+        let d = dir("topkast_ck_prop_flip");
+        let store = ParamStore::init(&specs(), 17);
+        let opt = vec![vec![0.125f32; 8], vec![0.75f32; 4]];
+        let v2 = d.join("f.tkc2");
+        let v1 = d.join("f.tkc1");
+        Checkpoint::capture(&store, &opt, 8).save(&v2).unwrap();
+        Checkpoint::capture_dense(&store, &opt, 8).save_v1(&v1).unwrap();
+        let originals =
+            [std::fs::read(&v2).unwrap(), std::fs::read(&v1).unwrap()];
+        let mut case = 0usize;
+        property_cases("flipped checkpoints never panic", 128, |rng| {
+            let mut bytes = originals[rng.next_below(2) as usize].clone();
+            let flips = 1 + rng.next_below(4) as usize;
+            for _ in 0..flips {
+                let at = rng.next_below(bytes.len() as u64) as usize;
+                let bit = 1u8 << rng.next_below(8);
+                bytes[at] ^= bit;
+            }
+            let path = d.join(format!("flip{case}.ckpt"));
+            case += 1;
+            std::fs::write(&path, &bytes).unwrap();
+            // must return, Ok or Err — a panic here fails the test run
+            if let Ok(ck) = Checkpoint::load(&path) {
+                // if it loaded, restore must also not panic (it may Err)
+                let mut s = ParamStore::init(&specs(), 17);
+                let mut o = vec![vec![0.0f32; 8], vec![0.0f32; 4]];
+                let _ = ck.restore(&mut s, &mut o);
+            }
+            std::fs::remove_file(&path).ok();
+            Ok(())
+        });
     }
 }

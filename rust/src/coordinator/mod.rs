@@ -20,4 +20,4 @@ pub use observer::{
 };
 pub use schedule::LrSchedule;
 pub use sources::{source_for, ImageData, LmData, MlpData};
-pub use train::{DataSource, Trainer, TrainerConfig};
+pub use train::{DataSource, RecoveryStats, Trainer, TrainerConfig};

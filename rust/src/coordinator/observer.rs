@@ -231,14 +231,30 @@ impl TrainObserver for JsonlMetrics {
 
 /// Writes a checkpoint every `every` steps (0 = final only) and always
 /// at the end of training. Saves atomically via `Checkpoint::save`.
+///
+/// With [`with_keep`](Self::with_keep) set to `N > 0`, cadence saves
+/// become a last-N ring: each cadence step writes its own file (the
+/// configured path with `.step{step}` spliced in before the extension)
+/// and the oldest ring files beyond `N` are pruned from disk. The
+/// final end-of-run checkpoint always goes to the configured path
+/// itself and never counts against the ring.
 pub struct PeriodicCheckpoint {
     every: usize,
     path: PathBuf,
+    /// Cadence checkpoints to retain (0 = overwrite one file, legacy).
+    keep: usize,
+    /// Ring of cadence files on disk, oldest first.
+    retained: Vec<PathBuf>,
 }
 
 impl PeriodicCheckpoint {
     pub fn every(every: usize, path: impl Into<PathBuf>) -> Self {
-        PeriodicCheckpoint { every, path: path.into() }
+        PeriodicCheckpoint {
+            every,
+            path: path.into(),
+            keep: 0,
+            retained: Vec::new(),
+        }
     }
 
     /// Final checkpoint only.
@@ -246,10 +262,48 @@ impl PeriodicCheckpoint {
         Self::every(0, path)
     }
 
+    /// Retain the last `keep` cadence checkpoints as separate files,
+    /// pruning older ones. `0` restores the single-file overwrite.
+    pub fn with_keep(mut self, keep: usize) -> Self {
+        self.keep = keep;
+        self
+    }
+
     /// One predicate for both "sync the host for me" and "write now",
     /// so the two can never drift (a drift would checkpoint stale θ).
     fn due(&self, step: usize, total_steps: usize) -> bool {
         self.every > 0 && step % self.every == 0 && step < total_steps
+    }
+
+    /// Ring-file name for a cadence step: `run.tkc2` → `run.step42.tkc2`
+    /// (extensionless paths get `.step42` appended), keeping the
+    /// container extension so the file loads like any other checkpoint.
+    fn ring_path(&self, step: usize) -> PathBuf {
+        match self.path.extension().and_then(|e| e.to_str()) {
+            Some(ext) => {
+                let mut name = self
+                    .path
+                    .file_stem()
+                    .unwrap_or_default()
+                    .to_os_string();
+                name.push(format!(".step{step}.{ext}"));
+                self.path.with_file_name(name)
+            }
+            None => {
+                let mut name = self
+                    .path
+                    .file_name()
+                    .unwrap_or_default()
+                    .to_os_string();
+                name.push(format!(".step{step}"));
+                self.path.with_file_name(name)
+            }
+        }
+    }
+
+    /// Paths currently held by the ring, oldest first (tests/diagnostics).
+    pub fn retained(&self) -> &[PathBuf] {
+        &self.retained
     }
 }
 
@@ -262,7 +316,25 @@ impl TrainObserver for PeriodicCheckpoint {
 
     fn on_step(&mut self, ev: &StepEvent<'_>) -> Result<()> {
         if self.due(ev.step, ev.total_steps) {
-            Checkpoint::capture(ev.store, ev.opt, ev.step).save(&self.path)?;
+            let ck = Checkpoint::capture(ev.store, ev.opt, ev.step);
+            if self.keep == 0 {
+                ck.save(&self.path)?;
+            } else {
+                let path = self.ring_path(ev.step);
+                ck.save(&path)?;
+                self.retained.push(path);
+                // prune oldest-first down to the ring size; a failed
+                // unlink never aborts training
+                while self.retained.len() > self.keep {
+                    let old = self.retained.remove(0);
+                    if let Err(e) = std::fs::remove_file(&old) {
+                        crate::warn!(
+                            "could not prune checkpoint {}: {e}",
+                            old.display()
+                        );
+                    }
+                }
+            }
         }
         Ok(())
     }
@@ -404,6 +476,48 @@ mod tests {
         })
         .unwrap();
         assert_eq!(Checkpoint::load(&path).unwrap().step, 10);
+    }
+
+    #[test]
+    fn checkpoint_ring_keeps_last_n_and_prunes_oldest_first() {
+        let st = store();
+        let m = RunMetrics::new();
+        let dir = std::env::temp_dir().join("topkast_obs_ring");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.tkc2");
+
+        let mut obs = PeriodicCheckpoint::every(1, &path).with_keep(2);
+        for step in 1..=5 {
+            obs.on_step(&step_event(&st, &m, step)).unwrap();
+        }
+        // ring holds exactly the last two cadence saves, oldest first
+        let names: Vec<_> = obs
+            .retained()
+            .iter()
+            .map(|p| p.file_name().unwrap().to_str().unwrap().to_string())
+            .collect();
+        assert_eq!(names, ["run.step4.tkc2", "run.step5.tkc2"]);
+        for name in &names {
+            assert!(dir.join(name).exists(), "{name} must survive pruning");
+        }
+        for pruned in ["run.step1.tkc2", "run.step2.tkc2", "run.step3.tkc2"] {
+            assert!(!dir.join(pruned).exists(), "{pruned} must be pruned");
+        }
+        // the retained files are real, loadable checkpoints
+        assert_eq!(Checkpoint::load(dir.join("run.step5.tkc2")).unwrap().step, 5);
+        // the final save still lands on the configured path, outside
+        // the ring
+        obs.on_end(&EndEvent {
+            step: 10,
+            strategy: "topkast",
+            store: &st,
+            opt: &[],
+            metrics: &m,
+        })
+        .unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap().step, 10);
+        assert_eq!(obs.retained().len(), 2, "final save never joins the ring");
     }
 
     #[test]

@@ -26,8 +26,26 @@
 //! devices, gradients all-reduce in canonical order, and every refresh
 //! decision above is made once on the host and broadcast to all
 //! replicas.
+//!
+//! # Crash recovery
+//!
+//! Step chaining donates buffers (see `runtime::backend`), so a failed
+//! execution forfeits the resident chain. The trainer therefore keeps
+//! a **recovery base** — a host snapshot taken at every full sync
+//! point — plus a **journal** of everything that advanced the resident
+//! state since: per step, the batch, the scalars, and (when a refresh
+//! installed right before it) the installed mask sets and rewritten
+//! sparse values. On a fault ([`crate::runtime::RuntimeError`]) the
+//! trainer rebuilds the chain from the base on healthy devices
+//! (permanently lost ones are quarantined; replicated runs re-shard to
+//! the survivors) and deterministically replays the journal — bitwise
+//! identical to the run that never faulted, because the replay installs
+//! exactly the journaled sets/values and executes exactly the journaled
+//! batches. Read-only syncs retry in place after recovery. The
+//! fault-free path journals to host memory only and moves not one extra
+//! byte over the simulated bus (the pinned traffic invariants hold).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::{bail, Context, Result};
 
@@ -39,10 +57,10 @@ use super::schedule::LrSchedule;
 use crate::runtime::{
     backend::{AnyBackend, Backend},
     client::TensorRef,
-    DeviceState, ModelEntry, ReplicatedState, Runtime, TrafficModel,
+    DeviceState, ModelEntry, ReplicatedState, Runtime, RuntimeError, TrafficModel,
 };
 use crate::sparsity::{update_store_masks, MaskStrategy, ParamStore};
-use crate::tensor::{HostTensor, TensorData};
+use crate::tensor::{HostTensor, SparseSet, TensorData};
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
 
@@ -156,6 +174,20 @@ impl<B: Backend> Resident<B> {
         }
     }
 
+    fn install_mask_sets(&mut self, sets: &[(SparseSet, SparseSet)]) -> Result<()> {
+        match self {
+            Resident::Single(d) => d.install_mask_sets(sets),
+            Resident::Replicated(r) => r.install_mask_sets(sets),
+        }
+    }
+
+    fn upload_sparse_values(&mut self, values: &[Vec<f32>]) -> Result<()> {
+        match self {
+            Resident::Single(d) => d.upload_sparse_values(values),
+            Resident::Replicated(r) => r.upload_sparse_values(values),
+        }
+    }
+
     fn run_with_fwd_masks(
         &self,
         exe: &crate::runtime::Executable<B>,
@@ -167,6 +199,51 @@ impl<B: Backend> Resident<B> {
             Resident::Replicated(r) => r.run_with_fwd_masks(exe, x, y),
         }
     }
+}
+
+/// How many rebuild attempts a single recovery tolerates before giving
+/// up. Fault plans cap their transient faults (`FaultPlan::max`), so a
+/// run that keeps faulting past this bound is genuinely broken, not
+/// unlucky.
+const RECOVERY_ATTEMPTS: usize = 32;
+
+/// Masks (and, for weight-rewriting strategies, sparse values) exactly
+/// as a refresh installed them — journaled so a replay can re-install
+/// the same bits without re-running the host-side selection.
+struct RefreshRecord {
+    /// (fwd, bwd) index sets per sparse tensor, `sparse_idx` order.
+    sets: Vec<(SparseSet, SparseSet)>,
+    /// Dense images of the sparse tensors at install time (SET/RigL
+    /// rewrite weights at refresh); `None` for mask-pure strategies.
+    values: Option<Vec<Vec<f32>>>,
+}
+
+/// Everything needed to re-execute one training step bit-for-bit.
+struct StepRecord {
+    x: HostTensor,
+    y: HostTensor,
+    scalars: [[f32; 1]; 4],
+    /// The refresh installed immediately before this step, if any.
+    refresh: Option<RefreshRecord>,
+}
+
+/// The host snapshot recovery rebuilds from: store + optimiser mirror
+/// known bit-identical to the resident chain when the snapshot was
+/// taken (i.e. at a full sync point).
+struct RecoveryBase {
+    store: ParamStore,
+    opt: Vec<Vec<f32>>,
+}
+
+/// Observability for the chaos bench: what recovery actually did.
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryStats {
+    /// Completed rebuild-and-replay cycles.
+    pub recoveries: usize,
+    /// Journaled steps re-executed across all recoveries.
+    pub steps_replayed: usize,
+    /// Wall-clock spent inside recovery.
+    pub recovery_ms: f64,
 }
 
 pub struct Trainer<B: Backend = AnyBackend> {
@@ -204,6 +281,18 @@ pub struct Trainer<B: Backend = AnyBackend> {
     /// Hooks driven by `train()`/`refresh_masks` (logging, metric
     /// streaming, checkpointing — see `coordinator::observer`).
     observers: Vec<Box<dyn TrainObserver>>,
+    /// Recovery base: host snapshot from the last full sync point (see
+    /// module docs, "Crash recovery").
+    base: RecoveryBase,
+    /// Steps since the base, in execution order — replayed verbatim
+    /// after a fault. Host memory only; cleared at every rebase.
+    journal: Vec<StepRecord>,
+    /// Refresh installed since the last journaled step, waiting to ride
+    /// along with the next step's record.
+    pending_refresh: Option<RefreshRecord>,
+    /// Permanently lost devices — never built on again.
+    quarantined: BTreeSet<usize>,
+    recovery: RecoveryStats,
 }
 
 impl<B: Backend> Trainer<B> {
@@ -255,6 +344,7 @@ impl<B: Backend> Trainer<B> {
             )?)
         };
         let rng = Pcg64::new(cfg.seed ^ 0x7A5C, 0xEE);
+        let base = RecoveryBase { store: store.clone(), opt: opt.clone() };
         Ok(Trainer {
             runtime,
             model,
@@ -273,6 +363,11 @@ impl<B: Backend> Trainer<B> {
             masks_initialised: false,
             async_refresher: None,
             observers: vec![],
+            base,
+            journal: vec![],
+            pending_refresh: None,
+            quarantined: BTreeSet::new(),
+            recovery: RecoveryStats::default(),
         })
     }
 
@@ -311,17 +406,185 @@ impl<B: Backend> Trainer<B> {
         self.params_synced && self.opt_synced
     }
 
+    /// What recovery has done so far (chaos bench observability).
+    pub fn recovery_stats(&self) -> &RecoveryStats {
+        &self.recovery
+    }
+
+    /// Devices quarantined after permanent loss, ascending.
+    pub fn quarantined_devices(&self) -> Vec<usize> {
+        self.quarantined.iter().copied().collect()
+    }
+
+    /// The host state now fully mirrors the resident chain: make it the
+    /// new recovery base and drop the journal behind it.
+    fn rebase(&mut self) {
+        self.base = RecoveryBase {
+            store: self.store.clone(),
+            opt: self.opt.clone(),
+        };
+        self.journal.clear();
+    }
+
+    /// Classify an error from the Backend surface: quarantine the lost
+    /// device and rebuild-and-replay for recoverable runtime faults,
+    /// propagate everything else as fatal.
+    fn absorb_fault(&mut self, err: anyhow::Error) -> Result<()> {
+        if !RuntimeError::is_fault(&err) {
+            return Err(err);
+        }
+        if let Some(device) = RuntimeError::lost_device(&err) {
+            self.quarantined.insert(device);
+        }
+        self.recover()?;
+        Ok(())
+    }
+
+    /// Build a fresh resident chain from the given host snapshot on
+    /// healthy (non-quarantined) devices. Replicated runs keep the
+    /// original shard geometry and re-shard to the survivors.
+    fn build_resident(&self, store: &ParamStore, opt: &[Vec<f32>]) -> Result<Resident<B>> {
+        if self.cfg.replicas > 1 {
+            let devices: Vec<usize> = (0..self.cfg.replicas)
+                .filter(|d| !self.quarantined.contains(d))
+                .collect();
+            if devices.is_empty() {
+                bail!(
+                    "all {} replica devices are quarantined; cannot recover",
+                    self.cfg.replicas
+                );
+            }
+            Ok(Resident::Replicated(ReplicatedState::from_host_on_devices(
+                self.runtime.client().clone(),
+                &self.model,
+                store,
+                opt,
+                self.cfg.replicas,
+                &devices,
+            )?))
+        } else {
+            let device = (0..self.runtime.client().device_count())
+                .find(|d| !self.quarantined.contains(d))
+                .context("every device is quarantined; cannot recover")?;
+            Ok(Resident::Single(DeviceState::from_host_on(
+                self.runtime.client().clone(),
+                &self.model,
+                store,
+                opt,
+                device,
+            )?))
+        }
+    }
+
+    /// Re-execute the journal against a freshly rebuilt chain: install
+    /// the journaled mask sets/values where a refresh rode along, run
+    /// the journaled batches with the journaled scalars. Returns the
+    /// last replayed step's loss.
+    fn replay_journal(&self, resident: &mut Resident<B>) -> Result<Option<f64>> {
+        let mut last = None;
+        for rec in &self.journal {
+            if let Some(refresh) = &rec.refresh {
+                resident.install_mask_sets(&refresh.sets)?;
+                if let Some(values) = &refresh.values {
+                    resident.upload_sparse_values(values)?;
+                }
+            }
+            let loss = match resident {
+                Resident::Single(device) => {
+                    let exe = self.runtime.get(&self.model.train)?;
+                    device.train_step(
+                        exe,
+                        TensorRef::from(&rec.x),
+                        TensorRef::from(&rec.y),
+                        &rec.scalars,
+                    )?
+                }
+                Resident::Replicated(replicas) => {
+                    let rep = self
+                        .model
+                        .replication
+                        .as_ref()
+                        .expect("validated in Trainer::new");
+                    let grad = self.runtime.get(&rep.grad)?;
+                    let apply = self.runtime.get(&rep.apply)?;
+                    replicas.train_step(
+                        grad,
+                        apply,
+                        TensorRef::from(&rec.x),
+                        TensorRef::from(&rec.y),
+                        &rec.scalars,
+                    )?
+                }
+            };
+            last = Some(loss);
+        }
+        Ok(last)
+    }
+
+    /// Rebuild the resident chain from the recovery base and replay the
+    /// journal — the donation contract means a faulted step forfeited
+    /// the old chain wholesale. Faults *during* recovery restart it
+    /// (lost devices quarantined first), bounded by
+    /// `RECOVERY_ATTEMPTS`. Returns the last replayed step's loss.
+    fn recover(&mut self) -> Result<Option<f64>> {
+        let sw = Stopwatch::start();
+        let mut attempts = 0usize;
+        let loss = loop {
+            attempts += 1;
+            if attempts > RECOVERY_ATTEMPTS {
+                bail!("recovery did not converge after {RECOVERY_ATTEMPTS} rebuild attempts");
+            }
+            let rebuilt = self
+                .build_resident(&self.base.store, &self.base.opt)
+                .and_then(|mut resident| {
+                    let loss = self.replay_journal(&mut resident)?;
+                    Ok((resident, loss))
+                });
+            match rebuilt {
+                Ok((resident, loss)) => {
+                    self.device = resident;
+                    break loss;
+                }
+                Err(err) => match RuntimeError::classify(&err) {
+                    Some(RuntimeError::DeviceLost { device }) => {
+                        let device = *device;
+                        self.quarantined.insert(device);
+                    }
+                    Some(RuntimeError::Transient { .. }) => {}
+                    None => return Err(err),
+                },
+            }
+        };
+        // the rebuilt chain matches what the host would see after the
+        // journaled steps — which is *ahead* of the host mirrors
+        self.params_synced = false;
+        self.active_synced = false;
+        self.opt_synced = false;
+        self.recovery.recoveries += 1;
+        self.recovery.steps_replayed += self.journal.len();
+        self.recovery.recovery_ms += sw.elapsed_ms();
+        Ok(loss)
+    }
+
     /// Pull the *active* θ device→host if stale — the paper's
     /// refresh-point sync: host Top-K reads only the sparse tensors'
     /// weights, every position outside the installed fwd∪bwd sets is
     /// bit-identical on both sides already, and the optimiser slots
     /// stay on the device. O(nnz) metered bytes.
     fn sync_params_host(&mut self) -> Result<()> {
-        if self.params_synced || self.active_synced {
-            return Ok(());
+        let mut attempts = 0usize;
+        while !(self.params_synced || self.active_synced) {
+            attempts += 1;
+            if attempts > RECOVERY_ATTEMPTS {
+                bail!("active-params sync did not converge after {RECOVERY_ATTEMPTS} attempts");
+            }
+            // read-only gather: a fault leaves the chain intact unless
+            // the device is gone, so absorb and retry in place
+            match self.device.sync_active_params_to_host(&mut self.store) {
+                Ok(()) => self.active_synced = true,
+                Err(err) => self.absorb_fault(err)?,
+            }
         }
-        self.device.sync_active_params_to_host(&mut self.store)?;
-        self.active_synced = true;
         Ok(())
     }
 
@@ -331,6 +594,26 @@ impl<B: Backend> Trainer<B> {
     /// `wants_host_state` (mask refreshes use the O(nnz) active sync
     /// internally).
     pub fn sync_host(&mut self) -> Result<()> {
+        let mut attempts = 0usize;
+        while !(self.params_synced && self.opt_synced) {
+            attempts += 1;
+            if attempts > RECOVERY_ATTEMPTS {
+                bail!("host sync did not converge after {RECOVERY_ATTEMPTS} attempts");
+            }
+            match self.try_sync_host_once() {
+                Ok(()) => {}
+                Err(err) => self.absorb_fault(err)?,
+            }
+        }
+        // full sync point: the host mirrors the chain bit-for-bit, so
+        // recovery can restart from here and forget the journal
+        if !self.journal.is_empty() {
+            self.rebase();
+        }
+        Ok(())
+    }
+
+    fn try_sync_host_once(&mut self) -> Result<()> {
         if !self.params_synced {
             self.device.sync_params_to_host(&mut self.store)?;
             self.params_synced = true;
@@ -348,7 +631,55 @@ impl<B: Backend> Trainer<B> {
     /// install points; call it manually after external mask surgery on
     /// `store` (e.g. selection analysis) so the device sees the edit.
     pub fn push_masks_to_device(&mut self) -> Result<()> {
-        self.device.upload_mask_deltas(&self.store)
+        self.install_refresh()
+    }
+
+    /// Journal what a refresh just installed: the absolute index sets
+    /// (and, for weight-rewriting strategies, the sparse tensors' dense
+    /// images) — everything a replay needs to re-install the same bits
+    /// without re-running the host-side selection.
+    fn capture_refresh_record(&self) -> RefreshRecord {
+        let mutates = self.strategy.mutates_weights();
+        let mut sets = Vec::new();
+        let mut values = Vec::new();
+        for e in self.store.entries.iter().filter(|e| e.spec.sparse) {
+            let m = e
+                .masks
+                .as_ref()
+                .expect("sparse param has masks after a refresh install");
+            sets.push((m.fwd().clone(), m.bwd().clone()));
+            if mutates {
+                values.push(e.values.clone());
+            }
+        }
+        RefreshRecord { sets, values: mutates.then_some(values) }
+    }
+
+    /// Install the store's masks (and rewritten sparse values) on the
+    /// resident chain, recovering on faults: a failed scatter install is
+    /// not idempotent — the old mask buffer is consumed either way — so
+    /// the chain is rebuilt at its pre-refresh state and the install
+    /// retried from a clean delta base. Journals the installed state on
+    /// success.
+    fn install_refresh(&mut self) -> Result<()> {
+        let mutates = self.strategy.mutates_weights();
+        let mut attempts = 0usize;
+        loop {
+            attempts += 1;
+            if attempts > RECOVERY_ATTEMPTS {
+                bail!("mask install did not converge after {RECOVERY_ATTEMPTS} attempts");
+            }
+            let result = match self.device.upload_mask_deltas(&self.store) {
+                Ok(()) if mutates => self.device.upload_sparse_params(&self.store),
+                other => other,
+            };
+            match result {
+                Ok(()) => break,
+                Err(err) => self.absorb_fault(err)?,
+            }
+        }
+        self.pending_refresh = Some(self.capture_refresh_record());
+        Ok(())
     }
 
     /// Per-step / per-refresh traffic account under the
@@ -390,9 +721,22 @@ impl<B: Backend> Trainer<B> {
             ck.restore(&mut self.store, &mut self.opt)?;
         }
         self.step = ck.step;
-        self.device.upload_params(&self.store)?;
-        self.device.upload_opt(&self.opt)?;
-        self.device.upload_masks(&self.store)?;
+        // the restored host state is the new recovery base — recovery
+        // must never replay into a pre-restore chain
+        self.rebase();
+        self.pending_refresh = None;
+        let mut pushed = self.device.upload_params(&self.store);
+        if pushed.is_ok() {
+            pushed = self.device.upload_opt(&self.opt);
+        }
+        if pushed.is_ok() {
+            pushed = self.device.upload_masks(&self.store);
+        }
+        if let Err(err) = pushed {
+            // a faulted upload leaves the chain part-old/part-new;
+            // absorb_fault rebuilds it wholesale from the fresh base
+            self.absorb_fault(err)?;
+        }
         self.params_synced = true;
         self.active_synced = true;
         self.opt_synced = true;
@@ -471,14 +815,13 @@ impl<B: Backend> Trainer<B> {
             self.step,
             self.cfg.steps,
         )?;
-        self.device.upload_mask_deltas(&self.store)?;
-        if self.strategy.mutates_weights() {
-            // SET re-inits grown connections, RigL zeroes dropped/grown
-            // ones — the host rewrite must reach the device. Sparse
-            // tensors only: the host's dense tensors are stale between
-            // full syncs and must not clobber trained device state.
-            self.device.upload_sparse_params(&self.store)?;
-        }
+        // SET re-inits grown connections, RigL zeroes dropped/grown
+        // ones — the host rewrite must reach the device alongside the
+        // index deltas (install_refresh ships both, and recovers from
+        // faulted installs). Sparse tensors only: the host's dense
+        // tensors are stale between full syncs and must not clobber
+        // trained device state.
+        self.install_refresh()?;
         if !self.masks_initialised {
             self.metrics.reservoir.init(&self.store);
             self.masks_initialised = true;
@@ -501,13 +844,30 @@ impl<B: Backend> Trainer<B> {
     /// Dense |grad| for the RigL baseline, via the dedicated artifact —
     /// runs against the *resident* params/masks, streaming one batch.
     fn run_grad_norms(&mut self) -> Result<BTreeMap<String, Vec<f32>>> {
+        // draw the batch exactly once — retries must not advance the
+        // data stream, or the faulted run diverges from the clean one
         let (x, y) = self.data.next_train();
-        let exe = self.runtime.load(&self.model.grad_norms)?;
-        let outs = self.device.run_with_fwd_masks(
-            exe,
-            TensorRef::from(&x),
-            TensorRef::from(&y),
-        )?;
+        let mut attempts = 0usize;
+        let outs = loop {
+            attempts += 1;
+            if attempts > RECOVERY_ATTEMPTS {
+                bail!("grad_norms did not converge after {RECOVERY_ATTEMPTS} attempts");
+            }
+            // borrow-only execution: retry in place after absorbing
+            let result = {
+                let exe = self.runtime.get(&self.model.grad_norms)?;
+                self.device.run_with_fwd_masks(
+                    exe,
+                    TensorRef::from(&x),
+                    TensorRef::from(&y),
+                )
+            };
+            match result {
+                Ok(outs) => break outs,
+                Err(err) => self.absorb_fault(err)?,
+            }
+        };
+        let exe = self.runtime.get(&self.model.grad_norms)?;
         let mut map = BTreeMap::new();
         for (t, io) in outs.into_iter().zip(&exe.spec.outputs) {
             let name = io
@@ -520,6 +880,38 @@ impl<B: Backend> Trainer<B> {
             });
         }
         Ok(map)
+    }
+
+    /// Dispatch one fused/replicated train execution against the
+    /// resident chain (artifacts were cached by `Trainer::new`).
+    fn execute_step(
+        &mut self,
+        x: &HostTensor,
+        y: &HostTensor,
+        scalars: &[[f32; 1]; 4],
+    ) -> Result<f64> {
+        match &mut self.device {
+            Resident::Single(device) => {
+                let exe = self.runtime.get(&self.model.train)?;
+                device.train_step(exe, TensorRef::from(x), TensorRef::from(y), scalars)
+            }
+            Resident::Replicated(replicas) => {
+                let rep = self
+                    .model
+                    .replication
+                    .as_ref()
+                    .expect("validated in Trainer::new");
+                let grad = self.runtime.get(&rep.grad)?;
+                let apply = self.runtime.get(&rep.apply)?;
+                replicas.train_step(
+                    grad,
+                    apply,
+                    TensorRef::from(x),
+                    TensorRef::from(y),
+                    scalars,
+                )
+            }
+        }
     }
 
     /// One training step; returns the batch loss. Steady-state steps
@@ -578,7 +970,7 @@ impl<B: Backend> Trainer<B> {
                 self.sync_params_host()?;
                 // async-eligible strategies are mask-pure, so only the
                 // index deltas travel to the device
-                self.device.upload_mask_deltas(&self.store)?;
+                self.install_refresh()?;
                 let elapsed_ms = self
                     .async_refresher
                     .as_ref()
@@ -611,31 +1003,26 @@ impl<B: Backend> Trainer<B> {
             [self.inv_d()],
         ];
 
-        let loss = match &mut self.device {
-            Resident::Single(device) => {
-                let exe = self.runtime.load(&self.model.train)?;
-                device.train_step(
-                    exe,
-                    TensorRef::from(&x),
-                    TensorRef::from(&y),
-                    &scalars,
-                )?
-            }
-            Resident::Replicated(replicas) => {
-                let rep = self
-                    .model
-                    .replication
-                    .as_ref()
-                    .expect("validated in Trainer::new");
-                let grad = self.runtime.get(&rep.grad)?;
-                let apply = self.runtime.get(&rep.apply)?;
-                replicas.train_step(
-                    grad,
-                    apply,
-                    TensorRef::from(&x),
-                    TensorRef::from(&y),
-                    &scalars,
-                )?
+        // journal the step before dispatching: a faulted execution
+        // forfeits the resident chain (donation), and recovery replays
+        // the journal — this record included — from the last base
+        self.journal.push(StepRecord {
+            x: x.clone(),
+            y: y.clone(),
+            scalars,
+            refresh: self.pending_refresh.take(),
+        });
+        let loss = match self.execute_step(&x, &y, &scalars) {
+            Ok(loss) => loss,
+            Err(err) => {
+                if !RuntimeError::is_fault(&err) {
+                    return Err(err);
+                }
+                if let Some(device) = RuntimeError::lost_device(&err) {
+                    self.quarantined.insert(device);
+                }
+                self.recover()?
+                    .expect("journal holds at least the faulted step")
             }
         };
         self.params_synced = false;
@@ -717,13 +1104,37 @@ impl<B: Backend> Trainer<B> {
         let Some((x, y)) = self.data.eval_batch(idx) else {
             return Ok(None);
         };
-        let exe = self.runtime.load(&self.model.eval)?;
-        let outs = self.device.run_with_fwd_masks(
-            exe,
-            TensorRef::from(&x),
-            TensorRef::from(&y),
-        )?;
+        let outs = self.run_eval_recovering(&x, &y)?;
         Ok(Some((outs[0].as_f32()?[0], outs[1].as_f32()?[0])))
+    }
+
+    /// Run the eval artifact against the resident state, absorbing
+    /// runtime faults: eval borrows the chain (no donation), so a
+    /// transient fault retries in place and device loss recovers first.
+    fn run_eval_recovering(
+        &mut self,
+        x: &HostTensor,
+        y: &HostTensor,
+    ) -> Result<Vec<HostTensor>> {
+        let mut attempts = 0usize;
+        loop {
+            attempts += 1;
+            if attempts > RECOVERY_ATTEMPTS {
+                bail!("eval did not converge after {RECOVERY_ATTEMPTS} attempts");
+            }
+            let result = {
+                let exe = self.runtime.get(&self.model.eval)?;
+                self.device.run_with_fwd_masks(
+                    exe,
+                    TensorRef::from(x),
+                    TensorRef::from(y),
+                )
+            };
+            match result {
+                Ok(outs) => return Ok(outs),
+                Err(err) => self.absorb_fault(err)?,
+            }
+        }
     }
 
     /// Evaluate on the data source's deterministic eval stream — runs
@@ -735,12 +1146,7 @@ impl<B: Backend> Trainer<B> {
         let mut batches = 0usize;
         for idx in 0..self.cfg.eval_batches {
             let Some((x, y)) = self.data.eval_batch(idx) else { break };
-            let exe = self.runtime.load(&self.model.eval)?;
-            let outs = self.device.run_with_fwd_masks(
-                exe,
-                TensorRef::from(&x),
-                TensorRef::from(&y),
-            )?;
+            let outs = self.run_eval_recovering(&x, &y)?;
             loss_sum += outs[0].as_f32()?[0] as f64;
             metric_sum += outs[1].as_f32()?[0] as f64;
             batches += 1;

@@ -87,6 +87,17 @@ fn cmd_train(args: &[String]) -> Result<()> {
         .opt("seed", "0", "seed for init/data/masks")
         .opt("replicas", "1", "data-parallel replicas on the simulated device set")
         .opt("checkpoint", "", "path to write the final checkpoint")
+        .opt(
+            "checkpoint-keep",
+            "0",
+            "retain only the last N periodic checkpoints (0 = keep all)",
+        )
+        .opt(
+            "faults",
+            "",
+            "fault-injection plan, e.g. seed=3;transfer=0.02;exec=0.05;max=16 \
+             (chaos testing; recovery keeps the run bit-identical)",
+        )
         .opt("metrics-jsonl", "", "stream step/eval metrics to this JSONL file")
         .opt(
             "stop-exploration-at",
@@ -189,6 +200,12 @@ fn train_spec(p: &Parsed, explicit_only: bool) -> Result<RunSpec> {
     if give("checkpoint") && !p.get("checkpoint").is_empty() {
         s.checkpoint = Some(p.get("checkpoint").to_string());
     }
+    if give("checkpoint-keep") {
+        s.checkpoint_keep = Some(p.get_usize("checkpoint-keep")?);
+    }
+    if give("faults") && !p.get("faults").is_empty() {
+        s.faults = Some(p.get("faults").to_string());
+    }
     if p.is_set("async-refresh") {
         s.async_refresh = Some(true);
     }
@@ -234,6 +251,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("swap-to", "", "checkpoint to hot-swap to halfway through the trace")
         .opt("requests", "64", "total requests in the open-loop trace")
         .opt("per-tick", "2", "request arrivals per tick")
+        .opt("queue-cap", "0", "admission queue bound; arrivals beyond it are shed (0 = unbounded)")
+        .opt("deadline-ticks", "0", "drop queued requests older than this many ticks (0 = never)")
         .opt("seed", "0", "trace seed");
     let p = cli.parse(args)?;
 
@@ -262,6 +281,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let cfg = ServeConfig {
         max_batch: p.get_usize("max-batch")?,
         inflight_limit: p.get_usize("inflight")?,
+        queue_cap: p.get_usize("queue-cap")?,
+        deadline_ticks: p.get_u64("deadline-ticks")?,
     };
     let mut server = ModelServer::from_checkpoint(runtime, model, &ck, cfg)?;
     info!(
@@ -314,6 +335,13 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         "served: {} requests, {} executions ({} padded rows), per-device {:?}",
         s.completed, s.executions, s.padded_rows, s.per_device_executions
     );
+    if s.shed + s.expired + s.exec_retries > 0 {
+        println!(
+            "degraded: {} shed at admission, {} expired past deadline, \
+             {} execution retries",
+            s.shed, s.expired, s.exec_retries
+        );
+    }
     Ok(())
 }
 

@@ -57,8 +57,10 @@
 //!
 //! [`AnyBackend`] is the default backend everywhere
 //! (`Runtime<B = AnyBackend>` and friends); it dispatches between the
-//! raw host-sim (`sim`), the donation-enforcing wrapper (`strict`) and
-//! — behind the `pjrt` feature — the real-bindings scaffold (`pjrt`).
+//! raw host-sim (`sim`), the donation-enforcing wrapper (`strict`),
+//! the fault-injecting wrapper (`faulty` over sim, `faulty-strict`
+//! over strict — see the `fault` module for the fault model) and —
+//! behind the `pjrt` feature — the real-bindings scaffold (`pjrt`).
 //! `Runtime::new`/`Runtime::with_devices` pick the variant from the
 //! `TOPKAST_BACKEND` environment variable (default `sim`), which is
 //! how the bit-parity suites run unchanged against both in-crate
@@ -70,6 +72,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::xla;
 
+use super::fault::{FaultBackend, FaultBuffer, FaultExecutable, FaultPlan};
 use super::strict::{StrictBackend, StrictBuffer, StrictExecutable};
 
 /// One input position of a backend execution, with its ownership mode
@@ -327,8 +330,9 @@ impl Backend for xla::PjRtClient {
 // ---------------------------------------------------------------------------
 
 /// The environment variable that selects the backend for
-/// `Runtime::new`/`Runtime::with_devices` (`sim` | `strict`, plus
-/// `pjrt` behind the feature; default `sim`).
+/// `Runtime::new`/`Runtime::with_devices` (`sim` | `strict` |
+/// `faulty` | `faulty-strict`, plus `pjrt` behind the feature;
+/// default `sim`).
 pub const BACKEND_ENV: &str = "TOPKAST_BACKEND";
 
 /// The backend name `TOPKAST_BACKEND` currently selects (without
@@ -337,6 +341,8 @@ pub const BACKEND_ENV: &str = "TOPKAST_BACKEND";
 pub fn env_backend_name() -> &'static str {
     match std::env::var(BACKEND_ENV).as_deref() {
         Ok("strict") => "strict",
+        Ok("faulty") => "faulty",
+        Ok("faulty-strict") => "faulty-strict",
         #[cfg(feature = "pjrt")]
         Ok("pjrt") => "pjrt",
         _ => "sim",
@@ -349,6 +355,9 @@ pub fn env_backend_name() -> &'static str {
 pub enum AnyBackend {
     Sim(xla::PjRtClient),
     Strict(StrictBackend),
+    /// Fault injection over any other variant (boxed to break the
+    /// type recursion). See the `fault` module for the fault model.
+    Faulty(Box<FaultBackend<AnyBackend>>),
     #[cfg(feature = "pjrt")]
     Pjrt(super::pjrt::PjrtBackend),
 }
@@ -359,6 +368,7 @@ pub enum AnyBackend {
 pub enum AnyBuffer {
     Sim(xla::PjRtBuffer),
     Strict(StrictBuffer),
+    Faulty(Box<FaultBuffer<AnyBackend>>),
     #[cfg(feature = "pjrt")]
     Pjrt(super::pjrt::PjrtBuffer),
 }
@@ -366,6 +376,7 @@ pub enum AnyBuffer {
 pub enum AnyExecutable {
     Sim(xla::PjRtLoadedExecutable),
     Strict(StrictExecutable),
+    Faulty(Box<FaultExecutable<AnyBackend>>),
     #[cfg(feature = "pjrt")]
     Pjrt(super::pjrt::PjrtExecutable),
 }
@@ -388,20 +399,28 @@ impl AnyBackend {
         }
     }
 
-    /// Build a backend by name (`sim` | `strict`, plus `pjrt` behind
-    /// the feature). The parsing half of [`AnyBackend::from_env`],
-    /// testable without touching the process environment.
+    /// Build a backend by name (`sim` | `strict` | `faulty` |
+    /// `faulty-strict`, plus `pjrt` behind the feature). The parsing
+    /// half of [`AnyBackend::from_env`], testable without touching
+    /// the process environment. The `faulty*` variants read their
+    /// fault schedule from `TOPKAST_FAULTS`.
     pub fn from_name(name: &str, devices: usize) -> Result<AnyBackend> {
         match name {
             "" | "sim" => Ok(AnyBackend::Sim(xla::PjRtClient::cpu_with_devices(devices)?)),
             "strict" => Ok(AnyBackend::Strict(StrictBackend::with_devices(devices)?)),
+            "faulty" => Ok(AnyBackend::Faulty(Box::new(FaultBackend::from_env(
+                Self::sim(devices)?,
+            )?))),
+            "faulty-strict" => Ok(AnyBackend::Faulty(Box::new(FaultBackend::from_env(
+                Self::strict(devices)?,
+            )?))),
             #[cfg(feature = "pjrt")]
             "pjrt" => Ok(AnyBackend::Pjrt(super::pjrt::PjrtBackend::with_devices(
                 devices,
             )?)),
             other => bail!(
-                "unknown {BACKEND_ENV} value {other:?} (expected \"sim\" or \
-                 \"strict\"{})",
+                "unknown {BACKEND_ENV} value {other:?} (expected \"sim\", \
+                 \"strict\", \"faulty\" or \"faulty-strict\"{})",
                 if cfg!(feature = "pjrt") { " or \"pjrt\"" } else { "" }
             ),
         }
@@ -416,6 +435,24 @@ impl AnyBackend {
     pub fn strict(devices: usize) -> Result<AnyBackend> {
         Self::from_name("strict", devices)
     }
+
+    /// Fault injection with an explicit [`FaultPlan`] over an
+    /// explicit inner backend — how the chaos suites construct their
+    /// schedules programmatically (the env path goes through
+    /// [`AnyBackend::from_name`] + `TOPKAST_FAULTS`).
+    pub fn faulty(inner: AnyBackend, plan: FaultPlan) -> AnyBackend {
+        AnyBackend::Faulty(Box::new(FaultBackend::new(inner, plan)))
+    }
+
+    /// The fault wrapper behind this backend, if it is one — how the
+    /// layers above reach fault bookkeeping (fired counts, lost
+    /// devices) without widening the `Backend` trait.
+    pub fn as_faulty(&self) -> Option<&FaultBackend<AnyBackend>> {
+        match self {
+            AnyBackend::Faulty(c) => Some(c.as_ref()),
+            _ => None,
+        }
+    }
 }
 
 impl BufferOps for AnyBuffer {
@@ -423,6 +460,7 @@ impl BufferOps for AnyBuffer {
         match self {
             AnyBuffer::Sim(b) => b.element_count(),
             AnyBuffer::Strict(b) => b.element_count(),
+            AnyBuffer::Faulty(b) => b.element_count(),
             #[cfg(feature = "pjrt")]
             AnyBuffer::Pjrt(b) => b.element_count(),
         }
@@ -432,6 +470,7 @@ impl BufferOps for AnyBuffer {
         match self {
             AnyBuffer::Sim(b) => b.element_type(),
             AnyBuffer::Strict(b) => b.element_type(),
+            AnyBuffer::Faulty(b) => b.element_type(),
             #[cfg(feature = "pjrt")]
             AnyBuffer::Pjrt(b) => b.element_type(),
         }
@@ -441,6 +480,7 @@ impl BufferOps for AnyBuffer {
         match self {
             AnyBuffer::Sim(b) => b.is_tuple(),
             AnyBuffer::Strict(b) => b.is_tuple(),
+            AnyBuffer::Faulty(b) => b.is_tuple(),
             #[cfg(feature = "pjrt")]
             AnyBuffer::Pjrt(b) => b.is_tuple(),
         }
@@ -450,6 +490,7 @@ impl BufferOps for AnyBuffer {
         match self {
             AnyBuffer::Sim(b) => BufferOps::device(b),
             AnyBuffer::Strict(b) => b.device(),
+            AnyBuffer::Faulty(b) => BufferOps::device(b.as_ref()),
             #[cfg(feature = "pjrt")]
             AnyBuffer::Pjrt(b) => b.device(),
         }
@@ -459,6 +500,7 @@ impl BufferOps for AnyBuffer {
         match self {
             AnyBuffer::Sim(b) => BufferOps::to_literal_sync(b),
             AnyBuffer::Strict(b) => b.to_literal_sync(),
+            AnyBuffer::Faulty(b) => b.to_literal_sync(),
             #[cfg(feature = "pjrt")]
             AnyBuffer::Pjrt(b) => b.to_literal_sync(),
         }
@@ -468,6 +510,7 @@ impl BufferOps for AnyBuffer {
         match self {
             AnyBuffer::Sim(b) => BufferOps::gather_to_host(b, indices),
             AnyBuffer::Strict(b) => b.gather_to_host(indices),
+            AnyBuffer::Faulty(b) => b.gather_to_host(indices),
             #[cfg(feature = "pjrt")]
             AnyBuffer::Pjrt(b) => b.gather_to_host(indices),
         }
@@ -483,6 +526,11 @@ impl BufferOps for AnyBuffer {
                 .tuple_parts()?
                 .into_iter()
                 .map(AnyBuffer::Strict)
+                .collect()),
+            AnyBuffer::Faulty(b) => Ok(b
+                .tuple_parts()?
+                .into_iter()
+                .map(|p| AnyBuffer::Faulty(Box::new(p)))
                 .collect()),
             #[cfg(feature = "pjrt")]
             AnyBuffer::Pjrt(b) => Ok(b
@@ -501,6 +549,9 @@ impl BufferOps for AnyBuffer {
             AnyBuffer::Strict(b) => {
                 Ok(AnyBuffer::Strict(b.scatter_mask_update(added, removed)?))
             }
+            AnyBuffer::Faulty(b) => Ok(AnyBuffer::Faulty(Box::new(
+                b.scatter_mask_update(added, removed)?,
+            ))),
             #[cfg(feature = "pjrt")]
             AnyBuffer::Pjrt(b) => {
                 Ok(AnyBuffer::Pjrt(b.scatter_mask_update(added, removed)?))
@@ -516,6 +567,9 @@ impl BufferOps for AnyBuffer {
             AnyBuffer::Strict(b) => {
                 Ok(AnyBuffer::Strict(b.scatter_values_update(indices, values)?))
             }
+            AnyBuffer::Faulty(b) => Ok(AnyBuffer::Faulty(Box::new(
+                b.scatter_values_update(indices, values)?,
+            ))),
             #[cfg(feature = "pjrt")]
             AnyBuffer::Pjrt(b) => {
                 Ok(AnyBuffer::Pjrt(b.scatter_values_update(indices, values)?))
@@ -527,6 +581,7 @@ impl BufferOps for AnyBuffer {
         match self {
             AnyBuffer::Sim(b) => BufferOps::debug_read_f32(b),
             AnyBuffer::Strict(b) => b.debug_read_f32(),
+            AnyBuffer::Faulty(b) => b.debug_read_f32(),
             #[cfg(feature = "pjrt")]
             AnyBuffer::Pjrt(b) => b.debug_read_f32(),
         }
@@ -542,6 +597,7 @@ impl Backend for AnyBackend {
         match self {
             AnyBackend::Sim(c) => c.name(),
             AnyBackend::Strict(c) => Backend::name(c),
+            AnyBackend::Faulty(c) => Backend::name(c.as_ref()),
             #[cfg(feature = "pjrt")]
             AnyBackend::Pjrt(c) => Backend::name(c),
         }
@@ -551,6 +607,7 @@ impl Backend for AnyBackend {
         match self {
             AnyBackend::Sim(c) => Backend::platform_name(c),
             AnyBackend::Strict(c) => Backend::platform_name(c),
+            AnyBackend::Faulty(c) => Backend::platform_name(c.as_ref()),
             #[cfg(feature = "pjrt")]
             AnyBackend::Pjrt(c) => Backend::platform_name(c),
         }
@@ -560,6 +617,7 @@ impl Backend for AnyBackend {
         match self {
             AnyBackend::Sim(c) => Backend::device_count(c),
             AnyBackend::Strict(c) => Backend::device_count(c),
+            AnyBackend::Faulty(c) => Backend::device_count(c.as_ref()),
             #[cfg(feature = "pjrt")]
             AnyBackend::Pjrt(c) => Backend::device_count(c),
         }
@@ -582,6 +640,9 @@ impl Backend for AnyBackend {
             AnyBackend::Strict(c) => {
                 Ok(AnyBuffer::Strict(c.buffer_from_host_buffer(data, dims, device)?))
             }
+            AnyBackend::Faulty(c) => Ok(AnyBuffer::Faulty(Box::new(
+                c.buffer_from_host_buffer(data, dims, device)?,
+            ))),
             #[cfg(feature = "pjrt")]
             AnyBackend::Pjrt(c) => {
                 Ok(AnyBuffer::Pjrt(c.buffer_from_host_buffer(data, dims, device)?))
@@ -602,6 +663,9 @@ impl Backend for AnyBackend {
             AnyBackend::Strict(c) => {
                 Ok(AnyBuffer::Strict(c.mask_from_indices(dims, indices, device)?))
             }
+            AnyBackend::Faulty(c) => Ok(AnyBuffer::Faulty(Box::new(
+                c.mask_from_indices(dims, indices, device)?,
+            ))),
             #[cfg(feature = "pjrt")]
             AnyBackend::Pjrt(c) => {
                 Ok(AnyBuffer::Pjrt(c.mask_from_indices(dims, indices, device)?))
@@ -613,6 +677,9 @@ impl Backend for AnyBackend {
         match self {
             AnyBackend::Sim(c) => Ok(AnyExecutable::Sim(Backend::compile(c, comp)?)),
             AnyBackend::Strict(c) => Ok(AnyExecutable::Strict(c.compile(comp)?)),
+            AnyBackend::Faulty(c) => {
+                Ok(AnyExecutable::Faulty(Box::new(c.compile(comp)?)))
+            }
             #[cfg(feature = "pjrt")]
             AnyBackend::Pjrt(c) => Ok(AnyExecutable::Pjrt(c.compile(comp)?)),
         }
@@ -656,6 +723,23 @@ impl Backend for AnyBackend {
                 Ok(c.execute(e, unwrapped)?
                     .into_iter()
                     .map(AnyBuffer::Strict)
+                    .collect())
+            }
+            (AnyBackend::Faulty(c), AnyExecutable::Faulty(e)) => {
+                let mut unwrapped: Vec<ExecInput<'_, FaultBackend<AnyBackend>>> =
+                    Vec::with_capacity(inputs.len());
+                for input in inputs {
+                    unwrapped.push(match input {
+                        ExecInput::Donate(AnyBuffer::Faulty(b)) => ExecInput::Donate(*b),
+                        ExecInput::Borrow(AnyBuffer::Faulty(b)) => {
+                            ExecInput::Borrow(b.as_ref())
+                        }
+                        _ => return Err(cross_backend("faulty", "buffer")),
+                    });
+                }
+                Ok(c.execute(e.as_ref(), unwrapped)?
+                    .into_iter()
+                    .map(|b| AnyBuffer::Faulty(Box::new(b)))
                     .collect())
             }
             #[cfg(feature = "pjrt")]
@@ -706,6 +790,19 @@ impl Backend for AnyBackend {
                     .map(AnyBuffer::Strict)
                     .collect())
             }
+            AnyBackend::Faulty(c) => {
+                let refs = inputs
+                    .iter()
+                    .map(|b| match b {
+                        AnyBuffer::Faulty(b) => Ok(b.as_ref()),
+                        _ => Err(cross_backend("faulty", "buffer")),
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(c.all_reduce_sum(&refs)?
+                    .into_iter()
+                    .map(|b| AnyBuffer::Faulty(Box::new(b)))
+                    .collect())
+            }
             #[cfg(feature = "pjrt")]
             AnyBackend::Pjrt(c) => {
                 let refs = inputs
@@ -727,6 +824,7 @@ impl Backend for AnyBackend {
         match self {
             AnyBackend::Sim(c) => Backend::transfer_stats(c),
             AnyBackend::Strict(c) => Backend::transfer_stats(c),
+            AnyBackend::Faulty(c) => Backend::transfer_stats(c.as_ref()),
             #[cfg(feature = "pjrt")]
             AnyBackend::Pjrt(c) => Backend::transfer_stats(c),
         }
@@ -736,6 +834,7 @@ impl Backend for AnyBackend {
         match self {
             AnyBackend::Sim(c) => Backend::device_transfer_stats(c, device),
             AnyBackend::Strict(c) => Backend::device_transfer_stats(c, device),
+            AnyBackend::Faulty(c) => Backend::device_transfer_stats(c.as_ref(), device),
             #[cfg(feature = "pjrt")]
             AnyBackend::Pjrt(c) => Backend::device_transfer_stats(c, device),
         }
@@ -751,9 +850,15 @@ mod tests {
         assert_eq!(AnyBackend::from_name("sim", 1).unwrap().name(), "sim");
         assert_eq!(AnyBackend::from_name("", 1).unwrap().name(), "sim");
         assert_eq!(AnyBackend::from_name("strict", 2).unwrap().name(), "strict");
+        assert_eq!(AnyBackend::from_name("faulty", 1).unwrap().name(), "faulty");
+        assert_eq!(
+            AnyBackend::from_name("faulty-strict", 2).unwrap().name(),
+            "faulty"
+        );
         let err = AnyBackend::from_name("vulkan", 1).unwrap_err().to_string();
         assert!(err.contains("TOPKAST_BACKEND"), "{err}");
         assert!(err.contains("vulkan"), "{err}");
+        assert!(err.contains("faulty"), "{err}");
     }
 
     #[test]

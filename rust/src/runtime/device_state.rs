@@ -271,6 +271,60 @@ impl<B: Backend> DeviceState<B> {
         &self.installed_masks[pos]
     }
 
+    /// Install explicit index sets wholesale (`sparse_idx` order) — the
+    /// journal-replay path of crash recovery (`runtime::fault`), where
+    /// the sets to install are historical rather than the store's
+    /// current masks. Same O(nnz) index-list transfer as
+    /// `upload_masks`.
+    pub fn install_mask_sets(&mut self, sets: &[(SparseSet, SparseSet)]) -> Result<()> {
+        if sets.len() != self.sparse_idx.len() {
+            bail!(
+                "mask set count {} != sparse tensor count {}",
+                sets.len(),
+                self.sparse_idx.len()
+            );
+        }
+        let mut fwd = Vec::with_capacity(self.sparse_idx.len());
+        let mut bwd = Vec::with_capacity(self.sparse_idx.len());
+        for (pos, &i) in self.sparse_idx.iter().enumerate() {
+            let dims = &self.param_dims[i];
+            let (f, b) = &sets[pos];
+            fwd.push(self.client.mask_from_indices(
+                dims,
+                f.indices(),
+                Some(self.device),
+            )?);
+            bwd.push(self.client.mask_from_indices(
+                dims,
+                b.indices(),
+                Some(self.device),
+            )?);
+        }
+        self.masks_fwd = fwd;
+        self.masks_bwd = bwd;
+        self.installed_masks = sets.to_vec();
+        Ok(())
+    }
+
+    /// Overwrite the sparse tensors' resident values with explicit
+    /// dense images (`sparse_idx` order) — the journal-replay path for
+    /// weight-rewriting refreshes (SET/RigL), where the values to
+    /// restore are the ones journaled at install time, not the store's
+    /// current ones.
+    pub fn upload_sparse_values(&mut self, values: &[Vec<f32>]) -> Result<()> {
+        if values.len() != self.sparse_idx.len() {
+            bail!(
+                "sparse value count {} != sparse tensor count {}",
+                values.len(),
+                self.sparse_idx.len()
+            );
+        }
+        for (pos, &i) in self.sparse_idx.iter().enumerate() {
+            self.params[i] = self.upload_f32(&values[pos], &self.param_dims[i])?;
+        }
+        Ok(())
+    }
+
     /// Push host optimiser slots down (init and checkpoint restore).
     pub fn upload_opt(&mut self, opt: &[Vec<f32>]) -> Result<()> {
         let slots = self.layout.opt.len() / self.param_dims.len().max(1);

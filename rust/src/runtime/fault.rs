@@ -1,0 +1,672 @@
+//! `FaultBackend`: deterministic fault injection at the backend seam,
+//! and the typed error taxonomy the whole runtime recovers against.
+//!
+//! This module is the **normative fault model** for the crate. Every
+//! layer above the [`Backend`] trait — `DeviceState`,
+//! `ReplicatedState`, `Trainer`, the serve plane — classifies failures
+//! by downcasting `anyhow` errors to [`RuntimeError`] and reacts per
+//! the rules below; anything that does not downcast is a programming
+//! or environment error and stays fatal.
+//!
+//! # Error taxonomy
+//!
+//! * [`RuntimeError::Transient`] — a single transfer or execution
+//!   failed, the device survives. Whether the *operation* is
+//!   recoverable in place depends on its ownership mode (see the
+//!   `backend` module docs):
+//!   - **Borrow-only ops** (host syncs via `gather_to_host` /
+//!     `to_literal_sync`, eval/grad-norm executions, serve
+//!     executions, `all_reduce_sum`) left every input valid — callers
+//!     retry in place.
+//!   - **Donating ops** (`train_step`/`apply_step` executions, mask
+//!     `scatter_mask_update` installs, `scatter_values_update`) have
+//!     already consumed their inputs, exactly as on real hardware
+//!     where the donated memory is gone either way. The resident
+//!     chain is forfeit; recovery rebuilds it (below).
+//! * [`RuntimeError::DeviceLost`] — the device is permanently gone.
+//!   Every subsequent operation touching it fails the same way.
+//!   Callers quarantine the device: the trainer rebuilds on a healthy
+//!   one, `ReplicatedState` drops the replica and re-shards to
+//!   survivors, the serve plane stops placing work on it.
+//!
+//! # The recovery protocol and its parity guarantee
+//!
+//! Host state is the authority and is never poisoned by a device
+//! fault: the `Trainer` keeps a **base snapshot** (params + masks +
+//! optimizer state, rebased at every completed host sync or
+//! checkpoint restore) and a **journal** of every step executed since
+//! — batch, step scalars, and any mask/value installs a refresh made.
+//! Recovery re-uploads the base, replays the journal in order, and
+//! resumes. Because every execution is deterministic and the journal
+//! replays the *results* of host-side mask selection (never re-running
+//! Top-K, so the host RNG and store are not double-mutated), the
+//! recovered resident state is **bitwise identical** to the
+//! fault-free run — the chaos parity suite
+//! (`rust/tests/chaos_recovery.rs`) pins final θ/masks/opt to the
+//! fault-free bits under both `sim` and `strict` inner backends.
+//! Recovery adds no traffic to the fault-free path: the base is
+//! cloned host-side at syncs that already happen, and the journal
+//! records host copies of data already being uploaded.
+//!
+//! # Injection
+//!
+//! [`FaultBackend`] wraps any [`Backend`] (same wrapper position as
+//! `StrictBackend`) and injects faults from a seeded [`FaultPlan`]:
+//! each fault-eligible operation (metered transfers, executions,
+//! all-reduces, consuming scatter updates) advances a deterministic
+//! PCG64 stream and fails with `Transient` at the plan's per-kind
+//! probability, up to a `max` cap that guarantees faulted runs
+//! terminate; `lose=<device>@<op>` kills a device permanently once
+//! the global op counter reaches `<op>`. Select it with
+//! `TOPKAST_BACKEND=faulty` (host-sim inner) or `faulty-strict`
+//! (donation-enforcing inner) and describe the plan in
+//! `TOPKAST_FAULTS`, e.g.
+//! `TOPKAST_FAULTS="seed=3;transfer=0.02;exec=0.05;max=16;lose=1@40"`.
+//! Metering, numerics and device layout delegate untouched, so a
+//! faulted run that recovers is bit-comparable to a clean one.
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::rng::Pcg64;
+use crate::xla;
+
+use super::backend::{Backend, BufferOps, ExecInput};
+
+/// The environment variable holding the textual [`FaultPlan`] for
+/// `TOPKAST_BACKEND=faulty` runs (and for suites that read it to pick
+/// chaos seeds).
+pub const FAULTS_ENV: &str = "TOPKAST_FAULTS";
+
+/// Typed runtime failure, carried through `anyhow` chains and
+/// recovered by downcast (`err.downcast_ref::<RuntimeError>()` — the
+/// helpers below wrap this). See the module docs for the taxonomy.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RuntimeError {
+    /// One transfer or execution failed; the device survives. Donated
+    /// inputs of the failed call are gone regardless.
+    Transient {
+        device: usize,
+        op: &'static str,
+    },
+    /// The device is permanently gone; everything touching it fails.
+    DeviceLost { device: usize },
+}
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RuntimeError::Transient { device, op } => {
+                write!(f, "transient fault: {op} failed on device {device}")
+            }
+            RuntimeError::DeviceLost { device } => {
+                write!(f, "device {device} lost (permanent)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+impl RuntimeError {
+    /// The typed failure behind an `anyhow` error, if any — works
+    /// through `.context(...)` chains.
+    pub fn classify(err: &anyhow::Error) -> Option<&RuntimeError> {
+        err.downcast_ref::<RuntimeError>()
+    }
+
+    /// True when the error is a transient device fault (retryable at
+    /// some level; see module docs for which level).
+    pub fn is_transient(err: &anyhow::Error) -> bool {
+        matches!(Self::classify(err), Some(RuntimeError::Transient { .. }))
+    }
+
+    /// The device a permanent-loss error names, if it is one.
+    pub fn lost_device(err: &anyhow::Error) -> Option<usize> {
+        match Self::classify(err) {
+            Some(RuntimeError::DeviceLost { device }) => Some(*device),
+            _ => None,
+        }
+    }
+
+    /// True when the error carries either runtime-fault variant —
+    /// i.e. recovery machinery should engage rather than propagate.
+    pub fn is_fault(err: &anyhow::Error) -> bool {
+        Self::classify(err).is_some()
+    }
+}
+
+/// A deterministic fault schedule. Parsed from `TOPKAST_FAULTS` (or a
+/// `RunSpec`'s `faults` string) as `;`- or `,`-separated `key=value`
+/// pairs: `seed` (PCG64 stream seed), `transfer` / `exec`
+/// (per-operation fault probabilities in [0,1]), `max` (cap on total
+/// transient faults injected — guarantees termination), and
+/// `lose=<device>@<op>` (permanent device loss once the op counter
+/// reaches `<op>`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub transfer: f64,
+    pub exec: f64,
+    pub max: usize,
+    pub lose: Option<(usize, u64)>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0,
+            transfer: 0.0,
+            exec: 0.0,
+            max: 8,
+            lose: None,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Parse the textual plan format (see type docs). The empty
+    /// string is the default (fault-free) plan.
+    pub fn parse(text: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for pair in text.split([';', ',']).map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, value) = pair
+                .split_once('=')
+                .with_context(|| format!("fault plan entry {pair:?} is not key=value"))?;
+            match key.trim() {
+                "seed" => {
+                    plan.seed = value
+                        .trim()
+                        .parse()
+                        .with_context(|| format!("fault plan seed {value:?}"))?
+                }
+                "transfer" => {
+                    plan.transfer = parse_probability(value, "transfer")?;
+                }
+                "exec" => {
+                    plan.exec = parse_probability(value, "exec")?;
+                }
+                "max" => {
+                    plan.max = value
+                        .trim()
+                        .parse()
+                        .with_context(|| format!("fault plan max {value:?}"))?
+                }
+                "lose" => {
+                    let (device, at) = value
+                        .trim()
+                        .split_once('@')
+                        .with_context(|| {
+                            format!("fault plan lose {value:?} is not <device>@<op>")
+                        })?;
+                    plan.lose = Some((
+                        device
+                            .parse()
+                            .with_context(|| format!("fault plan lose device {device:?}"))?,
+                        at.parse()
+                            .with_context(|| format!("fault plan lose op count {at:?}"))?,
+                    ));
+                }
+                other => bail!(
+                    "unknown fault plan key {other:?} (expected seed, transfer, \
+                     exec, max or lose)"
+                ),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// The plan `TOPKAST_FAULTS` describes (default plan when unset).
+    pub fn from_env() -> Result<FaultPlan> {
+        match std::env::var(FAULTS_ENV) {
+            Err(std::env::VarError::NotPresent) => Ok(FaultPlan::default()),
+            Err(e) => bail!("reading {FAULTS_ENV}: {e}"),
+            Ok(text) => {
+                FaultPlan::parse(&text).with_context(|| format!("parsing {FAULTS_ENV}"))
+            }
+        }
+    }
+}
+
+fn parse_probability(value: &str, key: &str) -> Result<f64> {
+    let p: f64 = value
+        .trim()
+        .parse()
+        .with_context(|| format!("fault plan {key} {value:?}"))?;
+    if !(0.0..=1.0).contains(&p) {
+        bail!("fault plan {key}={p} outside [0, 1]");
+    }
+    Ok(p)
+}
+
+/// Which probability knob an injection point draws against.
+#[derive(Clone, Copy)]
+enum OpKind {
+    Transfer,
+    Exec,
+}
+
+/// Shared mutable schedule state: one deterministic stream per
+/// backend instance, advanced by every fault-eligible op in program
+/// order (single-threaded runtime, so program order is total).
+struct FaultState {
+    plan: FaultPlan,
+    rng: Pcg64,
+    ops: u64,
+    fired: usize,
+    lost: BTreeSet<usize>,
+}
+
+impl FaultState {
+    fn new(plan: FaultPlan) -> FaultState {
+        let rng = Pcg64::new(plan.seed ^ 0xFA17, 0xFA17);
+        FaultState {
+            plan,
+            rng,
+            ops: 0,
+            fired: 0,
+            lost: BTreeSet::new(),
+        }
+    }
+
+    /// Advance the schedule for one fault-eligible op on `device`;
+    /// `Err` means the fault fires (typed [`RuntimeError`]).
+    fn check(&mut self, device: usize, kind: OpKind, op: &'static str) -> Result<()> {
+        self.ops += 1;
+        if let Some((dev, at)) = self.plan.lose {
+            if self.ops >= at {
+                self.lost.insert(dev);
+            }
+        }
+        if self.lost.contains(&device) {
+            return Err(RuntimeError::DeviceLost { device }.into());
+        }
+        let p = match kind {
+            OpKind::Transfer => self.plan.transfer,
+            OpKind::Exec => self.plan.exec,
+        };
+        if p > 0.0 {
+            // always draw, so the schedule depends only on (seed, op
+            // sequence), not on how many faults already fired
+            let draw = self.rng.next_f64();
+            if draw < p && self.fired < self.plan.max {
+                self.fired += 1;
+                return Err(RuntimeError::Transient { device, op }.into());
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Any backend plus a deterministic fault schedule. See module docs.
+#[derive(Clone)]
+pub struct FaultBackend<B: Backend> {
+    inner: B,
+    state: Arc<Mutex<FaultState>>,
+}
+
+/// An inner-backend buffer plus a handle on the shared schedule (its
+/// data accesses are injection points too).
+#[derive(Clone)]
+pub struct FaultBuffer<B: Backend> {
+    inner: B::Buffer,
+    state: Arc<Mutex<FaultState>>,
+}
+
+pub struct FaultExecutable<B: Backend> {
+    inner: B::Executable,
+}
+
+impl<B: Backend> FaultBackend<B> {
+    pub fn new(inner: B, plan: FaultPlan) -> FaultBackend<B> {
+        FaultBackend {
+            inner,
+            state: Arc::new(Mutex::new(FaultState::new(plan))),
+        }
+    }
+
+    /// Wrap with the plan `TOPKAST_FAULTS` describes.
+    pub fn from_env(inner: B) -> Result<FaultBackend<B>> {
+        Ok(FaultBackend::new(inner, FaultPlan::from_env()?))
+    }
+
+    /// Transient faults injected so far.
+    pub fn faults_fired(&self) -> usize {
+        self.state.lock().expect("fault state poisoned").fired
+    }
+
+    /// Devices the schedule has permanently killed so far.
+    pub fn lost_devices(&self) -> Vec<usize> {
+        self.state
+            .lock()
+            .expect("fault state poisoned")
+            .lost
+            .iter()
+            .copied()
+            .collect()
+    }
+
+    fn check(&self, device: usize, kind: OpKind, op: &'static str) -> Result<()> {
+        self.state
+            .lock()
+            .expect("fault state poisoned")
+            .check(device, kind, op)
+    }
+}
+
+impl<B: Backend> FaultBuffer<B> {
+    fn check(&self, kind: OpKind, op: &'static str) -> Result<()> {
+        let device = self.inner.device();
+        self.state
+            .lock()
+            .expect("fault state poisoned")
+            .check(device, kind, op)
+    }
+
+    fn wrap(&self, inner: B::Buffer) -> FaultBuffer<B> {
+        FaultBuffer {
+            inner,
+            state: Arc::clone(&self.state),
+        }
+    }
+}
+
+impl<B: Backend> BufferOps for FaultBuffer<B> {
+    fn element_count(&self) -> usize {
+        self.inner.element_count()
+    }
+
+    fn element_type(&self) -> Option<xla::ElemType> {
+        self.inner.element_type()
+    }
+
+    fn is_tuple(&self) -> bool {
+        self.inner.is_tuple()
+    }
+
+    fn device(&self) -> usize {
+        self.inner.device()
+    }
+
+    fn to_literal_sync(&self) -> Result<xla::Literal> {
+        self.check(OpKind::Transfer, "to_literal_sync")?;
+        self.inner.to_literal_sync()
+    }
+
+    fn gather_to_host(&self, indices: &[u32]) -> Result<Vec<f32>> {
+        self.check(OpKind::Transfer, "gather_to_host")?;
+        self.inner.gather_to_host(indices)
+    }
+
+    fn tuple_parts(self) -> Result<Vec<Self>> {
+        // no bus traffic (parts alias the tuple) — not an injection
+        // point; a fault here would be indistinguishable from an
+        // execute fault anyway, since callers always split immediately
+        let state = Arc::clone(&self.state);
+        Ok(self
+            .inner
+            .tuple_parts()?
+            .into_iter()
+            .map(|inner| FaultBuffer {
+                inner,
+                state: Arc::clone(&state),
+            })
+            .collect())
+    }
+
+    fn scatter_mask_update(self, added: &[u32], removed: &[u32]) -> Result<Self> {
+        // injected *before* the inner call: the old mask buffer is
+        // consumed either way (donation), which is exactly the
+        // non-idempotent install failure recovery must handle
+        self.check(OpKind::Transfer, "scatter_mask_update")?;
+        let state = Arc::clone(&self.state);
+        Ok(FaultBuffer {
+            inner: self.inner.scatter_mask_update(added, removed)?,
+            state,
+        })
+    }
+
+    fn scatter_values_update(self, indices: &[u32], values: &[f32]) -> Result<Self> {
+        self.check(OpKind::Transfer, "scatter_values_update")?;
+        let state = Arc::clone(&self.state);
+        Ok(FaultBuffer {
+            inner: self.inner.scatter_values_update(indices, values)?,
+            state,
+        })
+    }
+
+    fn debug_read_f32(&self) -> Option<Vec<f32>> {
+        // unmetered diagnostic peek — never faulted, never counted
+        self.inner.debug_read_f32()
+    }
+}
+
+impl<B: Backend> Backend for FaultBackend<B> {
+    type Client = FaultBackend<B>;
+    type Buffer = FaultBuffer<B>;
+    type Executable = FaultExecutable<B>;
+
+    fn name(&self) -> &'static str {
+        "faulty"
+    }
+
+    fn platform_name(&self) -> String {
+        self.inner.platform_name()
+    }
+
+    fn device_count(&self) -> usize {
+        self.inner.device_count()
+    }
+
+    fn client(&self) -> Self::Client {
+        self.clone()
+    }
+
+    fn buffer_from_host_buffer<T: xla::NativeType>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        device: Option<usize>,
+    ) -> Result<Self::Buffer> {
+        self.check(device.unwrap_or(0), OpKind::Transfer, "buffer_from_host_buffer")?;
+        Ok(FaultBuffer {
+            inner: self.inner.buffer_from_host_buffer(data, dims, device)?,
+            state: Arc::clone(&self.state),
+        })
+    }
+
+    fn mask_from_indices(
+        &self,
+        dims: &[usize],
+        indices: &[u32],
+        device: Option<usize>,
+    ) -> Result<Self::Buffer> {
+        self.check(device.unwrap_or(0), OpKind::Transfer, "mask_from_indices")?;
+        Ok(FaultBuffer {
+            inner: self.inner.mask_from_indices(dims, indices, device)?,
+            state: Arc::clone(&self.state),
+        })
+    }
+
+    fn compile(&self, comp: &xla::XlaComputation) -> Result<Self::Executable> {
+        // host-side compilation — not an injection point
+        Ok(FaultExecutable {
+            inner: self.inner.compile(comp)?,
+        })
+    }
+
+    fn execute(
+        &self,
+        exe: &Self::Executable,
+        inputs: Vec<ExecInput<'_, Self>>,
+    ) -> Result<Vec<Self::Buffer>> {
+        let device = inputs
+            .first()
+            .map(|i| i.buffer().device())
+            .unwrap_or(0);
+        // injected before dispatch; dropping `inputs` on the error
+        // path frees the donated buffers — consumed per the ownership
+        // contract, exactly like a failed execution on real hardware
+        self.check(device, OpKind::Exec, "execute")?;
+        let mut unwrapped: Vec<ExecInput<'_, B>> = Vec::with_capacity(inputs.len());
+        for input in &inputs {
+            unwrapped.push(match input {
+                // donate a clone-alias: a strict inner shares the
+                // donation flag across clones, so the real ownership
+                // mode is still seen and enforced; a sim inner just
+                // drops the alias
+                ExecInput::Donate(b) => ExecInput::Donate(b.inner.clone()),
+                ExecInput::Borrow(b) => ExecInput::Borrow(&b.inner),
+            });
+        }
+        let outs = self.inner.execute(exe.inner_ref(), unwrapped)?;
+        drop(inputs);
+        Ok(outs
+            .into_iter()
+            .map(|inner| FaultBuffer {
+                inner,
+                state: Arc::clone(&self.state),
+            })
+            .collect())
+    }
+
+    fn all_reduce_sum(&self, inputs: &[&Self::Buffer]) -> Result<Vec<Self::Buffer>> {
+        let device = inputs.first().map(|b| b.inner.device()).unwrap_or(0);
+        self.check(device, OpKind::Exec, "all_reduce_sum")?;
+        let refs: Vec<&B::Buffer> = inputs.iter().map(|b| &b.inner).collect();
+        Ok(self
+            .inner
+            .all_reduce_sum(&refs)?
+            .into_iter()
+            .map(|inner| FaultBuffer {
+                inner,
+                state: Arc::clone(&self.state),
+            })
+            .collect())
+    }
+
+    fn transfer_stats(&self) -> xla::TransferSnapshot {
+        self.inner.transfer_stats()
+    }
+
+    fn device_transfer_stats(&self, device: usize) -> Result<xla::TransferSnapshot> {
+        self.inner.device_transfer_stats(device)
+    }
+}
+
+impl<B: Backend> FaultExecutable<B> {
+    fn inner_ref(&self) -> &B::Executable {
+        &self.inner
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::xla::PjRtClient;
+
+    fn sim(devices: usize) -> PjRtClient {
+        PjRtClient::cpu_with_devices(devices).unwrap()
+    }
+
+    #[test]
+    fn plan_parses_every_key_and_rejects_junk() {
+        let plan =
+            FaultPlan::parse("seed=3; transfer=0.25, exec=0.5;max=4;lose=1@40").unwrap();
+        assert_eq!(
+            plan,
+            FaultPlan {
+                seed: 3,
+                transfer: 0.25,
+                exec: 0.5,
+                max: 4,
+                lose: Some((1, 40)),
+            }
+        );
+        assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::default());
+        assert!(FaultPlan::parse("transfer=2.0").is_err());
+        assert!(FaultPlan::parse("warp=0.1").is_err());
+        assert!(FaultPlan::parse("lose=1").is_err());
+        assert!(FaultPlan::parse("seed").is_err());
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_capped() {
+        let plan = FaultPlan::parse("seed=7;transfer=0.5;max=3").unwrap();
+        let fire = |plan: FaultPlan| -> Vec<bool> {
+            let backend = FaultBackend::new(sim(1), plan);
+            (0..32)
+                .map(|_| {
+                    backend
+                        .buffer_from_host_buffer::<f32>(&[1.0], &[1], None)
+                        .is_err()
+                })
+                .collect()
+        };
+        let a = fire(plan.clone());
+        let b = fire(plan);
+        assert_eq!(a, b, "same plan must fire the same schedule");
+        assert_eq!(a.iter().filter(|f| **f).count(), 3, "max caps fired faults");
+        assert!(a.iter().any(|f| *f), "p=0.5 over 32 ops must fire");
+    }
+
+    #[test]
+    fn faults_are_typed_and_classifiable() {
+        let plan = FaultPlan::parse("transfer=1.0;max=1").unwrap();
+        let backend = FaultBackend::new(sim(1), plan);
+        let err = backend
+            .buffer_from_host_buffer::<f32>(&[1.0], &[1], None)
+            .unwrap_err();
+        assert!(RuntimeError::is_transient(&err), "{err}");
+        assert!(RuntimeError::is_fault(&err));
+        assert_eq!(RuntimeError::lost_device(&err), None);
+        // classification survives a context chain
+        let wrapped = err.context("uploading params");
+        assert!(RuntimeError::is_transient(&wrapped), "{wrapped}");
+        // cap reached: next op goes through
+        assert!(backend
+            .buffer_from_host_buffer::<f32>(&[1.0], &[1], None)
+            .is_ok());
+        assert_eq!(backend.faults_fired(), 1);
+    }
+
+    #[test]
+    fn lost_devices_stay_lost_and_survivors_work() {
+        let plan = FaultPlan::parse("lose=1@3").unwrap();
+        let backend = FaultBackend::new(sim(2), plan);
+        // ops 1 and 2: device 1 still alive
+        assert!(backend
+            .buffer_from_host_buffer::<f32>(&[1.0], &[1], Some(1))
+            .is_ok());
+        assert!(backend
+            .buffer_from_host_buffer::<f32>(&[1.0], &[1], Some(1))
+            .is_ok());
+        // op 3 onward: device 1 is gone, permanently
+        for _ in 0..3 {
+            let err = backend
+                .buffer_from_host_buffer::<f32>(&[1.0], &[1], Some(1))
+                .unwrap_err();
+            assert_eq!(RuntimeError::lost_device(&err), Some(1), "{err}");
+        }
+        // device 0 is untouched
+        assert!(backend
+            .buffer_from_host_buffer::<f32>(&[1.0], &[1], Some(0))
+            .is_ok());
+        assert_eq!(backend.lost_devices(), vec![1]);
+    }
+
+    #[test]
+    fn fault_free_plan_delegates_metering_exactly() {
+        let faulty = FaultBackend::new(sim(1), FaultPlan::default());
+        let raw = sim(1);
+        faulty
+            .buffer_from_host_buffer::<f32>(&[1.0, 2.0, 3.0], &[3], None)
+            .unwrap();
+        raw.buffer_from_host_buffer::<f32>(&[1.0, 2.0, 3.0], &[3], None)
+            .unwrap();
+        assert_eq!(faulty.transfer_stats(), raw.transfer_stats());
+    }
+}

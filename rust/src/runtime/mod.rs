@@ -18,6 +18,7 @@
 pub mod backend;
 pub mod client;
 pub mod device_state;
+pub mod fault;
 pub mod infer_state;
 pub mod manifest;
 #[cfg(feature = "pjrt")]
@@ -27,6 +28,7 @@ pub mod strict;
 pub mod synthetic;
 
 pub use backend::{env_backend_name, AnyBackend, Backend, BufferOps, ExecInput, BACKEND_ENV};
+pub use fault::{FaultBackend, FaultPlan, RuntimeError, FAULTS_ENV};
 pub use client::{DeviceInput, Executable, Runtime, TensorRef};
 pub use device_state::{DeviceState, TrafficModel};
 pub use infer_state::InferState;

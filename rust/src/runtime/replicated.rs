@@ -55,6 +55,20 @@
 //!
 //! Future PRs that touch the reduction order, the shard layout, or the
 //! payload definition must preserve these invariants.
+//!
+//! # Device loss and re-sharding
+//!
+//! Permanent device loss (see `runtime::fault`) drops a replica from
+//! the set without changing the arithmetic: the **shard geometry stays
+//! fixed** at the original replica count (`total_shards`), and the
+//! surviving chains pick up the orphaned shards round-robin (shard `i`
+//! runs on survivor `i % k`). The all-reduce still sums all
+//! `total_shards` partials in canonical shard order, so the reduced
+//! payload — and therefore every surviving replica's next resident
+//! state — is bit-for-bit what the full replica set would have
+//! produced. `verify_lockstep` stays green among survivors, and a
+//! rebuilt set (`from_host_on_devices`) re-broadcasts the installed
+//! masks as index lists, which PR 5's O(nnz) exchange makes cheap.
 
 use std::ops::Range;
 
@@ -65,7 +79,7 @@ use super::client::{DeviceInput, Executable, TensorRef};
 use super::device_state::DeviceState;
 use super::manifest::{ModelEntry, ReplicatedLayout, ReplicationSpec};
 use crate::sparsity::ParamStore;
-use crate::tensor::HostTensor;
+use crate::tensor::{HostTensor, SparseSet};
 
 /// Contiguous batch shards: every index in `0..n` exactly once, shard
 /// sizes differing by at most one (the first `n % replicas` shards take
@@ -90,9 +104,15 @@ pub fn shard_ranges(n: usize, replicas: usize) -> Vec<Range<usize>> {
 /// docs for the shard → grad → all-reduce → apply protocol).
 pub struct ReplicatedState<B: Backend = AnyBackend> {
     client: B,
-    /// One resident chain per replica, canonical order (index =
-    /// replica = device).
+    /// The surviving resident chains, canonical order. Initially one
+    /// per shard (index = replica = device); device loss removes
+    /// entries without renumbering the shards.
     replicas: Vec<DeviceState<B>>,
+    /// The fixed shard count — the replica count the replication
+    /// artifacts were built for. Never changes, even when devices are
+    /// lost: shard geometry (and therefore the update arithmetic) is
+    /// part of the run's identity.
+    total_shards: usize,
     /// (replica, tensor)-keyed buffer addressing.
     layout: ReplicatedLayout,
     /// Whether the grad artifact follows the eval convention
@@ -121,13 +141,48 @@ impl<B: Backend> ReplicatedState<B> {
         if replicas == 0 {
             bail!("replicated state needs at least one replica");
         }
-        if replicas > client.device_count() {
+        let devices: Vec<usize> = (0..replicas).collect();
+        Self::from_host_on_devices(client, model, store, opt, replicas, &devices)
+    }
+
+    /// Build a replicated set with `total_shards` shard geometry over an
+    /// explicit (possibly smaller) device list — the recovery/rebuild
+    /// constructor after permanent device loss. The shard geometry must
+    /// match the replication artifacts; the survivors pick up orphaned
+    /// shards round-robin (see module docs). Masks install as full
+    /// index lists on every listed device.
+    pub fn from_host_on_devices(
+        client: B,
+        model: &ModelEntry,
+        store: &ParamStore,
+        opt: &[Vec<f32>],
+        total_shards: usize,
+        devices: &[usize],
+    ) -> Result<ReplicatedState<B>> {
+        if total_shards == 0 || devices.is_empty() {
+            bail!("replicated state needs at least one replica");
+        }
+        if devices.len() > total_shards {
             bail!(
-                "replicas = {replicas} exceeds the simulated device count {} \
-                 (build the runtime with Runtime::with_devices({replicas}))",
+                "{} devices for {total_shards} shards: the survivor set \
+                 cannot exceed the shard count",
+                devices.len()
+            );
+        }
+        if let Some(&d) = devices.iter().find(|&&d| d >= client.device_count()) {
+            bail!(
+                "replicas = {total_shards} (device {d}) exceeds the simulated \
+                 device count {} (build the runtime with \
+                 Runtime::with_devices({total_shards}))",
                 client.device_count()
             );
         }
+        for (i, &d) in devices.iter().enumerate() {
+            if devices[..i].contains(&d) {
+                bail!("device {d} listed twice in the replica device set");
+            }
+        }
+        let replicas = total_shards;
         let rep = replication_spec(model, replicas)?;
         let layout = model.replicated_layout(replicas)?;
         // Two grad conventions: data-only (batch shard alone — the
@@ -194,12 +249,14 @@ impl<B: Backend> ReplicatedState<B> {
                 model.name
             );
         }
-        let states = (0..replicas)
-            .map(|d| DeviceState::from_host_on(client.clone(), model, store, opt, d))
+        let states = devices
+            .iter()
+            .map(|&d| DeviceState::from_host_on(client.clone(), model, store, opt, d))
             .collect::<Result<Vec<_>>>()?;
         Ok(ReplicatedState {
             client,
             replicas: states,
+            total_shards,
             layout,
             grad_resident,
             shard_x,
@@ -207,8 +264,38 @@ impl<B: Backend> ReplicatedState<B> {
         })
     }
 
+    /// The data-parallel width of the run — the fixed shard count the
+    /// replication artifacts were built for. Unchanged by device loss
+    /// (the arithmetic never re-shards; see module docs).
     pub fn replica_count(&self) -> usize {
+        self.total_shards
+    }
+
+    /// How many resident chains are still alive (≤ `replica_count`).
+    pub fn survivor_count(&self) -> usize {
         self.replicas.len()
+    }
+
+    /// The devices the surviving chains live on, canonical order.
+    pub fn devices(&self) -> Vec<usize> {
+        self.replicas.iter().map(|s| s.device()).collect()
+    }
+
+    /// Drop the resident chain on `device` after permanent device loss.
+    /// The remaining chains keep serving all `replica_count` shards
+    /// round-robin; fails when the device holds no chain or when it is
+    /// the last one standing.
+    pub fn drop_replica(&mut self, device: usize) -> Result<usize> {
+        let pos = self
+            .replicas
+            .iter()
+            .position(|s| s.device() == device)
+            .with_context(|| format!("no replica lives on device {device}"))?;
+        if self.replicas.len() == 1 {
+            bail!("device {device} held the last replica; nothing to re-shard to");
+        }
+        self.replicas.remove(pos);
+        Ok(self.replicas.len())
     }
 
     /// The (replica, tensor)-keyed buffer addressing of this run.
@@ -248,6 +335,29 @@ impl<B: Backend> ReplicatedState<B> {
     pub fn upload_mask_deltas(&mut self, store: &ParamStore) -> Result<()> {
         for state in &mut self.replicas {
             state.upload_mask_deltas(store)?;
+        }
+        Ok(())
+    }
+
+    /// Install explicit index sets wholesale on every surviving replica
+    /// (`sparse_idx` order) — the journal-replay path of crash
+    /// recovery, broadcasting historical sets as index lists.
+    pub fn install_mask_sets(
+        &mut self,
+        sets: &[(SparseSet, SparseSet)],
+    ) -> Result<()> {
+        for state in &mut self.replicas {
+            state.install_mask_sets(sets)?;
+        }
+        Ok(())
+    }
+
+    /// Overwrite the sparse tensors' resident values on every surviving
+    /// replica with explicit dense images (`sparse_idx` order) — the
+    /// journal-replay path for weight-rewriting refreshes.
+    pub fn upload_sparse_values(&mut self, values: &[Vec<f32>]) -> Result<()> {
+        for state in &mut self.replicas {
+            state.upload_sparse_values(values)?;
         }
         Ok(())
     }
@@ -304,7 +414,15 @@ impl<B: Backend> ReplicatedState<B> {
         let (TensorRef::F32(xv), TensorRef::F32(yv)) = (x, y) else {
             bail!("replicated training expects f32 batches");
         };
-        let n = self.replicas.len();
+        // the shard geometry is fixed at total_shards: after device
+        // loss the k survivors pick up the orphaned shards round-robin
+        // (shard i → survivor i % k), and the arithmetic below is
+        // bitwise unchanged.
+        let n = self.total_shards;
+        let k = self.replicas.len();
+        if k == 0 {
+            bail!("replica set is empty");
+        }
         if xv.len() != self.shard_x * n || yv.len() != self.shard_y * n {
             bail!(
                 "batch ({}, {}) does not tile into {n} shards of ({}, {})",
@@ -314,16 +432,17 @@ impl<B: Backend> ReplicatedState<B> {
                 self.shard_y
             );
         }
-        // grad partials, one shard per replica (each replica's host
-        // link carries only its shard). Example ranges come from
-        // shard_ranges — the one sharding definition — scaled by the
-        // per-example element count for x.
+        // grad partials, one per shard in canonical shard order (each
+        // survivor's host link carries only its shards). Example ranges
+        // come from shard_ranges — the one sharding definition — scaled
+        // by the per-example element count for x.
         let rows = shard_ranges(self.shard_y * n, n);
         let per_row = self.shard_x / self.shard_y;
         let mut partials: Vec<Vec<B::Buffer>> = Vec::with_capacity(n);
-        for (r, state) in self.replicas.iter().enumerate() {
-            let xs = &xv[rows[r].start * per_row..rows[r].end * per_row];
-            let ys = &yv[rows[r].clone()];
+        for shard in 0..n {
+            let state = &self.replicas[shard % k];
+            let xs = &xv[rows[shard].start * per_row..rows[shard].end * per_row];
+            let ys = &yv[rows[shard].clone()];
             let outs = if self.grad_resident {
                 // eval-convention grad: resident θ + m_fwd borrowed,
                 // only the shard streams; the payload stays on-device
@@ -343,24 +462,26 @@ impl<B: Backend> ReplicatedState<B> {
             };
             partials.push(outs);
         }
-        // fixed-order all-reduce: canonical replica order, whatever
-        // order the partials above were produced in. Inputs are
-        // borrowed; the owned outputs are donated to each replica's
-        // apply below.
+        // fixed-order all-reduce: canonical shard order, whatever order
+        // the partials above were produced in (the host-sim reduce is
+        // indifferent to duplicate devices among its inputs). Inputs
+        // are borrowed; the owned outputs are donated to each
+        // survivor's apply below.
         let payload_len = grad.spec.outputs.len();
         let mut reduced: Vec<Vec<B::Buffer>> =
             (0..n).map(|_| Vec::with_capacity(payload_len)).collect();
         for o in 0..payload_len {
             let refs: Vec<&B::Buffer> = partials.iter().map(|p| &p[o]).collect();
-            for (r, buf) in self.client.all_reduce_sum(&refs)?.into_iter().enumerate()
+            for (i, buf) in self.client.all_reduce_sum(&refs)?.into_iter().enumerate()
             {
-                reduced[r].push(buf);
+                reduced[i].push(buf);
             }
         }
         drop(partials);
-        // replicated apply: every chain advances, consuming its copy of
-        // the reduced payload; only replica 0's loss crosses back to
-        // the host
+        // replicated apply: every surviving chain advances once,
+        // consuming the reduced-payload copy from its first owned shard
+        // (shard j for survivor j; copies of shards ≥ k are dropped);
+        // only survivor 0's loss crosses back to the host
         let mut loss_buf = None;
         for ((r, state), payload) in
             self.replicas.iter_mut().enumerate().zip(reduced)
@@ -483,6 +604,63 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("built for 4 replicas"), "{err}");
+    }
+
+    #[test]
+    fn drop_replica_tracks_survivors_and_rejects_the_last() {
+        let synth = Synthetic::tiny().replicated(2).unwrap();
+        let rt = Runtime::with_devices(2).unwrap();
+        let store = ParamStore::init(&synth.model.params, 1);
+        let slots = synth.model.optimizer.slots();
+        let opt: Vec<Vec<f32>> = synth
+            .model
+            .params
+            .iter()
+            .flat_map(|p| {
+                std::iter::repeat_with(move || vec![0.0f32; p.shape.numel()])
+                    .take(slots)
+            })
+            .collect();
+        let mut rep = ReplicatedState::from_host(
+            rt.client().clone(),
+            &synth.model,
+            &store,
+            &opt,
+            2,
+        )
+        .unwrap();
+        assert_eq!(rep.replica_count(), 2);
+        assert_eq!(rep.survivor_count(), 2);
+        assert_eq!(rep.drop_replica(1).unwrap(), 1);
+        // shard geometry is part of the run's identity: width unchanged
+        assert_eq!(rep.replica_count(), 2);
+        assert_eq!(rep.devices(), vec![0]);
+        assert!(rep.drop_replica(1).is_err(), "no chain lives there any more");
+        let err = rep.drop_replica(0).unwrap_err();
+        assert!(err.to_string().contains("last replica"), "{err}");
+
+        // the rebuild constructor accepts the survivor list directly
+        let rebuilt = ReplicatedState::from_host_on_devices(
+            rt.client().clone(),
+            &synth.model,
+            &store,
+            &opt,
+            2,
+            &[1],
+        )
+        .unwrap();
+        assert_eq!(rebuilt.replica_count(), 2);
+        assert_eq!(rebuilt.devices(), vec![1]);
+        let err = ReplicatedState::from_host_on_devices(
+            rt.client().clone(),
+            &synth.model,
+            &store,
+            &opt,
+            1,
+            &[0, 1],
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("cannot exceed"), "{err}");
     }
 
     #[test]

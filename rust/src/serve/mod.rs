@@ -52,6 +52,7 @@ pub mod server;
 pub mod swap;
 
 pub use server::{
-    Completion, ModelServer, ServeConfig, ServeStats, TraceConfig, TraceSummary,
+    Completion, ModelServer, ServeConfig, ServeStats, Shed, TraceConfig,
+    TraceSummary,
 };
 pub use swap::{CheckpointSwapper, SwapMode, SwapReport};

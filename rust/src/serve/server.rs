@@ -12,27 +12,67 @@
 //! [`submit`]: ModelServer::submit
 //! [`tick`]: ModelServer::tick
 
-use std::collections::VecDeque;
+use std::collections::{BTreeSet, VecDeque};
+use std::fmt;
 
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::runtime::manifest::Dtype;
-use crate::runtime::{Backend, InferState, ModelEntry, Runtime, TensorRef};
+use crate::runtime::{Backend, InferState, ModelEntry, Runtime, RuntimeError, TensorRef};
 use crate::runtime::backend::AnyBackend;
 use crate::tensor::SparseSet;
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
 
+/// How many times one serving operation (an execution, or a swap-abort
+/// reinstall) retries across faults before the server gives up.
+pub(super) const SERVE_RETRY_LIMIT: usize = 32;
+
 /// Serving knobs. `max_batch` is how many requests one execution
 /// carries (0, or anything larger than the compiled graph's batch,
 /// resolves to the graph batch; smaller values leave the tail of each
 /// execution zero-padded). `inflight_limit` caps executions
-/// outstanding per device per tick (0 resolves to 1).
+/// outstanding per device per tick (0 resolves to 1). `queue_cap`
+/// bounds the admission queue — submissions past it are rejected with
+/// the explicit [`Shed`] error (0 = unbounded, the legacy behaviour).
+/// `deadline_ticks` drops queued requests that waited longer than this
+/// many ticks without being admitted (0 = no deadline).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ServeConfig {
     pub max_batch: usize,
     pub inflight_limit: usize,
+    pub queue_cap: usize,
+    pub deadline_ticks: u64,
+}
+
+/// Explicit admission rejection: the bounded queue is at capacity. The
+/// request was **not** enqueued; the caller may retry later or drop it.
+/// Detect with [`Shed::is_shed`] on any `anyhow` chain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shed {
+    pub queue_len: usize,
+    pub cap: usize,
+}
+
+impl fmt::Display for Shed {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "request shed: admission queue at capacity ({}/{})",
+            self.queue_len, self.cap
+        )
+    }
+}
+
+impl std::error::Error for Shed {}
+
+impl Shed {
+    /// True when the error is an admission shed (works through
+    /// `.context(...)` chains).
+    pub fn is_shed(err: &anyhow::Error) -> bool {
+        err.downcast_ref::<Shed>().is_some()
+    }
 }
 
 struct QueuedRequest {
@@ -67,6 +107,12 @@ pub struct ServeStats {
     pub per_device_executions: Vec<u64>,
     /// Per completed request: completion tick − arrival tick.
     pub latencies_ticks: Vec<u64>,
+    /// Submissions rejected by the bounded admission queue.
+    pub shed: u64,
+    /// Queued requests dropped for exceeding their deadline.
+    pub expired: u64,
+    /// Faulted executions retried (same or another device).
+    pub exec_retries: u64,
 }
 
 impl ServeStats {
@@ -129,6 +175,12 @@ pub struct ModelServer<B: Backend = AnyBackend> {
     row_len: usize,
     max_batch: usize,
     inflight_limit: usize,
+    queue_cap: usize,
+    deadline_ticks: u64,
+    /// Devices permanently lost mid-traffic — never placed on again.
+    /// Their `InferState` entries stay in `states` so device indexing
+    /// (and `per_device_executions`) is stable.
+    pub(super) quarantined: BTreeSet<usize>,
     queue: VecDeque<QueuedRequest>,
     inflight: Vec<Completion>,
     tick: u64,
@@ -236,6 +288,9 @@ impl<B: Backend> ModelServer<B> {
             row_len,
             max_batch,
             inflight_limit: cfg.inflight_limit.max(1),
+            queue_cap: cfg.queue_cap,
+            deadline_ticks: cfg.deadline_ticks,
+            quarantined: BTreeSet::new(),
             queue: VecDeque::new(),
             inflight: Vec::new(),
             tick: 0,
@@ -249,7 +304,9 @@ impl<B: Backend> ModelServer<B> {
 
     /// Enqueue one request (a single example). Returns its id; the
     /// matching [`Completion`] carries it once the batch it joins
-    /// retires.
+    /// retires. When the queue is at `queue_cap` the request is
+    /// rejected with the explicit [`Shed`] error instead of growing
+    /// the queue without bound.
     pub fn submit(&mut self, x: Vec<f32>, y: f32) -> Result<u64> {
         if x.len() != self.row_len {
             bail!(
@@ -258,6 +315,13 @@ impl<B: Backend> ModelServer<B> {
                 self.model.name,
                 self.row_len
             );
+        }
+        if self.queue_cap > 0 && self.queue.len() >= self.queue_cap {
+            self.stats.shed += 1;
+            return Err(anyhow::Error::new(Shed {
+                queue_len: self.queue.len(),
+                cap: self.queue_cap,
+            }));
         }
         let id = self.next_id;
         self.next_id += 1;
@@ -298,6 +362,14 @@ impl<B: Backend> ModelServer<B> {
         for c in &done {
             self.stats.completed += c.request_ids.len() as u64;
         }
+        if self.deadline_ticks > 0 {
+            // degrade under backlog: a request that already waited past
+            // its deadline is dropped here rather than served late
+            let deadline = self.deadline_ticks;
+            let before = self.queue.len();
+            self.queue.retain(|r| tick.saturating_sub(r.arrived) <= deadline);
+            self.stats.expired += (before - self.queue.len()) as u64;
+        }
         self.admit(flush)?;
         Ok(done)
     }
@@ -309,13 +381,25 @@ impl<B: Backend> ModelServer<B> {
             .count()
     }
 
-    /// Least-loaded placement, ties to the lowest device index.
+    /// Least-loaded placement over healthy devices, ties to the lowest
+    /// device index.
     fn pick_device(&self) -> Option<usize> {
         (0..self.states.len())
+            .filter(|d| !self.quarantined.contains(d))
             .map(|d| (self.inflight_on(d), d))
             .filter(|&(n, _)| n < self.inflight_limit)
             .min()
             .map(|(_, d)| d)
+    }
+
+    /// Mark a device permanently lost: no placement, no retries there.
+    pub(super) fn quarantine(&mut self, device: usize) {
+        self.quarantined.insert(device);
+    }
+
+    /// Devices quarantined after permanent loss, ascending.
+    pub fn quarantined_devices(&self) -> Vec<usize> {
+        self.quarantined.iter().copied().collect()
     }
 
     fn admit(&mut self, flush: bool) -> Result<()> {
@@ -337,7 +421,7 @@ impl<B: Backend> ModelServer<B> {
                 arrivals.push(r.arrived);
                 ids.push(r.id);
             }
-            let (loss, metric) = self.execute_on(device, &x, &y)?;
+            let (loss, metric, device) = self.execute_with_failover(device, &x, &y)?;
             let completed = self.tick + 1;
             for &arrived in &arrivals {
                 self.stats.latencies_ticks.push(completed.saturating_sub(arrived));
@@ -358,6 +442,45 @@ impl<B: Backend> ModelServer<B> {
         Ok(())
     }
 
+    /// Execute with graceful degradation: serving borrows the resident
+    /// state (no donation), so a transient fault retries in place and a
+    /// lost device is quarantined with the batch retried on a healthy
+    /// one — identical installed bits on every device mean the logits
+    /// are bitwise the same wherever the batch lands. Returns the
+    /// device that actually answered.
+    fn execute_with_failover(
+        &mut self,
+        first: usize,
+        x: &[f32],
+        y: &[f32],
+    ) -> Result<(f32, f32, usize)> {
+        let mut device = first;
+        let mut attempts = 0usize;
+        loop {
+            attempts += 1;
+            if attempts > SERVE_RETRY_LIMIT {
+                bail!("serve execution did not converge after {SERVE_RETRY_LIMIT} attempts");
+            }
+            match self.execute_on(device, x, y) {
+                Ok((loss, metric)) => return Ok((loss, metric, device)),
+                Err(err) => {
+                    if !RuntimeError::is_fault(&err) {
+                        return Err(err);
+                    }
+                    self.stats.exec_retries += 1;
+                    if let Some(lost) = RuntimeError::lost_device(&err) {
+                        self.quarantine(lost);
+                    }
+                    if self.quarantined.contains(&device) {
+                        device = (0..self.states.len())
+                            .find(|d| !self.quarantined.contains(d))
+                            .context("every serving device is quarantined")?;
+                    }
+                }
+            }
+        }
+    }
+
     /// One eval-convention execution on `device`: resident θ + fwd
     /// masks borrowed, batch streamed up, two scalar logits downloaded.
     fn execute_on(&self, device: usize, x: &[f32], y: &[f32]) -> Result<(f32, f32)> {
@@ -372,7 +495,60 @@ impl<B: Backend> ModelServer<B> {
         Ok((loss, metric))
     }
 
+    /// Rebuild the host-mirrored (currently installed) state on every
+    /// healthy device — the swap-abort path: a delta swap that faulted
+    /// mid-scatter left some resident buffers part-new, and this puts
+    /// the old checkpoint back wholesale. Transient faults retry; lost
+    /// devices are quarantined and skipped.
+    pub(super) fn reinstall_resident(&mut self) -> Result<()> {
+        let client = self.runtime.client().clone();
+        for d in 0..self.states.len() {
+            if self.quarantined.contains(&d) {
+                continue;
+            }
+            let mut attempts = 0usize;
+            loop {
+                attempts += 1;
+                if attempts > SERVE_RETRY_LIMIT {
+                    bail!(
+                        "state reinstall did not converge on device {d} after \
+                         {SERVE_RETRY_LIMIT} attempts"
+                    );
+                }
+                match InferState::install_on(
+                    &client,
+                    &self.model,
+                    &self.values,
+                    &self.fwd_sets,
+                    d,
+                ) {
+                    Ok(state) => {
+                        self.states[d] = state;
+                        break;
+                    }
+                    Err(err) => {
+                        if !RuntimeError::is_fault(&err) {
+                            return Err(err);
+                        }
+                        if let Some(lost) = RuntimeError::lost_device(&err) {
+                            self.quarantine(lost);
+                            if lost == d {
+                                break;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if (0..self.states.len()).all(|d| self.quarantined.contains(&d)) {
+            bail!("every serving device is quarantined");
+        }
+        Ok(())
+    }
+
     /// Drive a deterministic open-loop arrival trace to completion.
+    /// Shed submissions (bounded queue at capacity) are tolerated and
+    /// show up in [`ServeStats::shed`]; `requests` counts attempts.
     pub fn run_open_loop(&mut self, trace: &TraceConfig) -> Result<TraceSummary> {
         let sw = Stopwatch::start();
         let mut rng = Pcg64::new(trace.seed, 0x5EE7);
@@ -383,7 +559,11 @@ impl<B: Backend> ModelServer<B> {
                     .map(|_| rng.next_f32() * 2.0 - 1.0)
                     .collect();
                 let y = rng.next_f32();
-                self.submit(x, y)?;
+                match self.submit(x, y) {
+                    Ok(_) => {}
+                    Err(err) if Shed::is_shed(&err) => {}
+                    Err(err) => return Err(err),
+                }
                 sent += 1;
             }
             self.tick()?;

@@ -3,10 +3,10 @@
 //! (delta-eligible vs full-reload conditions, blackout definition,
 //! byte accounting).
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::coordinator::checkpoint::Checkpoint;
-use crate::runtime::{Backend, InferState};
+use crate::runtime::{Backend, InferState, RuntimeError};
 use crate::util::timer::Stopwatch;
 
 use super::server::{extract_model_state, ModelServer};
@@ -111,13 +111,40 @@ impl CheckpointSwapper {
             // blackout: the live buffers are replaced in place, so the
             // whole scatter window stalls admission
             let sw = Stopwatch::start();
-            for state in &mut server.states {
+            let mut applied: Result<()> = Ok(());
+            'install: for (d, state) in server.states.iter_mut().enumerate() {
+                if server.quarantined.contains(&d) {
+                    continue;
+                }
                 for (pos, target) in fwd_sets.iter().enumerate() {
-                    state.apply_fwd_mask_delta(pos, target)?;
+                    if let Err(err) = state.apply_fwd_mask_delta(pos, target) {
+                        applied = Err(err);
+                        break 'install;
+                    }
                 }
                 for (i, (idx, vals)) in updates.iter().enumerate() {
-                    state.apply_value_update(i, idx, vals)?;
+                    if let Err(err) = state.apply_value_update(i, idx, vals) {
+                        applied = Err(err);
+                        break 'install;
+                    }
                 }
+            }
+            if let Err(err) = applied {
+                // mid-swap fault abort: some devices now hold part-new
+                // buffers. Put the OLD checkpoint back everywhere (the
+                // server's host mirrors are untouched) and fail the
+                // swap — traffic keeps being answered at step_from.
+                if let Some(lost) = RuntimeError::lost_device(&err) {
+                    server.quarantine(lost);
+                }
+                server
+                    .reinstall_resident()
+                    .context("swap abort: reinstalling the previous checkpoint")?;
+                return Err(err.context(format!(
+                    "delta swap to step {} faulted mid-install; previous \
+                     checkpoint (step {step_from}) still serving",
+                    incoming.step
+                )));
             }
             blackout_ms = sw.elapsed_ms();
             mode = SwapMode::Delta;
@@ -126,20 +153,40 @@ impl CheckpointSwapper {
         } else {
             // foreign checkpoint: build complete shadow states at full
             // upload cost while the installed ones keep serving, then
-            // flip — blackout is just the exchange
+            // flip — blackout is just the exchange. A fault here aborts
+            // before anything flips: the old states never stop serving.
             let client = server.runtime.client().clone();
             let mut shadows = Vec::with_capacity(devices);
             for d in 0..devices {
-                shadows.push(InferState::install_on(
+                if server.quarantined.contains(&d) {
+                    continue;
+                }
+                let shadow = InferState::install_on(
                     &client,
                     &server.model,
                     &values,
                     &fwd_sets,
                     d,
-                )?);
+                );
+                match shadow {
+                    Ok(s) => shadows.push((d, s)),
+                    Err(err) => {
+                        if let Some(lost) = RuntimeError::lost_device(&err) {
+                            server.quarantine(lost);
+                        }
+                        return Err(err.context(format!(
+                            "full-reload swap to step {} faulted building \
+                             shadows; previous checkpoint (step {step_from}) \
+                             still serving",
+                            incoming.step
+                        )));
+                    }
+                }
             }
             let sw = Stopwatch::start();
-            server.states = shadows;
+            for (d, s) in shadows {
+                server.states[d] = s;
+            }
             blackout_ms = sw.elapsed_ms();
             mode = SwapMode::FullReload;
             delta_index_words = 0;

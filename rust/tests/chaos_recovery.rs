@@ -1,0 +1,454 @@
+//! Chaos acceptance suite: deterministic fault injection end-to-end.
+//!
+//! Proves the load-bearing properties of the fault-hardened runtime
+//! (`runtime::fault`, the trainer's journal recovery, replicated
+//! re-sharding, and serve degradation):
+//!
+//! 1. **Chaos parity** — a training run that absorbs injected
+//!    transient transfer/exec faults recovers to a state **bitwise
+//!    identical** to the run that never faulted: every per-step loss,
+//!    every parameter, every mask, every optimiser slot.
+//! 2. **Device loss** — a replicated run that permanently loses a
+//!    device mid-run quarantines it, re-shards to the survivors, and
+//!    still matches the clean run bit-for-bit, with the replica
+//!    lockstep invariant intact.
+//! 3. **Serve degradation** — a server under exec faults answers every
+//!    non-shed request with logits bitwise identical to a fault-free
+//!    server; the bounded queue sheds with the explicit [`Shed`] error
+//!    and deadlines expire stale requests; a mid-swap device loss
+//!    aborts the swap and leaves the **old** checkpoint serving.
+//!
+//! All schedules are seeded ([`FaultPlan`]), so every scenario here is
+//! deterministic. Where a property depends on *some* fault actually
+//! firing (probabilistic plans) the test probes plan seeds until one
+//! fires — each probed run still has to hold the parity invariant, so
+//! the probing only ever adds coverage. The inner backend comes from
+//! `TOPKAST_BACKEND` (the CI sim/strict matrix); `TOPKAST_FAULTS`, when
+//! set, is exercised as an extra transient plan in the parity test (the
+//! CI fault-seed axis).
+
+use topkast::coordinator::{DataSource as _, Trainer, TrainerConfig};
+use topkast::runtime::{AnyBackend, FaultPlan, Runtime, RuntimeError, Synthetic};
+use topkast::serve::{CheckpointSwapper, Completion, ModelServer, ServeConfig, Shed};
+use topkast::sparsity::TopKast;
+
+fn cfg(steps: usize, refresh_every: usize, seed: u64, replicas: usize) -> TrainerConfig {
+    TrainerConfig { steps, refresh_every, seed, replicas, ..TrainerConfig::default() }
+}
+
+fn strategy() -> Box<TopKast> {
+    Box::new(TopKast::from_sparsities(0.8, 0.5))
+}
+
+/// A trainer over the env-selected backend wrapped in a
+/// [`FaultBackend`] with the given plan — the construction
+/// `Session::build` performs for a spec with `faults` set.
+///
+/// Construction itself uploads the initial resident state, so a plan
+/// with transfer faults (or an early `lose` threshold) can fault the
+/// build; that error is returned for the caller to classify.
+fn faulty_trainer(
+    synth: &Synthetic,
+    cfg: TrainerConfig,
+    plan: FaultPlan,
+) -> anyhow::Result<Trainer> {
+    let replicas = cfg.replicas.max(1);
+    let inner = AnyBackend::from_env(replicas)?;
+    let client = AnyBackend::faulty(inner, plan);
+    let mut rt = Runtime::from_backend(client);
+    let synth = if replicas > 1 && synth.model.replication.is_none() {
+        synth.replicated(replicas)?
+    } else {
+        synth.clone()
+    };
+    synth.install(&mut rt)?;
+    let data = synth.data(cfg.seed ^ 0xDA7A);
+    Trainer::new(rt, synth.model.clone(), strategy(), data, cfg)
+}
+
+/// Bitwise comparison of two trainers' full host-visible state.
+fn assert_trainers_match(a: &mut Trainer, b: &mut Trainer, tag: &str) {
+    a.sync_host().unwrap();
+    b.sync_host().unwrap();
+    for (ea, eb) in a.store.entries.iter().zip(&b.store.entries) {
+        assert_eq!(ea.values, eb.values, "{tag}: params diverged on {}", ea.spec.name);
+        match (&ea.masks, &eb.masks) {
+            (Some(ma), Some(mb)) => {
+                assert_eq!(ma.fwd(), mb.fwd(), "{tag}: fwd mask {}", ea.spec.name);
+                assert_eq!(ma.bwd(), mb.bwd(), "{tag}: bwd mask {}", ea.spec.name);
+            }
+            (None, None) => {}
+            _ => panic!("{tag}: mask presence mismatch"),
+        }
+    }
+    assert_eq!(a.opt_slots(), b.opt_slots(), "{tag}: optimiser state");
+}
+
+/// Run `steps` on both trainers, asserting per-step loss parity.
+fn train_in_lockstep(clean: &mut Trainer, faulted: &mut Trainer, tag: &str) {
+    let steps = clean.cfg.steps;
+    for s in 0..steps {
+        let a = clean.train_step().unwrap();
+        let b = faulted.train_step().unwrap();
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{tag}: loss diverged at step {s} ({a} vs {b})"
+        );
+    }
+}
+
+/// How many faults the trainer's fault-wrapped client has injected.
+fn faults_fired(t: &Trainer) -> usize {
+    t.runtime
+        .client()
+        .as_faulty()
+        .expect("trainer was built on a FaultBackend")
+        .faults_fired()
+}
+
+// ---------------------------------------------------------------------
+// 1. chaos parity: transient faults recover bitwise
+// ---------------------------------------------------------------------
+
+/// The transient plans under test. Seeds are only starting points: the
+/// test bumps them until the plan both (a) lets construction through
+/// (transfer faults can hit the initial upload, which `Session` would
+/// surface as a build error, not silently absorb) and (b) actually
+/// fires at least one fault mid-run. Every probed run is held to full
+/// parity either way.
+fn transient_plans() -> Vec<(String, usize)> {
+    let mut plans = vec![
+        // exec faults only: every fault lands on a donated train
+        // execute, forcing the journal rebuild-and-replay path
+        ("seed=3;exec=0.5;max=6".to_string(), 3),
+        // mixed: transfer faults hit refresh gathers / scatter installs
+        // and checkpoint syncs alongside the execute faults
+        ("seed=7;transfer=0.1;exec=0.2;max=10".to_string(), 2),
+        // dense refresh cadence, tighter fault budget
+        ("seed=11;exec=0.35;max=4".to_string(), 1),
+    ];
+    // CI fault-seed axis: TOPKAST_FAULTS, when set, must be a transient
+    // plan (no `lose` — this test runs a single device)
+    if let Ok(text) = std::env::var("TOPKAST_FAULTS") {
+        if !text.is_empty() {
+            plans.push((text, 3));
+        }
+    }
+    plans
+}
+
+#[test]
+fn faulted_runs_recover_bitwise_identical_to_clean_runs() {
+    let synth = Synthetic::tiny();
+    for (text, refresh_every) in transient_plans() {
+        let base = FaultPlan::parse(&text).unwrap();
+        assert!(base.lose.is_none(), "transient plans only here: {text}");
+        let mut fired = false;
+        for bump in 0..16u64 {
+            let plan = FaultPlan { seed: base.seed.wrapping_add(bump), ..base.clone() };
+            let run_cfg = cfg(12, refresh_every, 5, 1);
+            let mut faulted = match faulty_trainer(&synth, run_cfg.clone(), plan) {
+                Ok(t) => t,
+                Err(err) => {
+                    // a transfer fault hit the initial upload — a build
+                    // error by design, never a silent half-built chain
+                    assert!(
+                        RuntimeError::is_fault(&err),
+                        "{text}+{bump}: construction failed non-fault: {err:#}"
+                    );
+                    continue;
+                }
+            };
+            let mut clean = synth.trainer(strategy(), run_cfg).unwrap();
+            let tag = format!("plan {text} (seed+{bump})");
+            train_in_lockstep(&mut clean, &mut faulted, &tag);
+            // eval retries in place across faults, bit-identically
+            let ea = clean.evaluate().unwrap();
+            let eb = faulted.evaluate().unwrap();
+            assert_eq!(ea.loss_mean.to_bits(), eb.loss_mean.to_bits(), "{tag}: eval");
+            assert_trainers_match(&mut faulted, &mut clean, &tag);
+            if faults_fired(&faulted) > 0 {
+                let stats = faulted.recovery_stats();
+                assert!(
+                    stats.recoveries > 0,
+                    "{tag}: faults fired but nothing recovered"
+                );
+                fired = true;
+                break;
+            }
+        }
+        assert!(fired, "plan {text}: no probed seed fired a fault in 16 tries");
+    }
+}
+
+// ---------------------------------------------------------------------
+// 2. permanent device loss: quarantine + re-shard, still bitwise
+// ---------------------------------------------------------------------
+
+#[test]
+fn device_loss_mid_run_reshards_to_survivors_without_diverging() {
+    let synth = Synthetic::tiny();
+    let run_cfg = cfg(12, 3, 5, 2);
+    // Probe the loss threshold upward: small thresholds kill device 1
+    // while the initial state is still uploading (a build error); the
+    // first threshold construction survives fires on device 1's next op
+    // — squarely mid-run, which is the scenario under test.
+    let mut proven = false;
+    for at in 1..=240u64 {
+        let plan = FaultPlan::parse(&format!("lose=1@{at}")).unwrap();
+        let mut faulted = match faulty_trainer(&synth, run_cfg.clone(), plan) {
+            Ok(t) => t,
+            Err(err) => {
+                assert!(
+                    RuntimeError::is_fault(&err),
+                    "lose=1@{at}: construction failed non-fault: {err:#}"
+                );
+                continue;
+            }
+        };
+        let mut clean = synth.trainer(strategy(), run_cfg.clone()).unwrap();
+        let tag = format!("lose=1@{at}");
+        train_in_lockstep(&mut clean, &mut faulted, &tag);
+        assert_eq!(
+            faulted.quarantined_devices(),
+            vec![1],
+            "{tag}: the armed loss must fire on the first post-build op"
+        );
+        assert!(faulted.recovery_stats().recoveries > 0, "{tag}: no recovery");
+        // the survivor now carries both shards; lockstep is trivially
+        // green but must not error, and the full state still matches
+        faulted.verify_replica_lockstep().unwrap();
+        assert_trainers_match(&mut faulted, &mut clean, &tag);
+        proven = true;
+        break;
+    }
+    assert!(proven, "no loss threshold cleared construction within 240 ops");
+}
+
+// ---------------------------------------------------------------------
+// 3. serve degradation
+// ---------------------------------------------------------------------
+
+/// The deterministic eval stream as flat request rows (serve_plane's
+/// idiom): one `(x_row, y)` per example, in eval-batch order.
+fn eval_requests(synth: &Synthetic, seed: u64) -> Vec<(Vec<f32>, f32)> {
+    let mut data = synth.data(seed ^ 0xDA7A);
+    let batch = synth.model.batch_size();
+    let mut rows = Vec::new();
+    let mut idx = 0;
+    while let Some((x, y)) = data.eval_batch(idx) {
+        let xs = x.as_f32().unwrap();
+        let ys = y.as_f32().unwrap();
+        let row_len = xs.len() / batch;
+        for slot in 0..batch {
+            rows.push((xs[slot * row_len..(slot + 1) * row_len].to_vec(), ys[slot]));
+        }
+        idx += 1;
+    }
+    rows
+}
+
+fn serve_stream(server: &mut ModelServer, rows: &[(Vec<f32>, f32)]) -> Vec<Completion> {
+    for (x, y) in rows {
+        server.submit(x.clone(), *y).unwrap();
+    }
+    server.drain().unwrap()
+}
+
+/// Logits/ids must agree completion-for-completion; placement (device)
+/// may legitimately differ once a fault moved a batch. Ids are compared
+/// relative to each pass's first id, so two passes over one server (its
+/// id counter never resets) compare the same as two fresh servers.
+fn assert_completions_match(a: &[Completion], b: &[Completion], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: completion count");
+    let base = |cs: &[Completion]| {
+        cs.iter()
+            .flat_map(|c| c.request_ids.iter().copied())
+            .min()
+            .unwrap_or(0)
+    };
+    let (base_a, base_b) = (base(a), base(b));
+    for (ca, cb) in a.iter().zip(b) {
+        let ids_a: Vec<u64> = ca.request_ids.iter().map(|id| id - base_a).collect();
+        let ids_b: Vec<u64> = cb.request_ids.iter().map(|id| id - base_b).collect();
+        assert_eq!(ids_a, ids_b, "{tag}: request ids");
+        assert_eq!(ca.padded, cb.padded, "{tag}: padding");
+        assert_eq!(ca.loss.to_bits(), cb.loss.to_bits(), "{tag}: loss bits");
+        assert_eq!(ca.metric.to_bits(), cb.metric.to_bits(), "{tag}: metric bits");
+    }
+}
+
+/// A trained checkpoint pair from one run: (mid-run, successor).
+fn checkpoint_pair(
+    synth: &Synthetic,
+    seed: u64,
+) -> (topkast::coordinator::Checkpoint, topkast::coordinator::Checkpoint) {
+    let mut t = synth.trainer(strategy(), cfg(16, 3, seed, 1)).unwrap();
+    for _ in 0..8 {
+        t.train_step().unwrap();
+    }
+    let a = t.capture_checkpoint().unwrap();
+    for _ in 8..16 {
+        t.train_step().unwrap();
+    }
+    let b = t.capture_checkpoint().unwrap();
+    (a, b)
+}
+
+fn server_with_plan(
+    synth: &Synthetic,
+    ck: &topkast::coordinator::Checkpoint,
+    devices: usize,
+    serve_cfg: ServeConfig,
+    plan: Option<FaultPlan>,
+) -> anyhow::Result<ModelServer> {
+    let mut client = AnyBackend::from_env(devices)?;
+    if let Some(plan) = plan {
+        client = AnyBackend::faulty(client, plan);
+    }
+    let mut rt = Runtime::from_backend(client);
+    synth.install(&mut rt)?;
+    ModelServer::from_checkpoint(rt, synth.model.clone(), ck, serve_cfg)
+}
+
+#[test]
+fn serve_answers_every_request_bitwise_under_exec_faults() {
+    let synth = Synthetic::tiny();
+    let (ck, _) = checkpoint_pair(&synth, 9);
+    // three passes over the eval stream: enough executions that an
+    // exec-fault plan reliably fires
+    let mut rows = eval_requests(&synth, 9);
+    let once = rows.clone();
+    for _ in 0..2 {
+        rows.extend(once.iter().cloned());
+    }
+    let mut reference =
+        server_with_plan(&synth, &ck, 2, ServeConfig::default(), None).unwrap();
+    let want = serve_stream(&mut reference, &rows);
+
+    let mut fired = false;
+    for seed in 0..32u64 {
+        // exec faults only: installs are transfer ops, so the server
+        // always stands up; faults land on live executions where
+        // execute_with_failover must retry without changing one bit
+        let plan = FaultPlan::parse(&format!("seed={seed};exec=0.5;max=6")).unwrap();
+        let mut server =
+            server_with_plan(&synth, &ck, 2, ServeConfig::default(), Some(plan))
+                .unwrap();
+        let got = serve_stream(&mut server, &rows);
+        let tag = format!("exec plan seed={seed}");
+        assert_completions_match(&got, &want, &tag);
+        let stats = server.stats();
+        assert_eq!(stats.completed, rows.len() as u64, "{tag}: all answered");
+        assert_eq!(stats.shed, 0, "{tag}: nothing shed on an unbounded queue");
+        if stats.exec_retries > 0 {
+            fired = true;
+            break;
+        }
+    }
+    assert!(fired, "no exec-fault seed fired a retry in 32 tries");
+}
+
+#[test]
+fn bounded_queue_sheds_past_capacity_and_deadline_expires_stale_requests() {
+    let synth = Synthetic::tiny();
+    let (ck, _) = checkpoint_pair(&synth, 3);
+    let rows = eval_requests(&synth, 3);
+
+    // bounded admission: cap + 2 submissions → exactly 2 explicit sheds
+    let batch = synth.model.batch_size();
+    let cap = batch + 2;
+    assert!(rows.len() >= cap + 2, "eval stream too short for the cap test");
+    let serve_cfg = ServeConfig { queue_cap: cap, ..ServeConfig::default() };
+    let mut server = server_with_plan(&synth, &ck, 1, serve_cfg, None).unwrap();
+    for (i, (x, y)) in rows.iter().take(cap + 2).enumerate() {
+        let result = server.submit(x.clone(), *y);
+        if i < cap {
+            result.unwrap();
+        } else {
+            let err = result.expect_err("submission past queue_cap must shed");
+            assert!(Shed::is_shed(&err), "not a shed error: {err:#}");
+        }
+    }
+    assert_eq!(server.stats().shed, 2);
+    let done = server.drain().unwrap();
+    let served: usize = done.iter().map(|c| c.request_ids.len()).sum();
+    assert_eq!(served, cap, "every admitted request answered, shed ones not");
+    assert_eq!(server.stats().completed, cap as u64);
+
+    // deadline degradation: one batch launches, everything still queued
+    // two ticks later is expired rather than served late
+    let serve_cfg = ServeConfig {
+        inflight_limit: 1,
+        deadline_ticks: 1,
+        ..ServeConfig::default()
+    };
+    let mut server = server_with_plan(&synth, &ck, 1, serve_cfg, None).unwrap();
+    let backlog = 4 * batch;
+    for (x, y) in rows.iter().cycle().take(backlog) {
+        server.submit(x.clone(), *y).unwrap();
+    }
+    server.tick().unwrap(); // admits exactly one batch (inflight_limit)
+    server.tick().unwrap(); // retires it; the rest are now past deadline
+    assert_eq!(server.stats().expired, (backlog - batch) as u64);
+    assert_eq!(server.stats().completed, batch as u64);
+    assert!(server.drain().unwrap().is_empty(), "expired requests never serve");
+}
+
+#[test]
+fn mid_swap_device_loss_aborts_and_keeps_the_old_checkpoint_serving() {
+    let synth = Synthetic::tiny();
+    let (ck_a, ck_b) = checkpoint_pair(&synth, 7);
+    assert_ne!(ck_a.step, ck_b.step);
+    let rows = eval_requests(&synth, 7);
+
+    // Probe the loss threshold upward until it lands inside the swap:
+    // below the window, construction or pre-swap traffic absorbs the
+    // loss (quarantine before the swap — skipped); the first threshold
+    // past clean pre-traffic fires on the swap's own scatter ops.
+    let mut proven = false;
+    for at in 1..=400u64 {
+        let plan = FaultPlan::parse(&format!("lose=0@{at}")).unwrap();
+        let mut server = match server_with_plan(
+            &synth,
+            &ck_a,
+            2,
+            ServeConfig::default(),
+            Some(plan),
+        ) {
+            Ok(s) => s,
+            Err(err) => {
+                assert!(
+                    RuntimeError::is_fault(&err),
+                    "lose=0@{at}: construction failed non-fault: {err:#}"
+                );
+                continue;
+            }
+        };
+        let before = serve_stream(&mut server, &rows);
+        if !server.quarantined_devices().is_empty() {
+            continue; // the loss fired during pre-swap traffic
+        }
+        match CheckpointSwapper::new().swap(&mut server, &ck_b) {
+            Ok(_) => continue, // threshold beyond the swap window
+            Err(err) => {
+                let tag = format!("lose=0@{at}");
+                assert!(
+                    format!("{err:#}").contains("still serving"),
+                    "{tag}: abort error names the surviving checkpoint: {err:#}"
+                );
+                // the old checkpoint is still installed and still
+                // answers — bit-for-bit what it served before the
+                // aborted swap, now from the surviving device
+                assert_eq!(server.installed_step(), ck_a.step, "{tag}");
+                assert_eq!(server.quarantined_devices(), vec![0], "{tag}");
+                let after = serve_stream(&mut server, &rows);
+                assert_completions_match(&after, &before, &tag);
+                proven = true;
+                break;
+            }
+        }
+    }
+    assert!(proven, "no loss threshold landed inside the swap within 400 ops");
+}
