@@ -20,10 +20,13 @@ use anyhow::Result;
 use topkast::bench::reports::{f2, f3, pct};
 use topkast::bench::{run_training, Report, RunSpec, Table};
 use topkast::coordinator::TrainerConfig;
-use topkast::runtime::{env_backend_name, Manifest, Synthetic};
+use topkast::runtime::{
+    env_backend_name, AnyBackend, Manifest, Runtime, StrictBackend, Synthetic,
+};
 use topkast::sparsity::{flops, TopKast};
 use topkast::util::json::Json;
 use topkast::util::timer::{Stats, Stopwatch};
+use topkast::xla::{KernelMode, PjRtClient};
 
 fn steps_vision() -> usize {
     std::env::var("TOPKAST_BENCH_STEPS")
@@ -38,6 +41,33 @@ fn steps_lm() -> usize {
 
 fn topkast_spec(model: &str, s_fwd: f64, s_bwd: f64, steps: usize) -> RunSpec {
     RunSpec::run(model, &format!("topkast:{s_fwd},{s_bwd}"), steps)
+}
+
+/// A backend on the env-selected runtime layer (sim or strict) with an
+/// explicit executor configuration. Fault-injecting env variants fall
+/// back to the plain layer: kernel timing comparisons need clean runs.
+fn kernel_backend(kernel: KernelMode, threads: Option<usize>) -> Result<(AnyBackend, usize)> {
+    let mut client = PjRtClient::cpu()?.with_kernel(kernel);
+    if let Some(t) = threads {
+        client = client.with_threads(t);
+    }
+    let threads = client.threads();
+    let backend = match env_backend_name() {
+        "strict" | "faulty-strict" => {
+            AnyBackend::Strict(StrictBackend::from_client(client))
+        }
+        _ => AnyBackend::Sim(client),
+    };
+    Ok((backend, threads))
+}
+
+/// The executor the env-driven trainers run under (`TOPKAST_KERNEL`,
+/// default sparse) — recorded so perf lines are comparable across runs.
+fn env_kernel_name() -> &'static str {
+    match std::env::var("TOPKAST_KERNEL") {
+        Ok(v) if v.trim().eq_ignore_ascii_case("dense") => "dense",
+        _ => "sparse",
+    }
 }
 
 fn main() -> Result<()> {
@@ -61,6 +91,21 @@ fn main() -> Result<()> {
         let report = step_traffic()?;
         report.save("step_traffic")?;
         println!("{}", report.summary_line("step_traffic", sw.elapsed_ms() / 1e3));
+    }
+
+    // step_traffic_thread_sweep times the sparse kernel at the headline
+    // sparsity across explicit thread counts and *appends* one line per
+    // count (bit-identical results by the determinism contract — the
+    // sweep records timing only).
+    if want("step_traffic_thread_sweep") {
+        let sw = Stopwatch::start();
+        println!("\n######## step_traffic_thread_sweep ########");
+        let report = step_traffic_thread_sweep()?;
+        report.save("step_traffic_thread_sweep")?;
+        println!(
+            "{}",
+            report.summary_line("step_traffic_thread_sweep", sw.elapsed_ms() / 1e3)
+        );
     }
 
     // replicated_step_traffic scales the same synthetic presets across
@@ -516,11 +561,13 @@ fn appb(man: &Manifest) -> Result<Report> {
 fn step_traffic() -> Result<Report> {
     let mut rep = Report::new();
     let mut t = Table::new(
-        "step_traffic: device-resident step cost + traffic (topkast 80/50, N=10)",
+        "step_traffic: device-resident step cost + traffic (topkast, N=10, dense vs sparse kernels)",
         &[
             "preset",
+            "s_fwd",
+            "kernel",
             "step_ms_p50",
-            "step_ms_p95",
+            "compute_ms_p50",
             "refresh_ms_p50",
             "resident_kb",
             "stream_b/step",
@@ -528,83 +575,188 @@ fn step_traffic() -> Result<Report> {
         ],
     );
     let mut lines: Vec<String> = Vec::new();
-    for (preset, synth) in [("tiny", Synthetic::tiny()), ("small", Synthetic::small())]
-    {
-        let steps = 60usize;
+    let points = [
+        ("tiny", Synthetic::tiny(), 0.8, 0.5),
+        ("small", Synthetic::small(), 0.8, 0.5),
+        // the O(nnz) headline point: the CI smoke asserts the sparse
+        // kernel beats the dense reference here
+        ("small", Synthetic::small(), 0.98, 0.98),
+    ];
+    for (preset, synth, s_fwd, s_bwd) in points {
+        for kernel in [KernelMode::Dense, KernelMode::Sparse] {
+            let steps = 60usize;
+            let refresh_every = 10usize;
+            let cfg = TrainerConfig {
+                steps,
+                refresh_every,
+                seed: 7,
+                ..TrainerConfig::default()
+            };
+            let (backend, threads) = kernel_backend(kernel, None)?;
+            let mut trainer = synth.trainer_on(
+                Runtime::from_backend(backend),
+                Box::new(TopKast::from_sparsities(s_fwd, s_bwd)),
+                cfg,
+            )?;
+            // steady-state compute: wall time of the non-refresh steps
+            // only, so the kernel comparison is not diluted by the
+            // refresh exchange
+            let mut compute = Stats::new();
+            let before = trainer.runtime.transfer_stats();
+            for step in 0..steps {
+                let sw = Stopwatch::start();
+                trainer.train_step()?;
+                if step % refresh_every != 0 {
+                    compute.push(sw.elapsed_ms());
+                }
+            }
+            let moved = trainer.runtime.transfer_stats().since(&before);
+            let traffic = trainer.traffic()?;
+            let step_ms = &trainer.metrics.step_time;
+            let refresh_ms = &trainer.metrics.refresh_time;
+            t.row(vec![
+                preset.into(),
+                pct(s_fwd),
+                kernel.name().into(),
+                f3(step_ms.percentile(50.0)),
+                f3(compute.percentile(50.0)),
+                f3(refresh_ms.percentile(50.0)),
+                format!("{:.1}", traffic.resident_bytes as f64 / 1024.0),
+                (traffic.step_h2d_bytes + traffic.step_d2h_bytes).to_string(),
+                traffic.legacy_step_bytes.to_string(),
+            ]);
+            lines.push(
+                Json::obj(vec![
+                    ("scenario", Json::str("step_traffic")),
+                    ("backend", Json::str(env_backend_name())),
+                    ("preset", Json::str(preset)),
+                    ("kernel", Json::str(kernel.name())),
+                    ("threads", Json::num(threads as f64)),
+                    ("fwd_sparsity", Json::num(s_fwd)),
+                    ("steps", Json::num(steps as f64)),
+                    ("step_ms_p50", Json::num(step_ms.percentile(50.0))),
+                    ("step_ms_p95", Json::num(step_ms.percentile(95.0))),
+                    ("step_compute_ms", Json::num(compute.percentile(50.0))),
+                    ("refresh_ms_p50", Json::num(refresh_ms.percentile(50.0))),
+                    ("refresh_ms_p95", Json::num(refresh_ms.percentile(95.0))),
+                    ("resident_bytes", Json::num(traffic.resident_bytes as f64)),
+                    (
+                        "streamed_bytes_per_step",
+                        Json::num(
+                            (traffic.step_h2d_bytes + traffic.step_d2h_bytes) as f64,
+                        ),
+                    ),
+                    (
+                        "refresh_bytes",
+                        Json::num(
+                            (traffic.refresh_h2d_install_bytes
+                                + traffic.refresh_d2h_bytes)
+                                as f64,
+                        ),
+                    ),
+                    (
+                        "amortized_bytes_per_step_n10",
+                        Json::num(traffic.amortized_step_bytes(10)),
+                    ),
+                    ("legacy_step_bytes", Json::num(traffic.legacy_step_bytes as f64)),
+                    // metered counters over the whole run divided by steps:
+                    // comparable to amortized_bytes_per_step_n10 (includes
+                    // the refresh traffic), not to streamed_bytes_per_step
+                    (
+                        "measured_h2d_bytes_per_step",
+                        Json::num(moved.h2d_bytes as f64 / steps as f64),
+                    ),
+                    (
+                        "measured_d2h_bytes_per_step",
+                        Json::num(moved.d2h_bytes as f64 / steps as f64),
+                    ),
+                ])
+                .to_string_compact(),
+            );
+            // the analytic account must not undershoot the metered reality:
+            // every steady step streams exactly step_h2d/step_d2h, and the
+            // measured mean adds only refresh/init traffic on top
+            assert!(moved.h2d_bytes >= steps as u64 * traffic.step_h2d_bytes);
+            assert!(moved.d2h_bytes >= steps as u64 * traffic.step_d2h_bytes);
+        }
+    }
+    std::fs::write("BENCH_topkast.json", lines.join("\n") + "\n")?;
+    println!("wrote BENCH_topkast.json ({} records)", lines.len());
+    rep.add(t);
+    Ok(rep)
+}
+
+// ---------------------------------------------------------------------------
+// STEP_TRAFFIC_THREAD_SWEEP — deterministic parallelism scaling. The
+// sparse kernel at the headline point (small preset, 98% sparse) swept
+// over explicit thread counts; results are bit-identical by the
+// determinism contract (pinned elsewhere by tests/sparse_compute.rs),
+// so this sweep records timing only. One JSON line per thread count is
+// *appended* to BENCH_topkast.json.
+// ---------------------------------------------------------------------------
+fn step_traffic_thread_sweep() -> Result<Report> {
+    use std::io::Write as _;
+
+    let mut rep = Report::new();
+    let mut t = Table::new(
+        "step_traffic_thread_sweep: sparse kernel vs threads (small, topkast 98/98)",
+        &["threads", "step_ms_p50", "compute_ms_p50"],
+    );
+    let mut lines: Vec<String> = Vec::new();
+    let synth = Synthetic::small();
+    for threads in [1usize, 2, 4, 8] {
+        let steps = 30usize;
+        let refresh_every = 6usize;
         let cfg = TrainerConfig {
             steps,
-            refresh_every: 10,
+            refresh_every,
             seed: 7,
             ..TrainerConfig::default()
         };
-        let mut trainer =
-            synth.trainer(Box::new(TopKast::from_sparsities(0.8, 0.5)), cfg)?;
-        let before = trainer.runtime.transfer_stats();
-        for _ in 0..steps {
+        let (backend, threads_eff) = kernel_backend(KernelMode::Sparse, Some(threads))?;
+        let mut trainer = synth.trainer_on(
+            Runtime::from_backend(backend),
+            Box::new(TopKast::from_sparsities(0.98, 0.98)),
+            cfg,
+        )?;
+        let mut compute = Stats::new();
+        for step in 0..steps {
+            let sw = Stopwatch::start();
             trainer.train_step()?;
+            if step % refresh_every != 0 {
+                compute.push(sw.elapsed_ms());
+            }
         }
-        let moved = trainer.runtime.transfer_stats().since(&before);
-        let traffic = trainer.traffic()?;
         let step_ms = &trainer.metrics.step_time;
-        let refresh_ms = &trainer.metrics.refresh_time;
         t.row(vec![
-            preset.into(),
+            threads_eff.to_string(),
             f3(step_ms.percentile(50.0)),
-            f3(step_ms.percentile(95.0)),
-            f3(refresh_ms.percentile(50.0)),
-            format!("{:.1}", traffic.resident_bytes as f64 / 1024.0),
-            (traffic.step_h2d_bytes + traffic.step_d2h_bytes).to_string(),
-            traffic.legacy_step_bytes.to_string(),
+            f3(compute.percentile(50.0)),
         ]);
         lines.push(
             Json::obj(vec![
-                ("scenario", Json::str("step_traffic")),
+                ("scenario", Json::str("step_traffic_thread_sweep")),
                 ("backend", Json::str(env_backend_name())),
-                ("preset", Json::str(preset)),
+                ("preset", Json::str("small")),
+                ("kernel", Json::str(KernelMode::Sparse.name())),
+                ("fwd_sparsity", Json::num(0.98)),
+                ("threads", Json::num(threads_eff as f64)),
                 ("steps", Json::num(steps as f64)),
                 ("step_ms_p50", Json::num(step_ms.percentile(50.0))),
-                ("step_ms_p95", Json::num(step_ms.percentile(95.0))),
-                ("refresh_ms_p50", Json::num(refresh_ms.percentile(50.0))),
-                ("refresh_ms_p95", Json::num(refresh_ms.percentile(95.0))),
-                ("resident_bytes", Json::num(traffic.resident_bytes as f64)),
-                (
-                    "streamed_bytes_per_step",
-                    Json::num((traffic.step_h2d_bytes + traffic.step_d2h_bytes) as f64),
-                ),
-                (
-                    "refresh_bytes",
-                    Json::num(
-                        (traffic.refresh_h2d_install_bytes + traffic.refresh_d2h_bytes)
-                            as f64,
-                    ),
-                ),
-                (
-                    "amortized_bytes_per_step_n10",
-                    Json::num(traffic.amortized_step_bytes(10)),
-                ),
-                ("legacy_step_bytes", Json::num(traffic.legacy_step_bytes as f64)),
-                // metered counters over the whole run divided by steps:
-                // comparable to amortized_bytes_per_step_n10 (includes
-                // the refresh traffic), not to streamed_bytes_per_step
-                (
-                    "measured_h2d_bytes_per_step",
-                    Json::num(moved.h2d_bytes as f64 / steps as f64),
-                ),
-                (
-                    "measured_d2h_bytes_per_step",
-                    Json::num(moved.d2h_bytes as f64 / steps as f64),
-                ),
+                ("step_compute_ms", Json::num(compute.percentile(50.0))),
             ])
             .to_string_compact(),
         );
-        // the analytic account must not undershoot the metered reality:
-        // every steady step streams exactly step_h2d/step_d2h, and the
-        // measured mean adds only refresh/init traffic on top
-        assert!(moved.h2d_bytes >= steps as u64 * traffic.step_h2d_bytes);
-        assert!(moved.d2h_bytes >= steps as u64 * traffic.step_d2h_bytes);
     }
-    std::fs::write("BENCH_topkast.json", lines.join("\n") + "\n")?;
-    println!("wrote BENCH_topkast.json ({} presets)", lines.len());
+    let mut file = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open("BENCH_topkast.json")?;
+    file.write_all((lines.join("\n") + "\n").as_bytes())?;
+    println!(
+        "appended {} step_traffic_thread_sweep records to BENCH_topkast.json",
+        lines.len()
+    );
     rep.add(t);
     Ok(rep)
 }
@@ -769,17 +921,22 @@ fn sparse_exchange() -> Result<Report> {
             )?;
             let traffic = trainer.traffic()?;
             // meter each post-warmup refresh step and subtract the
-            // steady-state step cost to isolate the refresh bytes
+            // steady-state step cost to isolate the refresh bytes;
+            // time the steady steps for the kernel-compute record
             let (mut refresh_h2d, mut refresh_d2h, mut refreshes) = (0u64, 0u64, 0u64);
+            let mut compute = Stats::new();
             for step in 0..steps {
                 let is_refresh = step > 0 && step % refresh_every == 0;
                 let before = trainer.runtime.transfer_stats();
+                let sw = Stopwatch::start();
                 trainer.train_step()?;
                 if is_refresh {
                     let d = trainer.runtime.transfer_stats().since(&before);
                     refresh_h2d += d.h2d_bytes - traffic.step_h2d_bytes;
                     refresh_d2h += d.d2h_bytes - traffic.step_d2h_bytes;
                     refreshes += 1;
+                } else if step > 0 {
+                    compute.push(sw.elapsed_ms());
                 }
             }
             let mean_h2d = refresh_h2d / refreshes.max(1);
@@ -807,9 +964,11 @@ fn sparse_exchange() -> Result<Report> {
                 Json::obj(vec![
                     ("scenario", Json::str("sparse_exchange")),
                     ("backend", Json::str(env_backend_name())),
+                    ("kernel", Json::str(env_kernel_name())),
                     ("preset", Json::str(preset)),
                     ("sparsity", Json::num(sparsity)),
                     ("steps", Json::num(steps as f64)),
+                    ("step_compute_ms", Json::num(compute.percentile(50.0))),
                     ("refresh_d2h_bytes", Json::num(traffic.refresh_d2h_bytes as f64)),
                     (
                         "refresh_h2d_install_bytes",

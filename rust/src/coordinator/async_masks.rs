@@ -82,6 +82,7 @@ impl AsyncMaskRefresher {
                             fwd: &mut fwd,
                             bwd: &mut bwd,
                             grad_norms: None,
+                            edits: None,
                             rng: &mut rng,
                             step: req.step,
                             total_steps: req.total_steps,

@@ -60,7 +60,7 @@ use crate::runtime::{
     DeviceState, ModelEntry, ReplicatedState, Runtime, RuntimeError, TrafficModel,
 };
 use crate::sparsity::{update_store_masks, MaskStrategy, ParamStore};
-use crate::tensor::{HostTensor, SparseSet, TensorData};
+use crate::tensor::{HostTensor, SparseSet, SparseSlice, TensorData};
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
 
@@ -181,10 +181,10 @@ impl<B: Backend> Resident<B> {
         }
     }
 
-    fn upload_sparse_values(&mut self, values: &[Vec<f32>]) -> Result<()> {
+    fn upload_sparse_value_edits(&mut self, edits: &[SparseSlice]) -> Result<()> {
         match self {
-            Resident::Single(d) => d.upload_sparse_values(values),
-            Resident::Replicated(r) => r.upload_sparse_values(values),
+            Resident::Single(d) => d.upload_sparse_value_edits(edits),
+            Resident::Replicated(r) => r.upload_sparse_value_edits(edits),
         }
     }
 
@@ -213,9 +213,11 @@ const RECOVERY_ATTEMPTS: usize = 32;
 struct RefreshRecord {
     /// (fwd, bwd) index sets per sparse tensor, `sparse_idx` order.
     sets: Vec<(SparseSet, SparseSet)>,
-    /// Dense images of the sparse tensors at install time (SET/RigL
-    /// rewrite weights at refresh); `None` for mask-pure strategies.
-    values: Option<Vec<Vec<f32>>>,
+    /// The weight edits the refresh shipped (SET/RigL rewrite weights
+    /// at refresh) — absolute `(index, value)` slices per sparse
+    /// tensor, so replaying them is idempotent; `None` for mask-pure
+    /// strategies.
+    edits: Option<Vec<SparseSlice>>,
 }
 
 /// Everything needed to re-execute one training step bit-for-bit.
@@ -485,8 +487,8 @@ impl<B: Backend> Trainer<B> {
         for rec in &self.journal {
             if let Some(refresh) = &rec.refresh {
                 resident.install_mask_sets(&refresh.sets)?;
-                if let Some(values) = &refresh.values {
-                    resident.upload_sparse_values(values)?;
+                if let Some(edits) = &refresh.edits {
+                    resident.upload_sparse_value_edits(edits)?;
                 }
             }
             let loss = match resident {
@@ -631,37 +633,37 @@ impl<B: Backend> Trainer<B> {
     /// install points; call it manually after external mask surgery on
     /// `store` (e.g. selection analysis) so the device sees the edit.
     pub fn push_masks_to_device(&mut self) -> Result<()> {
-        self.install_refresh()
+        self.install_refresh(None)
     }
 
     /// Journal what a refresh just installed: the absolute index sets
-    /// (and, for weight-rewriting strategies, the sparse tensors' dense
-    /// images) — everything a replay needs to re-install the same bits
+    /// (and, for weight-rewriting strategies, the weight edits it
+    /// shipped) — everything a replay needs to re-install the same bits
     /// without re-running the host-side selection.
-    fn capture_refresh_record(&self) -> RefreshRecord {
-        let mutates = self.strategy.mutates_weights();
+    fn capture_refresh_record(&self, edits: Option<Vec<SparseSlice>>) -> RefreshRecord {
         let mut sets = Vec::new();
-        let mut values = Vec::new();
         for e in self.store.entries.iter().filter(|e| e.spec.sparse) {
             let m = e
                 .masks
                 .as_ref()
                 .expect("sparse param has masks after a refresh install");
             sets.push((m.fwd().clone(), m.bwd().clone()));
-            if mutates {
-                values.push(e.values.clone());
-            }
         }
-        RefreshRecord { sets, values: mutates.then_some(values) }
+        RefreshRecord { sets, edits }
     }
 
-    /// Install the store's masks (and rewritten sparse values) on the
-    /// resident chain, recovering on faults: a failed scatter install is
-    /// not idempotent — the old mask buffer is consumed either way — so
-    /// the chain is rebuilt at its pre-refresh state and the install
-    /// retried from a clean delta base. Journals the installed state on
+    /// Install the store's masks (and, when the strategy rewrote
+    /// weights, its recorded value edits) on the resident chain,
+    /// recovering on faults: a failed scatter install is not idempotent
+    /// — the old mask buffer is consumed either way — so the chain is
+    /// rebuilt at its pre-refresh state and the install retried from a
+    /// clean delta base (edits carry absolute values, so re-applying
+    /// them is safe). With no edit log (external mask surgery via
+    /// `push_masks_to_device`), a weight-rewriting strategy falls back
+    /// to the dense sparse-param re-upload — the only remaining O(n)
+    /// refresh, off the training path. Journals the installed state on
     /// success.
-    fn install_refresh(&mut self) -> Result<()> {
+    fn install_refresh(&mut self, edits: Option<&[SparseSlice]>) -> Result<()> {
         let mutates = self.strategy.mutates_weights();
         let mut attempts = 0usize;
         loop {
@@ -670,7 +672,10 @@ impl<B: Backend> Trainer<B> {
                 bail!("mask install did not converge after {RECOVERY_ATTEMPTS} attempts");
             }
             let result = match self.device.upload_mask_deltas(&self.store) {
-                Ok(()) if mutates => self.device.upload_sparse_params(&self.store),
+                Ok(()) if mutates => match edits {
+                    Some(e) => self.device.upload_sparse_value_edits(e),
+                    None => self.device.upload_sparse_params(&self.store),
+                },
                 other => other,
             };
             match result {
@@ -678,7 +683,33 @@ impl<B: Backend> Trainer<B> {
                 Err(err) => self.absorb_fault(err)?,
             }
         }
-        self.pending_refresh = Some(self.capture_refresh_record());
+        let journal_edits: Option<Vec<SparseSlice>> = if mutates {
+            Some(match edits {
+                Some(e) => e.to_vec(),
+                // no edit log (external surgery fallback): the dense
+                // re-upload just shipped the store's sparse values
+                // wholesale — journal full-coverage slices so a replay
+                // re-installs the same bits
+                None => self
+                    .store
+                    .entries
+                    .iter()
+                    .filter(|e| e.spec.sparse)
+                    .map(|e| {
+                        let writes: Vec<(u32, f32)> = e
+                            .values
+                            .iter()
+                            .enumerate()
+                            .map(|(i, &v)| (i as u32, v))
+                            .collect();
+                        SparseSlice::from_writes(e.values.len(), &writes)
+                    })
+                    .collect(),
+            })
+        } else {
+            None
+        };
+        self.pending_refresh = Some(self.capture_refresh_record(journal_edits));
         Ok(())
     }
 
@@ -807,7 +838,7 @@ impl<B: Backend> Trainer<B> {
         } else {
             None
         };
-        update_store_masks(
+        let edits = update_store_masks(
             self.strategy.as_mut(),
             &mut self.store,
             grad_norms.as_ref(),
@@ -818,10 +849,9 @@ impl<B: Backend> Trainer<B> {
         // SET re-inits grown connections, RigL zeroes dropped/grown
         // ones — the host rewrite must reach the device alongside the
         // index deltas (install_refresh ships both, and recovers from
-        // faulted installs). Sparse tensors only: the host's dense
-        // tensors are stale between full syncs and must not clobber
-        // trained device state.
-        self.install_refresh()?;
+        // faulted installs). Only the recorded edits cross the bus:
+        // 4·Δindices + 4·Δvalues, never the dense 4·n re-upload.
+        self.install_refresh(Some(&edits))?;
         if !self.masks_initialised {
             self.metrics.reservoir.init(&self.store);
             self.masks_initialised = true;
@@ -969,8 +999,8 @@ impl<B: Backend> Trainer<B> {
                 // full θ download; the O(nnz) sync must do it here).
                 self.sync_params_host()?;
                 // async-eligible strategies are mask-pure, so only the
-                // index deltas travel to the device
-                self.install_refresh()?;
+                // index deltas travel to the device (no edit log)
+                self.install_refresh(None)?;
                 let elapsed_ms = self
                     .async_refresher
                     .as_ref()

@@ -29,10 +29,12 @@
 //!   update with m_bwd), host Top-K, then only the **index deltas**
 //!   host→device ([`DeviceState::upload_mask_deltas`] — O(Δnnz) per
 //!   replica, installed with the simulated scatter path
-//!   `PjRtBuffer::scatter_mask_update`) — plus the sparse tensors'
-//!   params host→device when the strategy rewrote weights (SET/RigL
-//!   re-init grown connections, declared via
-//!   `MaskStrategy::mutates_weights`);
+//!   `PjRtBuffer::scatter_mask_update`) — plus, when the strategy
+//!   rewrote weights (SET/RigL re-init grown connections, declared via
+//!   `MaskStrategy::mutates_weights`), only the recorded **value
+//!   edits** host→device
+//!   ([`DeviceState::upload_sparse_value_edits`] — O(|edits|) per
+//!   replica, 4·Δindices + 4·Δvalues, never the dense 4·n re-upload);
 //! * **eval / grad_norms**: no sync at all — both artifacts read the
 //!   *resident* param/mask buffers and stream only the batch
 //!   ([`DeviceState::run_with_fwd_masks`]);
@@ -60,7 +62,7 @@ use super::manifest::{EvalLayout, ModelEntry, TrainLayout};
 use crate::sparsity::strategy::Densities;
 use crate::sparsity::topk::k_for_density;
 use crate::sparsity::ParamStore;
-use crate::tensor::{HostTensor, SparseSet};
+use crate::tensor::{HostTensor, SparseSet, SparseSlice};
 
 /// Persistent device buffers for one model's training state, pinned to
 /// one simulated device (a data-parallel run holds one per replica —
@@ -195,6 +197,37 @@ impl<B: Backend> DeviceState<B> {
         Ok(())
     }
 
+    /// Apply recorded per-tensor weight edits (`sparse_idx` order) to
+    /// the resident sparse params — the O(|edits|) refresh path for
+    /// weight-rewriting strategies (SET/RigL). Each non-empty slice
+    /// crosses the bus as indices + values (4·|idx| + 4·|vals| bytes)
+    /// through the metered scatter; empty slices move nothing. Edits
+    /// carry absolute values, so replaying them (fault retry) is
+    /// idempotent.
+    pub fn upload_sparse_value_edits(&mut self, edits: &[SparseSlice]) -> Result<()> {
+        if edits.len() != self.sparse_idx.len() {
+            bail!(
+                "{} edit slices for {} sparse tensors",
+                edits.len(),
+                self.sparse_idx.len()
+            );
+        }
+        for (pos, &i) in self.sparse_idx.iter().enumerate() {
+            let slice = &edits[pos];
+            if slice.is_empty() {
+                continue;
+            }
+            // the scatter *consumes* the old param buffer (donation)
+            // and yields its replacement
+            let cur = self.params.remove(i);
+            self.params.insert(
+                i,
+                cur.scatter_values_update(slice.indices.indices(), &slice.values)?,
+            );
+        }
+        Ok(())
+    }
+
     /// Install the host store's masks wholesale (construction, restore,
     /// external surgery with no usable delta base). Each mask crosses
     /// the simulated bus as its index list — O(nnz), not O(n) — and is
@@ -303,25 +336,6 @@ impl<B: Backend> DeviceState<B> {
         self.masks_fwd = fwd;
         self.masks_bwd = bwd;
         self.installed_masks = sets.to_vec();
-        Ok(())
-    }
-
-    /// Overwrite the sparse tensors' resident values with explicit
-    /// dense images (`sparse_idx` order) — the journal-replay path for
-    /// weight-rewriting refreshes (SET/RigL), where the values to
-    /// restore are the ones journaled at install time, not the store's
-    /// current ones.
-    pub fn upload_sparse_values(&mut self, values: &[Vec<f32>]) -> Result<()> {
-        if values.len() != self.sparse_idx.len() {
-            bail!(
-                "sparse value count {} != sparse tensor count {}",
-                values.len(),
-                self.sparse_idx.len()
-            );
-        }
-        for (pos, &i) in self.sparse_idx.iter().enumerate() {
-            self.params[i] = self.upload_f32(&values[pos], &self.param_dims[i])?;
-        }
         Ok(())
     }
 
@@ -706,8 +720,10 @@ pub struct TrafficModel {
     /// [`TrafficModel::refresh_h2d_delta_bytes`] instead — **O(Δnnz)**.
     pub refresh_h2d_install_bytes: u64,
     /// Content-independent part of every refresh upload: the
-    /// grad_norms batch on replica 0, plus the sparse tensors' param
-    /// re-upload (per replica) for weight-rewriting strategies.
+    /// grad_norms batch on replica 0. Weight-rewriting strategies no
+    /// longer contribute here — their refresh ships recorded value
+    /// edits, accounted per refresh via
+    /// [`TrafficModel::refresh_h2d_edit_bytes`].
     pub refresh_h2d_fixed_bytes: u64,
     /// What the dense exchange plane moved at a refresh before the
     /// sparse protocol: two dense 0/1 f32 masks per sparse tensor per
@@ -836,8 +852,10 @@ impl TrafficModel {
         } else {
             (batch_bytes, 0)
         };
-        let refresh_h2d_fixed_bytes = grad_norms_h2d
-            + if strategy_rewrites_weights { r * p_sparse_bytes } else { 0 };
+        // weight-rewriting strategies ship recorded value edits at a
+        // refresh (refresh_h2d_edit_bytes), not a dense param re-upload
+        let _ = p_sparse_bytes;
+        let refresh_h2d_fixed_bytes = grad_norms_h2d;
         Ok(TrafficModel {
             replicas: r,
             resident_bytes: p_bytes * (1 + slots) + 2 * m_bytes,
@@ -867,6 +885,13 @@ impl TrafficModel {
     /// the broadcast reaches every replica, the fixed part rides along.
     pub fn refresh_h2d_delta_bytes(&self, delta_indices: u64) -> u64 {
         self.replicas * 4 * delta_indices + self.refresh_h2d_fixed_bytes
+    }
+
+    /// Host→device bytes of the value edits a weight-rewriting refresh
+    /// ships: `edit_entries` (index, value) pairs — 4 bytes of index +
+    /// 4 bytes of value each — broadcast to every replica.
+    pub fn refresh_h2d_edit_bytes(&self, edit_entries: u64) -> u64 {
+        self.replicas * 8 * edit_entries
     }
 
     /// Mean bytes/step when refreshing every N steps, charging every

@@ -79,7 +79,7 @@ use super::client::{DeviceInput, Executable, TensorRef};
 use super::device_state::DeviceState;
 use super::manifest::{ModelEntry, ReplicatedLayout, ReplicationSpec};
 use crate::sparsity::ParamStore;
-use crate::tensor::{HostTensor, SparseSet};
+use crate::tensor::{HostTensor, SparseSet, SparseSlice};
 
 /// Contiguous batch shards: every index in `0..n` exactly once, shard
 /// sizes differing by at most one (the first `n % replicas` shards take
@@ -352,12 +352,14 @@ impl<B: Backend> ReplicatedState<B> {
         Ok(())
     }
 
-    /// Overwrite the sparse tensors' resident values on every surviving
-    /// replica with explicit dense images (`sparse_idx` order) — the
-    /// journal-replay path for weight-rewriting refreshes.
-    pub fn upload_sparse_values(&mut self, values: &[Vec<f32>]) -> Result<()> {
+    /// Broadcast a refresh's recorded weight edits (`sparse_idx`
+    /// order) to every surviving replica — O(|edits|) per replica
+    /// link, and the journal-replay path for weight-rewriting
+    /// refreshes (edits carry absolute values, so re-applying them is
+    /// idempotent).
+    pub fn upload_sparse_value_edits(&mut self, edits: &[SparseSlice]) -> Result<()> {
         for state in &mut self.replicas {
-            state.upload_sparse_values(values)?;
+            state.upload_sparse_value_edits(edits)?;
         }
         Ok(())
     }

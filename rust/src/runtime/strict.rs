@@ -83,6 +83,12 @@ impl StrictBackend {
             inner: xla::PjRtClient::cpu_with_devices(devices)?,
         })
     }
+
+    /// Wrap an already-configured sim client (kernel mode / thread
+    /// budget set programmatically) in donation checking.
+    pub fn from_client(inner: xla::PjRtClient) -> StrictBackend {
+        StrictBackend { inner }
+    }
 }
 
 impl BufferOps for StrictBuffer {

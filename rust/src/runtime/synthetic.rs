@@ -241,8 +241,21 @@ impl Synthetic {
         strategy: Box<dyn MaskStrategy>,
         cfg: TrainerConfig,
     ) -> Result<Trainer> {
+        let rt = Runtime::with_devices(cfg.replicas.max(1))?;
+        self.trainer_on(rt, strategy, cfg)
+    }
+
+    /// Like [`Self::trainer`], but over an explicitly-constructed
+    /// runtime — tests use this to pin backend, kernel mode, and thread
+    /// count programmatically instead of via the environment. The
+    /// runtime's device set must already match `cfg.replicas`.
+    pub fn trainer_on<B: super::backend::Backend>(
+        &self,
+        mut rt: Runtime<B>,
+        strategy: Box<dyn MaskStrategy>,
+        cfg: TrainerConfig,
+    ) -> Result<Trainer<B>> {
         let replicas = cfg.replicas.max(1);
-        let mut rt = Runtime::with_devices(replicas)?;
         let synth = if replicas > 1 && self.model.replication.is_none() {
             self.replicated(replicas)?
         } else {
@@ -331,6 +344,11 @@ impl Synthetic {
         let mut new_params = Vec::with_capacity(model.params.len());
         let mut new_opt = Vec::with_capacity(model.params.len() * slots);
         let mut loss = b.constant_f32(0.01)?;
+        // gather-matmul forward chain over the sparse params, seeded by
+        // the batch moment broadcast over a single row — the O(nnz)
+        // forward pass (the per-param `g` below is the fake gradient's
+        // elementwise signal; it stays lazy under select/scatter_add)
+        let mut cur = xm.clone();
         for (i, p) in model.params.iter().enumerate() {
             let theta = &inputs[layout.params.start + i];
             let ci = b.constant_f32(0.013 * (i + 1) as f32)?;
@@ -340,32 +358,59 @@ impl Synthetic {
             if let Some(&mpos) = mask_of.get(&i) {
                 let fwd = &inputs[layout.masks_fwd.start + mpos];
                 let bwd = &inputs[layout.masks_bwd.start + mpos];
+                let dims = p.shape.dims();
+                cur = b.masked_matmul(&cur, theta, fwd, 1, dims[0], dims[1])?;
                 // forward contribution reads only A; updates only B
                 let act = ((theta * fwd)? * &(inv_d * &b.constant_f32(0.05)?)?)?;
-                g = (bwd * &(&g + &act)?)?;
+                g = (&g + &act)?.select(bwd)?;
+                let g2 = (g.clone() * g.clone())?;
+                // slot 0: momentum-style accumulator; slot 1 (when
+                // present): second-moment-style — both written only on B
+                let s0 = &inputs[layout.opt.start + i * slots];
+                let s0n = s0.scatter_add(
+                    bwd,
+                    &(&g + &(s0 * &b.constant_f32(-0.1)?)?)?,
+                )?;
+                let mut upd = s0n.clone();
+                let mut slot_outs = vec![s0n];
+                if slots == 2 {
+                    let s1 = &inputs[layout.opt.start + i * slots + 1];
+                    let s1n = s1.scatter_add(
+                        bwd,
+                        &(&g2 + &(s1 * &b.constant_f32(-0.05)?)?)?,
+                    )?;
+                    upd = (&upd + &(&s1n * &b.constant_f32(0.1)?)?)?;
+                    slot_outs.push(s1n);
+                }
+                // §2.2: coordinates outside B stay bit-identical — the
+                // scatter copies θ's bytes verbatim off the mask
+                let delta = ((lr * &upd)? + (reg * theta)?)?;
+                new_params.push(theta.scatter_add(
+                    bwd,
+                    &(&delta * &b.constant_f32(-1.0)?)?,
+                )?);
+                new_opt.extend(slot_outs);
+                loss = (&loss + &g2.mean()?)?;
+            } else {
+                // dense params keep the fused elementwise update
+                let s0 = &inputs[layout.opt.start + i * slots];
+                let s0n = ((s0 * &b.constant_f32(0.9)?)? + g.clone())?;
+                let mut upd = s0n.clone();
+                let mut slot_outs = vec![s0n];
+                if slots == 2 {
+                    let s1 = &inputs[layout.opt.start + i * slots + 1];
+                    let s1n = ((s1 * &b.constant_f32(0.95)?)? + (&g * &g)?)?;
+                    upd = (&upd + &(&s1n * &b.constant_f32(0.1)?)?)?;
+                    slot_outs.push(s1n);
+                }
+                let delta = ((lr * &upd)? + (reg * theta)?)?;
+                new_params.push((theta - &delta)?);
+                new_opt.extend(slot_outs);
+                loss = (&loss + &(&g * &g)?.mean()?)?;
             }
-            // slot 0: momentum-style accumulator; slot 1 (when present):
-            // second-moment-style accumulator
-            let s0 = &inputs[layout.opt.start + i * slots];
-            let s0n = ((s0 * &b.constant_f32(0.9)?)? + g.clone())?;
-            let mut upd = s0n.clone();
-            let mut slot_outs = vec![s0n];
-            if slots == 2 {
-                let s1 = &inputs[layout.opt.start + i * slots + 1];
-                let s1n = ((s1 * &b.constant_f32(0.95)?)? + (&g * &g)?)?;
-                upd = (&upd + &(&s1n * &b.constant_f32(0.1)?)?)?;
-                slot_outs.push(s1n);
-            }
-            let mut delta = ((lr * &upd)? + (reg * theta)?)?;
-            if let Some(&mpos) = mask_of.get(&i) {
-                // §2.2: coordinates outside B stay bit-identical
-                let bwd = &inputs[layout.masks_bwd.start + mpos];
-                delta = (bwd * &delta)?;
-            }
-            new_params.push((theta - &delta)?);
-            new_opt.extend(slot_outs);
-            loss = (&loss + &(&g * &g)?.mean()?)?;
         }
+        // the chain's output row ties the loss to the forward matmuls
+        loss = (&loss + &(cur.clone() * cur.clone())?.mean()?)?;
 
         let mut outs = new_params;
         outs.extend(new_opt);
@@ -391,6 +436,13 @@ impl Synthetic {
         let mut mask_pos = 0usize;
         let mut loss = b.constant_f32(0.01)?;
         let mut gn_outs = Vec::new();
+        // batched gather-matmul chain x → every masked layer (eval
+        // only; the grad-norms graph keeps its dense proxy outputs)
+        let mut cur = if grad_norms {
+            None
+        } else {
+            Some(inputs[layout.batch.start].clone())
+        };
         for (i, p) in model.params.iter().enumerate() {
             let theta = &inputs[layout.params.start + i];
             let active = if p.sparse {
@@ -401,13 +453,27 @@ impl Synthetic {
                     // RigL grow criterion sees off-mask mass
                     gn_outs.push(((theta * theta)? + (&xm * &xm)?)?);
                 }
-                (theta * fwd)?
+                if let Some(c) = cur.take() {
+                    let dims = p.shape.dims();
+                    cur = Some(b.masked_matmul(
+                        &c,
+                        theta,
+                        fwd,
+                        self.batch,
+                        dims[0],
+                        dims[1],
+                    )?);
+                }
+                theta.select(fwd)?
             } else {
                 theta.clone()
             };
             loss = (&loss + &(&active * &active)?.mean()?)?;
         }
         loss = (&loss + &(&xm * &xm)?)?;
+        if let Some(z) = &cur {
+            loss = (&loss + &(z.clone() * z.clone())?.mean()?)?;
+        }
         let metric = ym;
         if grad_norms {
             b.tuple(&gn_outs)?.build()

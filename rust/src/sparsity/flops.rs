@@ -61,6 +61,22 @@ pub fn inference_flops_actual(store: &crate::sparsity::ParamStore) -> f64 {
         .sum()
 }
 
+/// Forward multiply-adds per example from a store's *actual* masks:
+/// Σ_sparse nnz(A_t) — exactly the multiply-adds the sim's sparse
+/// gather-matmul executes per example row (and what the dense
+/// reference kernel spends on active mask positions), the count
+/// `PjRtClient::kernel_macs` meters. [`inference_flops_actual`] prices
+/// each such MAC at 2 FLOPs (multiply + add) on top of the dense
+/// tensors' fixed cost, so the two accounts are linked exactly:
+/// `inference_flops_actual == 2·forward_macs_actual + Σ_dense 2·mac`.
+pub fn forward_macs_actual(store: &crate::sparsity::ParamStore) -> u64 {
+    store
+        .entries
+        .iter()
+        .filter_map(|e| e.masks.as_ref().map(|m| m.fwd_nnz() as u64))
+        .sum()
+}
+
 /// Whole-run training FLOPs for a strategy, integrating its schedule
 /// (pruning's density ramp, RigL's amortised dense gradients). Returned
 /// as a fraction of the dense run's FLOPs — exactly Fig 2(a)'s x-axis.
@@ -253,6 +269,84 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn measured_kernel_macs_equal_the_flops_predictions_exactly() {
+        use crate::coordinator::TrainerConfig;
+        use crate::runtime::{Runtime, Synthetic};
+        use crate::sparsity::topk::k_for_density;
+        use crate::xla::{KernelMode, PjRtClient};
+
+        // The debug MAC counter measures what the executor actually
+        // multiplies-and-adds. Under BOTH kernel modes one train step
+        // (m = 1 per matmul) must execute exactly forward_macs_actual
+        // = Σ nnz(A_t), an eval pass exactly eval_batches·batch·that,
+        // and the analytic FLOPs surfaces must sit on the same number.
+        let synth = Synthetic::tiny();
+        let layout = synth.model.train_layout().unwrap();
+        let batch =
+            synth.model.train.inputs[layout.batch.start].shape.dims()[0] as u64;
+        for kernel in [KernelMode::Dense, KernelMode::Sparse] {
+            let client = PjRtClient::cpu_with_devices(1)
+                .unwrap()
+                .with_kernel(kernel)
+                .with_threads(2);
+            let rt = Runtime::from_backend(client.clone());
+            let cfg = TrainerConfig {
+                steps: 8,
+                refresh_every: 4,
+                seed: 11,
+                ..TrainerConfig::default()
+            };
+            let mut trainer = synth
+                .trainer_on(rt, Box::new(TopKast::from_sparsities(0.8, 0.5)), cfg)
+                .unwrap();
+            // step 0 installs the initial masks; meter a steady step
+            trainer.train_step().unwrap();
+            let want = forward_macs_actual(&trainer.store);
+            assert!(want > 0);
+            // ...which for a fixed-density strategy is the same k the
+            // analytic step_flops density model prices
+            let k_sum: u64 = synth
+                .model
+                .sparse_params()
+                .iter()
+                .map(|p| k_for_density(p.shape.numel(), 0.2) as u64)
+                .sum();
+            assert_eq!(want, k_sum);
+            client.reset_kernel_macs();
+            trainer.train_step().unwrap();
+            assert_eq!(
+                client.kernel_macs(),
+                want,
+                "{} kernel: one train step = Σ nnz(A_t) multiply-adds",
+                kernel.name()
+            );
+            client.reset_kernel_macs();
+            trainer.evaluate().unwrap();
+            assert_eq!(
+                client.kernel_macs(),
+                trainer.cfg.eval_batches as u64 * batch * want,
+                "{} kernel: eval = eval_batches·batch·Σ nnz(A_t)",
+                kernel.name()
+            );
+            // inference_flops_actual prices each measured MAC at 2
+            // FLOPs on top of the dense tensors' fixed cost
+            let dense_fixed: f64 = trainer
+                .store
+                .entries
+                .iter()
+                .filter(|e| e.masks.is_none())
+                .map(|e| 2.0 * e.spec.mac as f64)
+                .sum();
+            let predicted = inference_flops_actual(&trainer.store);
+            let linked = 2.0 * want as f64 + dense_fixed;
+            assert!(
+                (predicted - linked).abs() <= 1e-9 * linked.max(1.0),
+                "inference_flops_actual {predicted} != 2·measured + dense {linked}"
+            );
+        }
     }
 
     #[test]

@@ -133,6 +133,7 @@ mod tests {
             fwd: &mut mf,
             bwd: &mut mb,
             grad_norms: None,
+            edits: None,
             rng: &mut rng,
             step: 900,
             total_steps: 1000,
@@ -159,6 +160,7 @@ mod tests {
             fwd: &mut mf,
             bwd: &mut mb,
             grad_norms: None,
+            edits: None,
             rng: &mut rng,
             step: 0,
             total_steps: 1,

@@ -86,7 +86,7 @@ impl MaskStrategy for RigL {
         self.density * (1.0 - dense_frac) + 1.0 * dense_frac
     }
 
-    fn update_tensor(&mut self, ctx: TensorCtx<'_>) -> Result<()> {
+    fn update_tensor(&mut self, mut ctx: TensorCtx<'_>) -> Result<()> {
         let n = ctx.weights.len();
         let k = k_for_density(n, self.density);
 
@@ -134,6 +134,9 @@ impl MaskStrategy for RigL {
         });
         for &i in active.iter().take(n_drop) {
             ctx.weights[i as usize] = 0.0;
+            if let Some(e) = ctx.edits.as_deref_mut() {
+                e.push((i, 0.0));
+            }
         }
         let survivors = &active[n_drop..];
 
@@ -152,6 +155,9 @@ impl MaskStrategy for RigL {
         let n_grow = n_drop.min(inactive.len());
         for &i in inactive.iter().take(n_grow) {
             ctx.weights[i as usize] = 0.0;
+            if let Some(e) = ctx.edits.as_deref_mut() {
+                e.push((i, 0.0));
+            }
         }
         let mut new_active: Vec<u32> = survivors.to_vec();
         new_active.extend(inactive.iter().take(n_grow));
@@ -183,6 +189,7 @@ mod tests {
             fwd: mf,
             bwd: mb,
             grad_norms: g,
+            edits: None,
             rng,
             step,
             total_steps: total,
@@ -240,6 +247,7 @@ mod tests {
             fwd: &mut mf,
             bwd: &mut mb,
             grad_norms: None,
+            edits: None,
             rng: &mut rng,
             step: 10,
             total_steps: 1000,

@@ -58,7 +58,7 @@ impl MaskStrategy for SetEvolve {
         step == 0 || !self.initialised || step % self.update_every == 0
     }
 
-    fn update_tensor(&mut self, ctx: TensorCtx<'_>) -> Result<()> {
+    fn update_tensor(&mut self, mut ctx: TensorCtx<'_>) -> Result<()> {
         let n = ctx.weights.len();
         let k = k_for_density(n, self.density);
 
@@ -94,6 +94,9 @@ impl MaskStrategy for SetEvolve {
         });
         for &i in active.iter().take(n_drop) {
             ctx.weights[i as usize] = 0.0;
+            if let Some(e) = ctx.edits.as_deref_mut() {
+                e.push((i, 0.0));
+            }
         }
         let survivors = &active[n_drop..];
 
@@ -106,7 +109,11 @@ impl MaskStrategy for SetEvolve {
         let mut new_active: Vec<u32> = survivors.to_vec();
         for j in ctx.rng.sample_indices(inactive.len(), n_grow) {
             let i = inactive[j];
-            ctx.weights[i as usize] = ctx.rng.normal_f32(self.init_scale);
+            let v = ctx.rng.normal_f32(self.init_scale);
+            ctx.weights[i as usize] = v;
+            if let Some(e) = ctx.edits.as_deref_mut() {
+                e.push((i, v));
+            }
             new_active.push(i);
         }
         ctx.fwd.set_from_unsorted(&new_active);
@@ -135,6 +142,7 @@ mod tests {
             fwd: mf,
             bwd: mb,
             grad_norms: None,
+            edits: None,
             rng,
             step,
             total_steps: 1000,
@@ -178,6 +186,46 @@ mod tests {
         for i in before.diff(&mf).iter() {
             assert_eq!(w[i as usize], 0.0, "dropped weight not zeroed at {i}");
         }
+    }
+
+    #[test]
+    fn recorded_edits_reproduce_the_dense_rewrite() {
+        // replaying the edit log onto a pre-refresh snapshot must land
+        // bit-identically on the post-refresh weights — the contract
+        // the O(|edits|) device upload path rests on
+        property_cases("SET edits replay densely", 32, |rng| {
+            let n = 40 + rng.next_below(120) as usize;
+            let mut w: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.1)).collect();
+            let mut s = SetEvolve::new(0.4, 0.5, 0.1);
+            let (mut mf, mut mb) = (SparseSet::empty(n), SparseSet::empty(n));
+            let mut r2 = rng.fork(7);
+            step_once(&mut s, &mut w, &mut mf, &mut mb, &mut r2, 0);
+            let pre = w.clone();
+            let mut log = Vec::new();
+            s.update_tensor(TensorCtx {
+                name: "t",
+                weights: &mut w,
+                fwd: &mut mf,
+                bwd: &mut mb,
+                grad_norms: None,
+                edits: Some(&mut log),
+                rng: &mut r2,
+                step: 100,
+                total_steps: 1000,
+            })
+            .unwrap();
+            let slice = crate::tensor::SparseSlice::from_writes(n, &log);
+            ensure(!slice.is_empty(), "a 0.5-drop refresh edits")?;
+            ensure(slice.len() < n, "edit log stays below the dense size")?;
+            let mut replay = pre;
+            slice.scatter_into(&mut replay);
+            ensure(
+                replay.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+                    == w.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "replayed edits land bitwise on the rewritten weights",
+            )?;
+            Ok(())
+        });
     }
 
     #[test]

@@ -71,6 +71,7 @@ mod tests {
             fwd: &mut mf,
             bwd: &mut mb,
             grad_norms: None,
+            edits: None,
             rng: &mut rng,
             step: 0,
             total_steps: 10,
@@ -86,6 +87,7 @@ mod tests {
             fwd: &mut mf,
             bwd: &mut mb,
             grad_norms: None,
+            edits: None,
             rng: &mut rng,
             step: 50,
             total_steps: 100,

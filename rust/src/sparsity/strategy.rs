@@ -12,7 +12,7 @@
 use anyhow::Result;
 
 use super::store::{ParamEntry, ParamStore};
-use crate::tensor::SparseSet;
+use crate::tensor::{SparseSet, SparseSlice};
 use crate::util::rng::Pcg64;
 
 /// Per-refresh context handed to a strategy for one tensor.
@@ -27,6 +27,11 @@ pub struct TensorCtx<'a> {
     /// |grad| from the grad_norms artifact — present only when the
     /// strategy declared `needs_grad_norms(step)`.
     pub grad_norms: Option<&'a [f32]>,
+    /// When present, every weight write the strategy performs must also
+    /// be recorded here as `(index, new_value)` — the device-install
+    /// path turns the log into an O(|edits|) sparse value upload
+    /// instead of re-uploading the dense tensor.
+    pub edits: Option<&'a mut Vec<(u32, f32)>>,
     pub rng: &'a mut Pcg64,
     /// Current training step and the planned total (for schedules).
     pub step: usize,
@@ -81,7 +86,10 @@ pub trait MaskStrategy: Send {
     }
 }
 
-/// Drive a strategy over every sparse tensor of a store.
+/// Drive a strategy over every sparse tensor of a store. Returns one
+/// [`SparseSlice`] of recorded weight edits per sparse tensor (in store
+/// order) — empty for strategies that never rewrite values — so the
+/// install path can upload exactly the touched entries.
 pub fn update_store_masks(
     strategy: &mut dyn MaskStrategy,
     store: &mut ParamStore,
@@ -89,7 +97,8 @@ pub fn update_store_masks(
     rng: &mut Pcg64,
     step: usize,
     total_steps: usize,
-) -> Result<()> {
+) -> Result<Vec<SparseSlice>> {
+    let mut all_edits = Vec::new();
     for entry in store.entries.iter_mut() {
         if !entry.spec.sparse {
             continue;
@@ -98,6 +107,8 @@ pub fn update_store_masks(
         let ParamEntry { spec, values, masks } = entry;
         let masks = masks.as_mut().expect("sparse tensor has masks");
         let gn = grad_norms.and_then(|m| m.get(&spec.name)).map(|v| &v[..]);
+        let domain = values.len();
+        let mut writes: Vec<(u32, f32)> = Vec::new();
         masks.edit(|fwd, bwd| {
             strategy.update_tensor(TensorCtx {
                 name: &spec.name,
@@ -105,13 +116,15 @@ pub fn update_store_masks(
                 fwd,
                 bwd,
                 grad_norms: gn,
+                edits: Some(&mut writes),
                 rng: &mut *rng,
                 step,
                 total_steps,
             })
         })?;
+        all_edits.push(SparseSlice::from_writes(domain, &writes));
     }
-    Ok(())
+    Ok(all_edits)
 }
 
 #[cfg(test)]

@@ -174,6 +174,7 @@ mod tests {
                 fwd: &mut mf,
                 bwd: &mut mb,
                 grad_norms: None,
+                edits: None,
                 rng: &mut rng,
                 step,
                 total_steps: 100,
@@ -222,6 +223,7 @@ mod tests {
                 fwd: &mut mf,
                 bwd: &mut mb,
                 grad_norms: None,
+                edits: None,
                 rng: &mut r2,
                 step: 0,
                 total_steps: 10,
@@ -263,6 +265,7 @@ mod tests {
                 fwd: &mut mf,
                 bwd: &mut mb,
                 grad_norms: None,
+                edits: None,
                 rng: &mut r2,
                 step: 0,
                 total_steps: 10,
@@ -325,6 +328,7 @@ mod tests {
                 fwd: &mut mf,
                 bwd: &mut mb,
                 grad_norms: None,
+                edits: None,
                 rng: &mut r2,
                 step: 0,
                 total_steps: 10,

@@ -325,6 +325,34 @@ impl SparseSlice {
         SparseSlice { indices: set.clone(), values: set.gather(dense) }
     }
 
+    /// Canonicalize a `(index, value)` write log: sorted, deduplicated
+    /// with the **last** write to an index winning (strategies may drop
+    /// then regrow the same position in one refresh). Values are
+    /// absolute, so replaying a slice is idempotent.
+    pub fn from_writes(domain: usize, writes: &[(u32, f32)]) -> SparseSlice {
+        let mut log: Vec<(usize, u32, f32)> = writes
+            .iter()
+            .enumerate()
+            .map(|(ord, &(i, v))| (ord, i, v))
+            .collect();
+        // stable order: by index, then by original position — so the
+        // last write to each index is the last entry of its run
+        log.sort_by_key(|&(ord, i, _)| (i, ord));
+        let mut indices: Vec<u32> = Vec::with_capacity(log.len());
+        let mut values: Vec<f32> = Vec::with_capacity(log.len());
+        for &(_, i, v) in &log {
+            if indices.last() == Some(&i) {
+                *values.last_mut().expect("parallel to indices") = v;
+            } else {
+                indices.push(i);
+                values.push(v);
+            }
+        }
+        let indices = SparseSet::from_sorted(domain, indices)
+            .expect("sorted deduplicated in-domain writes");
+        SparseSlice { indices, values }
+    }
+
     pub fn from_parts(indices: SparseSet, values: Vec<f32>) -> Result<SparseSlice> {
         if indices.len() != values.len() {
             bail!(
@@ -372,6 +400,21 @@ mod tests {
         let d = SparseSet::from_dense_mask(&[1.0, 0.0, 0.5, 0.0]);
         assert_eq!(d.indices(), &[0, 2]);
         assert_eq!(d.domain(), 4);
+    }
+
+    #[test]
+    fn from_writes_sorts_and_keeps_the_last_write() {
+        let s = SparseSlice::from_writes(
+            8,
+            &[(5, 1.0), (2, -3.0), (5, 7.5), (0, 0.25), (2, 4.0)],
+        );
+        assert_eq!(s.indices.indices(), &[0, 2, 5]);
+        assert_eq!(s.values, vec![0.25, 4.0, 7.5]);
+        let empty = SparseSlice::from_writes(4, &[]);
+        assert!(empty.is_empty());
+        let mut out = vec![9.0f32; 8];
+        s.scatter_into(&mut out);
+        assert_eq!(out, vec![0.25, 9.0, 4.0, 9.0, 9.0, 7.5, 9.0, 9.0]);
     }
 
     #[test]

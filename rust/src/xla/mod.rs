@@ -43,6 +43,45 @@
 //! sums bit-for-bit whenever the shards align with the tree (sizes and
 //! replica counts that are powers of two). Interconnect traffic is
 //! metered separately from host↔device traffic (`ar_bytes`/`ar_calls`).
+//!
+//! # Sparse kernels
+//!
+//! Every execution runs in one of two kernel modes ([`KernelMode`]):
+//! the **dense** reference, which materializes every intermediate and
+//! evaluates masked ops element-by-element over the full domain, and
+//! the **sparse** kernels (the default; `TOPKAST_KERNEL=dense` or
+//! [`PjRtClient::with_kernel`] selects), which do O(nnz) work by
+//! exploiting the index-set sidecar that mask buffers carry
+//! ([`PjRtClient::mask_from_indices`] attaches it,
+//! [`PjRtBuffer::scatter_mask_update`] maintains it through deltas).
+//! Three mask-aware ops make sparsity expressible in graphs:
+//! [`XlaOp::select`] (value on the mask, exact +0.0 off it),
+//! [`XlaOp::scatter_add`] (base + update on the mask, a bit-identical
+//! copy of base off it), and [`XlaBuilder::masked_matmul`] (the
+//! gather-matmul: only weight entries on the forward set contribute).
+//!
+//! **Determinism contract** — pinned by `rust/tests/sparse_compute.rs`:
+//!
+//! * *Canonical reduction order.* Every sum — reductions, matmul
+//!   contractions, all-reduces — is the recursive-halving pairwise
+//!   tree splitting at `ceil(n/2)`, over the full index domain. The
+//!   sparse kernels never reorder it: they only replace subtrees whose
+//!   every term is known to be exactly +0.0 with the literal +0.0
+//!   (`+0.0 + +0.0 = +0.0`, so the pruned tree's combining additions
+//!   see bit-identical operands). Dense and sparse kernels therefore
+//!   agree bitwise on every output element.
+//! * *Fixed partitioning.* Multi-threaded execution splits elementwise
+//!   work by output element (each element's value is a pure function
+//!   of the inputs) and reductions along the canonical tree itself
+//!   (left subtree to a spawned worker, right on the caller), so
+//!   results are bit-identical at any thread count
+//!   (`TOPKAST_THREADS` / [`PjRtClient::with_threads`], clamped to
+//!   `[1, MAX_THREADS]`).
+//! * *Measured work.* Each client counts the multiply-adds its matmul
+//!   kernels actually perform ([`PjRtClient::kernel_macs`]) — the same
+//!   count in both kernel modes (the dense reference multiplies only
+//!   active terms), which is what lets `sparsity/flops.rs` predictions
+//!   be pinned to the implementation exactly.
 
 use std::cell::RefCell;
 use std::path::Path;
@@ -51,6 +90,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
+
+use crate::tensor::SparseSet;
 
 // ---------------------------------------------------------------------------
 // element types
@@ -267,6 +308,151 @@ fn pairwise_sum_across(vals: &[&[f32]], j: usize) -> f32 {
 }
 
 // ---------------------------------------------------------------------------
+// kernel mode + deterministic parallelism
+// ---------------------------------------------------------------------------
+
+/// Which executor a client's graph executions use. Both produce
+/// bit-identical results (see the module docs' determinism contract);
+/// `Sparse` does O(nnz) work where masks carry index-set sidecars.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Dense reference: every intermediate materialized over the full
+    /// domain, masked terms evaluated element-by-element.
+    Dense,
+    /// O(nnz) kernels: gather-matmul over the mask's index set, lazy
+    /// per-element evaluation under `select`/`scatter_add`, pruned
+    /// canonical reductions.
+    Sparse,
+}
+
+impl KernelMode {
+    /// Stable lowercase name (bench/CI records).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelMode::Dense => "dense",
+            KernelMode::Sparse => "sparse",
+        }
+    }
+}
+
+/// Upper bound on execution threads per client — far above any host
+/// this sim targets, but finite so a typo'd env var fails soft.
+pub const MAX_THREADS: usize = 64;
+
+/// Per-element work below which an op stays single-threaded: thread
+/// spawn/join overhead swamps anything smaller. Scheduling never
+/// affects bits (the partitioning is per output element), only speed.
+const PAR_THRESHOLD_WORK: usize = 32_768;
+
+/// Kernel choice from the environment: `TOPKAST_KERNEL=dense` selects
+/// the dense reference, anything else (including unset) the sparse
+/// kernels.
+fn env_kernel() -> KernelMode {
+    match std::env::var("TOPKAST_KERNEL") {
+        Ok(v) if v.trim().eq_ignore_ascii_case("dense") => KernelMode::Dense,
+        _ => KernelMode::Sparse,
+    }
+}
+
+/// Thread count from `TOPKAST_THREADS` (clamped to `[1, MAX_THREADS]`);
+/// defaults to the host's available parallelism, capped at 8 so a big
+/// CI box doesn't oversubscribe tiny graphs.
+fn env_threads() -> usize {
+    match std::env::var("TOPKAST_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+    {
+        Some(n) => n.clamp(1, MAX_THREADS),
+        None => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(8),
+    }
+}
+
+/// Deterministic parallel elementwise fill: `out[i] = f(i)`. Work is
+/// split into fixed contiguous chunks (one per thread); every element
+/// is a pure function of its index, so the result is bit-identical to
+/// the sequential fill at any thread count.
+fn par_fill(threads: usize, len: usize, f: impl Fn(usize) -> f32 + Sync) -> Vec<f32> {
+    if threads <= 1 || len < 2 {
+        return (0..len).map(f).collect();
+    }
+    let chunk = len.div_ceil(threads);
+    let mut out = vec![0.0f32; len];
+    std::thread::scope(|s| {
+        for (ci, slot) in out.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                let base = ci * chunk;
+                for (off, v) in slot.iter_mut().enumerate() {
+                    *v = f(base + off);
+                }
+            });
+        }
+    });
+    out
+}
+
+/// Parallel canonical pairwise sum: splits at the same `ceil(n/2)`
+/// point as [`pairwise_sum`], hands the left subtree to a spawned
+/// worker, and combines in the same left+right order — bit-identical
+/// to the sequential tree at any thread count.
+fn pairwise_sum_par(v: &[f32], threads: usize) -> f32 {
+    if threads <= 1 || v.len() < PAR_THRESHOLD_WORK {
+        return pairwise_sum(v);
+    }
+    let m = v.len().div_ceil(2);
+    let (a, b) = v.split_at(m);
+    let half = threads / 2;
+    std::thread::scope(|s| {
+        let left = s.spawn(move || pairwise_sum_par(a, threads - half));
+        let right = pairwise_sum_par(b, half);
+        left.join().expect("reduction worker panicked") + right
+    })
+}
+
+/// Canonical pairwise sum over the index range `[lo, hi)` where only
+/// the (sorted, in-range) `active` positions contribute `term(f)`;
+/// every other position is exactly +0.0. Bit-identical to
+/// [`pairwise_sum`] over the dense term vector: an all-inactive
+/// subtree's full tree sums literal +0.0s to exactly +0.0, so
+/// returning the literal without descending leaves every remaining
+/// combining addition's operands unchanged.
+fn masked_pairwise<F: Fn(usize) -> f32>(
+    lo: usize,
+    hi: usize,
+    active: &[u32],
+    term: &F,
+) -> f32 {
+    if active.is_empty() {
+        return 0.0;
+    }
+    if hi - lo == 1 {
+        return term(lo);
+    }
+    let mid = lo + (hi - lo).div_ceil(2);
+    let split = active.partition_point(|&f| (f as usize) < mid);
+    masked_pairwise(lo, mid, &active[..split], term)
+        + masked_pairwise(mid, hi, &active[split..], term)
+}
+
+/// [`masked_pairwise`] specialized to a sparse value (positional
+/// `vals` parallel to the sorted `idx`), reducing over `[lo, hi)`.
+fn sparse_pairwise(lo: usize, hi: usize, idx: &[u32], vals: &[f32]) -> f32 {
+    if idx.is_empty() {
+        return 0.0;
+    }
+    if hi - lo == 1 {
+        return vals[0];
+    }
+    let mid = lo + (hi - lo).div_ceil(2);
+    let split = idx.partition_point(|&j| (j as usize) < mid);
+    sparse_pairwise(lo, mid, &idx[..split], &vals[..split])
+        + sparse_pairwise(mid, hi, &idx[split..], &vals[split..])
+}
+
+// ---------------------------------------------------------------------------
 // client / buffers / literals
 // ---------------------------------------------------------------------------
 
@@ -281,6 +467,13 @@ pub const MAX_SIM_DEVICES: usize = 64;
 pub struct PjRtClient {
     /// One transfer meter per simulated device.
     devices: Arc<Vec<Arc<TransferStats>>>,
+    /// Which executor graph executions use (see module docs).
+    kernel: KernelMode,
+    /// Execution thread budget (results are thread-count invariant).
+    threads: usize,
+    /// Multiply-adds the matmul kernels actually performed, shared by
+    /// every clone of this client.
+    macs: Arc<AtomicU64>,
 }
 
 impl PjRtClient {
@@ -289,7 +482,11 @@ impl PjRtClient {
     }
 
     /// A client simulating `devices` addressable devices (each with its
-    /// own transfer meter).
+    /// own transfer meter). Kernel mode and thread budget come from the
+    /// environment (`TOPKAST_KERNEL` / `TOPKAST_THREADS`) so every
+    /// backend built on this client — sim, strict, faulty — inherits
+    /// them; [`Self::with_kernel`] / [`Self::with_threads`] override
+    /// programmatically.
     pub fn cpu_with_devices(devices: usize) -> Result<PjRtClient> {
         if devices == 0 {
             bail!("a PJRT client needs at least one device");
@@ -304,7 +501,45 @@ impl PjRtClient {
             devices: Arc::new(
                 (0..devices).map(|_| Arc::new(TransferStats::default())).collect(),
             ),
+            kernel: env_kernel(),
+            threads: env_threads(),
+            macs: Arc::new(AtomicU64::new(0)),
         })
+    }
+
+    /// This client with the given kernel mode (builder-style).
+    pub fn with_kernel(mut self, kernel: KernelMode) -> PjRtClient {
+        self.kernel = kernel;
+        self
+    }
+
+    /// This client with the given thread budget (builder-style,
+    /// clamped to `[1, MAX_THREADS]`).
+    pub fn with_threads(mut self, threads: usize) -> PjRtClient {
+        self.threads = threads.clamp(1, MAX_THREADS);
+        self
+    }
+
+    /// The kernel mode executions on this client use.
+    pub fn kernel(&self) -> KernelMode {
+        self.kernel
+    }
+
+    /// The execution thread budget.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Multiply-adds the matmul kernels performed since construction
+    /// (or the last [`Self::reset_kernel_macs`]) — identical in both
+    /// kernel modes, shared across clones.
+    pub fn kernel_macs(&self) -> u64 {
+        self.macs.load(Ordering::Relaxed)
+    }
+
+    /// Zero the measured multiply-add counter.
+    pub fn reset_kernel_macs(&self) {
+        self.macs.store(0, Ordering::Relaxed);
     }
 
     pub fn platform_name(&self) -> String {
@@ -348,6 +583,7 @@ impl PjRtClient {
             data: Arc::new(T::wrap(data.to_vec())),
             stats: stats.clone(),
             device,
+            mask_set: None,
         })
     }
 
@@ -375,6 +611,11 @@ impl PjRtClient {
             data: Arc::new(Storage::F32(dense)),
             stats: stats.clone(),
             device,
+            // index-set sidecar: what the sparse kernels key off
+            mask_set: Some(Arc::new(SparseSet::from_sorted(
+                numel,
+                indices.to_vec(),
+            )?)),
         })
     }
 
@@ -451,6 +692,7 @@ impl PjRtClient {
                     data: Arc::clone(&data),
                     stats: buf.stats.clone(),
                     device: buf.device,
+                    mask_set: None,
                 })
             })
             .collect()
@@ -464,6 +706,11 @@ pub struct PjRtBuffer {
     stats: Arc<TransferStats>,
     /// The simulated device this buffer lives on.
     device: usize,
+    /// Index-set sidecar for mask buffers. Invariant: when present,
+    /// the dense payload is exactly 1.0 at the set's indices and
+    /// exactly 0.0 everywhere else — the sparse kernels rely on
+    /// membership and the dense `!= 0.0` test agreeing bitwise.
+    mask_set: Option<Arc<SparseSet>>,
 }
 
 impl PjRtBuffer {
@@ -511,10 +758,20 @@ impl PjRtBuffer {
         for &i in added {
             dense[i as usize] = 1.0;
         }
+        // keep the index-set sidecar in lockstep with the dense payload
+        let mask_set = match &self.mask_set {
+            Some(set) => {
+                let rem = SparseSet::from_sorted(n, removed.to_vec())?;
+                let add = SparseSet::from_sorted(n, added.to_vec())?;
+                Some(Arc::new(set.diff(&rem).union(&add)))
+            }
+            None => None,
+        };
         Ok(PjRtBuffer {
             data: Arc::new(Storage::F32(dense)),
             stats: self.stats.clone(),
             device: self.device,
+            mask_set,
         })
     }
 
@@ -549,10 +806,12 @@ impl PjRtBuffer {
         for (&i, &v) in indices.iter().zip(values) {
             dense[i as usize] = v;
         }
+        // arbitrary values break the 0/1 mask invariant: drop the sidecar
         Ok(PjRtBuffer {
             data: Arc::new(Storage::F32(dense)),
             stats: self.stats.clone(),
             device: self.device,
+            mask_set: None,
         })
     }
 
@@ -682,6 +941,15 @@ enum Node {
     Binary { op: BinOp, a: usize, b: usize },
     ReduceSum { a: usize },
     Mean { a: usize },
+    /// `out[i] = a[i]` where the mask is active, exact +0.0 elsewhere.
+    Select { mask: usize, a: usize },
+    /// `out[i] = base[i] + a[i]` where the mask is active, a
+    /// bit-identical copy of `base[i]` elsewhere.
+    ScatterAdd { base: usize, mask: usize, a: usize },
+    /// `out[i·n + o]` = canonical pairwise sum over `f ∈ 0..k` of
+    /// `mask[f·n + o] active ? x[i·k + f] · w[f·n + o] : +0.0`.
+    /// A 1-element `x` with `m == 1` broadcasts as a constant row.
+    MaskedMatmul { x: usize, w: usize, mask: usize, m: usize, k: usize, n: usize },
     Tuple { parts: Vec<usize> },
 }
 
@@ -701,6 +969,9 @@ impl Graph {
             Node::ConstantF32 { .. } => 1,
             Node::Binary { a, b, .. } => self.numel(*a).max(self.numel(*b)),
             Node::ReduceSum { .. } | Node::Mean { .. } => 1,
+            Node::Select { a, .. } => self.numel(*a),
+            Node::ScatterAdd { base, .. } => self.numel(*base),
+            Node::MaskedMatmul { m, n, .. } => m * n,
             Node::Tuple { parts } => parts.len(),
         }
     }
@@ -721,13 +992,61 @@ impl Graph {
                 bail!("{}: parameter indices not dense: {:?}", self.name, indices);
             }
         }
-        // binary shapes must match or broadcast from a scalar
-        for n in &self.nodes {
-            if let Node::Binary { a, b, .. } = n {
-                let (na, nb) = (self.numel(*a), self.numel(*b));
-                if na != nb && na != 1 && nb != 1 {
-                    bail!("{}: binary op over {na} vs {nb} elements", self.name);
+        // operand shapes must line up (scalars broadcast in binary ops)
+        for node in &self.nodes {
+            match node {
+                Node::Binary { a, b, .. } => {
+                    let (na, nb) = (self.numel(*a), self.numel(*b));
+                    if na != nb && na != 1 && nb != 1 {
+                        bail!("{}: binary op over {na} vs {nb} elements", self.name);
+                    }
                 }
+                Node::Select { mask, a } => {
+                    let (nm, na) = (self.numel(*mask), self.numel(*a));
+                    if nm != na {
+                        bail!(
+                            "{}: select mask has {nm} elements, value {na}",
+                            self.name
+                        );
+                    }
+                }
+                Node::ScatterAdd { base, mask, a } => {
+                    let (nb, nm, na) =
+                        (self.numel(*base), self.numel(*mask), self.numel(*a));
+                    if nb != nm || nb != na {
+                        bail!(
+                            "{}: scatter_add over {nb}/{nm}/{na} elements \
+                             (base/mask/update must agree)",
+                            self.name
+                        );
+                    }
+                }
+                Node::MaskedMatmul { x, w, mask, m, k, n } => {
+                    let (nx, nw, nm) =
+                        (self.numel(*x), self.numel(*w), self.numel(*mask));
+                    if nw != k * n {
+                        bail!(
+                            "{}: masked_matmul weights have {nw} elements, \
+                             want {k}x{n}",
+                            self.name
+                        );
+                    }
+                    if nm != k * n {
+                        bail!(
+                            "{}: masked_matmul mask has {nm} elements, \
+                             want {k}x{n}",
+                            self.name
+                        );
+                    }
+                    if nx != m * k && !(nx == 1 && *m == 1) {
+                        bail!(
+                            "{}: masked_matmul input has {nx} elements, \
+                             want {m}x{k} (or a scalar row with m == 1)",
+                            self.name
+                        );
+                    }
+                }
+                _ => {}
             }
         }
         Ok(())
@@ -740,99 +1059,493 @@ impl Graph {
             .count()
     }
 
-    fn execute(
-        &self,
-        args: &[&PjRtBuffer],
-        client: &PjRtClient,
-        device: usize,
-    ) -> Result<PjRtBuffer> {
-        let stats = client.device_stats(device)?.clone();
-        let mut values: Vec<Option<Arc<Storage>>> = vec![None; self.nodes.len()];
-        for (id, node) in self.nodes.iter().enumerate() {
-            let v: Arc<Storage> = match node {
-                Node::Parameter { index, numel, ty } => {
-                    let arg = args
-                        .get(*index)
-                        .with_context(|| format!("{}: missing arg {index}", self.name))?;
-                    if arg.element_count() != *numel {
-                        bail!(
-                            "{}: parameter {index}: {} elements != declared {numel}",
-                            self.name,
-                            arg.element_count()
-                        );
+    fn execute(&self, args: &[&PjRtBuffer], ctx: &ExecCtx) -> Result<PjRtBuffer> {
+        let mut ex = Executor {
+            graph: self,
+            args,
+            ctx,
+            values: vec![None; self.nodes.len()],
+            macs: 0,
+        };
+        match ctx.kernel {
+            KernelMode::Dense => {
+                // the dense reference walks every node in order, like
+                // the executor it replaces
+                for id in 0..self.nodes.len() {
+                    ex.force(id)?;
+                }
+            }
+            KernelMode::Sparse => {
+                // validate every declared parameter up front so both
+                // kernels reject bad arguments identically, then
+                // evaluate only what the root needs
+                for node in &self.nodes {
+                    if let Node::Parameter { index, numel, ty } = node {
+                        ex.check_param(*index, *numel, *ty)?;
                     }
-                    if arg.value().ty() != Some(*ty) {
-                        bail!("{}: parameter {index}: dtype mismatch", self.name);
-                    }
-                    // alias the device memory — no copy per execution
-                    Arc::clone(&arg.data)
                 }
-                Node::ConstantF32 { value } => Arc::new(Storage::F32(vec![*value])),
-                Node::Binary { op, a, b } => {
-                    let va = as_f32(&values, *a, &self.name)?;
-                    let vb = as_f32(&values, *b, &self.name)?;
-                    Arc::new(Storage::F32(apply_binary(*op, va, vb)))
-                }
-                Node::ReduceSum { a } => {
-                    // canonical pairwise tree — see `pairwise_sum` for
-                    // why the order matters (replica composition)
-                    let va = as_f32(&values, *a, &self.name)?;
-                    Arc::new(Storage::F32(vec![pairwise_sum(va)]))
-                }
-                Node::Mean { a } => {
-                    let va = as_f32(&values, *a, &self.name)?;
-                    let n = va.len().max(1) as f32;
-                    Arc::new(Storage::F32(vec![pairwise_sum(va) / n]))
-                }
-                Node::Tuple { parts } => {
-                    let bufs = parts
-                        .iter()
-                        .map(|&p| {
-                            Ok(PjRtBuffer {
-                                data: values[p]
-                                    .clone()
-                                    .context("tuple part not evaluated")?,
-                                stats: stats.clone(),
-                                device,
-                            })
-                        })
-                        .collect::<Result<Vec<_>>>()?;
-                    Arc::new(Storage::Tuple(bufs))
-                }
-            };
-            values[id] = Some(v);
+                ex.force(self.root)?;
+            }
         }
+        ctx.macs.fetch_add(ex.macs, Ordering::Relaxed);
+        let data = ex.densify(self.root)?;
         Ok(PjRtBuffer {
-            data: values[self.root].clone().context("root not evaluated")?,
-            stats,
-            device,
+            data,
+            stats: ctx.stats.clone(),
+            device: ctx.device,
+            mask_set: None,
         })
     }
 }
 
-fn as_f32<'a>(
-    values: &'a [Option<Arc<Storage>>],
-    id: usize,
-    name: &str,
-) -> Result<&'a [f32]> {
-    match values[id].as_deref() {
-        Some(Storage::F32(v)) => Ok(v),
-        Some(_) => bail!("{name}: arithmetic on non-f32 value"),
-        None => bail!("{name}: operand evaluated out of order"),
+/// Per-execution context: where results land, which kernels run, how
+/// many threads they may use, and where measured work is flushed.
+struct ExecCtx {
+    stats: Arc<TransferStats>,
+    device: usize,
+    kernel: KernelMode,
+    threads: usize,
+    macs: Arc<AtomicU64>,
+}
+
+/// An evaluated node value.
+#[derive(Clone)]
+enum KVal {
+    /// Dense storage; `set` carries a parameter buffer's mask sidecar
+    /// through (only ever `Some` on 0/1 mask buffers — see
+    /// `PjRtBuffer::mask_set`).
+    Dense { data: Arc<Storage>, set: Option<Arc<SparseSet>> },
+    /// A value whose dense counterpart is exactly +0.0 off `set`;
+    /// `vals[p]` pairs with `set.indices()[p]`.
+    Sparse { domain: usize, set: Arc<SparseSet>, vals: Vec<f32> },
+}
+
+/// One graph execution's state: memoized node values plus the
+/// multiply-add tally (flushed to the client counter once at the end).
+struct Executor<'a> {
+    graph: &'a Graph,
+    args: &'a [&'a PjRtBuffer],
+    ctx: &'a ExecCtx,
+    values: Vec<Option<KVal>>,
+    macs: u64,
+}
+
+impl<'a> Executor<'a> {
+    fn check_param(
+        &self,
+        index: usize,
+        numel: usize,
+        ty: ElemType,
+    ) -> Result<&'a PjRtBuffer> {
+        let arg = self.args.get(index).with_context(|| {
+            format!("{}: missing arg {index}", self.graph.name)
+        })?;
+        if arg.element_count() != numel {
+            bail!(
+                "{}: parameter {index}: {} elements != declared {numel}",
+                self.graph.name,
+                arg.element_count()
+            );
+        }
+        if arg.value().ty() != Some(ty) {
+            bail!("{}: parameter {index}: dtype mismatch", self.graph.name);
+        }
+        Ok(*arg)
+    }
+
+    /// The index-set sidecar the sparse kernels key off, when the mask
+    /// operand carries one. Dense mode never uses sidecars: both
+    /// kernels then walk identical element-by-element code.
+    fn sidecar(&self, mask: usize) -> Option<Arc<SparseSet>> {
+        if self.ctx.kernel != KernelMode::Sparse {
+            return None;
+        }
+        match self.values[mask].as_ref() {
+            Some(KVal::Dense { set: Some(s), .. }) => Some(Arc::clone(s)),
+            _ => None,
+        }
+    }
+
+    /// Fully evaluate node `id` (memoized).
+    fn force(&mut self, id: usize) -> Result<()> {
+        if self.values[id].is_some() {
+            return Ok(());
+        }
+        let node = self.graph.nodes[id].clone();
+        let val = match node {
+            Node::Parameter { index, numel, ty } => {
+                let arg = self.check_param(index, numel, ty)?;
+                // alias the device memory — no copy per execution
+                KVal::Dense {
+                    data: Arc::clone(&arg.data),
+                    set: arg.mask_set.clone(),
+                }
+            }
+            Node::ConstantF32 { value } => KVal::Dense {
+                data: Arc::new(Storage::F32(vec![value])),
+                set: None,
+            },
+            Node::Binary { op, a, b } => {
+                self.force(a)?;
+                self.force(b)?;
+                // a same-node square keeps sparsity: (+0.0)² = +0.0. A
+                // general product does not (+0.0·c is -0.0 for negative
+                // c), so everything else goes through the dense path.
+                let square = if matches!(op, BinOp::Mul) && a == b {
+                    match self.values[a].as_ref() {
+                        Some(KVal::Sparse { domain, set, vals }) => {
+                            Some(KVal::Sparse {
+                                domain: *domain,
+                                set: Arc::clone(set),
+                                vals: vals.iter().map(|&v| v * v).collect(),
+                            })
+                        }
+                        _ => None,
+                    }
+                } else {
+                    None
+                };
+                match square {
+                    Some(v) => v,
+                    None => {
+                        let da = self.densify(a)?;
+                        let db = self.densify(b)?;
+                        let va = expect_f32(&da, &self.graph.name)?;
+                        let vb = expect_f32(&db, &self.graph.name)?;
+                        KVal::Dense {
+                            data: Arc::new(Storage::F32(apply_binary(
+                                op,
+                                va,
+                                vb,
+                                self.ctx.threads,
+                            ))),
+                            set: None,
+                        }
+                    }
+                }
+            }
+            Node::ReduceSum { a } => {
+                // canonical pairwise tree — see `pairwise_sum` for why
+                // the order matters (replica composition)
+                self.force(a)?;
+                let total = self.reduce_value(a)?;
+                KVal::Dense {
+                    data: Arc::new(Storage::F32(vec![total])),
+                    set: None,
+                }
+            }
+            Node::Mean { a } => {
+                self.force(a)?;
+                let total = self.reduce_value(a)?;
+                let n = self.graph.numel(a).max(1) as f32;
+                KVal::Dense {
+                    data: Arc::new(Storage::F32(vec![total / n])),
+                    set: None,
+                }
+            }
+            Node::Select { mask, a } => {
+                self.force(mask)?;
+                if let Some(set) = self.sidecar(mask) {
+                    // O(nnz): evaluate the operand only on the set
+                    self.prepare_eval(a)?;
+                    let vals = set
+                        .indices()
+                        .iter()
+                        .map(|&j| self.eval_at(a, j as usize))
+                        .collect::<Result<Vec<f32>>>()?;
+                    KVal::Sparse { domain: self.graph.numel(id), set, vals }
+                } else {
+                    self.force(a)?;
+                    let md = self.densify(mask)?;
+                    let ad = self.densify(a)?;
+                    let mv = expect_f32(&md, &self.graph.name)?;
+                    let av = expect_f32(&ad, &self.graph.name)?;
+                    let threads = if av.len() >= PAR_THRESHOLD_WORK {
+                        self.ctx.threads
+                    } else {
+                        1
+                    };
+                    let out = par_fill(threads, av.len(), |i| {
+                        if mv[i] != 0.0 {
+                            av[i]
+                        } else {
+                            0.0
+                        }
+                    });
+                    KVal::Dense { data: Arc::new(Storage::F32(out)), set: None }
+                }
+            }
+            Node::ScatterAdd { base, mask, a } => {
+                self.force(base)?;
+                self.force(mask)?;
+                let bd = self.densify(base)?;
+                let base_vals = expect_f32(&bd, &self.graph.name)?.to_vec();
+                let out = if let Some(set) = self.sidecar(mask) {
+                    // O(nnz) adds: copy the base (0 FLOPs), add the
+                    // lazily-evaluated update only on the set
+                    self.prepare_eval(a)?;
+                    let mut out = base_vals;
+                    for &j in set.indices() {
+                        let j = j as usize;
+                        out[j] += self.eval_at(a, j)?;
+                    }
+                    out
+                } else {
+                    self.force(a)?;
+                    let md = self.densify(mask)?;
+                    let ad = self.densify(a)?;
+                    let mv = expect_f32(&md, &self.graph.name)?;
+                    let av = expect_f32(&ad, &self.graph.name)?;
+                    let bv = &base_vals;
+                    let threads = if bv.len() >= PAR_THRESHOLD_WORK {
+                        self.ctx.threads
+                    } else {
+                        1
+                    };
+                    par_fill(threads, bv.len(), |i| {
+                        if mv[i] != 0.0 {
+                            bv[i] + av[i]
+                        } else {
+                            bv[i]
+                        }
+                    })
+                };
+                KVal::Dense { data: Arc::new(Storage::F32(out)), set: None }
+            }
+            Node::MaskedMatmul { x, w, mask, m, k, n } => {
+                self.force(x)?;
+                self.force(w)?;
+                self.force(mask)?;
+                let xd = self.densify(x)?;
+                let wd = self.densify(w)?;
+                let xv = expect_f32(&xd, &self.graph.name)?;
+                let wv = expect_f32(&wd, &self.graph.name)?;
+                let scalar_x = xv.len() == 1;
+                let (out, nnz) = if let Some(set) = self.sidecar(mask) {
+                    // gather-matmul: group the active (f, o) entries by
+                    // output column — the per-column row lists inherit
+                    // the set's sorted order — then take the pruned
+                    // canonical tree over each output element
+                    let mut cols: Vec<Vec<u32>> = vec![Vec::new(); n];
+                    for &j in set.indices() {
+                        cols[j as usize % n].push(j / n as u32);
+                    }
+                    let threads =
+                        if m.saturating_mul(set.len()) >= PAR_THRESHOLD_WORK {
+                            self.ctx.threads
+                        } else {
+                            1
+                        };
+                    let cols = &cols;
+                    let out = par_fill(threads, m * n, |e| {
+                        let (i, o) = (e / n, e % n);
+                        let term = |f: usize| {
+                            let xval = if scalar_x { xv[0] } else { xv[i * k + f] };
+                            xval * wv[f * n + o]
+                        };
+                        masked_pairwise(0, k, &cols[o], &term)
+                    });
+                    (out, set.len() as u64)
+                } else {
+                    // dense reference: every term materialized, masked
+                    // entries contributing literal +0.0
+                    let md = self.densify(mask)?;
+                    let mv = expect_f32(&md, &self.graph.name)?;
+                    let nnz = mv.iter().filter(|&&v| v != 0.0).count() as u64;
+                    let work = m.saturating_mul(k).saturating_mul(n);
+                    let threads = if work >= PAR_THRESHOLD_WORK {
+                        self.ctx.threads
+                    } else {
+                        1
+                    };
+                    let out = par_fill(threads, m * n, |e| {
+                        let (i, o) = (e / n, e % n);
+                        let terms: Vec<f32> = (0..k)
+                            .map(|f| {
+                                if mv[f * n + o] != 0.0 {
+                                    let xval =
+                                        if scalar_x { xv[0] } else { xv[i * k + f] };
+                                    xval * wv[f * n + o]
+                                } else {
+                                    0.0
+                                }
+                            })
+                            .collect();
+                        pairwise_sum(&terms)
+                    });
+                    (out, nnz)
+                };
+                // analytic multiply-add count — m rows, one MAC per
+                // active mask entry, identical in both kernel modes
+                self.macs += m as u64 * nnz;
+                KVal::Dense { data: Arc::new(Storage::F32(out)), set: None }
+            }
+            Node::Tuple { parts } => {
+                let mut bufs = Vec::with_capacity(parts.len());
+                for &p in &parts {
+                    self.force(p)?;
+                    bufs.push(PjRtBuffer {
+                        data: self.densify(p)?,
+                        stats: self.ctx.stats.clone(),
+                        device: self.ctx.device,
+                        mask_set: None,
+                    });
+                }
+                KVal::Dense { data: Arc::new(Storage::Tuple(bufs)), set: None }
+            }
+        };
+        self.values[id] = Some(val);
+        Ok(())
+    }
+
+    /// Canonical pairwise reduction of a forced value — pruned (but
+    /// bit-identical, see `sparse_pairwise`) when the value is sparse.
+    fn reduce_value(&mut self, a: usize) -> Result<f32> {
+        if let Some(KVal::Sparse { domain, set, vals }) = self.values[a].as_ref() {
+            return Ok(sparse_pairwise(0, *domain, set.indices(), vals));
+        }
+        let da = self.densify(a)?;
+        let va = expect_f32(&da, &self.graph.name)?;
+        Ok(pairwise_sum_par(va, self.ctx.threads))
+    }
+
+    /// A dense storage view of a forced value, expanding (and caching)
+    /// a sparse one — exact by the `KVal::Sparse` invariant.
+    fn densify(&mut self, id: usize) -> Result<Arc<Storage>> {
+        match self.values[id].as_ref() {
+            Some(KVal::Dense { data, .. }) => Ok(Arc::clone(data)),
+            Some(KVal::Sparse { domain, set, vals }) => {
+                let mut dense = vec![0.0f32; *domain];
+                for (p, &j) in set.indices().iter().enumerate() {
+                    dense[j as usize] = vals[p];
+                }
+                let data = Arc::new(Storage::F32(dense));
+                self.values[id] =
+                    Some(KVal::Dense { data: Arc::clone(&data), set: None });
+                Ok(data)
+            }
+            None => bail!("{}: operand evaluated out of order", self.graph.name),
+        }
+    }
+
+    /// Make node `id` evaluable per element (`eval_at`) without
+    /// materializing it: parameters, constants, scalars, masks and
+    /// anything without a cheap per-element form are forced;
+    /// elementwise expression trees stay lazy.
+    fn prepare_eval(&mut self, id: usize) -> Result<()> {
+        if self.values[id].is_some() {
+            return Ok(());
+        }
+        let node = self.graph.nodes[id].clone();
+        match node {
+            Node::Parameter { .. } | Node::ConstantF32 { .. } => self.force(id),
+            Node::Binary { a, b, .. } => {
+                if self.graph.numel(id) == 1 {
+                    self.force(id)
+                } else {
+                    self.prepare_eval(a)?;
+                    self.prepare_eval(b)
+                }
+            }
+            Node::Select { mask, a } => {
+                self.force(mask)?;
+                self.prepare_eval(a)
+            }
+            _ => self.force(id),
+        }
+    }
+
+    /// One element of a prepared node — pure (`&self`), performing
+    /// exactly the arithmetic the dense evaluator would for this
+    /// element.
+    fn eval_at(&self, id: usize, i: usize) -> Result<f32> {
+        if let Some(v) = self.values[id].as_ref() {
+            return self.read_elem(v, i);
+        }
+        match &self.graph.nodes[id] {
+            Node::ConstantF32 { value } => Ok(*value),
+            Node::Binary { op, a, b } => {
+                let ia = if self.graph.numel(*a) == 1 { 0 } else { i };
+                let ib = if self.graph.numel(*b) == 1 { 0 } else { i };
+                let x = self.eval_at(*a, ia)?;
+                let y = self.eval_at(*b, ib)?;
+                Ok(match op {
+                    BinOp::Add => x + y,
+                    BinOp::Sub => x - y,
+                    BinOp::Mul => x * y,
+                    BinOp::Div => x / y,
+                })
+            }
+            Node::Select { mask, a } => {
+                if self.mask_active(*mask, i)? {
+                    self.eval_at(*a, i)
+                } else {
+                    Ok(0.0)
+                }
+            }
+            _ => bail!(
+                "{}: node not prepared for lazy evaluation",
+                self.graph.name
+            ),
+        }
+    }
+
+    fn read_elem(&self, v: &KVal, i: usize) -> Result<f32> {
+        match v {
+            KVal::Dense { data, .. } => match data.as_ref() {
+                Storage::F32(vals) => Ok(vals[if vals.len() == 1 { 0 } else { i }]),
+                _ => bail!("{}: arithmetic on non-f32 value", self.graph.name),
+            },
+            KVal::Sparse { set, vals, .. } => {
+                Ok(match set.indices().binary_search(&(i as u32)) {
+                    Ok(p) => vals[p],
+                    Err(_) => 0.0,
+                })
+            }
+        }
+    }
+
+    /// Whether a forced mask operand is active at element `i` — the
+    /// dense `!= 0.0` test, answered from the index set when the mask
+    /// carries one (equivalent by the sidecar invariant).
+    fn mask_active(&self, mask: usize, i: usize) -> Result<bool> {
+        match self.values[mask].as_ref() {
+            Some(KVal::Dense { set: Some(s), .. }) => Ok(s.contains(i as u32)),
+            Some(KVal::Dense { data, .. }) => match data.as_ref() {
+                Storage::F32(v) => Ok(v[if v.len() == 1 { 0 } else { i }] != 0.0),
+                _ => bail!("{}: mask is not f32", self.graph.name),
+            },
+            Some(KVal::Sparse { set, vals, .. }) => {
+                Ok(match set.indices().binary_search(&(i as u32)) {
+                    Ok(p) => vals[p] != 0.0,
+                    Err(_) => false,
+                })
+            }
+            None => bail!("{}: mask evaluated out of order", self.graph.name),
+        }
     }
 }
 
-fn apply_binary(op: BinOp, a: &[f32], b: &[f32]) -> Vec<f32> {
-    let f = |x: f32, y: f32| match op {
+fn expect_f32<'v>(s: &'v Arc<Storage>, name: &str) -> Result<&'v [f32]> {
+    match s.as_ref() {
+        Storage::F32(v) => Ok(v),
+        _ => bail!("{name}: arithmetic on non-f32 value"),
+    }
+}
+
+fn apply_binary(op: BinOp, a: &[f32], b: &[f32], threads: usize) -> Vec<f32> {
+    let f = move |x: f32, y: f32| match op {
         BinOp::Add => x + y,
         BinOp::Sub => x - y,
         BinOp::Mul => x * y,
         BinOp::Div => x / y,
     };
+    let len = a.len().max(b.len());
+    let threads = if len >= PAR_THRESHOLD_WORK { threads } else { 1 };
     match (a.len(), b.len()) {
-        (1, _) => b.iter().map(|&y| f(a[0], y)).collect(),
-        (_, 1) => a.iter().map(|&x| f(x, b[0])).collect(),
-        _ => a.iter().zip(b).map(|(&x, &y)| f(x, y)).collect(),
+        (1, _) => par_fill(threads, len, |i| f(a[0], b[i])),
+        (_, 1) => par_fill(threads, len, |i| f(a[i], b[0])),
+        _ => par_fill(threads, len, |i| f(a[i], b[i])),
     }
 }
 
@@ -930,7 +1643,14 @@ impl PjRtLoadedExecutable {
                 );
             }
         }
-        let out = graph.execute(&refs, &self.client, device)?;
+        let ctx = ExecCtx {
+            stats: self.client.device_stats(device)?.clone(),
+            device,
+            kernel: self.client.kernel,
+            threads: self.client.threads,
+            macs: Arc::clone(&self.client.macs),
+        };
+        let out = graph.execute(&refs, &ctx)?;
         Ok(vec![vec![out]])
     }
 }
@@ -998,6 +1718,34 @@ impl XlaBuilder {
         let ids = parts.iter().map(|p| p.id).collect();
         Ok(self.push(Node::Tuple { parts: ids }))
     }
+
+    /// `x[m,k] @ (w[k,n] ⊙ mask[k,n])`: matmul against a masked weight
+    /// matrix. `x` may also be a scalar broadcast over a single row
+    /// (`m == 1`). The sparse kernel gathers only the mask's active
+    /// weight entries; the dense kernel materializes every term.
+    pub fn masked_matmul(
+        &self,
+        x: &XlaOp,
+        w: &XlaOp,
+        mask: &XlaOp,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> Result<XlaOp> {
+        for op in [x, w, mask] {
+            if !Rc::ptr_eq(&op.builder.0, &self.0) {
+                bail!("masked_matmul operand from a different builder");
+            }
+        }
+        Ok(self.push(Node::MaskedMatmul {
+            x: x.id,
+            w: w.id,
+            mask: mask.id,
+            m,
+            k,
+            n,
+        }))
+    }
 }
 
 impl XlaOp {
@@ -1010,6 +1758,32 @@ impl XlaOp {
 
     pub fn reduce_sum(&self) -> Result<XlaOp> {
         Ok(self.builder.push(Node::ReduceSum { a: self.id }))
+    }
+
+    /// `self ⊙ [mask != 0]`: keep elements where the mask is active,
+    /// exact +0.0 elsewhere. When the mask carries an index-set
+    /// sidecar the sparse kernel evaluates `self` only on the set.
+    pub fn select(&self, mask: &XlaOp) -> Result<XlaOp> {
+        if !Rc::ptr_eq(&self.builder.0, &mask.builder.0) {
+            bail!("select mask from a different builder");
+        }
+        Ok(self.builder.push(Node::Select { mask: mask.id, a: self.id }))
+    }
+
+    /// `self + update` where the mask is active, `self` verbatim
+    /// elsewhere (both kernels copy the base bytes untouched off-mask,
+    /// so -0.0 survives). The sparse kernel does O(nnz) adds.
+    pub fn scatter_add(&self, mask: &XlaOp, update: &XlaOp) -> Result<XlaOp> {
+        for op in [mask, update] {
+            if !Rc::ptr_eq(&self.builder.0, &op.builder.0) {
+                bail!("scatter_add operand from a different builder");
+            }
+        }
+        Ok(self.builder.push(Node::ScatterAdd {
+            base: self.id,
+            mask: mask.id,
+            a: update.id,
+        }))
     }
 
     pub fn mean(&self) -> Result<XlaOp> {
@@ -1414,5 +2188,129 @@ mod tests {
                 .unwrap()
         };
         assert_eq!(run(), run());
+    }
+
+    /// A graph exercising all three mask-aware ops plus the lazy paths
+    /// under them, run on a client with the given kernel/threads.
+    /// Returns every output vector and the measured multiply-adds.
+    fn run_masked_graph(kernel: KernelMode, threads: usize) -> (Vec<Vec<f32>>, u64) {
+        let client = PjRtClient::cpu()
+            .unwrap()
+            .with_kernel(kernel)
+            .with_threads(threads);
+        let b = XlaBuilder::new("sparse_ops");
+        let (m, k, n) = (2usize, 4, 3);
+        let x = b.parameter_s(0, &Shape::array::<f32>(vec![m, k]), "x").unwrap();
+        let w = b.parameter_s(1, &Shape::array::<f32>(vec![k, n]), "w").unwrap();
+        let wm = b.parameter_s(2, &Shape::array::<f32>(vec![k * n]), "wm").unwrap();
+        let theta = b.parameter_s(3, &Shape::array::<f32>(vec![8]), "t").unwrap();
+        let fwd = b.parameter_s(4, &Shape::array::<f32>(vec![8]), "f").unwrap();
+        let z = b.masked_matmul(&x, &w, &wm, m, k, n).unwrap();
+        let act = theta.select(&fwd).unwrap();
+        let sq = (act.clone() * act.clone()).unwrap();
+        let upd = (&theta * b.constant_f32(0.5).unwrap()).unwrap();
+        let stepped = theta
+            .scatter_add(&fwd, &(upd + sq.mean().unwrap()).unwrap())
+            .unwrap();
+        let loss = (z.clone() * z.clone()).unwrap().mean().unwrap();
+        let comp = b.tuple(&[z, act, stepped, loss]).unwrap().build().unwrap();
+        let exe = client.compile(&comp).unwrap();
+        let xs: Vec<f32> = (0..m * k).map(|i| ((i as f32) * 0.7).sin()).collect();
+        let ws: Vec<f32> = (0..k * n).map(|i| ((i as f32) * 1.3).cos()).collect();
+        let ts: Vec<f32> = (0..8).map(|i| ((i as f32) - 3.5) * 0.25).collect();
+        let bx = client.buffer_from_host_buffer::<f32>(&xs, &[m, k], None).unwrap();
+        let bw = client.buffer_from_host_buffer::<f32>(&ws, &[k, n], None).unwrap();
+        let bm = client.mask_from_indices(&[k * n], &[0, 4, 5, 7, 11], None).unwrap();
+        let bt = client.buffer_from_host_buffer::<f32>(&ts, &[8], None).unwrap();
+        let bf = client.mask_from_indices(&[8], &[1, 2, 6], None).unwrap();
+        client.reset_kernel_macs();
+        let out = exe.execute_b(&[&bx, &bw, &bm, &bt, &bf]).unwrap();
+        let parts = out[0][0].tuple_parts().unwrap();
+        let vals = parts
+            .iter()
+            .map(|p| p.to_literal_sync().unwrap().to_vec::<f32>().unwrap())
+            .collect();
+        (vals, client.kernel_macs())
+    }
+
+    fn to_bits(vs: &[Vec<f32>]) -> Vec<Vec<u32>> {
+        vs.iter().map(|v| v.iter().map(|x| x.to_bits()).collect()).collect()
+    }
+
+    #[test]
+    fn sparse_kernels_match_dense_bitwise_at_any_thread_count() {
+        let (dense, dense_macs) = run_masked_graph(KernelMode::Dense, 1);
+        assert_eq!(dense_macs, 2 * 5, "m rows × nnz active mask entries");
+        for threads in [1usize, 2, 4, 8] {
+            for kernel in [KernelMode::Dense, KernelMode::Sparse] {
+                let (got, macs) = run_masked_graph(kernel, threads);
+                assert_eq!(
+                    to_bits(&got),
+                    to_bits(&dense),
+                    "kernel={kernel:?} threads={threads}"
+                );
+                assert_eq!(macs, dense_macs, "kernel={kernel:?} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn sidecar_masks_stay_exact_through_delta_updates() {
+        // the sparse kernel keys select off the index-set sidecar, so
+        // it must follow the set scatter_mask_update maintains
+        let run = |kernel: KernelMode| {
+            let client = PjRtClient::cpu().unwrap().with_kernel(kernel);
+            let b = XlaBuilder::new("upd");
+            let t = b.parameter_s(0, &Shape::array::<f32>(vec![6]), "t").unwrap();
+            let m = b.parameter_s(1, &Shape::array::<f32>(vec![6]), "m").unwrap();
+            let comp =
+                b.tuple(&[t.select(&m).unwrap()]).unwrap().build().unwrap();
+            let exe = client.compile(&comp).unwrap();
+            let bt = client
+                .buffer_from_host_buffer::<f32>(
+                    &[-1.0, 2.0, -3.0, 4.0, -5.0, 6.0],
+                    &[6],
+                    None,
+                )
+                .unwrap();
+            let m0 = client.mask_from_indices(&[6], &[0, 3], None).unwrap();
+            let m1 = m0.scatter_mask_update(&[1, 5], &[3]).unwrap();
+            exe.execute_b(&[&bt, &m1]).unwrap()[0][0].tuple_parts().unwrap()[0]
+                .to_literal_sync()
+                .unwrap()
+                .to_vec::<f32>()
+                .unwrap()
+        };
+        let dense = run(KernelMode::Dense);
+        assert_eq!(dense, vec![-1.0, 2.0, 0.0, 0.0, 0.0, 6.0]);
+        let sparse = run(KernelMode::Sparse);
+        let db: Vec<u32> = dense.iter().map(|x| x.to_bits()).collect();
+        let sb: Vec<u32> = sparse.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(db, sb);
+    }
+
+    #[test]
+    fn masked_op_shape_validation() {
+        let client = PjRtClient::cpu().unwrap();
+        // masked_matmul: mask numel must be k·n
+        let b = XlaBuilder::new("bad_mm");
+        let x = b.parameter_s(0, &Shape::array::<f32>(vec![2, 4]), "x").unwrap();
+        let w = b.parameter_s(1, &Shape::array::<f32>(vec![4, 3]), "w").unwrap();
+        let mk = b.parameter_s(2, &Shape::array::<f32>(vec![5]), "m").unwrap();
+        let z = b.masked_matmul(&x, &w, &mk, 2, 4, 3).unwrap();
+        assert!(client.compile(&z.build().unwrap()).is_err());
+        // select: mask and operand lengths must agree
+        let b2 = XlaBuilder::new("bad_sel");
+        let t = b2.parameter_s(0, &Shape::array::<f32>(vec![4]), "t").unwrap();
+        let m = b2.parameter_s(1, &Shape::array::<f32>(vec![3]), "m").unwrap();
+        let s = t.select(&m).unwrap();
+        assert!(client.compile(&s.build().unwrap()).is_err());
+        // scatter_add: base, mask, and update lengths must agree
+        let b3 = XlaBuilder::new("bad_sc");
+        let base = b3.parameter_s(0, &Shape::array::<f32>(vec![4]), "b").unwrap();
+        let bm = b3.parameter_s(1, &Shape::array::<f32>(vec![4]), "m").unwrap();
+        let u = b3.parameter_s(2, &Shape::array::<f32>(vec![2]), "u").unwrap();
+        let sa = base.scatter_add(&bm, &u).unwrap();
+        assert!(client.compile(&sa.build().unwrap()).is_err());
     }
 }

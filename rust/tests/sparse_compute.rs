@@ -1,0 +1,366 @@
+//! Dense-reference parity harness for the O(nnz) compute kernels.
+//!
+//! The determinism contract under test (see `xla` module docs): the
+//! sparse gather-matmul / lazy-select / masked-scatter kernels produce
+//! results **bit-identical** to the dense reference executor, at any
+//! thread count, because both sides reduce with the same canonical
+//! pairwise tree and the sparse side only replaces subtrees whose
+//! terms are all exact +0.0 with the literal +0.0.
+//!
+//! The host references below are *independent reimplementations* of
+//! the documented contract (a recursive `ceil(n/2)`-split pairwise
+//! sum over the dense term vector), not calls into the executor — so
+//! a regression in either kernel shows up as a bit mismatch here.
+//!
+//! Run under `TOPKAST_BACKEND={sim,strict}` and
+//! `TOPKAST_THREADS={1,4}` in CI; the trainer-level test below also
+//! varies kernel mode and thread count explicitly.
+
+use topkast::coordinator::TrainerConfig;
+use topkast::runtime::{env_backend_name, AnyBackend, Runtime, StrictBackend, Synthetic};
+use topkast::sparsity::TopKast;
+use topkast::util::proptest::{ensure, property_cases};
+use topkast::util::rng::Pcg64;
+use topkast::xla::{KernelMode, PjRtClient, Shape, XlaBuilder};
+
+const THREAD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+const SPARSITIES: [f64; 3] = [0.5, 0.8, 0.98];
+
+/// The documented reduction order: recursive pairwise with the split
+/// at `ceil(n/2)`. Every per-output-element sum in the executor —
+/// dense or sparse, sequential or parallel — must match this tree.
+fn ref_pairwise(v: &[f32]) -> f32 {
+    match v.len() {
+        0 => 0.0,
+        1 => v[0],
+        n => {
+            let half = n.div_ceil(2);
+            ref_pairwise(&v[..half]) + ref_pairwise(&v[half..])
+        }
+    }
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Sorted mask index sample: `nnz` distinct positions in `[0, numel)`.
+fn sample_mask(rng: &mut Pcg64, numel: usize, sparsity: f64) -> Vec<u32> {
+    let nnz = ((numel as f64) * (1.0 - sparsity)).round() as usize;
+    let mut idx: Vec<u32> = rng
+        .sample_indices(numel, nnz.min(numel))
+        .into_iter()
+        .map(|i| i as u32)
+        .collect();
+    idx.sort_unstable();
+    idx
+}
+
+fn dense_mask(numel: usize, idx: &[u32]) -> Vec<f32> {
+    let mut m = vec![0.0f32; numel];
+    for &i in idx {
+        m[i as usize] = 1.0;
+    }
+    m
+}
+
+// ---------------------------------------------------------------------------
+// gather-matmul vs dense reference
+// ---------------------------------------------------------------------------
+
+/// z = masked_matmul(x, w, mask) and loss = mean(z ⊙ z), against a
+/// host reference, bitwise, across kernels × thread counts ×
+/// sparsities, with the mask passed both as an index-set sidecar
+/// buffer and as a plain dense 0/1 payload (no sidecar — the sparse
+/// kernel must fall back to the dense path and still match).
+#[test]
+fn gather_matmul_matches_dense_reference_bitwise() {
+    property_cases("gather_matmul_parity", 24, |rng| {
+        let m = 1 + rng.next_below(6) as usize;
+        let k = 1 + rng.next_below(12) as usize;
+        let n = 1 + rng.next_below(12) as usize;
+        let sparsity = SPARSITIES[rng.next_below(3) as usize];
+        let idx = sample_mask(rng, k * n, sparsity);
+        let xs: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(1.0)).collect();
+        let ws: Vec<f32> = (0..k * n).map(|_| rng.normal_f32(1.0)).collect();
+        let mask = dense_mask(k * n, &idx);
+
+        // host reference: dense term vector, masked entries exact +0.0
+        let mut want_z = vec![0.0f32; m * n];
+        for i in 0..m {
+            for o in 0..n {
+                let terms: Vec<f32> = (0..k)
+                    .map(|f| {
+                        if mask[f * n + o] != 0.0 {
+                            xs[i * k + f] * ws[f * n + o]
+                        } else {
+                            0.0
+                        }
+                    })
+                    .collect();
+                want_z[i * n + o] = ref_pairwise(&terms);
+            }
+        }
+        let z2: Vec<f32> = want_z.iter().map(|z| z * z).collect();
+        let want_loss = ref_pairwise(&z2) / (m * n) as f32;
+        let want_macs = m as u64 * idx.len() as u64;
+
+        for kernel in [KernelMode::Dense, KernelMode::Sparse] {
+            for threads in THREAD_COUNTS {
+                for sidecar in [true, false] {
+                    let client = PjRtClient::cpu()
+                        .map_err(|e| e.to_string())?
+                        .with_kernel(kernel)
+                        .with_threads(threads);
+                    let b = XlaBuilder::new("gmm");
+                    let build = || -> anyhow::Result<_> {
+                        let x =
+                            b.parameter_s(0, &Shape::array::<f32>(vec![m, k]), "x")?;
+                        let w =
+                            b.parameter_s(1, &Shape::array::<f32>(vec![k, n]), "w")?;
+                        let mk = b
+                            .parameter_s(2, &Shape::array::<f32>(vec![k * n]), "m")?;
+                        let z = b.masked_matmul(&x, &w, &mk, m, k, n)?;
+                        let loss = (z.clone() * z.clone())?.mean()?;
+                        Ok(b.tuple(&[z, loss])?.build()?)
+                    };
+                    let comp = build().map_err(|e| e.to_string())?;
+                    let exe = client.compile(&comp).map_err(|e| e.to_string())?;
+                    let bx = client
+                        .buffer_from_host_buffer::<f32>(&xs, &[m, k], None)
+                        .map_err(|e| e.to_string())?;
+                    let bw = client
+                        .buffer_from_host_buffer::<f32>(&ws, &[k, n], None)
+                        .map_err(|e| e.to_string())?;
+                    let bm = if sidecar {
+                        client
+                            .mask_from_indices(&[k * n], &idx, None)
+                            .map_err(|e| e.to_string())?
+                    } else {
+                        client
+                            .buffer_from_host_buffer::<f32>(&mask, &[k * n], None)
+                            .map_err(|e| e.to_string())?
+                    };
+                    client.reset_kernel_macs();
+                    let out =
+                        exe.execute_b(&[&bx, &bw, &bm]).map_err(|e| e.to_string())?;
+                    let parts =
+                        out[0][0].tuple_parts().map_err(|e| e.to_string())?;
+                    let got_z = parts[0]
+                        .to_literal_sync()
+                        .and_then(|l| l.to_vec::<f32>())
+                        .map_err(|e| e.to_string())?;
+                    let got_loss = parts[1]
+                        .to_literal_sync()
+                        .and_then(|l| l.to_vec::<f32>())
+                        .map_err(|e| e.to_string())?;
+                    let tag = format!(
+                        "m={m} k={k} n={n} s={sparsity} kernel={kernel:?} \
+                         threads={threads} sidecar={sidecar}"
+                    );
+                    ensure(bits(&got_z) == bits(&want_z), format!("z bits: {tag}"))?;
+                    ensure(
+                        got_loss.len() == 1
+                            && got_loss[0].to_bits() == want_loss.to_bits(),
+                        format!("loss bits: {tag}"),
+                    )?;
+                    ensure(
+                        client.kernel_macs() == want_macs,
+                        format!(
+                            "macs {} != {want_macs}: {tag}",
+                            client.kernel_macs()
+                        ),
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// select / scatter_add vs dense reference
+// ---------------------------------------------------------------------------
+
+/// act = θ.select(mask), total = Σ act (pruned sparse reduction), and
+/// stepped = θ.scatter_add(mask, θ·0.5) — with a −0.0 planted in θ to
+/// exercise the off-mask hazards: select must emit literal +0.0 off
+/// the mask (not θ·0, which would give −0.0), and scatter_add must
+/// byte-copy the base off the mask.
+#[test]
+fn select_and_scatter_add_match_dense_reference_bitwise() {
+    property_cases("select_scatter_parity", 24, |rng| {
+        let len = 1 + rng.next_below(64) as usize;
+        let sparsity = SPARSITIES[rng.next_below(3) as usize];
+        let idx = sample_mask(rng, len, sparsity);
+        let mask = dense_mask(len, &idx);
+        let mut theta: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.5)).collect();
+        theta[rng.next_below(len as u64) as usize] = -0.0;
+
+        let want_act: Vec<f32> = (0..len)
+            .map(|i| if mask[i] != 0.0 { theta[i] } else { 0.0 })
+            .collect();
+        let want_total = ref_pairwise(&want_act);
+        let want_stepped: Vec<f32> = (0..len)
+            .map(|i| {
+                if mask[i] != 0.0 {
+                    theta[i] + theta[i] * 0.5
+                } else {
+                    theta[i]
+                }
+            })
+            .collect();
+
+        for kernel in [KernelMode::Dense, KernelMode::Sparse] {
+            for threads in THREAD_COUNTS {
+                for sidecar in [true, false] {
+                    let client = PjRtClient::cpu()
+                        .map_err(|e| e.to_string())?
+                        .with_kernel(kernel)
+                        .with_threads(threads);
+                    let b = XlaBuilder::new("sel_scatter");
+                    let build = || -> anyhow::Result<_> {
+                        let t =
+                            b.parameter_s(0, &Shape::array::<f32>(vec![len]), "t")?;
+                        let mk =
+                            b.parameter_s(1, &Shape::array::<f32>(vec![len]), "m")?;
+                        let act = t.select(&mk)?;
+                        let total = act.reduce_sum()?;
+                        let upd = (&t * b.constant_f32(0.5)?)?;
+                        let stepped = t.scatter_add(&mk, &upd)?;
+                        Ok(b.tuple(&[act, total, stepped])?.build()?)
+                    };
+                    let comp = build().map_err(|e| e.to_string())?;
+                    let exe = client.compile(&comp).map_err(|e| e.to_string())?;
+                    let bt = client
+                        .buffer_from_host_buffer::<f32>(&theta, &[len], None)
+                        .map_err(|e| e.to_string())?;
+                    let bm = if sidecar {
+                        client
+                            .mask_from_indices(&[len], &idx, None)
+                            .map_err(|e| e.to_string())?
+                    } else {
+                        client
+                            .buffer_from_host_buffer::<f32>(&mask, &[len], None)
+                            .map_err(|e| e.to_string())?
+                    };
+                    let out = exe.execute_b(&[&bt, &bm]).map_err(|e| e.to_string())?;
+                    let parts =
+                        out[0][0].tuple_parts().map_err(|e| e.to_string())?;
+                    let vals: Vec<Vec<f32>> = parts
+                        .iter()
+                        .map(|p| {
+                            p.to_literal_sync()
+                                .and_then(|l| l.to_vec::<f32>())
+                                .map_err(|e| e.to_string())
+                        })
+                        .collect::<Result<_, _>>()?;
+                    let tag = format!(
+                        "len={len} s={sparsity} kernel={kernel:?} \
+                         threads={threads} sidecar={sidecar}"
+                    );
+                    ensure(bits(&vals[0]) == bits(&want_act), format!("act: {tag}"))?;
+                    ensure(
+                        vals[1].len() == 1
+                            && vals[1][0].to_bits() == want_total.to_bits(),
+                        format!("total: {tag}"),
+                    )?;
+                    ensure(
+                        bits(&vals[2]) == bits(&want_stepped),
+                        format!("stepped: {tag}"),
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// end-to-end training parity over refresh cycles
+// ---------------------------------------------------------------------------
+
+/// A client + backend honoring `TOPKAST_BACKEND` (sim or strict) with
+/// an explicit kernel mode and thread count — the env var picks the
+/// runtime layer, the arguments pick the executor configuration.
+fn backend_with(kernel: KernelMode, threads: usize) -> AnyBackend {
+    let client = PjRtClient::cpu_with_devices(1)
+        .unwrap()
+        .with_kernel(kernel)
+        .with_threads(threads);
+    match env_backend_name() {
+        "strict" | "faulty-strict" => {
+            AnyBackend::Strict(StrictBackend::from_client(client))
+        }
+        _ => AnyBackend::Sim(client),
+    }
+}
+
+/// Everything a training run produces, bit-exact.
+#[derive(PartialEq, Eq, Debug)]
+struct RunPrint {
+    losses: Vec<u64>,
+    eval_loss: u64,
+    params: Vec<Vec<u32>>,
+    masks: Vec<(Vec<u32>, Vec<u32>)>,
+    slots: Vec<Vec<u32>>,
+}
+
+fn run_training(kernel: KernelMode, threads: usize) -> RunPrint {
+    let synth = Synthetic::tiny();
+    let rt = Runtime::from_backend(backend_with(kernel, threads));
+    let cfg = TrainerConfig {
+        steps: 10,
+        refresh_every: 3, // refreshes at steps 0, 3, 6, 9 — four cycles
+        seed: 17,
+        ..TrainerConfig::default()
+    };
+    let mut trainer = synth
+        .trainer_on(rt, Box::new(TopKast::from_sparsities(0.8, 0.5)), cfg)
+        .unwrap();
+    let losses: Vec<u64> = (0..10)
+        .map(|_| trainer.train_step().unwrap().to_bits())
+        .collect();
+    let eval_loss = trainer.evaluate().unwrap().loss_mean.to_bits();
+    trainer.sync_host().unwrap();
+    let params = trainer
+        .store
+        .entries
+        .iter()
+        .map(|e| bits(&e.values))
+        .collect();
+    let masks = trainer
+        .store
+        .entries
+        .iter()
+        .filter_map(|e| e.masks.as_ref())
+        .map(|m| (m.fwd().indices().to_vec(), m.bwd().indices().to_vec()))
+        .collect();
+    let slots = trainer.opt_slots().iter().map(|s| bits(s)).collect();
+    RunPrint { losses, eval_loss, params, masks, slots }
+}
+
+/// The full training loop — losses, params, masks, optimizer slots,
+/// eval — is bit-identical dense-vs-sparse and at every thread count,
+/// across ≥3 mask refresh cycles (so refresh value-edit uploads, mask
+/// delta installs, and the O(nnz) kernels all sit on the path).
+#[test]
+fn training_is_bit_identical_dense_vs_sparse_over_refresh_cycles() {
+    let baseline = run_training(KernelMode::Dense, 1);
+    assert_eq!(baseline.losses.len(), 10);
+    assert!(!baseline.masks.is_empty(), "tiny model has sparse tensors");
+    for kernel in [KernelMode::Dense, KernelMode::Sparse] {
+        for threads in THREAD_COUNTS {
+            if kernel == KernelMode::Dense && threads == 1 {
+                continue;
+            }
+            let got = run_training(kernel, threads);
+            assert_eq!(
+                got, baseline,
+                "kernel={kernel:?} threads={threads} diverged from dense/1 \
+                 under backend={}",
+                env_backend_name()
+            );
+        }
+    }
+}

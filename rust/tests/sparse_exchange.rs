@@ -405,6 +405,207 @@ fn v2_fixture_truncated_at_every_boundary_errors_distinctly() {
     Checkpoint::load(path).unwrap();
 }
 
+/// Weight-rewriting refresh installs (SET): the device upload is
+/// exactly 4·Δindices (mask deltas) + 8·edit-entries (u32 index +
+/// f32 value per rewritten weight) — never the dense 4·n re-upload
+/// the legacy path moved.
+#[test]
+fn set_refresh_uploads_exactly_mask_deltas_plus_value_edits_never_dense() {
+    use topkast::runtime::{DeviceState, Runtime};
+    use topkast::sparsity::{update_store_masks, SetEvolve};
+    use topkast::util::rng::Pcg64;
+
+    let synth = Synthetic::small();
+    let rt = Runtime::new().unwrap();
+    let mut store = ParamStore::init(&synth.model.params, 21);
+    let mut strategy = SetEvolve::new(0.2, 0.3, 0.1);
+    let mut rng = Pcg64::new(21, 7);
+    // step-0 init: masks appear, but no weight rewrites are recorded
+    let init_edits =
+        update_store_masks(&mut strategy, &mut store, None, &mut rng, 0, 100)
+            .unwrap();
+    assert!(init_edits.iter().all(|s| s.is_empty()), "SET init rewrites nothing");
+
+    let slots = synth.model.optimizer.slots();
+    let opt: Vec<Vec<f32>> = synth
+        .model
+        .params
+        .iter()
+        .flat_map(|p| {
+            std::iter::repeat_with(move || vec![0.0f32; p.shape.numel()]).take(slots)
+        })
+        .collect();
+    let mut device =
+        DeviceState::from_host(rt.client().clone(), &synth.model, &store, &opt)
+            .unwrap();
+
+    let installed: Vec<(SparseSet, SparseSet)> = store
+        .entries
+        .iter()
+        .filter_map(|e| e.masks.as_ref().map(|m| (m.fwd().clone(), m.bwd().clone())))
+        .collect();
+    // the SET rewrite: drop + grow, with every touched weight recorded
+    let edits =
+        update_store_masks(&mut strategy, &mut store, None, &mut rng, 50, 100)
+            .unwrap();
+    let entries: u64 = edits.iter().map(|s| s.len() as u64).sum();
+    assert!(entries > 0, "a SET refresh rewrites dropped + grown weights");
+    let delta: u64 = store
+        .entries
+        .iter()
+        .filter_map(|e| e.masks.as_ref())
+        .zip(&installed)
+        .map(|(m, (of, ob))| {
+            (of.delta_to(m.fwd()).total() + ob.delta_to(m.bwd()).total()) as u64
+        })
+        .sum();
+
+    let before = rt.transfer_stats();
+    device.upload_mask_deltas(&store).unwrap();
+    device.upload_sparse_value_edits(&edits).unwrap();
+    let moved = rt.transfer_stats().since(&before);
+    assert_eq!(
+        moved.h2d_bytes,
+        4 * delta + 8 * entries,
+        "install moves the index deltas plus the (index, value) edit pairs"
+    );
+    assert_eq!(moved.d2h_bytes, 0, "a refresh install is upload-only");
+    let dense_bytes: u64 = synth
+        .model
+        .sparse_params()
+        .iter()
+        .map(|p| 4 * p.shape.numel() as u64)
+        .sum();
+    assert!(
+        moved.h2d_bytes < dense_bytes,
+        "{} bytes uploaded — the legacy path moved the dense {dense_bytes}",
+        moved.h2d_bytes
+    );
+}
+
+/// Same exactness for RigL, whose rewrites (zeroed drops, zero-init
+/// grows) ride the recorded-edit path with host-synthesised gradient
+/// magnitudes standing in for the dense-gradient artifact.
+#[test]
+fn rigl_refresh_uploads_exactly_mask_deltas_plus_value_edits() {
+    use topkast::runtime::{DeviceState, Runtime};
+    use topkast::sparsity::{update_store_masks, RigL};
+    use topkast::util::rng::Pcg64;
+
+    let synth = Synthetic::small();
+    let rt = Runtime::new().unwrap();
+    let mut store = ParamStore::init(&synth.model.params, 33);
+    let mut strategy = RigL::new(0.2, 0.3, 10);
+    let mut rng = Pcg64::new(33, 9);
+    update_store_masks(&mut strategy, &mut store, None, &mut rng, 0, 1000).unwrap();
+
+    let slots = synth.model.optimizer.slots();
+    let opt: Vec<Vec<f32>> = synth
+        .model
+        .params
+        .iter()
+        .flat_map(|p| {
+            std::iter::repeat_with(move || vec![0.0f32; p.shape.numel()]).take(slots)
+        })
+        .collect();
+    let mut device =
+        DeviceState::from_host(rt.client().clone(), &synth.model, &store, &opt)
+            .unwrap();
+
+    let mut grad_norms = std::collections::BTreeMap::new();
+    let mut grng = Pcg64::new(5, 5);
+    for e in &store.entries {
+        if e.spec.sparse {
+            let g: Vec<f32> =
+                (0..e.values.len()).map(|_| grng.normal_f32(1.0).abs()).collect();
+            grad_norms.insert(e.spec.name.clone(), g);
+        }
+    }
+    let installed: Vec<(SparseSet, SparseSet)> = store
+        .entries
+        .iter()
+        .filter_map(|e| e.masks.as_ref().map(|m| (m.fwd().clone(), m.bwd().clone())))
+        .collect();
+    let edits = update_store_masks(
+        &mut strategy,
+        &mut store,
+        Some(&grad_norms),
+        &mut rng,
+        10,
+        1000,
+    )
+    .unwrap();
+    let entries: u64 = edits.iter().map(|s| s.len() as u64).sum();
+    assert!(entries > 0, "a RigL update zeroes drops and grows");
+    let delta: u64 = store
+        .entries
+        .iter()
+        .filter_map(|e| e.masks.as_ref())
+        .zip(&installed)
+        .map(|(m, (of, ob))| {
+            (of.delta_to(m.fwd()).total() + ob.delta_to(m.bwd()).total()) as u64
+        })
+        .sum();
+
+    let before = rt.transfer_stats();
+    device.upload_mask_deltas(&store).unwrap();
+    device.upload_sparse_value_edits(&edits).unwrap();
+    let moved = rt.transfer_stats().since(&before);
+    assert_eq!(moved.h2d_bytes, 4 * delta + 8 * entries);
+    assert_eq!(moved.d2h_bytes, 0);
+}
+
+/// End-to-end through the trainer: a SET refresh step's upload is the
+/// mask deltas + the step batch + an 8-byte-per-entry edit payload —
+/// the TrafficModel's edit account matches the meter, and the total
+/// stays far below a dense re-upload. (The exact entry count is pinned
+/// at the device level above: dropped-then-regrown indices dedupe to
+/// one edit entry but vanish from the mask delta, so it cannot be
+/// re-derived from the installed masks here.)
+#[test]
+fn set_trainer_refresh_traffic_is_edit_sized_not_dense_sized() {
+    use topkast::sparsity::SetEvolve;
+
+    let synth = Synthetic::small();
+    let mut strategy = SetEvolve::new(0.2, 0.3, 0.1);
+    strategy.update_every = 5;
+    let mut trainer = synth.trainer(Box::new(strategy), cfg(10, 5, 9)).unwrap();
+    let traffic = trainer.traffic().unwrap();
+    for _ in 0..5 {
+        trainer.train_step().unwrap(); // step-0 init + 4 steady steps
+    }
+    let installed = mask_sets(&trainer);
+    let before = trainer.runtime.transfer_stats();
+    trainer.train_step().unwrap(); // step 5: the SET drop/grow refresh
+    let moved = trainer.runtime.transfer_stats().since(&before);
+    let delta = delta_indices(&trainer, &installed);
+    let base = traffic.refresh_h2d_delta_bytes(delta)
+        + traffic.refresh_h2d_fixed_bytes
+        + traffic.step_h2d_bytes;
+    assert!(
+        moved.h2d_bytes > base,
+        "a SET refresh must carry value edits on top of the mask deltas"
+    );
+    let extra = moved.h2d_bytes - base;
+    assert_eq!(extra % 8, 0, "edits are (u32 index, f32 value) pairs");
+    let entries = extra / 8;
+    assert_eq!(
+        moved.h2d_bytes,
+        base + traffic.refresh_h2d_edit_bytes(entries),
+        "the TrafficModel edit account closes the meter exactly"
+    );
+    let dense_bytes: u64 = synth
+        .model
+        .sparse_params()
+        .iter()
+        .map(|p| 4 * p.shape.numel() as u64)
+        .sum();
+    assert!(
+        extra < dense_bytes / 4,
+        "edit payload {extra} must stay far below the dense rewrite {dense_bytes}"
+    );
+}
+
 /// v2 checkpoints of an *untrained* store are near-empty: the touched
 /// sets are empty, so sparse tensors serialise to indices-only
 /// sections — the degenerate end of the O(nnz) scaling.
