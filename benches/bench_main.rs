@@ -763,13 +763,16 @@ fn step_traffic_thread_sweep() -> Result<Report> {
 
 // ---------------------------------------------------------------------------
 // REPLICATED_STEP_TRAFFIC — data-parallel scaling of the device-resident
-// loop. For each synthetic preset × replica count N ∈ {1, 2, 4}: run the
-// real coordinator (shard → grad → fixed-order all-reduce → replicated
-// apply), measure step percentiles, and record the per-replica h2d
-// shard bytes + all-reduce interconnect bytes from the analytic
-// TrafficModel (cross-checked against the per-device metered counters).
-// One JSON line per (preset, replicas) pair is *appended* to
-// BENCH_topkast.json so replica scaling joins the perf trajectory.
+// loop. For each synthetic preset × replica count N ∈ {1, 2, 3, 4}: run
+// the real coordinator (tree-aligned shard → grad → fixed-order sparse
+// all-reduce → replicated apply), measure step percentiles, and record
+// the per-replica h2d shard bytes + the sparse/legacy all-reduce
+// interconnect accounts from the analytic TrafficModel (cross-checked
+// against the per-device metered counters). A sparsity sweep at N=2
+// then pins the O(nnz) claim: the sparse gradient payload undercuts the
+// legacy dense plane at every level ≥ 0.8 and shrinks monotonically.
+// One JSON line per point is *appended* to BENCH_topkast.json so
+// replica scaling joins the perf trajectory.
 // ---------------------------------------------------------------------------
 fn replicated_step_traffic() -> Result<Report> {
     use std::io::Write as _;
@@ -784,13 +787,14 @@ fn replicated_step_traffic() -> Result<Report> {
             "step_ms_p95",
             "replica_h2d_b/step",
             "allreduce_b/step",
+            "legacy_allreduce_b/step",
             "total_h2d_b/step",
         ],
     );
     let mut lines: Vec<String> = Vec::new();
     for (preset, synth) in [("tiny", Synthetic::tiny()), ("small", Synthetic::small())]
     {
-        for replicas in [1usize, 2, 4] {
+        for replicas in [1usize, 2, 3, 4] {
             let steps = 48usize;
             let cfg = TrainerConfig {
                 steps,
@@ -815,6 +819,7 @@ fn replicated_step_traffic() -> Result<Report> {
                 f3(step_ms.percentile(95.0)),
                 traffic.replica_step_h2d_bytes.to_string(),
                 traffic.allreduce_step_bytes.to_string(),
+                traffic.legacy_allreduce_bytes.to_string(),
                 traffic.step_h2d_bytes.to_string(),
             ]);
             lines.push(
@@ -833,6 +838,18 @@ fn replicated_step_traffic() -> Result<Report> {
                     (
                         "allreduce_step_bytes",
                         Json::num(traffic.allreduce_step_bytes as f64),
+                    ),
+                    (
+                        "allreduce_sparse_bytes",
+                        Json::num(traffic.allreduce_sparse_bytes as f64),
+                    ),
+                    (
+                        "legacy_allreduce_bytes",
+                        Json::num(traffic.legacy_allreduce_bytes as f64),
+                    ),
+                    (
+                        "allreduce_mode",
+                        Json::str(if replicas > 1 { "sparse" } else { "none" }),
                     ),
                     ("step_h2d_bytes", Json::num(traffic.step_h2d_bytes as f64)),
                     ("step_d2h_bytes", Json::num(traffic.step_d2h_bytes as f64)),
@@ -857,8 +874,68 @@ fn replicated_step_traffic() -> Result<Report> {
             assert!(moved.h2d_bytes >= steps as u64 * traffic.step_h2d_bytes);
             assert!(moved.ar_bytes >= steps as u64 * traffic.allreduce_step_bytes);
             assert!(moved.d2h_bytes >= steps as u64 * traffic.step_d2h_bytes);
+            // the gradient exchange runs sparse: smaller than the dense
+            // plane it replaced at the headline 80/50 sparsities
+            if replicas > 1 {
+                assert!(traffic.allreduce_sparse_bytes < traffic.legacy_allreduce_bytes);
+            }
         }
     }
+    // sparsity sweep at N=2 on the small preset: the sparse exchange
+    // payload must undercut the legacy dense plane at every level
+    // ≥ 0.8 and shrink monotonically as sparsity rises, while the
+    // metered interconnect matches the analytic account *exactly* —
+    // the wire carries 4·Σ|bwd| + scalar bytes per device, never
+    // 4·numel.
+    let mut sweep = Vec::new();
+    for sparsity in [0.8f64, 0.9, 0.98] {
+        let steps = 8usize;
+        let cfg = TrainerConfig {
+            steps,
+            refresh_every: 1000,
+            seed: 7,
+            replicas: 2,
+            ..TrainerConfig::default()
+        };
+        let mut trainer = Synthetic::small()
+            .trainer(Box::new(TopKast::from_sparsities(sparsity, sparsity)), cfg)?;
+        let traffic = trainer.traffic()?;
+        let before = trainer.runtime.transfer_stats();
+        for _ in 0..steps {
+            trainer.train_step()?;
+        }
+        let moved = trainer.runtime.transfer_stats().since(&before);
+        assert_eq!(
+            moved.ar_bytes,
+            steps as u64 * traffic.allreduce_step_bytes,
+            "sparsity {sparsity}: the wire moves exactly the sparse payload"
+        );
+        assert!(traffic.allreduce_sparse_bytes < traffic.legacy_allreduce_bytes);
+        sweep.push(traffic.allreduce_sparse_bytes);
+        lines.push(
+            Json::obj(vec![
+                ("scenario", Json::str("replicated_step_traffic")),
+                ("backend", Json::str(env_backend_name())),
+                ("preset", Json::str("small")),
+                ("replicas", Json::num(2.0)),
+                ("sparsity", Json::num(sparsity)),
+                ("allreduce_mode", Json::str("sparse")),
+                (
+                    "allreduce_sparse_bytes",
+                    Json::num(traffic.allreduce_sparse_bytes as f64),
+                ),
+                (
+                    "legacy_allreduce_bytes",
+                    Json::num(traffic.legacy_allreduce_bytes as f64),
+                ),
+            ])
+            .to_string_compact(),
+        );
+    }
+    assert!(
+        sweep.windows(2).all(|w| w[1] < w[0]),
+        "sparse payload must shrink as sparsity rises: {sweep:?}"
+    );
     let mut file = std::fs::OpenOptions::new()
         .create(true)
         .append(true)

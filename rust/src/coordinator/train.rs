@@ -317,7 +317,9 @@ impl<B: Backend> Trainer<B> {
                     model.name, cfg.replicas
                 )
             })?;
-            runtime.load(&rep.grad)?;
+            for grad in &rep.grads {
+                runtime.load(grad)?;
+            }
             runtime.load(&rep.apply)?;
         }
 
@@ -418,6 +420,30 @@ impl<B: Backend> Trainer<B> {
         self.quarantined.iter().copied().collect()
     }
 
+    /// Elastic join: return a previously-lost (quarantined) device to
+    /// the replica set mid-run. The whole set — newcomer included — is
+    /// rebuilt from the recovery base and the journal is replayed, so
+    /// every chain lands bitwise on the state the full replica set
+    /// would hold; the installed masks reach the newcomer as index
+    /// lists (O(nnz) per sparse tensor). Composes with the quarantine
+    /// path: a device that faults again simply re-enters quarantine.
+    pub fn join_replica(&mut self, device: usize) -> Result<()> {
+        if self.cfg.replicas <= 1 {
+            bail!("join_replica needs a replicated run (replicas > 1)");
+        }
+        if device >= self.cfg.replicas {
+            bail!(
+                "device {device} is outside the replica device set 0..{}",
+                self.cfg.replicas
+            );
+        }
+        if !self.quarantined.remove(&device) {
+            bail!("device {device} is not quarantined; nothing to re-join");
+        }
+        self.recover()?;
+        Ok(())
+    }
+
     /// The host state now fully mirrors the resident chain: make it the
     /// new recovery base and drop the journal behind it.
     fn rebase(&mut self) {
@@ -507,10 +533,14 @@ impl<B: Backend> Trainer<B> {
                         .replication
                         .as_ref()
                         .expect("validated in Trainer::new");
-                    let grad = self.runtime.get(&rep.grad)?;
+                    let grads = rep
+                        .grads
+                        .iter()
+                        .map(|g| self.runtime.get(g))
+                        .collect::<Result<Vec<_>>>()?;
                     let apply = self.runtime.get(&rep.apply)?;
                     replicas.train_step(
-                        grad,
+                        &grads,
                         apply,
                         TensorRef::from(&rec.x),
                         TensorRef::from(&rec.y),
@@ -931,10 +961,14 @@ impl<B: Backend> Trainer<B> {
                     .replication
                     .as_ref()
                     .expect("validated in Trainer::new");
-                let grad = self.runtime.get(&rep.grad)?;
+                let grads = rep
+                    .grads
+                    .iter()
+                    .map(|g| self.runtime.get(g))
+                    .collect::<Result<Vec<_>>>()?;
                 let apply = self.runtime.get(&rep.apply)?;
                 replicas.train_step(
-                    grad,
+                    &grads,
                     apply,
                     TensorRef::from(x),
                     TensorRef::from(y),

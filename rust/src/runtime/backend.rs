@@ -70,6 +70,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::tensor::SparseSet;
 use crate::xla;
 
 use super::fault::{FaultBackend, FaultBuffer, FaultExecutable, FaultPlan};
@@ -196,6 +197,21 @@ pub trait Backend: Clone + Sized + 'static {
     /// outputs are fresh per-device buffers.
     fn all_reduce_sum(&self, inputs: &[&Self::Buffer]) -> Result<Vec<Self::Buffer>>;
 
+    /// Sparse variant of [`Backend::all_reduce_sum`]: the inputs are
+    /// dense f32 buffers over `set.domain()` elements that are exactly
+    /// `+0.0` everywhere off `set` (the train graphs' `m_bwd ⊙ delta`
+    /// guarantee). Only the `set.len()` on-set values cross the
+    /// interconnect — gathered per replica, combined position-by-
+    /// position with the *same* canonical pairwise tree over the same
+    /// replica order as the dense path (bit-identical results), then
+    /// scattered back into fresh dense per-device buffers. Inputs are
+    /// *borrowed*.
+    fn all_reduce_sum_sparse(
+        &self,
+        inputs: &[&Self::Buffer],
+        set: &SparseSet,
+    ) -> Result<Vec<Self::Buffer>>;
+
     /// Cumulative host↔device + interconnect traffic, all devices.
     fn transfer_stats(&self) -> xla::TransferSnapshot;
     /// Traffic through one device only.
@@ -314,6 +330,14 @@ impl Backend for xla::PjRtClient {
 
     fn all_reduce_sum(&self, inputs: &[&Self::Buffer]) -> Result<Vec<Self::Buffer>> {
         xla::PjRtClient::all_reduce_sum(self, inputs)
+    }
+
+    fn all_reduce_sum_sparse(
+        &self,
+        inputs: &[&Self::Buffer],
+        set: &SparseSet,
+    ) -> Result<Vec<Self::Buffer>> {
+        xla::PjRtClient::all_reduce_sum_sparse(self, inputs, set)
     }
 
     fn transfer_stats(&self) -> xla::TransferSnapshot {
@@ -820,6 +844,68 @@ impl Backend for AnyBackend {
         }
     }
 
+    fn all_reduce_sum_sparse(
+        &self,
+        inputs: &[&Self::Buffer],
+        set: &SparseSet,
+    ) -> Result<Vec<Self::Buffer>> {
+        match self {
+            AnyBackend::Sim(c) => {
+                let refs = inputs
+                    .iter()
+                    .map(|b| match b {
+                        AnyBuffer::Sim(b) => Ok(b),
+                        _ => Err(cross_backend("sim", "buffer")),
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(Backend::all_reduce_sum_sparse(c, &refs, set)?
+                    .into_iter()
+                    .map(AnyBuffer::Sim)
+                    .collect())
+            }
+            AnyBackend::Strict(c) => {
+                let refs = inputs
+                    .iter()
+                    .map(|b| match b {
+                        AnyBuffer::Strict(b) => Ok(b),
+                        _ => Err(cross_backend("strict", "buffer")),
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(c.all_reduce_sum_sparse(&refs, set)?
+                    .into_iter()
+                    .map(AnyBuffer::Strict)
+                    .collect())
+            }
+            AnyBackend::Faulty(c) => {
+                let refs = inputs
+                    .iter()
+                    .map(|b| match b {
+                        AnyBuffer::Faulty(b) => Ok(b.as_ref()),
+                        _ => Err(cross_backend("faulty", "buffer")),
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(c.all_reduce_sum_sparse(&refs, set)?
+                    .into_iter()
+                    .map(|b| AnyBuffer::Faulty(Box::new(b)))
+                    .collect())
+            }
+            #[cfg(feature = "pjrt")]
+            AnyBackend::Pjrt(c) => {
+                let refs = inputs
+                    .iter()
+                    .map(|b| match b {
+                        AnyBuffer::Pjrt(b) => Ok(b),
+                        _ => Err(cross_backend("pjrt", "buffer")),
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(c.all_reduce_sum_sparse(&refs, set)?
+                    .into_iter()
+                    .map(AnyBuffer::Pjrt)
+                    .collect())
+            }
+        }
+    }
+
     fn transfer_stats(&self) -> xla::TransferSnapshot {
         match self {
             AnyBackend::Sim(c) => Backend::transfer_stats(c),
@@ -877,6 +963,11 @@ mod tests {
         let strict = AnyBackend::strict(1).unwrap();
         let b = strict.buffer_from_host_buffer::<f32>(&[1.0], &[1], None).unwrap();
         let err = sim.all_reduce_sum(&[&b]).unwrap_err().to_string();
+        assert!(err.contains("cross-backend"), "{err}");
+        let err = sim
+            .all_reduce_sum_sparse(&[&b], &SparseSet::full(1))
+            .unwrap_err()
+            .to_string();
         assert!(err.contains("cross-backend"), "{err}");
     }
 

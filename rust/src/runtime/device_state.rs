@@ -543,10 +543,23 @@ impl<B: Backend> DeviceState<B> {
         payload: Vec<B::Buffer>,
         scalars: &[[f32; 1]],
     ) -> Result<B::Buffer> {
-        if payload.len() != self.layout.batch.len() {
+        // the apply artifact keeps the train convention for the
+        // resident prefix (θ | masks | opt) and the scalar suffix, but
+        // its payload slot count is its own: a θ-shaped payload takes
+        // more slots than the two batch inputs it replaces
+        let expected_payload = exe
+            .spec
+            .inputs
+            .len()
+            .checked_sub(self.layout.batch.start + self.layout.scalars.len())
+            .context("apply artifact declares fewer inputs than the resident state")?;
+        if payload.len() != expected_payload {
             bail!(
-                "expected {} payload buffers (one per batch slot), got {}",
-                self.layout.batch.len(),
+                "expected {expected_payload} payload buffers (apply arity {} - \
+                 {} resident - {} scalars), got {}",
+                exe.spec.inputs.len(),
+                self.layout.batch.start,
+                self.layout.scalars.len(),
                 payload.len()
             );
         }
@@ -642,6 +655,32 @@ impl<B: Backend> DeviceState<B> {
         inputs.push(DeviceInput::Host(y));
         exe.run_device_on(inputs, self.device)
     }
+
+    /// Run a train-prefix grad artifact (θ | m_fwd | m_bwd | batch
+    /// shard) against the resident state, streaming only the shard.
+    /// Everything resident — including the *backward* masks the
+    /// payload is masked with — is *borrowed* (the training chain
+    /// still owns it), and the outputs stay device-resident: they are
+    /// the gradient payload the sparse all-reduce exchanges.
+    pub fn run_train_prefix_resident(
+        &self,
+        exe: &Executable<B>,
+        x: TensorRef<'_>,
+        y: TensorRef<'_>,
+    ) -> Result<Vec<B::Buffer>> {
+        let mut inputs: Vec<DeviceInput<'_, B>> = Vec::with_capacity(
+            self.params.len() + self.masks_fwd.len() + self.masks_bwd.len() + 2,
+        );
+        for buf in &self.params {
+            inputs.push(DeviceInput::Resident(buf));
+        }
+        for buf in self.masks_fwd.iter().chain(&self.masks_bwd) {
+            inputs.push(DeviceInput::Resident(buf));
+        }
+        inputs.push(DeviceInput::Host(x));
+        inputs.push(DeviceInput::Host(y));
+        exe.run_device_on(inputs, self.device)
+    }
 }
 
 /// Debug-only invariant behind the O(nnz) exchange: a position a
@@ -701,8 +740,20 @@ pub struct TrafficModel {
     pub replica_step_h2d_bytes: u64,
     /// Interconnect bytes per step for the fixed-order gradient
     /// all-reduce, summed over the replica set (0 when `replicas == 1`
-    /// — a lone participant moves nothing).
+    /// — a lone participant moves nothing). This is the **sparse**
+    /// account (equal to `allreduce_sparse_bytes`): payload tensors
+    /// classified as bwd-masked gradients travel as gathered on-set
+    /// values only.
     pub allreduce_step_bytes: u64,
+    /// The sparse all-reduce account per step across the replica set:
+    /// a grad output named `g:<sparse-param>` with matching numel
+    /// moves 4·|B_t| bytes per replica (its installed bwd set);
+    /// unclassified payload (batch-moment scalars) stays dense. Equals
+    /// `legacy_allreduce_bytes` at densities 1.0.
+    pub allreduce_sparse_bytes: u64,
+    /// What the dense all-reduce plane moved per step before the
+    /// sparse exchange: 4·numel for every payload tensor, per replica.
+    pub legacy_allreduce_bytes: u64,
     /// Device→host bytes per steady-state step (the loss scalar,
     /// downloaded from replica 0 only).
     pub step_d2h_bytes: u64,
@@ -820,7 +871,12 @@ impl TrafficModel {
         let grad_norms_h2d = if strategy_uses_grad_norms { batch_bytes } else { 0 };
         let grad_norms_d2h = if strategy_uses_grad_norms { m_bytes } else { 0 };
         let r = replicas.max(1) as u64;
-        let (shard_bytes, allreduce_step_bytes) = if replicas > 1 {
+        let (
+            step_h2d_bytes,
+            replica_step_h2d_bytes,
+            allreduce_sparse_bytes,
+            legacy_allreduce_bytes,
+        ) = if replicas > 1 {
             let rep = model.replication.as_ref().with_context(|| {
                 format!(
                     "model {}: traffic account for {replicas} replicas needs \
@@ -836,21 +892,62 @@ impl TrafficModel {
                     rep.replicas
                 );
             }
-            let shard: u64 = rep
-                .grad
-                .inputs
-                .iter()
-                .map(|io| 4 * io.shape.numel() as u64)
-                .sum();
-            let payload: u64 = rep
-                .grad
-                .outputs
-                .iter()
-                .map(|io| 4 * io.shape.numel() as u64)
-                .sum();
-            (shard, r * payload)
+            // per-replica shard streams: the batch convention is the
+            // *last two* grad inputs — any θ/mask prefix is resident
+            // and never crosses the bus per step. Tree-aligned shards
+            // of a non-pow2 split are unequal, so each replica's own
+            // artifact sizes its link.
+            let mut shards_total = 0u64;
+            let mut shard0 = 0u64;
+            for (ri, grad) in rep.grads.iter().enumerate() {
+                if grad.inputs.len() < 2 {
+                    bail!(
+                        "model {}: grad artifact {ri} declares {} inputs, \
+                         the batch convention needs at least (x, y)",
+                        model.name,
+                        grad.inputs.len()
+                    );
+                }
+                let bytes: u64 = grad.inputs[grad.inputs.len() - 2..]
+                    .iter()
+                    .map(|io| 4 * io.shape.numel() as u64)
+                    .sum();
+                if ri == 0 {
+                    shard0 = bytes;
+                }
+                shards_total += bytes;
+            }
+            // payload classification (normative — see
+            // `runtime::replicated`): a grad output named
+            // `g:<sparse-param>` whose numel matches that param rides
+            // the sparse all-reduce at the bwd set size; everything
+            // else (batch-moment scalars) stays dense
+            let mut sparse_payload = 0u64;
+            let mut dense_payload = 0u64;
+            for io in &rep.grads[0].outputs {
+                let numel = io.shape.numel();
+                dense_payload += 4 * numel as u64;
+                let k_bwd = io.name.strip_prefix("g:").and_then(|pname| {
+                    model
+                        .sparse_params()
+                        .iter()
+                        .find(|p| p.name == pname && p.shape.numel() == numel)
+                        .map(|p| {
+                            let n = p.shape.numel();
+                            k_for_density(n, densities.bwd)
+                                .max(k_for_density(n, densities.fwd))
+                        })
+                });
+                sparse_payload += 4 * k_bwd.unwrap_or(numel) as u64;
+            }
+            (
+                shards_total + r * scalar_bytes,
+                shard0 + scalar_bytes,
+                r * sparse_payload,
+                r * dense_payload,
+            )
         } else {
-            (batch_bytes, 0)
+            (batch_bytes + scalar_bytes, batch_bytes + scalar_bytes, 0, 0)
         };
         // weight-rewriting strategies ship recorded value edits at a
         // refresh (refresh_h2d_edit_bytes), not a dense param re-upload
@@ -859,9 +956,11 @@ impl TrafficModel {
         Ok(TrafficModel {
             replicas: r,
             resident_bytes: p_bytes * (1 + slots) + 2 * m_bytes,
-            step_h2d_bytes: r * (shard_bytes + scalar_bytes),
-            replica_step_h2d_bytes: shard_bytes + scalar_bytes,
-            allreduce_step_bytes,
+            step_h2d_bytes,
+            replica_step_h2d_bytes,
+            allreduce_step_bytes: allreduce_sparse_bytes,
+            allreduce_sparse_bytes,
+            legacy_allreduce_bytes,
             step_d2h_bytes: loss_bytes,
             refresh_d2h_bytes: 4 * nnz_bwd + grad_norms_d2h,
             refresh_h2d_install_bytes: r * 4 * (nnz_fwd + nnz_bwd)
@@ -999,11 +1098,40 @@ mod tests {
         let replicated = synth.replicated(4).unwrap();
         let t = TrafficModel::replicated(&replicated.model, false, false, 4).unwrap();
         assert_eq!(t.replicas, 4);
+        // tiny's batch 4 shards equally across 4 replicas
         assert_eq!(t.step_h2d_bytes, 4 * t.replica_step_h2d_bytes);
         // each replica uploads its shard: shard + scalars < full batch + scalars
         assert!(t.replica_step_h2d_bytes < base.step_h2d_bytes);
-        // payload = the grad outputs (two scalars), once per replica
-        assert_eq!(t.allreduce_step_bytes, 4 * 2 * 4);
+        // payload = gsum_x + gsum_y + g:w1 (128) + g:w2 (64), once per
+        // replica; at densities 1.0 the sparse account degenerates to
+        // the dense one
+        assert_eq!(t.allreduce_step_bytes, 4 * (4 * (1 + 1 + 128 + 64)));
+        assert_eq!(t.allreduce_sparse_bytes, t.allreduce_step_bytes);
+        assert_eq!(t.legacy_allreduce_bytes, t.allreduce_sparse_bytes);
+        // at real sparsities the gradient exchange is O(nnz): the g:*
+        // tensors travel at 4·k_bwd each while the moment scalars and
+        // the legacy dense account are unchanged
+        let s = TrafficModel::with_densities(
+            &replicated.model,
+            false,
+            false,
+            4,
+            Densities { fwd: 0.2, bwd: 0.5 },
+        )
+        .unwrap();
+        let k_bwd: u64 = replicated
+            .model
+            .sparse_params()
+            .iter()
+            .map(|p| {
+                let n = p.shape.numel();
+                k_for_density(n, 0.5).max(k_for_density(n, 0.2)) as u64
+            })
+            .sum();
+        assert_eq!(s.allreduce_sparse_bytes, 4 * (4 * 2 + 4 * k_bwd));
+        assert_eq!(s.allreduce_step_bytes, s.allreduce_sparse_bytes);
+        assert_eq!(s.legacy_allreduce_bytes, t.legacy_allreduce_bytes);
+        assert!(s.allreduce_sparse_bytes < s.legacy_allreduce_bytes);
         // refresh: index deltas broadcast to all replicas, θ down from one
         assert_eq!(t.refresh_h2d_install_bytes, 4 * base.refresh_h2d_install_bytes);
         assert_eq!(t.refresh_h2d_delta_bytes(7), 4 * base.refresh_h2d_delta_bytes(7));

@@ -71,6 +71,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
+use crate::tensor::SparseSet;
 use crate::util::rng::Pcg64;
 use crate::xla;
 
@@ -349,6 +350,20 @@ impl<B: Backend> FaultBackend<B> {
             .collect()
     }
 
+    /// Return a lost device to service — the chaos stand-in for
+    /// swapping in a replacement part, feeding the trainer's elastic
+    /// `join_replica` path. Clears the armed `lose` threshold when it
+    /// targets this device (otherwise the schedule would re-kill the
+    /// newcomer on its next op); transient probabilities keep drawing
+    /// exactly as before.
+    pub fn revive_device(&self, device: usize) {
+        let mut state = self.state.lock().expect("fault state poisoned");
+        state.lost.remove(&device);
+        if state.plan.lose.is_some_and(|(dev, _)| dev == device) {
+            state.plan.lose = None;
+        }
+    }
+
     fn check(&self, device: usize, kind: OpKind, op: &'static str) -> Result<()> {
         self.state
             .lock()
@@ -548,6 +563,25 @@ impl<B: Backend> Backend for FaultBackend<B> {
             .collect())
     }
 
+    fn all_reduce_sum_sparse(
+        &self,
+        inputs: &[&Self::Buffer],
+        set: &SparseSet,
+    ) -> Result<Vec<Self::Buffer>> {
+        let device = inputs.first().map(|b| b.inner.device()).unwrap_or(0);
+        self.check(device, OpKind::Exec, "all_reduce_sum_sparse")?;
+        let refs: Vec<&B::Buffer> = inputs.iter().map(|b| &b.inner).collect();
+        Ok(self
+            .inner
+            .all_reduce_sum_sparse(&refs, set)?
+            .into_iter()
+            .map(|inner| FaultBuffer {
+                inner,
+                state: Arc::clone(&self.state),
+            })
+            .collect())
+    }
+
     fn transfer_stats(&self) -> xla::TransferSnapshot {
         self.inner.transfer_stats()
     }
@@ -656,6 +690,25 @@ mod tests {
             .buffer_from_host_buffer::<f32>(&[1.0], &[1], Some(0))
             .is_ok());
         assert_eq!(backend.lost_devices(), vec![1]);
+    }
+
+    #[test]
+    fn revived_device_rejoins_and_is_not_rekilled() {
+        let plan = FaultPlan::parse("lose=1@1").unwrap();
+        let backend = FaultBackend::new(sim(2), plan);
+        let err = backend
+            .buffer_from_host_buffer::<f32>(&[1.0], &[1], Some(1))
+            .unwrap_err();
+        assert_eq!(RuntimeError::lost_device(&err), Some(1), "{err}");
+        // the replacement part arrives: the device serves again, and
+        // the spent lose threshold must not re-kill it on the next op
+        backend.revive_device(1);
+        assert!(backend.lost_devices().is_empty());
+        for _ in 0..3 {
+            assert!(backend
+                .buffer_from_host_buffer::<f32>(&[1.0], &[1], Some(1))
+                .is_ok());
+        }
     }
 
     #[test]

@@ -79,20 +79,24 @@ impl Optimizer {
 }
 
 /// Artifacts for data-parallel replication (see `runtime::replicated`):
-/// a per-replica partial-gradient artifact over one batch shard, and a
+/// per-replica partial-gradient artifacts over the batch shards, and a
 /// replicated apply artifact that follows the train input convention
 /// with the batch positions carrying the all-reduced gradient payload
 /// instead of raw examples. Real manifests ship these under the
-/// optional `"replication"` key (aot.py `--replicas`, eval-convention
-/// grad inputs); the synthetic models build theirs in memory for any
-/// concrete replica count.
+/// optional `"replication"` key (aot.py `--replicas`, `"grads"` array
+/// or legacy single `"grad"`); the synthetic models build theirs in
+/// memory for any concrete replica count. With tree-aligned remainder
+/// sharding the shards of a non-pow2 split are *unequal*, so each
+/// replica gets its own shard-sized artifact entry (`grads[r]`);
+/// equal-size shards may share one compiled file.
 #[derive(Clone, Debug)]
 pub struct ReplicationSpec {
-    /// The replica count the shard-sized grad artifact was built for.
+    /// The replica count the shard-sized grad artifacts were built for.
     pub replicas: usize,
-    /// Per-replica: one batch shard in, the gradient payload out (the
-    /// outputs are exactly what the step all-reduces).
-    pub grad: ArtifactSpec,
+    /// One artifact per replica (canonical order): that replica's
+    /// batch shard in, the gradient payload out (the outputs are
+    /// exactly what the step all-reduces).
+    pub grads: Vec<ArtifactSpec>,
     /// Replicated on every device: train-convention inputs with the
     /// batch slots carrying the reduced payload; train outputs.
     pub apply: ArtifactSpec,
@@ -346,9 +350,34 @@ fn parse_replication(v: &Json, dir: &Path) -> Result<Option<ReplicationSpec>> {
     let Ok(rep) = v.get("replication") else {
         return Ok(None);
     };
+    let replicas = rep.get("replicas")?.as_usize()?;
+    if replicas == 0 {
+        bail!("replication block declares zero replicas");
+    }
+    // new manifests carry one grad artifact per replica (unequal
+    // tree-aligned shards); legacy single-"grad" manifests predate
+    // remainder sharding, where every shard was the same size — the
+    // one artifact serves all replicas
+    let grads = if let Ok(arr) = rep.get("grads") {
+        let grads = arr
+            .as_arr()?
+            .iter()
+            .map(|g| parse_artifact(g, dir))
+            .collect::<Result<Vec<_>>>()?;
+        if grads.len() != replicas {
+            bail!(
+                "replication block declares {} grad artifacts for {replicas} \
+                 replicas",
+                grads.len()
+            );
+        }
+        grads
+    } else {
+        vec![parse_artifact(rep.get("grad")?, dir)?; replicas]
+    };
     Ok(Some(ReplicationSpec {
-        replicas: rep.get("replicas")?.as_usize()?,
-        grad: parse_artifact(rep.get("grad")?, dir)?,
+        replicas,
+        grads,
         apply: parse_artifact(rep.get("apply")?, dir)?,
     }))
 }
@@ -553,6 +582,8 @@ mod tests {
                        {"name": "y", "shape": [2], "dtype": "i32"}],
             "outputs": [{"name": "gsum", "shape": [40], "dtype": "f32"},
                         {"name": "loss_sum", "shape": [1], "dtype": "f32"}]}"#;
+        // legacy single-"grad" block: one equal-shard artifact,
+        // replicated across every replica slot
         let with = format!(
             r#"{{"kind": "mlp", "optimizer": "sgd", "params": [], "config": {{}},
                 "artifacts": {{"train": {art}, "eval": {art},
@@ -564,11 +595,38 @@ mod tests {
             parse_model("m", &Json::parse(&with).unwrap(), Path::new("a")).unwrap();
         let rep = m.replication.unwrap();
         assert_eq!(rep.replicas, 2);
-        assert_eq!(rep.grad.file, Path::new("a").join("m.grad.hlo.txt"));
-        assert_eq!(rep.grad.inputs.len(), 2);
-        assert_eq!(rep.grad.outputs[0].name, "gsum");
-        assert_eq!(rep.grad.outputs[0].shape.numel(), 40);
+        assert_eq!(rep.grads.len(), 2);
+        for grad in &rep.grads {
+            assert_eq!(grad.file, Path::new("a").join("m.grad.hlo.txt"));
+            assert_eq!(grad.inputs.len(), 2);
+            assert_eq!(grad.outputs[0].name, "gsum");
+            assert_eq!(grad.outputs[0].shape.numel(), 40);
+        }
         assert_eq!(rep.apply.file, Path::new("a").join("m.hlo.txt"));
+
+        // per-replica "grads" array: unequal shards, one entry each
+        let with_grads = format!(
+            r#"{{"kind": "mlp", "optimizer": "sgd", "params": [], "config": {{}},
+                "artifacts": {{"train": {art}, "eval": {art},
+                               "grad_norms": {art}}},
+                "replication": {{"replicas": 2, "grads": [{payload}, {payload}],
+                                 "apply": {art}}}}}"#
+        );
+        let m = parse_model("m", &Json::parse(&with_grads).unwrap(), Path::new("a"))
+            .unwrap();
+        assert_eq!(m.replication.unwrap().grads.len(), 2);
+
+        // grads arity must match the declared replica count
+        let mismatched = format!(
+            r#"{{"kind": "mlp", "optimizer": "sgd", "params": [], "config": {{}},
+                "artifacts": {{"train": {art}, "eval": {art},
+                               "grad_norms": {art}}},
+                "replication": {{"replicas": 3, "grads": [{payload}, {payload}],
+                                 "apply": {art}}}}}"#
+        );
+        let err = parse_model("m", &Json::parse(&mismatched).unwrap(), Path::new("a"))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("grad artifacts"), "{err:#}");
     }
 
     #[test]

@@ -14,6 +14,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::tensor::SparseSet;
 use crate::xla;
 
 use super::backend::{Backend, BufferOps, ExecInput};
@@ -135,6 +136,14 @@ impl Backend for PjrtBackend {
     }
 
     fn all_reduce_sum(&self, _inputs: &[&Self::Buffer]) -> Result<Vec<Self::Buffer>> {
+        bail!("pjrt backend: no vendored bindings yet")
+    }
+
+    fn all_reduce_sum_sparse(
+        &self,
+        _inputs: &[&Self::Buffer],
+        _set: &SparseSet,
+    ) -> Result<Vec<Self::Buffer>> {
         bail!("pjrt backend: no vendored bindings yet")
     }
 

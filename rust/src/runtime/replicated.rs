@@ -8,24 +8,61 @@
 //! One [`DeviceState`] chain lives on each of N simulated devices, all
 //! initialised from the same host store. Every training step runs
 //!
-//! 1. **shard** — the host batch is split into N contiguous shards
-//!    ([`shard_ranges`]), one per replica, so each replica's host link
-//!    carries 1/N of the batch;
-//! 2. **grad** — each replica executes the per-replica grad artifact
-//!    over its shard, producing its partial gradient payload as
-//!    device-resident buffers (for the synthetic family the payload is
-//!    the batch-moment partial sums — the sufficient statistics of the
-//!    shard's gradient contribution);
-//! 3. **all-reduce** — the partials are reduced with
-//!    `PjRtClient::all_reduce_sum` in **canonical replica order**
-//!    (replica 0 first, always), so the result is independent of the
-//!    order replicas finished computing;
+//! 1. **shard** — the host batch is split into N contiguous
+//!    **tree-aligned** shards ([`shard_ranges`]), one per replica, so
+//!    each replica's host link carries ~1/N of the batch (shards of a
+//!    non-pow2 split are unequal by design — see *Exactness*);
+//! 2. **grad** — each replica executes *its own* shard-sized grad
+//!    artifact (`ReplicationSpec::grads[r]`) over its shard, producing
+//!    its partial gradient payload as device-resident buffers;
+//! 3. **exchange** — the partials are reduced in **canonical replica
+//!    order** (replica 0 first, always), sparse where classified (see
+//!    below), so the result is independent of the order replicas
+//!    finished computing;
 //! 4. **apply** — every replica executes the apply artifact (train
 //!    input convention, batch slots = reduced payload) against its own
 //!    resident θ/masks/opt, chaining the outputs into its next step.
 //!    Identical inputs ⇒ bitwise-identical outputs, so the replicas
 //!    advance in **lockstep**: at every step each device holds the
 //!    same bits a single-device run would hold.
+//!
+//! # The sparse gradient exchange (normative)
+//!
+//! This section is the protocol future PRs must preserve.
+//!
+//! **Payload layout.** A grad artifact's outputs are, in order: any
+//! number of *moment scalars* (batch statistics such as `gsum_x`,
+//! `gsum_y`) followed by per-parameter gradient tensors. A gradient
+//! output is **classified sparse** iff its name is `g:<param>` for a
+//! sparse parameter `<param>` of the model *and* its numel equals that
+//! parameter's numel. Classified outputs must be **bwd-masked**: every
+//! element off the installed `m_bwd` set is exactly `+0.0` (the train
+//! graphs guarantee `delta = m_bwd ⊙ delta`; the sim asserts this in
+//! debug builds).
+//!
+//! **Exchange rule.** Classified outputs travel through
+//! `Backend::all_reduce_sum_sparse` against replica 0's installed bwd
+//! [`SparseSet`] for that parameter (lockstep ⇒ every replica's set is
+//! identical): gather the |B| on-set values per replica, combine
+//! position-by-position with the *same* canonical pairwise tree over
+//! the same replica order as the dense all-reduce, scatter back into
+//! `+0.0`-filled dense buffers. Metered interconnect payload is
+//! 4·|B| bytes per tensor per replica — O(nnz), never O(n).
+//!
+//! **Fallback rules.** Unclassified outputs (moment scalars, dense
+//! params, name/shape mismatches) take the dense
+//! `Backend::all_reduce_sum` unchanged. A model with no sparse
+//! parameters therefore degrades to the pure dense exchange.
+//!
+//! **Canonical order.** Both reductions use the identical
+//! recursive-halving tree (`xla::pairwise_sum_across` semantics:
+//! split the replica axis at ⌈R/2⌉) over shard partials in canonical
+//! shard order 0..N. Off-set positions are `+0.0` in every replica, a
+//! pairwise tree of `+0.0` is `+0.0`, and on-set positions see exactly
+//! the dense operand sequence — hence **bit-identity** between the
+//! sparse and dense exchanges, property-tested in
+//! `parity_replicated.rs` (random masks/values, replica counts
+//! {2,3,4}, empty and full sets).
 //!
 //! # Sync points and mask broadcast
 //!
@@ -46,9 +83,10 @@
 //! `rust/tests/parity_replicated.rs`:
 //!
 //! * the simulator's reductions use a canonical pairwise tree
-//!   (`xla::pairwise_sum` semantics), so a full-batch reduction equals
-//!   the fixed-order all-reduce of aligned shard partials bit-for-bit
-//!   (power-of-two batch sizes and replica counts);
+//!   (`xla::pairwise_sum` semantics) and the shards are tree-aligned
+//!   ([`shard_ranges`]), so a full-batch reduction equals the
+//!   fixed-order all-reduce of per-shard partials bit-for-bit — for
+//!   any batch size and replica count, power of two or not;
 //! * the apply artifact reproduces the fused train artifact's update
 //!   arithmetic exactly, consuming the reduced payload where the fused
 //!   graph reduces the batch itself.
@@ -81,23 +119,47 @@ use super::manifest::{ModelEntry, ReplicatedLayout, ReplicationSpec};
 use crate::sparsity::ParamStore;
 use crate::tensor::{HostTensor, SparseSet, SparseSlice};
 
-/// Contiguous batch shards: every index in `0..n` exactly once, shard
-/// sizes differing by at most one (the first `n % replicas` shards take
-/// the extra example). The replicated trainer requires the divisible
-/// case; the general form exists so sharding is well-defined — and
-/// property-tested — for arbitrary batch/replica combinations.
+/// Contiguous batch shards aligned with the canonical pairwise
+/// reduction tree: `0..n` splits the way `xla::pairwise_sum` splits
+/// its operand — the first ⌈replicas/2⌉ shards cover the first ⌈n/2⌉
+/// examples, the rest cover the remainder, recursively. Each shard is
+/// therefore a *node* of the full reduction tree, so the fixed-order
+/// all-reduce of per-shard partials (`pairwise_sum_across`, splitting
+/// the replica axis at ⌈R/2⌉) recombines them bit-for-bit into the
+/// full-batch reduction — for any batch size and replica count, power
+/// of two or not. Shards of a non-pow2 split are unequal by design
+/// ((24, 3) → lengths 6/6/12): equal division would break the tree
+/// alignment. Every index in `0..n` appears exactly once, and when
+/// `n >= replicas` every shard is non-empty.
 pub fn shard_ranges(n: usize, replicas: usize) -> Vec<Range<usize>> {
     assert!(replicas > 0, "shard_ranges: replicas must be >= 1");
-    let base = n / replicas;
-    let extra = n % replicas;
-    let mut out = Vec::with_capacity(replicas);
-    let mut start = 0;
-    for r in 0..replicas {
-        let len = base + usize::from(r < extra);
-        out.push(start..start + len);
-        start += len;
+    fn split(start: usize, end: usize, replicas: usize, out: &mut Vec<Range<usize>>) {
+        if replicas == 1 {
+            out.push(start..end);
+            return;
+        }
+        let left = replicas.div_ceil(2);
+        let mid = start + (end - start).div_ceil(2);
+        split(start, mid, left, out);
+        split(mid, end, replicas - left, out);
     }
+    let mut out = Vec::with_capacity(replicas);
+    split(0, n, replicas, &mut out);
     out
+}
+
+/// Which input convention the shard-sized grad artifacts follow, told
+/// apart by arity at construction.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum GradConvention {
+    /// Batch shard alone — the payload is pure data statistics.
+    DataOnly,
+    /// θ | m_fwd | batch shard — eval-prefix AOT manifests.
+    EvalResident,
+    /// θ | m_fwd | m_bwd | batch shard — the sparse-exchange
+    /// convention: the payload carries per-parameter bwd-masked
+    /// gradients alongside the moment scalars.
+    TrainPrefix,
 }
 
 /// N device-resident state chains advancing in lockstep (see module
@@ -115,14 +177,17 @@ pub struct ReplicatedState<B: Backend = AnyBackend> {
     total_shards: usize,
     /// (replica, tensor)-keyed buffer addressing.
     layout: ReplicatedLayout,
-    /// Whether the grad artifact follows the eval convention
-    /// (θ | m_fwd | batch shard — real AOT manifests) instead of the
-    /// data-only convention (batch shard alone — the synthetic family,
-    /// whose payload is pure data statistics).
-    grad_resident: bool,
-    /// Flat f32 elements per replica shard of x and y.
-    shard_x: usize,
-    shard_y: usize,
+    /// Input convention shared by all shard grad artifacts.
+    grad_convention: GradConvention,
+    /// Examples in the full train batch, and flat f32 x-elements per
+    /// example — the tree-aligned shard geometry derives from these.
+    examples: usize,
+    per_row: usize,
+    /// Payload classification, one slot per grad output: `Some(pos)`
+    /// routes that output through the sparse exchange against the
+    /// installed bwd set of sparse param `pos` (`sparse_idx` order),
+    /// `None` takes the dense all-reduce fallback.
+    payload_sparse: Vec<Option<usize>>,
 }
 
 impl<B: Backend> ReplicatedState<B> {
@@ -184,71 +249,139 @@ impl<B: Backend> ReplicatedState<B> {
         }
         let replicas = total_shards;
         let rep = replication_spec(model, replicas)?;
+        if rep.grads.len() != replicas {
+            bail!(
+                "model {}: replication block carries {} grad artifacts for \
+                 {replicas} shards",
+                model.name,
+                rep.grads.len()
+            );
+        }
         let layout = model.replicated_layout(replicas)?;
-        // Two grad conventions: data-only (batch shard alone — the
-        // synthetic family) or eval (θ | m_fwd | batch shard — real AOT
-        // manifests, whose payload is the shard's summed gradient).
-        // Either way the batch shard is the *last* two inputs and the
-        // payload arity must match the apply artifact's batch slots.
+        // Three grad conventions, told apart by arity (see
+        // GradConvention). Either way the batch shard is the *last* two
+        // inputs and the payload arity must match the apply artifact's
+        // payload slots (everything between its resident prefix and its
+        // trailing scalars).
         let batch = &model.train.inputs[layout.per_replica.batch.clone()];
         let np = model.params.len();
         let ns = model.sparse_params().len();
-        let gi = rep.grad.inputs.len();
-        let grad_resident = if gi == batch.len() {
-            false
+        let gi = rep.grads[0].inputs.len();
+        let grad_convention = if gi == batch.len() {
+            GradConvention::DataOnly
         } else if gi == np + ns + batch.len() {
-            true
+            GradConvention::EvalResident
+        } else if gi == np + 2 * ns + batch.len() {
+            GradConvention::TrainPrefix
         } else {
             bail!(
-                "model {}: grad artifact declares {gi} inputs; expected \
-                 {} (batch shard) or {} (θ | m_fwd | batch shard)",
+                "model {}: grad artifact declares {gi} inputs; expected {} \
+                 (batch shard), {} (θ | m_fwd | batch shard), or {} \
+                 (θ | m_fwd | m_bwd | batch shard)",
                 model.name,
                 batch.len(),
-                np + ns + batch.len()
+                np + ns + batch.len(),
+                np + 2 * ns + batch.len()
             );
         };
-        if rep.grad.outputs.len() != batch.len() {
+        let payload_len = rep.grads[0].outputs.len();
+        let expected_payload = rep
+            .apply
+            .inputs
+            .len()
+            .checked_sub(
+                layout.per_replica.batch.start + layout.per_replica.scalars.len(),
+            )
+            .context("apply artifact declares fewer inputs than the resident state")?;
+        if payload_len != expected_payload {
             bail!(
-                "model {}: grad artifact produces {} payload tensors, the \
-                 apply artifact's batch slots absorb exactly {}",
-                model.name,
-                rep.grad.outputs.len(),
-                batch.len()
+                "model {}: grad artifacts produce {payload_len} payload \
+                 tensors, the apply artifact's payload slots absorb exactly \
+                 {expected_payload}",
+                model.name
             );
         }
-        // shard shapes: the grad artifact's batch inputs must tile the
-        // train artifact's batch exactly `replicas` times
-        let shard_ios = &rep.grad.inputs[gi - batch.len()..];
-        for (shard_io, full_io) in shard_ios.iter().zip(batch) {
-            if shard_io.shape.numel() * replicas != full_io.shape.numel() {
-                bail!(
-                    "model {}: batch input {:?} has {} elements, not divisible \
-                     into {replicas} shards of {} (batch_size must be a \
-                     multiple of the replica count)",
-                    model.name,
-                    full_io.name,
-                    full_io.shape.numel(),
-                    shard_io.shape.numel()
-                );
-            }
-        }
-        let [x_io, y_io] = shard_ios else {
+        // shard shapes: every grad artifact's batch inputs must match
+        // the tree-aligned shard geometry over the train batch exactly
+        let [x_full, y_full] = batch else {
             bail!(
                 "model {}: the batch convention is exactly (x, y), got {} \
                  batch slots",
                 model.name,
-                shard_ios.len()
+                batch.len()
             );
         };
-        let shard_x = x_io.shape.numel();
-        let shard_y = y_io.shape.numel();
-        if shard_y == 0 || shard_x % shard_y != 0 {
+        let examples = y_full.shape.numel();
+        if examples == 0 || x_full.shape.numel() % examples != 0 {
             bail!(
-                "model {}: grad shard shapes ({shard_x}, {shard_y}) do not \
-                 describe whole examples",
+                "model {}: batch shapes ({}, {examples}) do not describe \
+                 whole examples",
+                model.name,
+                x_full.shape.numel()
+            );
+        }
+        let per_row = x_full.shape.numel() / examples;
+        if examples < replicas {
+            bail!(
+                "model {}: batch of {examples} examples cannot feed \
+                 {replicas} replicas (need at least one example per shard)",
                 model.name
             );
         }
+        let rows = shard_ranges(examples, replicas);
+        for (r, grad) in rep.grads.iter().enumerate() {
+            if grad.inputs.len() != gi || grad.outputs.len() != payload_len {
+                bail!(
+                    "model {}: grad artifact {r} declares {}/{} \
+                     inputs/outputs, shard 0 declares {gi}/{payload_len}",
+                    model.name,
+                    grad.inputs.len(),
+                    grad.outputs.len()
+                );
+            }
+            let len_r = rows[r].len();
+            let shard_ios = &grad.inputs[gi - batch.len()..];
+            for (shard_io, want) in shard_ios.iter().zip([len_r * per_row, len_r]) {
+                if shard_io.shape.numel() != want {
+                    bail!(
+                        "model {}: grad artifact {r} batch input {:?} has {} \
+                         elements; the tree-aligned shard geometry for \
+                         {examples} examples over {replicas} replicas wants \
+                         {want}",
+                        model.name,
+                        shard_io.name,
+                        shard_io.shape.numel()
+                    );
+                }
+            }
+            for (io, io0) in grad.outputs.iter().zip(&rep.grads[0].outputs) {
+                if io.name != io0.name || io.shape.numel() != io0.shape.numel() {
+                    bail!(
+                        "model {}: grad artifact {r} output {:?} disagrees \
+                         with shard 0's {:?}",
+                        model.name,
+                        io.name,
+                        io0.name
+                    );
+                }
+            }
+        }
+        // classify the payload once: an output named `g:<param>` whose
+        // numel matches a sparse param of the model rides the sparse
+        // exchange (against that param's installed bwd set), everything
+        // else the dense fallback (see module docs).
+        let sparse_params = model.sparse_params();
+        let payload_sparse: Vec<Option<usize>> = rep.grads[0]
+            .outputs
+            .iter()
+            .map(|io| {
+                io.name.strip_prefix("g:").and_then(|pname| {
+                    sparse_params.iter().position(|p| {
+                        p.name == pname && p.shape.numel() == io.shape.numel()
+                    })
+                })
+            })
+            .collect();
         let states = devices
             .iter()
             .map(|&d| DeviceState::from_host_on(client.clone(), model, store, opt, d))
@@ -258,9 +391,10 @@ impl<B: Backend> ReplicatedState<B> {
             replicas: states,
             total_shards,
             layout,
-            grad_resident,
-            shard_x,
-            shard_y,
+            grad_convention,
+            examples,
+            per_row,
+            payload_sparse,
         })
     }
 
@@ -401,13 +535,14 @@ impl<B: Backend> ReplicatedState<B> {
         self.replicas[0].run_with_fwd_masks(exe, x, y)
     }
 
-    /// One replicated training step: shard the batch, run the grad
-    /// artifact per replica, all-reduce the payload in canonical
-    /// replica order, apply on every replica, and download the loss
-    /// from replica 0 only.
+    /// One replicated training step: shard the batch (tree-aligned),
+    /// run each shard's grad artifact (`grads[i]` in canonical shard
+    /// order), exchange the payload — sparse for classified outputs,
+    /// dense otherwise (see module docs) — apply on every replica, and
+    /// download the loss from replica 0 only.
     pub fn train_step(
         &mut self,
-        grad: &Executable<B>,
+        grads: &[&Executable<B>],
         apply: &Executable<B>,
         x: TensorRef<'_>,
         y: TensorRef<'_>,
@@ -421,61 +556,89 @@ impl<B: Backend> ReplicatedState<B> {
         // (shard i → survivor i % k), and the arithmetic below is
         // bitwise unchanged.
         let n = self.total_shards;
+        if grads.len() != n {
+            bail!(
+                "{} grad executables for {n} shards: pass one per shard, \
+                 canonical order",
+                grads.len()
+            );
+        }
         let k = self.replicas.len();
         if k == 0 {
             bail!("replica set is empty");
         }
-        if xv.len() != self.shard_x * n || yv.len() != self.shard_y * n {
+        if xv.len() != self.examples * self.per_row || yv.len() != self.examples {
             bail!(
-                "batch ({}, {}) does not tile into {n} shards of ({}, {})",
+                "batch ({}, {}) is not the ({}, {}) batch the replication \
+                 artifacts were built for",
                 xv.len(),
                 yv.len(),
-                self.shard_x,
-                self.shard_y
+                self.examples * self.per_row,
+                self.examples
             );
         }
         // grad partials, one per shard in canonical shard order (each
         // survivor's host link carries only its shards). Example ranges
         // come from shard_ranges — the one sharding definition — scaled
         // by the per-example element count for x.
-        let rows = shard_ranges(self.shard_y * n, n);
-        let per_row = self.shard_x / self.shard_y;
+        let rows = shard_ranges(self.examples, n);
+        let payload_len = self.payload_sparse.len();
         let mut partials: Vec<Vec<B::Buffer>> = Vec::with_capacity(n);
         for shard in 0..n {
             let state = &self.replicas[shard % k];
-            let xs = &xv[rows[shard].start * per_row..rows[shard].end * per_row];
+            let xs =
+                &xv[rows[shard].start * self.per_row..rows[shard].end * self.per_row];
             let ys = &yv[rows[shard].clone()];
-            let outs = if self.grad_resident {
-                // eval-convention grad: resident θ + m_fwd borrowed,
-                // only the shard streams; the payload stays on-device
-                state.run_with_fwd_masks_resident(
-                    grad,
-                    TensorRef::F32(xs),
-                    TensorRef::F32(ys),
-                )?
-            } else {
-                grad.run_device_on(
+            let outs = match self.grad_convention {
+                GradConvention::DataOnly => grads[shard].run_device_on(
                     vec![
                         DeviceInput::Host(TensorRef::F32(xs)),
                         DeviceInput::Host(TensorRef::F32(ys)),
                     ],
                     state.device(),
-                )?
+                )?,
+                GradConvention::EvalResident => state.run_with_fwd_masks_resident(
+                    grads[shard],
+                    TensorRef::F32(xs),
+                    TensorRef::F32(ys),
+                )?,
+                GradConvention::TrainPrefix => state.run_train_prefix_resident(
+                    grads[shard],
+                    TensorRef::F32(xs),
+                    TensorRef::F32(ys),
+                )?,
             };
+            if outs.len() != payload_len {
+                bail!(
+                    "shard {shard} grad produced {} payload tensors, the \
+                     replication artifacts declare {payload_len}",
+                    outs.len()
+                );
+            }
             partials.push(outs);
         }
-        // fixed-order all-reduce: canonical shard order, whatever order
+        // fixed-order exchange: canonical shard order, whatever order
         // the partials above were produced in (the host-sim reduce is
-        // indifferent to duplicate devices among its inputs). Inputs
-        // are borrowed; the owned outputs are donated to each
-        // survivor's apply below.
-        let payload_len = grad.spec.outputs.len();
+        // indifferent to duplicate devices among its inputs).
+        // Classified outputs ride the sparse all-reduce against replica
+        // 0's installed bwd set — lockstep means every replica's set is
+        // identical — at 4·|B| metered bytes per shard; the rest take
+        // the dense path. Inputs are borrowed; the owned outputs are
+        // donated to each survivor's apply below.
+        let bwd_sets: Vec<Option<SparseSet>> = self
+            .payload_sparse
+            .iter()
+            .map(|slot| slot.map(|pos| self.replicas[0].installed_masks(pos).1.clone()))
+            .collect();
         let mut reduced: Vec<Vec<B::Buffer>> =
             (0..n).map(|_| Vec::with_capacity(payload_len)).collect();
-        for o in 0..payload_len {
+        for (o, set) in bwd_sets.iter().enumerate() {
             let refs: Vec<&B::Buffer> = partials.iter().map(|p| &p[o]).collect();
-            for (i, buf) in self.client.all_reduce_sum(&refs)?.into_iter().enumerate()
-            {
+            let outs = match set {
+                Some(set) => self.client.all_reduce_sum_sparse(&refs, set)?,
+                None => self.client.all_reduce_sum(&refs)?,
+            };
+            for (i, buf) in outs.into_iter().enumerate() {
                 reduced[i].push(buf);
             }
         }
@@ -550,9 +713,35 @@ mod tests {
     #[test]
     fn shard_ranges_basic_shapes() {
         assert_eq!(shard_ranges(8, 2), vec![0..4, 4..8]);
-        assert_eq!(shard_ranges(7, 3), vec![0..3, 3..5, 5..7]);
-        assert_eq!(shard_ranges(2, 4), vec![0..1, 1..2, 2..2, 2..2]);
+        assert_eq!(shard_ranges(7, 3), vec![0..2, 2..4, 4..7]);
+        // divisible but non-pow2: tree alignment demands UNEQUAL shards
+        assert_eq!(shard_ranges(24, 3), vec![0..6, 6..12, 12..24]);
+        assert_eq!(shard_ranges(10, 4), vec![0..3, 3..5, 5..8, 8..10]);
+        assert_eq!(shard_ranges(4, 3), vec![0..1, 1..2, 2..4]);
+        assert_eq!(shard_ranges(4, 4), vec![0..1, 1..2, 2..3, 3..4]);
+        assert_eq!(shard_ranges(2, 4), vec![0..1, 1..1, 1..2, 2..2]);
         assert_eq!(shard_ranges(0, 2), vec![0..0, 0..0]);
+    }
+
+    #[test]
+    fn shard_ranges_partition_any_batch() {
+        for n in 0..40 {
+            for replicas in 1..8 {
+                let rows = shard_ranges(n, replicas);
+                assert_eq!(rows.len(), replicas);
+                assert_eq!(rows[0].start, 0);
+                assert_eq!(rows[replicas - 1].end, n);
+                for w in rows.windows(2) {
+                    assert_eq!(w[0].end, w[1].start, "contiguous ({n}, {replicas})");
+                }
+                if n >= replicas {
+                    assert!(
+                        rows.iter().all(|r| !r.is_empty()),
+                        "({n}, {replicas}): every shard non-empty"
+                    );
+                }
+            }
+        }
     }
 
     #[test]
@@ -666,9 +855,11 @@ mod tests {
     }
 
     #[test]
-    fn non_divisible_batch_is_a_clear_error() {
-        // syn_tiny has batch_size 4 — 3 replicas cannot shard it evenly
-        let err = Synthetic::tiny().replicated(3).unwrap_err();
-        assert!(err.to_string().contains("multiple of"), "{err}");
+    fn small_batches_shard_down_to_one_example_per_replica() {
+        // syn_tiny has batch_size 4: 3 unequal tree-aligned shards are
+        // fine; more replicas than examples is the clear error
+        Synthetic::tiny().replicated(3).unwrap();
+        let err = Synthetic::tiny().replicated(5).unwrap_err();
+        assert!(err.to_string().contains("cannot feed"), "{err}");
     }
 }

@@ -29,6 +29,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use crate::tensor::SparseSet;
 use crate::xla;
 
 use super::backend::{Backend, BufferOps, ExecInput};
@@ -242,6 +243,23 @@ impl Backend for StrictBackend {
         Ok(self
             .inner
             .all_reduce_sum(&refs)?
+            .into_iter()
+            .map(StrictBuffer::fresh)
+            .collect())
+    }
+
+    fn all_reduce_sum_sparse(
+        &self,
+        inputs: &[&Self::Buffer],
+        set: &SparseSet,
+    ) -> Result<Vec<Self::Buffer>> {
+        for b in inputs {
+            b.guard("all_reduce_sum_sparse input")?;
+        }
+        let refs: Vec<&xla::PjRtBuffer> = inputs.iter().map(|b| &b.inner).collect();
+        Ok(self
+            .inner
+            .all_reduce_sum_sparse(&refs, set)?
             .into_iter()
             .map(StrictBuffer::fresh)
             .collect())

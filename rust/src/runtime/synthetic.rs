@@ -145,66 +145,83 @@ impl Synthetic {
     }
 
     /// Attach data-parallel replication artifacts for a concrete
-    /// replica count: a shard-sized grad artifact (partial batch-moment
-    /// sums — the gradient's sufficient statistics for this model
-    /// family) and an apply artifact that reproduces the fused train
-    /// update bit-for-bit from the all-reduced payload. Fails when the
-    /// batch does not shard evenly.
+    /// replica count: one shard-sized grad artifact per tree-aligned
+    /// shard (TrainPrefix convention — θ | m_fwd | m_bwd | batch shard
+    /// in; moment partial sums plus per-sparse-param bwd-masked
+    /// row-affine gradients out) and an apply artifact that reproduces
+    /// the fused train update bit-for-bit from the all-reduced payload.
+    /// Fails when the batch has fewer examples than replicas.
     pub fn replicated(&self, replicas: usize) -> Result<Synthetic> {
         if replicas == 0 {
             bail!("replicas must be >= 1");
         }
-        if self.batch % replicas != 0 {
+        if self.batch < replicas {
             bail!(
-                "model {}: batch_size {} is not a multiple of {replicas} \
-                 replicas",
+                "model {}: batch of {} examples cannot feed {replicas} \
+                 replicas (need at least one example per shard)",
                 self.model.name,
                 self.batch
             );
         }
-        let shard = self.batch / replicas;
         let name = &self.model.name;
-        let grad = ArtifactSpec {
-            file: PathBuf::from(format!("<synthetic:{name}:grad/r{replicas}>")),
-            inputs: vec![
-                IoSpec {
-                    name: "x".into(),
-                    shape: Shape::new(&[shard, self.features]),
-                    dtype: Dtype::F32,
-                },
-                IoSpec {
-                    name: "y".into(),
-                    shape: Shape::new(&[shard]),
-                    dtype: Dtype::F32,
-                },
-            ],
-            outputs: vec![
-                IoSpec { name: "gsum_x".into(), shape: Shape::new(&[1]), dtype: Dtype::F32 },
-                IoSpec { name: "gsum_y".into(), shape: Shape::new(&[1]), dtype: Dtype::F32 },
-            ],
-        };
-        // apply: train-convention inputs with the batch slots replaced
-        // by the reduced payload (same arity, so TrainLayout addresses
-        // both artifacts)
         let layout = self.model.train_layout()?;
+        let np = self.model.params.len();
+        let ns = self.model.sparse_params().len();
+        // payload: moment scalars, then one bwd-masked `g:<param>`
+        // tensor per sparse param — the `g:` names are what routes
+        // those slots through the sparse exchange (see
+        // `runtime::replicated`)
+        let mut payload = vec![
+            IoSpec { name: "gsum_x".into(), shape: Shape::new(&[1]), dtype: Dtype::F32 },
+            IoSpec { name: "gsum_y".into(), shape: Shape::new(&[1]), dtype: Dtype::F32 },
+        ];
+        payload.extend(self.model.params.iter().filter(|p| p.sparse).map(|p| {
+            IoSpec {
+                name: format!("g:{}", p.name),
+                shape: p.shape.clone(),
+                dtype: Dtype::F32,
+            }
+        }));
+        let prefix = &self.model.train.inputs[..np + 2 * ns];
+        let grads = super::replicated::shard_ranges(self.batch, replicas)
+            .iter()
+            .map(|r| {
+                let len = r.len();
+                let mut inputs = prefix.to_vec();
+                inputs.push(IoSpec {
+                    name: "x".into(),
+                    shape: Shape::new(&[len, self.features]),
+                    dtype: Dtype::F32,
+                });
+                inputs.push(IoSpec {
+                    name: "y".into(),
+                    shape: Shape::new(&[len]),
+                    dtype: Dtype::F32,
+                });
+                ArtifactSpec {
+                    // keyed by shard *length* only: equal-length shards
+                    // share one compiled executable
+                    file: PathBuf::from(format!(
+                        "<synthetic:{name}:grad/r{replicas}/len{len}>"
+                    )),
+                    inputs,
+                    outputs: payload.clone(),
+                }
+            })
+            .collect();
+        // apply: train-convention inputs with the two batch slots
+        // widened into the 2 + ns payload slots (the trailing scalars
+        // shift by ns; DeviceState::apply_step derives the payload
+        // arity from exactly this widening)
         let mut apply_inputs = self.model.train.inputs.clone();
-        apply_inputs[layout.batch.start] = IoSpec {
-            name: "gsum_x".into(),
-            shape: Shape::new(&[1]),
-            dtype: Dtype::F32,
-        };
-        apply_inputs[layout.batch.start + 1] = IoSpec {
-            name: "gsum_y".into(),
-            shape: Shape::new(&[1]),
-            dtype: Dtype::F32,
-        };
+        apply_inputs.splice(layout.batch.clone(), payload);
         let apply = ArtifactSpec {
             file: PathBuf::from(format!("<synthetic:{name}:apply>")),
             inputs: apply_inputs,
             outputs: self.model.train.outputs.clone(),
         };
         let mut out = self.clone();
-        out.model.replication = Some(ReplicationSpec { replicas, grad, apply });
+        out.model.replication = Some(ReplicationSpec { replicas, grads, apply });
         Ok(out)
     }
 
@@ -221,8 +238,15 @@ impl Synthetic {
             rt.compile_computation(&self.build_eval(true)?, &self.model.grad_norms)?;
         rt.preload(gn);
         if let Some(rep) = &self.model.replication {
-            let grad = rt.compile_computation(&self.build_grad(&rep.grad)?, &rep.grad)?;
-            rt.preload(grad);
+            // equal-length shards share a file key — compile each
+            // distinct key once
+            let mut seen = std::collections::BTreeSet::new();
+            for grad in &rep.grads {
+                if seen.insert(&grad.file) {
+                    let exe = rt.compile_computation(&self.build_grad(grad)?, grad)?;
+                    rt.preload(exe);
+                }
+            }
             let apply = rt.compile_computation(
                 &self.build_step(&rep.apply, true)?,
                 &rep.apply,
@@ -280,24 +304,48 @@ impl Synthetic {
         self.build_step(&self.model.train, false)
     }
 
-    /// Per-replica partial-gradient computation: reduce one batch shard
-    /// to its payload (partial sums of x and y). The canonical-tree
-    /// `ReduceSum` makes the fixed-order all-reduce of these partials
-    /// bit-identical to the full-batch reduction inside `build_step`.
+    /// Per-shard partial-gradient computation (TrainPrefix convention:
+    /// θ | m_fwd | m_bwd | batch shard in). The payload is the moment
+    /// partial sums plus, per sparse param, the bwd-masked row-affine
+    /// partial gradient — built on the same canonical row trees with
+    /// the same *full-batch* constants as `build_step`, so the
+    /// fixed-order all-reduce of tree-aligned shard partials is
+    /// bit-identical to the fused in-graph reductions (see
+    /// `runtime::replicated`). The `select(m_bwd)` leaves exact +0.0
+    /// off the bwd set — the sparse exchange's payload contract.
     fn build_grad(&self, spec: &ArtifactSpec) -> Result<xla::XlaComputation> {
-        let b = xla::XlaBuilder::new(&format!("{}_grad", self.model.name));
+        let model = &self.model;
+        let b = xla::XlaBuilder::new(&format!("{}_grad", model.name));
         let inputs = declare_params(&b, spec)?;
-        let sx = inputs[0].reduce_sum()?;
-        let sy = inputs[1].reduce_sum()?;
-        b.tuple(&[sx, sy])?.build()
+        let np = model.params.len();
+        let ns = model.sparse_params().len();
+        let x = &inputs[np + 2 * ns];
+        let y = &inputs[np + 2 * ns + 1];
+        let rows = spec.inputs[np + 2 * ns + 1].shape.numel();
+        let rs = x.row_sum(rows)?;
+        let mut outs = vec![rs.reduce_sum()?, y.reduce_sum()?];
+        let u = (&rs / &b.constant_f32((self.batch * self.features) as f32)?)?;
+        let mut mpos = 0usize;
+        for (i, p) in model.params.iter().enumerate() {
+            if !p.sparse {
+                continue;
+            }
+            let theta = &inputs[i];
+            let bwd = &inputs[np + ns + mpos];
+            let g = affine_grad(&b, theta, &u, y, i, self.batch, rows)?;
+            outs.push(g.select(bwd)?);
+            mpos += 1;
+        }
+        b.tuple(&outs)?.build()
     }
 
     /// The shared update graph. With `from_payload = false` this is the
-    /// fused train step (batch in, moments reduced in-graph); with
-    /// `true` it is the replicated apply step, whose batch slots carry
-    /// the all-reduced payload sums and whose moment division uses the
+    /// fused train step (batch in, moments and row-affine gradients
+    /// reduced in-graph on the canonical row trees); with `true` it is
+    /// the replicated apply step, whose widened batch slots carry the
+    /// all-reduced payload and whose moment division uses the
     /// *full-batch* element counts — every node downstream of the
-    /// moments is identical, which is what makes replicated runs
+    /// payload values is identical, which is what makes replicated runs
     /// bit-identical to single-device runs.
     fn build_step(
         &self,
@@ -307,27 +355,40 @@ impl Synthetic {
         let model = &self.model;
         let layout = model.train_layout()?;
         let slots = model.optimizer.slots();
+        let ns = model.sparse_params().len();
         let suffix = if from_payload { "apply" } else { "train" };
         let b = xla::XlaBuilder::new(&format!("{}_{suffix}", model.name));
         let inputs = declare_params(&b, spec)?;
 
-        let (xm, ym) = if from_payload {
-            let nx = (self.batch * self.features) as f32;
-            let ny = self.batch as f32;
-            (
-                (&inputs[layout.batch.start] / &b.constant_f32(nx)?)?,
-                (&inputs[layout.batch.start + 1] / &b.constant_f32(ny)?)?,
-            )
+        let nx = b.constant_f32((self.batch * self.features) as f32)?;
+        let ny = b.constant_f32(self.batch as f32)?;
+        // the apply artifact widens the 2 batch slots into 2 + ns
+        // payload slots, shifting the trailing scalars by ns
+        let pshift = if from_payload { ns } else { 0 };
+        // fused-only row machinery: the row sums feed both the scalar
+        // moments and the per-param row-affine gradients, on exactly
+        // the canonical trees the per-shard grad artifacts tile
+        let fused_u = if from_payload {
+            None
         } else {
-            (
-                inputs[layout.batch.start].mean()?,
-                inputs[layout.batch.start + 1].mean()?,
-            )
+            let rs = inputs[layout.batch.start].row_sum(self.batch)?;
+            let u = (&rs / &nx)?;
+            Some((rs, u))
         };
-        let lr = &inputs[layout.scalars.start];
-        let step = &inputs[layout.scalars.start + 1];
-        let reg = &inputs[layout.scalars.start + 2];
-        let inv_d = &inputs[layout.scalars.start + 3];
+        let (xm, ym) = match &fused_u {
+            Some((rs, _)) => (
+                (&rs.reduce_sum()? / &nx)?,
+                (&inputs[layout.batch.start + 1].reduce_sum()? / &ny)?,
+            ),
+            None => (
+                (&inputs[layout.batch.start] / &nx)?,
+                (&inputs[layout.batch.start + 1] / &ny)?,
+            ),
+        };
+        let lr = &inputs[layout.scalars.start + pshift];
+        let step = &inputs[layout.scalars.start + pshift + 1];
+        let reg = &inputs[layout.scalars.start + pshift + 2];
+        let inv_d = &inputs[layout.scalars.start + pshift + 3];
         // a bounded step-dependent wobble so the step scalar matters:
         // step_gain = 1 + 1e-3·step (kept tiny to stay finite)
         let step_gain =
@@ -351,10 +412,6 @@ impl Synthetic {
         let mut cur = xm.clone();
         for (i, p) in model.params.iter().enumerate() {
             let theta = &inputs[layout.params.start + i];
-            let ci = b.constant_f32(0.013 * (i + 1) as f32)?;
-            // a fake gradient with signal from the batch and the params
-            let mut g = ((theta * &xm)? + (&ci * &ym)?)?;
-            g = (&g * &step_gain)?;
             if let Some(&mpos) = mask_of.get(&i) {
                 let fwd = &inputs[layout.masks_fwd.start + mpos];
                 let bwd = &inputs[layout.masks_bwd.start + mpos];
@@ -362,7 +419,22 @@ impl Synthetic {
                 cur = b.masked_matmul(&cur, theta, fwd, 1, dims[0], dims[1])?;
                 // forward contribution reads only A; updates only B
                 let act = ((theta * fwd)? * &(inv_d * &b.constant_f32(0.05)?)?)?;
-                g = (&g + &act)?.select(bwd)?;
+                // the reduced row-affine gradient: rebuilt in-graph for
+                // the fused step, read straight from the payload slot
+                // for apply — bit-identical by tree alignment
+                let gi = match &fused_u {
+                    Some((_, u)) => affine_grad(
+                        &b,
+                        theta,
+                        u,
+                        &inputs[layout.batch.start + 1],
+                        i,
+                        self.batch,
+                        self.batch,
+                    )?,
+                    None => inputs[layout.batch.start + 2 + mpos].clone(),
+                };
+                let g = ((&gi * &step_gain)? + &act)?.select(bwd)?;
                 let g2 = (g.clone() * g.clone())?;
                 // slot 0: momentum-style accumulator; slot 1 (when
                 // present): second-moment-style — both written only on B
@@ -392,7 +464,10 @@ impl Synthetic {
                 new_opt.extend(slot_outs);
                 loss = (&loss + &g2.mean()?)?;
             } else {
-                // dense params keep the fused elementwise update
+                // dense params keep the fused scalar-moment update (no
+                // payload slot: xm/ym reconstruct it exactly)
+                let ci = b.constant_f32(0.013 * (i + 1) as f32)?;
+                let g = (&((theta * &xm)? + (&ci * &ym)?)? * &step_gain)?;
                 let s0 = &inputs[layout.opt.start + i * slots];
                 let s0n = ((s0 * &b.constant_f32(0.9)?)? + g.clone())?;
                 let mut upd = s0n.clone();
@@ -498,6 +573,27 @@ fn param(
         sparse,
         mac: dims.iter().product::<usize>() as u64,
     }
+}
+
+/// The row-affine gradient for sparse param `i` over `rows` examples:
+/// `Σ_e (u_e·θ + w_e)` with `w_e = y_e·(c_i / batch)`, evaluated on the
+/// canonical row tree (`row_affine_sum`). `u` must be the row sums of x
+/// divided by the *full-batch* element count — the fused train graph
+/// (full batch) and every per-shard grad graph build exactly this op
+/// sequence with exactly these constants, which is what makes their
+/// trees compose bitwise under the fixed-order all-reduce.
+fn affine_grad(
+    b: &xla::XlaBuilder,
+    theta: &xla::XlaOp,
+    u: &xla::XlaOp,
+    y: &xla::XlaOp,
+    i: usize,
+    batch: usize,
+    rows: usize,
+) -> Result<xla::XlaOp> {
+    let ci = 0.013 * (i + 1) as f32;
+    let w = (y * &b.constant_f32(ci / batch as f32)?)?;
+    b.row_affine_sum(u, &w, theta, rows)
 }
 
 /// Declare one builder parameter per artifact input, in order.
@@ -651,23 +747,40 @@ mod tests {
 
     #[test]
     fn replication_artifacts_compile_and_follow_the_train_layout() {
-        for replicas in [2usize, 4] {
+        for replicas in [2usize, 3, 4] {
             let synth = Synthetic::tiny().replicated(replicas).unwrap();
             let mut rt = Runtime::with_devices(replicas).unwrap();
             synth.install(&mut rt).unwrap();
             let rep = synth.model.replication.as_ref().unwrap();
             assert_eq!(rep.replicas, replicas);
-            // apply follows the train convention exactly (TrainLayout
-            // addresses both), grad tiles the batch
-            assert_eq!(rep.apply.inputs.len(), synth.model.train.inputs.len());
+            assert_eq!(rep.grads.len(), replicas);
+            // apply follows the train convention with the two batch
+            // slots widened into the 2 + ns payload slots
+            let ns = synth.model.sparse_params().len();
+            assert_eq!(
+                rep.apply.inputs.len(),
+                synth.model.train.inputs.len() + ns
+            );
             assert_eq!(rep.apply.outputs.len(), synth.model.train.outputs.len());
+            // the per-shard grad artifacts tile the batch tree-aligned
             let layout = synth.model.train_layout().unwrap();
             let full_x = synth.model.train.inputs[layout.batch.start].shape.numel();
-            assert_eq!(rep.grad.inputs[0].shape.numel() * replicas, full_x);
-            assert!(rt.get(&rep.grad).is_ok(), "grad preloaded");
+            let shard_x: usize = rep
+                .grads
+                .iter()
+                .map(|g| g.inputs[g.inputs.len() - 2].shape.numel())
+                .sum();
+            assert_eq!(shard_x, full_x, "shards tile the batch");
+            for grad in &rep.grads {
+                assert_eq!(grad.outputs.len(), 2 + ns);
+                assert!(grad.outputs[2].name.starts_with("g:"));
+                assert!(rt.get(grad).is_ok(), "grad preloaded");
+            }
             assert!(rt.get(&rep.apply).is_ok(), "apply preloaded");
         }
-        assert!(Synthetic::tiny().replicated(3).is_err(), "4 % 3 != 0");
+        // batch 4 shards down to 3 (unequal, tree-aligned), but a shard
+        // cannot be smaller than one example
+        assert!(Synthetic::tiny().replicated(5).is_err(), "4 examples < 5");
         assert!(Synthetic::tiny().replicated(0).is_err());
     }
 

@@ -437,6 +437,19 @@ fn masked_pairwise<F: Fn(usize) -> f32>(
         + masked_pairwise(mid, hi, &active[split..], term)
 }
 
+/// Canonical pairwise tree over rows `[lo, hi)` of the affine terms
+/// `u[e]·t + w[e]` — the reduction `RowAffineSum` takes per output
+/// element. Splitting at the same `ceil(len/2)` point as
+/// [`pairwise_sum`] is what makes tree-aligned shard partials compose
+/// bitwise (see `runtime::replicated::shard_ranges`).
+fn row_affine_tree(lo: usize, hi: usize, u: &[f32], w: &[f32], t: f32) -> f32 {
+    if hi - lo == 1 {
+        return u[lo] * t + w[lo];
+    }
+    let mid = lo + (hi - lo).div_ceil(2);
+    row_affine_tree(lo, mid, u, w, t) + row_affine_tree(mid, hi, u, w, t)
+}
+
 /// [`masked_pairwise`] specialized to a sparse value (positional
 /// `vals` parallel to the sorted `idx`), reducing over `[lo, hi)`.
 fn sparse_pairwise(lo: usize, hi: usize, idx: &[u32], vals: &[f32]) -> f32 {
@@ -684,6 +697,76 @@ impl PjRtClient {
             (0..n).map(|j| pairwise_sum_across(&vals, j)).collect();
         let data = Arc::new(Storage::F32(reduced));
         let payload = 4 * n as u64;
+        inputs
+            .iter()
+            .map(|buf| {
+                buf.stats.record_ar(payload);
+                Ok(PjRtBuffer {
+                    data: Arc::clone(&data),
+                    stats: buf.stats.clone(),
+                    device: buf.device,
+                    mask_set: None,
+                })
+            })
+            .collect()
+    }
+
+    /// Sparse all-reduce: the O(nnz) counterpart of
+    /// [`PjRtClient::all_reduce_sum`] for payloads known to be exactly
+    /// +0.0 off `set` (gradients the train graphs masked with m_bwd).
+    /// Only the set's values cross the simulated interconnect — each
+    /// participating device meters `ar_bytes += 4·|set|`, never 4·n —
+    /// gathered per replica, reduced per position with the *same*
+    /// canonical pairwise tree over the same replica order, and
+    /// scattered back into a dense result that is exactly +0.0 off the
+    /// set. Because a dense all-reduce of off-set columns sums literal
+    /// +0.0s to exactly +0.0, the result is bit-identical to
+    /// [`PjRtClient::all_reduce_sum`] over the same inputs.
+    pub fn all_reduce_sum_sparse(
+        &self,
+        inputs: &[&PjRtBuffer],
+        set: &SparseSet,
+    ) -> Result<Vec<PjRtBuffer>> {
+        let Some(first) = inputs.first() else {
+            bail!("all_reduce_sum_sparse over zero buffers");
+        };
+        let n = set.domain();
+        let mut vals: Vec<&[f32]> = Vec::with_capacity(inputs.len());
+        for (r, buf) in inputs.iter().enumerate() {
+            match buf.data.as_ref() {
+                Storage::F32(v) if v.len() == n => vals.push(v),
+                Storage::F32(v) => bail!(
+                    "all_reduce_sum_sparse: replica {r} has {} elements, \
+                     the set's domain is {n}",
+                    v.len()
+                ),
+                _ => bail!("all_reduce_sum_sparse: replica {r} buffer is not f32"),
+            }
+            self.device_stats(buf.device)?; // buffer must belong here
+        }
+        if inputs.len() == 1 {
+            return Ok(vec![(*first).clone()]);
+        }
+        // exactness contract: every input must be exactly +0.0 off the
+        // set, or dropping those positions changes the dense result
+        #[cfg(debug_assertions)]
+        for (r, v) in vals.iter().enumerate() {
+            for (j, &x) in v.iter().enumerate() {
+                debug_assert!(
+                    set.contains(j as u32) || x.to_bits() == 0,
+                    "all_reduce_sum_sparse: replica {r} carries {x} off the \
+                     set at position {j} — the payload was not m_bwd-masked"
+                );
+            }
+        }
+        let gathered: Vec<Vec<f32>> = vals.iter().map(|v| set.gather(v)).collect();
+        let grefs: Vec<&[f32]> = gathered.iter().map(|g| g.as_slice()).collect();
+        let mut reduced = vec![0.0f32; n];
+        for (p, &j) in set.indices().iter().enumerate() {
+            reduced[j as usize] = pairwise_sum_across(&grefs, p);
+        }
+        let data = Arc::new(Storage::F32(reduced));
+        let payload = 4 * set.len() as u64;
         inputs
             .iter()
             .map(|buf| {
@@ -950,6 +1033,16 @@ enum Node {
     /// `mask[f·n + o] active ? x[i·k + f] · w[f·n + o] : +0.0`.
     /// A 1-element `x` with `m == 1` broadcasts as a constant row.
     MaskedMatmul { x: usize, w: usize, mask: usize, m: usize, k: usize, n: usize },
+    /// `out[e]` = canonical pairwise sum over row `e` of a
+    /// `[rows, numel(a)/rows]` value. Unlike a flat `ReduceSum`, the
+    /// per-row trees stay intact, so a reduction *over* the row sums
+    /// composes bitwise with row-aligned sharding at any row count.
+    RowSum { a: usize, rows: usize },
+    /// `out[j]` = canonical pairwise sum over `e ∈ 0..rows` of
+    /// `u[e]·theta[j] + w[e]` — the row-structured gradient of the
+    /// synthetic train family, whose per-shard partials all-reduce
+    /// bitwise into the full-batch value under tree-aligned sharding.
+    RowAffineSum { u: usize, w: usize, theta: usize, rows: usize },
     Tuple { parts: Vec<usize> },
 }
 
@@ -972,6 +1065,8 @@ impl Graph {
             Node::Select { a, .. } => self.numel(*a),
             Node::ScatterAdd { base, .. } => self.numel(*base),
             Node::MaskedMatmul { m, n, .. } => m * n,
+            Node::RowSum { rows, .. } => *rows,
+            Node::RowAffineSum { theta, .. } => self.numel(*theta),
             Node::Tuple { parts } => parts.len(),
         }
     }
@@ -1042,6 +1137,25 @@ impl Graph {
                         bail!(
                             "{}: masked_matmul input has {nx} elements, \
                              want {m}x{k} (or a scalar row with m == 1)",
+                            self.name
+                        );
+                    }
+                }
+                Node::RowSum { a, rows } => {
+                    let na = self.numel(*a);
+                    if *rows == 0 || na % rows != 0 {
+                        bail!(
+                            "{}: row_sum over {na} elements with {rows} rows",
+                            self.name
+                        );
+                    }
+                }
+                Node::RowAffineSum { u, w, rows, .. } => {
+                    let (nu, nw) = (self.numel(*u), self.numel(*w));
+                    if *rows == 0 || nu != *rows || nw != *rows {
+                        bail!(
+                            "{}: row_affine_sum coefficients have {nu}/{nw} \
+                             elements, want {rows}",
                             self.name
                         );
                     }
@@ -1378,6 +1492,42 @@ impl<'a> Executor<'a> {
                 // analytic multiply-add count — m rows, one MAC per
                 // active mask entry, identical in both kernel modes
                 self.macs += m as u64 * nnz;
+                KVal::Dense { data: Arc::new(Storage::F32(out)), set: None }
+            }
+            Node::RowSum { a, rows } => {
+                self.force(a)?;
+                let ad = self.densify(a)?;
+                let av = expect_f32(&ad, &self.graph.name)?;
+                let cols = av.len() / rows;
+                let threads = if av.len() >= PAR_THRESHOLD_WORK {
+                    self.ctx.threads
+                } else {
+                    1
+                };
+                let out = par_fill(threads, rows, |e| {
+                    pairwise_sum(&av[e * cols..(e + 1) * cols])
+                });
+                KVal::Dense { data: Arc::new(Storage::F32(out)), set: None }
+            }
+            Node::RowAffineSum { u, w, theta, rows } => {
+                self.force(u)?;
+                self.force(w)?;
+                self.force(theta)?;
+                let ud = self.densify(u)?;
+                let wd = self.densify(w)?;
+                let td = self.densify(theta)?;
+                let uv = expect_f32(&ud, &self.graph.name)?;
+                let wv = expect_f32(&wd, &self.graph.name)?;
+                let tv = expect_f32(&td, &self.graph.name)?;
+                let work = rows.saturating_mul(tv.len());
+                let threads = if work >= PAR_THRESHOLD_WORK {
+                    self.ctx.threads
+                } else {
+                    1
+                };
+                let out = par_fill(threads, tv.len(), |j| {
+                    row_affine_tree(0, rows, uv, wv, tv[j])
+                });
                 KVal::Dense { data: Arc::new(Storage::F32(out)), set: None }
             }
             Node::Tuple { parts } => {
@@ -1746,6 +1896,30 @@ impl XlaBuilder {
             n,
         }))
     }
+
+    /// `out[j] = Σ_e u[e]·theta[j] + w[e]` over the canonical pairwise
+    /// tree of the `rows` row terms (`u` and `w` are `[rows]` vectors).
+    /// The row-structured gradient op: per-shard partials taken over
+    /// tree-aligned row ranges all-reduce bitwise into this value.
+    pub fn row_affine_sum(
+        &self,
+        u: &XlaOp,
+        w: &XlaOp,
+        theta: &XlaOp,
+        rows: usize,
+    ) -> Result<XlaOp> {
+        for op in [u, w, theta] {
+            if !Rc::ptr_eq(&op.builder.0, &self.0) {
+                bail!("row_affine_sum operand from a different builder");
+            }
+        }
+        Ok(self.push(Node::RowAffineSum {
+            u: u.id,
+            w: w.id,
+            theta: theta.id,
+            rows,
+        }))
+    }
 }
 
 impl XlaOp {
@@ -1758,6 +1932,14 @@ impl XlaOp {
 
     pub fn reduce_sum(&self) -> Result<XlaOp> {
         Ok(self.builder.push(Node::ReduceSum { a: self.id }))
+    }
+
+    /// Per-row canonical pairwise sums of a `[rows, cols]` value —
+    /// `out[e]` = the sum of row `e`'s `cols` elements. Reducing the
+    /// row sums again (`reduce_sum`) yields the full-tensor canonical
+    /// tree in a form that composes bitwise with row-aligned shards.
+    pub fn row_sum(&self, rows: usize) -> Result<XlaOp> {
+        Ok(self.builder.push(Node::RowSum { a: self.id, rows }))
     }
 
     /// `self ⊙ [mask != 0]`: keep elements where the mask is active,
@@ -2312,5 +2494,215 @@ mod tests {
         let u = b3.parameter_s(2, &Shape::array::<f32>(vec![2]), "u").unwrap();
         let sa = base.scatter_add(&bm, &u).unwrap();
         assert!(client.compile(&sa.build().unwrap()).is_err());
+        // row_sum: element count must be divisible by the row count
+        let b4 = XlaBuilder::new("bad_rs");
+        let v = b4.parameter_s(0, &Shape::array::<f32>(vec![7]), "v").unwrap();
+        let rs = v.row_sum(3).unwrap();
+        assert!(client.compile(&rs.build().unwrap()).is_err());
+        // row_affine_sum: coefficient vectors must have `rows` elements
+        let b5 = XlaBuilder::new("bad_ra");
+        let uu = b5.parameter_s(0, &Shape::array::<f32>(vec![4]), "u").unwrap();
+        let ww = b5.parameter_s(1, &Shape::array::<f32>(vec![3]), "w").unwrap();
+        let tt = b5.parameter_s(2, &Shape::array::<f32>(vec![5]), "t").unwrap();
+        let ra = b5.row_affine_sum(&uu, &ww, &tt, 4).unwrap();
+        assert!(client.compile(&ra.build().unwrap()).is_err());
+    }
+
+    #[test]
+    fn sparse_all_reduce_matches_dense_all_reduce_bitwise() {
+        let n = 24usize;
+        let client = PjRtClient::cpu_with_devices(4).unwrap();
+        let sets: Vec<SparseSet> = vec![
+            SparseSet::empty(n),
+            SparseSet::from_sorted(n, vec![0, 3, 7, 8, 15, 22, 23]).unwrap(),
+            SparseSet::from_sorted(n, vec![5]).unwrap(),
+            SparseSet::full(n),
+        ];
+        for replicas in [2usize, 3, 4] {
+            for (si, set) in sets.iter().enumerate() {
+                // payloads exactly +0.0 off the set — the m_bwd contract
+                let bufs: Vec<PjRtBuffer> = (0..replicas)
+                    .map(|r| {
+                        let mut v = vec![0.0f32; n];
+                        for (p, &j) in set.indices().iter().enumerate() {
+                            v[j as usize] =
+                                ((r * 31 + p * 7 + si) as f32 * 0.37).sin() * 2.5;
+                        }
+                        client
+                            .buffer_from_host_buffer::<f32>(&v, &[n], Some(r))
+                            .unwrap()
+                    })
+                    .collect();
+                let refs: Vec<&PjRtBuffer> = bufs.iter().collect();
+                let before = client.device_transfer_stats(0).unwrap();
+                let dense = client.all_reduce_sum(&refs).unwrap();
+                let mid = client.device_transfer_stats(0).unwrap();
+                let sparse = client.all_reduce_sum_sparse(&refs, set).unwrap();
+                let after = client.device_transfer_stats(0).unwrap();
+                // dense moves 4·n per device, sparse exactly 4·|set|
+                assert_eq!(mid.since(&before).ar_bytes, 4 * n as u64);
+                assert_eq!(after.since(&mid).ar_bytes, 4 * set.len() as u64);
+                assert_eq!(after.since(&mid).ar_calls, 1);
+                for (r, (d, s)) in dense.iter().zip(&sparse).enumerate() {
+                    assert_eq!(s.device(), r);
+                    let db: Vec<u32> = d
+                        .debug_read_f32()
+                        .unwrap()
+                        .iter()
+                        .map(|x| x.to_bits())
+                        .collect();
+                    let sb: Vec<u32> = s
+                        .debug_read_f32()
+                        .unwrap()
+                        .iter()
+                        .map(|x| x.to_bits())
+                        .collect();
+                    assert_eq!(db, sb, "replicas={replicas} set={si} replica={r}");
+                }
+            }
+        }
+        // single participant: identity, nothing metered
+        let lone = client
+            .buffer_from_host_buffer::<f32>(&[0.0, 2.0], &[2], Some(1))
+            .unwrap();
+        let set = SparseSet::from_sorted(2, vec![1]).unwrap();
+        let before = client.device_transfer_stats(1).unwrap();
+        let out = client.all_reduce_sum_sparse(&[&lone], &set).unwrap();
+        assert_eq!(out[0].debug_read_f32().unwrap(), vec![0.0, 2.0]);
+        assert_eq!(
+            client.device_transfer_stats(1).unwrap().since(&before).ar_calls,
+            0
+        );
+        // domain mismatch and zero participants are clear errors
+        let bad = client
+            .buffer_from_host_buffer::<f32>(&[0.0; 3], &[3], None)
+            .unwrap();
+        assert!(client.all_reduce_sum_sparse(&[&lone, &bad], &set).is_err());
+        assert!(client.all_reduce_sum_sparse(&[], &set).is_err());
+    }
+
+    /// The tree-aligned shard layout `runtime::replicated::shard_ranges`
+    /// produces, restated locally: each shard is a node of the full
+    /// canonical pairwise tree over `[lo, hi)`.
+    fn tree_shards(
+        lo: usize,
+        hi: usize,
+        replicas: usize,
+        out: &mut Vec<(usize, usize)>,
+    ) {
+        if replicas == 1 {
+            out.push((lo, hi));
+            return;
+        }
+        let left = replicas.div_ceil(2);
+        let mid = lo + (hi - lo).div_ceil(2);
+        tree_shards(lo, mid, left, out);
+        tree_shards(mid, hi, replicas - left, out);
+    }
+
+    #[test]
+    fn row_ops_compose_bitwise_across_tree_aligned_shards() {
+        let (rows, cols, p) = (7usize, 3, 5);
+        let xs: Vec<f32> =
+            (0..rows * cols).map(|i| ((i as f32) * 0.61).sin() * 1.7).collect();
+        let ys: Vec<f32> =
+            (0..rows).map(|i| ((i as f32) * 1.09).cos() * 0.9).collect();
+        let ts: Vec<f32> = (0..p).map(|i| (i as f32 - 2.0) * 0.4).collect();
+        // outputs: [row sums, reduce_sum of row sums, row-affine grad]
+        let run = |client: &PjRtClient, lo: usize, hi: usize| -> Vec<Vec<f32>> {
+            let b = XlaBuilder::new("rowops");
+            let r = hi - lo;
+            let x = b
+                .parameter_s(0, &Shape::array::<f32>(vec![r, cols]), "x")
+                .unwrap();
+            let y = b.parameter_s(1, &Shape::array::<f32>(vec![r]), "y").unwrap();
+            let t = b.parameter_s(2, &Shape::array::<f32>(vec![p]), "t").unwrap();
+            let rs = x.row_sum(r).unwrap();
+            let total = rs.reduce_sum().unwrap();
+            let g = b.row_affine_sum(&rs, &y, &t, r).unwrap();
+            let comp = b.tuple(&[rs, total, g]).unwrap().build().unwrap();
+            let exe = client.compile(&comp).unwrap();
+            let bx = client
+                .buffer_from_host_buffer::<f32>(
+                    &xs[lo * cols..hi * cols],
+                    &[r, cols],
+                    None,
+                )
+                .unwrap();
+            let by = client
+                .buffer_from_host_buffer::<f32>(&ys[lo..hi], &[r], None)
+                .unwrap();
+            let bt = client.buffer_from_host_buffer::<f32>(&ts, &[p], None).unwrap();
+            let out = exe.execute_b(&[&bx, &by, &bt]).unwrap();
+            out[0][0]
+                .tuple_parts()
+                .unwrap()
+                .iter()
+                .map(|b| b.debug_read_f32().unwrap())
+                .collect()
+        };
+        let reference = PjRtClient::cpu().unwrap().with_kernel(KernelMode::Dense);
+        let full = run(&reference, 0, rows);
+        // reference semantics against the host-side canonical trees
+        for e in 0..rows {
+            assert_eq!(
+                full[0][e].to_bits(),
+                pairwise_sum(&xs[e * cols..(e + 1) * cols]).to_bits()
+            );
+        }
+        for (j, &t) in ts.iter().enumerate() {
+            assert_eq!(
+                full[2][j].to_bits(),
+                row_affine_tree(0, rows, &full[0], &ys, t).to_bits()
+            );
+        }
+        // both kernel modes, any thread count: bit-identical
+        for kernel in [KernelMode::Dense, KernelMode::Sparse] {
+            for threads in [1usize, 2, 8] {
+                let client =
+                    PjRtClient::cpu().unwrap().with_kernel(kernel).with_threads(threads);
+                let got = run(&client, 0, rows);
+                assert_eq!(
+                    to_bits(&got),
+                    to_bits(&full),
+                    "kernel={kernel:?} threads={threads}"
+                );
+            }
+        }
+        // per-shard partials all-reduce bitwise into the full-batch
+        // value at non-pow2 replica counts — the elastic composition law
+        for replicas in [2usize, 3, 4] {
+            let client = PjRtClient::cpu_with_devices(replicas).unwrap();
+            let mut ranges = Vec::new();
+            tree_shards(0, rows, replicas, &mut ranges);
+            let shard_outs: Vec<Vec<Vec<f32>>> =
+                ranges.iter().map(|&(lo, hi)| run(&client, lo, hi)).collect();
+            for out_idx in [1usize, 2] {
+                let bufs: Vec<PjRtBuffer> = shard_outs
+                    .iter()
+                    .enumerate()
+                    .map(|(r, o)| {
+                        client
+                            .buffer_from_host_buffer::<f32>(
+                                &o[out_idx],
+                                &[o[out_idx].len()],
+                                Some(r),
+                            )
+                            .unwrap()
+                    })
+                    .collect();
+                let refs: Vec<&PjRtBuffer> = bufs.iter().collect();
+                let reduced = client.all_reduce_sum(&refs).unwrap();
+                let got: Vec<u32> = reduced[0]
+                    .debug_read_f32()
+                    .unwrap()
+                    .iter()
+                    .map(|x| x.to_bits())
+                    .collect();
+                let want: Vec<u32> =
+                    full[out_idx].iter().map(|x| x.to_bits()).collect();
+                assert_eq!(got, want, "replicas={replicas} output={out_idx}");
+            }
+        }
     }
 }

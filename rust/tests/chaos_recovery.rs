@@ -8,10 +8,14 @@
 //!    transient transfer/exec faults recovers to a state **bitwise
 //!    identical** to the run that never faulted: every per-step loss,
 //!    every parameter, every mask, every optimiser slot.
-//! 2. **Device loss** — a replicated run that permanently loses a
-//!    device mid-run quarantines it, re-shards to the survivors, and
-//!    still matches the clean run bit-for-bit, with the replica
-//!    lockstep invariant intact.
+//! 2. **Device loss & elastic join** — a replicated run that
+//!    permanently loses a device mid-run quarantines it, re-shards to
+//!    the survivors (who keep exchanging bwd-masked gradients over the
+//!    sparse all-reduce), and still matches the clean run bit-for-bit,
+//!    with the replica lockstep invariant intact. A revived device
+//!    re-admitted with `join_replica` receives θ + opt dense plus the
+//!    installed masks as index lists — 4·Σ(|fwd|+|bwd|) bytes, metered
+//!    exactly — and the rejoined run continues bitwise.
 //! 3. **Serve degradation** — a server under exec faults answers every
 //!    non-shed request with logits bitwise identical to a fault-free
 //!    server; the bounded queue sheds with the explicit [`Shed`] error
@@ -189,41 +193,143 @@ fn faulted_runs_recover_bitwise_identical_to_clean_runs() {
 #[test]
 fn device_loss_mid_run_reshards_to_survivors_without_diverging() {
     let synth = Synthetic::tiny();
-    let run_cfg = cfg(12, 3, 5, 2);
-    // Probe the loss threshold upward: small thresholds kill device 1
-    // while the initial state is still uploading (a build error); the
-    // first threshold construction survives fires on device 1's next op
-    // — squarely mid-run, which is the scenario under test.
+    // 2 replicas: the lone survivor carries both shards (degenerate
+    // exchange). 3 replicas: the two survivors keep running the sparse
+    // gradient all-reduce between themselves — the device-loss ×
+    // sparse-exchange composition.
+    for replicas in [2usize, 3] {
+        let run_cfg = cfg(12, 3, 5, replicas);
+        // Probe the loss threshold upward: small thresholds kill device
+        // 1 while the initial state is still uploading (a build error);
+        // the first threshold construction survives fires on device 1's
+        // next op — squarely mid-run, which is the scenario under test.
+        let mut proven = false;
+        for at in 1..=400u64 {
+            let plan = FaultPlan::parse(&format!("lose=1@{at}")).unwrap();
+            let mut faulted = match faulty_trainer(&synth, run_cfg.clone(), plan) {
+                Ok(t) => t,
+                Err(err) => {
+                    assert!(
+                        RuntimeError::is_fault(&err),
+                        "x{replicas} lose=1@{at}: construction failed non-fault: {err:#}"
+                    );
+                    continue;
+                }
+            };
+            let mut clean = synth.trainer(strategy(), run_cfg.clone()).unwrap();
+            let tag = format!("x{replicas} lose=1@{at}");
+            train_in_lockstep(&mut clean, &mut faulted, &tag);
+            assert_eq!(
+                faulted.quarantined_devices(),
+                vec![1],
+                "{tag}: the armed loss must fire on the first post-build op"
+            );
+            assert!(faulted.recovery_stats().recoveries > 0, "{tag}: no recovery");
+            // the survivors now carry the orphaned shard; lockstep must
+            // stay green and the full state still matches
+            faulted.verify_replica_lockstep().unwrap();
+            assert_trainers_match(&mut faulted, &mut clean, &tag);
+            proven = true;
+            break;
+        }
+        assert!(
+            proven,
+            "x{replicas}: no loss threshold cleared construction within 400 ops"
+        );
+    }
+}
+
+/// Elastic join: a device lost mid-run is revived (the replacement
+/// part arriving) and re-admitted with `join_replica`. The newcomer's
+/// rebuild broadcast is metered exactly — dense θ + optimiser slots,
+/// plus the installed masks as index lists at 4·Σ(|fwd|+|bwd|) bytes —
+/// and the rejoined run continues bitwise against a clean
+/// never-faulted run, replica lockstep included.
+#[test]
+fn rejoined_replica_receives_masks_as_index_lists_and_stays_bitwise() {
+    let synth = Synthetic::tiny();
+    let replicas = 3;
+    let run_cfg = cfg(14, 3, 5, replicas);
     let mut proven = false;
-    for at in 1..=240u64 {
-        let plan = FaultPlan::parse(&format!("lose=1@{at}")).unwrap();
+    for at in 1..=400u64 {
+        let plan = FaultPlan::parse(&format!("lose=2@{at}")).unwrap();
         let mut faulted = match faulty_trainer(&synth, run_cfg.clone(), plan) {
             Ok(t) => t,
             Err(err) => {
                 assert!(
                     RuntimeError::is_fault(&err),
-                    "lose=1@{at}: construction failed non-fault: {err:#}"
+                    "lose=2@{at}: construction failed non-fault: {err:#}"
                 );
                 continue;
             }
         };
         let mut clean = synth.trainer(strategy(), run_cfg.clone()).unwrap();
-        let tag = format!("lose=1@{at}");
-        train_in_lockstep(&mut clean, &mut faulted, &tag);
+        let tag = format!("join after lose=2@{at}");
+        // first stretch: the armed loss fires on device 2's first
+        // post-build op; the survivors re-shard and stay bitwise
+        for s in 0..7 {
+            let a = clean.train_step().unwrap();
+            let b = faulted.train_step().unwrap();
+            assert_eq!(a.to_bits(), b.to_bits(), "{tag}: loss diverged at step {s}");
+        }
+        assert_eq!(faulted.quarantined_devices(), vec![2], "{tag}");
+
+        // full-sync point: the journal is dropped behind the new
+        // recovery base, so the join below replays nothing — its
+        // traffic is the rebuild broadcast alone
+        faulted.sync_host().unwrap();
+        let mask_bytes: u64 = faulted
+            .store
+            .entries
+            .iter()
+            .filter_map(|e| e.masks.as_ref())
+            .map(|m| 4 * (m.fwd().len() + m.bwd().len()) as u64)
+            .sum();
+        let param_bytes: u64 = faulted
+            .store
+            .entries
+            .iter()
+            .map(|e| 4 * e.values.len() as u64)
+            .sum();
+        let opt_bytes: u64 =
+            faulted.opt_slots().iter().map(|s| 4 * s.len() as u64).sum();
+
+        // the replacement device arrives; the trainer re-admits it
+        faulted
+            .runtime
+            .client()
+            .as_faulty()
+            .expect("trainer was built on a FaultBackend")
+            .revive_device(2);
+        let before = faulted.runtime.device_transfer_stats(2).unwrap();
+        faulted.join_replica(2).unwrap();
+        assert!(faulted.quarantined_devices().is_empty(), "{tag}");
+        let moved =
+            faulted.runtime.device_transfer_stats(2).unwrap().since(&before);
         assert_eq!(
-            faulted.quarantined_devices(),
-            vec![1],
-            "{tag}: the armed loss must fire on the first post-build op"
+            moved.h2d_bytes,
+            param_bytes + opt_bytes + mask_bytes,
+            "{tag}: the newcomer receives θ + opt dense and the masks as \
+             index lists (4·Σ(|fwd|+|bwd|) = {mask_bytes} bytes)"
         );
-        assert!(faulted.recovery_stats().recoveries > 0, "{tag}: no recovery");
-        // the survivor now carries both shards; lockstep is trivially
-        // green but must not error, and the full state still matches
+        assert_eq!(moved.d2h_bytes, 0, "{tag}: a join is upload-only");
+
+        // the rejoined set resumes on the full shard geometry, bitwise
+        for s in 7..run_cfg.steps {
+            let a = clean.train_step().unwrap();
+            let b = faulted.train_step().unwrap();
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{tag}: post-join loss diverged at step {s}"
+            );
+        }
         faulted.verify_replica_lockstep().unwrap();
         assert_trainers_match(&mut faulted, &mut clean, &tag);
         proven = true;
         break;
     }
-    assert!(proven, "no loss threshold cleared construction within 240 ops");
+    assert!(proven, "no loss threshold cleared construction within 400 ops");
 }
 
 // ---------------------------------------------------------------------

@@ -3,27 +3,34 @@
 //!
 //! The pinned invariants:
 //!
-//! * **Bitwise parity** — N ∈ {1, 2, 4} replicas produce *bit-identical*
-//!   losses, params, masks and optimiser state to the single-device
-//!   baseline over ≥3 mask-refresh cycles, including through a mid-run
-//!   checkpoint save/restore (and a single-device checkpoint restores
-//!   into a replicated run).
+//! * **Bitwise parity** — N ∈ {1, 2, 3, 4} replicas produce
+//!   *bit-identical* losses, params, masks and optimiser state to the
+//!   single-device baseline over ≥3 mask-refresh cycles, including
+//!   through a mid-run checkpoint save/restore (and a single-device
+//!   checkpoint restores into a replicated run). Non-pow2 counts and
+//!   non-divisible batches (24 across 3, 10 across 4) are pinned cases.
 //! * **Exact per-replica traffic** — the "batch up, loss down"
 //!   steady-state invariant of `parity_device_state.rs`, extended per
-//!   replica: each device streams exactly its batch shard + the step
-//!   scalars up, the loss comes down from replica 0 only, and the
-//!   all-reduce moves exactly the payload per device per step.
+//!   replica: each device streams exactly its tree-aligned batch shard
+//!   + the step scalars up, the loss comes down from replica 0 only,
+//!   and the sparse all-reduce moves exactly 4·Σ|bwd| + scalar bytes
+//!   per device per step — never 4·numel.
 //! * **Fixed-order all-reduce** — canonical-order pairwise reduction:
 //!   invariant to replica completion order, exact under f32 fixed-order
-//!   semantics, and batch sharding covers every example exactly once
-//!   for arbitrary batch/replica combinations.
+//!   semantics, bitwise-equal between the sparse and dense exchange for
+//!   every bwd set (empty and full included), and tree-aligned batch
+//!   sharding covers every example exactly once for arbitrary
+//!   batch/replica combinations while composing with the reduction
+//!   tree.
 //!
-//! CI runs this suite under a `REPLICAS` env matrix (1, 2, 4); without
-//! the variable every replica count is exercised in one process.
+//! CI runs this suite under a `REPLICAS` env matrix (1, 2, 3, 4);
+//! without the variable every replica count is exercised in one
+//! process.
 
 use topkast::coordinator::{Trainer, TrainerConfig};
-use topkast::runtime::{shard_ranges, Synthetic};
+use topkast::runtime::{shard_ranges, Optimizer, Synthetic};
 use topkast::sparsity::TopKast;
+use topkast::tensor::SparseSet;
 use topkast::util::proptest::{ensure, property_cases};
 use topkast::xla::PjRtClient;
 
@@ -36,13 +43,13 @@ fn strategy() -> Box<TopKast> {
 }
 
 /// Replica counts to exercise: the `REPLICAS` env var pins one (the CI
-/// matrix); otherwise all of {1, 2, 4} run in-process.
+/// matrix); otherwise all of {1, 2, 3, 4} run in-process.
 fn replicas_under_test() -> Vec<usize> {
     match std::env::var("REPLICAS") {
         Ok(v) => vec![v
             .parse()
             .unwrap_or_else(|_| panic!("REPLICAS must be an integer, got {v:?}"))],
-        Err(_) => vec![1, 2, 4],
+        Err(_) => vec![1, 2, 3, 4],
     }
 }
 
@@ -66,6 +73,26 @@ fn assert_trainers_match(a: &mut Trainer, b: &mut Trainer, tag: &str) {
         }
     }
     assert_eq!(a.opt_slots(), b.opt_slots(), "{tag}: optimiser state");
+}
+
+/// Per-replica steady-state h2d bytes: each replica streams its own
+/// tree-aligned batch shard (x, y) plus the step scalars. Shards are
+/// *unequal* for non-pow2 replica counts, so this is a vector — index
+/// r is replica r's link.
+fn per_replica_step_h2d(trainer: &Trainer) -> Vec<u64> {
+    let rep = trainer.model.replication.as_ref().unwrap();
+    let layout = trainer.model.replicated_layout(rep.replicas).unwrap();
+    let scalar_bytes = 4 * layout.per_replica.scalars.len() as u64;
+    rep.grads
+        .iter()
+        .map(|g| {
+            let shard: u64 = g.inputs[g.inputs.len() - 2..]
+                .iter()
+                .map(|io| 4 * io.shape.numel() as u64)
+                .sum();
+            shard + scalar_bytes
+        })
+        .collect()
 }
 
 #[test]
@@ -97,6 +124,37 @@ fn replicated_matches_single_device_bitwise_over_refresh_cycles() {
             let eb = replicated.evaluate().unwrap();
             assert_eq!(ea.loss_mean, eb.loss_mean, "{tag}: eval loss");
         }
+    }
+}
+
+/// The pinned elasticity cases from the sparse-exchange PR: batch 24
+/// across 3 replicas (non-pow2, tree-aligned shards 6+6+12) and batch
+/// 10 across 4 (remainder shards 3+2+3+2) both train bit-identically
+/// to the single-device baseline across refresh cycles.
+#[test]
+fn non_pow2_and_remainder_batches_match_single_device_bitwise() {
+    let cases = [
+        (Synthetic::new("syn_b24", 8, 16, 24, Optimizer::Sgd), 3usize),
+        (Synthetic::new("syn_b10", 8, 16, 10, Optimizer::Adam), 4usize),
+    ];
+    for (synth, replicas) in cases {
+        let steps = 11; // refresh every 3 → refreshes at 0, 3, 6, 9
+        let mut baseline = synth.trainer(strategy(), cfg(steps, 3, 17, 1)).unwrap();
+        let mut replicated =
+            synth.trainer(strategy(), cfg(steps, 3, 17, replicas)).unwrap();
+        assert_eq!(replicated.replica_count(), replicas);
+        for s in 0..steps {
+            let a = baseline.train_step().unwrap();
+            let b = replicated.train_step().unwrap();
+            assert_eq!(
+                a, b,
+                "{} x{replicas}: loss diverged at step {s}",
+                synth.model.name
+            );
+        }
+        replicated.verify_replica_lockstep().unwrap();
+        let tag = format!("{} x{replicas}", synth.model.name);
+        assert_trainers_match(&mut replicated, &mut baseline, &tag);
     }
 }
 
@@ -148,13 +206,23 @@ fn steady_state_per_replica_traffic_is_exact() {
             synth.trainer(strategy(), cfg(40, 1000, 3, replicas)).unwrap();
         let traffic = trainer.traffic().unwrap();
         assert_eq!(traffic.replicas, replicas as u64);
+        // the gradient exchange runs sparse: the step account IS the
+        // sparse account, and at bwd density 0.5 it beats the dense
+        // plane it replaced
+        assert_eq!(traffic.allreduce_step_bytes, traffic.allreduce_sparse_bytes);
+        assert!(
+            traffic.allreduce_sparse_bytes < traffic.legacy_allreduce_bytes,
+            "O(nnz) exchange must undercut the dense all-reduce"
+        );
+        let shard_h2d = per_replica_step_h2d(&trainer);
+        assert_eq!(shard_h2d[0], traffic.replica_step_h2d_bytes);
         assert_eq!(
             traffic.step_h2d_bytes,
-            replicas as u64 * traffic.replica_step_h2d_bytes,
-            "aggregate = replicas × per-replica"
+            shard_h2d.iter().sum::<u64>(),
+            "aggregate = Σ per-replica shards (unequal for non-pow2 counts)"
         );
         let rep = trainer.model.replication.as_ref().unwrap();
-        let payload_tensors = rep.grad.outputs.len() as u64;
+        let payload_tensors = rep.grads[0].outputs.len() as u64;
         let layout = trainer.model.replicated_layout(replicas).unwrap();
         let uploads_per_step = (layout.per_replica.batch.len()
             + layout.per_replica.scalars.len()) as u64;
@@ -176,8 +244,8 @@ fn steady_state_per_replica_traffic_is_exact() {
             // batch shard + step scalars up, per replica
             assert_eq!(
                 d.h2d_bytes,
-                n * traffic.replica_step_h2d_bytes,
-                "replica {r}: h2d bytes/step"
+                n * shard_h2d[r],
+                "replica {r}: h2d bytes/step (its own shard + scalars)"
             );
             assert_eq!(
                 d.h2d_calls,
@@ -224,6 +292,7 @@ fn refresh_broadcasts_masks_to_every_replica() {
     for replicas in multi_replicas() {
         let mut trainer = synth.trainer(strategy(), cfg(10, 4, 3, replicas)).unwrap();
         let traffic = trainer.traffic().unwrap();
+        let shard_h2d = per_replica_step_h2d(&trainer);
         for _ in 0..4 {
             trainer.train_step().unwrap(); // step 0 refresh + 3 steady
         }
@@ -266,8 +335,8 @@ fn refresh_broadcasts_masks_to_every_replica() {
                 .since(&before[r]);
             assert_eq!(
                 d.h2d_bytes,
-                per_replica_mask_bytes + traffic.replica_step_h2d_bytes,
-                "replica {r}: refresh uploads its delta copy + the step shard"
+                per_replica_mask_bytes + shard_h2d[r],
+                "replica {r}: refresh uploads its delta copy + its step shard"
             );
             if r == 0 {
                 assert_eq!(
@@ -387,7 +456,7 @@ fn property_all_reduce_invariant_to_completion_order() {
 
 #[test]
 fn property_sharding_covers_every_example_exactly_once() {
-    property_cases("shard_ranges: exact cover, balanced", 256, |rng| {
+    property_cases("shard_ranges: exact cover, tree-aligned", 256, |rng| {
         let n = rng.next_below(201) as usize;
         let replicas = 1 + rng.next_below(16) as usize;
         let shards = shard_ranges(n, replicas);
@@ -403,32 +472,105 @@ fn property_sharding_covers_every_example_exactly_once() {
             expect_start = s.end;
         }
         ensure(expect_start == n, "shards must cover 0..n exactly")?;
-        // balanced: sizes differ by at most one, extras first
-        let sizes: Vec<usize> = shards.iter().map(|s| s.end - s.start).collect();
-        let (min, max) = (
-            *sizes.iter().min().unwrap_or(&0),
-            *sizes.iter().max().unwrap_or(&0),
-        );
-        ensure(max - min <= 1, format!("unbalanced shards: {sizes:?}"))?;
-        ensure(
-            sizes.windows(2).all(|w| w[0] >= w[1]),
-            "larger shards must come first",
-        )?;
-        // non-divisible remainders really occur in the generated cases
-        let _ = n % replicas;
+        // tree alignment: the split law is the reduction tree's own.
+        // The left ⌈R/2⌉ replicas shard the first ⌈n/2⌉ examples as a
+        // self-similar sub-tree; the right ⌊R/2⌋ shard the rest. This
+        // is what makes shard partials compose bitwise under the
+        // canonical pairwise all-reduce — NOT size balance (24 across
+        // 3 shards as 6+6+12 on purpose).
+        if replicas >= 2 {
+            let rl = replicas.div_ceil(2);
+            let mid = n.div_ceil(2);
+            let left = shard_ranges(mid, rl);
+            ensure(shards[..rl] == left[..], "left half is its own sub-tree")?;
+            let right = shard_ranges(n - mid, replicas - rl);
+            for (s, t) in shards[rl..].iter().zip(&right) {
+                ensure(
+                    s.start == t.start + mid && s.end == t.end + mid,
+                    "right half is its own sub-tree, shifted by ⌈n/2⌉",
+                )?;
+            }
+        }
+        // elastic floor: whenever there is at least one example per
+        // replica, every replica gets work
+        if n >= replicas {
+            ensure(
+                shards.iter().all(|s| s.end > s.start),
+                format!("empty shard with n={n} ≥ replicas={replicas}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// The sparse exchange stated directly at the primitive: for any bwd
+/// set — empty, full, or random — `all_reduce_sum_sparse` over
+/// payloads that are exactly +0.0 off-set is bitwise-identical to the
+/// dense all-reduce it replaces, on every replica, for N ∈ {2, 3, 4}.
+#[test]
+fn property_sparse_all_reduce_matches_dense_bitwise() {
+    property_cases("sparse all-reduce ≡ dense all-reduce", 96, |rng| {
+        let replicas = 2 + rng.next_below(3) as usize; // {2, 3, 4}
+        let n = 1 + rng.next_below(48) as usize;
+        let set = match rng.next_below(8) {
+            0 => SparseSet::empty(n),
+            1 => SparseSet::full(n),
+            _ => {
+                let idx: Vec<u32> =
+                    (0..n as u32).filter(|_| rng.next_below(2) == 1).collect();
+                SparseSet::from_sorted(n, idx).map_err(|e| e.to_string())?
+            }
+        };
+        // bwd-masked gradients are exactly +0.0 off-set (the `select`
+        // contract) — build the payloads the same way
+        let vals: Vec<Vec<f32>> = (0..replicas)
+            .map(|_| {
+                let mut v = vec![0.0f32; n];
+                for &j in set.indices() {
+                    v[j as usize] = rng.normal_f32(2.0);
+                }
+                v
+            })
+            .collect();
+        let client =
+            PjRtClient::cpu_with_devices(replicas).map_err(|e| e.to_string())?;
+        let bufs = (0..replicas)
+            .map(|r| client.buffer_from_host_buffer::<f32>(&vals[r], &[n], Some(r)))
+            .collect::<Result<Vec<_>, _>>()
+            .map_err(|e| e.to_string())?;
+        let refs: Vec<_> = bufs.iter().collect();
+        let dense = client.all_reduce_sum(&refs).map_err(|e| e.to_string())?;
+        let sparse = client
+            .all_reduce_sum_sparse(&refs, &set)
+            .map_err(|e| e.to_string())?;
+        ensure(sparse.len() == replicas, "one result per replica")?;
+        for (r, (d, s)) in dense.iter().zip(&sparse).enumerate() {
+            let dv = d
+                .to_literal_sync()
+                .and_then(|l| l.to_vec::<f32>())
+                .map_err(|e| e.to_string())?;
+            let sv = s
+                .to_literal_sync()
+                .and_then(|l| l.to_vec::<f32>())
+                .map_err(|e| e.to_string())?;
+            ensure(
+                dv.iter().map(|v| v.to_bits()).eq(sv.iter().map(|v| v.to_bits())),
+                format!("replica {r}: sparse exchange diverged from dense"),
+            )?;
+        }
         Ok(())
     });
 }
 
 /// The exactness theorem the replicated trainer rests on, stated
-/// directly: a full power-of-two batch reduction equals the canonical
-/// all-reduce of aligned shard partials, bit for bit.
+/// directly: for *any* batch size and replica count, the full-batch
+/// reduction equals the canonical all-reduce of tree-aligned shard
+/// partials, bit for bit.
 #[test]
 fn property_shard_partials_compose_bitwise() {
-    property_cases("pairwise composition over pow2 shards", 96, |rng| {
-        let log_n = 2 + rng.next_below(5); // n ∈ {4..64}
-        let n = 1usize << log_n;
-        let replicas = 1usize << rng.next_below(log_n.min(3)); // R | n, R ≤ 4 or 8
+    property_cases("pairwise composition over tree-aligned shards", 96, |rng| {
+        let n = 1 + rng.next_below(64) as usize;
+        let replicas = 1 + rng.next_below(n.min(6) as u64) as usize;
         let vals: Vec<f32> = (0..n).map(|_| rng.normal_f32(3.0)).collect();
         let client =
             PjRtClient::cpu_with_devices(replicas).map_err(|e| e.to_string())?;
@@ -453,9 +595,11 @@ fn property_shard_partials_compose_bitwise() {
             .to_literal_sync()
             .and_then(|l| l.to_vec::<f32>())
             .map_err(|e| e.to_string())?;
-        let shard = n / replicas;
-        let partials = (0..replicas)
-            .map(|r| sum_on(&vals[r * shard..(r + 1) * shard], r))
+        let shards = shard_ranges(n, replicas);
+        let partials = shards
+            .iter()
+            .enumerate()
+            .map(|(r, s)| sum_on(&vals[s.clone()], r))
             .collect::<Result<Vec<_>, _>>()?;
         let refs: Vec<_> = partials.iter().collect();
         let reduced = client.all_reduce_sum(&refs).map_err(|e| e.to_string())?;
